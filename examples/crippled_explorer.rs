@@ -1,0 +1,73 @@
+//! §5.4 pathway explorer: what each theoretical unlock route would buy.
+//!
+//! The paper sketches three recovery pathways — (a) cracked driver,
+//! (b) open-source driver / GSP partial unlock, (c) hand-written CUDA
+//! avoiding FMA. Each is a throttle profile; this example sweeps them
+//! across the precision suite and the llama-bench grid.
+//!
+//! Run: `cargo run --release --example crippled_explorer`
+
+use cmphx::bench::{openclbench, Precision};
+use cmphx::device::{registry, ThrottleProfile};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::llm::llamabench::LlamaBench;
+use cmphx::llm::quant;
+
+fn main() {
+    let pathways: Vec<(&str, ThrottleProfile, FmadPolicy)> = vec![
+        (
+            "stock (limiter, default build)",
+            ThrottleProfile::cmp170hx_limiter(),
+            FmadPolicy::Fused,
+        ),
+        (
+            "§2.2 -fmad=false rebuild",
+            ThrottleProfile::cmp170hx_limiter(),
+            FmadPolicy::Decomposed,
+        ),
+        (
+            "§5.4(b) GSP partial unlock",
+            ThrottleProfile::gsp_partial_unlock(),
+            FmadPolicy::Fused,
+        ),
+        (
+            "§5.4(a) full driver crack",
+            ThrottleProfile::native(),
+            FmadPolicy::Fused,
+        ),
+    ];
+
+    println!(
+        "{:<34} {:>9} {:>9} {:>9} {:>9}",
+        "pathway", "FP32", "FP16", "FP64", "INT8"
+    );
+    for (name, profile, policy) in &pathways {
+        let dev = registry::cmp170hx().with_throttle(profile.clone());
+        let fp32 = openclbench::peak(&dev, Precision::Fp32, *policy).tflops();
+        let fp16 = openclbench::peak(&dev, Precision::Fp16Half2, *policy).tflops();
+        let fp64 = openclbench::peak(&dev, Precision::Fp64, *policy).tflops();
+        let int8 = openclbench::peak(&dev, Precision::Int8, *policy).tiops();
+        println!("{name:<34} {fp32:>9.3} {fp16:>9.2} {fp64:>9.3} {int8:>9.2}");
+    }
+
+    println!("\nllama-bench impact (Qwen2.5-1.5B q4_k_m):");
+    println!(
+        "{:<34} {:>12} {:>12} {:>10}",
+        "pathway", "prefill t/s", "decode t/s", "tok/s/W"
+    );
+    let bench = LlamaBench::default();
+    for (name, profile, policy) in &pathways {
+        let dev = registry::cmp170hx().with_throttle(profile.clone());
+        let r = bench.run(&dev, &quant::Q4_K_M, *policy);
+        println!(
+            "{name:<34} {:>12.0} {:>12.0} {:>10.2}",
+            r.prefill_tps, r.decode_tps, r.tokens_per_watt
+        );
+    }
+
+    println!(
+        "\nConclusion (§5.4): the -fmad rebuild captures most of the value the\n\
+         risky pathways promise for quantized inference — decode is bandwidth-\n\
+         bound and bandwidth was never throttled."
+    );
+}

@@ -1,0 +1,86 @@
+//! END-TO-END driver (DESIGN.md §E2E): serve a real model through the full
+//! stack — L1 Pallas kernels → L2 JAX tiny-qwen → AOT HLO → L3 Rust
+//! coordinator on the PJRT CPU client — under a bursty batched workload,
+//! reporting real latency/throughput plus the simulated CMP 170HX device
+//! time for the same schedule.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example edge_inference`
+
+use std::time::{Duration, Instant};
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{Server, ServerConfig};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::runtime::ArtifactDir;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = ArtifactDir::discover()?;
+    let config = ServerConfig {
+        queue_depth: 64,
+        batch: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(4),
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+    };
+    println!("edge node starting: compiling AOT artifacts on PJRT CPU…");
+    let t0 = Instant::now();
+    let server = Server::start(artifacts, config)?;
+    println!("ready in {:.2}s (weights live inside the executable)\n", t0.elapsed().as_secs_f64());
+
+    // Bursty workload: 3 waves of requests with different prompts/lengths,
+    // the §6.2 "community edge node" pattern.
+    let mut receivers = Vec::new();
+    let wave_sizes = [6usize, 4, 6];
+    let t_serve = Instant::now();
+    for (w, &n) in wave_sizes.iter().enumerate() {
+        for i in 0..n {
+            let seed = (w * 17 + i * 7 + 1) as i32;
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * seed) % 500 + 1).collect();
+            let tokens = 6 + (i % 3) * 4; // mixed generation lengths
+            receivers.push((w, server.submit(prompt, tokens)?));
+        }
+        std::thread::sleep(Duration::from_millis(30));
+    }
+
+    let mut ok = 0usize;
+    for (wave, rx) in receivers {
+        let resp = rx.recv()?;
+        if resp.ok() {
+            ok += 1;
+            println!(
+                "wave {wave} req {:>2}: {:>2} tokens  queue {:>6.1}ms  prefill {:>6.1}ms  decode {:>6.1}ms  | sim CMP {:>5.1}ms  first: {:?}",
+                resp.id,
+                resp.tokens.len(),
+                resp.queue_s * 1e3,
+                resp.prefill_s * 1e3,
+                resp.decode_s * 1e3,
+                resp.simulated_device_s * 1e3,
+                &resp.tokens[..resp.tokens.len().min(4)],
+            );
+        } else {
+            println!("wave {wave} req {}: ERROR {}", resp.id, resp.error.unwrap());
+        }
+    }
+    let wall = t_serve.elapsed().as_secs_f64();
+    let metrics = server.shutdown();
+
+    println!("\n===== edge node report =====");
+    println!("{}", metrics.render());
+    println!(
+        "served {ok}/{} requests in {wall:.2}s wall ({:.1} req/s)",
+        wave_sizes.iter().sum::<usize>(),
+        ok as f64 / wall
+    );
+    println!(
+        "\nInterpretation: the same token schedule on a real CMP 170HX\n\
+         (Qwen2.5-1.5B q8_0, -fmad=false) would take {:.1} ms of device time —\n\
+         the overlay prices every prefill token and decode step with the §4\n\
+         calibrated model.",
+        metrics.simulated_device_s * 1e3
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Fleet planner: the §6.2 economics, runnable.
+//!
+//! Given a target decode throughput for an edge service, compare fleets of
+//! recycled CMP 170HX cards (stock vs noFMA-rebuilt, stock-x4 vs x16-mod)
+//! against new A100s: cards needed, capex, power, $/(token/s), and routing
+//! across a heterogeneous fleet.
+//!
+//! Run: `cargo run --release --example fleet_planner`
+
+use cmphx::coordinator::router::{Fleet, RoutePolicy};
+use cmphx::device::registry;
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::llm::quant;
+use cmphx::market::sales;
+use cmphx::market::tco::{fleet_for_throughput, reuse_value};
+
+const TARGET_TPS: f64 = 2_000.0; // tokens/s of q4_k_m decode
+
+fn main() {
+    println!("=== how many stranded cards exist? (Table 1-2) ===");
+    for s in sales::Scenario::all() {
+        let est = sales::estimate_sales(cmphx::calibration::CMP_REVENUE_USD, &s);
+        println!(
+            "scenario {}: {:>9.0} cards total ({:>7.0} are 170HX)",
+            est.scenario, est.total_units, est.rows[4].2
+        );
+    }
+
+    println!("\n=== fleet sizing for {TARGET_TPS:.0} tok/s of q4_k_m decode ===");
+    let candidates = [
+        ("CMP 170HX (stock build)", registry::cmp170hx(), FmadPolicy::Fused),
+        ("CMP 170HX (-fmad=false)", registry::cmp170hx(), FmadPolicy::Decomposed),
+        ("CMP 170HX x16-mod (-fmad)", registry::cmp170hx_x16(), FmadPolicy::Decomposed),
+        ("A100 40GB PCIe (new)", registry::a100_pcie(), FmadPolicy::Fused),
+    ];
+    println!(
+        "{:<28} {:>6} {:>12} {:>9} {:>14}",
+        "device", "cards", "capex $", "power W", "$/(tok/s)"
+    );
+    for (label, dev, policy) in &candidates {
+        let plan = fleet_for_throughput(dev, &quant::Q4_K_M, *policy, TARGET_TPS);
+        println!(
+            "{label:<28} {:>6} {:>12.0} {:>9.0} {:>14.2}",
+            plan.cards,
+            plan.capex_usd,
+            plan.power_w,
+            plan.capex_usd / plan.decode_tps_total,
+        );
+    }
+
+    println!("\n=== per-card reuse value (duty 100%, $0.12/kWh) ===");
+    for (label, dev, policy) in &candidates {
+        let v = reuse_value(dev, &quant::Q4_K_M, *policy, 1.0);
+        println!(
+            "{label:<28} {:>7.0} tok/s  ${:>7.2}/(tok/s)  energy ${:>6.0}/yr",
+            v.decode_tps, v.usd_per_decode_tps, v.energy_usd_per_year
+        );
+    }
+
+    println!("\n=== routing a mixed fleet (170HX + x16-mod), weighted ===");
+    let mut fleet = Fleet::from_devices(
+        &[registry::cmp170hx(), registry::cmp170hx_x16(), registry::cmp170hx()],
+        &quant::Q4_K_M,
+        FmadPolicy::Decomposed,
+        RoutePolicy::WeightedThroughput,
+    );
+    // steady-state: route 10k requests, completing at node speed
+    for step in 0..10_000u64 {
+        let i = fleet.route();
+        if step % 2 == 0 {
+            // completions keep queues shallow
+            let busiest = (0..fleet.nodes.len())
+                .max_by_key(|&j| fleet.nodes[j].outstanding)
+                .unwrap();
+            if fleet.nodes[busiest].outstanding > 0 {
+                fleet.complete(busiest);
+            }
+            let _ = i;
+        }
+    }
+    for node in &fleet.nodes {
+        println!(
+            "{:<22} weight {:>6.0} tok/s  assigned {:>6} requests",
+            node.name, node.weight, node.assigned
+        );
+    }
+
+    println!(
+        "\nConclusion (§6.2): at 2021 ASPs a restored 170HX fleet undercuts new\n\
+         A100s on $/(tok/s) for bandwidth-bound decode; at 2024 salvage prices\n\
+         (~$400/card) the gap is an order of magnitude. The binding constraints\n\
+         are the 8 GB VRAM ceiling and the x4-gen1 host link."
+    );
+}

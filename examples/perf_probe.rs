@@ -1,0 +1,38 @@
+//! Perf probe for the serving hot path (EXPERIMENTS.md §Perf).
+//!
+//! Reports artifact compile time, prefill latency, and warm decode-step
+//! latency. Run 3× and take the median — host timings are ±10% noisy.
+//!
+//! Run: `cargo run --release --example perf_probe`
+
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let dir = cmphx::runtime::ArtifactDir::discover()?;
+    let t0 = Instant::now();
+    let rt = cmphx::runtime::ModelRuntime::load(&dir)?;
+    println!(
+        "compile both executables: {:.2}s",
+        t0.elapsed().as_secs_f64()
+    );
+
+    let prompt: Vec<i32> = (1..=rt.config.prefill_t as i32).collect();
+    let t0 = Instant::now();
+    let mut state = rt.prefill(&prompt)?;
+    println!("prefill: {:.2}ms", t0.elapsed().as_secs_f64() * 1e3);
+
+    // warm-up, then measure steady-state decode
+    for _ in 0..4 {
+        rt.decode(&mut state, 1)?;
+    }
+    let n = 32u32;
+    let t0 = Instant::now();
+    for _ in 0..n {
+        rt.decode(&mut state, 1)?;
+    }
+    println!(
+        "decode step: {:.2}ms",
+        t0.elapsed().as_secs_f64() * 1e3 / n as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: the paper's headline in a few lines of API.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use cmphx::bench::{membench, openclbench, Precision};
+use cmphx::device::registry;
+use cmphx::isa::ir::MemPattern;
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::report::specs;
+
+fn main() {
+    // 1. The subject: a CMP 170HX as shipped (limiter engaged).
+    let dev = registry::cmp170hx();
+    println!("{}", specs::spec_sheet(&dev));
+
+    // 2. FP32 as the card ships: ~1/32 of its silicon.
+    let crippled = openclbench::peak(&dev, Precision::Fp32, FmadPolicy::Fused);
+    // 3. FP32 with the community workaround (-fmad=false).
+    let restored = openclbench::peak(&dev, Precision::Fp32, FmadPolicy::Decomposed);
+
+    println!(
+        "FP32 default : {:>7.3} TFLOPS   (paper: ~0.39 — beats only a 2007 Tesla C870)",
+        crippled.tflops()
+    );
+    println!(
+        "FP32 noFMA   : {:>7.3} TFLOPS   (paper: ~6.2 — a free Tesla P6)",
+        restored.tflops()
+    );
+    println!(
+        "restore      : {:>7.1}×         (abstract claims >15×)",
+        restored.tflops() / crippled.tflops()
+    );
+
+    // 4. And the part NVIDIA couldn't throttle: memory bandwidth.
+    let bw = membench::run(&dev, membench::Dir::Read, MemPattern::Coalesced);
+    let a100 = membench::run(
+        &registry::a100_pcie(),
+        membench::Dir::Read,
+        MemPattern::Coalesced,
+    );
+    println!(
+        "bandwidth    : {:>7.0} GB/s     ({:.0}% of an A100 — the reuse thesis)",
+        bw.gbps(),
+        100.0 * bw.gbps() / a100.gbps()
+    );
+}

@@ -1,0 +1,193 @@
+"""AOT lowering: jax → HLO **text** → artifacts/ for the Rust runtime.
+
+HLO text (NOT ``lowered.compile()``/proto ``.serialize()``) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids which the xla crate's xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts produced (``make artifacts``):
+- ``prefill.hlo.txt``         tokens i32[T] -> (logits[T,V], k_cache, v_cache)
+- ``decode.hlo.txt``          (token i32[], k_cache, v_cache, pos i32[]) ->
+                              (logits[V], k_cache, v_cache)
+- ``mixbench_fused.hlo.txt``  (x f32[N], y f32[N]) -> chain with FMA rounding
+- ``mixbench_nofma.hlo.txt``  same chain, -fmad=false rounding
+- ``qmatmul.hlo.txt``         (x f32[M,K], qw i8[K,N], s f32[K/32,N]) -> f32[M,N]
+- ``goldens.json``            inputs + expected outputs for rust/tests
+- ``manifest.json``           artifact inventory
+
+Model weights are baked into the HLO as constants (the deployment shape the
+paper's §6.2 edge node wants: the binary + one artifact directory, no
+Python anywhere near the request path).
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model as M  # noqa: E402
+from .kernels import mixbench as mb  # noqa: E402
+from .kernels import qmatmul as qm  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+PREFILL_T = 16
+MIXBENCH_N = 1024
+MIXBENCH_ITERS = 64
+QM_M, QM_K, QM_N = 16, 64, 96
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (the 0.5.1-safe path).
+
+    ``as_hlo_text(True)`` = print_large_constants: the baked model weights
+    must survive the text round-trip (the default elides them as ``{...}``).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def build_artifacts(out_dir: str, seed: int = 0) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = M.Config()
+    params = M.init_params(cfg, seed)
+    manifest = {"model": "tiny-qwen", "seed": seed, "entries": {}}
+
+    def emit(name, fn, *example_args):
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [
+                f"{a.dtype}{list(a.shape)}" for a in example_args
+            ],
+            "bytes": len(text),
+        }
+        return path
+
+    # --- L2 model entries (weights baked as constants) ---
+    tokens_spec = jax.ShapeDtypeStruct((PREFILL_T,), jnp.int32)
+    emit("prefill", lambda toks: M.prefill(cfg, params, toks), tokens_spec)
+
+    cache_spec = jax.ShapeDtypeStruct(
+        (cfg.layers, cfg.max_ctx, cfg.kv_heads, cfg.head_dim), jnp.float32
+    )
+    tok_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    emit(
+        "decode",
+        lambda tok, kc, vc, pos: M.decode_step(cfg, params, tok, kc, vc, pos),
+        tok_spec,
+        cache_spec,
+        cache_spec,
+        pos_spec,
+    )
+
+    # --- L1 kernel entries ---
+    vec_spec = jax.ShapeDtypeStruct((MIXBENCH_N,), jnp.float32)
+    emit(
+        "mixbench_fused",
+        lambda x, y: (mb.mixbench(x, y, MIXBENCH_ITERS, True),),
+        vec_spec,
+        vec_spec,
+    )
+    emit(
+        "mixbench_nofma",
+        lambda x, y: (mb.mixbench(x, y, MIXBENCH_ITERS, False),),
+        vec_spec,
+        vec_spec,
+    )
+    emit(
+        "qmatmul",
+        lambda x, w, s: (qm.qmatmul(x, w, s),),
+        jax.ShapeDtypeStruct((QM_M, QM_K), jnp.float32),
+        jax.ShapeDtypeStruct((QM_K, QM_N), jnp.int8),
+        jax.ShapeDtypeStruct((QM_K // ref.Q8_BLOCK, QM_N), jnp.float32),
+    )
+
+    # --- goldens for the rust integration tests ---
+    rng = np.random.default_rng(seed)
+    prompt = np.arange(1, PREFILL_T + 1, dtype=np.int32) % cfg.vocab
+    logits, kc, vc = M.prefill(cfg, params, jnp.asarray(prompt))
+    gen = M.greedy_generate(cfg, params, jnp.asarray(prompt), 8)
+
+    # Chaotic regime of t ← t² + y (y < -1.4): rounding-mode differences
+    # amplify instead of converging to a shared fixed point, so the golden
+    # actually witnesses the fused-vs-decomposed numerics.
+    mx = rng.uniform(-1.0, 1.0, MIXBENCH_N).astype(np.float32)
+    my = rng.uniform(-1.8, -1.5, MIXBENCH_N).astype(np.float32)
+    mix_fused = np.asarray(mb.mixbench(jnp.asarray(mx), jnp.asarray(my), MIXBENCH_ITERS, True))
+    mix_nofma = np.asarray(mb.mixbench(jnp.asarray(mx), jnp.asarray(my), MIXBENCH_ITERS, False))
+
+    qx = rng.normal(size=(QM_M, QM_K)).astype(np.float32)
+    qw_dense = rng.normal(size=(QM_K, QM_N)).astype(np.float32)
+    qw, qs = ref.quantize_q8(jnp.asarray(qw_dense))
+    qout = np.asarray(ref.qmatmul(jnp.asarray(qx), qw, qs))
+
+    goldens = {
+        "config": {
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "q_heads": cfg.q_heads,
+            "kv_heads": cfg.kv_heads,
+            "head_dim": cfg.head_dim,
+            "ffn": cfg.ffn,
+            "max_ctx": cfg.max_ctx,
+            "prefill_t": PREFILL_T,
+        },
+        "prompt": prompt.tolist(),
+        "prefill_last_logits": np.asarray(logits[-1]).tolist(),
+        "prefill_argmax": int(np.argmax(np.asarray(logits[-1]))),
+        "greedy_tokens": gen,
+        "mixbench": {
+            "n": MIXBENCH_N,
+            "iters": MIXBENCH_ITERS,
+            "x": mx.tolist(),
+            "y": my.tolist(),
+            "fused_head": mix_fused[:32].tolist(),
+            "nofma_head": mix_nofma[:32].tolist(),
+            "max_divergence": float(np.max(np.abs(mix_fused - mix_nofma))),
+        },
+        "qmatmul": {
+            "m": QM_M,
+            "k": QM_K,
+            "n": QM_N,
+            "x": qx.flatten().tolist(),
+            "qw": np.asarray(qw).flatten().tolist(),
+            "scales": np.asarray(qs).flatten().tolist(),
+            "out_head": qout.flatten()[:64].tolist(),
+            "out_checksum": float(qout.sum()),
+        },
+    }
+    with open(os.path.join(out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    manifest = build_artifacts(args.out, args.seed)
+    for name, e in manifest["entries"].items():
+        print(f"wrote {e['file']}: {e['bytes']} chars, args {e['args']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Layer-1 Pallas kernels (build-time only; never on the request path).
+
+Kernels:
+- ``mixbench``  — the paper's mixed-operational-intensity hot loop, with
+  ``fused``/``decomposed`` rounding variants mirroring the ``-fmad`` policy;
+- ``qmatmul``   — q8_0 block-dequantized matmul (the llama.cpp MMQ analog);
+- ``attention`` — GQA single-token decode attention over a KV cache.
+
+Every kernel has a pure-jnp oracle in ``ref.py`` and runs with
+``interpret=True`` (CPU PJRT cannot execute Mosaic custom-calls).
+"""

@@ -1,0 +1,68 @@
+"""Pallas GQA decode attention — one new token against the KV cache.
+
+CUDA decode attention parallelizes heads across thread-blocks and streams
+the KV cache from HBM. TPU rethink: grid over **KV heads** (not query
+heads) — each program holds its KV head's cache panel in VMEM once and
+serves the whole query-head *group* against it (GQA's point is that the
+group shares the panel; gridding by query head would re-stream it
+`group`× from HBM). Masked softmax uses the running-max trick; the cache
+layout ``[T, KV, D]`` matches the L2 model's arrays so the kernel lowers
+into the decode HLO unchanged.
+
+Perf note (EXPERIMENTS.md §Perf): the original version gridded over the 8
+query heads; regrouping by the 2 KV heads cut grid programs 4× and
+measurably shrank the decode executable's op count.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref):
+    # q [group, D] — this program's query-head group
+    # k/v [T, 1, D] — the group's shared KV head panel
+    q = q_ref[...]
+    k = k_ref[:, 0, :]  # [T, D]
+    v = v_ref[:, 0, :]
+    length = len_ref[0]
+    t = k.shape[0]
+    d = q.shape[1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [group, T]
+    mask = (jnp.arange(t) < length)[None, :]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=1, keepdims=True)
+    w = jnp.exp(scores - m)
+    w = jnp.where(mask, w, 0.0)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    o_ref[...] = jnp.dot(w, v, preferred_element_type=jnp.float32)  # [group, D]
+
+
+@functools.partial(jax.jit, static_argnames=("kv_heads",))
+def gqa_decode_attention(q, k_cache, v_cache, length, *, kv_heads: int):
+    """q [H, D], k/v_cache [T, KV, D], length scalar i32 -> [H, D].
+
+    Query heads must be grouped by KV head (standard GQA layout: heads
+    ``[g*group, (g+1)*group)`` share KV head ``g``).
+    """
+    h, d = q.shape
+    t, kv, _ = k_cache.shape
+    assert kv == kv_heads and h % kv == 0
+    group = h // kv
+    length = jnp.asarray(length, jnp.int32).reshape(1)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((h, d), jnp.float32),
+        grid=(kv,),
+        in_specs=[
+            pl.BlockSpec((group, d), lambda g: (g, 0)),
+            pl.BlockSpec((t, 1, d), lambda g: (0, g, 0)),
+            pl.BlockSpec((t, 1, d), lambda g: (0, g, 0)),
+            pl.BlockSpec((1,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((group, d), lambda g: (g, 0)),
+        interpret=True,
+    )(q, k_cache, v_cache, length)

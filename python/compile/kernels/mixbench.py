@@ -1,0 +1,79 @@
+"""Pallas port of the mixbench hot loop (Graph 3-1's kernel).
+
+The CUDA original runs, per thread, ``c`` fused multiply-adds on a register
+value between one global load and one store. TPU adaptation (DESIGN.md
+§Hardware-Adaptation): instead of a warp per element, each grid program owns
+a VMEM-resident block of the vector and runs the chain on the whole block —
+the VPU is the analog of the CUDA core array, and the HBM↔VMEM schedule that
+CUDA expresses with thread-block tiling is a ``BlockSpec``.
+
+Two variants mirror the ``-fmad`` policy:
+- ``fused``       — single-rounding FMA semantics (f64 emulation);
+- ``decomposed``  — explicit MUL then ADD, double rounding (``-fmad=false``).
+
+The numerics of the two variants genuinely differ, exactly as they do on
+silicon; python/tests asserts both against their oracles.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 256
+
+
+def _kernel(x_ref, y_ref, o_ref, *, iters: int, fused: bool):
+    t = x_ref[...]
+    y = y_ref[...]
+
+    # Rounding is pinned with `lax.reduce_precision` — the one rounding op
+    # XLA treats as semantically opaque. Everything softer gets undone:
+    # optimization barriers are dropped by the Pallas interpreter, and the
+    # algebraic simplifier legally collapses f64-detour converts back to
+    # f32 ops, which LLVM then re-contracts into FMA — silently undoing
+    # `-fmad=false`. Both variants compute the exact product in f64
+    # (f32×f32 is exact there); the only difference is whether the product
+    # is rounded to f32 precision *before* the add — precisely the FFMA vs
+    # FMUL+FADD distinction the CMP limiter keys on.
+    def round32(v):
+        return jax.lax.reduce_precision(v, exponent_bits=8, mantissa_bits=23)
+
+    if fused:
+
+        def body(_, acc):
+            acc64 = acc.astype(jnp.float64)
+            s = acc64 * acc64 + y.astype(jnp.float64)
+            return round32(s).astype(jnp.float32)
+
+    else:
+
+        def body(_, acc):
+            acc64 = acc.astype(jnp.float64)
+            m = round32(acc64 * acc64)  # the FMUL's rounding
+            return round32(m + y.astype(jnp.float64)).astype(jnp.float32)
+
+    o_ref[...] = jax.lax.fori_loop(0, iters, body, t)
+
+
+@functools.partial(jax.jit, static_argnames=("iters", "fused"))
+def mixbench(x, y, iters: int = 64, fused: bool = True):
+    """Run the mixbench chain over a 1-D f32 vector.
+
+    ``len(x)`` must be a multiple of ``BLOCK`` (pad at the call site).
+    """
+    (n,) = x.shape
+    assert n % BLOCK == 0, f"n={n} must be a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        functools.partial(_kernel, iters=iters, fused=fused),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=True,
+    )(x, y)

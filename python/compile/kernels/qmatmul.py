@@ -1,0 +1,64 @@
+"""Pallas q8_0 block-dequantized matmul — the llama.cpp MMQ analog.
+
+CUDA MMQ assigns a thread-block per output tile and dequantizes q8_0 blocks
+from shared memory with DP4A dots. TPU rethink: the output is tiled
+(BM × BN) across the grid with the full K dimension resident in VMEM per
+program; dequant (int8 × per-block scale) fuses into the kernel prologue and
+the dot targets the MXU with an f32 accumulator. Per-block scales live in a
+``[K/32, N]`` array so the expansion is a cheap ``jnp.repeat`` in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import Q8_BLOCK
+
+BM = 16
+BN = 32
+
+
+def _kernel(x_ref, q_ref, s_ref, o_ref):
+    x = x_ref[...]  # [BM, K]
+    q = q_ref[...]  # [K, BN] int8
+    s = s_ref[...]  # [K/32, BN] f32
+    w = q.astype(jnp.float32) * jnp.repeat(s, Q8_BLOCK, axis=0)
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+@jax.jit
+def qmatmul(x, qweights, scales):
+    """x [M, K] f32 @ q8_0(qweights [K, N] i8, scales [K/32, N] f32).
+
+    M must be a multiple of BM (16) and N of BN (32); K of 32.
+    """
+    m, k = x.shape
+    k2, n = qweights.shape
+    assert k == k2 and k % Q8_BLOCK == 0
+    assert m % BM == 0 and n % BN == 0, f"M={m} % {BM}, N={n} % {BN}"
+    grid = (m // BM, n // BN)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BN), lambda i, j: (0, j)),
+            pl.BlockSpec((k // Q8_BLOCK, BN), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, qweights, scales)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def qmatmul_padded(x, qweights, scales):
+    """qmatmul for arbitrary M: pads M up to the next multiple of BM."""
+    m = x.shape[0]
+    pad = (-m) % BM
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    out = qmatmul(x, qweights, scales)
+    return out[:m]

@@ -1,0 +1,99 @@
+"""Pure-jnp oracles for the Pallas kernels — the CORE correctness signal.
+
+Each function is the semantic specification its kernel is tested against
+with ``assert_allclose`` (pytest + hypothesis sweeps in python/tests).
+"""
+
+import jax
+import jax.numpy as jnp
+
+Q8_BLOCK = 32
+
+
+def _round32(v):
+    """Round an f64 value to f32 precision, opaquely to the compiler.
+
+    `lax.reduce_precision` is the one rounding primitive XLA's simplifier
+    will not fold into neighbouring ops — anything softer (optimization
+    barriers, convert round-trips) gets legally collapsed back to f32
+    mul/add which LLVM then re-contracts into FMA.
+    """
+    return jax.lax.reduce_precision(v, exponent_bits=8, mantissa_bits=23)
+
+
+def mixbench_fused(x, y, iters: int):
+    """Fused-FMA chain: t = fma(t, t, y), single f32 rounding per step.
+
+    fma semantics in f64: the f32×f32 product is exact (48 ≤ 53 mantissa
+    bits), the add happens at full f64 precision, and one rounding lands
+    the result on the f32 grid — a hardware FFMA for these magnitudes.
+    Identical construction to the kernel, so results are bit-exact.
+    """
+    t = x
+    for _ in range(iters):
+        t64 = t.astype(jnp.float64)
+        s = t64 * t64 + y.astype(jnp.float64)
+        t = _round32(s).astype(jnp.float32)
+    return t
+
+
+def mixbench_decomposed(x, y, iters: int):
+    """-fmad=false chain: separate MUL and ADD, the product rounded to f32
+    *between* them — the decomposition's defining property."""
+    t = x
+    for _ in range(iters):
+        t64 = t.astype(jnp.float64)
+        m = _round32(t64 * t64)  # the FMUL's rounding
+        t = _round32(m + y.astype(jnp.float64)).astype(jnp.float32)
+    return t
+
+
+def q8_dequant(qweights, scales):
+    """Expand q8_0 blocks to dense f32: w[k, n] = q[k, n] * s[k // 32, n]."""
+    k, _n = qweights.shape
+    assert k % Q8_BLOCK == 0, f"K={k} must be a multiple of {Q8_BLOCK}"
+    expanded = jnp.repeat(scales, Q8_BLOCK, axis=0)
+    return qweights.astype(jnp.float32) * expanded
+
+
+def qmatmul(x, qweights, scales):
+    """x [M, K] @ dequant(qweights [K, N], scales [K/32, N]) -> [M, N]."""
+    return x @ q8_dequant(qweights, scales)
+
+
+def quantize_q8(w):
+    """Quantize dense f32 [K, N] to (int8 [K, N], scales f32 [K/32, N]).
+
+    Per-block absmax scaling, the q8_0 recipe.
+    """
+    k, n = w.shape
+    assert k % Q8_BLOCK == 0
+    blocks = w.reshape(k // Q8_BLOCK, Q8_BLOCK, n)
+    absmax = jnp.max(jnp.abs(blocks), axis=1)  # [K/32, N]
+    scales = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scales[:, None, :]), -127, 127)
+    return q.reshape(k, n).astype(jnp.int8), scales.astype(jnp.float32)
+
+
+def gqa_decode_attention(q, k_cache, v_cache, length):
+    """Single-token GQA attention.
+
+    q        [H, D]      query for the new token
+    k_cache  [T, KV, D]  keys   (only the first `length` rows are valid)
+    v_cache  [T, KV, D]  values
+    returns  [H, D]
+    """
+    h, d = q.shape
+    t, kv, _ = k_cache.shape
+    group = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    kv_idx = jnp.arange(h) // group
+    k = k_cache[:, kv_idx, :]  # [T, H, D]
+    v = v_cache[:, kv_idx, :]
+    scores = jnp.einsum("hd,thd->ht", q, k) * scale  # [H, T]
+    mask = jnp.arange(t)[None, :] < length
+    scores = jnp.where(mask, scores, -jnp.inf)
+    w = jnp.exp(scores - jnp.max(scores, axis=1, keepdims=True))
+    w = jnp.where(mask, w, 0.0)
+    w = w / jnp.sum(w, axis=1, keepdims=True)
+    return jnp.einsum("ht,thd->hd", w, v)

@@ -1,0 +1,199 @@
+"""Layer-2: tiny-Qwen — the Qwen2.5 architecture family at laptop scale.
+
+Matches §4.1's architecture list: RoPE, SwiGLU, RMSNorm, attention QKV
+bias, GQA, tied embeddings. The FFN matmuls run through the L1 Pallas
+``qmatmul`` kernel on q8_0-quantized weights (the paper's quantized-model
+path); decode attention runs through the L1 ``gqa_decode_attention``
+kernel. Everything lowers into the same HLO the Rust runtime executes.
+
+Pure-functional: params and caches are explicit pytrees. ``prefill``
+consumes a prompt and builds the KV cache; ``decode_step`` extends it one
+token. python/tests asserts prefill ≡ sequential decode.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import gqa_decode_attention
+from .kernels.qmatmul import qmatmul_padded
+from .kernels.ref import quantize_q8
+
+
+@dataclass(frozen=True)
+class Config:
+    """tiny-qwen (mirrors rust's ModelDesc::tiny_qwen())."""
+
+    vocab: int = 512
+    hidden: int = 256
+    layers: int = 4
+    q_heads: int = 8
+    kv_heads: int = 2
+    head_dim: int = 32
+    ffn: int = 704
+    max_ctx: int = 64
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+
+def init_params(cfg: Config, seed: int = 0):
+    """Random-but-deterministic parameters; FFN weights stored q8_0."""
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 8 + 16 * cfg.layers))
+
+    def dense(k, shape, scale=None):
+        scale = scale or (1.0 / jnp.sqrt(jnp.float32(shape[0])))
+        return (jax.random.normal(k, shape, jnp.float32) * scale).astype(jnp.float32)
+
+    params = {
+        "embed": dense(next(keys), (cfg.vocab, cfg.hidden), 0.02),
+        "final_norm": jnp.ones((cfg.hidden,), jnp.float32),
+        "layers": [],
+    }
+    qdim = cfg.q_heads * cfg.head_dim
+    kvdim = cfg.kv_heads * cfg.head_dim
+    for _ in range(cfg.layers):
+        layer = {
+            "attn_norm": jnp.ones((cfg.hidden,), jnp.float32),
+            "ffn_norm": jnp.ones((cfg.hidden,), jnp.float32),
+            "wq": dense(next(keys), (cfg.hidden, qdim)),
+            "wk": dense(next(keys), (cfg.hidden, kvdim)),
+            "wv": dense(next(keys), (cfg.hidden, kvdim)),
+            "wo": dense(next(keys), (qdim, cfg.hidden)),
+            # Qwen2 attention QKV bias
+            "bq": dense(next(keys), (1, qdim), 0.01)[0],
+            "bk": dense(next(keys), (1, kvdim), 0.01)[0],
+            "bv": dense(next(keys), (1, kvdim), 0.01)[0],
+        }
+        for name, shape in [
+            ("gate", (cfg.hidden, cfg.ffn)),
+            ("up", (cfg.hidden, cfg.ffn)),
+            ("down", (cfg.ffn, cfg.hidden)),
+        ]:
+            w = dense(next(keys), shape)
+            qw, s = quantize_q8(w)
+            layer[f"w_{name}_q"] = qw
+            layer[f"w_{name}_s"] = s
+        params["layers"].append(layer)
+    return params
+
+
+def rmsnorm(x, weight, eps):
+    var = jnp.mean(x.astype(jnp.float32) ** 2, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)) * weight
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x [..., T, H, D], positions [T]."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu_ffn(cfg: Config, layer, x):
+    """SwiGLU FFN on q8_0 weights via the L1 Pallas qmatmul kernel."""
+    gate = qmatmul_padded(x, layer["w_gate_q"], layer["w_gate_s"])
+    up = qmatmul_padded(x, layer["w_up_q"], layer["w_up_s"])
+    act = jax.nn.silu(gate) * up
+    return qmatmul_padded(act, layer["w_down_q"], layer["w_down_s"])
+
+
+def _project_qkv(cfg: Config, layer, x, positions):
+    t = x.shape[0]
+    q = (x @ layer["wq"] + layer["bq"]).reshape(t, cfg.q_heads, cfg.head_dim)
+    k = (x @ layer["wk"] + layer["bk"]).reshape(t, cfg.kv_heads, cfg.head_dim)
+    v = (x @ layer["wv"] + layer["bv"]).reshape(t, cfg.kv_heads, cfg.head_dim)
+    return rope(q, positions, cfg.rope_theta), rope(k, positions, cfg.rope_theta), v
+
+
+def _prefill_attention(cfg: Config, q, k, v):
+    """Causal GQA attention over a whole prompt (plain jnp; the batched
+    counterpart of the decode kernel)."""
+    t = q.shape[0]
+    group = cfg.q_heads // cfg.kv_heads
+    kx = jnp.repeat(k, group, axis=1)  # [T, H, D]
+    vx = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+    scores = jnp.einsum("qhd,khd->hqk", q, kx) * scale
+    causal = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(causal[None, :, :], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("hqk,khd->qhd", w, vx).reshape(t, -1)
+
+
+def empty_cache(cfg: Config):
+    shape = (cfg.layers, cfg.max_ctx, cfg.kv_heads, cfg.head_dim)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def prefill(cfg: Config, params, tokens):
+    """tokens [T] i32 -> (logits [T, V], k_cache, v_cache).
+
+    Caches are [L, max_ctx, KV, D] with rows [0, T) filled.
+    """
+    t = tokens.shape[0]
+    positions = jnp.arange(t)
+    x = params["embed"][tokens]
+    k_cache, v_cache = empty_cache(cfg)
+    for i, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, layer, h, positions)
+        k_cache = k_cache.at[i, :t].set(k)
+        v_cache = v_cache.at[i, :t].set(v)
+        attn = _prefill_attention(cfg, q, k, v)
+        x = x + attn @ layer["wo"]
+        h = rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+        x = x + swiglu_ffn(cfg, layer, h)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    # tied embeddings; einsum (not `.T @`) so the traced HLO reuses the one
+    # embedding constant instead of baking a second, transposed copy —
+    # halves the big constants in the artifact (see EXPERIMENTS.md §Perf).
+    logits = jnp.einsum("th,vh->tv", x, params["embed"])
+    return logits, k_cache, v_cache
+
+
+def decode_step(cfg: Config, params, token, k_cache, v_cache, pos):
+    """One autoregressive step.
+
+    token scalar i32; pos scalar i32 (the token's position; cache rows
+    [0, pos) are valid). Returns (logits [V], k_cache, v_cache) with row
+    `pos` appended. Attention runs through the L1 Pallas GQA kernel.
+    """
+    positions = jnp.asarray(pos, jnp.int32).reshape(1)
+    x = params["embed"][token][None, :]  # [1, hidden]
+    for i, layer in enumerate(params["layers"]):
+        h = rmsnorm(x, layer["attn_norm"], cfg.norm_eps)
+        q, k, v = _project_qkv(cfg, layer, h, positions)
+        zero = jnp.int32(0)
+        idx = (jnp.int32(i), jnp.asarray(pos, jnp.int32), zero, zero)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k[None], idx)
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v[None], idx)
+        attn = gqa_decode_attention(
+            q[0], k_cache[i], v_cache[i], pos + 1, kv_heads=cfg.kv_heads
+        ).reshape(1, -1)
+        x = x + attn @ layer["wo"]
+        h = rmsnorm(x, layer["ffn_norm"], cfg.norm_eps)
+        x = x + swiglu_ffn(cfg, layer, h)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("th,vh->tv", x, params["embed"])[0]
+    return logits, k_cache, v_cache
+
+
+def greedy_generate(cfg: Config, params, prompt, steps: int):
+    """Reference end-to-end generation (prefill + greedy decode)."""
+    logits, kc, vc = prefill(cfg, params, prompt)
+    token = jnp.argmax(logits[-1]).astype(jnp.int32)
+    out = [int(token)]
+    pos = prompt.shape[0]
+    for _ in range(steps - 1):
+        logits, kc, vc = decode_step(cfg, params, token, kc, vc, jnp.int32(pos))
+        token = jnp.argmax(logits).astype(jnp.int32)
+        out.append(int(token))
+        pos += 1
+    return out

@@ -1,0 +1,4 @@
+import jax
+
+# f64 must be real: the fused-FMA oracle emulates single-rounding FMA in f64.
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,207 @@
+"""L1 kernels vs pure-jnp oracles — the CORE correctness signal.
+
+Exact equality where the semantics promise it (mixbench variants), tight
+allclose for the matmul/attention reductions. Hypothesis sweeps shapes and
+value regimes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as at
+from compile.kernels import mixbench as mb
+from compile.kernels import qmatmul as qm
+from compile.kernels import ref
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+def vec(seed, n, lo, hi):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(lo, hi, n), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# mixbench
+# --------------------------------------------------------------------------
+
+
+class TestMixbench:
+    @pytest.mark.parametrize("iters", [0, 1, 2, 16, 64])
+    def test_fused_matches_oracle_exactly(self, iters):
+        x = vec(1, 512, 0.5, 0.9)
+        y = vec(2, 512, -0.5, -0.1)
+        np.testing.assert_array_equal(
+            mb.mixbench(x, y, iters, True), ref.mixbench_fused(x, y, iters)
+        )
+
+    @pytest.mark.parametrize("iters", [0, 1, 2, 16, 64])
+    def test_decomposed_matches_oracle_exactly(self, iters):
+        x = vec(3, 512, 0.5, 0.9)
+        y = vec(4, 512, -0.5, -0.1)
+        np.testing.assert_array_equal(
+            mb.mixbench(x, y, iters, False), ref.mixbench_decomposed(x, y, iters)
+        )
+
+    def test_variants_differ_in_rounding(self):
+        # The fmad policy is a *numerical* change, not just a perf one. In
+        # the chaotic regime of t ← t² + y the single- vs double-rounding
+        # difference amplifies to visible divergence; both stay on the
+        # bounded attractor.
+        x = vec(5, 2048, -1.0, 1.0)
+        y = vec(6, 2048, -1.8, -1.5)
+        fused = np.asarray(mb.mixbench(x, y, 64, True))
+        nofma = np.asarray(mb.mixbench(x, y, 64, False))
+        assert np.any(fused != nofma)
+        assert np.all(np.abs(fused) <= 2.0) and np.all(np.abs(nofma) <= 2.0)
+
+    def test_zero_iters_is_identity(self):
+        x = vec(7, 256, 0.5, 0.9)
+        y = vec(8, 256, -0.5, -0.1)
+        np.testing.assert_array_equal(mb.mixbench(x, y, 0, True), x)
+
+    @given(
+        n_blocks=st.integers(1, 8),
+        iters=st.integers(0, 32),
+        fused=st.booleans(),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_shapes_and_values(self, n_blocks, iters, fused, seed):
+        n = n_blocks * mb.BLOCK
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.uniform(-1.0, 1.0, n), jnp.float32)
+        y = jnp.asarray(rng.uniform(-0.25, 0.25, n), jnp.float32)
+        expect = (ref.mixbench_fused if fused else ref.mixbench_decomposed)(x, y, iters)
+        np.testing.assert_array_equal(mb.mixbench(x, y, iters, fused), expect)
+
+    def test_rejects_non_multiple_of_block(self):
+        with pytest.raises(AssertionError):
+            mb.mixbench(jnp.zeros(100, jnp.float32), jnp.zeros(100, jnp.float32), 1, True)
+
+
+# --------------------------------------------------------------------------
+# qmatmul
+# --------------------------------------------------------------------------
+
+
+class TestQmatmul:
+    def test_matches_oracle(self):
+        rng = np.random.default_rng(10)
+        w = jnp.asarray(rng.normal(size=(128, 96)), jnp.float32)
+        qw, s = ref.quantize_q8(w)
+        x = jnp.asarray(rng.normal(size=(32, 128)), jnp.float32)
+        np.testing.assert_allclose(
+            qm.qmatmul(x, qw, s), ref.qmatmul(x, qw, s), rtol=1e-5, atol=1e-5
+        )
+
+    def test_quantization_error_is_bounded(self):
+        # q8_0 absmax: |w - dequant(quant(w))| <= absmax/254 per block.
+        rng = np.random.default_rng(11)
+        w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+        qw, s = ref.quantize_q8(w)
+        back = ref.q8_dequant(qw, s)
+        blocks = np.asarray(w).reshape(2, 32, 32)
+        absmax = np.abs(blocks).max(axis=1)
+        bound = np.repeat(absmax, 32, axis=0) / 254.0 + 1e-7
+        assert np.all(np.abs(np.asarray(back) - np.asarray(w)) <= bound)
+
+    @given(
+        mi=st.integers(1, 4),
+        kb=st.integers(1, 6),
+        nb=st.integers(1, 4),
+        seed=st.integers(0, 2**31),
+    )
+    def test_hypothesis_tile_shapes(self, mi, kb, nb, seed):
+        m, k, n = mi * qm.BM, kb * ref.Q8_BLOCK, nb * qm.BN
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        qw, s = ref.quantize_q8(w)
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        np.testing.assert_allclose(
+            qm.qmatmul(x, qw, s), ref.qmatmul(x, qw, s), rtol=2e-5, atol=2e-5
+        )
+
+    @given(m=st.integers(1, 40), seed=st.integers(0, 2**31))
+    def test_padded_wrapper_handles_any_m(self, m, seed):
+        rng = np.random.default_rng(seed)
+        w = jnp.asarray(rng.normal(size=(64, 32)), jnp.float32)
+        qw, s = ref.quantize_q8(w)
+        x = jnp.asarray(rng.normal(size=(m, 64)), jnp.float32)
+        np.testing.assert_allclose(
+            qm.qmatmul_padded(x, qw, s), ref.qmatmul(x, qw, s), rtol=2e-5, atol=2e-5
+        )
+
+    def test_zero_scales_give_zero_output(self):
+        x = jnp.ones((16, 32), jnp.float32)
+        qw = jnp.ones((32, 32), jnp.int8)
+        s = jnp.zeros((1, 32), jnp.float32)
+        assert np.all(np.asarray(qm.qmatmul(x, qw, s)) == 0.0)
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+
+class TestAttention:
+    def _case(self, seed, t, kv, h, d, length):
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(h, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(t, kv, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(t, kv, d)), jnp.float32)
+        return q, kc, vc, length
+
+    def test_matches_oracle(self):
+        q, kc, vc, length = self._case(20, 64, 2, 8, 32, 17)
+        out = at.gqa_decode_attention(q, kc, vc, length, kv_heads=2)
+        np.testing.assert_allclose(
+            out, ref.gqa_decode_attention(q, kc, vc, length), rtol=1e-5, atol=1e-6
+        )
+
+    def test_length_one_returns_first_value_row(self):
+        # With a single valid position, softmax weight is 1 on row 0.
+        q, kc, vc, _ = self._case(21, 16, 2, 8, 32, 1)
+        out = np.asarray(at.gqa_decode_attention(q, kc, vc, 1, kv_heads=2))
+        expected = np.asarray(vc)[0, np.arange(8) // 4, :]
+        np.testing.assert_allclose(out, expected, rtol=1e-6, atol=1e-6)
+
+    def test_masked_tail_is_ignored(self):
+        # Garbage beyond `length` must not affect the result.
+        q, kc, vc, length = self._case(22, 32, 2, 8, 32, 9)
+        out1 = at.gqa_decode_attention(q, kc, vc, length, kv_heads=2)
+        kc2 = kc.at[length:].set(1e9)
+        vc2 = vc.at[length:].set(-1e9)
+        out2 = at.gqa_decode_attention(q, kc2, vc2, length, kv_heads=2)
+        np.testing.assert_array_equal(out1, out2)
+
+    @given(
+        t_pow=st.integers(3, 6),
+        kv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([16, 32]),
+        seed=st.integers(0, 2**31),
+        data=st.data(),
+    )
+    def test_hypothesis_geometry(self, t_pow, kv, group, d, seed, data):
+        t = 2**t_pow
+        h = kv * group
+        length = data.draw(st.integers(1, t))
+        q, kc, vc, _ = self._case(seed, t, kv, h, d, length)
+        out = at.gqa_decode_attention(q, kc, vc, length, kv_heads=kv)
+        np.testing.assert_allclose(
+            out, ref.gqa_decode_attention(q, kc, vc, length), rtol=2e-5, atol=2e-5
+        )
+
+    def test_attention_output_is_convex_combination(self):
+        # Softmax weights are a convex combination: the output of each head
+        # lies inside the bounding box of its value rows.
+        q, kc, vc, length = self._case(23, 32, 2, 8, 32, 32)
+        out = np.asarray(at.gqa_decode_attention(q, kc, vc, length, kv_heads=2))
+        v = np.asarray(vc)
+        for head in range(8):
+            rows = v[:, head // 4, :]
+            assert np.all(out[head] <= rows.max(axis=0) + 1e-5)
+            assert np.all(out[head] >= rows.min(axis=0) - 1e-5)

@@ -1,0 +1,120 @@
+"""L2 model tests: architecture pieces, prefill/decode consistency, and
+generation determinism."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+
+settings.register_profile("ci", deadline=None, max_examples=10)
+settings.load_profile("ci")
+
+CFG = M.Config()
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(CFG, seed=0)
+
+
+class TestPieces:
+    def test_rmsnorm_unit_variance(self):
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(4, 256)) * 7.0, jnp.float32)
+        out = M.rmsnorm(x, jnp.ones(256), 1e-6)
+        rms = np.sqrt(np.mean(np.asarray(out) ** 2, axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-3)
+
+    def test_rope_preserves_norm(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(6, 8, 32)), jnp.float32)
+        out = M.rope(x, jnp.arange(6), CFG.rope_theta)
+        np.testing.assert_allclose(
+            np.linalg.norm(np.asarray(out), axis=-1),
+            np.linalg.norm(np.asarray(x), axis=-1),
+            rtol=1e-5,
+        )
+
+    def test_rope_position_zero_is_identity(self):
+        rng = np.random.default_rng(2)
+        x = jnp.asarray(rng.normal(size=(1, 8, 32)), jnp.float32)
+        out = M.rope(x, jnp.zeros(1, jnp.int32), CFG.rope_theta)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-6)
+
+    def test_rope_is_relative(self):
+        # <rope(q, m), rope(k, n)> depends only on m - n.
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.normal(size=(1, 1, 32)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(1, 1, 32)), jnp.float32)
+
+        def dot(m, n):
+            qm = M.rope(q, jnp.asarray([m]), CFG.rope_theta)
+            kn = M.rope(k, jnp.asarray([n]), CFG.rope_theta)
+            return float(jnp.sum(qm * kn))
+
+        assert abs(dot(5, 3) - dot(9, 7)) < 1e-4
+        assert abs(dot(5, 3) - dot(6, 3)) > 1e-6  # different offsets differ
+
+    def test_param_shapes(self, params):
+        assert params["embed"].shape == (CFG.vocab, CFG.hidden)
+        assert len(params["layers"]) == CFG.layers
+        layer = params["layers"][0]
+        assert layer["w_gate_q"].dtype == jnp.int8
+        assert layer["w_gate_s"].shape == (CFG.hidden // 32, CFG.ffn)
+
+
+class TestPrefillDecode:
+    def test_prefill_shapes(self, params):
+        tokens = jnp.arange(10, dtype=jnp.int32)
+        logits, kc, vc = M.prefill(CFG, params, tokens)
+        assert logits.shape == (10, CFG.vocab)
+        assert kc.shape == (CFG.layers, CFG.max_ctx, CFG.kv_heads, CFG.head_dim)
+
+    def test_prefill_equals_sequential_decode(self, params):
+        # The paper's two inference phases must agree: processing a prompt
+        # in parallel (prefill) and feeding it token-by-token through the
+        # decode path produce the same logits.
+        prompt = jnp.asarray([3, 1, 4, 1, 5, 9, 2, 6], jnp.int32)
+        logits, _, _ = M.prefill(CFG, params, prompt)
+        kc, vc = M.empty_cache(CFG)
+        for t in range(len(prompt)):
+            lg, kc, vc = M.decode_step(CFG, params, prompt[t], kc, vc, jnp.int32(t))
+            np.testing.assert_allclose(lg, logits[t], rtol=3e-4, atol=3e-4)
+
+    def test_decode_is_causal(self, params):
+        # Changing cache rows at or beyond `pos` must not change the output.
+        prompt = jnp.asarray([7, 8, 9, 10], jnp.int32)
+        _, kc, vc = M.prefill(CFG, params, prompt)
+        lg1, _, _ = M.decode_step(CFG, params, jnp.int32(11), kc, vc, jnp.int32(4))
+        kc2 = kc.at[:, 10:].set(123.0)
+        vc2 = vc.at[:, 10:].set(-123.0)
+        lg2, _, _ = M.decode_step(CFG, params, jnp.int32(11), kc2, vc2, jnp.int32(4))
+        np.testing.assert_array_equal(np.asarray(lg1), np.asarray(lg2))
+
+    def test_decode_appends_cache_row(self, params):
+        kc, vc = M.empty_cache(CFG)
+        _, kc2, vc2 = M.decode_step(CFG, params, jnp.int32(5), kc, vc, jnp.int32(0))
+        assert np.any(np.asarray(kc2)[:, 0] != 0.0)
+        np.testing.assert_array_equal(np.asarray(kc2)[:, 1:], np.asarray(kc)[:, 1:])
+
+    @given(seed=st.integers(0, 2**31), t=st.integers(1, 12))
+    def test_hypothesis_prefill_finite(self, seed, t):
+        params = M.init_params(CFG, seed=seed % 3)  # cache a few param sets
+        rng = np.random.default_rng(seed)
+        tokens = jnp.asarray(rng.integers(0, CFG.vocab, t), jnp.int32)
+        logits, _, _ = M.prefill(CFG, params, tokens)
+        assert np.all(np.isfinite(np.asarray(logits)))
+
+    def test_generation_is_deterministic(self, params):
+        prompt = jnp.asarray([1, 2, 3, 4], jnp.int32)
+        a = M.greedy_generate(CFG, params, prompt, 6)
+        b = M.greedy_generate(CFG, params, prompt, 6)
+        assert a == b
+        assert all(0 <= t < CFG.vocab for t in a)
+
+    def test_different_prompts_diverge(self, params):
+        a = M.greedy_generate(CFG, params, jnp.asarray([1, 2, 3, 4], jnp.int32), 6)
+        b = M.greedy_generate(CFG, params, jnp.asarray([9, 8, 7, 6], jnp.int32), 6)
+        assert a != b

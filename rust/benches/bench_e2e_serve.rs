@@ -1,0 +1,65 @@
+//! End-to-end serving benchmark: the full L1→L2→L3 stack under load.
+//!
+//! Compiles the AOT artifacts, then measures served throughput and latency
+//! percentiles at several batch limits — the batching-policy ablation
+//! DESIGN.md calls out — plus the simulated CMP 170HX device time for the
+//! same token schedule. Requires `make artifacts`.
+
+use std::time::{Duration, Instant};
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{Server, ServerConfig};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::runtime::ArtifactDir;
+
+const REQUESTS: usize = 12;
+const TOKENS: usize = 8;
+
+fn run_once(max_batch: usize, step_policy: StepPolicy) -> anyhow::Result<()> {
+    let artifacts = ArtifactDir::open(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+    )?;
+    let config = ServerConfig {
+        queue_depth: 64,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(3),
+        },
+        step_policy,
+        fmad: FmadPolicy::Decomposed,
+    };
+    let server = Server::start(artifacts, config)?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i as i32 + 2)) % 500 + 1).collect();
+            server.submit(prompt, TOKENS).unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let resp = rx.recv()?;
+        assert!(resp.ok(), "{:?}", resp.error);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    println!(
+        "batch={max_batch:<2} policy={step_policy:?}: {} tok in {wall:.2}s → {:>6.1} tok/s | p50 {:>6.1}ms p99 {:>6.1}ms | sim CMP {:>6.1}ms",
+        m.tokens_out,
+        m.tokens_out as f64 / wall,
+        m.latency_pct(0.5).unwrap_or(0.0) * 1e3,
+        m.latency_pct(0.99).unwrap_or(0.0) * 1e3,
+        m.simulated_device_s * 1e3,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== e2e serving: {REQUESTS} requests × {TOKENS} tokens (tiny-qwen over PJRT) ==");
+    for max_batch in [1, 2, 4, 8] {
+        run_once(max_batch, StepPolicy::RoundRobin)?;
+    }
+    println!("-- scheduler ablation at batch=4 --");
+    run_once(4, StepPolicy::ShortestFirst)?;
+    Ok(())
+}

@@ -1,0 +1,25 @@
+//! `cargo bench` target regenerating Graph 3-4 — CMP 170HX INT32 (uncrippled).
+//!
+//! Prints the figure table (measured vs paper where the paper reports a
+//! number) and times the figure generation itself with the mini-criterion
+//! harness (the sweep is the L3 hot path the §Perf pass optimizes).
+
+use cmphx::bench_harness::time_fn;
+use cmphx::report::figures;
+
+fn main() {
+    let table = figures::graph_3_4();
+    print!("{}", table.render());
+    if let Some(worst) = table.worst_deviation() {
+        println!("worst deviation vs paper: {:+.1}%", worst * 100.0);
+    }
+    let stats = time_fn(1, 5, || {
+        std::hint::black_box(figures::graph_3_4());
+    });
+    println!(
+        "figure generation: mean {:.3} ms (σ {:.3} ms, {} samples)\n",
+        stats.mean_s * 1e3,
+        stats.stddev_s * 1e3,
+        stats.samples
+    );
+}

@@ -1,0 +1,44 @@
+//! `cargo bench` target regenerating Tables 1-1 and 1-2 plus the §6.2
+//! reuse-economics sweep.
+
+use cmphx::bench_harness::time_fn;
+use cmphx::device::registry;
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::llm::quant;
+use cmphx::market::tco;
+use cmphx::report::figures;
+
+fn main() {
+    for table in [figures::table_1_1(), figures::table_1_2()] {
+        print!("{}", table.render());
+        if let Some(worst) = table.worst_deviation() {
+            println!("worst deviation vs paper: {:+.2}%", worst * 100.0);
+        }
+    }
+
+    println!("\n== reuse value sweep ($/(tok/s), q4_k_m decode) ==");
+    for (dev, policy) in [
+        (registry::cmp170hx(), FmadPolicy::Fused),
+        (registry::cmp170hx(), FmadPolicy::Decomposed),
+        (registry::cmp170hx_x16(), FmadPolicy::Decomposed),
+        (registry::a100_pcie(), FmadPolicy::Fused),
+    ] {
+        let v = tco::reuse_value(&dev, &quant::Q4_K_M, policy, 1.0);
+        println!(
+            "{:<24} {:>9}  {:>8.2} $/(tok/s)  {:>7.0} tok/s",
+            v.device,
+            policy.name(),
+            v.usd_per_decode_tps,
+            v.decode_tps
+        );
+    }
+
+    let stats = time_fn(1, 5, || {
+        std::hint::black_box(figures::table_1_2());
+    });
+    println!(
+        "\ntable generation: mean {:.3} ms (σ {:.3} ms)",
+        stats.mean_s * 1e3,
+        stats.stddev_s * 1e3
+    );
+}

@@ -1,0 +1,116 @@
+//! GPU-Burn port — the paper's control group (§1.3.3, Table 2-9).
+//!
+//! GPU-Burn runs a sustained dense GEMM (cuBLAS) sized to fill VRAM, always
+//! compiled/linked as shipped — the paper explicitly does *not* rebuild it
+//! with `-fmad=false`, and since the hot loop lives in cuBLAS's prebuilt
+//! SASS the flag would not bite anyway ([`KernelSource::Lib`]). Its FP32
+//! number therefore pins the *default* (crippled) bar in Graph 3-1, and its
+//! FP16 number lands on the scalar-half pipe like PyTorch's (Graph 3-2).
+
+use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
+use crate::isa::ir::{Kernel, KernelSource, MemPattern, Stmt, Traffic};
+use crate::sim::{simulate, SimConfig};
+
+use super::{Precision, ToolResult};
+
+/// GEMM dimension GPU-Burn picks for ~90% VRAM usage on an 8 GB card.
+const N: u64 = 8192;
+
+/// cuBLAS sustains ~99% of pipe issue on large square GEMMs (fully
+/// unrolled, software-pipelined inner loops).
+const LIB_ISSUE_EFF: f64 = 0.99;
+
+/// Build the one GEMM iteration kernel: C = A·B + C, N×N×N.
+pub fn gemm_kernel(precision: Precision) -> Kernel {
+    let (class, elem) = match precision {
+        Precision::Fp64 => (InstClass::Dfma, 8),
+        // GPU-Burn's -tc off FP16 path is scalar half FMA (no half2
+        // vectorization in its naive kernel) — the paper's 6.3 TFLOPS.
+        Precision::Fp16Scalar | Precision::Fp16Half2 => (InstClass::Hfma, 2),
+        _ => (InstClass::Ffma, 4),
+    };
+    let threads = N * N;
+    let tile_reuse = 64.0; // blocked GEMM reuses operand tiles from L2
+    let unique = 3 * N * N * elem;
+    Kernel::new(format!("gpuburn.{}", precision.name()), threads, 256)
+        .with_body(vec![
+            Stmt::looped(N, vec![Stmt::op(class, 1)]),
+            // index math amortized 16× by unrolling
+            Stmt::op(InstClass::Imad, N / 16),
+            Stmt::op(InstClass::Stg, 1),
+        ])
+        .with_traffic(Traffic {
+            read_bytes: (2.0 * N as f64 * N as f64 * elem as f64 * (N as f64 / 128.0)) as u64,
+            write_bytes: N * N * elem,
+            pattern: MemPattern::Coalesced,
+            l2_hit_rate: crate::memhier::l2::hit_rate(unique, tile_reuse, 8 << 20),
+        })
+        .with_source(KernelSource::Lib)
+}
+
+/// Run the burn GEMM once on the device (steady-state rate; the real tool
+/// loops it for `-tc 3600` seconds).
+pub fn run(dev: &DeviceSpec, precision: Precision) -> ToolResult {
+    let k = gemm_kernel(precision);
+    let cfg = SimConfig {
+        issue_efficiency: LIB_ISSUE_EFF,
+        ..Default::default()
+    };
+    let timing = simulate(&k, dev, &cfg);
+    ToolResult {
+        tool: "gpu-burn",
+        case: precision.name().to_string(),
+        timing,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration as cal;
+    use crate::device::registry;
+    use crate::isa::pass::{apply_fmad, FmadPolicy};
+
+    #[test]
+    fn fp32_pins_the_crippled_default_bar() {
+        let dev = registry::cmp170hx();
+        let t = run(&dev, Precision::Fp32).tflops();
+        assert!(cal::check(&cal::FP32_DEFAULT_TFLOPS, t), "{t}");
+    }
+
+    #[test]
+    fn fp16_lands_on_scalar_pipe() {
+        let dev = registry::cmp170hx();
+        let t = run(&dev, Precision::Fp16Scalar).tflops();
+        assert!(cal::check(&cal::FP16_SCALAR_TFLOPS, t), "{t}");
+    }
+
+    #[test]
+    fn rebuilding_with_nofma_would_not_help_a_lib_kernel() {
+        // The control-group property: even if someone passed -fmad=false,
+        // the Lib-sourced GEMM is untouched by the pass.
+        let k = gemm_kernel(Precision::Fp32);
+        let rewritten = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(k.body, rewritten.body);
+    }
+
+    #[test]
+    fn burn_sits_at_tdp_on_healthy_silicon() {
+        // GPU-Burn's purpose is to pin the card at TDP; on the A100 the
+        // GEMM saturates compute and DVFS caps power.
+        let dev = registry::a100_pcie();
+        let r = run(&dev, Precision::Fp32);
+        assert!((r.timing.power_w - dev.tdp_w).abs() < 1.0, "{}", r.timing.power_w);
+    }
+
+    #[test]
+    fn crippled_burn_runs_cool() {
+        // On the CMP the FP32 pipe is 1/32-rate: the burn can't fill the
+        // power envelope — matching the community observation that mining
+        // cards idle far below TDP in compute workloads.
+        let dev = registry::cmp170hx();
+        let r = run(&dev, Precision::Fp32);
+        assert!(r.timing.power_w < 0.8 * dev.tdp_w, "{}", r.timing.power_w);
+    }
+}

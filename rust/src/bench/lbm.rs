@@ -1,0 +1,110 @@
+//! FluidX3D-style lattice-Boltzmann workload (§6.2's second reuse case:
+//! "memory bandwidth-intensive applications in cost-sensitive industrial
+//! simulations (e.g., FluidX3D)").
+//!
+//! D3Q19 LBM stream-collide: per cell per step, 19 f32 populations are
+//! read and written (152 B of traffic) against ~350 FLOPs of collision
+//! math — operational intensity ≈ 2.3 flops/byte, far left of the ridge:
+//! bandwidth-bound on every modern GPU, which is exactly why a CMP 170HX
+//! keeps up with an A100 here. FluidX3D reports MLUPs (mega lattice
+//! updates per second).
+
+use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
+use crate::isa::ir::{Kernel, Stmt, Traffic};
+use crate::isa::pass::{apply_fmad, FmadPolicy};
+use crate::sim::{simulate, SimConfig};
+
+/// D3Q19 lattice constants.
+pub const Q: u64 = 19;
+pub const BYTES_PER_CELL: u64 = 2 * Q * 4; // read + write all populations
+/// Collision math per cell (BGK with common optimizations): ~350 FLOPs,
+/// roughly half fused.
+pub const FMA_PER_CELL: u64 = 110;
+pub const MULADD_PER_CELL: u64 = 130;
+
+/// One stream-collide step over an `n³` cube.
+pub fn step_kernel(n: u64) -> Kernel {
+    let cells = n * n * n;
+    Kernel::new(format!("lbm.d3q19.{n}^3"), cells, 256)
+        .with_body(vec![
+            Stmt::op(InstClass::Ldg, Q),
+            Stmt::op(InstClass::Ffma, FMA_PER_CELL),
+            Stmt::op(InstClass::Fmul, MULADD_PER_CELL / 2),
+            Stmt::op(InstClass::Fadd, MULADD_PER_CELL / 2),
+            Stmt::op(InstClass::Stg, Q),
+        ])
+        .with_traffic(Traffic::coalesced(cells * Q * 4, cells * Q * 4))
+}
+
+/// Simulate one step; returns (MLUPs, memory_bound).
+pub fn mlups(dev: &DeviceSpec, n: u64, policy: FmadPolicy) -> (f64, bool) {
+    let k = apply_fmad(&step_kernel(n), policy);
+    let t = simulate(&k, dev, &SimConfig::default());
+    let cells = (n * n * n) as f64;
+    (cells / t.time_s / 1e6, t.memory_bound())
+}
+
+/// Largest cube that fits in VRAM (FluidX3D needs ~2× the lattice for
+/// auxiliary fields; 8 GB caps around 330³).
+pub fn max_cube(dev: &DeviceSpec) -> u64 {
+    let bytes_per_cell = Q * 4 * 2; // populations + aux
+    let mut n = 16;
+    while (n + 16) * (n + 16) * (n + 16) * bytes_per_cell <= dev.mem.capacity_bytes {
+        n += 16;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry;
+
+    #[test]
+    fn lbm_is_bandwidth_bound_everywhere() {
+        // Even on the crippled card the collision math hides behind the
+        // 152 B/cell of traffic — on the *default* build it tips compute-
+        // bound though, which is the §6.2 caveat for running unpatched.
+        let cmp = registry::cmp170hx();
+        let (_, nofma_bound) = mlups(&cmp, 256, FmadPolicy::Decomposed);
+        assert!(nofma_bound, "noFMA LBM must be memory-bound");
+        let a100 = registry::a100_pcie();
+        let (_, a100_bound) = mlups(&a100, 256, FmadPolicy::Fused);
+        assert!(a100_bound);
+    }
+
+    #[test]
+    fn restored_cmp_matches_a100_within_bandwidth_ratio() {
+        // The §6.2 claim, quantified: MLUPs ratio ≈ bandwidth ratio (0.96).
+        let cmp = mlups(&registry::cmp170hx(), 256, FmadPolicy::Decomposed).0;
+        let a100 = mlups(&registry::a100_pcie(), 256, FmadPolicy::Fused).0;
+        let ratio = cmp / a100;
+        assert!(ratio > 0.93 && ratio < 1.0, "{ratio}");
+    }
+
+    #[test]
+    fn default_build_cripples_lbm() {
+        // Without the fmad rebuild, the 110 FFMA/cell hit the 1/32 wall
+        // and the card falls well behind its own bandwidth.
+        let cmp = registry::cmp170hx();
+        let crippled = mlups(&cmp, 256, FmadPolicy::Fused).0;
+        let restored = mlups(&cmp, 256, FmadPolicy::Decomposed).0;
+        assert!(restored / crippled > 4.0, "{restored} vs {crippled}");
+    }
+
+    #[test]
+    fn mlups_scale_is_plausible() {
+        // 1314 GB/s effective / 152 B per cell ≈ 8.6 GLUPs upper bound.
+        let (m, _) = mlups(&registry::cmp170hx(), 256, FmadPolicy::Decomposed);
+        assert!(m > 5_000.0 && m < 9_000.0, "{m}");
+    }
+
+    #[test]
+    fn max_cube_respects_vram() {
+        let n = max_cube(&registry::cmp170hx());
+        // 368³ × 152 B ≈ 7.6 GB of the 8 GiB card
+        assert!(n >= 336 && n <= 384, "{n}");
+        assert!(max_cube(&registry::a100_pcie()) > n);
+    }
+}

@@ -1,0 +1,121 @@
+//! Memory-bandwidth benchmark (Graph 3-5) — OpenCL-Benchmark's memory
+//! section: coalesced read, coalesced write, misaligned read, misaligned
+//! write, on a buffer far larger than L2.
+
+use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
+use crate::isa::ir::{Kernel, MemPattern, Stmt, Traffic};
+use crate::sim::{simulate, SimConfig};
+
+use super::ToolResult;
+
+/// 2 GiB test buffer (OpenCL-Benchmark scales to VRAM; 2 GiB ≫ 8 MiB L2).
+const BYTES: u64 = 2 << 30;
+const ELEM: u64 = 4;
+
+/// Direction of the streaming kernel.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dir {
+    Read,
+    Write,
+}
+
+impl Dir {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dir::Read => "read",
+            Dir::Write => "write",
+        }
+    }
+}
+
+/// Build the streaming kernel for a direction/pattern.
+pub fn kernel(dir: Dir, pattern: MemPattern) -> Kernel {
+    let threads = BYTES / ELEM;
+    let (read, write, body) = match dir {
+        Dir::Read => (
+            BYTES,
+            0,
+            // reads reduced into a register to defeat dead-code elimination
+            vec![Stmt::op(InstClass::Ldg, 1), Stmt::op(InstClass::Iadd, 1)],
+        ),
+        Dir::Write => (0, BYTES, vec![Stmt::op(InstClass::Stg, 1)]),
+    };
+    Kernel::new(
+        format!("membench.{}.{:?}", dir.name(), pattern),
+        threads,
+        256,
+    )
+    .with_body(body)
+    .with_traffic(Traffic {
+        read_bytes: read,
+        write_bytes: write,
+        pattern,
+        l2_hit_rate: 0.0,
+    })
+}
+
+/// Run one (direction, pattern) case.
+pub fn run(dev: &DeviceSpec, dir: Dir, pattern: MemPattern) -> ToolResult {
+    ToolResult {
+        tool: "opencl-benchmark/mem",
+        case: format!("{} {:?}", dir.name(), pattern),
+        timing: simulate(&kernel(dir, pattern), dev, &SimConfig::default()),
+    }
+}
+
+/// The four bars of Graph 3-5.
+pub fn graph_3_5(dev: &DeviceSpec) -> Vec<ToolResult> {
+    vec![
+        run(dev, Dir::Read, MemPattern::Coalesced),
+        run(dev, Dir::Write, MemPattern::Coalesced),
+        run(dev, Dir::Read, MemPattern::Misaligned),
+        run(dev, Dir::Write, MemPattern::Misaligned),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration as cal;
+    use crate::device::registry;
+
+    #[test]
+    fn coalesced_read_matches_graph_3_5() {
+        let dev = registry::cmp170hx();
+        let g = run(&dev, Dir::Read, MemPattern::Coalesced).gbps();
+        assert!(cal::check(&cal::MEMBW_COALESCED_GBPS, g), "{g}");
+    }
+
+    #[test]
+    fn bandwidth_fully_retained_vs_a100() {
+        // The paper's pivotal claim: CMP bandwidth ≈ 96% of A100's.
+        let cmp = run(&registry::cmp170hx(), Dir::Read, MemPattern::Coalesced).gbps();
+        let a100 = run(&registry::a100_pcie(), Dir::Read, MemPattern::Coalesced).gbps();
+        let ratio = cmp / a100;
+        assert!(ratio > 0.94 && ratio < 0.98, "{ratio}");
+    }
+
+    #[test]
+    fn misaligned_pays_a_heavy_penalty() {
+        let dev = registry::cmp170hx();
+        let co = run(&dev, Dir::Read, MemPattern::Coalesced).gbps();
+        let mis = run(&dev, Dir::Read, MemPattern::Misaligned).gbps();
+        assert!(mis / co < 0.6, "misaligned {mis} vs coalesced {co}");
+    }
+
+    #[test]
+    fn all_graph_bars_are_memory_bound() {
+        for r in graph_3_5(&registry::cmp170hx()) {
+            assert!(r.timing.memory_bound(), "{}", r.case);
+        }
+    }
+
+    #[test]
+    fn fmad_policy_is_irrelevant_to_bandwidth() {
+        use crate::isa::pass::{apply_fmad, FmadPolicy};
+        let k = kernel(Dir::Read, MemPattern::Coalesced);
+        let rewritten = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(k.body, rewritten.body);
+    }
+}

@@ -1,0 +1,95 @@
+//! Ports of the paper's benchmark tools (§1.3, §2.2.2).
+//!
+//! Each sub-module is a *workload generator*: it builds the same kernels the
+//! real tool launches (same sweep axes, same launch pressure) and runs them
+//! through [`crate::sim`]. Tool-specific character is expressed through
+//! launch geometry and [`crate::sim::SimConfig`], not by scaling results —
+//! the CUDA-vs-OpenCL deltas the paper observes fall out of launch pressure.
+//!
+//! | module | tool | figures |
+//! |---|---|---|
+//! | [`mixbench`] | mixbench (CUDA flavor) | Graphs 3-1…3-4 |
+//! | [`openclbench`] | ProjectPhysX OpenCL-Benchmark | Graphs 3-1…3-5, EX.1 |
+//! | [`gpuburn`] | GPU-Burn (control group, always default-compiled) | Graphs 3-1…3-3 |
+//! | [`torchgemm`] | the paper's custom PyTorch matmul script | Graphs 3-1…3-3 |
+//! | [`membench`] | OpenCL-Benchmark memory section | Graph 3-5 |
+//! | [`pciebench`] | OpenCL-Benchmark PCIe section | Graph EX.2 |
+
+pub mod gpuburn;
+pub mod lbm;
+pub mod membench;
+pub mod mixbench;
+pub mod openclbench;
+pub mod pciebench;
+pub mod torchgemm;
+
+use crate::device::DeviceSpec;
+use crate::isa::pass::FmadPolicy;
+use crate::sim::KernelTiming;
+
+/// A named benchmark result in the unit the paper's graph uses.
+#[derive(Clone, Debug)]
+pub struct ToolResult {
+    pub tool: &'static str,
+    pub case: String,
+    pub timing: KernelTiming,
+}
+
+impl ToolResult {
+    pub fn tflops(&self) -> f64 {
+        self.timing.tflops()
+    }
+    pub fn tiops(&self) -> f64 {
+        self.timing.tiops()
+    }
+    pub fn gbps(&self) -> f64 {
+        self.timing.gbps()
+    }
+}
+
+/// The precision axes of Graphs 3-1…3-4 and EX.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    /// Vectorized packed-half (OpenCL `half2`, mixbench-half): the path
+    /// that reaches ~50 TFLOPS on the CMP 170HX.
+    Fp16Half2,
+    /// Scalar half (PyTorch / GPU-Burn): tops out at ~6.3 TFLOPS.
+    Fp16Scalar,
+    Fp64,
+    Int32,
+    Int8,
+}
+
+impl Precision {
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16Half2 => "fp16-half2",
+            Precision::Fp16Scalar => "fp16-scalar",
+            Precision::Fp64 => "fp64",
+            Precision::Int32 => "int32",
+            Precision::Int8 => "int8-dp4a",
+        }
+    }
+
+    /// Is the paper's graph for this precision reported in TIOPs?
+    pub fn integer(self) -> bool {
+        matches!(self, Precision::Int32 | Precision::Int8)
+    }
+}
+
+/// Run every tool the paper runs for one precision on one device, at both
+/// fmad policies where the tool supports recompilation (GPU-Burn is the
+/// paper's control group and is always default-compiled; the PyTorch script
+/// inherits a prebuilt framework so its policy is fixed too — §5.3).
+pub fn graph3_suite(dev: &DeviceSpec, precision: Precision) -> Vec<ToolResult> {
+    let mut out = Vec::new();
+    for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+        out.push(mixbench::peak(dev, precision, policy));
+        out.push(openclbench::peak(dev, precision, policy));
+    }
+    out.push(gpuburn::run(dev, precision));
+    out.push(torchgemm::run(dev, precision));
+    out
+}

@@ -1,0 +1,159 @@
+//! OpenCL-Benchmark port (ProjectPhysX).
+//!
+//! Unlike mixbench's intensity sweep, OpenCL-Benchmark launches dedicated
+//! *peak-rate* kernels per precision: a huge grid of threads doing nothing
+//! but chained math on register values, sized so memory traffic is
+//! negligible. Its launch pressure is the best of the paper's tools — §3.2
+//! and §3.4 both note its results land slightly above the CUDA tools.
+//!
+//! The paper's noFMA variant patches the kernel source with
+//! `#pragma OPENCL FP_CONTRACT OFF` + an `fma()` macro override (Table 2-8);
+//! here that's [`FmadPolicy::Decomposed`] through the same pass.
+
+use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
+use crate::isa::ir::{Kernel, Stmt, Traffic};
+use crate::isa::pass::{apply_fmad, FmadPolicy};
+use crate::sim::{simulate, SimConfig};
+
+use super::{Precision, ToolResult};
+
+/// OpenCL-Benchmark's compute kernels sustain ~98% of peak issue (long
+/// independent chains, no loop-carried dependence).
+const OPENCL_ISSUE_EFF: f64 = 0.98;
+/// Grid: 16M work-items × 512 chained ops each.
+const ITEMS: u64 = 16 * 1024 * 1024;
+const CHAIN: u64 = 512;
+const BLOCK: u32 = 256;
+
+fn sim_config() -> SimConfig {
+    SimConfig {
+        issue_efficiency: OPENCL_ISSUE_EFF,
+        ..Default::default()
+    }
+}
+
+fn fused_class(precision: Precision) -> InstClass {
+    match precision {
+        Precision::Fp32 => InstClass::Ffma,
+        Precision::Fp16Half2 => InstClass::Hfma2,
+        Precision::Fp16Scalar => InstClass::Hfma,
+        Precision::Fp64 => InstClass::Dfma,
+        Precision::Int32 => InstClass::Imad,
+        Precision::Int8 => InstClass::Dp4a,
+    }
+}
+
+/// The peak-rate kernel: one element in, CHAIN fused ops, one element out.
+pub fn kernel(precision: Precision) -> Kernel {
+    let class = fused_class(precision);
+    let bytes = match precision {
+        Precision::Fp16Half2 | Precision::Fp16Scalar => 2,
+        Precision::Fp64 => 8,
+        _ => 4,
+    };
+    Kernel::new(
+        format!("openclbench.{}", precision.name()),
+        ITEMS,
+        BLOCK,
+    )
+    .with_body(vec![
+        Stmt::op(InstClass::Ldg, 1),
+        Stmt::looped(CHAIN, vec![Stmt::op(class, 1)]),
+        Stmt::op(InstClass::Stg, 1),
+    ])
+    .with_traffic(Traffic::coalesced(ITEMS * bytes, ITEMS * bytes))
+}
+
+/// Run the peak kernel for one precision at one fmad policy.
+pub fn peak(dev: &DeviceSpec, precision: Precision, policy: FmadPolicy) -> ToolResult {
+    let k = apply_fmad(&kernel(precision), policy);
+    ToolResult {
+        tool: "opencl-benchmark",
+        case: format!("{} {}", precision.name(), policy.name()),
+        timing: simulate(&k, dev, &sim_config()),
+    }
+}
+
+/// Convenience wrappers used throughout the crate and examples.
+pub fn peak_fp32(dev: &DeviceSpec, policy: FmadPolicy) -> crate::sim::KernelTiming {
+    peak(dev, Precision::Fp32, policy).timing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration as cal;
+    use crate::device::registry;
+
+    #[test]
+    fn fp32_default_matches_graph_3_1() {
+        let dev = registry::cmp170hx();
+        let t = peak(&dev, Precision::Fp32, FmadPolicy::Fused).tflops();
+        assert!(cal::check(&cal::FP32_DEFAULT_TFLOPS, t), "{t}");
+    }
+
+    #[test]
+    fn fp32_nofma_matches_graph_3_1() {
+        let dev = registry::cmp170hx();
+        let t = peak(&dev, Precision::Fp32, FmadPolicy::Decomposed).tflops();
+        assert!(cal::check(&cal::FP32_NOFMA_TFLOPS, t), "{t}");
+    }
+
+    #[test]
+    fn fp16_half2_matches_graph_3_2() {
+        let dev = registry::cmp170hx();
+        let t = peak(&dev, Precision::Fp16Half2, FmadPolicy::Fused).tflops();
+        assert!(cal::check(&cal::FP16_HALF2_TFLOPS, t), "{t}");
+    }
+
+    #[test]
+    fn fp64_matches_graph_3_3_both_policies() {
+        let dev = registry::cmp170hx();
+        let def = peak(&dev, Precision::Fp64, FmadPolicy::Fused).tflops();
+        let nofma = peak(&dev, Precision::Fp64, FmadPolicy::Decomposed).tflops();
+        assert!(cal::check(&cal::FP64_DEFAULT_TFLOPS, def), "{def}");
+        assert!(cal::check(&cal::FP64_NOFMA_TFLOPS, nofma), "{nofma}");
+    }
+
+    #[test]
+    fn int32_matches_graph_3_4() {
+        let dev = registry::cmp170hx();
+        let t = peak(&dev, Precision::Int32, FmadPolicy::Fused).tiops();
+        assert!(cal::check(&cal::INT32_OPENCL_TIOPS, t), "{t}");
+    }
+
+    #[test]
+    fn int8_matches_graph_ex1() {
+        let dev = registry::cmp170hx();
+        let t = peak(&dev, Precision::Int8, FmadPolicy::Fused).tiops();
+        assert!(cal::check(&cal::INT8_OPENCL_TIOPS, t), "{t}");
+    }
+
+    #[test]
+    fn opencl_beats_cuda_mixbench_slightly() {
+        // §3.2/§3.4: "OpenCL-based benchmarks show slightly higher
+        // performance than CUDA-based ones".
+        use crate::bench::mixbench;
+        let dev = registry::cmp170hx();
+        for precision in [Precision::Fp32, Precision::Int32] {
+            let ocl = peak(&dev, precision, FmadPolicy::Decomposed);
+            let cuda = mixbench::peak(&dev, precision, FmadPolicy::Decomposed);
+            let (a, b) = if precision.integer() {
+                (ocl.tiops(), cuda.tiops())
+            } else {
+                (ocl.tflops(), cuda.tflops())
+            };
+            assert!(a > b, "{}: opencl {a} vs cuda {b}", precision.name());
+            assert!(a / b < 1.15, "gap should be slight: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn a100_reference_peaks() {
+        let dev = registry::a100_pcie();
+        let t = peak(&dev, Precision::Fp32, FmadPolicy::Fused).timing;
+        // DVFS-capped below the 19.5 ideal but must clear 15.
+        assert!(t.tflops() > 15.0, "{}", t.tflops());
+    }
+}

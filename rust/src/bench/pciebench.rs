@@ -1,0 +1,125 @@
+//! PCIe bandwidth benchmark (Graph EX.2): send / receive / bidirectional
+//! payload rates over the card's host link, plus the Ex.2.2 x16
+//! capacitor-mod hypothetical.
+
+use crate::device::DeviceSpec;
+use crate::memhier::pcie::PcieLink;
+
+/// One PCIe measurement row.
+#[derive(Clone, Debug)]
+pub struct PcieResult {
+    pub case: String,
+    pub gbps: f64,
+    pub theoretical_gbps: f64,
+}
+
+/// Transfer direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XferDir {
+    Send,
+    Receive,
+    Bidirectional,
+}
+
+impl XferDir {
+    pub fn name(self) -> &'static str {
+        match self {
+            XferDir::Send => "send",
+            XferDir::Receive => "receive",
+            XferDir::Bidirectional => "bidirectional",
+        }
+    }
+}
+
+/// Measure one direction on a link using a 256 MiB transfer (the benchmark's
+/// default block, large enough to amortize DMA setup).
+pub fn measure(link: &PcieLink, dir: XferDir) -> PcieResult {
+    const BYTES: u64 = 256 << 20;
+    let t = link.transfer_time(BYTES);
+    let uni = BYTES as f64 / t / 1e9;
+    let (gbps, theo) = match dir {
+        // send/receive are symmetric full-duplex lanes
+        XferDir::Send | XferDir::Receive => (uni, link.theoretical_bw() / 1e9),
+        XferDir::Bidirectional => (2.0 * uni, 2.0 * link.theoretical_bw() / 1e9),
+    };
+    PcieResult {
+        case: dir.name().to_string(),
+        gbps,
+        theoretical_gbps: theo,
+    }
+}
+
+/// Graph EX.2: stock x4 link and the x16-mod hypothetical, all directions.
+pub fn graph_ex2(dev: &DeviceSpec) -> Vec<PcieResult> {
+    let mut rows = Vec::new();
+    for dir in [XferDir::Send, XferDir::Receive, XferDir::Bidirectional] {
+        let mut r = measure(&dev.pcie, dir);
+        r.case = format!("stock-x{} {}", dev.pcie.lanes, r.case);
+        rows.push(r);
+    }
+    let modded = dev.pcie.with_lanes(16);
+    for dir in [XferDir::Send, XferDir::Receive, XferDir::Bidirectional] {
+        let mut r = measure(&modded, dir);
+        r.case = format!("x16-mod {}", r.case);
+        rows.push(r);
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration as cal;
+    use crate::device::registry;
+
+    #[test]
+    fn stock_theoretical_is_one_gbps() {
+        let dev = registry::cmp170hx();
+        let r = measure(&dev.pcie, XferDir::Send);
+        assert!(
+            cal::check(&cal::PCIE_STOCK_THEORETICAL_GBPS, r.theoretical_gbps),
+            "{}",
+            r.theoretical_gbps
+        );
+        assert!(r.gbps < r.theoretical_gbps);
+        assert!(r.gbps > 0.75, "{}", r.gbps);
+    }
+
+    #[test]
+    fn x16_mod_quadruples() {
+        let dev = registry::cmp170hx();
+        let rows = graph_ex2(&dev);
+        let stock = rows.iter().find(|r| r.case.contains("stock") && r.case.contains("send")).unwrap();
+        let modded = rows.iter().find(|r| r.case.contains("x16") && r.case.contains("send")).unwrap();
+        let ratio = modded.gbps / stock.gbps;
+        assert!((ratio - 4.0).abs() < 0.1, "{ratio}");
+    }
+
+    #[test]
+    fn bidirectional_doubles_unidirectional() {
+        let dev = registry::cmp170hx();
+        let uni = measure(&dev.pcie, XferDir::Send).gbps;
+        let bi = measure(&dev.pcie, XferDir::Bidirectional).gbps;
+        assert!((bi / uni - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn a100_link_dwarfs_cmp_link() {
+        // Context row the paper's Ex.2 discussion implies: gen4 x16 ≈ 64×
+        // the stock CMP link.
+        let a100 = registry::a100_pcie();
+        let cmp = registry::cmp170hx();
+        let a = measure(&a100.pcie, XferDir::Send).gbps;
+        let c = measure(&cmp.pcie, XferDir::Send).gbps;
+        assert!(a / c > 20.0, "{a} vs {c}");
+    }
+
+    #[test]
+    fn model_loading_over_x4_gen1_is_slow() {
+        // An 8 GB model upload over the stock link takes ~10 s — the cost
+        // §6.2's edge deployment amortizes by keeping weights resident.
+        let dev = registry::cmp170hx();
+        let t = dev.pcie.transfer_time(8 << 30);
+        assert!(t > 8.0 && t < 15.0, "{t}");
+    }
+}

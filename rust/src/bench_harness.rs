@@ -1,0 +1,208 @@
+//! Mini-criterion: a deterministic benchmark harness for `harness = false`
+//! bench targets (the image ships no `criterion` crate).
+//!
+//! Two modes:
+//! - [`time_fn`] — wall-clock a closure with warmup + N samples, reporting
+//!   mean/σ/min (used by the L3 perf pass and the e2e serve bench);
+//! - [`Table`]/[`Row`] — the figure emitters: every paper graph/table bench
+//!   prints one of these, with a `paper` column next to `measured` so the
+//!   regenerated figure is directly comparable.
+
+use std::time::Instant;
+
+/// Statistics from [`time_fn`].
+#[derive(Clone, Copy, Debug)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub stddev_s: f64,
+    pub min_s: f64,
+    pub samples: u32,
+}
+
+impl Stats {
+    /// Throughput for `units` of work per invocation.
+    pub fn per_sec(&self, units: f64) -> f64 {
+        units / self.mean_s
+    }
+}
+
+/// Benchmark a closure: `warmup` unmeasured runs then `samples` timed runs.
+pub fn time_fn<F: FnMut()>(warmup: u32, samples: u32, mut f: F) -> Stats {
+    assert!(samples > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(samples as usize);
+    for _ in 0..samples {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = times.iter().sum::<f64>() / samples as f64;
+    let var = times.iter().map(|t| (t - mean).powi(2)).sum::<f64>() / samples as f64;
+    Stats {
+        mean_s: mean,
+        stddev_s: var.sqrt(),
+        min_s: times.iter().cloned().fold(f64::INFINITY, f64::min),
+        samples,
+    }
+}
+
+/// One row of a figure table.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub measured: f64,
+    /// Paper-reported value if one exists for this row.
+    pub paper: Option<f64>,
+    pub note: String,
+}
+
+impl Row {
+    pub fn new(label: impl Into<String>, measured: f64) -> Self {
+        Row {
+            label: label.into(),
+            measured,
+            paper: None,
+            note: String::new(),
+        }
+    }
+
+    pub fn paper(mut self, v: f64) -> Self {
+        self.paper = Some(v);
+        self
+    }
+
+    pub fn note(mut self, n: impl Into<String>) -> Self {
+        self.note = n.into();
+        self
+    }
+
+    /// Relative deviation from the paper value, if present.
+    pub fn deviation(&self) -> Option<f64> {
+        self.paper.map(|p| (self.measured - p) / p)
+    }
+}
+
+/// A printable figure reproduction.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub unit: &'static str,
+    pub rows: Vec<Row>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, unit: &'static str) -> Self {
+        Table {
+            title: title.into(),
+            unit,
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Row) {
+        self.rows.push(row);
+    }
+
+    /// Render as an aligned text table with a deviation column.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("\n== {} [{}] ==\n", self.title, self.unit));
+        let w = self
+            .rows
+            .iter()
+            .map(|r| r.label.len())
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        out.push_str(&format!(
+            "{:<w$}  {:>12}  {:>12}  {:>8}  note\n",
+            "case", "measured", "paper", "dev",
+        ));
+        for r in &self.rows {
+            let paper = r
+                .paper
+                .map(|p| format!("{p:>12.4}"))
+                .unwrap_or_else(|| format!("{:>12}", "-"));
+            let dev = r
+                .deviation()
+                .map(|d| format!("{:>+7.1}%", d * 100.0))
+                .unwrap_or_else(|| format!("{:>8}", "-"));
+            out.push_str(&format!(
+                "{:<w$}  {:>12.4}  {}  {}  {}\n",
+                r.label, r.measured, paper, dev, r.note,
+            ));
+        }
+        out
+    }
+
+    /// Render as CSV (for EXPERIMENTS.md extraction).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("case,measured,paper,unit\n");
+        for r in &self.rows {
+            out.push_str(&format!(
+                "{},{},{},{}\n",
+                r.label,
+                r.measured,
+                r.paper.map(|p| p.to_string()).unwrap_or_default(),
+                self.unit,
+            ));
+        }
+        out
+    }
+
+    /// Largest absolute relative deviation across rows that have paper
+    /// values (figure-level reproduction check).
+    pub fn worst_deviation(&self) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter_map(|r| r.deviation())
+            .map(f64::abs)
+            .fold(None, |acc, d| Some(acc.map_or(d, |a: f64| a.max(d))))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_reports_sane_stats() {
+        let s = time_fn(1, 8, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(s.samples, 8);
+        assert!(s.mean_s >= s.min_s);
+        assert!(s.mean_s > 0.0);
+    }
+
+    #[test]
+    fn per_sec_inverts_mean() {
+        let s = Stats {
+            mean_s: 0.5,
+            stddev_s: 0.0,
+            min_s: 0.5,
+            samples: 1,
+        };
+        assert_eq!(s.per_sec(100.0), 200.0);
+    }
+
+    #[test]
+    fn row_deviation() {
+        let r = Row::new("x", 110.0).paper(100.0);
+        assert!((r.deviation().unwrap() - 0.1).abs() < 1e-12);
+        assert!(Row::new("y", 1.0).deviation().is_none());
+    }
+
+    #[test]
+    fn table_renders_all_rows_and_tracks_worst() {
+        let mut t = Table::new("demo", "TFLOPS");
+        t.push(Row::new("a", 1.0).paper(1.0));
+        t.push(Row::new("b", 2.2).paper(2.0).note("hot"));
+        let s = t.render();
+        assert!(s.contains("demo") && s.contains("hot"));
+        assert!((t.worst_deviation().unwrap() - 0.1).abs() < 1e-9);
+        assert!(t.to_csv().lines().count() == 3);
+    }
+}

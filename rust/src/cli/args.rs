@@ -1,0 +1,108 @@
+//! Tiny argument parser: `cmd [positional…] [--key value] [--flag]`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        args.command = it.next().unwrap_or_else(|| "help".to_string());
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                // --key=value | --key value | --flag
+                if let Some((k, v)) = key.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    args.options.insert(key.to_string(), it.next().unwrap());
+                } else {
+                    args.flags.push(key.to_string());
+                }
+            } else if a.starts_with('-') && a.len() > 1 {
+                bail!("short options are not supported: {a}");
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_command_positional_options_flags() {
+        let a = parse("bench fp32 --device a100 --csv --n 5");
+        assert_eq!(a.command, "bench");
+        assert_eq!(a.pos(0), Some("fp32"));
+        assert_eq!(a.opt("device"), Some("a100"));
+        assert!(a.flag("csv"));
+        assert_eq!(a.opt_usize("n", 1).unwrap(), 5);
+    }
+
+    #[test]
+    fn equals_form_works() {
+        let a = parse("serve --requests=12");
+        assert_eq!(a.opt_usize("requests", 0).unwrap(), 12);
+    }
+
+    #[test]
+    fn empty_argv_means_help() {
+        let a = Args::parse(std::iter::empty()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+
+    #[test]
+    fn trailing_flag_is_a_flag() {
+        let a = parse("report --all");
+        assert!(a.flag("all"));
+        assert_eq!(a.opt("all"), None);
+    }
+
+    #[test]
+    fn rejects_short_options() {
+        assert!(Args::parse(vec!["x".into(), "-v".into()]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply_when_missing() {
+        let a = parse("serve");
+        assert_eq!(a.opt_usize("requests", 8).unwrap(), 8);
+    }
+}

@@ -1,0 +1,292 @@
+//! CLI command dispatch.
+
+use anyhow::{bail, Result};
+
+use crate::bench_harness::Table;
+use crate::calibration as cal;
+use crate::coordinator::{Server, ServerConfig, ServerHandle};
+use crate::device::registry;
+use crate::report::{figures, specs};
+use crate::runtime::ArtifactDir;
+
+use super::args::Args;
+
+const HELP: &str = "\
+cmphx — CMP 170HX reuse-study platform (paper reproduction)
+
+USAGE: cmphx <command> [args]
+
+COMMANDS:
+  specs [name]              device spec sheets (Tables 2-1…2-5)
+  bench <suite>             fp32|fp16|fp64|int32|int8|membw|pcie|all (Graphs 3-x, EX)
+  llama-bench               the §4 grid: prefill/decode/efficiency (Graphs 4-1…4-3)
+  market                    sales + reuse economics (Tables 1-1/1-2)
+  report [--csv]            regenerate every figure with paper deviations
+  targets                   check simulator output against calibration targets
+  sweep [precision] [--device d]
+                            mixbench operational-intensity sweep (roofline)
+  serve [--requests N] [--tokens N] [--batch N]
+                            end-to-end: serve the AOT tiny-qwen via PJRT
+  help                      this text
+";
+
+/// Run a parsed command; returns the process exit code.
+pub fn run(args: &Args) -> Result<i32> {
+    match args.command.as_str() {
+        "help" | "--help" => {
+            print!("{HELP}");
+            Ok(0)
+        }
+        "specs" => {
+            match args.pos(0) {
+                Some(name) => match registry::by_name(name) {
+                    Some(dev) => print!("{}", specs::spec_sheet(&dev)),
+                    None => bail!("unknown device {name:?}"),
+                },
+                None => print!("{}", specs::all_spec_sheets()),
+            }
+            Ok(0)
+        }
+        "bench" => {
+            let suite = args.pos(0).unwrap_or("all");
+            for t in bench_tables(suite)? {
+                emit(&t, args);
+            }
+            Ok(0)
+        }
+        "llama-bench" => {
+            for t in [figures::graph_4_1(), figures::graph_4_2(), figures::graph_4_3()] {
+                emit(&t, args);
+            }
+            Ok(0)
+        }
+        "market" => {
+            emit(&figures::table_1_1(), args);
+            emit(&figures::table_1_2(), args);
+            print_reuse();
+            Ok(0)
+        }
+        "report" => {
+            for t in figures::all_figures() {
+                emit(&t, args);
+            }
+            Ok(0)
+        }
+        "targets" => {
+            let failed = check_targets();
+            Ok(if failed == 0 { 0 } else { 1 })
+        }
+        "sweep" => {
+            // mixbench's native output: the operational-intensity sweep
+            // that traces the roofline (the source data behind Graphs 3-x).
+            use crate::bench::{mixbench, Precision};
+            use crate::isa::pass::FmadPolicy;
+            let precision = match args.pos(0).unwrap_or("fp32") {
+                "fp32" => Precision::Fp32,
+                "fp16" => Precision::Fp16Half2,
+                "fp64" => Precision::Fp64,
+                "int32" => Precision::Int32,
+                "int8" => Precision::Int8,
+                other => bail!("unknown precision {other:?}"),
+            };
+            let dev = match args.opt("device") {
+                Some(name) => registry::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown device {name:?}"))?,
+                None => registry::cmp170hx(),
+            };
+            for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+                println!(
+                    "\n== mixbench {} sweep on {} ({}) ==",
+                    precision.name(),
+                    dev.name,
+                    policy.name()
+                );
+                println!(
+                    "{:>6} {:>12} {:>12} {:>12} {:>10}",
+                    "iters", "flops/byte", "ex.time ms", "G(FL)OPS", "GB/s"
+                );
+                for r in mixbench::sweep(&dev, precision, policy) {
+                    let iters: u64 = r
+                        .case
+                        .split("c=")
+                        .nth(1)
+                        .and_then(|s| s.split_whitespace().next())
+                        .and_then(|s| s.parse().ok())
+                        .unwrap_or(0);
+                    let gops = if precision.integer() {
+                        r.tiops() * 1e3
+                    } else {
+                        r.tflops() * 1e3
+                    };
+                    println!(
+                        "{:>6} {:>12.3} {:>12.4} {:>12.1} {:>10.1}",
+                        iters,
+                        mixbench::flops_per_byte(precision, iters),
+                        r.timing.time_s * 1e3,
+                        gops,
+                        r.gbps()
+                    );
+                }
+            }
+            Ok(0)
+        }
+        "serve" => serve(args),
+        other => bail!("unknown command {other:?}; try `cmphx help`"),
+    }
+}
+
+fn bench_tables(suite: &str) -> Result<Vec<Table>> {
+    Ok(match suite {
+        "fp32" => vec![figures::graph_3_1()],
+        "fp16" => vec![figures::graph_3_2()],
+        "fp64" => vec![figures::graph_3_3()],
+        "int32" => vec![figures::graph_3_4()],
+        "int8" => vec![figures::graph_ex1()],
+        "membw" => vec![figures::graph_3_5()],
+        "pcie" => vec![figures::graph_ex2()],
+        "all" => vec![
+            figures::graph_3_1(),
+            figures::graph_3_2(),
+            figures::graph_3_3(),
+            figures::graph_3_4(),
+            figures::graph_3_5(),
+            figures::graph_ex1(),
+            figures::graph_ex2(),
+        ],
+        other => bail!("unknown suite {other:?}"),
+    })
+}
+
+fn emit(t: &Table, args: &Args) {
+    if args.flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        print!("{}", t.render());
+    }
+}
+
+fn print_reuse() {
+    use crate::isa::pass::FmadPolicy;
+    use crate::llm::quant;
+    use crate::market::tco;
+    println!("\n== Reuse value (Q4_K_M decode, duty 100%) ==");
+    for (dev, policy) in [
+        (registry::cmp170hx(), FmadPolicy::Fused),
+        (registry::cmp170hx(), FmadPolicy::Decomposed),
+        (registry::a100_pcie(), FmadPolicy::Fused),
+    ] {
+        let v = tco::reuse_value(&dev, &quant::Q4_K_M, policy, 1.0);
+        println!(
+            "{:<22} {:>9}  ${:>7.0}/TFLOP(fp32)  ${:>6.2}/(tok/s)  energy ${:>5.0}/yr  {:.0} tok/s",
+            v.device,
+            policy.name(),
+            v.usd_per_tflop_fp32,
+            v.usd_per_decode_tps,
+            v.energy_usd_per_year,
+            v.decode_tps,
+        );
+    }
+}
+
+fn check_targets() -> usize {
+    use crate::bench::{membench, mixbench, openclbench, Precision};
+    use crate::isa::ir::MemPattern;
+    use crate::isa::pass::FmadPolicy;
+    let dev = registry::cmp170hx();
+    let measured: Vec<(&cal::Target, f64)> = vec![
+        (
+            &cal::FP32_DEFAULT_TFLOPS,
+            openclbench::peak(&dev, Precision::Fp32, FmadPolicy::Fused).tflops(),
+        ),
+        (
+            &cal::FP32_NOFMA_TFLOPS,
+            openclbench::peak(&dev, Precision::Fp32, FmadPolicy::Decomposed).tflops(),
+        ),
+        (&cal::FP32_THEORETICAL_TFLOPS, dev.fp32_tflops()),
+        (
+            &cal::FP16_HALF2_TFLOPS,
+            openclbench::peak(&dev, Precision::Fp16Half2, FmadPolicy::Fused).tflops(),
+        ),
+        (&cal::FP16_THEORETICAL_TFLOPS, dev.fp16_tflops()),
+        (
+            &cal::FP64_DEFAULT_TFLOPS,
+            openclbench::peak(&dev, Precision::Fp64, FmadPolicy::Fused).tflops(),
+        ),
+        (
+            &cal::FP64_NOFMA_TFLOPS,
+            openclbench::peak(&dev, Precision::Fp64, FmadPolicy::Decomposed).tflops(),
+        ),
+        (&cal::FP64_THEORETICAL_TFLOPS, dev.fp64_tflops()),
+        (
+            &cal::INT32_OPENCL_TIOPS,
+            openclbench::peak(&dev, Precision::Int32, FmadPolicy::Fused).tiops(),
+        ),
+        (
+            &cal::INT32_CUDA_TIOPS,
+            mixbench::peak(&dev, Precision::Int32, FmadPolicy::Fused).tiops(),
+        ),
+        (
+            &cal::MEMBW_COALESCED_GBPS,
+            membench::run(&dev, membench::Dir::Read, MemPattern::Coalesced).gbps(),
+        ),
+        (&cal::MEMBW_THEORETICAL_GBPS, dev.mem.peak_bw / 1e9),
+        (
+            &cal::INT8_OPENCL_TIOPS,
+            openclbench::peak(&dev, Precision::Int8, FmadPolicy::Fused).tiops(),
+        ),
+        (
+            &cal::INT8_CUDA_TIOPS,
+            mixbench::peak(&dev, Precision::Int8, FmadPolicy::Fused).tiops(),
+        ),
+        (&cal::PCIE_STOCK_THEORETICAL_GBPS, dev.pcie.theoretical_bw() / 1e9),
+    ];
+    let mut failed = 0;
+    println!("{:<22} {:>10} {:>10} {:>7}  figure", "target", "paper", "ours", "ok");
+    for (t, m) in measured {
+        let ok = cal::check(t, m);
+        if !ok {
+            failed += 1;
+        }
+        println!(
+            "{:<22} {:>10.4} {:>10.4} {:>7}  {}",
+            t.id,
+            t.value,
+            m,
+            if ok { "✓" } else { "✗" },
+            t.figure
+        );
+    }
+    println!("{failed} target(s) failed");
+    failed
+}
+
+fn serve(args: &Args) -> Result<i32> {
+    let requests = args.opt_usize("requests", 8)?;
+    let tokens = args.opt_usize("tokens", 12)?;
+    let batch = args.opt_usize("batch", 4)?;
+
+    let artifacts = ArtifactDir::discover()?;
+    let mut config = ServerConfig::default();
+    config.batch.max_batch = batch;
+    println!("compiling artifacts on the PJRT CPU client…");
+    let server: ServerHandle = Server::start(artifacts, config)?;
+
+    let mut rxs = Vec::new();
+    for i in 0..requests {
+        let prompt: Vec<i32> = (1..=8).map(|t| ((t * (i as i32 + 3)) % 500) + 1).collect();
+        rxs.push(server.submit(prompt, tokens)?);
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        println!(
+            "req {i}: {} tokens, latency {:.1} ms (sim device {:.2} ms){}",
+            resp.tokens.len(),
+            resp.latency_s() * 1e3,
+            resp.simulated_device_s * 1e3,
+            resp.error.as_deref().map(|e| format!(" ERROR {e}")).unwrap_or_default(),
+        );
+    }
+    let metrics = server.shutdown();
+    println!("\n{}", metrics.render());
+    Ok(0)
+}

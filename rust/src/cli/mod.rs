@@ -1,0 +1,17 @@
+//! Hand-rolled CLI (no `clap` in the offline crate set).
+//!
+//! ```text
+//! cmphx specs [device]          spec sheets (Tables 2-1…2-5)
+//! cmphx bench <suite>           fp32|fp16|fp64|int32|int8|membw|pcie|all
+//! cmphx llama-bench [device]    Graphs 4-1/4-2/4-3 grid
+//! cmphx market                  Tables 1-1/1-2 + reuse value
+//! cmphx report                  every figure, with paper deviations
+//! cmphx targets                 calibration target check
+//! cmphx serve [--requests N]    end-to-end PJRT serving demo
+//! ```
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+pub use commands::run;

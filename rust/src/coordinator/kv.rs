@@ -1,0 +1,153 @@
+//! KV-cache slot manager with VRAM accounting.
+//!
+//! The CMP 170HX's 8 GB ceiling is the binding constraint of §4.1/§6.2:
+//! the slot manager admits at most `slots` concurrent sequences and tracks
+//! the bytes a real deployment would pin (weights + per-slot KV), refusing
+//! admissions that would not fit.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Result};
+
+/// Fixed-slot KV allocator.
+#[derive(Debug)]
+pub struct KvSlots {
+    total: usize,
+    free: BTreeSet<usize>,
+    /// Device memory budget and static (weights) usage, bytes.
+    vram_bytes: u64,
+    weights_bytes: u64,
+    per_slot_bytes: u64,
+}
+
+impl KvSlots {
+    /// Build an allocator for `slots` sequences of `kv_bytes_per_slot`
+    /// over a device with `vram_bytes`, `weights_bytes` of which are pinned
+    /// by the model. Fails if the configuration cannot fit at all.
+    pub fn new(
+        slots: usize,
+        kv_bytes_per_slot: u64,
+        vram_bytes: u64,
+        weights_bytes: u64,
+    ) -> Result<Self> {
+        let needed = weights_bytes + slots as u64 * kv_bytes_per_slot;
+        if needed > vram_bytes {
+            bail!(
+                "{} slots need {} bytes but device has {} ({} for weights)",
+                slots,
+                needed,
+                vram_bytes,
+                weights_bytes
+            );
+        }
+        Ok(KvSlots {
+            total: slots,
+            free: (0..slots).collect(),
+            vram_bytes,
+            weights_bytes,
+            per_slot_bytes: kv_bytes_per_slot,
+        })
+    }
+
+    /// Acquire a slot id, or `None` if all are busy.
+    pub fn acquire(&mut self) -> Option<usize> {
+        let id = self.free.iter().next().copied()?;
+        self.free.remove(&id);
+        Some(id)
+    }
+
+    /// Release a slot. Double-free is a logic error and panics.
+    pub fn release(&mut self, id: usize) {
+        assert!(id < self.total, "slot {id} out of range");
+        assert!(self.free.insert(id), "double free of slot {id}");
+    }
+
+    pub fn in_use(&self) -> usize {
+        self.total - self.free.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.total
+    }
+
+    /// Bytes currently resident (weights + active slots).
+    pub fn resident_bytes(&self) -> u64 {
+        self.weights_bytes + self.in_use() as u64 * self.per_slot_bytes
+    }
+
+    /// Headroom to the VRAM budget.
+    pub fn headroom_bytes(&self) -> u64 {
+        self.vram_bytes - self.resident_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Rng};
+
+    fn slots(n: usize) -> KvSlots {
+        KvSlots::new(n, 1 << 20, 8 << 30, 1 << 30).unwrap()
+    }
+
+    #[test]
+    fn acquire_release_cycle() {
+        let mut s = slots(2);
+        let a = s.acquire().unwrap();
+        let b = s.acquire().unwrap();
+        assert_ne!(a, b);
+        assert!(s.acquire().is_none());
+        s.release(a);
+        assert_eq!(s.acquire(), Some(a));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut s = slots(2);
+        let a = s.acquire().unwrap();
+        s.release(a);
+        s.release(a);
+    }
+
+    #[test]
+    fn rejects_configs_that_overflow_vram() {
+        // 9 GB of KV on an 8 GB card.
+        assert!(KvSlots::new(9, 1 << 30, 8 << 30, 1 << 30).is_err());
+    }
+
+    #[test]
+    fn vram_accounting_tracks_active_slots() {
+        let mut s = slots(4);
+        assert_eq!(s.resident_bytes(), 1 << 30);
+        let a = s.acquire().unwrap();
+        assert_eq!(s.resident_bytes(), (1 << 30) + (1 << 20));
+        s.release(a);
+        assert_eq!(s.headroom_bytes(), (8u64 << 30) - (1 << 30));
+    }
+
+    #[test]
+    fn prop_never_leaks_or_duplicates_slots() {
+        // Random acquire/release interleavings: the free+held sets always
+        // partition [0, total).
+        forall(0x510, 200, |rng: &mut Rng| {
+            let n = rng.range(1, 8) as usize;
+            let mut s = slots(n);
+            let mut held: Vec<usize> = Vec::new();
+            for _ in 0..64 {
+                if rng.chance(0.5) {
+                    if let Some(id) = s.acquire() {
+                        assert!(!held.contains(&id), "duplicate slot {id}");
+                        held.push(id);
+                    } else {
+                        assert_eq!(held.len(), n, "acquire failed with free slots");
+                    }
+                } else if !held.is_empty() {
+                    let idx = rng.below(held.len() as u64) as usize;
+                    s.release(held.swap_remove(idx));
+                }
+                assert_eq!(s.in_use(), held.len());
+            }
+        });
+    }
+}

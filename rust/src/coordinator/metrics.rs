@@ -1,0 +1,155 @@
+//! Serving metrics: counters, latency distribution, and the simulated
+//! device-time overlay.
+
+/// Online latency/throughput accumulator with fixed percentile tracking
+/// (stores samples; edge-node request volumes make this fine).
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub errors: u64,
+    pub tokens_out: u64,
+    latencies_s: Vec<f64>,
+    pub wall_prefill_s: f64,
+    pub wall_decode_s: f64,
+    /// Simulated CMP 170HX device seconds for the same workload.
+    pub simulated_device_s: f64,
+    pub batches: u64,
+    batch_sizes: Vec<usize>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_response(&mut self, latency_s: f64, tokens: usize, ok: bool) {
+        self.requests += 1;
+        if !ok {
+            self.errors += 1;
+        }
+        self.tokens_out += tokens as u64;
+        self.latencies_s.push(latency_s);
+    }
+
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batch_sizes.push(size);
+    }
+
+    /// Latency percentile (0.0–1.0). None when empty.
+    pub fn latency_pct(&self, p: f64) -> Option<f64> {
+        if self.latencies_s.is_empty() {
+            return None;
+        }
+        let mut xs = self.latencies_s.clone();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
+        Some(xs[idx])
+    }
+
+    pub fn mean_latency(&self) -> Option<f64> {
+        if self.latencies_s.is_empty() {
+            None
+        } else {
+            Some(self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64)
+        }
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        }
+    }
+
+    /// Decode throughput over the measured wall time.
+    pub fn tokens_per_sec(&self) -> f64 {
+        let t = self.wall_prefill_s + self.wall_decode_s;
+        if t == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / t
+        }
+    }
+
+    /// Speed ratio: how much faster/slower the simulated CMP device is than
+    /// this host for the same served work.
+    pub fn sim_speedup_vs_host(&self) -> Option<f64> {
+        if self.simulated_device_s == 0.0 {
+            None
+        } else {
+            Some((self.wall_prefill_s + self.wall_decode_s) / self.simulated_device_s)
+        }
+    }
+
+    /// Render a summary block.
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} errors={} tokens={} mean_batch={:.2}\n\
+             latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
+             host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
+             simulated CMP 170HX device time: {:.4}s ({}× host)",
+            self.requests,
+            self.errors,
+            self.tokens_out,
+            self.mean_batch_size(),
+            self.mean_latency().unwrap_or(0.0) * 1e3,
+            self.latency_pct(0.5).unwrap_or(0.0) * 1e3,
+            self.latency_pct(0.99).unwrap_or(0.0) * 1e3,
+            self.wall_prefill_s,
+            self.wall_decode_s,
+            self.tokens_per_sec(),
+            self.simulated_device_s,
+            self.sim_speedup_vs_host()
+                .map(|s| format!("{s:.1}"))
+                .unwrap_or_else(|| "-".into()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_order_correctly() {
+        let mut m = Metrics::new();
+        for i in 1..=100 {
+            m.record_response(i as f64, 1, true);
+        }
+        assert!(m.latency_pct(0.5).unwrap() <= m.latency_pct(0.99).unwrap());
+        assert_eq!(m.latency_pct(0.0).unwrap(), 1.0);
+        assert_eq!(m.latency_pct(1.0).unwrap(), 100.0);
+    }
+
+    #[test]
+    fn empty_metrics_are_none_or_zero() {
+        let m = Metrics::new();
+        assert!(m.latency_pct(0.5).is_none());
+        assert!(m.mean_latency().is_none());
+        assert_eq!(m.tokens_per_sec(), 0.0);
+    }
+
+    #[test]
+    fn errors_counted_separately() {
+        let mut m = Metrics::new();
+        m.record_response(0.1, 0, false);
+        m.record_response(0.1, 5, true);
+        assert_eq!(m.requests, 2);
+        assert_eq!(m.errors, 1);
+        assert_eq!(m.tokens_out, 5);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let mut m = Metrics::new();
+        m.record_response(0.25, 8, true);
+        m.record_batch(2);
+        m.wall_decode_s = 1.0;
+        m.simulated_device_s = 0.1;
+        let s = m.render();
+        assert!(s.contains("requests=1"));
+        assert!(s.contains("simulated CMP 170HX"));
+    }
+}

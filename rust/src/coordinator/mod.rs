@@ -1,0 +1,27 @@
+//! L3 serving coordinator — the §6.2 edge-node deployment, real.
+//!
+//! A threaded (std::thread + mpsc; no async runtime in the offline crate
+//! set) inference server over the AOT artifacts: requests enter a bounded
+//! queue, a [`batcher`] groups them under a size/latency window, a worker
+//! owning the [`crate::runtime::ModelRuntime`] prefills each sequence into
+//! a [`kv`] slot and interleaves decode steps round-robin ([`scheduler`])
+//! until every sequence finishes. [`metrics`] records real wall-clock
+//! latencies *and* the simulated CMP 170HX device-time overlay, and
+//! [`router`] spreads load across a fleet of (simulated) cards.
+//!
+//! Python never runs here: the executables carry the weights.
+
+pub mod batcher;
+pub mod kv;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod scheduler;
+pub mod server;
+
+pub use batcher::{Batcher, BatchPolicy};
+pub use kv::KvSlots;
+pub use metrics::Metrics;
+pub use request::{GenRequest, GenResponse};
+pub use router::{Fleet, RoutePolicy};
+pub use server::{Server, ServerConfig, ServerHandle};

@@ -1,0 +1,93 @@
+//! Request/response types for the serving path.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    /// Prompt token ids (≤ the model's prefill window).
+    pub prompt: Vec<i32>,
+    /// Tokens to generate (bounded by KV capacity at serve time).
+    pub max_tokens: usize,
+    /// Where the response goes. Dropped receiver = cancelled request.
+    pub reply: Sender<GenResponse>,
+    /// Enqueue timestamp for latency accounting.
+    pub enqueued: Instant,
+}
+
+/// The served result.
+#[derive(Clone, Debug)]
+pub struct GenResponse {
+    pub id: u64,
+    /// Generated token ids (empty on error).
+    pub tokens: Vec<i32>,
+    /// Error text if generation failed.
+    pub error: Option<String>,
+    /// Wall-clock queueing delay, seconds.
+    pub queue_s: f64,
+    /// Wall-clock prefill time, seconds.
+    pub prefill_s: f64,
+    /// Wall-clock decode time, seconds.
+    pub decode_s: f64,
+    /// Simulated CMP 170HX device time for the same work, seconds
+    /// (the timing-model overlay; see DESIGN.md §E2E).
+    pub simulated_device_s: f64,
+}
+
+impl GenResponse {
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+
+    /// End-to-end wall latency.
+    pub fn latency_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn response_latency_sums_phases() {
+        let r = GenResponse {
+            id: 1,
+            tokens: vec![1, 2],
+            error: None,
+            queue_s: 0.1,
+            prefill_s: 0.2,
+            decode_s: 0.3,
+            simulated_device_s: 0.05,
+        };
+        assert!(r.ok());
+        assert!((r.latency_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn request_carries_reply_channel() {
+        let (tx, rx) = channel();
+        let req = GenRequest {
+            id: 7,
+            prompt: vec![1, 2, 3],
+            max_tokens: 4,
+            reply: tx,
+            enqueued: Instant::now(),
+        };
+        req.reply
+            .send(GenResponse {
+                id: req.id,
+                tokens: vec![9],
+                error: None,
+                queue_s: 0.0,
+                prefill_s: 0.0,
+                decode_s: 0.0,
+                simulated_device_s: 0.0,
+            })
+            .unwrap();
+        assert_eq!(rx.recv().unwrap().id, 7);
+    }
+}

@@ -1,0 +1,222 @@
+//! Fleet router: spread requests across multiple (simulated) cards.
+//!
+//! §6.2 imagines community edge nodes built from recycled CMP cards; a
+//! node with several cards needs a router. Policies:
+//! - [`RoutePolicy::RoundRobin`] — classic;
+//! - [`RoutePolicy::LeastLoaded`] — by outstanding work;
+//! - [`RoutePolicy::WeightedThroughput`] — by each card's decode tokens/s
+//!   (heterogeneous fleets: a 170HX next to a 90HX).
+
+use crate::device::DeviceSpec;
+use crate::isa::pass::FmadPolicy;
+use crate::llm::llamabench::LlamaBench;
+use crate::llm::quant::QuantFormat;
+
+/// One routed card.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: &'static str,
+    /// Decode throughput weight (tokens/s on the serving quant).
+    pub weight: f64,
+    /// Outstanding queued work units.
+    pub outstanding: u64,
+    /// Cumulative assigned requests.
+    pub assigned: u64,
+}
+
+/// Routing policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    RoundRobin,
+    LeastLoaded,
+    WeightedThroughput,
+}
+
+/// A fleet of cards plus a routing cursor.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub nodes: Vec<Node>,
+    policy: RoutePolicy,
+    cursor: usize,
+}
+
+impl Fleet {
+    /// Build a fleet from device specs, weighting by simulated decode
+    /// throughput on `quant` at `policy`'s fmad setting.
+    pub fn from_devices(
+        devices: &[DeviceSpec],
+        quant: &QuantFormat,
+        fmad: FmadPolicy,
+        policy: RoutePolicy,
+    ) -> Self {
+        let bench = LlamaBench::default();
+        let nodes = devices
+            .iter()
+            .map(|d| Node {
+                name: d.name,
+                weight: bench.run(d, quant, fmad).decode_tps,
+                outstanding: 0,
+                assigned: 0,
+            })
+            .collect();
+        Fleet {
+            nodes,
+            policy,
+            cursor: 0,
+        }
+    }
+
+    /// Uniform fleet of `n` identical nodes (tests/benches).
+    pub fn uniform(n: usize, weight: f64, policy: RoutePolicy) -> Self {
+        Fleet {
+            nodes: (0..n)
+                .map(|_| Node {
+                    name: "node",
+                    weight,
+                    outstanding: 0,
+                    assigned: 0,
+                })
+                .collect(),
+            policy,
+            cursor: 0,
+        }
+    }
+
+    /// Route one request; returns the node index.
+    pub fn route(&mut self) -> usize {
+        assert!(!self.nodes.is_empty(), "empty fleet");
+        let idx = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let i = self.cursor % self.nodes.len();
+                self.cursor += 1;
+                i
+            }
+            RoutePolicy::LeastLoaded => self
+                .nodes
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, n)| n.outstanding)
+                .map(|(i, _)| i)
+                .unwrap(),
+            RoutePolicy::WeightedThroughput => {
+                // pick the node with the lowest normalized load
+                // (outstanding / weight) — deterministic weighted fairness.
+                self.nodes
+                    .iter()
+                    .enumerate()
+                    .min_by(|(_, a), (_, b)| {
+                        let la = (a.outstanding as f64 + 1.0) / a.weight.max(1e-9);
+                        let lb = (b.outstanding as f64 + 1.0) / b.weight.max(1e-9);
+                        la.partial_cmp(&lb).unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .unwrap()
+            }
+        };
+        self.nodes[idx].outstanding += 1;
+        self.nodes[idx].assigned += 1;
+        idx
+    }
+
+    /// Mark one unit of work complete on a node.
+    pub fn complete(&mut self, idx: usize) {
+        assert!(self.nodes[idx].outstanding > 0, "complete on idle node");
+        self.nodes[idx].outstanding -= 1;
+    }
+
+    pub fn total_assigned(&self) -> u64 {
+        self.nodes.iter().map(|n| n.assigned).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Rng};
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut f = Fleet::uniform(3, 1.0, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| f.route()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn least_loaded_fills_idle_nodes_first() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::LeastLoaded);
+        let a = f.route();
+        let b = f.route();
+        assert_ne!(a, b);
+        f.complete(a);
+        assert_eq!(f.route(), a);
+    }
+
+    #[test]
+    fn weighted_routing_respects_throughput_ratios() {
+        // node 0 twice as fast → gets ~2/3 of a long stream.
+        let mut f = Fleet {
+            nodes: vec![
+                Node { name: "fast", weight: 200.0, outstanding: 0, assigned: 0 },
+                Node { name: "slow", weight: 100.0, outstanding: 0, assigned: 0 },
+            ],
+            policy: RoutePolicy::WeightedThroughput,
+            cursor: 0,
+        };
+        // steady state: each node drains work at its own speed
+        let mut service = [0.0f64; 2];
+        for _ in 0..3000 {
+            let _ = f.route();
+            for (i, s) in service.iter_mut().enumerate() {
+                *s += f.nodes[i].weight / 300.0;
+                while *s >= 1.0 && f.nodes[i].outstanding > 0 {
+                    f.complete(i);
+                    *s -= 1.0;
+                }
+            }
+        }
+        let fast = f.nodes[0].assigned as f64;
+        let slow = f.nodes[1].assigned as f64;
+        let ratio = fast / slow;
+        assert!(ratio > 1.6 && ratio < 2.5, "{ratio}");
+    }
+
+    #[test]
+    fn heterogeneous_fleet_from_registry() {
+        use crate::device::registry;
+        use crate::llm::quant;
+        let f = Fleet::from_devices(
+            &[registry::cmp170hx(), registry::cmp170hx_x16()],
+            &quant::Q4_K_M,
+            FmadPolicy::Decomposed,
+            RoutePolicy::WeightedThroughput,
+        );
+        assert_eq!(f.nodes.len(), 2);
+        // the x16 mod lowers readback overhead → strictly faster decode
+        assert!(f.nodes[1].weight > f.nodes[0].weight);
+    }
+
+    #[test]
+    fn prop_routing_conserves_requests() {
+        // Every request lands on exactly one node; totals match.
+        forall(0x40B7E, 200, |rng: &mut Rng| {
+            let n = rng.range(1, 6) as usize;
+            let policy = *rng.pick(&[
+                RoutePolicy::RoundRobin,
+                RoutePolicy::LeastLoaded,
+                RoutePolicy::WeightedThroughput,
+            ]);
+            let mut f = Fleet::uniform(n, 1.0, policy);
+            let total = rng.range(1, 200);
+            for _ in 0..total {
+                let i = f.route();
+                assert!(i < n);
+                if rng.chance(0.6) {
+                    f.complete(i);
+                }
+            }
+            assert_eq!(f.total_assigned(), total);
+            let sum: u64 = f.nodes.iter().map(|x| x.assigned).sum();
+            assert_eq!(sum, total);
+        });
+    }
+}

@@ -1,0 +1,109 @@
+//! Step scheduling across in-flight sequences.
+//!
+//! The decode loop must decide which active sequences advance each
+//! iteration. Two policies:
+//! - [`StepPolicy::RoundRobin`] — fair interleaving (latency-balanced);
+//! - [`StepPolicy::ShortestFirst`] — drain sequences closest to completion
+//!   first (frees KV slots sooner; throughput-biased under slot pressure).
+
+/// An in-flight sequence the scheduler sees.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SeqView {
+    pub seq: usize,
+    pub generated: usize,
+    pub target: usize,
+}
+
+impl SeqView {
+    pub fn remaining(&self) -> usize {
+        self.target.saturating_sub(self.generated)
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining() == 0
+    }
+}
+
+/// Scheduling policy for the decode loop.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StepPolicy {
+    RoundRobin,
+    ShortestFirst,
+}
+
+/// Order the active (not-done) sequences for the next decode round.
+pub fn plan_round(policy: StepPolicy, seqs: &[SeqView]) -> Vec<usize> {
+    let mut active: Vec<&SeqView> = seqs.iter().filter(|s| !s.done()).collect();
+    match policy {
+        StepPolicy::RoundRobin => {}
+        StepPolicy::ShortestFirst => {
+            active.sort_by_key(|s| s.remaining());
+        }
+    }
+    active.iter().map(|s| s.seq).collect()
+}
+
+/// Total decode rounds a batch needs (the longest target governs — decode
+/// is serial per sequence).
+pub fn rounds_needed(seqs: &[SeqView]) -> usize {
+    seqs.iter().map(|s| s.remaining()).max().unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{forall, Rng};
+
+    fn seq(seq: usize, generated: usize, target: usize) -> SeqView {
+        SeqView {
+            seq,
+            generated,
+            target,
+        }
+    }
+
+    #[test]
+    fn round_robin_preserves_order_and_skips_done() {
+        let seqs = [seq(0, 2, 4), seq(1, 3, 3), seq(2, 0, 5)];
+        assert_eq!(plan_round(StepPolicy::RoundRobin, &seqs), vec![0, 2]);
+    }
+
+    #[test]
+    fn shortest_first_orders_by_remaining() {
+        let seqs = [seq(0, 0, 9), seq(1, 0, 2), seq(2, 0, 5)];
+        assert_eq!(plan_round(StepPolicy::ShortestFirst, &seqs), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn rounds_needed_is_max_remaining() {
+        let seqs = [seq(0, 1, 4), seq(1, 0, 2)];
+        assert_eq!(rounds_needed(&seqs), 3);
+        assert_eq!(rounds_needed(&[]), 0);
+    }
+
+    #[test]
+    fn prop_every_unfinished_sequence_is_planned_exactly_once() {
+        forall(0x5C_ED, 300, |rng: &mut Rng| {
+            let n = rng.range(0, 12) as usize;
+            let seqs: Vec<SeqView> = (0..n)
+                .map(|i| {
+                    let target = rng.range(0, 8) as usize;
+                    seq(i, rng.range(0, 8) as usize, target)
+                })
+                .collect();
+            let policy = if rng.chance(0.5) {
+                StepPolicy::RoundRobin
+            } else {
+                StepPolicy::ShortestFirst
+            };
+            let plan = plan_round(policy, &seqs);
+            let expected: Vec<usize> =
+                seqs.iter().filter(|s| !s.done()).map(|s| s.seq).collect();
+            let mut sorted = plan.clone();
+            sorted.sort_unstable();
+            let mut exp_sorted = expected.clone();
+            exp_sorted.sort_unstable();
+            assert_eq!(sorted, exp_sorted, "plan must cover active set exactly");
+        });
+    }
+}

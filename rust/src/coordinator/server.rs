@@ -1,0 +1,354 @@
+//! The serving engine: a worker thread owning the PJRT model runtime.
+//!
+//! Life of a request: client → bounded queue → [`Batcher`] window → worker
+//! prefills each prompt into a KV slot → decode rounds per
+//! [`scheduler::plan_round`] until every sequence hits its target → replies
+//! on each request's channel. Failures are contained per request; a dropped
+//! reply receiver is a cancellation. Every step also accrues the simulated
+//! CMP 170HX device-time overlay so the example/bench can report "what this
+//! workload would cost on the paper's card".
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::device::registry;
+use crate::isa::pass::FmadPolicy;
+use crate::llm::llamabench::LlamaBench;
+use crate::llm::model::ModelDesc;
+use crate::llm::quant;
+use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::kv::KvSlots;
+use super::metrics::Metrics;
+use super::request::{GenRequest, GenResponse};
+use super::scheduler::{plan_round, SeqView, StepPolicy};
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub queue_depth: usize,
+    pub batch: BatchPolicy,
+    pub step_policy: StepPolicy,
+    /// fmad policy of the simulated deployment (drives the overlay).
+    pub fmad: FmadPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            queue_depth: 64,
+            batch: BatchPolicy::default(),
+            step_policy: StepPolicy::RoundRobin,
+            fmad: FmadPolicy::Decomposed,
+        }
+    }
+}
+
+/// Client handle: submit requests, read metrics, shut down.
+pub struct ServerHandle {
+    tx: Option<SyncSender<GenRequest>>,
+    worker: Option<JoinHandle<()>>,
+    metrics: Arc<Mutex<Metrics>>,
+    next_id: std::sync::atomic::AtomicU64,
+}
+
+/// Simulated per-token device times for the overlay.
+#[derive(Clone, Copy, Debug)]
+struct Overlay {
+    prefill_s_per_token: f64,
+    decode_s_per_token: f64,
+}
+
+impl Overlay {
+    /// Overlay for the CMP 170HX serving the paper's Qwen2.5-1.5B in q8_0
+    /// at the configured fmad policy — the workload §6.2 recommends.
+    fn cmp170hx(policy: FmadPolicy) -> Overlay {
+        let bench = LlamaBench {
+            model: ModelDesc::qwen25_15b(),
+            ..Default::default()
+        };
+        let dev = registry::cmp170hx();
+        let r = bench.run(&dev, &quant::Q8_0, policy);
+        Overlay {
+            prefill_s_per_token: 1.0 / r.prefill_tps,
+            decode_s_per_token: 1.0 / r.decode_tps,
+        }
+    }
+}
+
+/// The serving engine.
+pub struct Server;
+
+impl Server {
+    /// Start the worker over an artifact directory. Compilation happens on
+    /// the worker thread; `start` returns once the runtime is live (or the
+    /// first error is known).
+    pub fn start(artifacts: ArtifactDir, config: ServerConfig) -> Result<ServerHandle> {
+        let (tx, rx) = sync_channel::<GenRequest>(config.queue_depth);
+        let metrics = Arc::new(Mutex::new(Metrics::new()));
+        let metrics_worker = Arc::clone(&metrics);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+
+        let worker = std::thread::Builder::new()
+            .name("cmphx-server".into())
+            .spawn(move || {
+                let runtime = match ModelRuntime::load(&artifacts) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(runtime, rx, config, metrics_worker);
+            })?;
+
+        ready_rx.recv()??;
+        Ok(ServerHandle {
+            tx: Some(tx),
+            worker: Some(worker),
+            metrics,
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        })
+    }
+}
+
+impl ServerHandle {
+    /// Submit a generation request; returns the response receiver. Errors
+    /// when the queue is full (backpressure) or the server is stopped.
+    pub fn submit(
+        &self,
+        prompt: Vec<i32>,
+        max_tokens: usize,
+    ) -> Result<Receiver<GenResponse>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let id = self
+            .next_id
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let req = GenRequest {
+            id,
+            prompt,
+            max_tokens,
+            reply,
+            enqueued: Instant::now(),
+        };
+        let tx = self.tx.as_ref().ok_or_else(|| anyhow::anyhow!("server stopped"))?;
+        match tx.try_send(req) {
+            Ok(()) => Ok(rx),
+            Err(TrySendError::Full(_)) => anyhow::bail!("queue full (backpressure)"),
+            Err(TrySendError::Disconnected(_)) => anyhow::bail!("server stopped"),
+        }
+    }
+
+    /// Snapshot of metrics.
+    pub fn metrics(&self) -> Metrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests, drain, and join the worker.
+    pub fn shutdown(mut self) -> Metrics {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        drop(self.tx.take());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    runtime: ModelRuntime,
+    rx: Receiver<GenRequest>,
+    config: ServerConfig,
+    metrics: Arc<Mutex<Metrics>>,
+) {
+    let overlay = Overlay::cmp170hx(config.fmad);
+    let cfg = runtime.config;
+    // KV slots sized for the simulated card: Qwen2.5-1.5B q8_0 weights on
+    // an 8 GB device; the *real* tiny-qwen state is negligible, the slot
+    // count enforces the same admission behaviour the CMP would.
+    let model = ModelDesc::qwen25_15b();
+    let mut slots = KvSlots::new(
+        config.batch.max_batch,
+        model.kv_bytes_per_pos() as u64 * cfg.max_ctx as u64,
+        8 << 30,
+        model.weight_bytes(&quant::Q8_0),
+    )
+    .expect("slot config must fit the 8GB card");
+
+    let batcher = Batcher::new(rx, config.batch);
+    while let Some(batch) = batcher.next_batch() {
+        metrics.lock().unwrap().record_batch(batch.len());
+        serve_batch(&runtime, &config, &overlay, &mut slots, batch, &metrics);
+    }
+}
+
+struct Live {
+    req: GenRequest,
+    state: DecodeState,
+    slot: usize,
+    tokens: Vec<i32>,
+    queue_s: f64,
+    prefill_s: f64,
+    sim_s: f64,
+    decode_started: Instant,
+}
+
+fn serve_batch(
+    runtime: &ModelRuntime,
+    config: &ServerConfig,
+    overlay: &Overlay,
+    slots: &mut KvSlots,
+    batch: Vec<GenRequest>,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    let cfg = runtime.config;
+    let mut live: Vec<Live> = Vec::new();
+
+    // --- prefill phase ---
+    for req in batch {
+        let queue_s = req.enqueued.elapsed().as_secs_f64();
+        // admission: prompt must fit the window, generation must fit KV
+        let budget = cfg.max_ctx - cfg.prefill_t;
+        if req.prompt.len() > cfg.prefill_t || req.max_tokens > budget {
+            respond_error(
+                &req,
+                format!(
+                    "request exceeds window (prompt {} > {} or tokens {} > {})",
+                    req.prompt.len(),
+                    cfg.prefill_t,
+                    req.max_tokens,
+                    budget
+                ),
+                queue_s,
+                metrics,
+            );
+            continue;
+        }
+        let Some(slot) = slots.acquire() else {
+            respond_error(&req, "no KV slot (overload)".into(), queue_s, metrics);
+            continue;
+        };
+        let t0 = Instant::now();
+        match runtime.prefill_padded(&req.prompt) {
+            Ok(state) => {
+                let prefill_s = t0.elapsed().as_secs_f64();
+                let sim_s = overlay.prefill_s_per_token * cfg.prefill_t as f64;
+                let first = state.argmax();
+                live.push(Live {
+                    req,
+                    state,
+                    slot,
+                    tokens: vec![first],
+                    queue_s,
+                    prefill_s,
+                    sim_s,
+                    decode_started: Instant::now(),
+                });
+            }
+            Err(e) => {
+                slots.release(slot);
+                respond_error(&req, format!("prefill failed: {e}"), queue_s, metrics);
+            }
+        }
+    }
+
+    // --- decode rounds ---
+    loop {
+        let views: Vec<SeqView> = live
+            .iter()
+            .enumerate()
+            .map(|(i, l)| SeqView {
+                seq: i,
+                generated: l.tokens.len(),
+                target: l.req.max_tokens.max(1),
+            })
+            .collect();
+        let plan = plan_round(config.step_policy, &views);
+        if plan.is_empty() {
+            break;
+        }
+        for idx in plan {
+            let l = &mut live[idx];
+            let token = *l.tokens.last().unwrap();
+            match runtime.decode(&mut l.state, token) {
+                Ok(()) => {
+                    l.tokens.push(l.state.argmax());
+                    l.sim_s += overlay.decode_s_per_token;
+                }
+                Err(e) => {
+                    // fail just this sequence; mark done by truncating target
+                    l.req.max_tokens = l.tokens.len();
+                    let msg = format!("decode failed: {e}");
+                    let _ = l.req.reply.send(GenResponse {
+                        id: l.req.id,
+                        tokens: l.tokens.clone(),
+                        error: Some(msg),
+                        queue_s: l.queue_s,
+                        prefill_s: l.prefill_s,
+                        decode_s: l.decode_started.elapsed().as_secs_f64(),
+                        simulated_device_s: l.sim_s,
+                    });
+                }
+            }
+        }
+    }
+
+    // --- respond + release ---
+    let mut m = metrics.lock().unwrap();
+    for l in live {
+        slots.release(l.slot);
+        let decode_s = l.decode_started.elapsed().as_secs_f64();
+        m.wall_prefill_s += l.prefill_s;
+        m.wall_decode_s += decode_s;
+        m.simulated_device_s += l.sim_s;
+        let resp = GenResponse {
+            id: l.req.id,
+            tokens: l.tokens.clone(),
+            error: None,
+            queue_s: l.queue_s,
+            prefill_s: l.prefill_s,
+            decode_s,
+            simulated_device_s: l.sim_s,
+        };
+        m.record_response(resp.latency_s(), resp.tokens.len(), true);
+        // dropped receiver = cancelled; ignore send failure
+        let _ = l.req.reply.send(resp);
+    }
+}
+
+fn respond_error(
+    req: &GenRequest,
+    error: String,
+    queue_s: f64,
+    metrics: &Arc<Mutex<Metrics>>,
+) {
+    metrics
+        .lock()
+        .unwrap()
+        .record_response(queue_s, 0, false);
+    let _ = req.reply.send(GenResponse {
+        id: req.id,
+        tokens: vec![],
+        error: Some(error),
+        queue_s,
+        prefill_s: 0.0,
+        decode_s: 0.0,
+        simulated_device_s: 0.0,
+    });
+}

@@ -1,0 +1,17 @@
+//! Device models: SM-array specifications, per-class issue rates, and the
+//! CMP crippling mechanism (the *throttle unit*).
+//!
+//! A [`spec::DeviceSpec`] carries everything the timing engine, memory
+//! hierarchy and power model need; [`registry`] holds calibrated entries for
+//! the CMP 170HX, the A100 reference, the rest of the CMP family (for the
+//! market model), and the historical comparison cards from §3.1 (Tesla C870,
+//! Tesla P6).
+
+pub mod rates;
+pub mod registry;
+pub mod spec;
+pub mod throttle;
+
+pub use rates::IssueRates;
+pub use spec::DeviceSpec;
+pub use throttle::ThrottleProfile;

@@ -1,0 +1,139 @@
+//! Native per-SM, per-clock instruction issue rates.
+//!
+//! These are the *uncrippled* rates of the underlying silicon (GA100 for the
+//! CMP 170HX and A100). The crippling is applied separately by
+//! [`crate::device::throttle::ThrottleProfile`] so hypotheses from the
+//! paper's §5.4 (driver crack, GSP unlock, …) can be explored by swapping
+//! profiles without touching the silicon model.
+
+use crate::isa::class::InstClass;
+
+/// Instructions issued per SM per clock for each class, on healthy silicon.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IssueRates {
+    /// fp32 pipe: FFMA/FMUL/FADD rate (GA100: 64 = 2×32-wide units).
+    pub fp32: f64,
+    /// fp64 units (GA100: 32, i.e. half the fp32 rate).
+    pub fp64: f64,
+    /// packed-half vector pipe, HFMA2 instructions (GA100's 4×-fp32
+    /// non-tensor FP16 path: 128 HFMA2/SM/clk).
+    pub half2: f64,
+    /// scalar fp16 on the core pipe, *no dual issue* (GA100: 32). This is
+    /// why PyTorch/GPU-Burn — which do not vectorize to half2 — top out at
+    /// ~6.3 TFLOPS on the CMP 170HX (Graph 3-2).
+    pub half_scalar: f64,
+    /// int32 IMAD/IMUL/IADD rate (GA100: 64, shares core dispatch).
+    pub int32: f64,
+    /// dp4a rate (GA100 exposes dp4a at half core rate: 32/SM/clk,
+    /// calibrated to Graph EX.1's ≈25 TIOPs peak).
+    pub dp4a: f64,
+    /// tensor-core HMMA FLOPs per SM per clock (dense f16, A100: 2048;
+    /// 0 on devices whose tensor path is not exposed by the driver).
+    pub tensor_f16_flops: f64,
+    /// MUFU / special-function rate.
+    pub sfu: f64,
+    /// LSU issue slots per SM per clock (instructions, not bytes).
+    pub lsu: f64,
+}
+
+impl IssueRates {
+    /// GA100 (A100 / CMP 170HX silicon) rates.
+    pub fn ga100() -> Self {
+        IssueRates {
+            fp32: 64.0,
+            fp64: 32.0,
+            half2: 128.0,
+            half_scalar: 32.0,
+            int32: 64.0,
+            dp4a: 32.0,
+            tensor_f16_flops: 2048.0,
+            sfu: 16.0,
+            lsu: 32.0,
+        }
+    }
+
+    /// A deliberately tiny legacy profile used for historical cards in the
+    /// registry where only headline TFLOPS matter (Tesla C870 / P6 rows of
+    /// §3.1). `cores_equiv` is FP32 lanes per SM.
+    pub fn legacy(cores_per_sm: f64) -> Self {
+        IssueRates {
+            fp32: cores_per_sm,
+            fp64: cores_per_sm / 32.0,
+            half2: 0.0,
+            half_scalar: 0.0,
+            int32: cores_per_sm,
+            dp4a: 0.0,
+            tensor_f16_flops: 0.0,
+            sfu: cores_per_sm / 4.0,
+            lsu: cores_per_sm / 2.0,
+        }
+    }
+
+    /// Native issue rate (inst/SM/clk) for an instruction class.
+    pub fn class_rate(&self, class: InstClass) -> f64 {
+        use InstClass::*;
+        match class {
+            Ffma | Fmul | Fadd => self.fp32,
+            Dfma | Dmul | Dadd => self.fp64,
+            Hfma2 => self.half2,
+            // Packed-half MUL/ADD dual-issue at 2× the HFMA2 rate (the
+            // three-operand FMA blocks dual issue). Consequence: the fmad
+            // policy is performance-*neutral* for the half2 path — exactly
+            // Graph 3-2's "FP16 unaffected regardless of FMA status".
+            Hmul2 | Hadd2 => self.half2 * 2.0,
+            Hfma | Hmul | Hadd => self.half_scalar,
+            Imad | Imul | Iadd => self.int32,
+            Dp4a => self.dp4a,
+            // HMMA priced as FLOPs/clk; convert to "instructions" of 512
+            // FLOPs (16x16x16 MMA fragment per warp-instruction à la A100).
+            HmmaF16 => self.tensor_f16_flops / 512.0,
+            Mufu => self.sfu,
+            Ldg | Stg => self.lsu,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::*;
+
+    #[test]
+    fn ga100_fp32_rate_reproduces_cmp_theoretical_tflops() {
+        // 70 SMs × 64 FFMA/clk × 2 FLOP × 1.41 GHz = 12.63 TFLOPS (Table 2-4)
+        let r = IssueRates::ga100();
+        let tflops = 70.0 * r.fp32 * 2.0 * 1.41e9 / 1e12;
+        assert!((tflops - 12.63).abs() < 0.01, "{tflops}");
+    }
+
+    #[test]
+    fn ga100_half2_rate_reproduces_fp16_theoretical() {
+        // 70 × 128 HFMA2 × 4 FLOP × 1.41 GHz = 50.53 TFLOPS (Table 2-4)
+        let r = IssueRates::ga100();
+        let tflops = 70.0 * r.half2 * 4.0 * 1.41e9 / 1e12;
+        assert!((tflops - 50.53).abs() < 0.02, "{tflops}");
+    }
+
+    #[test]
+    fn ga100_fp64_rate_reproduces_theoretical() {
+        // 70 × 32 DFMA × 2 FLOP × 1.41 GHz = 6.317 TFLOPS (Table 2-4)
+        let r = IssueRates::ga100();
+        let tflops = 70.0 * r.fp64 * 2.0 * 1.41e9 / 1e12;
+        assert!((tflops - 6.317).abs() < 0.01, "{tflops}");
+    }
+
+    #[test]
+    fn fused_and_unfused_share_a_rate_except_half2() {
+        let r = IssueRates::ga100();
+        assert_eq!(r.class_rate(Ffma), r.class_rate(Fmul));
+        assert_eq!(r.class_rate(Dfma), r.class_rate(Dadd));
+        // half2 mul/add dual-issue at 2× — fmad-neutral path (Graph 3-2).
+        assert_eq!(r.class_rate(Hmul2), 2.0 * r.class_rate(Hfma2));
+    }
+
+    #[test]
+    fn scalar_half_is_half_core_rate() {
+        let r = IssueRates::ga100();
+        assert_eq!(r.class_rate(Hfma), r.class_rate(Ffma) / 2.0);
+    }
+}

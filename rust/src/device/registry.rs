@@ -1,0 +1,259 @@
+//! Calibrated device catalogue.
+//!
+//! Entries:
+//! - [`cmp170hx`] — the paper's subject (Tables 2-1…2-5);
+//! - [`a100_pcie`] — the healthy-silicon reference used for every
+//!   "theoretical performance" overlay in §4;
+//! - the rest of the CMP family (30/40/50/90HX, Table 1-1) for the market
+//!   model — modeled at family-level fidelity (headline FP16 TFLOPS and
+//!   price), not SM-accurate;
+//! - historical comparison cards from §3.1 (Tesla C870, Tesla P6).
+
+use super::rates::IssueRates;
+use super::spec::DeviceSpec;
+use super::throttle::ThrottleProfile;
+use crate::memhier::hbm::MemorySystem;
+use crate::memhier::pcie::{PcieGen, PcieLink};
+use crate::power::PowerModel;
+
+/// NVIDIA CMP 170HX 8GB (GA100-105F-A1). Tables 2-1…2-4.
+pub fn cmp170hx() -> DeviceSpec {
+    DeviceSpec {
+        name: "CMP 170HX",
+        arch: "Ampere (GA100-105F-A1)",
+        sms: 70,
+        cuda_cores: 4480,
+        base_clock_hz: 1.140e9,
+        boost_clock_hz: 1.410e9,
+        rates: IssueRates::ga100(),
+        throttle: ThrottleProfile::cmp170hx_limiter(),
+        mem: MemorySystem::cmp170hx_hbm2e(),
+        pcie: PcieLink::cmp170hx_stock(),
+        power: PowerModel::ga100(),
+        tdp_w: 250.0,
+        l1_bytes_per_sm: 192 * 1024,
+        price_usd: 4500.0, // Table 1-2 estimated ASP
+        released: "2021 Q3",
+    }
+}
+
+/// NVIDIA A100 40GB PCIe — the paper's theoretical-performance reference
+/// (108 SMs, 1555 GB/s, 250 W PCIe TDP).
+pub fn a100_pcie() -> DeviceSpec {
+    DeviceSpec {
+        name: "A100 40GB PCIe",
+        arch: "Ampere (GA100)",
+        sms: 108,
+        cuda_cores: 6912,
+        base_clock_hz: 0.765e9,
+        boost_clock_hz: 1.410e9,
+        rates: IssueRates::ga100(),
+        throttle: ThrottleProfile::native(),
+        mem: MemorySystem::a100_hbm2e(),
+        pcie: PcieLink::new(PcieGen::Gen4, 16),
+        power: PowerModel::ga100(),
+        tdp_w: 250.0,
+        l1_bytes_per_sm: 192 * 1024,
+        price_usd: 10_000.0,
+        released: "2020 Q2",
+    }
+}
+
+/// CMP 170HX with the Ex.2.2 x16 capacitor mod applied.
+pub fn cmp170hx_x16() -> DeviceSpec {
+    let mut d = cmp170hx();
+    d.name = "CMP 170HX (x16 mod)";
+    d.pcie = PcieLink::cmp170hx_x16_mod();
+    d
+}
+
+// --- CMP family (market-model fidelity: headline FP16 TFLOPS + price). ---
+// Table 1-1. Turing-class silicon; SM counts/clocks chosen to reproduce the
+// table's FP16 TFLOPS with the legacy rate model (half2 = 2× fp32 rate on
+// Turing, expressed via cores_per_sm scaling).
+
+fn cmp_family(
+    name: &'static str,
+    sms: u32,
+    cores: u32,
+    boost_ghz: f64,
+    mem: MemorySystem,
+    tdp: f64,
+    price: f64,
+    released: &'static str,
+) -> DeviceSpec {
+    let cores_per_sm = cores as f64 / sms as f64;
+    let mut rates = IssueRates::legacy(cores_per_sm);
+    // Turing/Ampere consumer: packed-half at 2× fp32 rate.
+    rates.half2 = cores_per_sm; // HFMA2 @ core rate → 4 flops = 2× fp32 flops
+    rates.half_scalar = cores_per_sm / 2.0;
+    rates.dp4a = cores_per_sm / 2.0;
+    DeviceSpec {
+        name,
+        arch: "Turing/Ampere (CMP family)",
+        sms,
+        cuda_cores: cores,
+        base_clock_hz: boost_ghz * 0.8e9,
+        boost_clock_hz: boost_ghz * 1e9,
+        rates,
+        throttle: ThrottleProfile::cmp170hx_limiter(),
+        mem,
+        pcie: PcieLink::new(PcieGen::Gen1, 4),
+        power: PowerModel::ga100(),
+        tdp_w: tdp,
+        l1_bytes_per_sm: 96 * 1024,
+        price_usd: price,
+        released,
+    }
+}
+
+/// CMP 30HX (TU116-class): 10.05 FP16 TFLOPS, ~$750.
+pub fn cmp30hx() -> DeviceSpec {
+    cmp_family("CMP 30HX", 22, 1408, 1.785, MemorySystem::gddr6(6, 336.0), 125.0, 750.0, "2021 Q1")
+}
+
+/// CMP 40HX (TU106-class): 15.21 FP16 TFLOPS, ~$650.
+pub fn cmp40hx() -> DeviceSpec {
+    cmp_family("CMP 40HX", 36, 2304, 1.65, MemorySystem::gddr6(8, 448.0), 185.0, 650.0, "2021 Q1")
+}
+
+/// CMP 50HX (TU102-class): 22.15 FP16 TFLOPS, ~$800.
+pub fn cmp50hx() -> DeviceSpec {
+    cmp_family("CMP 50HX", 56, 3584, 1.545, MemorySystem::gddr6(10, 560.0), 250.0, 800.0, "2021 Q2")
+}
+
+/// CMP 90HX (GA102-class): 21.89 FP16 TFLOPS, ~$1550. Ampere consumer
+/// silicon runs packed-half at the FP32 rate (not Turing's 2×), so the
+/// half2 issue rate is halved relative to the family template.
+pub fn cmp90hx() -> DeviceSpec {
+    let mut d = cmp_family("CMP 90HX", 50, 6400, 1.71, MemorySystem::gddr6(10, 760.0), 250.0, 1550.0, "2021 Q2");
+    d.rates.half2 /= 2.0;
+    d
+}
+
+// --- Historical comparison cards (§3.1). ---
+
+/// Tesla C870 (G80, 2007): ~0.346 TFLOPS FP32 — the only card the crippled
+/// CMP 170HX beats at default settings.
+pub fn tesla_c870() -> DeviceSpec {
+    DeviceSpec {
+        name: "Tesla C870",
+        arch: "Tesla (G80)",
+        sms: 16,
+        cuda_cores: 128,
+        base_clock_hz: 1.35e9,
+        boost_clock_hz: 1.35e9,
+        rates: IssueRates::legacy(8.0),
+        throttle: ThrottleProfile::native(),
+        mem: MemorySystem::gddr6(2, 77.0),
+        pcie: PcieLink::new(PcieGen::Gen1, 16),
+        power: PowerModel::pascal(),
+        tdp_w: 171.0,
+        l1_bytes_per_sm: 16 * 1024,
+        price_usd: 1299.0,
+        released: "2007 Q2",
+    }
+}
+
+/// Tesla P6 (GP104 mobile, 2017): ~6.2 TFLOPS FP32 — the card the
+/// FMA-restored CMP 170HX matches (§3.1).
+pub fn tesla_p6() -> DeviceSpec {
+    DeviceSpec {
+        name: "Tesla P6",
+        arch: "Pascal (GP104)",
+        sms: 16,
+        cuda_cores: 2048,
+        base_clock_hz: 1.012e9,
+        boost_clock_hz: 1.506e9,
+        rates: IssueRates::legacy(128.0),
+        throttle: ThrottleProfile::native(),
+        mem: MemorySystem::gddr6(16, 192.0),
+        pcie: PcieLink::new(PcieGen::Gen3, 16),
+        power: PowerModel::pascal(),
+        tdp_w: 90.0,
+        l1_bytes_per_sm: 48 * 1024,
+        price_usd: 2000.0,
+        released: "2017 Q1",
+    }
+}
+
+/// All registry entries, for `cmphx specs` and the market model.
+pub fn all() -> Vec<DeviceSpec> {
+    vec![
+        cmp170hx(),
+        cmp170hx_x16(),
+        a100_pcie(),
+        cmp30hx(),
+        cmp40hx(),
+        cmp50hx(),
+        cmp90hx(),
+        tesla_c870(),
+        tesla_p6(),
+    ]
+}
+
+/// Look up a device by (case-insensitive) name fragment.
+pub fn by_name(name: &str) -> Option<DeviceSpec> {
+    let lower = name.to_lowercase();
+    all().into_iter()
+        .find(|d| d.name.to_lowercase().contains(&lower))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn cmp170hx_core_counts_match_table_2_2() {
+        let d = cmp170hx();
+        assert_eq!(d.sms, 70);
+        assert_eq!(d.cuda_cores, 4480);
+        assert_eq!(d.cuda_cores / d.sms, 64);
+    }
+
+    #[test]
+    fn cmp_family_fp16_matches_table_1_1() {
+        // Table 1-1 FP16 TFLOPS: 30HX 10.05, 40HX 15.21, 50HX 22.15, 90HX 21.89.
+        assert_close(cmp30hx().fp16_tflops(), 10.05, 0.02);
+        assert_close(cmp40hx().fp16_tflops(), 15.21, 0.02);
+        assert_close(cmp50hx().fp16_tflops(), 22.15, 0.02);
+        assert_close(cmp90hx().fp16_tflops(), 21.89, 0.02);
+    }
+
+    #[test]
+    fn c870_is_the_only_card_below_crippled_cmp() {
+        // §3.1: crippled FP32 ≈ 0.39 "surpasses only the Tesla C870 (0.346)".
+        let c870 = tesla_c870();
+        assert_close(c870.fp32_tflops(), 0.346, 0.01);
+    }
+
+    #[test]
+    fn p6_matches_restored_cmp() {
+        // §3.1: restored ≈6.2 TFLOPS "surpasses the Tesla P6".
+        let p6 = tesla_p6();
+        assert!(p6.fp32_tflops() > 5.9 && p6.fp32_tflops() < 6.3, "{}", p6.fp32_tflops());
+    }
+
+    #[test]
+    fn lookup_by_fragment() {
+        assert!(by_name("170hx").is_some());
+        assert!(by_name("A100").is_some());
+        assert!(by_name("nonexistent").is_none());
+    }
+
+    #[test]
+    fn sm_ratio_is_the_papers_prefill_scaler() {
+        // §4.2: u_d = u_o × d_sm / o_sm with 70/108.
+        let ratio = cmp170hx().sms as f64 / a100_pcie().sms as f64;
+        assert_close(ratio, 70.0 / 108.0, 1e-12);
+    }
+
+    #[test]
+    fn all_devices_have_positive_specs() {
+        for d in all() {
+            assert!(d.sms > 0 && d.boost_clock_hz > 0.0 && d.tdp_w > 0.0, "{}", d.name);
+            assert!(d.mem.peak_bw > 0.0 && d.price_usd > 0.0);
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! Full device specification — everything downstream models consume.
+
+use super::rates::IssueRates;
+use super::throttle::ThrottleProfile;
+use crate::isa::class::InstClass;
+use crate::memhier::hbm::MemorySystem;
+use crate::memhier::pcie::PcieLink;
+use crate::power::PowerModel;
+
+/// A complete GPU model: silicon (SMs, clocks, issue rates), the limiter
+/// profile, memory system, host link, and power model — plus the catalogue
+/// metadata the market model uses.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Microarchitecture label (Table 2-1).
+    pub arch: &'static str,
+    pub sms: u32,
+    pub cuda_cores: u32,
+    pub base_clock_hz: f64,
+    pub boost_clock_hz: f64,
+    pub rates: IssueRates,
+    pub throttle: ThrottleProfile,
+    pub mem: MemorySystem,
+    pub pcie: PcieLink,
+    pub power: PowerModel,
+    pub tdp_w: f64,
+    /// L1/shared per SM, bytes (Table 2-2: 192 KB).
+    pub l1_bytes_per_sm: u64,
+    /// Street price in USD (Table 1-1 for CMP cards; public list/market
+    /// price for references). Used by `market/`.
+    pub price_usd: f64,
+    /// Release label for reports.
+    pub released: &'static str,
+}
+
+impl DeviceSpec {
+    /// Theoretical peak for a class at boost clock, expressed in the
+    /// quantity the paper's graphs use (TFLOPs for float classes, TIOPs for
+    /// int), *ignoring the throttle* — "theoretical" always means the
+    /// silicon's capability.
+    pub fn theoretical_class_rate(&self, class: InstClass) -> f64 {
+        let inst_per_s = self.sms as f64 * self.rates.class_rate(class) * self.boost_clock_hz;
+        let ops = if class.flops() > 0 {
+            class.flops() as f64
+        } else {
+            class.iops() as f64
+        };
+        inst_per_s * ops / 1e12
+    }
+
+    /// Effective issue rate (inst/s, whole device) for a class *after* the
+    /// limiter, at boost clock.
+    pub fn effective_issue_rate(&self, class: InstClass) -> f64 {
+        self.sms as f64
+            * self.rates.class_rate(class)
+            * self.throttle.mult(class)
+            * self.boost_clock_hz
+    }
+
+    /// Theoretical FP32 TFLOPS (headline spec, Table 2-4).
+    pub fn fp32_tflops(&self) -> f64 {
+        self.theoretical_class_rate(InstClass::Ffma)
+    }
+
+    /// Theoretical FP16 (packed, non-tensor) TFLOPS.
+    pub fn fp16_tflops(&self) -> f64 {
+        self.theoretical_class_rate(InstClass::Hfma2)
+    }
+
+    /// Theoretical FP64 TFLOPS.
+    pub fn fp64_tflops(&self) -> f64 {
+        self.theoretical_class_rate(InstClass::Dfma)
+    }
+
+    /// Tensor-core dense f16 TFLOPS (0 when dark).
+    pub fn tensor_f16_tflops(&self) -> f64 {
+        self.sms as f64
+            * self.rates.tensor_f16_flops
+            * self.throttle.mult(InstClass::HmmaF16)
+            * self.boost_clock_hz
+            / 1e12
+    }
+
+    /// Swap the throttle profile (used by the §5.4 pathway explorer).
+    pub fn with_throttle(mut self, throttle: ThrottleProfile) -> Self {
+        self.throttle = throttle;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::device::registry;
+    use crate::isa::class::InstClass::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn cmp170hx_theoretical_matches_table_2_4() {
+        let d = registry::cmp170hx();
+        assert_close(d.fp32_tflops(), 12.63, 0.01);
+        assert_close(d.fp16_tflops(), 50.53, 0.01);
+        assert_close(d.fp64_tflops(), 6.317, 0.01);
+    }
+
+    #[test]
+    fn cmp170hx_effective_ffma_is_one_thirtysecond() {
+        let d = registry::cmp170hx();
+        let native = d.sms as f64 * d.rates.fp32 * d.boost_clock_hz;
+        assert_close(d.effective_issue_rate(Ffma), native / 32.0, 1e-12);
+        assert_close(d.effective_issue_rate(Fmul), native, 1e-12);
+    }
+
+    #[test]
+    fn a100_is_uncrippled() {
+        let d = registry::a100_pcie();
+        assert!(!d.throttle.is_crippled());
+        assert_close(d.fp32_tflops(), 19.5, 0.02);
+        assert!(d.tensor_f16_tflops() > 200.0); // ~312 TFLOPS dense
+    }
+
+    #[test]
+    fn cmp_tensor_cores_are_dark() {
+        assert_eq!(registry::cmp170hx().tensor_f16_tflops(), 0.0);
+    }
+
+    #[test]
+    fn theoretical_ignores_throttle() {
+        // "theoretical" = silicon capability: identical before/after unlock.
+        let d = registry::cmp170hx();
+        let unlocked = d.clone().with_throttle(crate::device::ThrottleProfile::native());
+        assert_eq!(d.fp32_tflops(), unlocked.fp32_tflops());
+    }
+}

@@ -1,0 +1,176 @@
+//! The crippling mechanism: per-instruction-class issue-rate multipliers.
+//!
+//! The CMP 170HX's limiter (§3, §5.1 of the paper; confirmed empirically by
+//! niconiconi's teardown) watches the decoded instruction stream and
+//! throttles *fused multiply-add* classes to a small fraction of their
+//! native rate. Everything else — unfused FP math, packed-half, integer,
+//! memory — issues at full speed. This module also carries the hypothetical
+//! unlock profiles of §5.4 so the `crippled_explorer` example can sweep
+//! recovery pathways.
+
+use std::collections::BTreeMap;
+
+use crate::isa::class::{InstClass, ALL_CLASSES};
+
+/// Per-class issue-rate multipliers (1.0 = native). Missing classes default
+/// to native.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ThrottleProfile {
+    pub name: &'static str,
+    mults: BTreeMap<&'static str, f64>,
+}
+
+impl ThrottleProfile {
+    fn empty(name: &'static str) -> Self {
+        ThrottleProfile {
+            name,
+            mults: BTreeMap::new(),
+        }
+    }
+
+    /// Healthy silicon — no limiter (A100, and the §5.4(a) "driver crack"
+    /// hypothetical endpoint).
+    pub fn native() -> Self {
+        Self::empty("native")
+    }
+
+    /// The CMP 170HX production limiter, calibrated to Graphs 3-1…3-4:
+    ///
+    /// | class | mult | evidence |
+    /// |---|---|---|
+    /// | FFMA        | 1/32 | 12.63 TFLOPS → measured ~0.39 (Graph 3-1) |
+    /// | DFMA/DMUL/DADD | 1/32 | 6.317 → ~0.19 (Graph 3-3); *unfused f64 also throttled*, so noFMA makes FP64 worse — exactly what the paper reports |
+    /// | HFMA (scalar) | 1 | PyTorch path reaches its (scalar) pipe peak ≈6.3 (Graph 3-2) |
+    /// | HFMA2 | 1 | OpenCL half2 reaches ≈49 of 50.53 (Graph 3-2) |
+    /// | IMAD/IADD/IMUL/DP4A | 1 | "integer performance remains uncrippled" (§5.2, Graph 3-4/EX.1) |
+    /// | LDG/STG | 1 | full 1493 GB/s retained (Graph 3-5) |
+    ///
+    /// Note: §3.3's prose says FP64 is "1/64 … 1/128 with noFMA" but its own
+    /// Graph 3-3 shows 0.18–0.20 TFLOPS ≈ theoretical/32; we calibrate to
+    /// the graph (see DESIGN.md §3).
+    pub fn cmp170hx_limiter() -> Self {
+        let mut p = Self::empty("cmp170hx-limiter");
+        p.set(InstClass::Ffma, 1.0 / 32.0);
+        p.set(InstClass::Dfma, 1.0 / 32.0);
+        p.set(InstClass::Dmul, 1.0 / 32.0);
+        p.set(InstClass::Dadd, 1.0 / 32.0);
+        // Tensor cores physically present but fused off / not exposed.
+        p.set(InstClass::HmmaF16, 0.0);
+        p
+    }
+
+    /// §5.4(b): open-source kernel driver + user-space Vulkan. The paper
+    /// conjectures restrictions may live in the GSP firmware; this profile
+    /// models the optimistic case where FP32 contraction recovers but FP64
+    /// stays fused-off and tensor cores remain dark.
+    pub fn gsp_partial_unlock() -> Self {
+        let mut p = Self::empty("gsp-partial-unlock");
+        p.set(InstClass::Dfma, 1.0 / 32.0);
+        p.set(InstClass::Dmul, 1.0 / 32.0);
+        p.set(InstClass::Dadd, 1.0 / 32.0);
+        p.set(InstClass::HmmaF16, 0.0);
+        p
+    }
+
+    /// §5.4(c): stay on the stock driver but author every kernel by hand to
+    /// avoid fused ops — identical to the production limiter (the *pass*
+    /// provides the avoidance; kept as a named alias for the explorer).
+    pub fn custom_cuda_path() -> Self {
+        let mut p = Self::cmp170hx_limiter();
+        p.name = "custom-cuda-path";
+        p
+    }
+
+    /// Set the multiplier for one class.
+    pub fn set(&mut self, class: InstClass, mult: f64) {
+        assert!((0.0..=1.0).contains(&mult), "mult out of range: {mult}");
+        self.mults.insert(class.name(), mult);
+    }
+
+    /// Multiplier for a class (1.0 when unthrottled).
+    pub fn mult(&self, class: InstClass) -> f64 {
+        self.mults.get(class.name()).copied().unwrap_or(1.0)
+    }
+
+    /// True if any class is throttled below native.
+    pub fn is_crippled(&self) -> bool {
+        ALL_CLASSES.iter().any(|&c| self.mult(c) < 1.0)
+    }
+
+    /// Classes throttled below native, with their multipliers.
+    pub fn throttled_classes(&self) -> Vec<(InstClass, f64)> {
+        ALL_CLASSES
+            .iter()
+            .filter_map(|&c| {
+                let m = self.mult(c);
+                (m < 1.0).then_some((c, m))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::*;
+
+    #[test]
+    fn native_profile_throttles_nothing() {
+        let p = ThrottleProfile::native();
+        assert!(!p.is_crippled());
+        for &c in ALL_CLASSES {
+            assert_eq!(p.mult(c), 1.0);
+        }
+    }
+
+    #[test]
+    fn limiter_targets_fused_fp32_but_not_unfused() {
+        let p = ThrottleProfile::cmp170hx_limiter();
+        assert_eq!(p.mult(Ffma), 1.0 / 32.0);
+        assert_eq!(p.mult(Fmul), 1.0);
+        assert_eq!(p.mult(Fadd), 1.0);
+    }
+
+    #[test]
+    fn limiter_throttles_all_fp64_classes() {
+        // This is what makes noFMA *hurt* FP64: the decomposed DMUL/DADD
+        // are throttled too, and there are twice as many of them.
+        let p = ThrottleProfile::cmp170hx_limiter();
+        for c in [Dfma, Dmul, Dadd] {
+            assert_eq!(p.mult(c), 1.0 / 32.0);
+        }
+    }
+
+    #[test]
+    fn limiter_leaves_half_int_and_memory_alone() {
+        let p = ThrottleProfile::cmp170hx_limiter();
+        for c in [Hfma2, Hfma, Imad, Iadd, Dp4a, Ldg, Stg] {
+            assert_eq!(p.mult(c), 1.0, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn limiter_disables_tensor_cores() {
+        assert_eq!(ThrottleProfile::cmp170hx_limiter().mult(HmmaF16), 0.0);
+    }
+
+    #[test]
+    fn is_crippled_detects_limiter() {
+        assert!(ThrottleProfile::cmp170hx_limiter().is_crippled());
+        assert!(ThrottleProfile::gsp_partial_unlock().is_crippled());
+    }
+
+    #[test]
+    fn throttled_classes_lists_exactly_the_limited_set() {
+        let p = ThrottleProfile::cmp170hx_limiter();
+        let names: Vec<_> = p.throttled_classes().iter().map(|(c, _)| c.name()).collect();
+        assert_eq!(names, vec!["FFMA", "DFMA", "DMUL", "DADD", "HMMA.F16"]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_mult() {
+        let mut p = ThrottleProfile::native();
+        p.set(Ffma, 1.5);
+    }
+}

@@ -1,0 +1,291 @@
+//! Instruction classes and execution pipes.
+//!
+//! Classes are the granularity at which (a) the device prices throughput and
+//! (b) the CMP limiter throttles. Pipes group classes that contend for the
+//! same issue/execution resources inside an SM.
+
+/// Scalar element type of an arithmetic instruction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    F32,
+    F64,
+    I32,
+    I8,
+}
+
+impl DType {
+    /// Bytes per scalar element.
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F16 => 2,
+            DType::F32 => 4,
+            DType::F64 => 8,
+            DType::I32 => 4,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F16 => "f16",
+            DType::F32 => "f32",
+            DType::F64 => "f64",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+        }
+    }
+}
+
+/// Execution pipe inside an SM. Classes sharing a pipe serialize against
+/// each other; distinct pipes overlap (the timing engine takes the max).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pipe {
+    /// FP32 / scalar-FP16 / INT32 cores (the "CUDA core" pipe on GA100 —
+    /// fp32 and int32 issue on shared dispatch ports).
+    Core,
+    /// Dedicated FP64 units.
+    Fp64,
+    /// Packed-half (half2) vector pipe — on GA100 this is the 4×-rate
+    /// non-tensor FP16 path.
+    Half2,
+    /// Tensor cores (present but unusable on CMP 170HX per the paper: no
+    /// driver support is exposed; modeled for the A100 reference).
+    Tensor,
+    /// Load/store units — memory instructions; actual transfer time is
+    /// modeled by [`crate::memhier`], but LSU issue slots still contend.
+    Lsu,
+}
+
+/// Instruction classes priced by the device model. `*Fma` variants are the
+/// fused classes the CMP limiter throttles; the unfused `*Mul`/`*Add`
+/// variants are what the `-fmad=false` pass emits instead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum InstClass {
+    // fp32 scalar
+    Ffma,
+    Fmul,
+    Fadd,
+    // fp64 scalar
+    Dfma,
+    Dmul,
+    Dadd,
+    // packed fp16 (2-wide SIMD within a lane)
+    Hfma2,
+    Hmul2,
+    Hadd2,
+    // scalar fp16 (issues on the Core pipe at half rate — no dual issue;
+    // this is the PyTorch/GPU-Burn path that only reaches ~6.3 TFLOPS)
+    Hfma,
+    Hmul,
+    Hadd,
+    // int32
+    Imad,
+    Imul,
+    Iadd,
+    // int8 4-wide dot-product-accumulate
+    Dp4a,
+    // tensor-core HMMA (A100 reference device only)
+    HmmaF16,
+    // transcendental / special function
+    Mufu,
+    // memory
+    Ldg,
+    Stg,
+}
+
+/// All classes, for registry/table iteration.
+pub const ALL_CLASSES: &[InstClass] = &[
+    InstClass::Ffma,
+    InstClass::Fmul,
+    InstClass::Fadd,
+    InstClass::Dfma,
+    InstClass::Dmul,
+    InstClass::Dadd,
+    InstClass::Hfma2,
+    InstClass::Hmul2,
+    InstClass::Hadd2,
+    InstClass::Hfma,
+    InstClass::Hmul,
+    InstClass::Hadd,
+    InstClass::Imad,
+    InstClass::Imul,
+    InstClass::Iadd,
+    InstClass::Dp4a,
+    InstClass::HmmaF16,
+    InstClass::Mufu,
+    InstClass::Ldg,
+    InstClass::Stg,
+];
+
+impl InstClass {
+    /// Pipe this class issues on.
+    pub fn pipe(self) -> Pipe {
+        use InstClass::*;
+        match self {
+            Ffma | Fmul | Fadd | Hfma | Hmul | Hadd | Imad | Imul | Iadd | Dp4a | Mufu => {
+                Pipe::Core
+            }
+            Dfma | Dmul | Dadd => Pipe::Fp64,
+            Hfma2 | Hmul2 | Hadd2 => Pipe::Half2,
+            HmmaF16 => Pipe::Tensor,
+            Ldg | Stg => Pipe::Lsu,
+        }
+    }
+
+    /// Floating-point operations contributed per instruction (0 for int/mem).
+    /// FMA counts as 2 (mul + add), packed-half doubles per lane width, and
+    /// one HMMA warp-instruction covers a 16×16×16 MMA fragment slice worth
+    /// 512 FLOPs (the convention the rate table prices).
+    pub fn flops(self) -> u64 {
+        use InstClass::*;
+        match self {
+            Ffma | Dfma | Hfma => 2,
+            Fmul | Fadd | Dmul | Dadd | Hmul | Hadd => 1,
+            Hfma2 => 4,
+            Hmul2 | Hadd2 => 2,
+            HmmaF16 => 512,
+            Mufu => 1,
+            _ => 0,
+        }
+    }
+
+    /// Relative dynamic energy per op (FLOP or IOP) versus a scalar fp32
+    /// FLOP. Narrower datapaths burn less; the fp64 path burns about twice;
+    /// tensor cores amortize control over a whole MMA fragment. These
+    /// weights are what let a 250 W card sustain ~49 TFLOPS of packed-half
+    /// (Graph 3-2) while FP32 DVFS-caps near 19.5 on the A100.
+    pub fn energy_weight(self) -> f64 {
+        use InstClass::*;
+        match self {
+            Dfma | Dmul | Dadd => 2.0,
+            Hfma2 | Hmul2 | Hadd2 | Hfma | Hmul | Hadd => 0.2,
+            Imad | Imul | Iadd => 0.8,
+            Dp4a => 0.25,
+            HmmaF16 => 0.08,
+            _ => 1.0,
+        }
+    }
+
+    /// Integer operations contributed per instruction.
+    pub fn iops(self) -> u64 {
+        use InstClass::*;
+        match self {
+            Imad => 2,
+            Imul | Iadd => 1,
+            // dp4a: 4 multiplies + 4 adds (incl. accumulate) per instruction
+            // — the convention OpenCL-Benchmark uses when reporting TIOPs.
+            Dp4a => 8,
+            _ => 0,
+        }
+    }
+
+    /// Is this a fused multiply-add class (the limiter's trigger set)?
+    pub fn is_fused(self) -> bool {
+        matches!(
+            self,
+            InstClass::Ffma | InstClass::Dfma | InstClass::Hfma | InstClass::Hfma2
+        )
+    }
+
+    /// The unfused (mul, add) pair the `-fmad=false` pass decomposes a fused
+    /// class into; `None` for non-fused classes.
+    pub fn decomposed(self) -> Option<(InstClass, InstClass)> {
+        match self {
+            InstClass::Ffma => Some((InstClass::Fmul, InstClass::Fadd)),
+            InstClass::Dfma => Some((InstClass::Dmul, InstClass::Dadd)),
+            InstClass::Hfma => Some((InstClass::Hmul, InstClass::Hadd)),
+            InstClass::Hfma2 => Some((InstClass::Hmul2, InstClass::Hadd2)),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        use InstClass::*;
+        match self {
+            Ffma => "FFMA",
+            Fmul => "FMUL",
+            Fadd => "FADD",
+            Dfma => "DFMA",
+            Dmul => "DMUL",
+            Dadd => "DADD",
+            Hfma2 => "HFMA2",
+            Hmul2 => "HMUL2",
+            Hadd2 => "HADD2",
+            Hfma => "HFMA",
+            Hmul => "HMUL",
+            Hadd => "HADD",
+            Imad => "IMAD",
+            Imul => "IMUL",
+            Iadd => "IADD",
+            Dp4a => "DP4A",
+            HmmaF16 => "HMMA.F16",
+            Mufu => "MUFU",
+            Ldg => "LDG",
+            Stg => "STG",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fused_classes_decompose_to_same_pipe_and_flops() {
+        for &c in ALL_CLASSES {
+            if let Some((m, a)) = c.decomposed() {
+                assert!(c.is_fused());
+                // Decomposition preserves total FLOPs (2 per fused op) and
+                // stays on the same pipe — the pass changes instruction
+                // count, never where the work runs.
+                assert_eq!(m.flops() + a.flops(), c.flops());
+                assert_eq!(m.pipe(), c.pipe());
+                assert_eq!(a.pipe(), c.pipe());
+                assert!(!m.is_fused() && !a.is_fused());
+            }
+        }
+    }
+
+    #[test]
+    fn exactly_four_fused_classes() {
+        let fused: Vec<_> = ALL_CLASSES.iter().filter(|c| c.is_fused()).collect();
+        assert_eq!(fused.len(), 4);
+    }
+
+    #[test]
+    fn decomposition_preserves_energy_weight() {
+        for &c in ALL_CLASSES {
+            if let Some((m, a)) = c.decomposed() {
+                assert_eq!(m.energy_weight(), c.energy_weight());
+                assert_eq!(a.energy_weight(), c.energy_weight());
+            }
+        }
+    }
+
+    #[test]
+    fn hmma_prices_a_fragment() {
+        assert_eq!(InstClass::HmmaF16.flops(), 512);
+    }
+
+    #[test]
+    fn memory_classes_have_no_flops() {
+        assert_eq!(InstClass::Ldg.flops(), 0);
+        assert_eq!(InstClass::Stg.flops(), 0);
+        assert_eq!(InstClass::Ldg.pipe(), Pipe::Lsu);
+    }
+
+    #[test]
+    fn dp4a_counts_eight_iops() {
+        assert_eq!(InstClass::Dp4a.iops(), 8);
+        assert_eq!(InstClass::Imad.iops(), 2);
+    }
+
+    #[test]
+    fn dtype_bytes() {
+        assert_eq!(DType::F16.bytes(), 2);
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::F64.bytes(), 8);
+        assert_eq!(DType::I8.bytes(), 1);
+    }
+}

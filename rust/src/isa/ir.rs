@@ -1,0 +1,213 @@
+//! Structured kernel IR.
+//!
+//! A [`Kernel`] is what a benchmark workload hands to the simulator: a
+//! per-thread body of counted ops and loops, a launch geometry, and a global
+//! memory traffic descriptor. The IR is deliberately small — just enough
+//! structure for the `-fmad=false` pass to be a *real* rewrite (it must
+//! recurse through loops and respect the compiled-library boundary) rather
+//! than a scalar fudge factor.
+
+use super::class::InstClass;
+
+/// One arithmetic/memory operation, executed `count` times per thread at the
+/// IR position it appears in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Op {
+    pub class: InstClass,
+    pub count: u64,
+}
+
+impl Op {
+    pub fn new(class: InstClass, count: u64) -> Self {
+        Op { class, count }
+    }
+}
+
+/// Statement: a counted op or a counted loop over a sub-body.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Stmt {
+    Op(Op),
+    /// `trips` executions of `body` per thread.
+    Loop { trips: u64, body: Vec<Stmt> },
+}
+
+impl Stmt {
+    pub fn op(class: InstClass, count: u64) -> Stmt {
+        Stmt::Op(Op::new(class, count))
+    }
+
+    pub fn looped(trips: u64, body: Vec<Stmt>) -> Stmt {
+        Stmt::Loop { trips, body }
+    }
+}
+
+/// Where the kernel's machine code comes from. The `-fmad=false` compiler
+/// flag only affects code the user compiles; prebuilt libraries (cuBLAS,
+/// cuDNN) ship fixed SASS. This boundary is the mechanism behind the paper's
+/// observation that llama.cpp f16/f32 models (cuBLAS GEMM path) gain nothing
+/// from disabling FMA while quantized models (JIT-compiled MMQ kernels) gain
+/// up to 2.3×.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelSource {
+    /// Compiled from source by the user's toolchain — fmad policy applies.
+    Jit,
+    /// Shipped as a prebuilt binary library — fmad policy does NOT apply.
+    Lib,
+}
+
+/// Global-memory access pattern; selects the achieved-bandwidth curve in
+/// [`crate::memhier`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MemPattern {
+    /// Fully coalesced, 128B-aligned warp transactions.
+    Coalesced,
+    /// Deliberately misaligned (OpenCL-Benchmark's "misaligned" case).
+    Misaligned,
+    /// Strided gather (quantized-GEMM weight walks, attention KV reads).
+    Strided,
+}
+
+/// Global memory traffic of one kernel launch (whole grid, not per thread).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Traffic {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+    pub pattern: MemPattern,
+    /// Fraction of reads served by L2 (working-set reuse); 0.0 = all HBM.
+    pub l2_hit_rate: f64,
+}
+
+impl Traffic {
+    pub fn none() -> Self {
+        Traffic {
+            read_bytes: 0,
+            write_bytes: 0,
+            pattern: MemPattern::Coalesced,
+            l2_hit_rate: 0.0,
+        }
+    }
+
+    pub fn coalesced(read_bytes: u64, write_bytes: u64) -> Self {
+        Traffic {
+            read_bytes,
+            write_bytes,
+            pattern: MemPattern::Coalesced,
+            l2_hit_rate: 0.0,
+        }
+    }
+
+    /// Total bytes that reach the memory system.
+    pub fn total_bytes(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    /// Bytes that miss L2 and hit HBM.
+    pub fn hbm_bytes(&self) -> f64 {
+        self.read_bytes as f64 * (1.0 - self.l2_hit_rate) + self.write_bytes as f64
+    }
+}
+
+/// A launchable kernel: geometry + per-thread body + traffic descriptor.
+#[derive(Clone, Debug)]
+pub struct Kernel {
+    pub name: String,
+    /// Total threads in the grid (flattened).
+    pub threads: u64,
+    /// Threads per block (occupancy input).
+    pub block: u32,
+    /// Per-thread instruction body.
+    pub body: Vec<Stmt>,
+    /// Whole-grid global memory traffic.
+    pub traffic: Traffic,
+    pub source: KernelSource,
+}
+
+impl Kernel {
+    pub fn new(name: impl Into<String>, threads: u64, block: u32) -> Self {
+        Kernel {
+            name: name.into(),
+            threads,
+            block,
+            body: Vec::new(),
+            traffic: Traffic::none(),
+            source: KernelSource::Jit,
+        }
+    }
+
+    pub fn with_body(mut self, body: Vec<Stmt>) -> Self {
+        self.body = body;
+        self
+    }
+
+    pub fn with_traffic(mut self, traffic: Traffic) -> Self {
+        self.traffic = traffic;
+        self
+    }
+
+    pub fn with_source(mut self, source: KernelSource) -> Self {
+        self.source = source;
+        self
+    }
+
+    /// Per-thread dynamic instruction count (loops expanded).
+    pub fn dynamic_insts_per_thread(&self) -> u64 {
+        fn walk(stmts: &[Stmt]) -> u64 {
+            stmts
+                .iter()
+                .map(|s| match s {
+                    Stmt::Op(op) => op.count,
+                    Stmt::Loop { trips, body } => trips * walk(body),
+                })
+                .sum()
+        }
+        walk(&self.body)
+    }
+
+    /// Blocks in the grid.
+    pub fn blocks(&self) -> u64 {
+        self.threads.div_ceil(self.block as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::*;
+
+    fn sample_kernel() -> Kernel {
+        Kernel::new("k", 1024, 256).with_body(vec![
+            Stmt::op(Ldg, 2),
+            Stmt::looped(10, vec![Stmt::op(Ffma, 4), Stmt::looped(2, vec![Stmt::op(Fadd, 1)])]),
+            Stmt::op(Stg, 1),
+        ])
+    }
+
+    #[test]
+    fn dynamic_count_expands_nested_loops() {
+        let k = sample_kernel();
+        // 2 + 10*(4 + 2*1) + 1 = 63
+        assert_eq!(k.dynamic_insts_per_thread(), 63);
+    }
+
+    #[test]
+    fn blocks_round_up() {
+        let k = Kernel::new("k", 1000, 256);
+        assert_eq!(k.blocks(), 4);
+        let k = Kernel::new("k", 1024, 256);
+        assert_eq!(k.blocks(), 4);
+    }
+
+    #[test]
+    fn traffic_accounting() {
+        let mut t = Traffic::coalesced(1000, 500);
+        assert_eq!(t.total_bytes(), 1500);
+        assert_eq!(t.hbm_bytes(), 1500.0);
+        t.l2_hit_rate = 0.5;
+        assert_eq!(t.hbm_bytes(), 1000.0);
+    }
+
+    #[test]
+    fn default_source_is_jit() {
+        assert_eq!(sample_kernel().source, KernelSource::Jit);
+    }
+}

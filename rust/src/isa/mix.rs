@@ -1,0 +1,178 @@
+//! Flat instruction mixes — the lowered form the timing engine consumes.
+
+use std::collections::BTreeMap;
+
+use super::class::{InstClass, ALL_CLASSES};
+use super::ir::{Kernel, Stmt};
+
+/// Whole-grid dynamic instruction counts per class.
+///
+/// Uses a `BTreeMap` keyed by class name order via discriminant-stable
+/// iteration of [`ALL_CLASSES`]; counts are grid totals (per-thread counts ×
+/// thread count).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct InstMix {
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl InstMix {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Lower a kernel's per-thread body to whole-grid class counts.
+    pub fn from_kernel(k: &Kernel) -> Self {
+        let mut mix = InstMix::new();
+        fn walk(stmts: &[Stmt], mult: u64, mix: &mut InstMix) {
+            for s in stmts {
+                match s {
+                    Stmt::Op(op) => mix.add(op.class, op.count * mult),
+                    Stmt::Loop { trips, body } => walk(body, mult * trips, mix),
+                }
+            }
+        }
+        walk(&k.body, 1, &mut mix);
+        mix.scale(k.threads);
+        mix
+    }
+
+    pub fn add(&mut self, class: InstClass, count: u64) {
+        if count == 0 {
+            return;
+        }
+        *self.counts.entry(class.name()).or_insert(0) += count;
+    }
+
+    pub fn get(&self, class: InstClass) -> u64 {
+        self.counts.get(class.name()).copied().unwrap_or(0)
+    }
+
+    /// Multiply every count (used to go per-thread → whole grid, or to
+    /// replicate a layer's mix across a model).
+    pub fn scale(&mut self, by: u64) {
+        for v in self.counts.values_mut() {
+            *v *= by;
+        }
+    }
+
+    /// Merge another mix into this one.
+    pub fn merge(&mut self, other: &InstMix) {
+        for (k, v) in &other.counts {
+            *self.counts.entry(k).or_insert(0) += v;
+        }
+    }
+
+    /// Total dynamic instructions.
+    pub fn total(&self) -> u64 {
+        self.counts.values().sum()
+    }
+
+    /// Total floating-point operations represented by the mix.
+    pub fn flops(&self) -> u64 {
+        ALL_CLASSES
+            .iter()
+            .map(|&c| self.get(c) * c.flops())
+            .sum()
+    }
+
+    /// Total integer operations represented by the mix.
+    pub fn iops(&self) -> u64 {
+        ALL_CLASSES.iter().map(|&c| self.get(c) * c.iops()).sum()
+    }
+
+    /// Count of fused-FMA-class instructions (the limiter's trigger set).
+    pub fn fused(&self) -> u64 {
+        ALL_CLASSES
+            .iter()
+            .filter(|c| c.is_fused())
+            .map(|&c| self.get(c))
+            .sum()
+    }
+
+    /// Iterate `(class, count)` over nonzero classes.
+    pub fn iter(&self) -> impl Iterator<Item = (InstClass, u64)> + '_ {
+        ALL_CLASSES.iter().filter_map(move |&c| {
+            let n = self.get(c);
+            (n > 0).then_some((c, n))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::*;
+    use crate::isa::ir::{Kernel, Stmt};
+    use crate::testutil::{forall, Rng};
+
+    fn kernel_with(body: Vec<Stmt>, threads: u64) -> Kernel {
+        Kernel::new("t", threads, 128).with_body(body)
+    }
+
+    #[test]
+    fn lowering_scales_by_threads_and_trips() {
+        let k = kernel_with(
+            vec![Stmt::looped(8, vec![Stmt::op(Ffma, 3)]), Stmt::op(Stg, 1)],
+            100,
+        );
+        let mix = InstMix::from_kernel(&k);
+        assert_eq!(mix.get(Ffma), 8 * 3 * 100);
+        assert_eq!(mix.get(Stg), 100);
+        assert_eq!(mix.total(), 2400 + 100);
+    }
+
+    #[test]
+    fn flops_count_fma_as_two() {
+        let mut mix = InstMix::new();
+        mix.add(Ffma, 10);
+        mix.add(Fadd, 5);
+        assert_eq!(mix.flops(), 25);
+        assert_eq!(mix.fused(), 10);
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = InstMix::new();
+        a.add(Imad, 4);
+        let mut b = InstMix::new();
+        b.add(Imad, 6);
+        b.add(Dp4a, 2);
+        a.merge(&b);
+        assert_eq!(a.get(Imad), 10);
+        assert_eq!(a.get(Dp4a), 2);
+        assert_eq!(a.iops(), 10 * 2 + 2 * 8);
+    }
+
+    #[test]
+    fn prop_lowering_matches_dynamic_count() {
+        // Property: whole-grid total == per-thread dynamic count × threads,
+        // for arbitrary nested bodies.
+        forall(0xC0FFEE, 200, |rng: &mut Rng| {
+            fn gen_body(rng: &mut Rng, depth: u32) -> Vec<Stmt> {
+                let n = rng.range(1, 4);
+                (0..n)
+                    .map(|_| {
+                        if depth < 3 && rng.chance(0.3) {
+                            Stmt::looped(rng.range(1, 5), gen_body(rng, depth + 1))
+                        } else {
+                            let class = *rng.pick(&[Ffma, Fmul, Fadd, Imad, Ldg, Stg, Hfma2]);
+                            Stmt::op(class, rng.range(1, 16))
+                        }
+                    })
+                    .collect()
+            }
+            let threads = rng.range(1, 10_000);
+            let k = kernel_with(gen_body(rng, 0), threads);
+            let mix = InstMix::from_kernel(&k);
+            assert_eq!(mix.total(), k.dynamic_insts_per_thread() * threads);
+        });
+    }
+
+    #[test]
+    fn zero_counts_are_not_stored() {
+        let mut mix = InstMix::new();
+        mix.add(Ffma, 0);
+        assert_eq!(mix.total(), 0);
+        assert_eq!(mix.iter().count(), 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! Simulated instruction-set layer.
+//!
+//! The paper's entire phenomenon lives at the instruction-class level: the
+//! CMP 170HX limiter keys on *fused multiply-add* opcodes (FFMA/DFMA/…)
+//! while unfused multiplies/adds, packed-half math, integer math and memory
+//! traffic issue at native rates. This module defines:
+//!
+//! - [`class`] — the instruction classes the device model prices;
+//! - [`ir`] — a small structured kernel IR (straight-line ops + counted
+//!   loops), rich enough to express the paper's benchmark kernels;
+//! - [`pass`] — the `-fmad=false` compiler pass (FMA → MUL+ADD) with the
+//!   compiled-library boundary (`KernelSource::Lib` kernels, e.g. cuBLAS,
+//!   are *not* rewritten — this is why the paper sees no llama.cpp gain for
+//!   f16/f32 models);
+//! - [`mix`] — lowering of IR to flat instruction mixes consumed by the
+//!   timing engine in [`crate::sim`].
+
+pub mod class;
+pub mod ir;
+pub mod mix;
+pub mod pass;
+
+pub use class::{DType, InstClass, Pipe};
+pub use ir::{Kernel, KernelSource, MemPattern, Op, Stmt, Traffic};
+pub use mix::InstMix;
+pub use pass::FmadPolicy;

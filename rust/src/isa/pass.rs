@@ -1,0 +1,179 @@
+//! The `-fmad=false` compiler pass.
+//!
+//! This is the paper's enabling technique (§2.2.2, credited to niconiconi's
+//! blog): compile CUDA with `-fmad=false` (or OpenCL with
+//! `#pragma OPENCL FP_CONTRACT OFF` + an `fma()` override) so the compiler
+//! emits unfused MUL+ADD pairs instead of fused FFMA/DFMA instructions. On a
+//! healthy GPU this *halves* attainable FLOPs (two issue slots per fused
+//! op); on the CMP 170HX, whose limiter keys on the fused opcodes, it
+//! trades a 2× instruction inflation for a 32× issue-rate recovery — a
+//! net ≈16× speedup on FP32.
+//!
+//! The pass is a structural rewrite over [`Kernel`] bodies. It honours the
+//! compiled-library boundary: kernels marked [`KernelSource::Lib`] (cuBLAS
+//! et al.) ship prebuilt SASS and are returned unchanged.
+
+use super::ir::{Kernel, KernelSource, Op, Stmt};
+
+/// Whether fused multiply-add contraction is permitted at compile time.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FmadPolicy {
+    /// Default toolchain behaviour: contract `a*b+c` into fused FMA.
+    Fused,
+    /// `-fmad=false` / `FP_CONTRACT OFF`: every fused op becomes an unfused
+    /// MUL followed by ADD (two instructions, double rounding).
+    Decomposed,
+}
+
+impl FmadPolicy {
+    pub fn name(self) -> &'static str {
+        match self {
+            FmadPolicy::Fused => "default",
+            FmadPolicy::Decomposed => "noFMA",
+        }
+    }
+}
+
+/// Apply the fmad policy to a kernel, producing the kernel the device will
+/// actually execute. `Fused` and `Lib`-sourced kernels pass through
+/// untouched; `Decomposed` rewrites every fused-class op into its MUL+ADD
+/// pair, preserving loop structure and op order.
+pub fn apply_fmad(kernel: &Kernel, policy: FmadPolicy) -> Kernel {
+    if policy == FmadPolicy::Fused || kernel.source == KernelSource::Lib {
+        return kernel.clone();
+    }
+    let mut out = kernel.clone();
+    out.name = format!("{}.nofma", kernel.name);
+    out.body = rewrite(&kernel.body);
+    out
+}
+
+fn rewrite(stmts: &[Stmt]) -> Vec<Stmt> {
+    let mut out = Vec::with_capacity(stmts.len());
+    for s in stmts {
+        match s {
+            Stmt::Op(op) => {
+                if let Some((mul, add)) = op.class.decomposed() {
+                    out.push(Stmt::Op(Op::new(mul, op.count)));
+                    out.push(Stmt::Op(Op::new(add, op.count)));
+                } else {
+                    out.push(s.clone());
+                }
+            }
+            Stmt::Loop { trips, body } => out.push(Stmt::Loop {
+                trips: *trips,
+                body: rewrite(body),
+            }),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::{self, *};
+    use crate::isa::ir::Traffic;
+    use crate::isa::mix::InstMix;
+    use crate::testutil::{forall, Rng};
+
+    fn jit_kernel(body: Vec<Stmt>) -> Kernel {
+        Kernel::new("k", 1000, 128).with_body(body)
+    }
+
+    #[test]
+    fn fused_policy_is_identity() {
+        let k = jit_kernel(vec![Stmt::op(Ffma, 7)]);
+        let out = apply_fmad(&k, FmadPolicy::Fused);
+        assert_eq!(out.body, k.body);
+    }
+
+    #[test]
+    fn decomposes_ffma_into_fmul_fadd() {
+        let k = jit_kernel(vec![Stmt::op(Ffma, 7)]);
+        let out = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(
+            out.body,
+            vec![Stmt::op(Fmul, 7), Stmt::op(Fadd, 7)]
+        );
+    }
+
+    #[test]
+    fn recurses_into_loops() {
+        let k = jit_kernel(vec![Stmt::looped(
+            4,
+            vec![Stmt::op(Dfma, 2), Stmt::op(Iadd, 1)],
+        )]);
+        let out = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(
+            out.body,
+            vec![Stmt::looped(
+                4,
+                vec![Stmt::op(Dmul, 2), Stmt::op(Dadd, 2), Stmt::op(Iadd, 1)],
+            )]
+        );
+    }
+
+    #[test]
+    fn lib_kernels_are_not_rewritten() {
+        // cuBLAS boundary: prebuilt binaries ignore the compile flag. This
+        // is the mechanism behind llama.cpp f16/f32 models showing no gain.
+        let k = jit_kernel(vec![Stmt::op(Ffma, 7)]).with_source(KernelSource::Lib);
+        let out = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(out.body, k.body);
+    }
+
+    #[test]
+    fn traffic_and_geometry_preserved() {
+        let k = jit_kernel(vec![Stmt::op(Hfma2, 3)])
+            .with_traffic(Traffic::coalesced(4096, 2048));
+        let out = apply_fmad(&k, FmadPolicy::Decomposed);
+        assert_eq!(out.threads, k.threads);
+        assert_eq!(out.block, k.block);
+        assert_eq!(out.traffic, k.traffic);
+    }
+
+    fn gen_body(rng: &mut Rng, depth: u32) -> Vec<Stmt> {
+        let classes: &[InstClass] = &[Ffma, Dfma, Hfma, Hfma2, Fmul, Fadd, Imad, Dp4a, Ldg, Stg];
+        let n = rng.range(1, 5);
+        (0..n)
+            .map(|_| {
+                if depth < 3 && rng.chance(0.35) {
+                    Stmt::looped(rng.range(1, 6), gen_body(rng, depth + 1))
+                } else {
+                    Stmt::op(*rng.pick(classes), rng.range(1, 20))
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_pass_preserves_flops_and_removes_fused() {
+        // Properties of the rewrite for arbitrary kernels:
+        //   1. FLOP count is invariant (it's a semantic-preserving rewrite);
+        //   2. the output contains zero fused-class instructions;
+        //   3. instruction count grows by exactly the fused count;
+        //   4. non-fused class counts are untouched.
+        forall(0xFADED, 300, |rng: &mut Rng| {
+            let k = jit_kernel(gen_body(rng, 0));
+            let before = InstMix::from_kernel(&k);
+            let after = InstMix::from_kernel(&apply_fmad(&k, FmadPolicy::Decomposed));
+            assert_eq!(before.flops(), after.flops());
+            assert_eq!(after.fused(), 0);
+            assert_eq!(after.total(), before.total() + before.fused());
+            for c in [Imad, Dp4a, Ldg, Stg] {
+                assert_eq!(before.get(c), after.get(c));
+            }
+        });
+    }
+
+    #[test]
+    fn prop_pass_is_idempotent() {
+        forall(0x1D, 200, |rng: &mut Rng| {
+            let k = jit_kernel(gen_body(rng, 0));
+            let once = apply_fmad(&k, FmadPolicy::Decomposed);
+            let twice = apply_fmad(&once, FmadPolicy::Decomposed);
+            assert_eq!(once.body, twice.body);
+        });
+    }
+}

@@ -1,0 +1,53 @@
+//! # cmphx — crippled-GPU co-design study platform
+//!
+//! Reproduction of *"Exploration of Cryptocurrency Mining-Specific GPUs in AI
+//! Applications: A Case Study of CMP 170HX"* (CS.AR 2025).
+//!
+//! The library models an Ampere-class GPU whose fused-multiply-add
+//! instruction classes are throttled by a hardware limiter (the NVIDIA CMP
+//! 170HX crippling mechanism), implements the community `-fmad=false`
+//! workaround as a real compiler pass over a small kernel IR, ports the
+//! paper's benchmark workloads (mixbench, OpenCL-Benchmark, GPU-Burn,
+//! PyTorch GEMM, llama-bench over Qwen2.5-1.5B in six ggml quant formats),
+//! and serves a real AOT-compiled tiny-Qwen model through a threaded
+//! coordinator backed by the PJRT CPU client.
+//!
+//! Layer map (see DESIGN.md):
+//! - **L3 (this crate)** — simulator substrate + serving coordinator + CLI.
+//! - **L2 (python/compile/model.py)** — JAX tiny-Qwen prefill/decode,
+//!   AOT-lowered once to `artifacts/*.hlo.txt`.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels (mixbench chain,
+//!   q8_0 quantized matmul, GQA decode attention) with pure-jnp oracles.
+//!
+//! Quick tour (`no_run` only because rustdoc's test binary misses the
+//! xla_extension rpath in this offline image; the same assertion runs in
+//! `bench::openclbench::tests` and `report::figures::tests`):
+//! ```no_run
+//! use cmphx::device::registry;
+//! use cmphx::bench::openclbench;
+//! use cmphx::isa::pass::FmadPolicy;
+//!
+//! let dev = registry::cmp170hx();
+//! let crippled = openclbench::peak_fp32(&dev, FmadPolicy::Fused).tflops();
+//! let restored = openclbench::peak_fp32(&dev, FmadPolicy::Decomposed).tflops();
+//! assert!(restored / crippled > 15.0); // the paper's headline
+//! ```
+
+pub mod bench;
+pub mod bench_harness;
+pub mod calibration;
+pub mod cli;
+pub mod coordinator;
+pub mod device;
+pub mod isa;
+pub mod llm;
+pub mod market;
+pub mod memhier;
+pub mod power;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod testutil;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,29 @@
+//! LLM inference performance model (§4 of the paper).
+//!
+//! Reproduces the llama-bench experiment: Qwen2.5-1.5B under the ggml
+//! framework in six quantization formats (f32, f16, q8_0, q6_k, q4_k_m,
+//! q2_k), measuring prefill (pp512, compute-bound), decode (tg128,
+//! bandwidth-bound) and token/W — on the CMP 170HX at both fmad policies,
+//! with the paper's A100-scaled theoretical overlays:
+//!
+//! - prefill theoretical: `u_d = u_o / o_sm · d_sm` (SM-count scaling)
+//! - decode theoretical:  `u_d = u_o / o_bw · d_bw` (bandwidth scaling)
+//!
+//! The per-quant kernel decomposition mirrors llama.cpp's CUDA backend:
+//! f32/f16 GEMMs dispatch to prebuilt cuBLAS ([`KernelSource::Lib`] — the
+//! fmad flag cannot bite, so those models show no noFMA gains), while
+//! quantized matmuls are JIT-compiled MMQ/MMVQ kernels mixing DP4A dot
+//! products (uncrippled) with per-block float scale math (FFMA — crippled
+//! by default, restored by `-fmad=false`). K-quants carry more scale math
+//! per weight, which is why the noFMA speedup *grows* as quantization gets
+//! more aggressive, peaking at Q2_K (231%, Graph 4-1).
+
+pub mod ablations;
+pub mod kernels;
+pub mod llamabench;
+pub mod model;
+pub mod quant;
+
+pub use llamabench::{BenchResult, LlamaBench};
+pub use model::ModelDesc;
+pub use quant::QuantFormat;

@@ -1,0 +1,177 @@
+//! Transformer model descriptions (§4.1).
+
+use super::quant::QuantFormat;
+
+/// Architecture description of a decoder-only transformer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelDesc {
+    pub name: &'static str,
+    pub layers: u32,
+    pub hidden: u32,
+    pub q_heads: u32,
+    pub kv_heads: u32,
+    pub head_dim: u32,
+    pub ffn: u32,
+    pub vocab: u32,
+    /// Embeddings tied (Qwen2.5-1.5B ties lm_head to tok_embeddings).
+    pub tied_embeddings: bool,
+    pub max_ctx: u32,
+}
+
+impl ModelDesc {
+    /// Qwen2.5-1.5B (§4.1): 28 layers, 12 Q heads / 2 KV heads (GQA),
+    /// hidden 1536, ffn 8960, vocab 151936, tied embeddings, 32k context.
+    pub fn qwen25_15b() -> Self {
+        ModelDesc {
+            name: "Qwen2.5-1.5B",
+            layers: 28,
+            hidden: 1536,
+            q_heads: 12,
+            kv_heads: 2,
+            head_dim: 128,
+            ffn: 8960,
+            vocab: 151936,
+            tied_embeddings: true,
+            max_ctx: 32768,
+        }
+    }
+
+    /// The tiny-Qwen the AOT artifacts implement (python/compile/model.py).
+    /// Same architecture family, laptop-scale dimensions.
+    pub fn tiny_qwen() -> Self {
+        ModelDesc {
+            name: "tiny-qwen",
+            layers: 4,
+            hidden: 256,
+            q_heads: 8,
+            kv_heads: 2,
+            head_dim: 32,
+            ffn: 704,
+            vocab: 512,
+            tied_embeddings: true,
+            max_ctx: 256,
+        }
+    }
+
+    /// Parameters in the attention + FFN + norm stacks (excluding
+    /// embeddings) — what §4.1 quotes as "1.31B excluding embeddings".
+    pub fn params_nonembed(&self) -> u64 {
+        let h = self.hidden as u64;
+        let qkv = h * (self.q_heads as u64 * self.head_dim as u64)
+            + 2 * h * (self.kv_heads as u64 * self.head_dim as u64)
+            // attention qkv bias (Qwen2 uses QKV bias)
+            + (self.q_heads as u64 + 2 * self.kv_heads as u64) * self.head_dim as u64;
+        let o = (self.q_heads as u64 * self.head_dim as u64) * h;
+        let ffn = 3 * h * self.ffn as u64;
+        let norms = 2 * h;
+        self.layers as u64 * (qkv + o + ffn + norms) + h // final norm
+    }
+
+    /// Embedding parameters (tied: counted once).
+    pub fn params_embed(&self) -> u64 {
+        self.hidden as u64 * self.vocab as u64
+    }
+
+    /// Total parameters (§4.1 quotes 1.54B).
+    pub fn params_total(&self) -> u64 {
+        self.params_nonembed() + self.params_embed()
+    }
+
+    /// Multiply-accumulates per generated/processed token through the
+    /// weight matrices (≈ params_nonembed; lm_head matvec added for decode,
+    /// where every step must produce logits).
+    pub fn macs_per_token(&self, include_lm_head: bool) -> u64 {
+        let mut macs = self.params_nonembed();
+        if include_lm_head {
+            macs += self.params_embed();
+        }
+        macs
+    }
+
+    /// Attention-score MACs per token at context length `ctx`
+    /// (QKᵀ + AV over GQA heads).
+    pub fn attn_macs_per_token(&self, ctx: u32) -> u64 {
+        2 * self.q_heads as u64 * self.head_dim as u64 * ctx as u64
+    }
+
+    /// KV-cache bytes per position (f16 K and V across layers).
+    pub fn kv_bytes_per_pos(&self) -> u64 {
+        2 * self.layers as u64 * self.kv_heads as u64 * self.head_dim as u64 * 2
+    }
+
+    /// Model weight bytes in a quant format (embeddings kept at f16 for
+    /// quantized formats, as ggml does).
+    pub fn weight_bytes(&self, quant: &QuantFormat) -> u64 {
+        let body = quant.bytes_for(self.params_nonembed());
+        let embed = if quant.bits_per_weight() >= 16.0 {
+            quant.bytes_for(self.params_embed())
+        } else {
+            // ggml stores token embeddings at q8/f16 class precision
+            self.params_embed()
+        };
+        body + embed
+    }
+
+    /// Can the model + a `ctx`-token KV cache live in `vram` bytes?
+    /// Overhead covers activations, the logits buffer and ggml's compute
+    /// workspace, which scales with context (attention score matrices).
+    pub fn fits(&self, quant: &QuantFormat, ctx: u32, vram: u64) -> bool {
+        let overhead = (512u64 << 20) + ctx as u64 * self.hidden as u64 * 4 * 16;
+        self.weight_bytes(quant) + self.kv_bytes_per_pos() * ctx as u64 + overhead <= vram
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::llm::quant;
+
+    #[test]
+    fn qwen_param_counts_match_the_model_card() {
+        // §4.1: 1.54B total, 1.31B excluding embeddings.
+        let m = ModelDesc::qwen25_15b();
+        let nonembed = m.params_nonembed() as f64 / 1e9;
+        let total = m.params_total() as f64 / 1e9;
+        assert!((nonembed - 1.31).abs() < 0.04, "{nonembed}");
+        assert!((total - 1.54).abs() < 0.04, "{total}");
+    }
+
+    #[test]
+    fn gqa_shrinks_kv_cache_sixfold() {
+        let m = ModelDesc::qwen25_15b();
+        // 28 layers × 2 (K,V) × 2 heads × 128 dim × 2 B = 28 KiB/pos.
+        assert_eq!(m.kv_bytes_per_pos(), 28 * 2 * 2 * 128 * 2);
+        // An MHA equivalent (12 kv heads) would be 6× bigger.
+        let mha = ModelDesc { kv_heads: 12, ..m };
+        assert_eq!(mha.kv_bytes_per_pos(), 6 * m.kv_bytes_per_pos());
+    }
+
+    #[test]
+    fn all_six_quants_fit_in_8gb_at_bench_context() {
+        // §4.1's premise: the 1.5B model fits in 8 GB for every format
+        // tested at llama-bench's default context.
+        let m = ModelDesc::qwen25_15b();
+        let vram = 8u64 << 30;
+        for q in quant::ALL {
+            assert!(m.fits(q, 640, vram), "{} should fit", q.name);
+        }
+        // but f32 does NOT fit at long context
+        assert!(!m.fits(&quant::F32, 32768, vram));
+    }
+
+    #[test]
+    fn decode_reads_lm_head_prefill_does_not() {
+        let m = ModelDesc::qwen25_15b();
+        assert!(m.macs_per_token(true) > m.macs_per_token(false));
+        assert_eq!(
+            m.macs_per_token(true) - m.macs_per_token(false),
+            m.params_embed()
+        );
+    }
+
+    #[test]
+    fn tiny_qwen_is_tiny() {
+        let t = ModelDesc::tiny_qwen();
+        assert!(t.params_total() < 5_000_000, "{}", t.params_total());
+    }
+}

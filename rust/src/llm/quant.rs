@@ -1,0 +1,178 @@
+//! ggml quantization formats (the six the paper benchmarks).
+//!
+//! Each format carries its storage cost and the instruction character of
+//! its CUDA matmul kernels. Bits-per-weight figures are the ggml block
+//! layouts: q8_0 = 32 weights + 1 f16 scale per block (34 B / 32 = 8.5
+//! bpw); k-quants use 256-weight super-blocks with nested scales.
+
+use crate::isa::ir::KernelSource;
+
+/// One ggml quantization format.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantFormat {
+    pub name: &'static str,
+    /// Effective bits per weight including scales/mins.
+    pub bits_per_weight_x1000: u32,
+    /// ggml block size (weights per scale block).
+    pub block: u32,
+    /// Where the matmul kernels come from: `Lib` (cuBLAS) for float
+    /// formats, `Jit` (MMQ/MMVQ) for quantized — the fmad boundary.
+    pub source: KernelSource,
+    /// Fused fp32 scale/accumulate ops per block in the prefill (MMQ)
+    /// kernel — the crippled/restorable fraction.
+    pub scale_fmas_per_block: f64,
+    /// Integer unpack ops (shifts/masks/adds) per block in MMQ.
+    pub unpack_iops_per_block: f64,
+    /// Fraction of decode (MMVQ) multiply-accumulates that run as fp32
+    /// FFMA rather than DP4A (super-block scale application, partial sums).
+    pub decode_float_frac: f64,
+}
+
+impl QuantFormat {
+    pub fn bits_per_weight(&self) -> f64 {
+        self.bits_per_weight_x1000 as f64 / 1000.0
+    }
+
+    /// Bytes to store `params` weights in this format.
+    pub fn bytes_for(&self, params: u64) -> u64 {
+        (params as f64 * self.bits_per_weight() / 8.0) as u64
+    }
+
+    /// Is this a k-quant (256-weight super-blocks)?
+    pub fn is_kquant(&self) -> bool {
+        self.block == 256
+    }
+
+    /// The float formats route through cuBLAS — fmad-immune.
+    pub fn fmad_immune(&self) -> bool {
+        self.source == KernelSource::Lib
+    }
+}
+
+/// f32 — full precision; GEMM via cuBLAS (Lib).
+pub const F32: QuantFormat = QuantFormat {
+    name: "f32",
+    bits_per_weight_x1000: 32_000,
+    block: 1,
+    source: KernelSource::Lib,
+    scale_fmas_per_block: 0.0,
+    unpack_iops_per_block: 0.0,
+    decode_float_frac: 1.0, // SGEMV: all-FFMA (crippled, and Lib: unfixable)
+};
+
+/// f16 — half precision; GEMM via cuBLAS HGEMM fallback (Lib).
+pub const F16: QuantFormat = QuantFormat {
+    name: "f16",
+    bits_per_weight_x1000: 16_000,
+    block: 1,
+    source: KernelSource::Lib,
+    scale_fmas_per_block: 0.0,
+    unpack_iops_per_block: 0.0,
+    decode_float_frac: 0.0, // HGEMV on the (uncrippled) scalar-half pipe
+};
+
+/// q8_0 — 32-weight blocks, one f16 scale.
+pub const Q8_0: QuantFormat = QuantFormat {
+    name: "q8_0",
+    bits_per_weight_x1000: 8_500,
+    block: 32,
+    source: KernelSource::Jit,
+    scale_fmas_per_block: 0.35,
+    unpack_iops_per_block: 4.0,
+    decode_float_frac: 0.22,
+};
+
+/// q6_k — 256-weight super-blocks, 16 6-bit sub-scales.
+pub const Q6_K: QuantFormat = QuantFormat {
+    name: "q6_k",
+    bits_per_weight_x1000: 6_562,
+    block: 256,
+    source: KernelSource::Jit,
+    scale_fmas_per_block: 4.5,
+    unpack_iops_per_block: 48.0,
+    decode_float_frac: 0.20,
+};
+
+/// q4_k_m — 256-weight super-blocks, 4-bit weights, 6-bit scales/mins.
+pub const Q4_K_M: QuantFormat = QuantFormat {
+    name: "q4_k_m",
+    bits_per_weight_x1000: 4_850,
+    block: 256,
+    source: KernelSource::Jit,
+    scale_fmas_per_block: 6.0,
+    unpack_iops_per_block: 56.0,
+    decode_float_frac: 0.18,
+};
+
+/// q2_k — 256-weight super-blocks, 2-bit weights, two-level scale tree:
+/// the most dequant math per weight of the six.
+pub const Q2_K: QuantFormat = QuantFormat {
+    name: "q2_k",
+    bits_per_weight_x1000: 2_625,
+    block: 256,
+    source: KernelSource::Jit,
+    scale_fmas_per_block: 10.0,
+    unpack_iops_per_block: 72.0,
+    decode_float_frac: 0.14,
+};
+
+/// The six formats in the paper's graph order.
+pub const ALL: &[QuantFormat] = &[F32, F16, Q8_0, Q6_K, Q4_K_M, Q2_K];
+
+/// Look up a format by name.
+pub fn by_name(name: &str) -> Option<QuantFormat> {
+    ALL.iter().copied().find(|q| q.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bpw_values_match_ggml_layouts() {
+        assert_eq!(F32.bits_per_weight(), 32.0);
+        assert_eq!(F16.bits_per_weight(), 16.0);
+        assert_eq!(Q8_0.bits_per_weight(), 8.5); // (32 + 2 bytes)/32 × 8
+        assert!((Q6_K.bits_per_weight() - 6.5625).abs() < 0.01);
+        assert!((Q2_K.bits_per_weight() - 2.625).abs() < 0.01);
+    }
+
+    #[test]
+    fn qwen_f32_does_not_fit_in_8gb_but_f16_does() {
+        // §4.1: the 1.5B model was chosen so all layers fit in 8 GB VRAM.
+        // (f32 weights are 6.2 GB — they fit, barely, with little room for
+        // context; f16 and below are comfortable.)
+        let params: u64 = 1_540_000_000;
+        assert!(F32.bytes_for(params) > 6_000_000_000);
+        assert!(F16.bytes_for(params) < 3_200_000_000);
+        assert!(Q2_K.bytes_for(params) < 600_000_000);
+    }
+
+    #[test]
+    fn scale_math_grows_as_quantization_deepens() {
+        // The mechanism behind Graph 4-1's noFMA speedup ordering: per
+        // weight, q2_k has the most crippled-class work.
+        let per_weight = |q: &QuantFormat| q.scale_fmas_per_block / q.block as f64;
+        assert!(per_weight(&Q2_K) > per_weight(&Q4_K_M));
+        assert!(per_weight(&Q4_K_M) > per_weight(&Q6_K));
+        assert!(per_weight(&Q6_K) > per_weight(&Q8_0));
+    }
+
+    #[test]
+    fn float_formats_are_fmad_immune() {
+        assert!(F32.fmad_immune() && F16.fmad_immune());
+        assert!(!Q8_0.fmad_immune() && !Q2_K.fmad_immune());
+    }
+
+    #[test]
+    fn kquants_use_superblocks() {
+        assert!(Q6_K.is_kquant() && Q4_K_M.is_kquant() && Q2_K.is_kquant());
+        assert!(!Q8_0.is_kquant());
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("q4_k_m").unwrap().name, "q4_k_m");
+        assert!(by_name("q3_k").is_none());
+    }
+}

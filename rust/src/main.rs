@@ -1,0 +1,24 @@
+//! `cmphx` — leader entrypoint.
+//!
+//! See `cmphx help` (cli::commands::HELP) for the command surface. The
+//! binary is self-contained once `make artifacts` has produced the AOT
+//! HLO bundle; Python never runs on the request path.
+
+use cmphx::cli::{run, Args};
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match run(&args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

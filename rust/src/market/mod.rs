@@ -1,0 +1,14 @@
+//! Market & reuse-economics models (§1.1.1, Appendix Ex.1, §6.2).
+//!
+//! - [`sales`] — the paper's CMP sales-volume estimation: split NVIDIA's
+//!   $550M FY2022 CMP revenue across the five models under three mix
+//!   scenarios and divide by estimated ASPs (Tables 1-1/1-2).
+//! - [`tco`] — reuse value: $/TFLOPS and $/(token/s) for refurbished CMP
+//!   cards against the A100 reference, plus fleet sizing for an edge
+//!   deployment (the §6.2 recommendation).
+
+pub mod sales;
+pub mod tco;
+
+pub use sales::{estimate_sales, SalesEstimate, Scenario};
+pub use tco::{fleet_for_throughput, FleetPlan, ReuseValue};

@@ -1,0 +1,137 @@
+//! Sales-volume estimation (Table 1-2, methodology in Appendix Ex.1).
+
+use crate::calibration as cal;
+
+/// A revenue-mix scenario: percentage of CMP revenue attributed to each of
+/// the five models (Table 1-1 row order: 30HX, 40HX, 50HX, 90HX, 170HX).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub shares_pct: [f64; 5],
+}
+
+impl Scenario {
+    pub fn a() -> Self {
+        Scenario { name: "A", shares_pct: cal::SCENARIO_A }
+    }
+    pub fn b() -> Self {
+        Scenario { name: "B", shares_pct: cal::SCENARIO_B }
+    }
+    pub fn c() -> Self {
+        Scenario { name: "C", shares_pct: cal::SCENARIO_C }
+    }
+    pub fn all() -> [Scenario; 3] {
+        [Self::a(), Self::b(), Self::c()]
+    }
+}
+
+/// Per-model sales estimate under one scenario.
+#[derive(Clone, Debug)]
+pub struct SalesEstimate {
+    pub scenario: &'static str,
+    /// `(model, asp_usd, estimated_units)` per Table 1-1 row.
+    pub rows: Vec<(&'static str, f64, f64)>,
+    pub total_units: f64,
+}
+
+/// Estimate unit sales: `units_i = revenue × share_i / asp_i` (Ex.1).
+pub fn estimate_sales(revenue_usd: f64, scenario: &Scenario) -> SalesEstimate {
+    assert!(
+        (scenario.shares_pct.iter().sum::<f64>() - 100.0).abs() < 1e-6,
+        "shares must sum to 100%"
+    );
+    let mut rows = Vec::with_capacity(5);
+    let mut total = 0.0;
+    for (i, &(model, asp, _)) in cal::TABLE_1_1.iter().enumerate() {
+        let units = revenue_usd * scenario.shares_pct[i] / 100.0 / asp;
+        rows.push((model, asp, units));
+        total += units;
+    }
+    SalesEstimate {
+        scenario: scenario.name,
+        rows,
+        total_units: total,
+    }
+}
+
+/// The paper's headline: hundreds of thousands of stranded cards.
+pub fn stranded_cards_min() -> f64 {
+    Scenario::all()
+        .iter()
+        .map(|s| estimate_sales(cal::CMP_REVENUE_USD, s).total_units)
+        .fold(f64::INFINITY, f64::min)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall, Rng};
+
+    #[test]
+    fn scenario_totals_match_table_1_2() {
+        for (scenario, (expected, rtol)) in
+            Scenario::all().iter().zip(cal::TABLE_1_2_TOTALS.iter())
+        {
+            let est = estimate_sales(cal::CMP_REVENUE_USD, scenario);
+            assert_close(est.total_units, *expected, *rtol);
+        }
+    }
+
+    #[test]
+    fn scenario_a_170hx_units_match_paper() {
+        // Table 1-2: CMP 170HX under scenario A ≈ 18,333 units.
+        let est = estimate_sales(cal::CMP_REVENUE_USD, &Scenario::a());
+        let (_, _, units) = est.rows[4];
+        assert_close(units, 18_333.0, 0.01);
+    }
+
+    #[test]
+    fn scenario_b_40hx_units_match_paper() {
+        // Table 1-2: CMP 40HX under scenario B ≈ 253,846 units.
+        let est = estimate_sales(cal::CMP_REVENUE_USD, &Scenario::b());
+        let (_, _, units) = est.rows[1];
+        assert_close(units, 253_846.0, 0.01);
+    }
+
+    #[test]
+    fn hundreds_of_thousands_stranded() {
+        // §1.1.1's conclusion.
+        assert!(stranded_cards_min() > 400_000.0);
+    }
+
+    #[test]
+    fn prop_sales_scale_linearly_with_revenue() {
+        forall(0x5A1E5, 100, |rng: &mut Rng| {
+            let rev = rng.f64_range(1e6, 1e10);
+            let s = Scenario::a();
+            let e1 = estimate_sales(rev, &s);
+            let e2 = estimate_sales(2.0 * rev, &s);
+            assert_close(e2.total_units, 2.0 * e1.total_units, 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_units_conserve_revenue() {
+        // Σ units_i × asp_i == revenue, for any valid mix.
+        forall(0xC0, 100, |rng: &mut Rng| {
+            let mut shares = [0.0f64; 5];
+            let mut rem = 100.0;
+            for i in 0..4 {
+                shares[i] = rng.f64_range(0.0, rem);
+                rem -= shares[i];
+            }
+            shares[4] = rem;
+            let s = Scenario { name: "rand", shares_pct: shares };
+            let est = estimate_sales(cal::CMP_REVENUE_USD, &s);
+            let back: f64 = est.rows.iter().map(|(_, asp, u)| asp * u).sum();
+            assert_close(back, cal::CMP_REVENUE_USD, 1e-9);
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_invalid_mix() {
+        let s = Scenario { name: "bad", shares_pct: [50.0; 5] };
+        estimate_sales(1e6, &s);
+    }
+}

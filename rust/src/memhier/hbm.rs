@@ -1,0 +1,153 @@
+//! Device-memory (HBM2e / GDDR) bandwidth model.
+//!
+//! The paper's central economic argument rests on the CMP 170HX *retaining*
+//! its full 1493 GB/s HBM2e system (Graph 3-5) — Ethash is bandwidth-bound,
+//! so NVIDIA could not throttle memory without destroying the card's mining
+//! value. We model achieved bandwidth as peak × a pattern-dependent
+//! efficiency, with L2 hits served at L2 bandwidth.
+
+use crate::isa::ir::MemPattern;
+
+/// Device memory system: capacity, peak bandwidth, pattern efficiencies and
+/// the L2 slice in front of it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemorySystem {
+    pub kind: &'static str,
+    pub capacity_bytes: u64,
+    /// Peak theoretical bandwidth, bytes/s (Table 2-3: 1493 GB/s).
+    pub peak_bw: f64,
+    /// Achieved fraction for fully coalesced streams (calibrated to Graph
+    /// 3-5's coalesced read/write ≈ 85–90% of peak).
+    pub coalesced_eff: f64,
+    /// Achieved fraction for misaligned access (Graph 3-5 shows a heavy
+    /// penalty: roughly half of coalesced).
+    pub misaligned_eff: f64,
+    /// Achieved fraction for strided gathers (quantized-weight walks).
+    pub strided_eff: f64,
+    /// L2 capacity (Table 2-2: 8 MB) and bandwidth multiple over HBM.
+    pub l2_bytes: u64,
+    pub l2_bw_mult: f64,
+}
+
+impl MemorySystem {
+    /// HBM2e system of the CMP 170HX (Table 2-3).
+    pub fn cmp170hx_hbm2e() -> Self {
+        MemorySystem {
+            kind: "HBM2e",
+            capacity_bytes: 8 * (1u64 << 30),
+            peak_bw: 1493.0e9,
+            coalesced_eff: 0.88,
+            misaligned_eff: 0.45,
+            strided_eff: 0.62,
+            l2_bytes: 8 * (1 << 20),
+            l2_bw_mult: 3.0,
+        }
+    }
+
+    /// A100 40GB PCIe (paper's §4 reference: 1555 GB/s).
+    pub fn a100_hbm2e() -> Self {
+        MemorySystem {
+            kind: "HBM2e",
+            capacity_bytes: 40 * (1u64 << 30),
+            peak_bw: 1555.0e9,
+            coalesced_eff: 0.88,
+            misaligned_eff: 0.45,
+            strided_eff: 0.62,
+            l2_bytes: 40 * (1 << 20),
+            l2_bw_mult: 3.0,
+        }
+    }
+
+    /// Generic GDDR6 system for the smaller CMP family entries.
+    pub fn gddr6(capacity_gb: u64, peak_gbps: f64) -> Self {
+        MemorySystem {
+            kind: "GDDR6",
+            capacity_bytes: capacity_gb * (1 << 30),
+            peak_bw: peak_gbps * 1e9,
+            coalesced_eff: 0.85,
+            misaligned_eff: 0.40,
+            strided_eff: 0.55,
+            l2_bytes: 4 * (1 << 20),
+            l2_bw_mult: 2.5,
+        }
+    }
+
+    /// Achieved bandwidth (bytes/s) for an access pattern.
+    pub fn achieved_bw(&self, pattern: MemPattern) -> f64 {
+        let eff = match pattern {
+            MemPattern::Coalesced => self.coalesced_eff,
+            MemPattern::Misaligned => self.misaligned_eff,
+            MemPattern::Strided => self.strided_eff,
+        };
+        self.peak_bw * eff
+    }
+
+    /// Time to move `hbm_bytes` from HBM plus `l2_bytes` from L2, for a
+    /// given pattern. L2 traffic rides the faster slice; the two phases are
+    /// pipelined so we take the max of (HBM time, L2 time) rather than the
+    /// sum.
+    pub fn transfer_time(&self, hbm_bytes: f64, l2_bytes: f64, pattern: MemPattern) -> f64 {
+        let hbm_t = hbm_bytes / self.achieved_bw(pattern);
+        let l2_t = l2_bytes / (self.achieved_bw(pattern) * self.l2_bw_mult);
+        hbm_t.max(l2_t)
+    }
+
+    /// Does a resident working set of `bytes` fit in device memory?
+    pub fn fits(&self, bytes: u64) -> bool {
+        bytes <= self.capacity_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn cmp_memory_matches_table_2_3() {
+        let m = MemorySystem::cmp170hx_hbm2e();
+        assert_eq!(m.capacity_bytes, 8 << 30);
+        assert_close(m.peak_bw, 1.493e12, 1e-9);
+        assert_eq!(m.l2_bytes, 8 << 20);
+    }
+
+    #[test]
+    fn coalesced_beats_misaligned_beats_nothing() {
+        let m = MemorySystem::cmp170hx_hbm2e();
+        use MemPattern::*;
+        assert!(m.achieved_bw(Coalesced) > m.achieved_bw(Strided));
+        assert!(m.achieved_bw(Strided) > m.achieved_bw(Misaligned));
+    }
+
+    #[test]
+    fn cmp_retains_a100_class_bandwidth() {
+        // The paper's pivotal observation: 1493/1555 ≈ 96% of A100.
+        let cmp = MemorySystem::cmp170hx_hbm2e();
+        let a100 = MemorySystem::a100_hbm2e();
+        let ratio = cmp.peak_bw / a100.peak_bw;
+        assert!(ratio > 0.95 && ratio < 0.97, "{ratio}");
+    }
+
+    #[test]
+    fn transfer_time_is_linear_in_bytes() {
+        let m = MemorySystem::cmp170hx_hbm2e();
+        let t1 = m.transfer_time(1e9, 0.0, MemPattern::Coalesced);
+        let t2 = m.transfer_time(2e9, 0.0, MemPattern::Coalesced);
+        assert_close(t2 / t1, 2.0, 1e-12);
+    }
+
+    #[test]
+    fn l2_traffic_is_cheaper_than_hbm() {
+        let m = MemorySystem::cmp170hx_hbm2e();
+        let hbm = m.transfer_time(1e9, 0.0, MemPattern::Coalesced);
+        let l2 = m.transfer_time(0.0, 1e9, MemPattern::Coalesced);
+        assert!(l2 < hbm);
+    }
+
+    #[test]
+    fn capacity_check() {
+        let m = MemorySystem::cmp170hx_hbm2e();
+        assert!(m.fits(7 << 30));
+        assert!(!m.fits(9 << 30)); // Qwen2.5-1.5B f32 wouldn't fit either
+    }
+}

@@ -1,0 +1,85 @@
+//! L2 working-set model: estimate the hit rate a kernel's reads see, given
+//! its resident working set vs the L2 capacity.
+//!
+//! The timing engine uses this to split read traffic between HBM and the L2
+//! slice. The model is deliberately simple — a saturating-reuse curve — but
+//! it captures the two cases that matter for the paper's workloads:
+//! streaming kernels (working set ≫ L2, hit rate → 0, e.g. membench and
+//! decode weight reads) and blocked GEMMs (tiles resident, hit rate high
+//! for the reused operand).
+
+/// Estimate an L2 hit rate for a kernel that reads `unique_bytes` of
+/// distinct data `reuse` times each (reuse = total reads / unique bytes).
+///
+/// - If the unique set fits in L2, all re-reads hit: hit = (reuse-1)/reuse.
+/// - If it doesn't fit, only the resident fraction of re-reads hit.
+pub fn hit_rate(unique_bytes: u64, reuse: f64, l2_bytes: u64) -> f64 {
+    assert!(reuse >= 1.0, "reuse must be >= 1, got {reuse}");
+    if unique_bytes == 0 {
+        return 0.0;
+    }
+    let resident = (l2_bytes as f64 / unique_bytes as f64).min(1.0);
+    let rereads = (reuse - 1.0) / reuse; // fraction of reads that are re-reads
+    rereads * resident
+}
+
+/// Convenience: hit rate for a streaming kernel (each byte touched once).
+pub fn streaming() -> f64 {
+    0.0
+}
+
+/// Hit rate for a blocked GEMM where one operand tile of `tile_bytes` is
+/// reused `reuse` times from L2.
+pub fn blocked_gemm(tile_bytes: u64, reuse: f64, l2_bytes: u64) -> f64 {
+    hit_rate(tile_bytes, reuse, l2_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall, Rng};
+
+    const L2: u64 = 8 << 20;
+
+    #[test]
+    fn single_touch_never_hits() {
+        assert_eq!(hit_rate(1 << 30, 1.0, L2), 0.0);
+        assert_eq!(streaming(), 0.0);
+    }
+
+    #[test]
+    fn resident_set_hits_on_rereads() {
+        // 1 MB set read 4 times: 3/4 of reads are re-reads, all hit.
+        assert_close(hit_rate(1 << 20, 4.0, L2), 0.75, 1e-12);
+    }
+
+    #[test]
+    fn oversized_set_hits_proportionally() {
+        // 16 MB set in an 8 MB L2: half the re-reads hit.
+        assert_close(hit_rate(16 << 20, 2.0, L2), 0.5 * 0.5, 1e-12);
+    }
+
+    #[test]
+    fn prop_hit_rate_bounded_and_monotone_in_reuse() {
+        forall(0x12, 300, |rng: &mut Rng| {
+            let unique = rng.range(1, 1 << 34);
+            let r1 = rng.f64_range(1.0, 64.0);
+            let r2 = r1 + rng.f64_range(0.0, 64.0);
+            let h1 = hit_rate(unique, r1, L2);
+            let h2 = hit_rate(unique, r2, L2);
+            assert!((0.0..=1.0).contains(&h1));
+            assert!(h2 >= h1 - 1e-12, "more reuse must not lower hit rate");
+        });
+    }
+
+    #[test]
+    fn prop_hit_rate_monotone_in_l2_size() {
+        forall(0x13, 300, |rng: &mut Rng| {
+            let unique = rng.range(1, 1 << 34);
+            let reuse = rng.f64_range(1.0, 16.0);
+            let small = hit_rate(unique, reuse, 4 << 20);
+            let large = hit_rate(unique, reuse, 40 << 20);
+            assert!(large >= small - 1e-12);
+        });
+    }
+}

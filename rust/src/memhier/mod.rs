@@ -1,0 +1,11 @@
+//! Memory-system models: HBM2e/GDDR bandwidth with access-pattern derating,
+//! an L2 working-set model, and the PCIe host link (including the CMP
+//! 170HX's x4-gen1 restriction and the paper's Ex.2.2 "populate the
+//! coupling capacitors" x16 mod).
+
+pub mod hbm;
+pub mod l2;
+pub mod pcie;
+
+pub use hbm::MemorySystem;
+pub use pcie::{PcieGen, PcieLink};

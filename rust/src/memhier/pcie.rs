@@ -1,0 +1,167 @@
+//! PCIe host-link model.
+//!
+//! The CMP 170HX ships with a **PCIe 1.1 x4** electrical interface (Table
+//! 2-1) — mining needs almost no host bandwidth, so NVIDIA depopulated the
+//! coupling capacitors. Appendix Ex.2.2 notes the x16 pads exist and could
+//! be repopulated; [`PcieLink::with_lanes`] models that mod. The test
+//! platform itself connects through OCuLink (§2.2), which caps at x4 — the
+//! model composes both ends by taking the min.
+
+/// PCIe generation: per-lane raw rate and encoding overhead.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PcieGen {
+    Gen1,
+    Gen2,
+    Gen3,
+    Gen4,
+}
+
+impl PcieGen {
+    /// Raw per-lane signalling rate, GT/s.
+    pub fn gtps(self) -> f64 {
+        match self {
+            PcieGen::Gen1 => 2.5,
+            PcieGen::Gen2 => 5.0,
+            PcieGen::Gen3 => 8.0,
+            PcieGen::Gen4 => 16.0,
+        }
+    }
+
+    /// Encoding efficiency (8b/10b for gen1/2, 128b/130b after).
+    pub fn encoding_eff(self) -> f64 {
+        match self {
+            PcieGen::Gen1 | PcieGen::Gen2 => 0.8,
+            PcieGen::Gen3 | PcieGen::Gen4 => 128.0 / 130.0,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PcieGen::Gen1 => "1.1",
+            PcieGen::Gen2 => "2.0",
+            PcieGen::Gen3 => "3.0",
+            PcieGen::Gen4 => "4.0",
+        }
+    }
+}
+
+/// A host link: generation × lane count, with protocol efficiency for
+/// payload transfers (TLP headers, flow control ≈ 80–85% of line rate).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PcieLink {
+    pub gen: PcieGen,
+    pub lanes: u32,
+    /// Payload fraction of line rate after TLP/DLLP overhead.
+    pub protocol_eff: f64,
+}
+
+impl PcieLink {
+    pub fn new(gen: PcieGen, lanes: u32) -> Self {
+        PcieLink {
+            gen,
+            lanes,
+            protocol_eff: 0.82,
+        }
+    }
+
+    /// The CMP 170HX's stock link (Table 2-1).
+    pub fn cmp170hx_stock() -> Self {
+        Self::new(PcieGen::Gen1, 4)
+    }
+
+    /// Ex.2.2's capacitor mod: same gen, x16 lanes.
+    pub fn cmp170hx_x16_mod() -> Self {
+        Self::new(PcieGen::Gen1, 16)
+    }
+
+    /// Change lane count (returns a new link).
+    pub fn with_lanes(mut self, lanes: u32) -> Self {
+        self.lanes = lanes;
+        self
+    }
+
+    /// Theoretical unidirectional bandwidth, bytes/s (line rate × encoding).
+    pub fn theoretical_bw(&self) -> f64 {
+        self.gen.gtps() * 1e9 * self.gen.encoding_eff() * self.lanes as f64 / 8.0
+    }
+
+    /// Achieved unidirectional payload bandwidth, bytes/s.
+    pub fn achieved_bw(&self) -> f64 {
+        self.theoretical_bw() * self.protocol_eff
+    }
+
+    /// Achieved bidirectional aggregate (full duplex).
+    pub fn bidir_bw(&self) -> f64 {
+        2.0 * self.achieved_bw()
+    }
+
+    /// Time to move `bytes` one way, including a fixed DMA setup latency.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        const DMA_SETUP_S: f64 = 10e-6;
+        DMA_SETUP_S + bytes as f64 / self.achieved_bw()
+    }
+
+    /// Compose with the host-side link (OCuLink adapter): the narrower and
+    /// slower of the two ends governs.
+    pub fn through(&self, host: &PcieLink) -> PcieLink {
+        let gen = if self.gen.gtps() <= host.gen.gtps() { self.gen } else { host.gen };
+        PcieLink {
+            gen,
+            lanes: self.lanes.min(host.lanes),
+            protocol_eff: self.protocol_eff.min(host.protocol_eff),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn stock_link_is_about_one_gbps() {
+        // PCIe 1.1 x4: 2.5 GT/s × 0.8 × 4 / 8 = 1.0 GB/s theoretical —
+        // matching Graph EX.2's theoretical line.
+        let l = PcieLink::cmp170hx_stock();
+        assert_close(l.theoretical_bw(), 1.0e9, 1e-9);
+        assert!(l.achieved_bw() < 1.0e9 && l.achieved_bw() > 0.75e9);
+    }
+
+    #[test]
+    fn x16_mod_quadruples_bandwidth() {
+        let stock = PcieLink::cmp170hx_stock();
+        let modded = PcieLink::cmp170hx_x16_mod();
+        assert_close(modded.theoretical_bw() / stock.theoretical_bw(), 4.0, 1e-12);
+    }
+
+    #[test]
+    fn bidir_is_double_unidir() {
+        let l = PcieLink::cmp170hx_stock();
+        assert_close(l.bidir_bw(), 2.0 * l.achieved_bw(), 1e-12);
+    }
+
+    #[test]
+    fn through_oculink_takes_the_min() {
+        // x16 card through an x4 OCuLink gen4 host: lanes limited by host,
+        // gen limited by the card.
+        let card = PcieLink::cmp170hx_x16_mod();
+        let host = PcieLink::new(PcieGen::Gen4, 4);
+        let eff = card.through(&host);
+        assert_eq!(eff.lanes, 4);
+        assert_eq!(eff.gen, PcieGen::Gen1);
+    }
+
+    #[test]
+    fn transfer_time_includes_setup() {
+        let l = PcieLink::cmp170hx_stock();
+        assert!(l.transfer_time(0) >= 10e-6);
+        let big = l.transfer_time(1 << 30);
+        assert!(big > 1.0, "1 GiB over ~0.8 GB/s takes over a second: {big}");
+    }
+
+    #[test]
+    fn gen3_uses_128b130b() {
+        assert!(PcieGen::Gen3.encoding_eff() > 0.98);
+        assert_close(PcieGen::Gen1.encoding_eff(), 0.8, 1e-12);
+    }
+}

@@ -1,0 +1,17 @@
+//! Power/energy model and an `nvidia-smi`-like sampler.
+//!
+//! §4.4 measures decode token/W with nvidia-smi during inference. Our model:
+//! board power = static floor + dynamic compute power (per-pipe activity ×
+//! energy/op) + memory power (bytes/s × energy/byte), clipped to TDP by a
+//! DVFS derate that also slows the kernel (GPU-Burn sits exactly at TDP).
+//!
+//! Energy coefficients are calibrated so that (a) a compute-saturated FP32
+//! kernel on healthy GA100 silicon sits at TDP, (b) a bandwidth-saturated
+//! decode sits at ~200 W of the 250 W TDP — the regime where the paper finds
+//! CMP token/W ≈ A100 token/W.
+
+pub mod model;
+pub mod sampler;
+
+pub use model::{PowerBreakdown, PowerModel};
+pub use sampler::PowerSampler;

@@ -1,0 +1,171 @@
+//! Board power model.
+
+/// Energy coefficients for a device. All energies in joules.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerModel {
+    /// Idle/static floor, W (fans, HBM refresh, leakage).
+    pub static_w: f64,
+    /// Energy per scalar FLOP-equivalent issue slot, J. FMA and MUL+ADD
+    /// burn nearly the same energy per *FLOP*; the limiter does not reduce
+    /// energy, only rate — which is why noFMA *hurts* token/W (§4.4).
+    pub energy_per_flop: f64,
+    /// Extra energy per *instruction* (fetch/decode/operand collect), J.
+    /// The noFMA path doubles instruction count, so it pays this twice per
+    /// fused-op-equivalent — the mechanism behind the Q6/Q4/Q2 efficiency
+    /// drop in Graph 4-3.
+    pub energy_per_inst: f64,
+    /// Energy per byte moved at the HBM pins, J.
+    pub energy_per_byte: f64,
+}
+
+impl PowerModel {
+    /// GA100-class coefficients (calibrated per module docs).
+    pub fn ga100() -> Self {
+        PowerModel {
+            static_w: 55.0,
+            // ~19.5 TFLOPS FP32 sustained at ≈160 W dynamic compute on A100
+            // → ~8.2 pJ/FLOP; round for the 7 nm class. Callers weight this
+            // per instruction class (InstClass::energy_weight) so packed-
+            // half / dp4a / tensor work burns proportionally less.
+            energy_per_flop: 8.0e-12,
+            energy_per_inst: 5.0e-12,
+            // HBM2e ≈ 60–65 pJ/byte at the pins + controller.
+            energy_per_byte: 62.0e-12,
+        }
+    }
+
+    /// Older 16 nm-class silicon (for historical registry entries).
+    pub fn pascal() -> Self {
+        PowerModel {
+            static_w: 30.0,
+            energy_per_flop: 18.0e-12,
+            energy_per_inst: 11.0e-12,
+            energy_per_byte: 80.0e-12,
+        }
+    }
+
+    /// Average board power for an activity described by totals over a
+    /// duration: `flops` FLOPs, `insts` instructions, `bytes` HBM bytes in
+    /// `seconds`. Uncapped (see [`PowerModel::board_power`]).
+    pub fn raw_power(&self, flops: f64, insts: f64, bytes: f64, seconds: f64) -> PowerBreakdown {
+        assert!(seconds > 0.0);
+        let compute_w = (flops * self.energy_per_flop + insts * self.energy_per_inst) / seconds;
+        let mem_w = bytes * self.energy_per_byte / seconds;
+        PowerBreakdown {
+            static_w: self.static_w,
+            compute_w,
+            mem_w,
+        }
+    }
+
+    /// Board power clipped to `tdp_w`, returning `(power_w, derate)` where
+    /// `derate ≥ 1` is the slowdown factor DVFS imposes to stay inside the
+    /// power envelope (time stretches by `derate`, power settles at TDP).
+    pub fn board_power(
+        &self,
+        flops: f64,
+        insts: f64,
+        bytes: f64,
+        seconds: f64,
+        tdp_w: f64,
+    ) -> (f64, f64) {
+        let raw = self.raw_power(flops, insts, bytes, seconds).total();
+        if raw <= tdp_w {
+            (raw, 1.0)
+        } else {
+            // Dynamic power scales ~linearly with clock at fixed work rate;
+            // stretch time until total == TDP.
+            let dynamic = raw - self.static_w;
+            let budget = tdp_w - self.static_w;
+            let derate = dynamic / budget;
+            (tdp_w, derate)
+        }
+    }
+}
+
+/// Power decomposition, W.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerBreakdown {
+    pub static_w: f64,
+    pub compute_w: f64,
+    pub mem_w: f64,
+}
+
+impl PowerBreakdown {
+    pub fn total(&self) -> f64 {
+        self.static_w + self.compute_w + self.mem_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall, Rng};
+
+    #[test]
+    fn idle_device_draws_static_floor() {
+        let m = PowerModel::ga100();
+        let p = m.raw_power(0.0, 0.0, 0.0, 1.0);
+        assert_close(p.total(), m.static_w, 1e-12);
+    }
+
+    #[test]
+    fn a100_fp32_saturation_sits_near_tdp() {
+        // 19.5 TFLOPS of FMA for 1 s: 19.5e12 FLOPs, 9.75e12 insts.
+        let m = PowerModel::ga100();
+        let p = m.raw_power(19.5e12, 9.75e12, 0.0, 1.0);
+        assert!(
+            p.total() > 230.0 && p.total() < 320.0,
+            "saturated FP32 should sit near the 250–300 W class: {}",
+            p.total()
+        );
+    }
+
+    #[test]
+    fn bandwidth_bound_decode_sits_below_tdp() {
+        // Streaming 1.3 TB/s with modest compute: the §4.4 decode regime.
+        let m = PowerModel::ga100();
+        let p = m.raw_power(1.0e12, 0.6e12, 1.31e12, 1.0);
+        assert!(
+            p.total() > 140.0 && p.total() < 250.0,
+            "decode should sit in the 150–250 W band: {}",
+            p.total()
+        );
+    }
+
+    #[test]
+    fn tdp_clipping_derates() {
+        let m = PowerModel::ga100();
+        let (p, derate) = m.board_power(40e12, 20e12, 0.0, 1.0, 250.0);
+        assert_close(p, 250.0, 1e-9);
+        assert!(derate > 1.0);
+        // And within budget → no derate.
+        let (p2, d2) = m.board_power(1e12, 0.5e12, 0.0, 1.0, 250.0);
+        assert!(p2 < 250.0);
+        assert_close(d2, 1.0, 1e-12);
+    }
+
+    #[test]
+    fn nofma_same_flops_more_insts_draws_more_energy() {
+        // Decomposition keeps FLOPs but doubles instruction count → higher
+        // energy per unit work → lower token/W. This is Graph 4-3's dip.
+        let m = PowerModel::ga100();
+        let fused = m.raw_power(10e12, 5e12, 0.0, 1.0).total();
+        let unfused = m.raw_power(10e12, 10e12, 0.0, 1.0).total();
+        assert!(unfused > fused);
+    }
+
+    #[test]
+    fn prop_power_monotone_in_all_activity() {
+        forall(0x50AB, 200, |rng: &mut Rng| {
+            let m = PowerModel::ga100();
+            let f = rng.f64_range(0.0, 2e13);
+            let i = rng.f64_range(0.0, 1e13);
+            let b = rng.f64_range(0.0, 2e12);
+            let base = m.raw_power(f, i, b, 1.0).total();
+            assert!(m.raw_power(f * 1.5, i, b, 1.0).total() >= base);
+            assert!(m.raw_power(f, i * 1.5, b, 1.0).total() >= base);
+            assert!(m.raw_power(f, i, b * 1.5, 1.0).total() >= base);
+        });
+    }
+}

@@ -1,0 +1,116 @@
+//! `nvidia-smi`-style power sampler.
+//!
+//! The paper records power with nvidia-smi polling during llama-bench runs
+//! (§4.4). This sampler accumulates (power, duration) observations from the
+//! timing engine and reports the same statistics a polling loop would:
+//! time-weighted mean, peak, and total energy.
+
+/// Accumulates power observations weighted by duration.
+#[derive(Clone, Debug, Default)]
+pub struct PowerSampler {
+    samples: Vec<(f64, f64)>, // (watts, seconds)
+}
+
+impl PowerSampler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `watts` sustained for `seconds`.
+    pub fn record(&mut self, watts: f64, seconds: f64) {
+        assert!(watts >= 0.0 && seconds >= 0.0);
+        if seconds > 0.0 {
+            self.samples.push((watts, seconds));
+        }
+    }
+
+    /// Total wall time observed.
+    pub fn elapsed(&self) -> f64 {
+        self.samples.iter().map(|(_, s)| s).sum()
+    }
+
+    /// Total energy, joules.
+    pub fn energy_j(&self) -> f64 {
+        self.samples.iter().map(|(w, s)| w * s).sum()
+    }
+
+    /// Time-weighted mean power, W (what nvidia-smi averaging reports).
+    pub fn mean_w(&self) -> f64 {
+        let t = self.elapsed();
+        if t == 0.0 {
+            0.0
+        } else {
+            self.energy_j() / t
+        }
+    }
+
+    /// Peak observed power, W.
+    pub fn peak_w(&self) -> f64 {
+        self.samples.iter().map(|(w, _)| *w).fold(0.0, f64::max)
+    }
+
+    /// Work-per-energy figure of merit: `units` of work (e.g. tokens) over
+    /// the observed window → units per joule. `tokens/W` at steady state is
+    /// `units / elapsed / mean_w = units / energy`... × 1s; we report
+    /// units/s/W which equals units/J.
+    pub fn per_watt(&self, units: f64) -> f64 {
+        let e = self.energy_j();
+        if e == 0.0 {
+            0.0
+        } else {
+            units / e
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.samples.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_close;
+
+    #[test]
+    fn mean_is_time_weighted() {
+        let mut s = PowerSampler::new();
+        s.record(100.0, 3.0);
+        s.record(200.0, 1.0);
+        assert_close(s.mean_w(), (300.0 + 200.0) / 4.0, 1e-12);
+        assert_close(s.peak_w(), 200.0, 1e-12);
+        assert_close(s.energy_j(), 500.0, 1e-12);
+    }
+
+    #[test]
+    fn empty_sampler_reports_zero() {
+        let s = PowerSampler::new();
+        assert_eq!(s.mean_w(), 0.0);
+        assert_eq!(s.energy_j(), 0.0);
+        assert_eq!(s.per_watt(100.0), 0.0);
+    }
+
+    #[test]
+    fn tokens_per_watt_equals_tokens_per_joule() {
+        let mut s = PowerSampler::new();
+        s.record(250.0, 2.0); // 500 J
+        // 1000 tokens in 2 s at 250 W → (1000/2)/250 = 2 tokens/s/W = 1000/500.
+        assert_close(s.per_watt(1000.0), 2.0, 1e-12);
+    }
+
+    #[test]
+    fn zero_duration_samples_ignored() {
+        let mut s = PowerSampler::new();
+        s.record(500.0, 0.0);
+        assert_eq!(s.elapsed(), 0.0);
+        assert_eq!(s.peak_w(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let mut s = PowerSampler::new();
+        s.record(100.0, 1.0);
+        s.reset();
+        assert_eq!(s.energy_j(), 0.0);
+    }
+}

@@ -1,0 +1,360 @@
+//! One generator per paper graph/table.
+
+use crate::bench::{gpuburn, membench, mixbench, openclbench, pciebench, torchgemm, Precision};
+use crate::bench_harness::{Row, Table};
+use crate::calibration as cal;
+use crate::device::{registry, DeviceSpec};
+use crate::isa::pass::FmadPolicy;
+use crate::llm::llamabench::LlamaBench;
+use crate::llm::quant;
+use crate::market::sales::{estimate_sales, Scenario};
+
+fn flops_suite(dev: &DeviceSpec, precision: Precision, title: &str, unit: &'static str) -> Table {
+    let mut t = Table::new(title, unit);
+    let integer = precision.integer();
+    let value = |r: &crate::bench::ToolResult| if integer { r.tiops() } else { r.tflops() };
+
+    let torch = torchgemm::run(dev, precision);
+    t.push(Row::new(format!("PyTorch-CUDA"), value(&torch)));
+    for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+        let ocl = openclbench::peak(dev, precision, policy);
+        t.push(Row::new(
+            format!("OpenCL-benchmark ({})", policy.name()),
+            value(&ocl),
+        ));
+        let mb = mixbench::peak(dev, precision, policy);
+        t.push(Row::new(
+            format!("Mixbench-CUDA ({})", policy.name()),
+            value(&mb),
+        ));
+    }
+    let burn = gpuburn::run(dev, precision);
+    t.push(Row::new("GPU-Burn-CUDA", value(&burn)));
+    t
+}
+
+/// Graph 3-1 — FP32 TFLOPS across the six tool/policy bars.
+pub fn graph_3_1() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = flops_suite(&dev, Precision::Fp32, "Graph 3-1: CMP 170HX FP32", "TFLOPS");
+    // attach paper values to the canonical bars
+    for r in t.rows.iter_mut() {
+        if r.label.contains("default") || r.label.contains("PyTorch") || r.label.contains("Burn") {
+            r.paper = Some(cal::FP32_DEFAULT_TFLOPS.value);
+        } else if r.label.contains("noFMA") {
+            r.paper = Some(cal::FP32_NOFMA_TFLOPS.value);
+        }
+    }
+    t.push(
+        Row::new("Theoretical Perf.", dev.fp32_tflops())
+            .paper(cal::FP32_THEORETICAL_TFLOPS.value),
+    );
+    t
+}
+
+/// Graph 3-2 — FP16: the half2 tools against the scalar-half tools.
+pub fn graph_3_2() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = Table::new("Graph 3-2: CMP 170HX FP16", "TFLOPS");
+    t.push(
+        Row::new("PyTorch-CUDA (scalar half)", torchgemm::run(&dev, Precision::Fp16Scalar).tflops())
+            .paper(cal::FP16_SCALAR_TFLOPS.value),
+    );
+    for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+        t.push(
+            Row::new(
+                format!("OpenCL-benchmark half2 ({})", policy.name()),
+                openclbench::peak(&dev, Precision::Fp16Half2, policy).tflops(),
+            )
+            .paper(cal::FP16_HALF2_TFLOPS.value),
+        );
+        t.push(Row::new(
+            format!("Mixbench-CUDA half2 ({})", policy.name()),
+            mixbench::peak(&dev, Precision::Fp16Half2, policy).tflops(),
+        ));
+    }
+    t.push(
+        Row::new("GPU-Burn-CUDA (scalar half)", gpuburn::run(&dev, Precision::Fp16Scalar).tflops())
+            .paper(cal::FP16_SCALAR_TFLOPS.value),
+    );
+    t.push(
+        Row::new("Theoretical Perf.", dev.fp16_tflops()).paper(cal::FP16_THEORETICAL_TFLOPS.value),
+    );
+    t
+}
+
+/// Graph 3-3 — FP64.
+pub fn graph_3_3() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = flops_suite(&dev, Precision::Fp64, "Graph 3-3: CMP 170HX FP64", "TFLOPS");
+    for r in t.rows.iter_mut() {
+        if r.label.contains("default") || r.label.contains("PyTorch") || r.label.contains("Burn") {
+            r.paper = Some(cal::FP64_DEFAULT_TFLOPS.value);
+        } else if r.label.contains("noFMA") {
+            r.paper = Some(cal::FP64_NOFMA_TFLOPS.value);
+            r.note = "noFMA makes FP64 *worse*".into();
+        }
+    }
+    t.push(
+        Row::new("Theoretical Perf.", dev.fp64_tflops()).paper(cal::FP64_THEORETICAL_TFLOPS.value),
+    );
+    t
+}
+
+/// Graph 3-4 — INT32 TIOPs.
+pub fn graph_3_4() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = Table::new("Graph 3-4: CMP 170HX INT32", "TIOPs");
+    t.push(
+        Row::new(
+            "OpenCL-benchmark",
+            openclbench::peak(&dev, Precision::Int32, FmadPolicy::Fused).tiops(),
+        )
+        .paper(cal::INT32_OPENCL_TIOPS.value),
+    );
+    t.push(
+        Row::new(
+            "Mixbench-CUDA",
+            mixbench::peak(&dev, Precision::Int32, FmadPolicy::Fused).tiops(),
+        )
+        .paper(cal::INT32_CUDA_TIOPS.value)
+        .note("lower launch pressure (§3.4)"),
+    );
+    t.push(Row::new(
+        "Theoretical Perf.",
+        dev.theoretical_class_rate(crate::isa::InstClass::Imad),
+    ));
+    t
+}
+
+/// Graph 3-5 — memory bandwidth.
+pub fn graph_3_5() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = Table::new("Graph 3-5: CMP 170HX memory bandwidth", "GB/s");
+    for r in membench::graph_3_5(&dev) {
+        let mut row = Row::new(r.case.clone(), r.gbps());
+        if r.case.contains("read") && r.case.contains("Coalesced") {
+            row = row.paper(cal::MEMBW_COALESCED_GBPS.value);
+        }
+        t.push(row);
+    }
+    t.push(
+        Row::new("Theoretical Perf.", dev.mem.peak_bw / 1e9)
+            .paper(cal::MEMBW_THEORETICAL_GBPS.value),
+    );
+    t
+}
+
+/// Graph 4-1 — llama-bench prefill speeds across quants/policies with the
+/// SM-scaled A100 theoretical overlay.
+pub fn graph_4_1() -> Table {
+    let dev = registry::cmp170hx();
+    let bench = LlamaBench::default();
+    let mut t = Table::new(
+        "Graph 4-1: llama-bench prefill (Qwen2.5-1.5B, pp512)",
+        "tokens/s",
+    );
+    for q in quant::ALL {
+        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+            let r = bench.run(&dev, q, policy);
+            t.push(
+                Row::new(format!("{} ({})", q.name, policy.name()), r.prefill_tps).note(format!(
+                    "{:.0}% of theoretical",
+                    100.0 * r.prefill_fraction()
+                )),
+            );
+        }
+        let r = bench.run(&dev, q, FmadPolicy::Fused);
+        t.push(Row::new(
+            format!("{} (Theoretical Perf.)", q.name),
+            r.theoretical_prefill_tps,
+        ));
+    }
+    t
+}
+
+/// Graph 4-2 — decode speeds with the BW-scaled overlay.
+pub fn graph_4_2() -> Table {
+    let dev = registry::cmp170hx();
+    let bench = LlamaBench::default();
+    let mut t = Table::new(
+        "Graph 4-2: llama-bench decode (Qwen2.5-1.5B, tg128)",
+        "tokens/s",
+    );
+    for q in quant::ALL {
+        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+            let r = bench.run(&dev, q, policy);
+            t.push(
+                Row::new(format!("{} ({})", q.name, policy.name()), r.decode_tps).note(format!(
+                    "{:.0}% of theoretical",
+                    100.0 * r.decode_fraction()
+                )),
+            );
+        }
+        let r = bench.run(&dev, q, FmadPolicy::Fused);
+        t.push(Row::new(
+            format!("{} (Theoretical Perf.)", q.name),
+            r.theoretical_decode_tps,
+        ));
+    }
+    t
+}
+
+/// Graph 4-3 — decode power efficiency (tokens/s/W).
+pub fn graph_4_3() -> Table {
+    let dev = registry::cmp170hx();
+    let bench = LlamaBench::default();
+    let mut t = Table::new("Graph 4-3: decode power efficiency", "tokens/s/W");
+    for q in quant::ALL {
+        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+            let r = bench.run(&dev, q, policy);
+            t.push(
+                Row::new(
+                    format!("{} ({})", q.name, policy.name()),
+                    r.tokens_per_watt,
+                )
+                .note(format!("{:.0} W", r.decode_power_w)),
+            );
+        }
+        let r = bench.run(&dev, q, FmadPolicy::Fused);
+        t.push(Row::new(
+            format!("{} (theoretical A100-class)", q.name),
+            r.theoretical_tokens_per_watt(),
+        ));
+    }
+    t
+}
+
+/// Graph EX.1 — INT8 dp4a.
+pub fn graph_ex1() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = Table::new("Graph EX.1: CMP 170HX INT8 (dp4a)", "TIOPs");
+    t.push(
+        Row::new(
+            "OpenCL-benchmark",
+            openclbench::peak(&dev, Precision::Int8, FmadPolicy::Fused).tiops(),
+        )
+        .paper(cal::INT8_OPENCL_TIOPS.value),
+    );
+    t.push(
+        Row::new(
+            "Mixbench-CUDA",
+            mixbench::peak(&dev, Precision::Int8, FmadPolicy::Fused).tiops(),
+        )
+        .paper(cal::INT8_CUDA_TIOPS.value),
+    );
+    t
+}
+
+/// Graph EX.2 — PCIe bandwidth, stock x4 vs the x16 capacitor mod.
+pub fn graph_ex2() -> Table {
+    let dev = registry::cmp170hx();
+    let mut t = Table::new("Graph EX.2: CMP 170HX PCIe bandwidth", "GB/s");
+    for r in pciebench::graph_ex2(&dev) {
+        let mut row = Row::new(r.case.clone(), r.gbps);
+        if r.case.contains("stock") && r.case.contains("send") {
+            row = row.note(format!("theoretical {:.2} GB/s", r.theoretical_gbps));
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Table 1-1 — prices and FP16 TFLOPS of the CMP family.
+pub fn table_1_1() -> Table {
+    let mut t = Table::new("Table 1-1: CMP family prices & FP16", "TFLOPS");
+    let devices = [
+        registry::cmp30hx(),
+        registry::cmp40hx(),
+        registry::cmp50hx(),
+        registry::cmp90hx(),
+        registry::cmp170hx(),
+    ];
+    for (dev, &(name, _price, fp16)) in devices.iter().zip(cal::TABLE_1_1) {
+        t.push(
+            Row::new(name, dev.fp16_tflops())
+                .paper(fp16)
+                .note(format!("ASP ${:.0}", dev.price_usd)),
+        );
+    }
+    t
+}
+
+/// Table 1-2 — sales-volume scenarios.
+pub fn table_1_2() -> Table {
+    let mut t = Table::new("Table 1-2: estimated CMP sales", "units");
+    for (scenario, (paper_total, _)) in Scenario::all().iter().zip(cal::TABLE_1_2_TOTALS.iter()) {
+        let est = estimate_sales(cal::CMP_REVENUE_USD, scenario);
+        for (model, _asp, units) in &est.rows {
+            t.push(Row::new(format!("{model} (scenario {})", est.scenario), *units));
+        }
+        t.push(
+            Row::new(format!("Whole (scenario {})", est.scenario), est.total_units)
+                .paper(*paper_total),
+        );
+    }
+    t
+}
+
+/// Every figure, in paper order (the `report --all` payload).
+pub fn all_figures() -> Vec<Table> {
+    vec![
+        table_1_1(),
+        table_1_2(),
+        graph_3_1(),
+        graph_3_2(),
+        graph_3_3(),
+        graph_3_4(),
+        graph_3_5(),
+        graph_4_1(),
+        graph_4_2(),
+        graph_4_3(),
+        graph_ex1(),
+        graph_ex2(),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_figure_renders_nonempty() {
+        for t in all_figures() {
+            assert!(!t.rows.is_empty(), "{}", t.title);
+            assert!(t.render().contains(&t.title));
+        }
+    }
+
+    #[test]
+    fn figure_3_1_reproduces_within_tolerance() {
+        let t = graph_3_1();
+        let worst = t.worst_deviation().unwrap();
+        assert!(worst < 0.12, "worst deviation {worst}");
+    }
+
+    #[test]
+    fn table_1_2_totals_are_exact() {
+        let t = table_1_2();
+        let worst = t.worst_deviation().unwrap();
+        assert!(worst < 0.01, "{worst}");
+    }
+
+    #[test]
+    fn headline_restore_visible_in_graph_3_1() {
+        let t = graph_3_1();
+        let default = t
+            .rows
+            .iter()
+            .find(|r| r.label.contains("OpenCL") && r.label.contains("default"))
+            .unwrap()
+            .measured;
+        let nofma = t
+            .rows
+            .iter()
+            .find(|r| r.label.contains("OpenCL") && r.label.contains("noFMA"))
+            .unwrap()
+            .measured;
+        assert!(nofma / default > 15.0);
+    }
+}

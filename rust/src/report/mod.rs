@@ -1,0 +1,9 @@
+//! Figure/table regeneration — one function per paper artifact.
+//!
+//! Both the CLI (`cmphx report`) and the `cargo bench` targets call these,
+//! so every figure is regenerated from exactly one code path.
+
+pub mod figures;
+pub mod specs;
+
+pub use figures::*;

@@ -1,0 +1,101 @@
+//! Spec-sheet rendering (Tables 2-1…2-5) from the device registry.
+
+use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
+
+/// Render the Tables 2-1…2-4 equivalent for one device.
+pub fn spec_sheet(dev: &DeviceSpec) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("=== {} ({}) ===\n", dev.name, dev.arch));
+    s.push_str(&format!(
+        "SMs {:>18}   CUDA cores {:>12}\n",
+        dev.sms, dev.cuda_cores
+    ));
+    s.push_str(&format!(
+        "base clock {:>7.0} MHz   boost clock {:>7.0} MHz\n",
+        dev.base_clock_hz / 1e6,
+        dev.boost_clock_hz / 1e6
+    ));
+    s.push_str(&format!(
+        "L1/SM {:>9} KiB    L2 {:>14} MiB\n",
+        dev.l1_bytes_per_sm / 1024,
+        dev.mem.l2_bytes / (1 << 20)
+    ));
+    s.push_str(&format!(
+        "memory {:>6} GiB {}   bandwidth {:>7.0} GB/s\n",
+        dev.mem.capacity_bytes >> 30,
+        dev.mem.kind,
+        dev.mem.peak_bw / 1e9
+    ));
+    s.push_str(&format!(
+        "PCIe {} x{}   TDP {:.0} W   released {}   ASP ${:.0}\n",
+        dev.pcie.gen.name(),
+        dev.pcie.lanes,
+        dev.tdp_w,
+        dev.released,
+        dev.price_usd
+    ));
+    s.push_str(&format!(
+        "theoretical: FP32 {:>6.2}  FP16 {:>6.2}  FP64 {:>6.3} TFLOPS  tensor-f16 {:>6.1}\n",
+        dev.fp32_tflops(),
+        dev.fp16_tflops(),
+        dev.fp64_tflops(),
+        dev.tensor_f16_tflops()
+    ));
+    if dev.throttle.is_crippled() {
+        s.push_str("limiter: ");
+        for (c, m) in dev.throttle.throttled_classes() {
+            if m == 0.0 {
+                s.push_str(&format!("{}=off ", c.name()));
+            } else {
+                s.push_str(&format!("{}=1/{:.0} ", c.name(), 1.0 / m));
+            }
+        }
+        s.push('\n');
+        s.push_str(&format!(
+            "effective FP32 (FFMA) {:.3} TFLOPS — restored via -fmad=false: {:.2} TFLOPS\n",
+            dev.fp32_tflops() * dev.throttle.mult(InstClass::Ffma),
+            dev.fp32_tflops() / 2.0
+        ));
+    }
+    s
+}
+
+/// All devices, Table 2-x style.
+pub fn all_spec_sheets() -> String {
+    crate::device::registry::all()
+        .iter()
+        .map(spec_sheet)
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry;
+
+    #[test]
+    fn sheet_contains_table_2_values() {
+        let s = spec_sheet(&registry::cmp170hx());
+        assert!(s.contains("CMP 170HX"));
+        assert!(s.contains("SMs"));
+        assert!(s.contains("1493"));
+        assert!(s.contains("limiter:"));
+        assert!(s.contains("FFMA=1/32"));
+    }
+
+    #[test]
+    fn a100_sheet_has_no_limiter_line() {
+        let s = spec_sheet(&registry::a100_pcie());
+        assert!(!s.contains("limiter:"));
+    }
+
+    #[test]
+    fn all_sheets_cover_registry() {
+        let s = all_spec_sheets();
+        for d in registry::all() {
+            assert!(s.contains(d.name), "{}", d.name);
+        }
+    }
+}

@@ -1,0 +1,93 @@
+//! Artifact directory handling: locate, validate and compile HLO entries.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// A validated artifact directory (`make artifacts` output).
+#[derive(Clone, Debug)]
+pub struct ArtifactDir {
+    pub root: PathBuf,
+}
+
+/// Entries `make artifacts` is contracted to produce.
+pub const REQUIRED: &[&str] = &[
+    "prefill.hlo.txt",
+    "decode.hlo.txt",
+    "mixbench_fused.hlo.txt",
+    "mixbench_nofma.hlo.txt",
+    "qmatmul.hlo.txt",
+    "goldens.json",
+    "manifest.json",
+];
+
+impl ArtifactDir {
+    /// Open and validate an artifact directory.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        if !root.is_dir() {
+            bail!(
+                "artifact directory {} does not exist — run `make artifacts`",
+                root.display()
+            );
+        }
+        for f in REQUIRED {
+            if !root.join(f).is_file() {
+                bail!(
+                    "artifact {} missing from {} — rerun `make artifacts`",
+                    f,
+                    root.display()
+                );
+            }
+        }
+        Ok(ArtifactDir { root })
+    }
+
+    /// Locate the artifact dir: `$CMPHX_ARTIFACTS` or `./artifacts`.
+    pub fn discover() -> Result<Self> {
+        let root = std::env::var("CMPHX_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(root)
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.root.join(name)
+    }
+
+    /// Load + compile one HLO entry on a PJRT client.
+    pub fn compile(&self, client: &xla::PjRtClient, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+        let path = self.path(name);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_rejects_missing_dir() {
+        assert!(ArtifactDir::open("/nonexistent/artifacts").is_err());
+    }
+
+    #[test]
+    fn open_rejects_incomplete_dir() {
+        let tmp = std::env::temp_dir().join("cmphx-incomplete-artifacts");
+        let _ = std::fs::create_dir_all(&tmp);
+        std::fs::write(tmp.join("prefill.hlo.txt"), "HloModule x").unwrap();
+        let err = ArtifactDir::open(&tmp).unwrap_err().to_string();
+        assert!(err.contains("missing"), "{err}");
+        let _ = std::fs::remove_dir_all(&tmp);
+    }
+
+    #[test]
+    fn required_list_covers_the_contract() {
+        assert!(REQUIRED.contains(&"prefill.hlo.txt"));
+        assert!(REQUIRED.contains(&"decode.hlo.txt"));
+        assert!(REQUIRED.contains(&"goldens.json"));
+    }
+}

@@ -1,0 +1,178 @@
+//! Model runtime: compiled prefill/decode executables + KV-cache state.
+//!
+//! This is the real inference engine the coordinator serves: prefill a
+//! prompt → `DecodeState` (logits + KV literals) → repeated `decode` steps,
+//! greedy-sampled in Rust. The weights live inside the compiled executable;
+//! the KV cache rides along as literals between steps (CPU PJRT, zero-copy
+//! enough at tiny-qwen scale).
+
+use anyhow::{Context, Result};
+
+use super::artifacts::ArtifactDir;
+use super::goldens::{self, Json};
+
+/// Model geometry read from goldens.json (written by aot.py from the same
+/// Config the HLO was lowered with).
+#[derive(Clone, Copy, Debug)]
+pub struct RtConfig {
+    pub vocab: usize,
+    pub layers: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_ctx: usize,
+    pub prefill_t: usize,
+}
+
+/// In-flight generation state for one sequence.
+pub struct DecodeState {
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+    pub pos: usize,
+    pub last_logits: Vec<f32>,
+}
+
+impl DecodeState {
+    /// Greedy-sample the next token from the last logits.
+    pub fn argmax(&self) -> i32 {
+        let mut best = 0usize;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in self.last_logits.iter().enumerate() {
+            if v > best_v {
+                best_v = v;
+                best = i;
+            }
+        }
+        best as i32
+    }
+}
+
+/// Compiled model executables bound to a PJRT client.
+pub struct ModelRuntime {
+    pub config: RtConfig,
+    pub goldens: Json,
+    client: xla::PjRtClient,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    /// Load artifacts and compile prefill + decode on the CPU PJRT client.
+    pub fn load(dir: &ArtifactDir) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let prefill_exe = dir.compile(&client, "prefill.hlo.txt")?;
+        let decode_exe = dir.compile(&client, "decode.hlo.txt")?;
+        let goldens = goldens::load(dir.path("goldens.json"))?;
+        let cfg = goldens.get("config").context("goldens missing config")?;
+        let get = |k: &str| -> Result<usize> {
+            cfg.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("goldens config missing {k}"))
+        };
+        let config = RtConfig {
+            vocab: get("vocab")?,
+            layers: get("layers")?,
+            kv_heads: get("kv_heads")?,
+            head_dim: get("head_dim")?,
+            max_ctx: get("max_ctx")?,
+            prefill_t: get("prefill_t")?,
+        };
+        Ok(ModelRuntime {
+            config,
+            goldens,
+            client,
+            prefill_exe,
+            decode_exe,
+        })
+    }
+
+    /// The PJRT platform backing this runtime (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run prefill on a prompt of exactly `config.prefill_t` tokens
+    /// (shorter prompts are left-padded with token 0 by the caller or
+    /// [`ModelRuntime::prefill_padded`]).
+    pub fn prefill(&self, tokens: &[i32]) -> Result<DecodeState> {
+        anyhow::ensure!(
+            tokens.len() == self.config.prefill_t,
+            "prefill expects exactly {} tokens, got {}",
+            self.config.prefill_t,
+            tokens.len()
+        );
+        let input = xla::Literal::vec1(tokens);
+        let result = self.prefill_exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        let (logits, k_cache, v_cache) = result.to_tuple3()?;
+        let all = logits.to_vec::<f32>()?;
+        let v = self.config.vocab;
+        let last = all[(self.config.prefill_t - 1) * v..].to_vec();
+        Ok(DecodeState {
+            k_cache,
+            v_cache,
+            pos: self.config.prefill_t,
+            last_logits: last,
+        })
+    }
+
+    /// Prefill a prompt of length ≤ prefill_t by right-aligning it over a
+    /// zero pad. (tiny-qwen has no pad token; position-0 zeros act as a
+    /// benign BOS run — goldens are generated with full-length prompts.)
+    pub fn prefill_padded(&self, tokens: &[i32]) -> Result<DecodeState> {
+        let t = self.config.prefill_t;
+        anyhow::ensure!(tokens.len() <= t, "prompt longer than prefill window");
+        let mut padded = vec![0i32; t - tokens.len()];
+        padded.extend_from_slice(tokens);
+        self.prefill(&padded)
+    }
+
+    /// One decode step: feed `token` at the state's position, update caches
+    /// and logits in place.
+    pub fn decode(&self, state: &mut DecodeState, token: i32) -> Result<()> {
+        anyhow::ensure!(
+            state.pos < self.config.max_ctx,
+            "KV cache exhausted at pos {}",
+            state.pos
+        );
+        let tok = xla::Literal::scalar(token);
+        let pos = xla::Literal::scalar(state.pos as i32);
+        // Literals are borrowed by execute — no cache copies on the way in.
+        let args: [&xla::Literal; 4] = [&tok, &state.k_cache, &state.v_cache, &pos];
+        let result = self.decode_exe.execute::<&xla::Literal>(&args)?[0][0]
+            .to_literal_sync()?;
+        let (logits, k_cache, v_cache) = result.to_tuple3()?;
+        state.last_logits = logits.to_vec::<f32>()?;
+        state.k_cache = k_cache;
+        state.v_cache = v_cache;
+        state.pos += 1;
+        Ok(())
+    }
+
+    /// Greedy generation: prefill `prompt`, then `steps` decode steps.
+    /// Returns the generated token ids.
+    pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+        let mut state = self.prefill_padded(prompt)?;
+        let mut out = Vec::with_capacity(steps);
+        let mut token = state.argmax();
+        out.push(token);
+        for _ in 1..steps {
+            self.decode(&mut state, token)?;
+            token = state.argmax();
+            out.push(token);
+        }
+        Ok(out)
+    }
+
+    /// Compile + run one of the kernel artifacts with literal inputs —
+    /// used by the quickstart example and integration tests.
+    pub fn run_kernel(
+        &self,
+        dir: &ArtifactDir,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> Result<xla::Literal> {
+        let exe = dir.compile(&self.client, name)?;
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple1()?)
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt`, compile once, execute from the
+//! L3 hot path. Python never runs here — the artifacts are self-contained
+//! (model weights are baked into the HLO as constants).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`.
+
+pub mod artifacts;
+pub mod engine_rt;
+pub mod goldens;
+
+pub use artifacts::ArtifactDir;
+pub use engine_rt::{DecodeState, ModelRuntime};

@@ -1,0 +1,22 @@
+//! Kernel-timing engine.
+//!
+//! Given a [`crate::isa::Kernel`] (post-fmad-pass) and a
+//! [`crate::device::DeviceSpec`], the engine computes execution time, board
+//! power and energy via an issue-rate/roofline hybrid:
+//!
+//! 1. lower the body to a whole-grid [`crate::isa::InstMix`];
+//! 2. per execution pipe, sum `count / (SMs × rate × throttle × clock)` —
+//!    classes on one pipe serialize, distinct pipes overlap;
+//! 3. memory time from [`crate::memhier`] (pattern-derated bandwidth, L2
+//!    split);
+//! 4. kernel time = max(pipe times, memory time, wave-quantized launch
+//!    floor), then DVFS-derate if the power model says the activity exceeds
+//!    TDP.
+//!
+//! The engine also returns an achieved-rate report (TFLOPS/TIOPs/GB/s) in
+//! the units the paper's graphs use.
+
+pub mod engine;
+pub mod occupancy;
+
+pub use engine::{simulate, KernelTiming, SimConfig};

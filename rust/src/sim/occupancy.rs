@@ -1,0 +1,101 @@
+//! Launch geometry / wave quantization.
+//!
+//! Small grids underutilize the SM array: a launch of `blocks` thread blocks
+//! executes in ⌈blocks / (SMs × blocks_per_sm)⌉ waves, and the last wave may
+//! run partially empty. The paper's CUDA-vs-OpenCL gaps (Graphs 3-1/3-4:
+//! "mixbench's 1024 compute iters … may not fully stress the GPU") are
+//! modeled via the tools' launch pressure feeding this quantization.
+
+/// Occupancy description of one launch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Occupancy {
+    pub blocks: u64,
+    pub blocks_per_sm: u32,
+    pub sms: u32,
+}
+
+impl Occupancy {
+    pub fn new(blocks: u64, block_threads: u32, sms: u32, max_threads_per_sm: u32) -> Self {
+        let blocks_per_sm = (max_threads_per_sm / block_threads.max(1)).max(1);
+        Occupancy {
+            blocks,
+            blocks_per_sm,
+            sms,
+        }
+    }
+
+    /// Concurrent blocks the device can hold.
+    pub fn concurrent_blocks(&self) -> u64 {
+        self.sms as u64 * self.blocks_per_sm as u64
+    }
+
+    /// Full + partial waves for this launch.
+    pub fn waves(&self) -> u64 {
+        self.blocks.div_ceil(self.concurrent_blocks().max(1))
+    }
+
+    /// Utilization of the last wave (1.0 when the grid tiles evenly).
+    pub fn tail_utilization(&self) -> f64 {
+        let cap = self.concurrent_blocks().max(1);
+        let rem = self.blocks % cap;
+        if rem == 0 {
+            1.0
+        } else {
+            rem as f64 / cap as f64
+        }
+    }
+
+    /// Effective slowdown factor from wave quantization: ideal time assumes
+    /// perfect spreading; real time is `waves` quantized. For large grids
+    /// this tends to 1.
+    pub fn quantization_factor(&self) -> f64 {
+        if self.blocks == 0 {
+            return 1.0;
+        }
+        let ideal_waves = self.blocks as f64 / self.concurrent_blocks() as f64;
+        self.waves() as f64 / ideal_waves.max(f64::MIN_POSITIVE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall, Rng};
+
+    #[test]
+    fn exact_tiling_has_no_penalty() {
+        // 70 SMs × 8 blocks/SM = 560 concurrent; 1120 blocks = 2 full waves.
+        let o = Occupancy::new(1120, 256, 70, 2048);
+        assert_eq!(o.waves(), 2);
+        assert_close(o.quantization_factor(), 1.0, 1e-12);
+        assert_close(o.tail_utilization(), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn single_block_wastes_the_device() {
+        let o = Occupancy::new(1, 256, 70, 2048);
+        assert_eq!(o.waves(), 1);
+        assert!(o.quantization_factor() > 500.0);
+    }
+
+    #[test]
+    fn tail_wave_partial_utilization() {
+        let o = Occupancy::new(561, 256, 70, 2048);
+        assert_eq!(o.waves(), 2);
+        assert!(o.tail_utilization() < 0.01);
+    }
+
+    #[test]
+    fn prop_quantization_at_least_one_and_shrinks_with_scale() {
+        forall(0x0CC, 300, |rng: &mut Rng| {
+            let sms = rng.range(1, 128) as u32;
+            let blocks = rng.range(1, 1 << 20);
+            let o = Occupancy::new(blocks, 256, sms, 2048);
+            let q = o.quantization_factor();
+            assert!(q >= 1.0 - 1e-9, "quantization can only slow down: {q}");
+            // 64× more blocks → factor no worse.
+            let o2 = Occupancy::new(blocks * 64, 256, sms, 2048);
+            assert!(o2.quantization_factor() <= q + 1e-9);
+        });
+    }
+}

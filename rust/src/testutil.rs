@@ -1,0 +1,180 @@
+//! Deterministic test utilities.
+//!
+//! The offline image ships no `proptest`/`quickcheck`, so property-based
+//! tests in this crate use [`Rng`], a tiny splitmix64/xoshiro-style PRNG with
+//! explicit seeding, plus [`forall`], a minimal property runner that reports
+//! the failing case index and seed on panic. Python-side property tests use
+//! the real `hypothesis` package.
+
+/// Deterministic 64-bit PRNG (splitmix64 core). Not cryptographic; stable
+/// across platforms and releases so failing seeds stay reproducible.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Create a PRNG from an explicit seed.
+    pub fn new(seed: u64) -> Self {
+        Rng {
+            state: seed.wrapping_add(0x9E3779B97F4A7C15),
+        }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)`; `n` must be nonzero.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0, "Rng::below(0)");
+        // Rejection-free modulo is fine for test-case generation.
+        self.next_u64() % n
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in `[lo, hi]` inclusive, signed.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo.wrapping_add(self.below((hi - lo) as u64 + 1) as i64)
+    }
+
+    /// Uniform float in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform float in `[lo, hi)`.
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Pick a random element of a nonempty slice.
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "Rng::pick on empty slice");
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Minimal property runner: executes `prop` for `cases` generated inputs,
+/// panicking with the case index and seed on the first failure so the case
+/// can be replayed with `Rng::new(seed)`.
+pub fn forall<F: FnMut(&mut Rng)>(seed: u64, cases: u32, mut prop: F) {
+    for case in 0..cases {
+        let case_seed = seed ^ (case as u64).wrapping_mul(0xA24BAED4963EE407);
+        let mut rng = Rng::new(case_seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property failed at case {case} (seed {case_seed:#x})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Assert two floats agree to a relative tolerance.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64) {
+    let denom = a.abs().max(b.abs()).max(1e-30);
+    assert!(
+        ((a - b) / denom).abs() <= rtol,
+        "assert_close failed: {a} vs {b} (rtol {rtol})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rng_is_deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn rng_below_in_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            assert!(r.below(13) < 13);
+        }
+    }
+
+    #[test]
+    fn rng_range_hits_endpoints() {
+        let mut r = Rng::new(1);
+        let (mut lo_seen, mut hi_seen) = (false, false);
+        for _ in 0..10_000 {
+            match r.range(3, 5) {
+                3 => lo_seen = true,
+                5 => hi_seen = true,
+                4 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(lo_seen && hi_seen);
+    }
+
+    #[test]
+    fn rng_f64_in_unit_interval() {
+        let mut r = Rng::new(9);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(3);
+        let mut xs: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut n = 0;
+        forall(11, 64, |_| n += 1);
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    fn assert_close_accepts_equal() {
+        assert_close(1.0, 1.0, 1e-12);
+        assert_close(0.0, 0.0, 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_rejects_far() {
+        assert_close(1.0, 2.0, 1e-3);
+    }
+}

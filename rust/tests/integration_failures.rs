@@ -1,0 +1,111 @@
+//! Failure injection across the runtime/coordinator boundary: corrupted
+//! artifacts, backpressure, and concurrent submission races.
+
+use std::time::Duration;
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{Server, ServerConfig};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::runtime::{ArtifactDir, ModelRuntime};
+
+fn artifact_dir() -> ArtifactDir {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactDir::open(root).expect("run `make artifacts` first")
+}
+
+/// Copy the artifact dir with one entry corrupted.
+fn corrupted_copy(victim: &str, garbage: &str) -> ArtifactDir {
+    let src = artifact_dir();
+    let dst = std::env::temp_dir().join(format!("cmphx-corrupt-{victim}"));
+    let _ = std::fs::remove_dir_all(&dst);
+    std::fs::create_dir_all(&dst).unwrap();
+    for entry in cmphx::runtime::artifacts::REQUIRED {
+        std::fs::copy(src.path(entry), dst.join(entry)).unwrap();
+    }
+    std::fs::write(dst.join(victim), garbage).unwrap();
+    ArtifactDir::open(&dst).unwrap()
+}
+
+#[test]
+fn corrupted_hlo_text_is_a_clean_error() {
+    let dir = corrupted_copy("decode.hlo.txt", "HloModule broken\nthis is not hlo");
+    let err = ModelRuntime::load(&dir).err().expect("must fail").to_string();
+    assert!(err.contains("decode.hlo.txt"), "{err}");
+}
+
+#[test]
+fn corrupted_goldens_json_is_a_clean_error() {
+    let dir = corrupted_copy("goldens.json", "{ not json !!");
+    let err = format!("{:#}", ModelRuntime::load(&dir).err().expect("must fail"));
+    assert!(!err.is_empty());
+}
+
+#[test]
+fn server_start_surfaces_compile_failure() {
+    let dir = corrupted_copy("prefill.hlo.txt", "HloModule broken ENTRY {}");
+    let err = Server::start(dir, ServerConfig::default());
+    assert!(err.is_err(), "server must not come up on a broken artifact");
+}
+
+#[test]
+fn concurrent_submitters_all_get_served() {
+    let config = ServerConfig {
+        queue_depth: 64,
+        batch: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(5),
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+    };
+    let server = std::sync::Arc::new(Server::start(artifact_dir(), config).unwrap());
+    let mut handles = Vec::new();
+    for t in 0..4 {
+        let server = std::sync::Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let mut tokens = 0usize;
+            for i in 0..3 {
+                let prompt: Vec<i32> = (1..=6).map(|x| (x * (t * 7 + i + 2)) % 500 + 1).collect();
+                let rx = server.submit(prompt, 4).expect("submit");
+                let resp = rx.recv_timeout(Duration::from_secs(180)).expect("recv");
+                assert!(resp.ok(), "{:?}", resp.error);
+                tokens += resp.tokens.len();
+            }
+            tokens
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, 4 * 3 * 4);
+}
+
+#[test]
+fn tiny_queue_applies_backpressure() {
+    let config = ServerConfig {
+        queue_depth: 1,
+        batch: BatchPolicy {
+            max_batch: 1,
+            // long window so the queue stays occupied while we flood it
+            max_wait: Duration::from_millis(300),
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+    };
+    let server = Server::start(artifact_dir(), config).unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for _ in 0..32 {
+        match server.submit(vec![1, 2, 3], 2) {
+            Ok(rx) => accepted.push(rx),
+            Err(e) => {
+                assert!(e.to_string().contains("backpressure"), "{e}");
+                rejected += 1;
+            }
+        }
+    }
+    assert!(rejected > 0, "flooding a depth-1 queue must shed load");
+    for rx in accepted {
+        let resp = rx.recv_timeout(Duration::from_secs(180)).unwrap();
+        assert!(resp.ok());
+    }
+}

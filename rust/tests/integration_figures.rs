@@ -1,0 +1,98 @@
+//! Integration: every paper figure regenerates and the cross-figure
+//! claims (abstract + §5/§6 conclusions) hold across module boundaries.
+
+use cmphx::bench_harness::Table;
+use cmphx::calibration as cal;
+use cmphx::device::registry;
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::llm::llamabench::LlamaBench;
+use cmphx::llm::quant;
+use cmphx::report::figures;
+
+#[test]
+fn all_twelve_figures_regenerate() {
+    let figs = figures::all_figures();
+    assert_eq!(figs.len(), 12, "one per paper table/graph");
+    for t in &figs {
+        assert!(!t.rows.is_empty(), "{}", t.title);
+        let rendered = t.render();
+        assert!(rendered.len() > 40);
+    }
+}
+
+#[test]
+fn calibrated_figures_stay_within_tolerance() {
+    // Figures with direct paper numbers must reproduce them.
+    let checks: &[(Table, f64)] = &[
+        (figures::graph_3_1(), 0.12),
+        (figures::graph_3_2(), 0.08),
+        (figures::graph_3_3(), 0.10),
+        (figures::graph_3_4(), 0.06),
+        (figures::graph_3_5(), 0.05),
+        (figures::graph_ex1(), 0.06),
+        (figures::table_1_1(), 0.02),
+        (figures::table_1_2(), 0.01),
+    ];
+    for (t, tol) in checks {
+        let worst = t.worst_deviation().expect(&t.title);
+        assert!(worst <= *tol, "{}: worst deviation {worst}", t.title);
+    }
+}
+
+#[test]
+fn abstract_headline_claims_hold() {
+    // "FP32 floating-point performance exceeds 15 times the original"
+    let g31 = figures::graph_3_1();
+    let find = |t: &Table, pat: &str, pat2: &str| {
+        t.rows
+            .iter()
+            .find(|r| r.label.contains(pat) && r.label.contains(pat2))
+            .map(|r| r.measured)
+            .unwrap()
+    };
+    let restore = find(&g31, "OpenCL", "noFMA") / find(&g31, "OpenCL", "default");
+    assert!(restore > 15.0, "{restore}");
+
+    // "inference performance for certain precision levels … surpasses
+    // threefold improvements" — our calibrated Q2_K prefill lands at ~2.3×
+    // (the paper's own Graph 4-1 number, 231%); the 3× abstract claim is
+    // loose even against the paper's body. Assert the calibrated band.
+    let bench = LlamaBench::default();
+    let dev = registry::cmp170hx();
+    let q2_default = bench.run(&dev, &quant::Q2_K, FmadPolicy::Fused).prefill_tps;
+    let q2_nofma = bench
+        .run(&dev, &quant::Q2_K, FmadPolicy::Decomposed)
+        .prefill_tps;
+    let speedup = q2_nofma / q2_default;
+    assert!(speedup > 2.0 && speedup < 2.7, "{speedup}");
+}
+
+#[test]
+fn section_6_conclusions_hold() {
+    let bench = LlamaBench::default();
+    let dev = registry::cmp170hx();
+    // "energy efficiency comparable to the A100" for bandwidth-bound duty:
+    // within ±2.5× of the theoretical A100-class efficiency in q8 decode
+    // and *above* it at default policy.
+    let q8 = bench.run(&dev, &quant::Q8_0, FmadPolicy::Fused);
+    assert!(q8.tokens_per_watt > q8.theoretical_tokens_per_watt());
+    // "not feasible for gaming" proxy: FP32 default is three orders below a
+    // healthy card of the same silicon generation.
+    let a100 = registry::a100_pcie();
+    assert!(dev.fp32_tflops() * dev.throttle.mult(cmphx::isa::InstClass::Ffma) < a100.fp32_tflops() / 40.0);
+}
+
+#[test]
+fn figure_generators_are_deterministic() {
+    let a = figures::graph_4_1().render();
+    let b = figures::graph_4_1().render();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn csv_export_roundtrips_row_counts() {
+    for t in figures::all_figures() {
+        let csv = t.to_csv();
+        assert_eq!(csv.lines().count(), t.rows.len() + 1, "{}", t.title);
+    }
+}

@@ -1,0 +1,205 @@
+//! Integration: artifacts → PJRT runtime → numerics vs python goldens.
+//!
+//! These tests require `make artifacts` to have run (the Makefile `test`
+//! target guarantees it).
+
+use cmphx::runtime::{goldens::Json, ArtifactDir, ModelRuntime};
+
+fn artifact_dir() -> ArtifactDir {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactDir::open(root).expect("run `make artifacts` first")
+}
+
+// PJRT handles hold `Rc`s (not Sync), so the compiled runtime is cached
+// per test thread rather than in a process-wide static.
+thread_local! {
+    static RUNTIME_TL: ModelRuntime =
+        ModelRuntime::load(&artifact_dir()).expect("runtime load");
+}
+
+fn with_runtime<R>(f: impl FnOnce(&ModelRuntime) -> R) -> R {
+    RUNTIME_TL.with(|rt| f(rt))
+}
+
+fn golden_prompt(rt: &ModelRuntime) -> Vec<i32> {
+    rt.goldens
+        .get("prompt")
+        .unwrap()
+        .as_i64_vec()
+        .unwrap()
+        .iter()
+        .map(|&t| t as i32)
+        .collect()
+}
+
+#[test]
+fn runtime_loads_and_reports_cpu_platform() {
+    with_runtime(|rt| {
+        assert!(rt.platform().to_lowercase().contains("cpu"));
+        assert_eq!(rt.config.vocab, 512);
+        assert_eq!(rt.config.layers, 4);
+    });
+}
+
+#[test]
+fn prefill_matches_python_golden_logits() {
+    with_runtime(|rt| {
+        let prompt = golden_prompt(rt);
+        let state = rt.prefill(&prompt).unwrap();
+
+        let expected = rt
+            .goldens
+            .get("prefill_last_logits")
+            .unwrap()
+            .as_f32_vec()
+            .unwrap();
+        assert_eq!(state.last_logits.len(), expected.len());
+        for (i, (a, b)) in state.last_logits.iter().zip(&expected).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                "logit {i}: rust {a} vs python {b}"
+            );
+        }
+        let argmax = rt.goldens.get("prefill_argmax").unwrap().as_usize().unwrap();
+        assert_eq!(state.argmax() as usize, argmax);
+    });
+}
+
+#[test]
+fn greedy_generation_matches_python_golden_tokens() {
+    // The strongest cross-language signal: the whole prefill+decode loop,
+    // token for token.
+    with_runtime(|rt| {
+        let prompt = golden_prompt(rt);
+        let expected: Vec<i32> = rt
+            .goldens
+            .get("greedy_tokens")
+            .unwrap()
+            .as_i64_vec()
+            .unwrap()
+            .iter()
+            .map(|&t| t as i32)
+            .collect();
+        let tokens = rt.generate(&prompt, expected.len()).unwrap();
+        assert_eq!(tokens, expected, "rust PJRT generation diverged from jax");
+    });
+}
+
+#[test]
+fn decode_rejects_cache_overflow() {
+    with_runtime(|rt| {
+        let prompt: Vec<i32> = (1..=rt.config.prefill_t as i32).collect();
+        let mut state = rt.prefill(&prompt).unwrap();
+        for _ in 0..(rt.config.max_ctx - rt.config.prefill_t) {
+            rt.decode(&mut state, 1).unwrap();
+        }
+        let err = rt.decode(&mut state, 1).unwrap_err().to_string();
+        assert!(err.contains("exhausted"), "{err}");
+    });
+}
+
+#[test]
+fn prefill_rejects_wrong_length() {
+    with_runtime(|rt| {
+        assert!(rt.prefill(&[1, 2, 3]).is_err());
+        assert!(rt.prefill_padded(&vec![1; rt.config.prefill_t + 1]).is_err());
+    });
+}
+
+fn mixbench_inputs(g: &Json) -> (xla::Literal, xla::Literal) {
+    let mb = g.get("mixbench").unwrap();
+    let x = mb.get("x").unwrap().as_f32_vec().unwrap();
+    let y = mb.get("y").unwrap().as_f32_vec().unwrap();
+    (xla::Literal::vec1(&x), xla::Literal::vec1(&y))
+}
+
+#[test]
+fn mixbench_kernels_match_goldens_and_diverge_from_each_other() {
+    with_runtime(|rt| {
+        let dir = artifact_dir();
+        let (x, y) = mixbench_inputs(&rt.goldens);
+        let fused = rt
+            .run_kernel(&dir, "mixbench_fused.hlo.txt", &[x.clone(), y.clone()])
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        let nofma = rt
+            .run_kernel(&dir, "mixbench_nofma.hlo.txt", &[x, y])
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+
+        let mbg = rt.goldens.get("mixbench").unwrap();
+        let fused_head = mbg.get("fused_head").unwrap().as_f32_vec().unwrap();
+        let nofma_head = mbg.get("nofma_head").unwrap().as_f32_vec().unwrap();
+        assert_eq!(&fused[..32], &fused_head[..], "fused kernel vs golden");
+        assert_eq!(&nofma[..32], &nofma_head[..], "nofma kernel vs golden");
+
+        // the fmad policy is a real numerical difference (chaotic regime)
+        let max_div = fused
+            .iter()
+            .zip(&nofma)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        let golden_div = mbg.get("max_divergence").unwrap().as_f64().unwrap() as f32;
+        assert!(max_div > 0.0);
+        assert!(
+            (max_div - golden_div).abs() < 1e-5,
+            "{max_div} vs {golden_div}"
+        );
+    });
+}
+
+#[test]
+fn qmatmul_kernel_matches_golden() {
+    with_runtime(|rt| {
+        let dir = artifact_dir();
+        let qg = rt.goldens.get("qmatmul").unwrap();
+        let (m, k, n) = (
+            qg.get("m").unwrap().as_usize().unwrap(),
+            qg.get("k").unwrap().as_usize().unwrap(),
+            qg.get("n").unwrap().as_usize().unwrap(),
+        );
+        let x = qg.get("x").unwrap().as_f32_vec().unwrap();
+        let qw_bytes: Vec<u8> = qg
+            .get("qw")
+            .unwrap()
+            .as_i64_vec()
+            .unwrap()
+            .iter()
+            .map(|&v| (v as i8) as u8)
+            .collect();
+        let scales = qg.get("scales").unwrap().as_f32_vec().unwrap();
+
+        let x_lit = xla::Literal::vec1(&x).reshape(&[m as i64, k as i64]).unwrap();
+        // i8 has no NativeType impl in the xla crate — build the literal
+        // from raw bytes with an S8 element type.
+        let qw_lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            &[k, n],
+            &qw_bytes,
+        )
+        .unwrap();
+        let s_lit = xla::Literal::vec1(&scales)
+            .reshape(&[(k / 32) as i64, n as i64])
+            .unwrap();
+
+        let out = rt
+            .run_kernel(&dir, "qmatmul.hlo.txt", &[x_lit, qw_lit, s_lit])
+            .unwrap()
+            .to_vec::<f32>()
+            .unwrap();
+        assert_eq!(out.len(), m * n);
+
+        let head = qg.get("out_head").unwrap().as_f32_vec().unwrap();
+        for (i, (a, b)) in out.iter().zip(&head).enumerate() {
+            assert!((a - b).abs() <= 1e-4 + 1e-4 * b.abs(), "elem {i}: {a} vs {b}");
+        }
+        let checksum: f32 = out.iter().sum();
+        let golden_sum = qg.get("out_checksum").unwrap().as_f64().unwrap() as f32;
+        assert!(
+            (checksum - golden_sum).abs() < 1e-2 + 1e-5 * golden_sum.abs(),
+            "{checksum} vs {golden_sum}"
+        );
+    });
+}

@@ -1,0 +1,124 @@
+//! Integration: the serving coordinator end-to-end over real artifacts,
+//! including failure injection (oversized requests, overload, cancels).
+
+use std::time::Duration;
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{Server, ServerConfig};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::runtime::ArtifactDir;
+
+fn artifact_dir() -> ArtifactDir {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    ArtifactDir::open(root).expect("run `make artifacts` first")
+}
+
+fn config(max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        queue_depth: 32,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(20),
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+    }
+}
+
+#[test]
+fn serves_a_batch_of_requests_with_real_tokens() {
+    let server = Server::start(artifact_dir(), config(4)).unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..4 {
+        let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+        rxs.push(server.submit(prompt, 6).unwrap());
+    }
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 6);
+        assert!(resp.tokens.iter().all(|&t| (0..512).contains(&t)));
+        assert!(resp.simulated_device_s > 0.0, "overlay must accrue");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.requests, 4);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.tokens_out, 24);
+    assert!(m.simulated_device_s > 0.0);
+    assert!(m.mean_batch_size() >= 1.0);
+}
+
+#[test]
+fn identical_prompts_get_identical_tokens() {
+    // Determinism across the whole path: batching must not leak state
+    // between sequences.
+    let server = Server::start(artifact_dir(), config(3)).unwrap();
+    let prompt: Vec<i32> = vec![5, 9, 13, 2, 8, 1, 30, 44];
+    let rx1 = server.submit(prompt.clone(), 5).unwrap();
+    let rx2 = server.submit(prompt.clone(), 5).unwrap();
+    let rx3 = server.submit(prompt, 5).unwrap();
+    let a = rx1.recv_timeout(Duration::from_secs(120)).unwrap().tokens;
+    let b = rx2.recv_timeout(Duration::from_secs(120)).unwrap().tokens;
+    let c = rx3.recv_timeout(Duration::from_secs(120)).unwrap().tokens;
+    assert_eq!(a, b);
+    assert_eq!(b, c);
+    drop(server);
+}
+
+#[test]
+fn oversized_requests_are_rejected_not_crashed() {
+    let server = Server::start(artifact_dir(), config(2)).unwrap();
+    // prompt longer than the prefill window
+    let rx = server.submit(vec![1; 64], 4).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(!resp.ok());
+    assert!(resp.error.as_deref().unwrap().contains("window"));
+    // generation longer than the KV budget
+    let rx = server.submit(vec![1, 2, 3], 10_000).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert!(!resp.ok());
+    // and the server still works afterwards
+    let rx = server.submit(vec![1, 2, 3], 3).unwrap();
+    assert!(rx.recv_timeout(Duration::from_secs(120)).unwrap().ok());
+    let m = server.shutdown();
+    assert_eq!(m.errors, 2);
+}
+
+#[test]
+fn cancelled_requests_do_not_wedge_the_worker() {
+    let server = Server::start(artifact_dir(), config(2)).unwrap();
+    // drop the receiver immediately = cancel
+    drop(server.submit(vec![1, 2, 3], 4).unwrap());
+    // a live request right behind it must still be served
+    let rx = server.submit(vec![4, 5, 6], 4).unwrap();
+    let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+    assert!(resp.ok());
+    drop(server);
+}
+
+#[test]
+fn shutdown_drains_outstanding_requests() {
+    let server = Server::start(artifact_dir(), config(4)).unwrap();
+    let rx = server.submit(vec![7, 7, 7], 4).unwrap();
+    let metrics = server.shutdown(); // joins the worker
+    let resp = rx.recv_timeout(Duration::from_secs(1)).unwrap();
+    assert!(resp.ok(), "in-flight request must complete during shutdown");
+    assert_eq!(metrics.requests, 1);
+}
+
+#[test]
+fn scheduler_policies_serve_mixed_lengths() {
+    for policy in [StepPolicy::RoundRobin, StepPolicy::ShortestFirst] {
+        let mut cfg = config(3);
+        cfg.step_policy = policy;
+        let server = Server::start(artifact_dir(), cfg).unwrap();
+        let rx_short = server.submit(vec![1, 2], 2).unwrap();
+        let rx_long = server.submit(vec![3, 4], 8).unwrap();
+        let short = rx_short.recv_timeout(Duration::from_secs(120)).unwrap();
+        let long = rx_long.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(short.tokens.len(), 2, "{policy:?}");
+        assert_eq!(long.tokens.len(), 8, "{policy:?}");
+        drop(server);
+    }
+}
