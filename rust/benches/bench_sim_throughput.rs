@@ -1,0 +1,101 @@
+//! Simulation-substrate throughput: kernels-simulated/sec on a
+//! calibration-sized sweep (the llama-bench 6-quant × 2-policy grid, both
+//! prefill and decode kernels, across a small heterogeneous fleet).
+//!
+//! Two pipelines are timed:
+//! - **baseline (seed shape)** — every cell rebuilds its kernel IR, applies
+//!   the fmad pass, and calls `simulate()` (which re-lowers the IR per
+//!   call), sequentially — the per-launch allocation storm this PR removes;
+//! - **lowered + batched** — the grid is lowered once per iteration
+//!   ([`LoweredKernel`]) and all cells fan out through `sim::batch` worker
+//!   threads.
+//!
+//! The ratio is the PR's headline number (target: ≥ 5×). Results are
+//! printed and also written to `BENCH_sim_throughput.json` at the repo root
+//! so the perf trajectory is recorded across PRs.
+
+use cmphx::bench_harness::time_fn;
+use cmphx::device::registry;
+use cmphx::isa::pass::{apply_fmad, FmadPolicy};
+use cmphx::llm::kernels::{decode_kernel, prefill_kernel};
+use cmphx::llm::llamabench::LlamaBench;
+use cmphx::llm::quant;
+use cmphx::sim::batch::{self, SweepJob};
+use cmphx::sim::simulate;
+
+fn main() {
+    let bench = LlamaBench::default();
+    let devices = [
+        registry::cmp170hx(),
+        registry::cmp170hx_x16(),
+        registry::a100_pcie(),
+    ];
+    let policies = [FmadPolicy::Fused, FmadPolicy::Decomposed];
+    // Cells per sweep: 6 quants × 2 policies × 2 kernels × |devices|.
+    let cells = (quant::ALL.len() * policies.len() * 2 * devices.len()) as f64;
+
+    // --- baseline: rebuild + re-lower per simulate() call, sequential.
+    // Same per-cell configs as the lowered arm so both arms simulate the
+    // identical workload; only the pipeline differs. ---
+    let pos = bench.gen_tokens / 2;
+    let baseline = time_fn(2, 10, || {
+        for q in quant::ALL {
+            let prefill_cfg = LlamaBench::prefill_config(q);
+            let decode_cfg = LlamaBench::decode_config();
+            for policy in policies {
+                for dev in &devices {
+                    let pk = apply_fmad(
+                        &prefill_kernel(&bench.model, q, bench.prompt_tokens),
+                        policy,
+                    );
+                    let dk = apply_fmad(&decode_kernel(&bench.model, q, pos), policy);
+                    std::hint::black_box(simulate(&pk, dev, &prefill_cfg));
+                    std::hint::black_box(simulate(&dk, dev, &decode_cfg));
+                }
+            }
+        }
+    });
+
+    // --- lowered + batched: one IR walk per kernel, threaded fan-out ---
+    let lowered = time_fn(2, 10, || {
+        let grid = bench.lower_grid();
+        let mut jobs = Vec::with_capacity(grid.len() * 2);
+        for cell in &grid {
+            jobs.push(SweepJob { kernel: &cell.prefill, cfg: cell.prefill_cfg });
+            jobs.push(SweepJob { kernel: &cell.decode, cfg: cell.decode_cfg });
+        }
+        std::hint::black_box(batch::run_jobs(&jobs, &devices));
+    });
+
+    let baseline_kps = baseline.per_sec(cells);
+    let lowered_kps = lowered.per_sec(cells);
+    let speedup = lowered_kps / baseline_kps;
+    let threads = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    println!("== sim throughput: llama-bench grid × {} devices ==", devices.len());
+    println!("cells per sweep:        {cells:.0}");
+    println!(
+        "baseline (re-lower):    {baseline_kps:>12.0} kernels/s  (mean {:.3} ms)",
+        baseline.mean_s * 1e3
+    );
+    println!(
+        "lowered + batched:      {lowered_kps:>12.0} kernels/s  (mean {:.3} ms)",
+        lowered.mean_s * 1e3
+    );
+    println!("speedup:                {speedup:>12.2}×  ({threads} hw threads)");
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_sim_throughput\",\n  \"sweep\": \"llamabench 6-quant x 2-policy x prefill+decode x {} devices\",\n  \"cells_per_sweep\": {},\n  \"baseline_relower_kernels_per_sec\": {:.1},\n  \"lowered_batched_kernels_per_sec\": {:.1},\n  \"speedup\": {:.2},\n  \"hw_threads\": {}\n}}\n",
+        devices.len(),
+        cells as u64,
+        baseline_kps,
+        lowered_kps,
+        speedup,
+        threads,
+    );
+    let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    match std::fs::write(&out, json) {
+        Ok(()) => println!("wrote {}", out.display()),
+        Err(e) => eprintln!("could not write {}: {e}", out.display()),
+    }
+}

@@ -10,7 +10,7 @@
 use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, KernelSource, MemPattern, Stmt, Traffic};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate_lowered, LoweredKernel, SimConfig};
 
 use super::{Precision, ToolResult};
 
@@ -52,16 +52,15 @@ pub fn gemm_kernel(precision: Precision) -> Kernel {
 /// Run the burn GEMM once on the device (steady-state rate; the real tool
 /// loops it for `-tc 3600` seconds).
 pub fn run(dev: &DeviceSpec, precision: Precision) -> ToolResult {
-    let k = gemm_kernel(precision);
+    let lk = LoweredKernel::lower(&gemm_kernel(precision));
     let cfg = SimConfig {
         issue_efficiency: LIB_ISSUE_EFF,
         ..Default::default()
     };
-    let timing = simulate(&k, dev, &cfg);
     ToolResult {
         tool: "gpu-burn",
         case: precision.name().to_string(),
-        timing,
+        timing: simulate_lowered(&lk, dev, &cfg),
     }
 }
 

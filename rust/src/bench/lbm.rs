@@ -13,7 +13,7 @@ use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, Stmt, Traffic};
 use crate::isa::pass::{apply_fmad, FmadPolicy};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate_lowered, LoweredKernel, SimConfig};
 
 /// D3Q19 lattice constants.
 pub const Q: u64 = 19;
@@ -39,8 +39,8 @@ pub fn step_kernel(n: u64) -> Kernel {
 
 /// Simulate one step; returns (MLUPs, memory_bound).
 pub fn mlups(dev: &DeviceSpec, n: u64, policy: FmadPolicy) -> (f64, bool) {
-    let k = apply_fmad(&step_kernel(n), policy);
-    let t = simulate(&k, dev, &SimConfig::default());
+    let lk = LoweredKernel::lower(&apply_fmad(&step_kernel(n), policy));
+    let t = simulate_lowered(&lk, dev, &SimConfig::default());
     let cells = (n * n * n) as f64;
     (cells / t.time_s / 1e6, t.memory_bound())
 }

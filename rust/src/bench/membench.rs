@@ -5,7 +5,7 @@
 use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, MemPattern, Stmt, Traffic};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{batch, simulate_lowered, LoweredKernel, SimConfig};
 
 use super::ToolResult;
 
@@ -55,23 +55,42 @@ pub fn kernel(dir: Dir, pattern: MemPattern) -> Kernel {
     })
 }
 
-/// Run one (direction, pattern) case.
-pub fn run(dev: &DeviceSpec, dir: Dir, pattern: MemPattern) -> ToolResult {
+/// The one place a membench ToolResult label/timing pair is assembled —
+/// shared by the single-case and batched paths so labels cannot drift.
+fn tool_result(dir: Dir, pattern: MemPattern, timing: crate::sim::KernelTiming) -> ToolResult {
     ToolResult {
         tool: "opencl-benchmark/mem",
         case: format!("{} {:?}", dir.name(), pattern),
-        timing: simulate(&kernel(dir, pattern), dev, &SimConfig::default()),
+        timing,
     }
 }
 
-/// The four bars of Graph 3-5.
+/// Run one (direction, pattern) case.
+pub fn run(dev: &DeviceSpec, dir: Dir, pattern: MemPattern) -> ToolResult {
+    let lk = LoweredKernel::lower(&kernel(dir, pattern));
+    let timing = simulate_lowered(&lk, dev, &SimConfig::default());
+    tool_result(dir, pattern, timing)
+}
+
+/// The four bars of Graph 3-5, lowered once each and simulated as one
+/// batched sweep.
 pub fn graph_3_5(dev: &DeviceSpec) -> Vec<ToolResult> {
-    vec![
-        run(dev, Dir::Read, MemPattern::Coalesced),
-        run(dev, Dir::Write, MemPattern::Coalesced),
-        run(dev, Dir::Read, MemPattern::Misaligned),
-        run(dev, Dir::Write, MemPattern::Misaligned),
-    ]
+    let cases = [
+        (Dir::Read, MemPattern::Coalesced),
+        (Dir::Write, MemPattern::Coalesced),
+        (Dir::Read, MemPattern::Misaligned),
+        (Dir::Write, MemPattern::Misaligned),
+    ];
+    let lowered: Vec<LoweredKernel> = cases
+        .iter()
+        .map(|&(dir, pattern)| LoweredKernel::lower(&kernel(dir, pattern)))
+        .collect();
+    let timings = batch::sweep(&lowered, std::slice::from_ref(dev), &SimConfig::default());
+    cases
+        .iter()
+        .zip(timings)
+        .map(|(&(dir, pattern), timing)| tool_result(dir, pattern, timing))
+        .collect()
 }
 
 #[cfg(test)]

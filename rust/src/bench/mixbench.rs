@@ -17,7 +17,7 @@ use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, Stmt, Traffic};
 use crate::isa::pass::{apply_fmad, FmadPolicy};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{batch, simulate_lowered, LoweredKernel, SimConfig};
 
 use super::{Precision, ToolResult};
 
@@ -95,6 +95,22 @@ pub fn flops_per_byte(precision: Precision, compute_iters: u64) -> f64 {
     (compute_iters as f64 * ops + 1.0) / elem_bytes(precision) as f64
 }
 
+/// The one place a mixbench ToolResult label/timing pair is assembled —
+/// shared by the single-point and batched paths so their labels can never
+/// drift apart.
+fn tool_result(
+    precision: Precision,
+    compute_iters: u64,
+    policy: FmadPolicy,
+    timing: crate::sim::KernelTiming,
+) -> ToolResult {
+    ToolResult {
+        tool: "mixbench-cuda",
+        case: format!("{} c={} {}", precision.name(), compute_iters, policy.name()),
+        timing,
+    }
+}
+
 /// One sweep point: simulate `compute_iters` at a given fmad policy.
 pub fn run_point(
     dev: &DeviceSpec,
@@ -102,24 +118,29 @@ pub fn run_point(
     compute_iters: u64,
     policy: FmadPolicy,
 ) -> ToolResult {
-    let k = apply_fmad(&kernel(precision, compute_iters), policy);
-    ToolResult {
-        tool: "mixbench-cuda",
-        case: format!("{} c={} {}", precision.name(), compute_iters, policy.name()),
-        timing: simulate(&k, dev, &sim_config(precision)),
-    }
+    let lk = LoweredKernel::lower(&apply_fmad(&kernel(precision, compute_iters), policy));
+    let timing = simulate_lowered(&lk, dev, &sim_config(precision));
+    tool_result(precision, compute_iters, policy, timing)
 }
 
 /// The full operational-intensity sweep mixbench prints (powers of two up
-/// to 1024 iterations, as in the paper's Table 2-7 runs).
+/// to 1024 iterations, as in the paper's Table 2-7 runs). Each point is
+/// lowered once and the whole sweep runs as one batched [`crate::sim::batch`]
+/// pass.
 pub fn sweep(dev: &DeviceSpec, precision: Precision, policy: FmadPolicy) -> Vec<ToolResult> {
     let mut iters = vec![0u64, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
     // mixbench also samples odd low-intensity points; keep the knee dense.
     iters.extend([3, 6, 12, 24, 48, 96]);
     iters.sort_unstable();
+    let lowered: Vec<LoweredKernel> = iters
+        .iter()
+        .map(|&c| LoweredKernel::lower(&apply_fmad(&kernel(precision, c), policy)))
+        .collect();
+    let timings = batch::sweep(&lowered, std::slice::from_ref(dev), &sim_config(precision));
     iters
         .into_iter()
-        .map(|c| run_point(dev, precision, c, policy))
+        .zip(timings)
+        .map(|(c, timing)| tool_result(precision, c, policy, timing))
         .collect()
 }
 
@@ -195,6 +216,17 @@ mod tests {
         // Graph 3-2: FP16 "remains unaffected regardless of FMA status" —
         // packed-half mul/add dual-issue at 2× covers the decomposition.
         assert!((nofma / default - 1.0).abs() < 0.05, "{nofma} vs {default}");
+    }
+
+    #[test]
+    fn batched_sweep_matches_single_points() {
+        let dev = registry::cmp170hx();
+        let sw = sweep(&dev, Precision::Fp32, FmadPolicy::Decomposed);
+        for c in [0u64, 16, 1024] {
+            let single = run_point(&dev, Precision::Fp32, c, FmadPolicy::Decomposed);
+            let row = sw.iter().find(|r| r.case == single.case).unwrap();
+            assert_eq!(row.timing.time_s.to_bits(), single.timing.time_s.to_bits());
+        }
     }
 
     #[test]

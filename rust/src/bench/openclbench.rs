@@ -14,7 +14,7 @@ use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, Stmt, Traffic};
 use crate::isa::pass::{apply_fmad, FmadPolicy};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate_lowered, LoweredKernel, SimConfig};
 
 use super::{Precision, ToolResult};
 
@@ -65,13 +65,18 @@ pub fn kernel(precision: Precision) -> Kernel {
     .with_traffic(Traffic::coalesced(ITEMS * bytes, ITEMS * bytes))
 }
 
+/// Lower the peak kernel for one precision at one fmad policy — reusable
+/// across devices via [`crate::sim::simulate_lowered`] / [`crate::sim::batch`].
+pub fn lowered(precision: Precision, policy: FmadPolicy) -> LoweredKernel {
+    LoweredKernel::lower(&apply_fmad(&kernel(precision), policy))
+}
+
 /// Run the peak kernel for one precision at one fmad policy.
 pub fn peak(dev: &DeviceSpec, precision: Precision, policy: FmadPolicy) -> ToolResult {
-    let k = apply_fmad(&kernel(precision), policy);
     ToolResult {
         tool: "opencl-benchmark",
         case: format!("{} {}", precision.name(), policy.name()),
-        timing: simulate(&k, dev, &sim_config()),
+        timing: simulate_lowered(&lowered(precision, policy), dev, &sim_config()),
     }
 }
 

@@ -15,7 +15,7 @@
 use crate::device::DeviceSpec;
 use crate::isa::class::InstClass;
 use crate::isa::ir::{Kernel, KernelSource, MemPattern, Stmt, Traffic};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::{simulate_lowered, LoweredKernel, SimConfig};
 
 use super::{Precision, ToolResult};
 
@@ -79,7 +79,7 @@ pub fn run(dev: &DeviceSpec, precision: Precision) -> ToolResult {
     ToolResult {
         tool: "pytorch",
         case: precision.name().to_string(),
-        timing: simulate(&kernel(precision), dev, &cfg),
+        timing: simulate_lowered(&LoweredKernel::lower(&kernel(precision)), dev, &cfg),
     }
 }
 
@@ -124,8 +124,10 @@ mod tests {
         let a100 = registry::a100_pcie();
         let cmp = registry::cmp170hx();
         let cfg = SimConfig::default();
-        let on_a100 = simulate(&kernel_tensor(), &a100, &cfg);
-        let on_cmp = simulate(&kernel_tensor(), &cmp, &cfg);
+        // One lowering, two devices — the lower-once/simulate-many shape.
+        let lk = LoweredKernel::lower(&kernel_tensor());
+        let on_a100 = simulate_lowered(&lk, &a100, &cfg);
+        let on_cmp = simulate_lowered(&lk, &cmp, &cfg);
         assert!(on_a100.tflops() > 100.0, "{}", on_a100.tflops());
         assert!(on_cmp.time_s.is_infinite(), "CMP tensor cores are dark");
     }

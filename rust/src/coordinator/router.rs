@@ -42,7 +42,10 @@ pub struct Fleet {
 
 impl Fleet {
     /// Build a fleet from device specs, weighting by simulated decode
-    /// throughput on `quant` at `policy`'s fmad setting.
+    /// throughput on `quant` at `policy`'s fmad setting. The weighting
+    /// kernels are lowered once and swept across the whole fleet as one
+    /// batched [`crate::sim::batch`] run — fleet size no longer multiplies
+    /// IR walks.
     pub fn from_devices(
         devices: &[DeviceSpec],
         quant: &QuantFormat,
@@ -52,9 +55,10 @@ impl Fleet {
         let bench = LlamaBench::default();
         let nodes = devices
             .iter()
-            .map(|d| Node {
+            .zip(bench.run_across(devices, quant, fmad))
+            .map(|(d, r)| Node {
                 name: d.name,
-                weight: bench.run(d, quant, fmad).decode_tps,
+                weight: r.decode_tps,
                 outstanding: 0,
                 assigned: 0,
             })

@@ -31,16 +31,35 @@ pub enum StepPolicy {
     ShortestFirst,
 }
 
-/// Order the active (not-done) sequences for the next decode round.
-pub fn plan_round(policy: StepPolicy, seqs: &[SeqView]) -> Vec<usize> {
-    let mut active: Vec<&SeqView> = seqs.iter().filter(|s| !s.done()).collect();
-    match policy {
-        StepPolicy::RoundRobin => {}
-        StepPolicy::ShortestFirst => {
-            active.sort_by_key(|s| s.remaining());
-        }
+/// Order the active (not-done) sequences for the next decode round, writing
+/// the plan into a caller-provided buffer. The decode loop calls this every
+/// round — reusing `out` makes a planned round allocation-free after the
+/// first (no intermediate `Vec<&SeqView>`, no fresh result `Vec`).
+pub fn plan_round_into(policy: StepPolicy, seqs: &[SeqView], out: &mut Vec<usize>) {
+    out.clear();
+    // Positions first (so the sort key is an O(1) slice lookup), then map
+    // in place to sequence ids — one buffer, zero transient allocations.
+    out.extend(
+        seqs.iter()
+            .enumerate()
+            .filter(|(_, s)| !s.done())
+            .map(|(i, _)| i),
+    );
+    if policy == StepPolicy::ShortestFirst {
+        // Stable sort: ties keep submission order, as before.
+        out.sort_by_key(|&i| seqs[i].remaining());
     }
-    active.iter().map(|s| s.seq).collect()
+    for slot in out.iter_mut() {
+        *slot = seqs[*slot].seq;
+    }
+}
+
+/// Order the active (not-done) sequences for the next decode round.
+/// Allocating convenience over [`plan_round_into`].
+pub fn plan_round(policy: StepPolicy, seqs: &[SeqView]) -> Vec<usize> {
+    let mut out = Vec::with_capacity(seqs.len());
+    plan_round_into(policy, seqs, &mut out);
+    out
 }
 
 /// Total decode rounds a batch needs (the longest target governs — decode
@@ -79,6 +98,34 @@ mod tests {
         let seqs = [seq(0, 1, 4), seq(1, 0, 2)];
         assert_eq!(rounds_needed(&seqs), 3);
         assert_eq!(rounds_needed(&[]), 0);
+    }
+
+    #[test]
+    fn plan_round_into_reuses_the_buffer() {
+        let mut buf = vec![99, 98, 97, 96]; // stale garbage must be cleared
+        let seqs = [seq(0, 0, 9), seq(1, 0, 2), seq(2, 3, 3)];
+        plan_round_into(StepPolicy::ShortestFirst, &seqs, &mut buf);
+        assert_eq!(buf, vec![1, 0]);
+        plan_round_into(StepPolicy::RoundRobin, &seqs, &mut buf);
+        assert_eq!(buf, vec![0, 1]);
+    }
+
+    #[test]
+    fn prop_plan_round_into_matches_plan_round() {
+        forall(0xB0F, 300, |rng: &mut Rng| {
+            let n = rng.range(0, 12) as usize;
+            let seqs: Vec<SeqView> = (0..n)
+                .map(|i| seq(i, rng.range(0, 8) as usize, rng.range(0, 8) as usize))
+                .collect();
+            let policy = if rng.chance(0.5) {
+                StepPolicy::RoundRobin
+            } else {
+                StepPolicy::ShortestFirst
+            };
+            let mut buf = Vec::new();
+            plan_round_into(policy, &seqs, &mut buf);
+            assert_eq!(buf, plan_round(policy, &seqs));
+        });
     }
 
     #[test]

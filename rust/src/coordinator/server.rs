@@ -26,7 +26,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::kv::KvSlots;
 use super::metrics::Metrics;
 use super::request::{GenRequest, GenResponse};
-use super::scheduler::{plan_round, SeqView, StepPolicy};
+use super::scheduler::{plan_round_into, SeqView, StepPolicy};
 
 /// Server configuration.
 #[derive(Clone, Debug)]
@@ -269,21 +269,22 @@ fn serve_batch(
     }
 
     // --- decode rounds ---
+    // Round-planning buffers reused across the whole batch: after the first
+    // round, planning allocates nothing.
+    let mut views: Vec<SeqView> = Vec::with_capacity(live.len());
+    let mut plan: Vec<usize> = Vec::with_capacity(live.len());
     loop {
-        let views: Vec<SeqView> = live
-            .iter()
-            .enumerate()
-            .map(|(i, l)| SeqView {
-                seq: i,
-                generated: l.tokens.len(),
-                target: l.req.max_tokens.max(1),
-            })
-            .collect();
-        let plan = plan_round(config.step_policy, &views);
+        views.clear();
+        views.extend(live.iter().enumerate().map(|(i, l)| SeqView {
+            seq: i,
+            generated: l.tokens.len(),
+            target: l.req.max_tokens.max(1),
+        }));
+        plan_round_into(config.step_policy, &views, &mut plan);
         if plan.is_empty() {
             break;
         }
-        for idx in plan {
+        for &idx in &plan {
             let l = &mut live[idx];
             let token = *l.tokens.last().unwrap();
             match runtime.decode(&mut l.state, token) {

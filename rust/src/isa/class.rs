@@ -94,7 +94,9 @@ pub enum InstClass {
     Stg,
 }
 
-/// All classes, for registry/table iteration.
+/// All classes, for registry/table iteration. Ordered by discriminant so
+/// that `ALL_CLASSES[c.index()] == c` — the array-backed
+/// [`crate::isa::InstMix`] relies on this correspondence.
 pub const ALL_CLASSES: &[InstClass] = &[
     InstClass::Ffma,
     InstClass::Fmul,
@@ -118,7 +120,41 @@ pub const ALL_CLASSES: &[InstClass] = &[
     InstClass::Stg,
 ];
 
+/// Number of instruction classes — the dimension of the flat count array
+/// inside [`crate::isa::InstMix`].
+pub const N_CLASSES: usize = ALL_CLASSES.len();
+
+/// All execution pipes, ordered by discriminant (`Pipe::index` order).
+pub const ALL_PIPES: &[Pipe] = &[Pipe::Core, Pipe::Fp64, Pipe::Half2, Pipe::Tensor, Pipe::Lsu];
+
+/// Number of execution pipes — the dimension of per-pipe accumulators in
+/// the timing engine.
+pub const N_PIPES: usize = ALL_PIPES.len();
+
+impl Pipe {
+    /// Dense index of this pipe (discriminant order; matches [`ALL_PIPES`]).
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Pipe::Core => "core",
+            Pipe::Fp64 => "fp64",
+            Pipe::Half2 => "half2",
+            Pipe::Tensor => "tensor",
+            Pipe::Lsu => "lsu",
+        }
+    }
+}
+
 impl InstClass {
+    /// Dense index of this class (discriminant order; matches
+    /// [`ALL_CLASSES`]). O(1) — the array-mix lookup key.
+    pub const fn index(self) -> usize {
+        self as usize
+    }
+
     /// Pipe this class issues on.
     pub fn pipe(self) -> Pipe {
         use InstClass::*;
@@ -279,6 +315,24 @@ mod tests {
     fn dp4a_counts_eight_iops() {
         assert_eq!(InstClass::Dp4a.iops(), 8);
         assert_eq!(InstClass::Imad.iops(), 2);
+    }
+
+    #[test]
+    fn all_classes_is_in_discriminant_order() {
+        // The array-backed InstMix indexes by discriminant; ALL_CLASSES must
+        // enumerate exactly that order with no gaps or duplicates.
+        assert_eq!(ALL_CLASSES.len(), N_CLASSES);
+        for (i, &c) in ALL_CLASSES.iter().enumerate() {
+            assert_eq!(c.index(), i, "{} out of order", c.name());
+        }
+    }
+
+    #[test]
+    fn all_pipes_is_in_discriminant_order() {
+        assert_eq!(ALL_PIPES.len(), N_PIPES);
+        for (i, &p) in ALL_PIPES.iter().enumerate() {
+            assert_eq!(p.index(), i, "{} out of order", p.name());
+        }
     }
 
     #[test]

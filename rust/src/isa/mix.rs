@@ -1,18 +1,34 @@
 //! Flat instruction mixes — the lowered form the timing engine consumes.
 
-use std::collections::BTreeMap;
-
-use super::class::{InstClass, ALL_CLASSES};
+use super::class::{InstClass, ALL_CLASSES, N_CLASSES};
 use super::ir::{Kernel, Stmt};
 
 /// Whole-grid dynamic instruction counts per class.
 ///
-/// Uses a `BTreeMap` keyed by class name order via discriminant-stable
-/// iteration of [`ALL_CLASSES`]; counts are grid totals (per-thread counts ×
-/// thread count).
-#[derive(Clone, Debug, Default, PartialEq, Eq)]
+/// Backed by a fixed `[u64; N_CLASSES]` indexed by [`InstClass::index`] —
+/// `get`/`add` are O(1) array accesses with zero heap allocation, and the
+/// `total`/`flops`/`iops`/`fused` aggregates are maintained incrementally on
+/// every mutation so the hot queries in [`crate::sim`] are plain field
+/// reads. Counts are grid totals (per-thread counts × thread count).
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct InstMix {
-    counts: BTreeMap<&'static str, u64>,
+    counts: [u64; N_CLASSES],
+    total: u64,
+    flops: u64,
+    iops: u64,
+    fused: u64,
+}
+
+impl Default for InstMix {
+    fn default() -> Self {
+        InstMix {
+            counts: [0; N_CLASSES],
+            total: 0,
+            flops: 0,
+            iops: 0,
+            fused: 0,
+        }
+    }
 }
 
 impl InstMix {
@@ -40,59 +56,67 @@ impl InstMix {
         if count == 0 {
             return;
         }
-        *self.counts.entry(class.name()).or_insert(0) += count;
+        self.counts[class.index()] += count;
+        self.total += count;
+        self.flops += count * class.flops();
+        self.iops += count * class.iops();
+        if class.is_fused() {
+            self.fused += count;
+        }
     }
 
     pub fn get(&self, class: InstClass) -> u64 {
-        self.counts.get(class.name()).copied().unwrap_or(0)
+        self.counts[class.index()]
     }
 
     /// Multiply every count (used to go per-thread → whole grid, or to
     /// replicate a layer's mix across a model).
     pub fn scale(&mut self, by: u64) {
-        for v in self.counts.values_mut() {
+        for v in self.counts.iter_mut() {
             *v *= by;
         }
+        self.total *= by;
+        self.flops *= by;
+        self.iops *= by;
+        self.fused *= by;
     }
 
     /// Merge another mix into this one.
     pub fn merge(&mut self, other: &InstMix) {
-        for (k, v) in &other.counts {
-            *self.counts.entry(k).or_insert(0) += v;
+        for (v, o) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *v += o;
         }
+        self.total += other.total;
+        self.flops += other.flops;
+        self.iops += other.iops;
+        self.fused += other.fused;
     }
 
     /// Total dynamic instructions.
     pub fn total(&self) -> u64 {
-        self.counts.values().sum()
+        self.total
     }
 
     /// Total floating-point operations represented by the mix.
     pub fn flops(&self) -> u64 {
-        ALL_CLASSES
-            .iter()
-            .map(|&c| self.get(c) * c.flops())
-            .sum()
+        self.flops
     }
 
     /// Total integer operations represented by the mix.
     pub fn iops(&self) -> u64 {
-        ALL_CLASSES.iter().map(|&c| self.get(c) * c.iops()).sum()
+        self.iops
     }
 
     /// Count of fused-FMA-class instructions (the limiter's trigger set).
     pub fn fused(&self) -> u64 {
-        ALL_CLASSES
-            .iter()
-            .filter(|c| c.is_fused())
-            .map(|&c| self.get(c))
-            .sum()
+        self.fused
     }
 
-    /// Iterate `(class, count)` over nonzero classes.
+    /// Iterate `(class, count)` over nonzero classes, in [`ALL_CLASSES`]
+    /// (discriminant) order.
     pub fn iter(&self) -> impl Iterator<Item = (InstClass, u64)> + '_ {
         ALL_CLASSES.iter().filter_map(move |&c| {
-            let n = self.get(c);
+            let n = self.counts[c.index()];
             (n > 0).then_some((c, n))
         })
     }
@@ -174,5 +198,142 @@ mod tests {
         mix.add(Ffma, 0);
         assert_eq!(mix.total(), 0);
         assert_eq!(mix.iter().count(), 0);
+    }
+
+    /// Reference model with the previous implementation's semantics: a
+    /// string-keyed map of counts where every query recomputes from scratch.
+    #[derive(Default)]
+    struct MapMix {
+        counts: std::collections::BTreeMap<&'static str, u64>,
+    }
+
+    impl MapMix {
+        fn add(&mut self, class: InstClass, count: u64) {
+            if count == 0 {
+                return;
+            }
+            *self.counts.entry(class.name()).or_insert(0) += count;
+        }
+        fn get(&self, class: InstClass) -> u64 {
+            self.counts.get(class.name()).copied().unwrap_or(0)
+        }
+        fn scale(&mut self, by: u64) {
+            for v in self.counts.values_mut() {
+                *v *= by;
+            }
+        }
+        fn merge(&mut self, other: &MapMix) {
+            for (k, v) in &other.counts {
+                *self.counts.entry(k).or_insert(0) += v;
+            }
+        }
+        fn total(&self) -> u64 {
+            self.counts.values().sum()
+        }
+        fn flops(&self) -> u64 {
+            ALL_CLASSES.iter().map(|&c| self.get(c) * c.flops()).sum()
+        }
+        fn iops(&self) -> u64 {
+            ALL_CLASSES.iter().map(|&c| self.get(c) * c.iops()).sum()
+        }
+        fn fused(&self) -> u64 {
+            ALL_CLASSES
+                .iter()
+                .filter(|c| c.is_fused())
+                .map(|&c| self.get(c))
+                .sum()
+        }
+    }
+
+    fn assert_same(mix: &InstMix, model: &MapMix) {
+        for &c in ALL_CLASSES {
+            assert_eq!(mix.get(c), model.get(c), "count mismatch for {}", c.name());
+        }
+        assert_eq!(mix.total(), model.total());
+        assert_eq!(mix.flops(), model.flops());
+        assert_eq!(mix.iops(), model.iops());
+        assert_eq!(mix.fused(), model.fused());
+        // iter() yields exactly the nonzero classes.
+        let nonzero: Vec<(InstClass, u64)> = mix.iter().collect();
+        for (c, n) in &nonzero {
+            assert_eq!(model.get(*c), *n);
+            assert!(*n > 0);
+        }
+        assert_eq!(nonzero.len(), model.counts.values().filter(|&&v| v > 0).count());
+    }
+
+    #[test]
+    fn prop_array_mix_matches_map_semantics() {
+        // The array-backed mix must be observationally identical to the old
+        // BTreeMap-backed implementation over arbitrary interleavings of
+        // add / merge / scale, including the incremental aggregates.
+        forall(0xA44A7, 300, |rng: &mut Rng| {
+            let mut mix = InstMix::new();
+            let mut model = MapMix::default();
+            for _ in 0..rng.range(1, 24) {
+                match rng.below(4) {
+                    0 | 1 => {
+                        let class = *rng.pick(ALL_CLASSES);
+                        let count = rng.range(0, 1 << 16);
+                        mix.add(class, count);
+                        model.add(class, count);
+                    }
+                    2 => {
+                        let mut other = InstMix::new();
+                        let mut other_model = MapMix::default();
+                        for _ in 0..rng.range(0, 5) {
+                            let class = *rng.pick(ALL_CLASSES);
+                            let count = rng.range(1, 1 << 16);
+                            other.add(class, count);
+                            other_model.add(class, count);
+                        }
+                        mix.merge(&other);
+                        model.merge(&other_model);
+                    }
+                    _ => {
+                        // Scale factors kept small so counts × class FLOP
+                        // weights stay far from u64 overflow over 24 steps.
+                        let by = rng.range(0, 2);
+                        mix.scale(by);
+                        model.scale(by);
+                    }
+                }
+                assert_same(&mix, &model);
+            }
+        });
+    }
+
+    #[test]
+    fn prop_from_kernel_matches_map_semantics() {
+        // Lowering arbitrary random kernels gives identical mixes under both
+        // representations (the old path built the map via the same walk).
+        forall(0x1117, 200, |rng: &mut Rng| {
+            fn gen_body(rng: &mut Rng, depth: u32) -> Vec<Stmt> {
+                let n = rng.range(1, 5);
+                (0..n)
+                    .map(|_| {
+                        if depth < 3 && rng.chance(0.3) {
+                            Stmt::looped(rng.range(1, 6), gen_body(rng, depth + 1))
+                        } else {
+                            Stmt::op(*rng.pick(ALL_CLASSES), rng.range(0, 32))
+                        }
+                    })
+                    .collect()
+            }
+            let k = kernel_with(gen_body(rng, 0), rng.range(1, 1 << 16));
+            let mix = InstMix::from_kernel(&k);
+            let mut model = MapMix::default();
+            fn walk(stmts: &[Stmt], mult: u64, model: &mut MapMix) {
+                for s in stmts {
+                    match s {
+                        Stmt::Op(op) => model.add(op.class, op.count * mult),
+                        Stmt::Loop { trips, body } => walk(body, mult * trips, model),
+                    }
+                }
+            }
+            walk(&k.body, 1, &mut model);
+            model.scale(k.threads);
+            assert_same(&mix, &model);
+        });
     }
 }

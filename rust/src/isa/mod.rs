@@ -20,7 +20,7 @@ pub mod ir;
 pub mod mix;
 pub mod pass;
 
-pub use class::{DType, InstClass, Pipe};
+pub use class::{DType, InstClass, Pipe, ALL_CLASSES, ALL_PIPES, N_CLASSES, N_PIPES};
 pub use ir::{Kernel, KernelSource, MemPattern, Op, Stmt, Traffic};
 pub use mix::InstMix;
 pub use pass::FmadPolicy;

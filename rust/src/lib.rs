@@ -14,6 +14,16 @@
 //!
 //! Layer map (see DESIGN.md):
 //! - **L3 (this crate)** — simulator substrate + serving coordinator + CLI.
+//!   The simulation hot path is a *lower-once / simulate-many* pipeline:
+//!   [`isa::InstMix`] is a fixed array indexed by instruction-class
+//!   discriminant (O(1) counts, incrementally-maintained FLOP/IOP/fused
+//!   aggregates); [`sim::LoweredKernel`] caches one IR walk per kernel; and
+//!   [`sim::batch`] fans `kernels × devices × configs` sweeps across worker
+//!   threads with results bit-identical to (and ordered like) the
+//!   sequential loop. Single one-shot calls use [`sim::simulate`]; anything
+//!   sweep-shaped — bench-port intensity sweeps, the llama-bench
+//!   quant × policy grid, figure regeneration, fleet weighting — lowers
+//!   once and goes through [`sim::simulate_lowered`] / [`sim::batch`].
 //! - **L2 (python/compile/model.py)** — JAX tiny-Qwen prefill/decode,
 //!   AOT-lowered once to `artifacts/*.hlo.txt`.
 //! - **L1 (python/compile/kernels/)** — Pallas kernels (mixbench chain,

@@ -1,9 +1,17 @@
 //! llama-bench equivalent: pp512 / tg128 over the six quant formats
 //! (§4.2–§4.4), with the paper's A100-scaled theoretical overlays.
+//!
+//! Sweep shape: every cell of the 6-quant × 2-policy grid lowers its
+//! prefill and decode kernels **once** ([`crate::sim::LoweredKernel`]) and
+//! the whole grid runs as one batched [`crate::sim::batch`] sweep —
+//! [`LlamaBench::run_all`] is the one-kernel-walk-per-cell path the report
+//! figures, the coordinator overlay, and the fleet router all consume.
 
 use crate::device::DeviceSpec;
+use crate::isa::class::InstClass;
 use crate::isa::pass::{apply_fmad, FmadPolicy};
-use crate::sim::{simulate, SimConfig};
+use crate::sim::batch::{self, SweepJob};
+use crate::sim::{simulate_lowered, KernelTiming, LoweredKernel, SimConfig};
 
 use super::kernels::{
     self, decode_kernel, launch_overhead, prefill_kernel, readback_overhead,
@@ -72,6 +80,20 @@ impl BenchResult {
     }
 }
 
+/// One (quant, policy) grid cell with its kernels lowered exactly once.
+/// Reusable across any number of devices/configs — build with
+/// [`LlamaBench::lower_cell`] (or the full grid via
+/// [`LlamaBench::lower_grid`]).
+#[derive(Clone, Debug)]
+pub struct LoweredCell {
+    pub quant: QuantFormat,
+    pub policy: FmadPolicy,
+    pub prefill: LoweredKernel,
+    pub prefill_cfg: SimConfig,
+    pub decode: LoweredKernel,
+    pub decode_cfg: SimConfig,
+}
+
 /// The llama-bench driver.
 pub struct LlamaBench {
     pub model: ModelDesc,
@@ -90,7 +112,9 @@ impl Default for LlamaBench {
 }
 
 impl LlamaBench {
-    fn prefill_config(quant: &QuantFormat) -> SimConfig {
+    /// Engine config for one quant's prefill cell (public so benchmarks can
+    /// replicate the exact sweep workload).
+    pub fn prefill_config(quant: &QuantFormat) -> SimConfig {
         SimConfig {
             issue_efficiency: if quant.fmad_immune() {
                 CUBLAS_FALLBACK_EFF
@@ -104,7 +128,7 @@ impl LlamaBench {
 
     /// Decode kernels are GEMV-class (streaming, no tiling) and sustain a
     /// higher issue fraction than the blocked GEMMs.
-    fn decode_config() -> SimConfig {
+    pub fn decode_config() -> SimConfig {
         SimConfig {
             issue_efficiency: 0.7,
             ignore_occupancy: true,
@@ -112,42 +136,72 @@ impl LlamaBench {
         }
     }
 
-    /// Prefill speed (pp512), tokens/s.
-    pub fn prefill(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> f64 {
-        let k = apply_fmad(
+    /// Lower just the prefill kernel of one (quant, policy) cell.
+    fn lower_prefill(&self, quant: &QuantFormat, policy: FmadPolicy) -> LoweredKernel {
+        LoweredKernel::lower(&apply_fmad(
             &prefill_kernel(&self.model, quant, self.prompt_tokens),
             policy,
-        );
-        let t = simulate(&k, dev, &Self::prefill_config(quant));
+        ))
+    }
+
+    /// Lower just the decode kernel of one (quant, policy) cell, at the
+    /// midpoint KV position.
+    fn lower_decode(&self, quant: &QuantFormat, policy: FmadPolicy) -> LoweredKernel {
+        let pos = self.gen_tokens / 2;
+        LoweredKernel::lower(&apply_fmad(&decode_kernel(&self.model, quant, pos), policy))
+    }
+
+    /// Lower one (quant, policy) cell: both kernels walked exactly once.
+    pub fn lower_cell(&self, quant: &QuantFormat, policy: FmadPolicy) -> LoweredCell {
+        LoweredCell {
+            quant: *quant,
+            policy,
+            prefill: self.lower_prefill(quant, policy),
+            prefill_cfg: Self::prefill_config(quant),
+            decode: self.lower_decode(quant, policy),
+            decode_cfg: Self::decode_config(),
+        }
+    }
+
+    /// Lower the full Graph 4-x grid (six quants × both policies), in the
+    /// paper's order: quant-major, `Fused` before `Decomposed`.
+    pub fn lower_grid(&self) -> Vec<LoweredCell> {
+        let mut cells = Vec::with_capacity(quant::ALL.len() * 2);
+        for q in quant::ALL {
+            for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+                cells.push(self.lower_cell(q, policy));
+            }
+        }
+        cells
+    }
+
+    /// Prefill tokens/s from a simulated prefill timing on `dev`.
+    fn prefill_tps_from(&self, t: &KernelTiming, dev: &DeviceSpec) -> f64 {
         // per-batch launch overhead (amortized over 512 tokens) + readback
-        let total = t.time_s + launch_overhead(&self.model) + readback_overhead(&self.model, &dev.pcie);
+        let total =
+            t.time_s + launch_overhead(&self.model) + readback_overhead(&self.model, &dev.pcie);
         self.prompt_tokens as f64 / total
     }
 
-    /// Decode speed (tg128) and mean power: averaged over the generation,
-    /// evaluated at the midpoint KV position (the cache grows linearly and
-    /// every term is ~linear in position).
-    pub fn decode(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> (f64, f64) {
-        let pos = self.gen_tokens / 2;
-        let k = apply_fmad(&decode_kernel(&self.model, quant, pos), policy);
-        let t = simulate(&k, dev, &Self::decode_config());
+    /// Decode tokens/s and mean board power from a simulated decode timing.
+    ///
+    /// nvidia-smi-style decode power (Graph 4-3). Empirically calibrated
+    /// residency model:
+    ///   P = static + mem + κ·(issue rate, unpack-weighted) [+ boost]
+    /// where the boost bonus models the DVFS governor pinning the card
+    /// at its top clock/voltage point once the instruction stream's
+    /// burst issue rate crosses a demand threshold — which the
+    /// decomposed (noFMA) streams of the k-quants do and the throttled
+    /// default streams never do. The result: noFMA decodes faster but
+    /// *less efficiently* (the paper's §4.4 observation), while the
+    /// default card never fills its envelope.
+    fn decode_from(&self, decode: &LoweredKernel, t: &KernelTiming, dev: &DeviceSpec) -> (f64, f64) {
         let overhead = launch_overhead(&self.model) + readback_overhead(&self.model, &dev.pcie);
         let token_time = t.time_s + overhead;
         let tps = 1.0 / token_time;
 
-        // nvidia-smi-style decode power (Graph 4-3). Empirically calibrated
-        // residency model:
-        //   P = static + mem + κ·(issue rate, unpack-weighted) [+ boost]
-        // where the boost bonus models the DVFS governor pinning the card
-        // at its top clock/voltage point once the instruction stream's
-        // burst issue rate crosses a demand threshold — which the
-        // decomposed (noFMA) streams of the k-quants do and the throttled
-        // default streams never do. The result: noFMA decodes faster but
-        // *less efficiently* (the paper's §4.4 observation), while the
-        // default card never fills its envelope.
-        use crate::isa::class::InstClass;
-        use crate::isa::mix::InstMix;
-        let mix = InstMix::from_kernel(&k);
+        // The mix comes from the lowered kernel — no second IR walk.
+        let mix = &decode.mix;
         // Integer unpack traffic lights up the operand-collector/register
         // paths disproportionately; weight it double.
         let weighted_insts = (mix.total() + mix.get(InstClass::Iadd)) as f64;
@@ -159,19 +213,24 @@ impl LlamaBench {
         let peak_core = dev.sms as f64 * dev.rates.fp32 * dev.boost_clock_hz;
         let boost_w = if burst_rate / peak_core > 0.12 { 25.0 } else { 0.0 };
         let mem_dyn = t.bytes * 62.0e-12 / token_time;
-        let power = (dev.power.static_w + mem_dyn + KAPPA * issue_rate + boost_w)
-            .min(dev.tdp_w);
+        let power = (dev.power.static_w + mem_dyn + KAPPA * issue_rate + boost_w).min(dev.tdp_w);
         (tps, power)
     }
 
-    /// Run one (quant, policy) cell of Graph 4-1/4-2/4-3.
-    pub fn run(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> BenchResult {
-        let (a100_pp, a100_tg) = a100_ref(quant);
-        let prefill_tps = self.prefill(dev, quant, policy);
-        let (decode_tps, decode_power_w) = self.decode(dev, quant, policy);
+    /// Assemble one cell's [`BenchResult`] from its simulated timings.
+    fn assemble(
+        &self,
+        cell: &LoweredCell,
+        prefill_t: &KernelTiming,
+        decode_t: &KernelTiming,
+        dev: &DeviceSpec,
+    ) -> BenchResult {
+        let (a100_pp, a100_tg) = a100_ref(&cell.quant);
+        let prefill_tps = self.prefill_tps_from(prefill_t, dev);
+        let (decode_tps, decode_power_w) = self.decode_from(&cell.decode, decode_t, dev);
         BenchResult {
-            quant: quant.name,
-            policy,
+            quant: cell.quant.name,
+            policy: cell.policy,
             prefill_tps,
             decode_tps,
             theoretical_prefill_tps: a100_pp * SM_RATIO,
@@ -181,16 +240,81 @@ impl LlamaBench {
         }
     }
 
-    /// The full grid the paper's Graphs 4-1…4-3 plot: six quants × two
-    /// policies.
+    /// Prefill speed (pp512), tokens/s. Lowers only the prefill kernel.
+    pub fn prefill(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> f64 {
+        let lk = self.lower_prefill(quant, policy);
+        let t = simulate_lowered(&lk, dev, &Self::prefill_config(quant));
+        self.prefill_tps_from(&t, dev)
+    }
+
+    /// Decode speed (tg128) and mean power: averaged over the generation,
+    /// evaluated at the midpoint KV position (the cache grows linearly and
+    /// every term is ~linear in position). Lowers only the decode kernel.
+    pub fn decode(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> (f64, f64) {
+        let lk = self.lower_decode(quant, policy);
+        let t = simulate_lowered(&lk, dev, &Self::decode_config());
+        self.decode_from(&lk, &t, dev)
+    }
+
+    /// Run one (quant, policy) cell of Graph 4-1/4-2/4-3. Both kernels are
+    /// lowered once and simulated once.
+    pub fn run(&self, dev: &DeviceSpec, quant: &QuantFormat, policy: FmadPolicy) -> BenchResult {
+        let cell = self.lower_cell(quant, policy);
+        let prefill_t = simulate_lowered(&cell.prefill, dev, &cell.prefill_cfg);
+        let decode_t = simulate_lowered(&cell.decode, dev, &cell.decode_cfg);
+        self.assemble(&cell, &prefill_t, &decode_t, dev)
+    }
+
+    /// The full grid the paper's Graphs 4-1…4-3 plot — six quants × two
+    /// policies — as **one batched sweep**: 12 cells lowered once (24
+    /// kernel walks total), then all 24 simulations fanned across worker
+    /// threads. Results are ordered quant-major, `Fused` before
+    /// `Decomposed`, and numerically identical to calling [`LlamaBench::run`]
+    /// per cell.
     pub fn run_all(&self, dev: &DeviceSpec) -> Vec<BenchResult> {
-        let mut out = Vec::new();
-        for q in quant::ALL {
-            for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
-                out.push(self.run(dev, q, policy));
-            }
+        let cells = self.lower_grid();
+        self.run_cells(&cells, dev)
+    }
+
+    /// Simulate pre-lowered cells on one device as a batched sweep.
+    pub fn run_cells(&self, cells: &[LoweredCell], dev: &DeviceSpec) -> Vec<BenchResult> {
+        // Jobs interleaved (prefill, decode) per cell — job-major output
+        // keeps each cell's pair adjacent.
+        let mut jobs = Vec::with_capacity(cells.len() * 2);
+        for cell in cells {
+            jobs.push(SweepJob { kernel: &cell.prefill, cfg: cell.prefill_cfg });
+            jobs.push(SweepJob { kernel: &cell.decode, cfg: cell.decode_cfg });
         }
-        out
+        let timings = batch::run_jobs_on(&jobs, dev);
+        cells
+            .iter()
+            .zip(timings.chunks(2))
+            .map(|(cell, pair)| self.assemble(cell, &pair[0], &pair[1], dev))
+            .collect()
+    }
+
+    /// One (quant, policy) cell across many devices — the fleet-weighting
+    /// sweep: kernels lowered once, `2 × devices` simulations batched.
+    /// Results are ordered like `devices`.
+    pub fn run_across(
+        &self,
+        devices: &[DeviceSpec],
+        quant: &QuantFormat,
+        policy: FmadPolicy,
+    ) -> Vec<BenchResult> {
+        let cell = self.lower_cell(quant, policy);
+        let jobs = [
+            SweepJob { kernel: &cell.prefill, cfg: cell.prefill_cfg },
+            SweepJob { kernel: &cell.decode, cfg: cell.decode_cfg },
+        ];
+        // Job-major: [prefill×d0, prefill×d1, …, decode×d0, decode×d1, …].
+        let timings = batch::run_jobs(&jobs, devices);
+        let nd = devices.len();
+        devices
+            .iter()
+            .enumerate()
+            .map(|(d, dev)| self.assemble(&cell, &timings[d], &timings[nd + d], dev))
+            .collect()
     }
 
     /// VRAM check (§4.1: model chosen so all layers fit in 8 GB).
@@ -392,5 +516,44 @@ mod tests {
     fn run_all_covers_the_full_grid() {
         let rows = bench().run_all(&cmp());
         assert_eq!(rows.len(), 12);
+    }
+
+    #[test]
+    fn batched_grid_matches_per_cell_runs_exactly() {
+        // The batched sweep must be numerically identical to the one-cell
+        // path — same kernels, same configs, same math, just fewer IR
+        // walks and more threads.
+        let b = bench();
+        let d = cmp();
+        let batched = b.run_all(&d);
+        let mut i = 0;
+        for q in ALL {
+            for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
+                let single = b.run(&d, q, policy);
+                let row = &batched[i];
+                assert_eq!(row.quant, single.quant);
+                assert_eq!(row.policy, single.policy);
+                assert_eq!(row.prefill_tps.to_bits(), single.prefill_tps.to_bits());
+                assert_eq!(row.decode_tps.to_bits(), single.decode_tps.to_bits());
+                assert_eq!(
+                    row.decode_power_w.to_bits(),
+                    single.decode_power_w.to_bits()
+                );
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn run_across_matches_per_device_runs() {
+        let b = bench();
+        let devices = [registry::cmp170hx(), registry::cmp170hx_x16()];
+        let across = b.run_across(&devices, &Q4_K_M, FmadPolicy::Decomposed);
+        assert_eq!(across.len(), 2);
+        for (row, dev) in across.iter().zip(devices.iter()) {
+            let single = b.run(dev, &Q4_K_M, FmadPolicy::Decomposed);
+            assert_eq!(row.decode_tps.to_bits(), single.decode_tps.to_bits());
+            assert_eq!(row.prefill_tps.to_bits(), single.prefill_tps.to_bits());
+        }
     }
 }

@@ -6,7 +6,6 @@ use crate::calibration as cal;
 use crate::device::{registry, DeviceSpec};
 use crate::isa::pass::FmadPolicy;
 use crate::llm::llamabench::LlamaBench;
-use crate::llm::quant;
 use crate::market::sales::{estimate_sales, Scenario};
 
 fn flops_suite(dev: &DeviceSpec, precision: Precision, title: &str, unit: &'static str) -> Table {
@@ -15,7 +14,7 @@ fn flops_suite(dev: &DeviceSpec, precision: Precision, title: &str, unit: &'stat
     let value = |r: &crate::bench::ToolResult| if integer { r.tiops() } else { r.tflops() };
 
     let torch = torchgemm::run(dev, precision);
-    t.push(Row::new(format!("PyTorch-CUDA"), value(&torch)));
+    t.push(Row::new("PyTorch-CUDA", value(&torch)));
     for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
         let ocl = openclbench::peak(dev, precision, policy);
         t.push(Row::new(
@@ -145,29 +144,33 @@ pub fn graph_3_5() -> Table {
     t
 }
 
+/// The llama-bench grid, simulated once as a batched sweep. Returned
+/// quant-major with `Fused` before `Decomposed` — `chunks(2)` walks it in
+/// paper order. Each §4 figure consumes one of these instead of re-running
+/// (and re-lowering) the whole grid per row.
+fn llama_grid(dev: &DeviceSpec) -> Vec<crate::llm::llamabench::BenchResult> {
+    LlamaBench::default().run_all(dev)
+}
+
 /// Graph 4-1 — llama-bench prefill speeds across quants/policies with the
 /// SM-scaled A100 theoretical overlay.
 pub fn graph_4_1() -> Table {
     let dev = registry::cmp170hx();
-    let bench = LlamaBench::default();
     let mut t = Table::new(
         "Graph 4-1: llama-bench prefill (Qwen2.5-1.5B, pp512)",
         "tokens/s",
     );
-    for q in quant::ALL {
-        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
-            let r = bench.run(&dev, q, policy);
+    for pair in llama_grid(&dev).chunks(2) {
+        for r in pair {
             t.push(
-                Row::new(format!("{} ({})", q.name, policy.name()), r.prefill_tps).note(format!(
-                    "{:.0}% of theoretical",
-                    100.0 * r.prefill_fraction()
-                )),
+                Row::new(format!("{} ({})", r.quant, r.policy.name()), r.prefill_tps).note(
+                    format!("{:.0}% of theoretical", 100.0 * r.prefill_fraction()),
+                ),
             );
         }
-        let r = bench.run(&dev, q, FmadPolicy::Fused);
         t.push(Row::new(
-            format!("{} (Theoretical Perf.)", q.name),
-            r.theoretical_prefill_tps,
+            format!("{} (Theoretical Perf.)", pair[0].quant),
+            pair[0].theoretical_prefill_tps,
         ));
     }
     t
@@ -176,25 +179,21 @@ pub fn graph_4_1() -> Table {
 /// Graph 4-2 — decode speeds with the BW-scaled overlay.
 pub fn graph_4_2() -> Table {
     let dev = registry::cmp170hx();
-    let bench = LlamaBench::default();
     let mut t = Table::new(
         "Graph 4-2: llama-bench decode (Qwen2.5-1.5B, tg128)",
         "tokens/s",
     );
-    for q in quant::ALL {
-        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
-            let r = bench.run(&dev, q, policy);
+    for pair in llama_grid(&dev).chunks(2) {
+        for r in pair {
             t.push(
-                Row::new(format!("{} ({})", q.name, policy.name()), r.decode_tps).note(format!(
-                    "{:.0}% of theoretical",
-                    100.0 * r.decode_fraction()
-                )),
+                Row::new(format!("{} ({})", r.quant, r.policy.name()), r.decode_tps).note(
+                    format!("{:.0}% of theoretical", 100.0 * r.decode_fraction()),
+                ),
             );
         }
-        let r = bench.run(&dev, q, FmadPolicy::Fused);
         t.push(Row::new(
-            format!("{} (Theoretical Perf.)", q.name),
-            r.theoretical_decode_tps,
+            format!("{} (Theoretical Perf.)", pair[0].quant),
+            pair[0].theoretical_decode_tps,
         ));
     }
     t
@@ -203,23 +202,17 @@ pub fn graph_4_2() -> Table {
 /// Graph 4-3 — decode power efficiency (tokens/s/W).
 pub fn graph_4_3() -> Table {
     let dev = registry::cmp170hx();
-    let bench = LlamaBench::default();
     let mut t = Table::new("Graph 4-3: decode power efficiency", "tokens/s/W");
-    for q in quant::ALL {
-        for policy in [FmadPolicy::Fused, FmadPolicy::Decomposed] {
-            let r = bench.run(&dev, q, policy);
+    for pair in llama_grid(&dev).chunks(2) {
+        for r in pair {
             t.push(
-                Row::new(
-                    format!("{} ({})", q.name, policy.name()),
-                    r.tokens_per_watt,
-                )
-                .note(format!("{:.0} W", r.decode_power_w)),
+                Row::new(format!("{} ({})", r.quant, r.policy.name()), r.tokens_per_watt)
+                    .note(format!("{:.0} W", r.decode_power_w)),
             );
         }
-        let r = bench.run(&dev, q, FmadPolicy::Fused);
         t.push(Row::new(
-            format!("{} (theoretical A100-class)", q.name),
-            r.theoretical_tokens_per_watt(),
+            format!("{} (theoretical A100-class)", pair[0].quant),
+            pair[0].theoretical_tokens_per_watt(),
         ));
     }
     t

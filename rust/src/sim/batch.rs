@@ -1,0 +1,229 @@
+//! Batched sweeps: fan `kernels × devices × config` across worker threads.
+//!
+//! Every paper figure, calibration sweep, and fleet-weighting pass is a
+//! dense grid of independent `simulate` calls. This module runs such grids
+//! across `std::thread` workers with **deterministic result ordering**: the
+//! output vector is always job-major then device-major, bit-identical to
+//! running [`simulate_lowered`] sequentially in that order (each grid cell
+//! is a pure function of its inputs, so parallelism cannot reorder or
+//! perturb the floating-point math *within* a cell, and cells never
+//! interact).
+//!
+//! Use [`sweep`] when every kernel shares one [`SimConfig`]; use
+//! [`run_jobs`] when each kernel carries its own config (the llama-bench
+//! grid, where MMQ and cuBLAS cells sustain different issue efficiencies).
+
+use crate::device::DeviceSpec;
+use crate::sim::engine::{simulate_lowered, KernelTiming, SimConfig};
+use crate::sim::lowered::LoweredKernel;
+
+/// One work item of a sweep: a pre-lowered kernel plus the engine config it
+/// should be simulated under.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepJob<'a> {
+    pub kernel: &'a LoweredKernel,
+    pub cfg: SimConfig,
+}
+
+/// Upper bound on worker threads; beyond this the per-cell work (a few µs)
+/// is dwarfed by spawn/join overhead.
+const MAX_WORKERS: usize = 16;
+
+/// Below this many cells the sweep runs inline: spawning/joining OS threads
+/// costs more than simulating a handful of cells does, and the small sweeps
+/// (graph_3_5's 4 bars, a 2-device fleet weighting) must not get slower
+/// than the sequential loops they replaced.
+const SEQUENTIAL_CUTOFF: usize = 32;
+
+fn worker_count(cells: usize) -> usize {
+    if cells < SEQUENTIAL_CUTOFF {
+        return 1;
+    }
+    let hw = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    hw.min(MAX_WORKERS).min(cells).max(1)
+}
+
+/// Run `jobs × devices`, returning timings in job-major order:
+/// `out[j * devices.len() + d]` is `jobs[j]` on `devices[d]`. Results are
+/// bit-identical to the equivalent sequential loop.
+pub fn run_jobs(jobs: &[SweepJob<'_>], devices: &[DeviceSpec]) -> Vec<KernelTiming> {
+    let nd = devices.len();
+    let cells = jobs.len() * nd;
+    if cells == 0 {
+        return Vec::new();
+    }
+    let workers = worker_count(cells);
+    let mut out: Vec<Option<KernelTiming>> = Vec::with_capacity(cells);
+    out.resize_with(cells, || None);
+
+    if workers == 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            let job = &jobs[i / nd];
+            *slot = Some(simulate_lowered(job.kernel, &devices[i % nd], &job.cfg));
+        }
+    } else {
+        // Contiguous chunks of the flat grid per worker: disjoint &mut
+        // slices, no locks, deterministic placement.
+        let chunk = cells.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (w, slots) in out.chunks_mut(chunk).enumerate() {
+                let base = w * chunk;
+                s.spawn(move || {
+                    for (off, slot) in slots.iter_mut().enumerate() {
+                        let i = base + off;
+                        let job = &jobs[i / nd];
+                        *slot = Some(simulate_lowered(job.kernel, &devices[i % nd], &job.cfg));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|t| t.expect("every cell simulated")).collect()
+}
+
+/// Run `kernels × devices` under one shared config, kernel-major order:
+/// `out[k * devices.len() + d]`.
+pub fn sweep(
+    kernels: &[LoweredKernel],
+    devices: &[DeviceSpec],
+    cfg: &SimConfig,
+) -> Vec<KernelTiming> {
+    let jobs: Vec<SweepJob<'_>> = kernels
+        .iter()
+        .map(|k| SweepJob { kernel: k, cfg: *cfg })
+        .collect();
+    run_jobs(&jobs, devices)
+}
+
+/// Convenience: one device, many (kernel, config) jobs.
+pub fn run_jobs_on(jobs: &[SweepJob<'_>], dev: &DeviceSpec) -> Vec<KernelTiming> {
+    run_jobs(jobs, std::slice::from_ref(dev))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::registry;
+    use crate::isa::class::InstClass::*;
+    use crate::isa::ir::{Kernel, MemPattern, Stmt, Traffic};
+    use crate::testutil::{forall, Rng};
+
+    fn assert_bit_identical(a: &KernelTiming, b: &KernelTiming) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        assert_eq!(a.compute_time_s.to_bits(), b.compute_time_s.to_bits());
+        assert_eq!(a.memory_time_s.to_bits(), b.memory_time_s.to_bits());
+        assert_eq!(a.power_w.to_bits(), b.power_w.to_bits());
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+        assert_eq!(a.dvfs_derate.to_bits(), b.dvfs_derate.to_bits());
+        assert_eq!(a.flops, b.flops);
+        assert_eq!(a.iops, b.iops);
+        assert_eq!(a.bytes.to_bits(), b.bytes.to_bits());
+        assert_eq!(a.pipe_times.len(), b.pipe_times.len());
+        for ((ka, va), (kb, vb)) in a.pipe_times.iter().zip(b.pipe_times.iter()) {
+            assert_eq!(ka, kb);
+            assert_eq!(va.to_bits(), vb.to_bits());
+        }
+    }
+
+    fn gen_kernel(rng: &mut Rng, i: usize) -> Kernel {
+        let classes = [Ffma, Fmul, Fadd, Hfma2, Imad, Dp4a, Ldg, Stg];
+        let mut body = Vec::new();
+        for _ in 0..rng.range(1, 5) {
+            body.push(Stmt::op(*rng.pick(&classes), rng.range(1, 256)));
+        }
+        Kernel::new(format!("k{i}"), rng.range(1 << 10, 1 << 22), 256)
+            .with_body(body)
+            .with_traffic(Traffic {
+                read_bytes: rng.range(0, 1 << 30),
+                write_bytes: rng.range(0, 1 << 28),
+                pattern: MemPattern::Coalesced,
+                l2_hit_rate: rng.f64_range(0.0, 0.8),
+            })
+    }
+
+    #[test]
+    fn empty_sweep_is_empty() {
+        assert!(sweep(&[], &[registry::cmp170hx()], &SimConfig::default()).is_empty());
+        assert!(run_jobs(&[], &[]).is_empty());
+    }
+
+    #[test]
+    fn ordering_is_kernel_major_then_device() {
+        let kernels: Vec<LoweredKernel> = (0..3)
+            .map(|i| {
+                LoweredKernel::lower(
+                    &Kernel::new(format!("k{i}"), 1 << 16, 256)
+                        .with_body(vec![Stmt::op(Fmul, 8)]),
+                )
+            })
+            .collect();
+        let devices = [registry::cmp170hx(), registry::a100_pcie()];
+        let out = sweep(&kernels, &devices, &SimConfig::default());
+        assert_eq!(out.len(), 6);
+        for (k, kern) in kernels.iter().enumerate() {
+            for d in 0..devices.len() {
+                assert_eq!(out[k * devices.len() + d].name, kern.name);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_batch_is_bit_identical_to_sequential() {
+        // The acceptance property: for arbitrary kernel/device/config
+        // grids, the threaded sweep returns exactly the timings — same
+        // values, same order — as the sequential reference loop.
+        forall(0xBA7C4, 40, |rng: &mut Rng| {
+            // Kernel counts straddle SEQUENTIAL_CUTOFF so both the inline
+            // and the threaded paths are exercised.
+            let kernels: Vec<LoweredKernel> = (0..rng.range(2, 24) as usize)
+                .map(|i| LoweredKernel::lower(&gen_kernel(rng, i)))
+                .collect();
+            let devices: Vec<crate::device::DeviceSpec> = vec![
+                registry::cmp170hx(),
+                registry::a100_pcie(),
+                registry::cmp170hx_x16(),
+            ][..rng.range(1, 3) as usize]
+                .to_vec();
+            let jobs: Vec<SweepJob<'_>> = kernels
+                .iter()
+                .map(|k| SweepJob {
+                    kernel: k,
+                    cfg: SimConfig {
+                        issue_efficiency: rng.f64_range(0.3, 1.0),
+                        overlap: rng.f64_range(0.0, 1.0),
+                        ..Default::default()
+                    },
+                })
+                .collect();
+            let batched = run_jobs(&jobs, &devices);
+            let mut sequential = Vec::new();
+            for job in &jobs {
+                for dev in &devices {
+                    sequential.push(simulate_lowered(job.kernel, dev, &job.cfg));
+                }
+            }
+            assert_eq!(batched.len(), sequential.len());
+            for (a, b) in batched.iter().zip(sequential.iter()) {
+                assert_bit_identical(a, b);
+            }
+        });
+    }
+
+    #[test]
+    fn run_jobs_on_single_device() {
+        let lk = LoweredKernel::lower(
+            &Kernel::new("k", 1 << 16, 256).with_body(vec![Stmt::op(Imad, 32)]),
+        );
+        let jobs = [
+            SweepJob { kernel: &lk, cfg: SimConfig::default() },
+            SweepJob { kernel: &lk, cfg: SimConfig { issue_efficiency: 0.5, ..Default::default() } },
+        ];
+        let out = run_jobs_on(&jobs, &registry::cmp170hx());
+        assert_eq!(out.len(), 2);
+        // Half the issue efficiency → strictly slower compute.
+        assert!(out[1].compute_time_s > out[0].compute_time_s);
+    }
+}

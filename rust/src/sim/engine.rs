@@ -1,12 +1,18 @@
 //! The issue-rate / roofline timing engine.
+//!
+//! The hot entry point is [`simulate_lowered`], which consumes a cached
+//! [`LoweredKernel`] — the device-independent lowering produced once per
+//! kernel by [`LoweredKernel::lower`]. [`simulate`] is the convenience
+//! wrapper for one-shot callers: it lowers and simulates in one call.
+//! Sweeps (many kernels × many devices/configs) should lower each kernel
+//! once and go through [`crate::sim::batch`].
 
 use std::collections::BTreeMap;
 
 use crate::device::DeviceSpec;
-use crate::isa::class::Pipe;
+use crate::isa::class::{ALL_PIPES, N_PIPES};
 use crate::isa::ir::Kernel;
-use crate::isa::mix::InstMix;
-use crate::memhier::l2;
+use crate::sim::lowered::LoweredKernel;
 use crate::sim::occupancy::Occupancy;
 
 /// Engine knobs. Defaults model a well-tuned launch; benchmark ports adjust
@@ -90,54 +96,49 @@ impl KernelTiming {
     }
 }
 
-fn pipe_name(p: Pipe) -> &'static str {
-    match p {
-        Pipe::Core => "core",
-        Pipe::Fp64 => "fp64",
-        Pipe::Half2 => "half2",
-        Pipe::Tensor => "tensor",
-        Pipe::Lsu => "lsu",
-    }
+/// Simulate one kernel launch on a device (one-shot convenience: lowers the
+/// IR, then calls [`simulate_lowered`]). Callers that simulate the same
+/// kernel more than once — across devices, throttles, or configs — should
+/// lower once and use [`simulate_lowered`] or [`crate::sim::batch`].
+pub fn simulate(kernel: &Kernel, dev: &DeviceSpec, cfg: &SimConfig) -> KernelTiming {
+    simulate_lowered(&LoweredKernel::lower(kernel), dev, cfg)
 }
 
-/// Simulate one kernel launch on a device.
-pub fn simulate(kernel: &Kernel, dev: &DeviceSpec, cfg: &SimConfig) -> KernelTiming {
-    let mix = InstMix::from_kernel(kernel);
-
+/// Simulate one pre-lowered kernel launch on a device. No IR walk, no
+/// traffic re-split, no energy re-weighting — everything device-independent
+/// comes from the [`LoweredKernel`] cache.
+pub fn simulate_lowered(lk: &LoweredKernel, dev: &DeviceSpec, cfg: &SimConfig) -> KernelTiming {
     // --- compute time: per-pipe serialization, cross-pipe overlap ---
-    let mut pipe_times: BTreeMap<&'static str, f64> = BTreeMap::new();
-    for (class, count) in mix.iter() {
+    let mut pipe_acc = [0.0f64; N_PIPES];
+    let mut pipe_used = [false; N_PIPES];
+    for (class, count) in lk.mix.iter() {
         let rate = dev.effective_issue_rate(class) * cfg.issue_efficiency;
         let t = if rate > 0.0 {
             count as f64 / rate
-        } else if count > 0 {
-            f64::INFINITY // issuing to a fused-off pipe never completes
         } else {
-            0.0
+            f64::INFINITY // issuing to a fused-off pipe never completes
         };
-        *pipe_times.entry(pipe_name(class.pipe())).or_insert(0.0) += t;
+        let p = class.pipe().index();
+        pipe_acc[p] += t;
+        pipe_used[p] = true;
     }
     let quant = if cfg.ignore_occupancy {
         1.0
     } else {
-        Occupancy::new(
-            kernel.blocks(),
-            kernel.block,
-            dev.sms,
-            cfg.max_threads_per_sm,
-        )
-        .quantization_factor()
+        Occupancy::new(lk.blocks, lk.block, dev.sms, cfg.max_threads_per_sm)
+            .quantization_factor()
     };
-    let compute_time = pipe_times.values().fold(0.0f64, |a, &b| a.max(b)) * quant;
+    let compute_time = pipe_acc.iter().fold(0.0f64, |a, &b| a.max(b)) * quant;
+    let pipe_times: BTreeMap<&'static str, f64> = ALL_PIPES
+        .iter()
+        .filter(|p| pipe_used[p.index()])
+        .map(|&p| (p.name(), pipe_acc[p.index()]))
+        .collect();
 
-    // --- memory time ---
-    let hit = kernel.traffic.l2_hit_rate.clamp(0.0, 1.0);
-    let read = kernel.traffic.read_bytes as f64;
-    let hbm_bytes = read * (1.0 - hit) + kernel.traffic.write_bytes as f64;
-    let l2_bytes = read * hit;
+    // --- memory time (HBM/L2 split cached at lower time) ---
     let memory_time = dev
         .mem
-        .transfer_time(hbm_bytes, l2_bytes, kernel.traffic.pattern);
+        .transfer_time(lk.hbm_bytes, lk.l2_bytes, lk.traffic.pattern);
 
     // --- roofline combine + launch floor ---
     let serial = compute_time + memory_time;
@@ -152,25 +153,17 @@ pub fn simulate(kernel: &Kernel, dev: &DeviceSpec, cfg: &SimConfig) -> KernelTim
     let raw_time = body.max(cfg.launch_overhead_s) + cfg.launch_overhead_s;
 
     // --- power / DVFS ---
-    let flops = mix.flops();
-    let iops = mix.iops();
-    let insts = mix.total() as f64;
-    // Energy-weighted op count: packed-half/dp4a/tensor work burns less per
-    // op than scalar fp32, fp64 burns more (InstClass::energy_weight).
-    let energy_ops: f64 = mix
-        .iter()
-        .map(|(c, n)| n as f64 * (c.flops() + c.iops()) as f64 * c.energy_weight())
-        .sum();
+    let insts = lk.mix.total() as f64;
     let (power_w, derate) = if raw_time.is_finite() {
         dev.power
-            .board_power(energy_ops, insts, hbm_bytes, raw_time, dev.tdp_w)
+            .board_power(lk.energy_ops, insts, lk.hbm_bytes, raw_time, dev.tdp_w)
     } else {
         (dev.power.static_w, 1.0)
     };
     let time_s = raw_time * derate;
 
     KernelTiming {
-        name: kernel.name.clone(),
+        name: lk.name.clone(),
         time_s,
         compute_time_s: compute_time,
         memory_time_s: memory_time,
@@ -178,16 +171,16 @@ pub fn simulate(kernel: &Kernel, dev: &DeviceSpec, cfg: &SimConfig) -> KernelTim
         power_w,
         energy_j: power_w * time_s,
         dvfs_derate: derate,
-        flops,
-        iops,
-        bytes: hbm_bytes + l2_bytes,
+        flops: lk.mix.flops(),
+        iops: lk.mix.iops(),
+        bytes: lk.bytes(),
     }
 }
 
 /// Convenience: estimate an L2 hit rate for a kernel that re-reads a
 /// `unique_bytes` working set `reuse` times on this device.
 pub fn l2_hint(dev: &DeviceSpec, unique_bytes: u64, reuse: f64) -> f64 {
-    l2::hit_rate(unique_bytes, reuse, dev.mem.l2_bytes)
+    crate::memhier::l2::hit_rate(unique_bytes, reuse, dev.mem.l2_bytes)
 }
 
 #[cfg(test)]
@@ -280,6 +273,28 @@ mod tests {
     }
 
     #[test]
+    fn lowered_reuse_matches_oneshot_exactly() {
+        // The lower-once path must be bit-identical to the lower-per-call
+        // path, and the cached form must be reusable across devices and
+        // configs without drift.
+        let k = fp32_kernel(70 * 2048 * 64, 512);
+        let lk = LoweredKernel::lower(&k);
+        for dev in [registry::cmp170hx(), registry::a100_pcie()] {
+            for cfg in [
+                SimConfig::default(),
+                SimConfig { overlap: 0.3, issue_efficiency: 0.5, ..Default::default() },
+            ] {
+                let oneshot = simulate(&k, &dev, &cfg);
+                let cached = simulate_lowered(&lk, &dev, &cfg);
+                assert_eq!(oneshot.time_s.to_bits(), cached.time_s.to_bits());
+                assert_eq!(oneshot.power_w.to_bits(), cached.power_w.to_bits());
+                assert_eq!(oneshot.flops, cached.flops);
+                assert_eq!(oneshot.pipe_times, cached.pipe_times);
+            }
+        }
+    }
+
+    #[test]
     fn prop_more_throttle_never_faster() {
         // Monotonicity: lowering any class multiplier can only increase time.
         forall(0x51A1, 120, |rng: &mut Rng| {
@@ -299,8 +314,9 @@ mod tests {
                 body.push(Stmt::op(c, rng.range(1, 512)));
             }
             let k = Kernel::new("rand", rng.range(1 << 10, 1 << 22), 256).with_body(body);
-            let t_loose = simulate(&k, &loose, &SimConfig::default());
-            let t_tight = simulate(&k, &tight, &SimConfig::default());
+            let lk = LoweredKernel::lower(&k);
+            let t_loose = simulate_lowered(&lk, &loose, &SimConfig::default());
+            let t_tight = simulate_lowered(&lk, &tight, &SimConfig::default());
             assert!(t_tight.time_s >= t_loose.time_s - 1e-12);
         });
     }
@@ -319,9 +335,10 @@ mod tests {
                     pattern: MemPattern::Coalesced,
                     l2_hit_rate: rng.f64_range(0.0, 0.9),
                 });
-            let t_max = simulate(&k, &dev, &SimConfig { overlap: 1.0, ..Default::default() });
-            let t_mid = simulate(&k, &dev, &SimConfig { overlap: 0.5, ..Default::default() });
-            let t_sum = simulate(&k, &dev, &SimConfig { overlap: 0.0, ..Default::default() });
+            let lk = LoweredKernel::lower(&k);
+            let t_max = simulate_lowered(&lk, &dev, &SimConfig { overlap: 1.0, ..Default::default() });
+            let t_mid = simulate_lowered(&lk, &dev, &SimConfig { overlap: 0.5, ..Default::default() });
+            let t_sum = simulate_lowered(&lk, &dev, &SimConfig { overlap: 0.0, ..Default::default() });
             assert!(t_max.time_s <= t_mid.time_s + 1e-12);
             assert!(t_mid.time_s <= t_sum.time_s + 1e-12);
         });

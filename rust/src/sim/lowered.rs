@@ -1,0 +1,118 @@
+//! Lower-once kernel cache.
+//!
+//! [`LoweredKernel`] captures everything [`crate::sim::engine`] needs from a
+//! [`Kernel`] that does **not** depend on the device or [`SimConfig`]: the
+//! flat instruction mix, the launch geometry, the traffic split into
+//! HBM/L2 bytes, and the energy-weighted op count for the power model.
+//! Lowering walks the kernel IR exactly once; every subsequent
+//! [`crate::sim::simulate_lowered`] call — across devices, throttle
+//! profiles, and engine configs — reuses the cached form. This is the
+//! per-sweep contract the bench ports, `llm::llamabench`, the report
+//! figures, and the coordinator fleet all rely on: *lower once, simulate
+//! many*.
+//!
+//! [`SimConfig`]: crate::sim::SimConfig
+
+use crate::isa::ir::{Kernel, Traffic};
+use crate::isa::mix::InstMix;
+
+/// A kernel lowered to the device-independent form the timing engine
+/// consumes. Build one with [`LoweredKernel::lower`] and hand it to
+/// [`crate::sim::simulate_lowered`] or [`crate::sim::batch`].
+#[derive(Clone, Debug)]
+pub struct LoweredKernel {
+    pub name: String,
+    /// Whole-grid instruction mix (IR walked exactly once).
+    pub mix: InstMix,
+    /// The original traffic descriptor (kept for callers that inspect it).
+    pub traffic: Traffic,
+    /// Total threads in the grid.
+    pub threads: u64,
+    /// Threads per block (occupancy quantization input).
+    pub block: u32,
+    /// Blocks in the grid (threads ⌈/⌉ block).
+    pub blocks: u64,
+    /// Bytes that miss L2 and hit HBM (reads × miss rate + all writes).
+    pub hbm_bytes: f64,
+    /// Read bytes served from L2.
+    pub l2_bytes: f64,
+    /// Energy-weighted op count for the power model:
+    /// Σ count × (flops + iops) × energy_weight per class.
+    pub energy_ops: f64,
+}
+
+impl LoweredKernel {
+    /// Lower a kernel: one IR walk + one pass over the (fixed-size) mix.
+    pub fn lower(kernel: &Kernel) -> Self {
+        let mix = InstMix::from_kernel(kernel);
+        let hit = kernel.traffic.l2_hit_rate.clamp(0.0, 1.0);
+        let read = kernel.traffic.read_bytes as f64;
+        let hbm_bytes = read * (1.0 - hit) + kernel.traffic.write_bytes as f64;
+        let l2_bytes = read * hit;
+        let energy_ops: f64 = mix
+            .iter()
+            .map(|(c, n)| n as f64 * (c.flops() + c.iops()) as f64 * c.energy_weight())
+            .sum();
+        LoweredKernel {
+            name: kernel.name.clone(),
+            mix,
+            traffic: kernel.traffic,
+            threads: kernel.threads,
+            block: kernel.block,
+            blocks: kernel.blocks(),
+            hbm_bytes,
+            l2_bytes,
+            energy_ops,
+        }
+    }
+
+    /// Total bytes that move through the memory system (HBM + L2).
+    pub fn bytes(&self) -> f64 {
+        self.hbm_bytes + self.l2_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::class::InstClass::*;
+    use crate::isa::ir::{MemPattern, Stmt};
+    use crate::testutil::assert_close;
+
+    fn kernel() -> Kernel {
+        Kernel::new("k", 1000, 256)
+            .with_body(vec![Stmt::looped(4, vec![Stmt::op(Ffma, 2)]), Stmt::op(Stg, 1)])
+            .with_traffic(Traffic {
+                read_bytes: 1_000_000,
+                write_bytes: 500_000,
+                pattern: MemPattern::Coalesced,
+                l2_hit_rate: 0.25,
+            })
+    }
+
+    #[test]
+    fn lowering_caches_mix_and_geometry() {
+        let k = kernel();
+        let lk = LoweredKernel::lower(&k);
+        assert_eq!(lk.mix, InstMix::from_kernel(&k));
+        assert_eq!(lk.blocks, k.blocks());
+        assert_eq!(lk.threads, k.threads);
+        assert_eq!(lk.block, k.block);
+        assert_eq!(lk.name, k.name);
+    }
+
+    #[test]
+    fn traffic_split_respects_hit_rate() {
+        let lk = LoweredKernel::lower(&kernel());
+        assert_close(lk.l2_bytes, 250_000.0, 1e-12);
+        assert_close(lk.hbm_bytes, 750_000.0 + 500_000.0, 1e-12);
+        assert_close(lk.bytes(), 1_500_000.0, 1e-12);
+    }
+
+    #[test]
+    fn energy_ops_matches_direct_sum() {
+        let lk = LoweredKernel::lower(&kernel());
+        // 8000 FFMA × 2 flops × weight 1.0 (Stg contributes nothing).
+        assert_close(lk.energy_ops, 8000.0 * 2.0, 1e-12);
+    }
+}

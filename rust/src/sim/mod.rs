@@ -1,10 +1,14 @@
-//! Kernel-timing engine.
+//! Kernel-timing engine — the lower-once / simulate-many pipeline.
 //!
 //! Given a [`crate::isa::Kernel`] (post-fmad-pass) and a
 //! [`crate::device::DeviceSpec`], the engine computes execution time, board
 //! power and energy via an issue-rate/roofline hybrid:
 //!
-//! 1. lower the body to a whole-grid [`crate::isa::InstMix`];
+//! 1. lower the body **once** to a [`LoweredKernel`] — the whole-grid
+//!    [`crate::isa::InstMix`] (array-backed, O(1) per class) plus the
+//!    device-independent derived quantities: launch geometry for occupancy
+//!    quantization, the HBM/L2 traffic split, and the energy-weighted op
+//!    count;
 //! 2. per execution pipe, sum `count / (SMs × rate × throttle × clock)` —
 //!    classes on one pipe serialize, distinct pipes overlap;
 //! 3. memory time from [`crate::memhier`] (pattern-derated bandwidth, L2
@@ -15,8 +19,26 @@
 //!
 //! The engine also returns an achieved-rate report (TFLOPS/TIOPs/GB/s) in
 //! the units the paper's graphs use.
+//!
+//! # Which entry point?
+//!
+//! - [`simulate`] — one-shot: a single kernel simulated exactly once.
+//!   Lowers internally; nothing is cached.
+//! - [`simulate_lowered`] — the hot path: you hold a [`LoweredKernel`]
+//!   (from [`LoweredKernel::lower`]) and simulate it repeatedly across
+//!   devices, throttle profiles, or [`SimConfig`]s. Zero IR walks after the
+//!   first.
+//! - [`batch`] — dense grids: `kernels × devices × config(s)` fanned across
+//!   `std::thread` workers with deterministic, sequential-identical result
+//!   ordering. Use it for anything sweep-shaped: the bench-port intensity
+//!   sweeps, the llama-bench quant × policy grid, figure regeneration, and
+//!   fleet weighting. Per-cell results are bit-identical to calling
+//!   [`simulate_lowered`] in a loop.
 
+pub mod batch;
 pub mod engine;
+pub mod lowered;
 pub mod occupancy;
 
-pub use engine::{simulate, KernelTiming, SimConfig};
+pub use engine::{simulate, simulate_lowered, KernelTiming, SimConfig};
+pub use lowered::LoweredKernel;

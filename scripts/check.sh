@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Local tier-1 gate: build, test, lint.
+#
+# Usage: scripts/check.sh [--no-clippy]
+#
+# Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
+# -q`) and adds clippy with warnings denied. Run from anywhere; the script
+# cd's to the repo root.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: cargo not found on PATH — install a Rust toolchain to run the tier-1 gate" >&2
+    exit 1
+fi
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "${1:-}" != "--no-clippy" ]]; then
+    if cargo clippy --version >/dev/null 2>&1; then
+        echo "==> cargo clippy -- -D warnings"
+        cargo clippy -- -D warnings
+    else
+        echo "warning: clippy not installed; skipping lint step" >&2
+    fi
+fi
+
+echo "tier-1 gate passed"
