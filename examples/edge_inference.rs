@@ -25,6 +25,7 @@ fn main() -> anyhow::Result<()> {
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,
+        ..Default::default()
     };
     println!("edge node starting: compiling AOT artifacts on PJRT CPU…");
     let t0 = Instant::now();

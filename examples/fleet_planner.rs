@@ -10,9 +10,10 @@
 use cmphx::coordinator::router::{Fleet, RoutePolicy};
 use cmphx::device::registry;
 use cmphx::isa::pass::FmadPolicy;
+use cmphx::llm::llamabench::LlamaBench;
 use cmphx::llm::quant;
 use cmphx::market::sales;
-use cmphx::market::tco::{fleet_for_throughput, reuse_value};
+use cmphx::market::tco::{a100_replacement, fleet_for_throughput, reuse_value};
 
 const TARGET_TPS: f64 = 2_000.0; // tokens/s of q4_k_m decode
 
@@ -82,6 +83,30 @@ fn main() {
         println!(
             "{:<22} weight {:>6.0} tok/s  assigned {:>6} requests",
             node.name, node.weight, node.assigned
+        );
+    }
+
+    println!("\n=== how many 170HX cards replace one A100, at what energy cost? ===");
+    let bench = LlamaBench::default();
+    let a100 = bench.run(&registry::a100_pcie(), &quant::Q4_K_M, FmadPolicy::Fused);
+    for (label, dev, policy) in [
+        ("CMP 170HX (-fmad=false)", registry::cmp170hx(), FmadPolicy::Decomposed),
+        ("CMP 170HX x16-mod (-fmad)", registry::cmp170hx_x16(), FmadPolicy::Decomposed),
+    ] {
+        let row = bench.run(&dev, &quant::Q4_K_M, policy);
+        let rep = a100_replacement(
+            &dev,
+            row.decode_tps,
+            row.decode_power_w,
+            a100.decode_tps,
+            a100.decode_power_w,
+        );
+        println!(
+            "{label:<28} {} cards ≈ one A100  ({:.0}% capex, {:.1}× wall power, {:.2}× J/token)",
+            rep.cards_per_a100,
+            rep.capex_ratio * 100.0,
+            rep.power_ratio,
+            rep.energy_per_token_ratio,
         );
     }
 

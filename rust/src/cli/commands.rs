@@ -25,8 +25,11 @@ COMMANDS:
   targets                   check simulator output against calibration targets
   sweep [precision] [--device d]
                             mixbench operational-intensity sweep (roofline)
-  serve [--requests N] [--tokens N] [--batch N]
-                            end-to-end: serve the AOT tiny-qwen via PJRT
+  serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
+                            end-to-end: serve the AOT tiny-qwen via PJRT,
+                            optionally across a fleet of registry cards
+                            (e.g. --fleet 170hx,90hx) with continuous
+                            batching and weighted routing
   help                      this text
 ";
 
@@ -261,6 +264,8 @@ fn check_targets() -> usize {
 }
 
 fn serve(args: &Args) -> Result<i32> {
+    use crate::coordinator::NodeConfig;
+
     let requests = args.opt_usize("requests", 8)?;
     let tokens = args.opt_usize("tokens", 12)?;
     let batch = args.opt_usize("batch", 4)?;
@@ -268,6 +273,27 @@ fn serve(args: &Args) -> Result<i32> {
     let artifacts = ArtifactDir::discover()?;
     let mut config = ServerConfig::default();
     config.batch.max_batch = batch;
+    if let Some(list) = args.opt("fleet") {
+        let fmad = config.fmad;
+        // Reject empty segments explicitly: by_name does substring
+        // matching, so "" would silently resolve to the first registry
+        // entry instead of erroring.
+        config.nodes = list
+            .split(',')
+            .map(str::trim)
+            .map(|name| {
+                if name.is_empty() {
+                    bail!("empty device name in --fleet list {list:?}");
+                }
+                registry::by_name(name)
+                    .map(|dev| NodeConfig::new(dev, fmad))
+                    .ok_or_else(|| anyhow::anyhow!("unknown fleet device {name:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        if config.nodes.is_empty() {
+            bail!("--fleet list is empty");
+        }
+    }
     println!("compiling artifacts on the PJRT CPU client…");
     let server: ServerHandle = Server::start(artifacts, config)?;
 
@@ -279,14 +305,15 @@ fn serve(args: &Args) -> Result<i32> {
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
         println!(
-            "req {i}: {} tokens, latency {:.1} ms (sim device {:.2} ms){}",
+            "req {i}: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}",
             resp.tokens.len(),
+            resp.node,
             resp.latency_s() * 1e3,
             resp.simulated_device_s * 1e3,
             resp.error.as_deref().map(|e| format!(" ERROR {e}")).unwrap_or_default(),
         );
     }
-    let metrics = server.shutdown();
-    println!("\n{}", metrics.render());
+    let fleet = server.shutdown_fleet();
+    println!("\n{}", fleet.render());
     Ok(0)
 }

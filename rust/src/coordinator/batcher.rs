@@ -1,16 +1,25 @@
-//! Dynamic batching: group queued requests under a (max size, max wait)
-//! window — the same policy family the vLLM-style routers use, scaled to
-//! an edge node.
+//! Admission policy for the continuous-batching engine.
+//!
+//! This module used to own a stop-the-world window batcher (gather requests
+//! under a (size, wait) window, then serve that batch to completion). The
+//! fleet engine replaced that loop with **continuous batching** — sequences
+//! join the decode round whenever a KV slot frees — so the batcher is
+//! reduced to the admission-policy value type consumed by
+//! [`crate::coordinator::scheduler::plan_admission`] (the slot-join step)
+//! and by the engine's cold-start gather.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-/// Batch window policy.
+/// Admission policy for a node's continuous-batching engine.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
-    /// Hard cap on batch size (bounded by KV slots).
+    /// Concurrency cap: the most sequences that may share one card's
+    /// decode round (bounded further by free KV slots at admission time).
     pub max_batch: usize,
-    /// Max time the first request in a window waits for company.
+    /// Cold-start gather window: how long an idle engine waits for company
+    /// after the first request arrives before prefilling the round. Once
+    /// the engine is busy, admission is non-blocking — arrivals join the
+    /// next round immediately.
     pub max_wait: Duration,
 }
 
@@ -23,105 +32,29 @@ impl Default for BatchPolicy {
     }
 }
 
-/// Pulls items from a channel and groups them into batches.
-pub struct Batcher<T> {
-    rx: Receiver<T>,
-    pub policy: BatchPolicy,
-}
-
-impl<T> Batcher<T> {
-    pub fn new(rx: Receiver<T>, policy: BatchPolicy) -> Self {
-        Batcher { rx, policy }
-    }
-
-    /// Block for the next batch. Returns `None` when the channel is closed
-    /// and drained. A batch is emitted when it reaches `max_batch` or when
-    /// `max_wait` has elapsed since its first item arrived.
-    pub fn next_batch(&self) -> Option<Vec<T>> {
-        // Block for the first item.
-        let first = self.rx.recv().ok()?;
-        let mut batch = vec![first];
-        let deadline = Instant::now() + self.policy.max_wait;
-        while batch.len() < self.policy.max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match self.rx.recv_timeout(deadline - now) {
-                Ok(item) => batch.push(item),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        Some(batch)
+impl BatchPolicy {
+    /// The concurrency cap with a floor of one sequence — a zero cap would
+    /// make an engine that can never admit anything.
+    pub fn concurrency(&self) -> usize {
+        self.max_batch.max(1)
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::mpsc::channel;
-    use std::thread;
 
-    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
-        BatchPolicy {
-            max_batch,
-            max_wait: Duration::from_millis(wait_ms),
-        }
+    #[test]
+    fn default_policy_is_sane() {
+        let p = BatchPolicy::default();
+        assert!(p.max_batch >= 1);
+        assert!(p.max_wait > Duration::ZERO);
+        assert_eq!(p.concurrency(), p.max_batch);
     }
 
     #[test]
-    fn full_batch_emitted_without_waiting_out_the_window() {
-        let (tx, rx) = channel();
-        for i in 0..4 {
-            tx.send(i).unwrap();
-        }
-        let b = Batcher::new(rx, policy(4, 10_000));
-        let t0 = Instant::now();
-        let batch = b.next_batch().unwrap();
-        assert_eq!(batch, vec![0, 1, 2, 3]);
-        assert!(t0.elapsed() < Duration::from_secs(1), "must not wait the window");
-    }
-
-    #[test]
-    fn window_expiry_emits_partial_batch() {
-        let (tx, rx) = channel();
-        tx.send(42).unwrap();
-        let b = Batcher::new(rx, policy(8, 20));
-        let batch = b.next_batch().unwrap();
-        assert_eq!(batch, vec![42]);
-    }
-
-    #[test]
-    fn closed_empty_channel_ends_iteration() {
-        let (tx, rx) = channel::<u32>();
-        drop(tx);
-        let b = Batcher::new(rx, policy(4, 10));
-        assert!(b.next_batch().is_none());
-    }
-
-    #[test]
-    fn disconnect_mid_window_emits_what_arrived() {
-        let (tx, rx) = channel();
-        tx.send(1).unwrap();
-        let b = Batcher::new(rx, policy(4, 500));
-        let handle = thread::spawn(move || {
-            tx.send(2).unwrap();
-            drop(tx);
-        });
-        let batch = b.next_batch().unwrap();
-        handle.join().unwrap();
-        assert!(batch == vec![1, 2] || batch == vec![1], "{batch:?}");
-    }
-
-    #[test]
-    fn batches_preserve_arrival_order() {
-        let (tx, rx) = channel();
-        for i in 0..10 {
-            tx.send(i).unwrap();
-        }
-        let b = Batcher::new(rx, policy(3, 1));
-        assert_eq!(b.next_batch().unwrap(), vec![0, 1, 2]);
-        assert_eq!(b.next_batch().unwrap(), vec![3, 4, 5]);
+    fn zero_cap_is_floored_to_one() {
+        let p = BatchPolicy { max_batch: 0, max_wait: Duration::ZERO };
+        assert_eq!(p.concurrency(), 1);
     }
 }

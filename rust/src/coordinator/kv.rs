@@ -56,14 +56,27 @@ impl KvSlots {
         Some(id)
     }
 
-    /// Release a slot. Double-free is a logic error and panics.
-    pub fn release(&mut self, id: usize) {
-        assert!(id < self.total, "slot {id} out of range");
-        assert!(self.free.insert(id), "double free of slot {id}");
+    /// Release a slot. Out-of-range ids and double-releases are rejected
+    /// (they would silently corrupt `in_use`/`resident_bytes` accounting if
+    /// the set insert were trusted blindly) — callers treat an `Err` as a
+    /// coordinator logic bug.
+    pub fn release(&mut self, id: usize) -> Result<()> {
+        if id >= self.total {
+            bail!("release of slot {id} out of range (capacity {})", self.total);
+        }
+        if !self.free.insert(id) {
+            bail!("double release of slot {id}");
+        }
+        Ok(())
     }
 
     pub fn in_use(&self) -> usize {
         self.total - self.free.len()
+    }
+
+    /// Slots currently available for admission.
+    pub fn free_slots(&self) -> usize {
+        self.free.len()
     }
 
     pub fn capacity(&self) -> usize {
@@ -97,17 +110,34 @@ mod tests {
         let b = s.acquire().unwrap();
         assert_ne!(a, b);
         assert!(s.acquire().is_none());
-        s.release(a);
+        s.release(a).unwrap();
         assert_eq!(s.acquire(), Some(a));
     }
 
     #[test]
-    #[should_panic(expected = "double free")]
-    fn double_free_panics() {
+    fn double_release_is_rejected_without_corrupting_accounting() {
         let mut s = slots(2);
         let a = s.acquire().unwrap();
-        s.release(a);
-        s.release(a);
+        let b = s.acquire().unwrap();
+        s.release(a).unwrap();
+        let err = s.release(a).unwrap_err().to_string();
+        assert!(err.contains("double release"), "{err}");
+        // the failed release must not have touched accounting
+        assert_eq!(s.in_use(), 1);
+        assert_eq!(s.free_slots(), 1);
+        s.release(b).unwrap();
+        assert_eq!(s.in_use(), 0);
+    }
+
+    #[test]
+    fn out_of_range_release_is_rejected() {
+        let mut s = slots(2);
+        let a = s.acquire().unwrap();
+        let err = s.release(7).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // accounting intact: the held slot is still held
+        assert_eq!(s.in_use(), 1);
+        s.release(a).unwrap();
     }
 
     #[test]
@@ -122,7 +152,7 @@ mod tests {
         assert_eq!(s.resident_bytes(), 1 << 30);
         let a = s.acquire().unwrap();
         assert_eq!(s.resident_bytes(), (1 << 30) + (1 << 20));
-        s.release(a);
+        s.release(a).unwrap();
         assert_eq!(s.headroom_bytes(), (8u64 << 30) - (1 << 30));
     }
 
@@ -144,9 +174,13 @@ mod tests {
                     }
                 } else if !held.is_empty() {
                     let idx = rng.below(held.len() as u64) as usize;
-                    s.release(held.swap_remove(idx));
+                    s.release(held.swap_remove(idx)).unwrap();
+                } else {
+                    // nothing held: any release must be rejected cleanly
+                    assert!(s.release(0).is_err());
                 }
                 assert_eq!(s.in_use(), held.len());
+                assert_eq!(s.free_slots(), n - held.len());
             }
         });
     }

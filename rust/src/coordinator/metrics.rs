@@ -1,20 +1,35 @@
 //! Serving metrics: counters, latency distribution, and the simulated
-//! device-time overlay.
+//! device-time/energy overlay — per node, plus fleet-wide aggregation.
 
-/// Online latency/throughput accumulator with fixed percentile tracking
-/// (stores samples; edge-node request volumes make this fine).
+/// Online latency/throughput accumulator with fixed percentile tracking.
+///
+/// Recording stays O(1) (append + running sum); percentile reads go
+/// through a **lazily rebuilt sorted cache** that stays valid until new
+/// samples arrive (the raw vector is append-only, so `len` equality is the
+/// validity test). One [`Metrics::render`] therefore sorts at most once,
+/// and repeated [`Metrics::latency_pct`] calls are O(1) lookups — the old
+/// path cloned and re-sorted the full history on every percentile read.
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
     pub requests: u64,
     pub errors: u64,
     pub tokens_out: u64,
+    /// Raw samples in arrival order; append-only.
     latencies_s: Vec<f64>,
+    latency_sum_s: f64,
+    /// Sorted view of `latencies_s`; valid iff the lengths match.
+    sorted_cache: std::cell::RefCell<Vec<f64>>,
     pub wall_prefill_s: f64,
     pub wall_decode_s: f64,
-    /// Simulated CMP 170HX device seconds for the same workload.
+    /// Simulated device seconds for the same workload (the §4 overlay).
     pub simulated_device_s: f64,
+    /// Simulated device energy for the same workload, joules — prefill at
+    /// the TDP envelope, decode at the §4.4 calibrated power.
+    pub simulated_energy_j: f64,
+    /// Decode rounds stepped (continuous batching: one per engine round).
     pub batches: u64,
-    batch_sizes: Vec<usize>,
+    /// Total sequences stepped across all rounds (drives mean batch size).
+    batch_seqs: u64,
 }
 
 impl Metrics {
@@ -22,6 +37,8 @@ impl Metrics {
         Self::default()
     }
 
+    /// O(1): the serving workers call this under their metrics mutex on
+    /// every retired request, so no sorting happens here.
     pub fn record_response(&mut self, latency_s: f64, tokens: usize, ok: bool) {
         self.requests += 1;
         if !ok {
@@ -29,37 +46,53 @@ impl Metrics {
         }
         self.tokens_out += tokens as u64;
         self.latencies_s.push(latency_s);
+        self.latency_sum_s += latency_s;
     }
 
+    /// Read through the sorted cache, rebuilding it only when samples were
+    /// recorded since the last read.
+    fn with_sorted<R>(&self, f: impl FnOnce(&[f64]) -> R) -> R {
+        let mut cache = self.sorted_cache.borrow_mut();
+        if cache.len() != self.latencies_s.len() {
+            cache.clear();
+            cache.extend_from_slice(&self.latencies_s);
+            cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        }
+        f(&cache)
+    }
+
+    /// Record one decode round of `size` concurrent sequences.
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
-        self.batch_sizes.push(size);
+        self.batch_seqs += size as u64;
     }
 
-    /// Latency percentile (0.0–1.0). None when empty.
+    /// Latency percentile (0.0–1.0). None when empty. O(1) when nothing
+    /// was recorded since the last read; one sort otherwise.
     pub fn latency_pct(&self, p: f64) -> Option<f64> {
         if self.latencies_s.is_empty() {
             return None;
         }
-        let mut xs = self.latencies_s.clone();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
-        Some(xs[idx])
+        Some(self.with_sorted(|xs| {
+            let idx = ((xs.len() as f64 - 1.0) * p).round() as usize;
+            xs[idx.min(xs.len() - 1)]
+        }))
     }
 
     pub fn mean_latency(&self) -> Option<f64> {
         if self.latencies_s.is_empty() {
             None
         } else {
-            Some(self.latencies_s.iter().sum::<f64>() / self.latencies_s.len() as f64)
+            Some(self.latency_sum_s / self.latencies_s.len() as f64)
         }
     }
 
+    /// Mean decode-round width — the continuous-batching occupancy.
     pub fn mean_batch_size(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        if self.batches == 0 {
             0.0
         } else {
-            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+            self.batch_seqs as f64 / self.batches as f64
         }
     }
 
@@ -73,7 +106,26 @@ impl Metrics {
         }
     }
 
-    /// Speed ratio: how much faster/slower the simulated CMP device is than
+    /// Simulated device throughput: served tokens over simulated device
+    /// seconds for the same schedule.
+    pub fn sim_tokens_per_sec(&self) -> f64 {
+        if self.simulated_device_s == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.simulated_device_s
+        }
+    }
+
+    /// Simulated energy efficiency, tokens/joule.
+    pub fn sim_tokens_per_joule(&self) -> f64 {
+        if self.simulated_energy_j == 0.0 {
+            0.0
+        } else {
+            self.tokens_out as f64 / self.simulated_energy_j
+        }
+    }
+
+    /// Speed ratio: how much faster/slower the simulated device is than
     /// this host for the same served work.
     pub fn sim_speedup_vs_host(&self) -> Option<f64> {
         if self.simulated_device_s == 0.0 {
@@ -83,13 +135,31 @@ impl Metrics {
         }
     }
 
-    /// Render a summary block.
+    /// Fold another node's metrics into this one (fleet aggregation).
+    /// Latency histories concatenate; the sorted cache rebuilds itself on
+    /// the next percentile read (its length no longer matches).
+    pub fn merge(&mut self, other: &Metrics) {
+        self.requests += other.requests;
+        self.errors += other.errors;
+        self.tokens_out += other.tokens_out;
+        self.wall_prefill_s += other.wall_prefill_s;
+        self.wall_decode_s += other.wall_decode_s;
+        self.simulated_device_s += other.simulated_device_s;
+        self.simulated_energy_j += other.simulated_energy_j;
+        self.batches += other.batches;
+        self.batch_seqs += other.batch_seqs;
+        self.latency_sum_s += other.latency_sum_s;
+        self.latencies_s.extend_from_slice(&other.latencies_s);
+    }
+
+    /// Render a summary block in one pass: at most one cache rebuild for
+    /// all three latency statistics, everything else O(1) counters.
     pub fn render(&self) -> String {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
-             simulated CMP 170HX device time: {:.4}s ({}× host)",
+             simulated device time: {:.4}s ({}× host)  energy {:.2}J → {:.1} tok/J",
             self.requests,
             self.errors,
             self.tokens_out,
@@ -104,13 +174,74 @@ impl Metrics {
             self.sim_speedup_vs_host()
                 .map(|s| format!("{s:.1}"))
                 .unwrap_or_else(|| "-".into()),
+            self.simulated_energy_j,
+            self.sim_tokens_per_joule(),
         )
+    }
+}
+
+/// Per-node metric snapshots plus fleet-wide aggregation — what the fleet
+/// engine reports so "N recycled cards vs one A100" is answerable in
+/// tokens/s *and* tokens/joule.
+#[derive(Clone, Debug, Default)]
+pub struct FleetMetrics {
+    /// `(device name, node metrics)`, in node order.
+    pub nodes: Vec<(&'static str, Metrics)>,
+}
+
+impl FleetMetrics {
+    /// Fleet-wide totals: every counter summed, latency histories merged.
+    /// Note the wall/sim **seconds are summed busy time across cards**, so
+    /// `total().tokens_per_sec()` is a per-card average rate; the fleet's
+    /// concurrent rate is [`FleetMetrics::sim_tokens_per_sec`].
+    pub fn total(&self) -> Metrics {
+        let mut out = Metrics::new();
+        for (_, m) in &self.nodes {
+            out.merge(m);
+        }
+        out
+    }
+
+    /// Fleet simulated throughput: cards decode concurrently, so the fleet
+    /// rate is the **sum** of per-card simulated rates (nodes that served
+    /// nothing contribute zero).
+    pub fn sim_tokens_per_sec(&self) -> f64 {
+        self.nodes.iter().map(|(_, m)| m.sim_tokens_per_sec()).sum()
+    }
+
+    /// Fleet energy efficiency: total tokens over total simulated joules.
+    pub fn sim_tokens_per_joule(&self) -> f64 {
+        self.total().sim_tokens_per_joule()
+    }
+
+    /// Render per-node lines plus the fleet aggregate.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, m) in &self.nodes {
+            out.push_str(&format!(
+                "node {name:<22} req={:<4} tok={:<6} sim {:>8.1} tok/s  {:>6.1} tok/J\n",
+                m.requests,
+                m.tokens_out,
+                m.sim_tokens_per_sec(),
+                m.sim_tokens_per_joule(),
+            ));
+        }
+        let total = self.total();
+        out.push_str(&format!(
+            "fleet ({} nodes): sim {:.1} tok/s  {:.1} tok/J\n{}",
+            self.nodes.len(),
+            self.sim_tokens_per_sec(),
+            total.sim_tokens_per_joule(),
+            total.render(),
+        ));
+        out
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testutil::{forall, Rng};
 
     #[test]
     fn percentiles_order_correctly() {
@@ -129,6 +260,8 @@ mod tests {
         assert!(m.latency_pct(0.5).is_none());
         assert!(m.mean_latency().is_none());
         assert_eq!(m.tokens_per_sec(), 0.0);
+        assert_eq!(m.sim_tokens_per_sec(), 0.0);
+        assert_eq!(m.sim_tokens_per_joule(), 0.0);
     }
 
     #[test]
@@ -148,8 +281,87 @@ mod tests {
         m.record_batch(2);
         m.wall_decode_s = 1.0;
         m.simulated_device_s = 0.1;
+        m.simulated_energy_j = 4.0;
         let s = m.render();
         assert!(s.contains("requests=1"));
-        assert!(s.contains("simulated CMP 170HX"));
+        assert!(s.contains("simulated device time"));
+        assert!(s.contains("tok/J"));
+    }
+
+    #[test]
+    fn prop_cached_sort_matches_sort_per_call() {
+        // Percentiles read through the lazily rebuilt cache must equal the
+        // old clone-and-sort implementation for arbitrary arrival orders,
+        // including reads interleaved with appends.
+        forall(0x1A7E, 200, |rng: &mut Rng| {
+            let mut m = Metrics::new();
+            let mut reference: Vec<f64> = Vec::new();
+            for _ in 0..rng.range(1, 60) {
+                let v = rng.f64_range(0.0, 10.0);
+                m.record_response(v, 1, true);
+                reference.push(v);
+                if rng.chance(0.2) {
+                    // interleaved read: forces rebuild-then-append cycles
+                    let _ = m.latency_pct(0.5);
+                }
+            }
+            reference.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for &p in &[0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                let idx = ((reference.len() as f64 - 1.0) * p).round() as usize;
+                assert_eq!(m.latency_pct(p).unwrap().to_bits(), reference[idx].to_bits());
+            }
+            let mean = reference.iter().sum::<f64>() / reference.len() as f64;
+            assert!((m.mean_latency().unwrap() - mean).abs() < 1e-9);
+        });
+    }
+
+    #[test]
+    fn prop_merge_equals_recording_into_one() {
+        // Splitting a stream across two nodes and merging must yield the
+        // same percentiles and counters as one combined stream.
+        forall(0x4E46E, 100, |rng: &mut Rng| {
+            let mut a = Metrics::new();
+            let mut b = Metrics::new();
+            let mut combined = Metrics::new();
+            for _ in 0..rng.range(0, 40) {
+                let v = rng.f64_range(0.0, 5.0);
+                let tokens = rng.range(0, 9) as usize;
+                let ok = rng.chance(0.9);
+                let target = if rng.chance(0.5) { &mut a } else { &mut b };
+                target.record_response(v, tokens, ok);
+                combined.record_response(v, tokens, ok);
+            }
+            a.merge(&b);
+            assert_eq!(a.requests, combined.requests);
+            assert_eq!(a.errors, combined.errors);
+            assert_eq!(a.tokens_out, combined.tokens_out);
+            for &p in &[0.0, 0.5, 0.99, 1.0] {
+                assert_eq!(
+                    a.latency_pct(p).map(f64::to_bits),
+                    combined.latency_pct(p).map(f64::to_bits)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_and_sum_rates() {
+        let mut n0 = Metrics::new();
+        n0.tokens_out = 100;
+        n0.simulated_device_s = 2.0; // 50 tok/s
+        n0.simulated_energy_j = 50.0;
+        n0.requests = 4;
+        let mut n1 = Metrics::new();
+        n1.tokens_out = 30;
+        n1.simulated_device_s = 1.0; // 30 tok/s
+        n1.simulated_energy_j = 30.0;
+        n1.requests = 2;
+        let fm = FleetMetrics { nodes: vec![("a", n0), ("b", n1)] };
+        assert!((fm.sim_tokens_per_sec() - 80.0).abs() < 1e-12);
+        let total = fm.total();
+        assert_eq!(total.requests, 6);
+        assert_eq!(total.tokens_out, 130);
+        assert!((fm.sim_tokens_per_joule() - 130.0 / 80.0).abs() < 1e-12);
+        assert!(fm.render().contains("fleet (2 nodes)"));
     }
 }

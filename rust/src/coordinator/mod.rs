@@ -1,13 +1,17 @@
-//! L3 serving coordinator — the §6.2 edge-node deployment, real.
+//! L3 serving coordinator — the §6.2 edge-node deployment, real, at fleet
+//! scale.
 //!
 //! A threaded (std::thread + mpsc; no async runtime in the offline crate
-//! set) inference server over the AOT artifacts: requests enter a bounded
-//! queue, a [`batcher`] groups them under a size/latency window, a worker
-//! owning the [`crate::runtime::ModelRuntime`] prefills each sequence into
-//! a [`kv`] slot and interleaves decode steps round-robin ([`scheduler`])
-//! until every sequence finishes. [`metrics`] records real wall-clock
-//! latencies *and* the simulated CMP 170HX device-time overlay, and
-//! [`router`] spreads load across a fleet of (simulated) cards.
+//! set) inference fleet over the AOT artifacts: requests enter a bounded
+//! queue, the dispatch stage routes each one across N per-card workers via
+//! a [`router::Fleet`] policy, and every worker runs **continuous
+//! batching** — new sequences join its decode round whenever a [`kv`] slot
+//! frees ([`scheduler::plan_admission`]), with [`batcher::BatchPolicy`]
+//! reduced to the admission-policy value type. Each node owns its own
+//! runtime, KV slots sized to its card's VRAM, and a per-card simulated
+//! device-time/energy overlay, so [`metrics::FleetMetrics`] reports
+//! fleet-wide tokens/s, latency percentiles, and tokens/joule for any mix
+//! of registry cards.
 //!
 //! Python never runs here: the executables carry the weights.
 
@@ -19,9 +23,9 @@ pub mod router;
 pub mod scheduler;
 pub mod server;
 
-pub use batcher::{Batcher, BatchPolicy};
+pub use batcher::BatchPolicy;
 pub use kv::KvSlots;
-pub use metrics::Metrics;
+pub use metrics::{FleetMetrics, Metrics};
 pub use request::{GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{NodeConfig, Server, ServerConfig, ServerHandle};

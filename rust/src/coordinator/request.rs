@@ -31,9 +31,11 @@ pub struct GenResponse {
     pub prefill_s: f64,
     /// Wall-clock decode time, seconds.
     pub decode_s: f64,
-    /// Simulated CMP 170HX device time for the same work, seconds
-    /// (the timing-model overlay; see DESIGN.md §E2E).
+    /// Simulated device time for the same work on the serving card,
+    /// seconds (the timing-model overlay; see DESIGN.md §E2E).
     pub simulated_device_s: f64,
+    /// Fleet node index that served (or rejected) the request.
+    pub node: usize,
 }
 
 impl GenResponse {
@@ -62,6 +64,7 @@ mod tests {
             prefill_s: 0.2,
             decode_s: 0.3,
             simulated_device_s: 0.05,
+            node: 0,
         };
         assert!(r.ok());
         assert!((r.latency_s() - 0.6).abs() < 1e-12);
@@ -86,6 +89,7 @@ mod tests {
                 prefill_s: 0.0,
                 decode_s: 0.0,
                 simulated_device_s: 0.0,
+                node: 0,
             })
             .unwrap();
         assert_eq!(rx.recv().unwrap().id, 7);

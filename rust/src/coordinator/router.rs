@@ -41,6 +41,18 @@ pub struct Fleet {
 }
 
 impl Fleet {
+    /// Build a fleet directly from pre-weighted nodes — the serving engine
+    /// computes weights once from its per-node calibrated bench rows and
+    /// hands them over, making the router the actual dispatch stage rather
+    /// than a standalone index-picker.
+    pub fn new(nodes: Vec<Node>, policy: RoutePolicy) -> Self {
+        Fleet {
+            nodes,
+            policy,
+            cursor: 0,
+        }
+    }
+
     /// Build a fleet from device specs, weighting by simulated decode
     /// throughput on `quant` at `policy`'s fmad setting. The weighting
     /// kernels are lowered once and swept across the whole fleet as one
@@ -182,6 +194,60 @@ mod tests {
         let slow = f.nodes[1].assigned as f64;
         let ratio = fast / slow;
         assert!(ratio > 1.6 && ratio < 2.5, "{ratio}");
+    }
+
+    fn node(name: &'static str, weight: f64) -> Node {
+        Node { name, weight, outstanding: 0, assigned: 0 }
+    }
+
+    #[test]
+    fn weighted_routing_starves_zero_weight_nodes() {
+        // A dead card (zero measured throughput) must not attract traffic:
+        // its normalized load is effectively infinite.
+        let mut f = Fleet::new(
+            vec![node("dead", 0.0), node("live", 100.0)],
+            RoutePolicy::WeightedThroughput,
+        );
+        for _ in 0..50 {
+            assert_eq!(f.route(), 1);
+        }
+        assert_eq!(f.nodes[0].assigned, 0);
+        assert_eq!(f.nodes[1].assigned, 50);
+    }
+
+    #[test]
+    fn weighted_all_zero_weight_fleet_still_routes() {
+        // Degenerate fleet: every weight zero. The epsilon guard keeps the
+        // load metric finite, so routing degrades to least-loaded instead
+        // of panicking on a NaN comparison.
+        let mut f = Fleet::new(
+            vec![node("a", 0.0), node("b", 0.0)],
+            RoutePolicy::WeightedThroughput,
+        );
+        for _ in 0..4 {
+            let i = f.route();
+            assert!(i < 2);
+        }
+        assert_eq!(f.total_assigned(), 4);
+        assert_eq!(f.nodes[0].assigned, 2);
+        assert_eq!(f.nodes[1].assigned, 2);
+    }
+
+    #[test]
+    fn weighted_single_node_fleet_routes_everything_to_it() {
+        let mut f = Fleet::uniform(1, 5.0, RoutePolicy::WeightedThroughput);
+        for _ in 0..10 {
+            assert_eq!(f.route(), 0);
+        }
+        assert_eq!(f.nodes[0].assigned, 10);
+        assert_eq!(f.nodes[0].outstanding, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty fleet")]
+    fn empty_fleet_route_panics() {
+        let mut f = Fleet::uniform(0, 1.0, RoutePolicy::WeightedThroughput);
+        let _ = f.route();
     }
 
     #[test]

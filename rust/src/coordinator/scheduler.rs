@@ -1,10 +1,17 @@
-//! Step scheduling across in-flight sequences.
+//! Step scheduling across in-flight sequences, plus the continuous-batching
+//! admission (slot-join) step.
 //!
 //! The decode loop must decide which active sequences advance each
 //! iteration. Two policies:
 //! - [`StepPolicy::RoundRobin`] — fair interleaving (latency-balanced);
 //! - [`StepPolicy::ShortestFirst`] — drain sequences closest to completion
 //!   first (frees KV slots sooner; throughput-biased under slot pressure).
+//!
+//! Between rounds, [`plan_admission`] decides how many queued requests may
+//! join the in-flight set — the vLLM-style slot-join that replaced the old
+//! batch-window-then-drain loop.
+
+use super::batcher::BatchPolicy;
 
 /// An in-flight sequence the scheduler sees.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -62,6 +69,14 @@ pub fn plan_round(policy: StepPolicy, seqs: &[SeqView]) -> Vec<usize> {
     out
 }
 
+/// The admission (slot-join) step of continuous batching: how many queued
+/// requests may join the decode round right now. Bounded by the policy's
+/// concurrency cap and by the free KV slots; in-flight sequences are never
+/// preempted, so admission only ever fills headroom.
+pub fn plan_admission(policy: &BatchPolicy, live: usize, free_slots: usize) -> usize {
+    policy.concurrency().saturating_sub(live).min(free_slots)
+}
+
 /// Total decode rounds a batch needs (the longest target governs — decode
 /// is serial per sequence).
 pub fn rounds_needed(seqs: &[SeqView]) -> usize {
@@ -91,6 +106,21 @@ mod tests {
     fn shortest_first_orders_by_remaining() {
         let seqs = [seq(0, 0, 9), seq(1, 0, 2), seq(2, 0, 5)];
         assert_eq!(plan_round(StepPolicy::ShortestFirst, &seqs), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn admission_fills_headroom_without_preempting() {
+        let p = |max_batch| BatchPolicy { max_batch, ..Default::default() };
+        // room under both bounds → admit the smaller of the two
+        assert_eq!(plan_admission(&p(4), 1, 8), 3);
+        assert_eq!(plan_admission(&p(8), 1, 2), 2);
+        // at the cap or out of slots → nothing joins
+        assert_eq!(plan_admission(&p(4), 4, 4), 0);
+        assert_eq!(plan_admission(&p(4), 0, 0), 0);
+        // over-cap live set (cap lowered mid-flight) must not underflow
+        assert_eq!(plan_admission(&p(2), 5, 3), 0);
+        // zero cap is floored to one sequence
+        assert_eq!(plan_admission(&p(0), 0, 3), 1);
     }
 
     #[test]

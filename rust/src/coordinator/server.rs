@@ -1,41 +1,74 @@
-//! The serving engine: a worker thread owning the PJRT model runtime.
+//! The fleet serving engine: a shared admission queue feeding N per-card
+//! continuous-batching workers.
 //!
-//! Life of a request: client → bounded queue → [`Batcher`] window → worker
-//! prefills each prompt into a KV slot → decode rounds per
-//! [`scheduler::plan_round`] until every sequence hits its target → replies
-//! on each request's channel. Failures are contained per request; a dropped
-//! reply receiver is a cancellation. Every step also accrues the simulated
-//! CMP 170HX device-time overlay so the example/bench can report "what this
-//! workload would cost on the paper's card".
+//! Life of a request: client → bounded queue → dispatch stage (the
+//! [`Fleet`] router picks a card) → that node's worker joins the request
+//! into its decode round as soon as a KV slot is free (vLLM-style
+//! continuous batching — no stop-the-world batch windows), prefills it,
+//! and interleaves decode steps per [`scheduler::plan_round_into`] until
+//! the sequence hits its target → reply on the request's channel. Failures
+//! are contained per request; a dropped reply receiver is a cancellation.
+//!
+//! Every node owns its own [`ModelRuntime`], [`KvSlots`] sized to its
+//! card's VRAM, [`Metrics`], and a simulated device-time/energy overlay
+//! calibrated per card (any mix of registry [`DeviceSpec`]s), so a
+//! heterogeneous fleet — a 170HX next to a 90HX — reports fleet-wide
+//! tokens/s and tokens/joule.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::device::registry;
+use crate::device::{registry, DeviceSpec};
 use crate::isa::pass::FmadPolicy;
-use crate::llm::llamabench::LlamaBench;
+use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
 use crate::llm::quant;
 use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 
-use super::batcher::{BatchPolicy, Batcher};
+use super::batcher::BatchPolicy;
 use super::kv::KvSlots;
-use super::metrics::Metrics;
+use super::metrics::{FleetMetrics, Metrics};
 use super::request::{GenRequest, GenResponse};
-use super::scheduler::{plan_round_into, SeqView, StepPolicy};
+use super::router::{Fleet, Node, RoutePolicy};
+use super::scheduler::{plan_admission, plan_round_into, SeqView, StepPolicy};
+
+/// One card of the serving fleet: the simulated device identity and the
+/// fmad policy its deployment would run.
+#[derive(Clone, Debug)]
+pub struct NodeConfig {
+    pub device: DeviceSpec,
+    pub fmad: FmadPolicy,
+}
+
+impl NodeConfig {
+    pub fn new(device: DeviceSpec, fmad: FmadPolicy) -> Self {
+        NodeConfig { device, fmad }
+    }
+}
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
+    /// Bound of **each** engine queue: the shared dispatch queue and every
+    /// node's own queue (so a fleet buffers up to `(1 + nodes) ×
+    /// queue_depth` requests, plus one in the dispatcher's hand, before
+    /// `submit` sheds load).
     pub queue_depth: usize,
+    /// Per-node admission policy (concurrency cap + cold-start gather).
     pub batch: BatchPolicy,
     pub step_policy: StepPolicy,
-    /// fmad policy of the simulated deployment (drives the overlay).
+    /// fmad policy of the default single-node deployment (and of nodes
+    /// added via the CLI); explicit [`NodeConfig`]s carry their own.
     pub fmad: FmadPolicy,
+    /// Dispatch-stage routing policy across the fleet.
+    pub route: RoutePolicy,
+    /// The fleet. Empty = one CMP 170HX (the single-card path, unchanged
+    /// in behaviour and per-request results).
+    pub nodes: Vec<NodeConfig>,
 }
 
 impl Default for ServerConfig {
@@ -45,6 +78,8 @@ impl Default for ServerConfig {
             batch: BatchPolicy::default(),
             step_policy: StepPolicy::RoundRobin,
             fmad: FmadPolicy::Decomposed,
+            route: RoutePolicy::WeightedThroughput,
+            nodes: Vec::new(),
         }
     }
 }
@@ -52,31 +87,36 @@ impl Default for ServerConfig {
 /// Client handle: submit requests, read metrics, shut down.
 pub struct ServerHandle {
     tx: Option<SyncSender<GenRequest>>,
-    worker: Option<JoinHandle<()>>,
-    metrics: Arc<Mutex<Metrics>>,
+    dispatcher: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    node_names: Vec<&'static str>,
+    node_metrics: Vec<Arc<Mutex<Metrics>>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
-/// Simulated per-token device times for the overlay.
+/// Simulated per-token device time and power for one node's overlay.
 #[derive(Clone, Copy, Debug)]
 struct Overlay {
     prefill_s_per_token: f64,
     decode_s_per_token: f64,
+    /// Prefill is compute-saturated, so the DVFS governor pins the board at
+    /// its envelope — [`crate::power::PowerModel::board_power`] clips
+    /// saturated activity to TDP, which is what we charge per prefill
+    /// second.
+    prefill_w: f64,
+    /// Decode power from the §4.4 calibrated residency model.
+    decode_w: f64,
 }
 
 impl Overlay {
-    /// Overlay for the CMP 170HX serving the paper's Qwen2.5-1.5B in q8_0
-    /// at the configured fmad policy — the workload §6.2 recommends.
-    fn cmp170hx(policy: FmadPolicy) -> Overlay {
-        let bench = LlamaBench {
-            model: ModelDesc::qwen25_15b(),
-            ..Default::default()
-        };
-        let dev = registry::cmp170hx();
-        let r = bench.run(&dev, &quant::Q8_0, policy);
+    /// Overlay for one node serving the paper's Qwen2.5-1.5B in q8_0 — the
+    /// workload §6.2 recommends — from its calibrated bench row.
+    fn from_row(row: &BenchResult, dev: &DeviceSpec) -> Overlay {
         Overlay {
-            prefill_s_per_token: 1.0 / r.prefill_tps,
-            decode_s_per_token: 1.0 / r.decode_tps,
+            prefill_s_per_token: 1.0 / row.prefill_tps,
+            decode_s_per_token: 1.0 / row.decode_tps,
+            prefill_w: dev.tdp_w,
+            decode_w: row.decode_power_w,
         }
     }
 }
@@ -85,36 +125,145 @@ impl Overlay {
 pub struct Server;
 
 impl Server {
-    /// Start the worker over an artifact directory. Compilation happens on
-    /// the worker thread; `start` returns once the runtime is live (or the
+    /// Start the fleet over an artifact directory: one runtime-owning
+    /// worker per node plus the dispatch stage. Compilation happens on the
+    /// worker threads; `start` returns once every node is live (or the
     /// first error is known).
     pub fn start(artifacts: ArtifactDir, config: ServerConfig) -> Result<ServerHandle> {
-        let (tx, rx) = sync_channel::<GenRequest>(config.queue_depth);
-        let metrics = Arc::new(Mutex::new(Metrics::new()));
-        let metrics_worker = Arc::clone(&metrics);
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(1);
+        let model = ModelDesc::qwen25_15b();
+        let nodes: Vec<NodeConfig> = if config.nodes.is_empty() {
+            vec![NodeConfig::new(registry::cmp170hx(), config.fmad)]
+        } else {
+            config.nodes.clone()
+        };
 
-        let worker = std::thread::Builder::new()
-            .name("cmphx-server".into())
+        // One calibrated bench row per node: overlay rates, routing weight,
+        // and decode power all come from a single batched sweep.
+        let bench = LlamaBench { model, ..Default::default() };
+        let cells: Vec<(DeviceSpec, FmadPolicy)> =
+            nodes.iter().map(|n| (n.device.clone(), n.fmad)).collect();
+        let rows = bench.run_nodes(&cells, &quant::Q8_0);
+
+        let fleet = Arc::new(Mutex::new(Fleet::new(
+            nodes
+                .iter()
+                .zip(&rows)
+                .map(|(n, r)| Node {
+                    name: n.device.name,
+                    weight: r.decode_tps,
+                    outstanding: 0,
+                    assigned: 0,
+                })
+                .collect(),
+            config.route,
+        )));
+
+        let queue_depth = config.queue_depth.max(1);
+        let weights_bytes = model.weight_bytes(&quant::Q8_0);
+        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(nodes.len());
+        let mut worker_txs: Vec<SyncSender<GenRequest>> = Vec::with_capacity(nodes.len());
+        let mut workers = Vec::with_capacity(nodes.len());
+        let mut node_metrics = Vec::with_capacity(nodes.len());
+        let node_names: Vec<&'static str> = nodes.iter().map(|n| n.device.name).collect();
+
+        for (i, (node, row)) in nodes.iter().zip(&rows).enumerate() {
+            let (wtx, wrx) = sync_channel::<GenRequest>(queue_depth);
+            worker_txs.push(wtx);
+            let metrics = Arc::new(Mutex::new(Metrics::new()));
+            node_metrics.push(Arc::clone(&metrics));
+
+            let overlay = Overlay::from_row(row, &node.device);
+            let vram_bytes = node.device.mem.capacity_bytes;
+            let slots_per_node = config.batch.concurrency();
+            let artifacts = artifacts.clone();
+            let ready = ready_tx.clone();
+            let fleet = Arc::clone(&fleet);
+            let policy = config.batch;
+            let step_policy = config.step_policy;
+
+            let worker = std::thread::Builder::new()
+                .name(format!("cmphx-node{i}"))
+                .spawn(move || {
+                    let runtime = match ModelRuntime::load(&artifacts) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    // KV slots sized against this node's own VRAM: weights
+                    // plus per-slot KV of the serving model must fit the
+                    // card (the binding 8 GB ceiling for the 170HX).
+                    let slots = match KvSlots::new(
+                        slots_per_node,
+                        model.kv_bytes_per_pos() * runtime.config.max_ctx as u64,
+                        vram_bytes,
+                        weights_bytes,
+                    ) {
+                        Ok(s) => s,
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    let _ = ready.send(Ok(()));
+                    worker_loop(NodeWorker {
+                        node: i,
+                        runtime,
+                        rx: wrx,
+                        policy,
+                        step_policy,
+                        overlay,
+                        slots,
+                        metrics,
+                        fleet,
+                    });
+                })?;
+            workers.push(worker);
+        }
+        drop(ready_tx);
+        for _ in 0..nodes.len() {
+            ready_rx.recv()??;
+        }
+
+        // Dispatch stage: the Fleet's routing policy IS the fan-out.
+        let (tx, rx) = sync_channel::<GenRequest>(queue_depth);
+        let fleet_d = Arc::clone(&fleet);
+        let metrics_d: Vec<Arc<Mutex<Metrics>>> =
+            node_metrics.iter().map(Arc::clone).collect();
+        let dispatcher = std::thread::Builder::new()
+            .name("cmphx-dispatch".into())
             .spawn(move || {
-                let runtime = match ModelRuntime::load(&artifacts) {
-                    Ok(rt) => {
-                        let _ = ready_tx.send(Ok(()));
-                        rt
+                while let Ok(req) = rx.recv() {
+                    let idx = fleet_d.lock().unwrap().route();
+                    if let Err(SendError(req)) = worker_txs[idx].send(req) {
+                        // Worker gone (it panicked or was torn down): fail
+                        // the request instead of wedging the queue.
+                        fleet_d.lock().unwrap().complete(idx);
+                        let queue_s = req.enqueued.elapsed().as_secs_f64();
+                        metrics_d[idx].lock().unwrap().record_response(queue_s, 0, false);
+                        let _ = req.reply.send(GenResponse {
+                            id: req.id,
+                            tokens: vec![],
+                            error: Some("node worker unavailable".into()),
+                            queue_s,
+                            prefill_s: 0.0,
+                            decode_s: 0.0,
+                            simulated_device_s: 0.0,
+                            node: idx,
+                        });
                     }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                worker_loop(runtime, rx, config, metrics_worker);
+                }
+                // Dropping worker_txs here closes every node queue; the
+                // workers drain what was already routed, then exit.
             })?;
 
-        ready_rx.recv()??;
         Ok(ServerHandle {
             tx: Some(tx),
-            worker: Some(worker),
-            metrics,
+            dispatcher: Some(dispatcher),
+            workers,
+            node_names,
+            node_metrics,
             next_id: std::sync::atomic::AtomicU64::new(1),
         })
     }
@@ -147,57 +296,66 @@ impl ServerHandle {
         }
     }
 
-    /// Snapshot of metrics.
+    /// Fleet-wide metrics snapshot (all nodes merged).
     pub fn metrics(&self) -> Metrics {
-        self.metrics.lock().unwrap().clone()
+        self.fleet_metrics().total()
     }
 
-    /// Stop accepting requests, drain, and join the worker.
-    pub fn shutdown(mut self) -> Metrics {
+    /// Per-node metrics snapshot.
+    pub fn fleet_metrics(&self) -> FleetMetrics {
+        FleetMetrics {
+            nodes: self
+                .node_names
+                .iter()
+                .zip(&self.node_metrics)
+                .map(|(name, m)| (*name, m.lock().unwrap().clone()))
+                .collect(),
+        }
+    }
+
+    fn stop(&mut self) {
         drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+        for w in self.workers.drain(..) {
             let _ = w.join();
         }
-        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests, drain, and join the fleet.
+    pub fn shutdown(mut self) -> Metrics {
+        self.stop();
+        self.metrics()
+    }
+
+    /// Like [`ServerHandle::shutdown`], keeping per-node attribution.
+    pub fn shutdown_fleet(mut self) -> FleetMetrics {
+        self.stop();
+        self.fleet_metrics()
     }
 }
 
 impl Drop for ServerHandle {
     fn drop(&mut self) {
-        drop(self.tx.take());
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
-        }
+        self.stop();
     }
 }
 
-fn worker_loop(
+/// Everything one node's continuous-batching loop owns.
+struct NodeWorker {
+    node: usize,
     runtime: ModelRuntime,
     rx: Receiver<GenRequest>,
-    config: ServerConfig,
+    policy: BatchPolicy,
+    step_policy: StepPolicy,
+    overlay: Overlay,
+    slots: KvSlots,
     metrics: Arc<Mutex<Metrics>>,
-) {
-    let overlay = Overlay::cmp170hx(config.fmad);
-    let cfg = runtime.config;
-    // KV slots sized for the simulated card: Qwen2.5-1.5B q8_0 weights on
-    // an 8 GB device; the *real* tiny-qwen state is negligible, the slot
-    // count enforces the same admission behaviour the CMP would.
-    let model = ModelDesc::qwen25_15b();
-    let mut slots = KvSlots::new(
-        config.batch.max_batch,
-        model.kv_bytes_per_pos() as u64 * cfg.max_ctx as u64,
-        8 << 30,
-        model.weight_bytes(&quant::Q8_0),
-    )
-    .expect("slot config must fit the 8GB card");
-
-    let batcher = Batcher::new(rx, config.batch);
-    while let Some(batch) = batcher.next_batch() {
-        metrics.lock().unwrap().record_batch(batch.len());
-        serve_batch(&runtime, &config, &overlay, &mut slots, batch, &metrics);
-    }
+    fleet: Arc<Mutex<Fleet>>,
 }
 
+/// One in-flight sequence.
 struct Live {
     req: GenRequest,
     state: DecodeState,
@@ -206,143 +364,212 @@ struct Live {
     queue_s: f64,
     prefill_s: f64,
     sim_s: f64,
+    sim_j: f64,
+    failed: Option<String>,
     decode_started: Instant,
 }
 
-fn serve_batch(
-    runtime: &ModelRuntime,
-    config: &ServerConfig,
-    overlay: &Overlay,
-    slots: &mut KvSlots,
-    batch: Vec<GenRequest>,
-    metrics: &Arc<Mutex<Metrics>>,
-) {
-    let cfg = runtime.config;
-    let mut live: Vec<Live> = Vec::new();
-
-    // --- prefill phase ---
-    for req in batch {
-        let queue_s = req.enqueued.elapsed().as_secs_f64();
-        // admission: prompt must fit the window, generation must fit KV
-        let budget = cfg.max_ctx - cfg.prefill_t;
-        if req.prompt.len() > cfg.prefill_t || req.max_tokens > budget {
-            respond_error(
-                &req,
-                format!(
-                    "request exceeds window (prompt {} > {} or tokens {} > {})",
-                    req.prompt.len(),
-                    cfg.prefill_t,
-                    req.max_tokens,
-                    budget
-                ),
-                queue_s,
-                metrics,
-            );
-            continue;
-        }
-        let Some(slot) = slots.acquire() else {
-            respond_error(&req, "no KV slot (overload)".into(), queue_s, metrics);
-            continue;
-        };
-        let t0 = Instant::now();
-        match runtime.prefill_padded(&req.prompt) {
-            Ok(state) => {
-                let prefill_s = t0.elapsed().as_secs_f64();
-                let sim_s = overlay.prefill_s_per_token * cfg.prefill_t as f64;
-                let first = state.argmax();
-                live.push(Live {
-                    req,
-                    state,
-                    slot,
-                    tokens: vec![first],
-                    queue_s,
-                    prefill_s,
-                    sim_s,
-                    decode_started: Instant::now(),
-                });
-            }
-            Err(e) => {
-                slots.release(slot);
-                respond_error(&req, format!("prefill failed: {e}"), queue_s, metrics);
-            }
+impl Live {
+    fn target(&self) -> usize {
+        if self.failed.is_some() {
+            self.tokens.len()
+        } else {
+            self.req.max_tokens.max(1)
         }
     }
 
-    // --- decode rounds ---
-    // Round-planning buffers reused across the whole batch: after the first
-    // round, planning allocates nothing.
-    let mut views: Vec<SeqView> = Vec::with_capacity(live.len());
-    let mut plan: Vec<usize> = Vec::with_capacity(live.len());
-    loop {
+    fn done(&self) -> bool {
+        self.tokens.len() >= self.target()
+    }
+}
+
+fn worker_loop(mut w: NodeWorker) {
+    let mut live: Vec<Live> = Vec::new();
+    // Round-planning buffers reused across the engine's lifetime: planning
+    // a round allocates nothing after the first.
+    let mut views: Vec<SeqView> = Vec::new();
+    let mut plan: Vec<usize> = Vec::new();
+    let mut open = true;
+
+    while open || !live.is_empty() {
+        // --- admission (slot-join): fill free slots, never stall decode ---
+        let mut want = plan_admission(&w.policy, live.len(), w.slots.free_slots());
+        if open && want > 0 {
+            if live.is_empty() {
+                // Idle engine: block for the first arrival, then gather up
+                // to `max_wait` of company for the cold-start round.
+                match w.rx.recv() {
+                    Ok(req) => {
+                        if admit(&mut w, req, &mut live) {
+                            want -= 1;
+                        }
+                        let deadline = Instant::now() + w.policy.max_wait;
+                        while want > 0 {
+                            let now = Instant::now();
+                            if now >= deadline {
+                                break;
+                            }
+                            match w.rx.recv_timeout(deadline - now) {
+                                Ok(req) => {
+                                    if admit(&mut w, req, &mut live) {
+                                        want -= 1;
+                                    }
+                                }
+                                Err(RecvTimeoutError::Timeout) => break,
+                                Err(RecvTimeoutError::Disconnected) => {
+                                    open = false;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    Err(_) => open = false,
+                }
+            } else {
+                // Busy engine: non-blocking joins — the continuous part.
+                while want > 0 {
+                    match w.rx.try_recv() {
+                        Ok(req) => {
+                            if admit(&mut w, req, &mut live) {
+                                want -= 1;
+                            }
+                        }
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+
+        // --- one decode round across the in-flight set ---
         views.clear();
         views.extend(live.iter().enumerate().map(|(i, l)| SeqView {
             seq: i,
             generated: l.tokens.len(),
-            target: l.req.max_tokens.max(1),
+            target: l.target(),
         }));
-        plan_round_into(config.step_policy, &views, &mut plan);
-        if plan.is_empty() {
-            break;
-        }
-        for &idx in &plan {
-            let l = &mut live[idx];
-            let token = *l.tokens.last().unwrap();
-            match runtime.decode(&mut l.state, token) {
-                Ok(()) => {
-                    l.tokens.push(l.state.argmax());
-                    l.sim_s += overlay.decode_s_per_token;
-                }
-                Err(e) => {
-                    // fail just this sequence; mark done by truncating target
-                    l.req.max_tokens = l.tokens.len();
-                    let msg = format!("decode failed: {e}");
-                    let _ = l.req.reply.send(GenResponse {
-                        id: l.req.id,
-                        tokens: l.tokens.clone(),
-                        error: Some(msg),
-                        queue_s: l.queue_s,
-                        prefill_s: l.prefill_s,
-                        decode_s: l.decode_started.elapsed().as_secs_f64(),
-                        simulated_device_s: l.sim_s,
-                    });
+        plan_round_into(w.step_policy, &views, &mut plan);
+        if !plan.is_empty() {
+            w.metrics.lock().unwrap().record_batch(plan.len());
+            for &idx in &plan {
+                let l = &mut live[idx];
+                let token = *l.tokens.last().unwrap();
+                match w.runtime.decode(&mut l.state, token) {
+                    Ok(()) => {
+                        l.tokens.push(l.state.argmax());
+                        l.sim_s += w.overlay.decode_s_per_token;
+                        l.sim_j += w.overlay.decode_s_per_token * w.overlay.decode_w;
+                    }
+                    Err(e) => l.failed = Some(format!("decode failed: {e}")),
                 }
             }
         }
-    }
 
-    // --- respond + release ---
-    let mut m = metrics.lock().unwrap();
-    for l in live {
-        slots.release(l.slot);
-        let decode_s = l.decode_started.elapsed().as_secs_f64();
-        m.wall_prefill_s += l.prefill_s;
-        m.wall_decode_s += decode_s;
-        m.simulated_device_s += l.sim_s;
-        let resp = GenResponse {
-            id: l.req.id,
-            tokens: l.tokens.clone(),
-            error: None,
-            queue_s: l.queue_s,
-            prefill_s: l.prefill_s,
-            decode_s,
-            simulated_device_s: l.sim_s,
-        };
-        m.record_response(resp.latency_s(), resp.tokens.len(), true);
-        // dropped receiver = cancelled; ignore send failure
-        let _ = l.req.reply.send(resp);
+        // --- retire finished sequences; their slots free for the next
+        //     round's admissions ---
+        let mut i = 0;
+        while i < live.len() {
+            if !live[i].done() {
+                i += 1;
+                continue;
+            }
+            let l = live.swap_remove(i);
+            retire(&mut w, l);
+        }
     }
 }
 
-fn respond_error(
-    req: &GenRequest,
-    error: String,
-    queue_s: f64,
-    metrics: &Arc<Mutex<Metrics>>,
-) {
-    metrics
-        .lock()
-        .unwrap()
-        .record_response(queue_s, 0, false);
+/// Admit one routed request: window checks, KV slot, prefill. Returns true
+/// when the request joined the in-flight set.
+fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
+    let cfg = w.runtime.config;
+    let queue_s = req.enqueued.elapsed().as_secs_f64();
+    let budget = cfg.max_ctx - cfg.prefill_t;
+    if req.prompt.len() > cfg.prefill_t || req.max_tokens > budget {
+        let msg = format!(
+            "request exceeds window (prompt {} > {} or tokens {} > {})",
+            req.prompt.len(),
+            cfg.prefill_t,
+            req.max_tokens,
+            budget
+        );
+        reject(w, &req, msg, queue_s);
+        return false;
+    }
+    let Some(slot) = w.slots.acquire() else {
+        reject(w, &req, "no KV slot (overload)".into(), queue_s);
+        return false;
+    };
+    let t0 = Instant::now();
+    match w.runtime.prefill_padded(&req.prompt) {
+        Ok(state) => {
+            let prefill_s = t0.elapsed().as_secs_f64();
+            let sim_s = w.overlay.prefill_s_per_token * cfg.prefill_t as f64;
+            let sim_j = sim_s * w.overlay.prefill_w;
+            let first = state.argmax();
+            live.push(Live {
+                req,
+                state,
+                slot,
+                tokens: vec![first],
+                queue_s,
+                prefill_s,
+                sim_s,
+                sim_j,
+                failed: None,
+                decode_started: Instant::now(),
+            });
+            true
+        }
+        Err(e) => {
+            w.slots
+                .release(slot)
+                .expect("releasing the just-acquired slot");
+            reject(w, &req, format!("prefill failed: {e}"), queue_s);
+            false
+        }
+    }
+}
+
+/// Retire one finished (or failed) sequence: release its slot, account
+/// metrics, tell the router, reply.
+fn retire(w: &mut NodeWorker, l: Live) {
+    w.slots.release(l.slot).expect("slot accounting");
+    let decode_s = l.decode_started.elapsed().as_secs_f64();
+    let ok = l.failed.is_none();
+    let resp = GenResponse {
+        id: l.req.id,
+        tokens: l.tokens,
+        error: l.failed,
+        queue_s: l.queue_s,
+        prefill_s: l.prefill_s,
+        decode_s,
+        simulated_device_s: l.sim_s,
+        node: w.node,
+    };
+    {
+        let mut m = w.metrics.lock().unwrap();
+        m.wall_prefill_s += l.prefill_s;
+        m.wall_decode_s += decode_s;
+        m.simulated_device_s += l.sim_s;
+        m.simulated_energy_j += l.sim_j;
+        m.record_response(resp.latency_s(), resp.tokens.len(), ok);
+    }
+    w.fleet.lock().unwrap().complete(w.node);
+    // dropped receiver = cancelled; ignore send failure
+    let _ = l.req.reply.send(resp);
+}
+
+/// Reply with a terminal error before the request ever held a slot.
+fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64) {
+    w.metrics.lock().unwrap().record_response(queue_s, 0, false);
+    w.fleet.lock().unwrap().complete(w.node);
     let _ = req.reply.send(GenResponse {
         id: req.id,
         tokens: vec![],
@@ -351,5 +578,6 @@ fn respond_error(
         prefill_s: 0.0,
         decode_s: 0.0,
         simulated_device_s: 0.0,
+        node: w.node,
     });
 }

@@ -317,6 +317,56 @@ impl LlamaBench {
             .collect()
     }
 
+    /// One quant across a heterogeneous fleet where every node carries its
+    /// own fmad policy — the serving engine's per-card calibration. Cells
+    /// are lowered once per distinct policy (at most two kernel walks per
+    /// phase) and all `2 × nodes` simulations run as one batched
+    /// [`batch::run_pairs`] sweep. Results are ordered like `nodes` and
+    /// bit-identical to calling [`LlamaBench::run`] per node.
+    pub fn run_nodes(
+        &self,
+        nodes: &[(DeviceSpec, FmadPolicy)],
+        quant: &QuantFormat,
+    ) -> Vec<BenchResult> {
+        fn cell_for<'a>(
+            fused: &'a Option<LoweredCell>,
+            decomposed: &'a Option<LoweredCell>,
+            p: FmadPolicy,
+        ) -> &'a LoweredCell {
+            match p {
+                FmadPolicy::Fused => fused.as_ref().expect("fused cell lowered"),
+                FmadPolicy::Decomposed => decomposed.as_ref().expect("decomposed cell lowered"),
+            }
+        }
+        let fused = nodes
+            .iter()
+            .any(|(_, p)| *p == FmadPolicy::Fused)
+            .then(|| self.lower_cell(quant, FmadPolicy::Fused));
+        let decomposed = nodes
+            .iter()
+            .any(|(_, p)| *p == FmadPolicy::Decomposed)
+            .then(|| self.lower_cell(quant, FmadPolicy::Decomposed));
+        // Node-major pairs: [prefill×n0, decode×n0, prefill×n1, …].
+        let pairs: Vec<(SweepJob<'_>, &DeviceSpec)> = nodes
+            .iter()
+            .flat_map(|(dev, p)| {
+                let cell = cell_for(&fused, &decomposed, *p);
+                [
+                    (SweepJob { kernel: &cell.prefill, cfg: cell.prefill_cfg }, dev),
+                    (SweepJob { kernel: &cell.decode, cfg: cell.decode_cfg }, dev),
+                ]
+            })
+            .collect();
+        let timings = batch::run_pairs(&pairs);
+        nodes
+            .iter()
+            .zip(timings.chunks(2))
+            .map(|((dev, p), pair)| {
+                self.assemble(cell_for(&fused, &decomposed, *p), &pair[0], &pair[1], dev)
+            })
+            .collect()
+    }
+
     /// VRAM check (§4.1: model chosen so all layers fit in 8 GB).
     pub fn fits(&self, dev: &DeviceSpec, quant: &QuantFormat) -> bool {
         self.model.fits(
@@ -541,6 +591,27 @@ mod tests {
                 );
                 i += 1;
             }
+        }
+    }
+
+    #[test]
+    fn run_nodes_matches_per_node_runs_with_mixed_policies() {
+        // The fleet-calibration path: heterogeneous devices AND policies in
+        // one sweep must be bit-identical to the sequential per-node runs.
+        let b = bench();
+        let nodes = [
+            (registry::cmp170hx(), FmadPolicy::Decomposed),
+            (registry::cmp90hx(), FmadPolicy::Fused),
+            (registry::cmp170hx_x16(), FmadPolicy::Decomposed),
+        ];
+        let rows = b.run_nodes(&nodes, &Q8_0);
+        assert_eq!(rows.len(), 3);
+        for (row, (dev, policy)) in rows.iter().zip(nodes.iter()) {
+            let single = b.run(dev, &Q8_0, *policy);
+            assert_eq!(row.policy, *policy);
+            assert_eq!(row.prefill_tps.to_bits(), single.prefill_tps.to_bits());
+            assert_eq!(row.decode_tps.to_bits(), single.decode_tps.to_bits());
+            assert_eq!(row.decode_power_w.to_bits(), single.decode_power_w.to_bits());
         }
     }
 

@@ -55,8 +55,34 @@ pub struct FleetPlan {
     pub decode_tps_total: f64,
 }
 
+/// Size a fleet of `dev` from a **measured** per-card serving throughput —
+/// a fleet-engine node's `Metrics::sim_tokens_per_sec`, or a real
+/// deployment's observed rate — rather than the modeled single-card
+/// estimate. This is what the continuous-batching coordinator feeds back
+/// into the §6.2 economics: sizing consumes what the fleet actually
+/// sustained under its admission policy, not a standalone tg128 peak.
+pub fn fleet_for_measured_throughput(
+    dev: &DeviceSpec,
+    measured_tps_per_card: f64,
+    target_tps: f64,
+) -> FleetPlan {
+    assert!(
+        measured_tps_per_card > 0.0,
+        "measured throughput must be positive"
+    );
+    let cards = (target_tps / measured_tps_per_card).ceil().max(1.0) as u32;
+    FleetPlan {
+        device: dev.name,
+        cards,
+        capex_usd: cards as f64 * dev.price_usd,
+        power_w: cards as f64 * dev.tdp_w,
+        decode_tps_total: cards as f64 * measured_tps_per_card,
+    }
+}
+
 /// How many cards of `dev` are needed to serve `target_tps` of decode
-/// throughput on `quant`, and what that costs.
+/// throughput on `quant`, and what that costs — the modeled-estimate
+/// convenience over [`fleet_for_measured_throughput`].
 pub fn fleet_for_throughput(
     dev: &DeviceSpec,
     quant: &QuantFormat,
@@ -65,13 +91,46 @@ pub fn fleet_for_throughput(
 ) -> FleetPlan {
     let bench = LlamaBench::default();
     let per_card = bench.run(dev, quant, policy).decode_tps;
-    let cards = (target_tps / per_card).ceil().max(1.0) as u32;
-    FleetPlan {
+    fleet_for_measured_throughput(dev, per_card, target_tps)
+}
+
+/// §6.2's headline question, answered from measured serving metrics: how
+/// many `dev` cards replace one A100 for decode serving, and at what
+/// capital and energy cost.
+#[derive(Clone, Debug)]
+pub struct Replacement {
+    pub device: &'static str,
+    /// Cards of `dev` needed to match one A100's measured throughput.
+    pub cards_per_a100: u32,
+    /// Replacement-fleet capex over A100 capex (< 1 ⇒ the reuse pencils).
+    pub capex_ratio: f64,
+    /// Replacement-fleet wall power over A100 wall power.
+    pub power_ratio: f64,
+    /// Joules per token of `dev` over joules per token of the A100
+    /// (> 1 ⇒ the recycled fleet pays an energy premium per token).
+    pub energy_per_token_ratio: f64,
+}
+
+/// Compare a measured `(tokens/s, watts)` operating point of `dev` against
+/// a measured A100 operating point. Throughputs and powers come from the
+/// fleet engine's per-node metrics (or `LlamaBench` rows for a pure-model
+/// answer).
+pub fn a100_replacement(
+    dev: &DeviceSpec,
+    measured_tps: f64,
+    measured_w: f64,
+    a100_tps: f64,
+    a100_w: f64,
+) -> Replacement {
+    assert!(measured_tps > 0.0 && a100_tps > 0.0);
+    let a100 = crate::device::registry::a100_pcie();
+    let cards = (a100_tps / measured_tps).ceil().max(1.0) as u32;
+    Replacement {
         device: dev.name,
-        cards,
-        capex_usd: cards as f64 * dev.price_usd,
-        power_w: cards as f64 * dev.tdp_w,
-        decode_tps_total: cards as f64 * per_card,
+        cards_per_a100: cards,
+        capex_ratio: (cards as f64 * dev.price_usd) / a100.price_usd,
+        power_ratio: (cards as f64 * measured_w) / a100_w,
+        energy_per_token_ratio: (measured_w / measured_tps) / (a100_w / a100_tps),
     }
 }
 
@@ -123,6 +182,50 @@ mod tests {
         assert!(plan.decode_tps_total >= 2000.0);
         assert!(plan.cards >= 2);
         assert!((plan.capex_usd - plan.cards as f64 * dev.price_usd).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_sizing_matches_modeled_sizing_at_the_model_point() {
+        // Feeding the modeled per-card rate through the measured-throughput
+        // path must reproduce fleet_for_throughput exactly.
+        let dev = registry::cmp170hx();
+        let per_card = LlamaBench::default()
+            .run(&dev, &quant::Q4_K_M, FmadPolicy::Decomposed)
+            .decode_tps;
+        let modeled =
+            fleet_for_throughput(&dev, &quant::Q4_K_M, FmadPolicy::Decomposed, 2000.0);
+        let measured = fleet_for_measured_throughput(&dev, per_card, 2000.0);
+        assert_eq!(modeled.cards, measured.cards);
+        assert_eq!(modeled.capex_usd, measured.capex_usd);
+        assert_eq!(
+            modeled.decode_tps_total.to_bits(),
+            measured.decode_tps_total.to_bits()
+        );
+    }
+
+    #[test]
+    fn measured_sizing_reflects_serving_degradation() {
+        // A fleet that measures below the tg128 peak needs more cards —
+        // exactly what the single-card estimate used to hide.
+        let dev = registry::cmp170hx();
+        let peak = fleet_for_measured_throughput(&dev, 500.0, 2000.0);
+        let degraded = fleet_for_measured_throughput(&dev, 350.0, 2000.0);
+        assert_eq!(peak.cards, 4);
+        assert_eq!(degraded.cards, 6);
+        assert!(degraded.capex_usd > peak.capex_usd);
+    }
+
+    #[test]
+    fn a100_replacement_counts_cards_and_energy() {
+        let dev = registry::cmp170hx();
+        // A card at 1/3 the A100 rate → 3 cards, and a 2× J/token premium
+        // when it burns 2/3 the power at 1/3 the rate.
+        let r = a100_replacement(&dev, 100.0, 200.0, 300.0, 300.0);
+        assert_eq!(r.cards_per_a100, 3);
+        assert!((r.power_ratio - 2.0).abs() < 1e-12);
+        assert!((r.energy_per_token_ratio - 2.0).abs() < 1e-12);
+        // capex: 3 × $4500 vs $10k
+        assert!((r.capex_ratio - 1.35).abs() < 1e-12);
     }
 
     #[test]

@@ -12,3 +12,11 @@ pub mod goldens;
 
 pub use artifacts::ArtifactDir;
 pub use engine_rt::{DecodeState, ModelRuntime};
+
+/// True when a live PJRT client can be constructed. False with the
+/// vendored stub `xla` crate (no `xla_extension` in the build image) —
+/// integration tests and the serving benches use this to skip gracefully
+/// instead of failing on environments that cannot run the runtime at all.
+pub fn pjrt_available() -> bool {
+    xla::PjRtClient::cpu().is_ok()
+}

@@ -83,6 +83,38 @@ pub fn run_jobs(jobs: &[SweepJob<'_>], devices: &[DeviceSpec]) -> Vec<KernelTimi
     out.into_iter().map(|t| t.expect("every cell simulated")).collect()
 }
 
+/// Run arbitrary `(job, device)` pairs — the heterogeneous-fleet shape
+/// where every card simulates its own kernel build (e.g. a per-node fmad
+/// policy, so no dense `jobs × devices` grid exists). Output order matches
+/// `pairs` and is bit-identical to the equivalent sequential loop.
+pub fn run_pairs(pairs: &[(SweepJob<'_>, &DeviceSpec)]) -> Vec<KernelTiming> {
+    if pairs.is_empty() {
+        return Vec::new();
+    }
+    let workers = worker_count(pairs.len());
+    if workers == 1 {
+        return pairs
+            .iter()
+            .map(|(job, dev)| simulate_lowered(job.kernel, dev, &job.cfg))
+            .collect();
+    }
+    let mut out: Vec<Option<KernelTiming>> = Vec::with_capacity(pairs.len());
+    out.resize_with(pairs.len(), || None);
+    let chunk = pairs.len().div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, slots) in out.chunks_mut(chunk).enumerate() {
+            let base = w * chunk;
+            s.spawn(move || {
+                for (off, slot) in slots.iter_mut().enumerate() {
+                    let (job, dev) = &pairs[base + off];
+                    *slot = Some(simulate_lowered(job.kernel, dev, &job.cfg));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|t| t.expect("every pair simulated")).collect()
+}
+
 /// Run `kernels × devices` under one shared config, kernel-major order:
 /// `out[k * devices.len() + d]`.
 pub fn sweep(
@@ -210,6 +242,44 @@ mod tests {
                 assert_bit_identical(a, b);
             }
         });
+    }
+
+    #[test]
+    fn prop_run_pairs_matches_sequential_and_grid() {
+        // Pairs drawn from a jobs × devices grid must reproduce the
+        // run_jobs cells bit-for-bit, in pair order, across both the inline
+        // and the threaded paths.
+        forall(0xFA172, 30, |rng: &mut Rng| {
+            let kernels: Vec<LoweredKernel> = (0..rng.range(1, 20) as usize)
+                .map(|i| LoweredKernel::lower(&gen_kernel(rng, i)))
+                .collect();
+            let devices = [registry::cmp170hx(), registry::cmp90hx(), registry::a100_pcie()];
+            let jobs: Vec<SweepJob<'_>> = kernels
+                .iter()
+                .map(|k| SweepJob {
+                    kernel: k,
+                    cfg: SimConfig {
+                        issue_efficiency: rng.f64_range(0.3, 1.0),
+                        ..Default::default()
+                    },
+                })
+                .collect();
+            let pairs: Vec<(SweepJob<'_>, &crate::device::DeviceSpec)> = jobs
+                .iter()
+                .flat_map(|j| devices.iter().map(move |d| (*j, d)))
+                .collect();
+            let paired = run_pairs(&pairs);
+            let grid = run_jobs(&jobs, &devices);
+            assert_eq!(paired.len(), grid.len());
+            for (a, b) in paired.iter().zip(grid.iter()) {
+                assert_bit_identical(a, b);
+            }
+        });
+    }
+
+    #[test]
+    fn run_pairs_empty_is_empty() {
+        assert!(run_pairs(&[]).is_empty());
     }
 
     #[test]

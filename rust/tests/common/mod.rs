@@ -1,0 +1,21 @@
+//! Shared helpers for the artifact-backed integration tests.
+
+use cmphx::runtime::ArtifactDir;
+
+/// The AOT artifact directory — or `None`, with a note on stderr, when
+/// this environment cannot run the PJRT runtime at all (artifacts missing
+/// or the vendored stub xla crate). Tests treat `None` as a skip.
+pub fn artifact_dir() -> Option<ArtifactDir> {
+    if !cmphx::runtime::pjrt_available() {
+        eprintln!("skipping: PJRT unavailable (stub xla build)");
+        return None;
+    }
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match ArtifactDir::open(root) {
+        Ok(dir) => Some(dir),
+        Err(_) => {
+            eprintln!("skipping: artifacts missing (run `make artifacts`)");
+            None
+        }
+    }
+}

@@ -1,5 +1,8 @@
 //! Failure injection across the runtime/coordinator boundary: corrupted
 //! artifacts, backpressure, and concurrent submission races.
+//!
+//! Tests skip (pass vacuously, with a note on stderr) when artifacts or a
+//! live PJRT client are unavailable.
 
 use std::time::Duration;
 
@@ -9,14 +12,11 @@ use cmphx::coordinator::{Server, ServerConfig};
 use cmphx::isa::pass::FmadPolicy;
 use cmphx::runtime::{ArtifactDir, ModelRuntime};
 
-fn artifact_dir() -> ArtifactDir {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    ArtifactDir::open(root).expect("run `make artifacts` first")
-}
+mod common;
+use common::artifact_dir;
 
 /// Copy the artifact dir with one entry corrupted.
-fn corrupted_copy(victim: &str, garbage: &str) -> ArtifactDir {
-    let src = artifact_dir();
+fn corrupted_copy(src: &ArtifactDir, victim: &str, garbage: &str) -> ArtifactDir {
     let dst = std::env::temp_dir().join(format!("cmphx-corrupt-{victim}"));
     let _ = std::fs::remove_dir_all(&dst);
     std::fs::create_dir_all(&dst).unwrap();
@@ -29,21 +29,24 @@ fn corrupted_copy(victim: &str, garbage: &str) -> ArtifactDir {
 
 #[test]
 fn corrupted_hlo_text_is_a_clean_error() {
-    let dir = corrupted_copy("decode.hlo.txt", "HloModule broken\nthis is not hlo");
+    let Some(src) = artifact_dir() else { return };
+    let dir = corrupted_copy(&src, "decode.hlo.txt", "HloModule broken\nthis is not hlo");
     let err = ModelRuntime::load(&dir).err().expect("must fail").to_string();
     assert!(err.contains("decode.hlo.txt"), "{err}");
 }
 
 #[test]
 fn corrupted_goldens_json_is_a_clean_error() {
-    let dir = corrupted_copy("goldens.json", "{ not json !!");
+    let Some(src) = artifact_dir() else { return };
+    let dir = corrupted_copy(&src, "goldens.json", "{ not json !!");
     let err = format!("{:#}", ModelRuntime::load(&dir).err().expect("must fail"));
     assert!(!err.is_empty());
 }
 
 #[test]
 fn server_start_surfaces_compile_failure() {
-    let dir = corrupted_copy("prefill.hlo.txt", "HloModule broken ENTRY {}");
+    let Some(src) = artifact_dir() else { return };
+    let dir = corrupted_copy(&src, "prefill.hlo.txt", "HloModule broken ENTRY {}");
     let err = Server::start(dir, ServerConfig::default());
     assert!(err.is_err(), "server must not come up on a broken artifact");
 }
@@ -58,8 +61,10 @@ fn concurrent_submitters_all_get_served() {
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,
+        ..Default::default()
     };
-    let server = std::sync::Arc::new(Server::start(artifact_dir(), config).unwrap());
+    let Some(dir) = artifact_dir() else { return };
+    let server = std::sync::Arc::new(Server::start(dir, config).unwrap());
     let mut handles = Vec::new();
     for t in 0..4 {
         let server = std::sync::Arc::clone(&server);
@@ -85,13 +90,16 @@ fn tiny_queue_applies_backpressure() {
         queue_depth: 1,
         batch: BatchPolicy {
             max_batch: 1,
-            // long window so the queue stays occupied while we flood it
+            // long gather window so the engine stays occupied while we
+            // flood the admission queue
             max_wait: Duration::from_millis(300),
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,
+        ..Default::default()
     };
-    let server = Server::start(artifact_dir(), config).unwrap();
+    let Some(dir) = artifact_dir() else { return };
+    let server = Server::start(dir, config).unwrap();
     let mut accepted = Vec::new();
     let mut rejected = 0usize;
     for _ in 0..32 {

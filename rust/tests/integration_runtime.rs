@@ -1,24 +1,28 @@
 //! Integration: artifacts → PJRT runtime → numerics vs python goldens.
 //!
 //! These tests require `make artifacts` to have run (the Makefile `test`
-//! target guarantees it).
+//! target guarantees it); they skip — pass vacuously with a stderr note —
+//! when artifacts or a live PJRT client are unavailable.
 
-use cmphx::runtime::{goldens::Json, ArtifactDir, ModelRuntime};
+use cmphx::runtime::{goldens::Json, ModelRuntime};
 
-fn artifact_dir() -> ArtifactDir {
-    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    ArtifactDir::open(root).expect("run `make artifacts` first")
-}
+mod common;
+use common::artifact_dir;
 
 // PJRT handles hold `Rc`s (not Sync), so the compiled runtime is cached
 // per test thread rather than in a process-wide static.
 thread_local! {
-    static RUNTIME_TL: ModelRuntime =
-        ModelRuntime::load(&artifact_dir()).expect("runtime load");
+    static RUNTIME_TL: std::cell::OnceCell<ModelRuntime> = std::cell::OnceCell::new();
 }
 
-fn with_runtime<R>(f: impl FnOnce(&ModelRuntime) -> R) -> R {
-    RUNTIME_TL.with(|rt| f(rt))
+/// Run `f` against the cached runtime, or skip when the environment cannot
+/// load one. Returns `None` on skip.
+fn with_runtime<R>(f: impl FnOnce(&ModelRuntime) -> R) -> Option<R> {
+    let dir = artifact_dir()?;
+    Some(RUNTIME_TL.with(|cell| {
+        let rt = cell.get_or_init(|| ModelRuntime::load(&dir).expect("runtime load"));
+        f(rt)
+    }))
 }
 
 fn golden_prompt(rt: &ModelRuntime) -> Vec<i32> {
@@ -34,7 +38,7 @@ fn golden_prompt(rt: &ModelRuntime) -> Vec<i32> {
 
 #[test]
 fn runtime_loads_and_reports_cpu_platform() {
-    with_runtime(|rt| {
+    let _ = with_runtime(|rt| {
         assert!(rt.platform().to_lowercase().contains("cpu"));
         assert_eq!(rt.config.vocab, 512);
         assert_eq!(rt.config.layers, 4);
@@ -43,7 +47,7 @@ fn runtime_loads_and_reports_cpu_platform() {
 
 #[test]
 fn prefill_matches_python_golden_logits() {
-    with_runtime(|rt| {
+    let _ = with_runtime(|rt| {
         let prompt = golden_prompt(rt);
         let state = rt.prefill(&prompt).unwrap();
 
@@ -69,7 +73,7 @@ fn prefill_matches_python_golden_logits() {
 fn greedy_generation_matches_python_golden_tokens() {
     // The strongest cross-language signal: the whole prefill+decode loop,
     // token for token.
-    with_runtime(|rt| {
+    let _ = with_runtime(|rt| {
         let prompt = golden_prompt(rt);
         let expected: Vec<i32> = rt
             .goldens
@@ -87,7 +91,7 @@ fn greedy_generation_matches_python_golden_tokens() {
 
 #[test]
 fn decode_rejects_cache_overflow() {
-    with_runtime(|rt| {
+    let _ = with_runtime(|rt| {
         let prompt: Vec<i32> = (1..=rt.config.prefill_t as i32).collect();
         let mut state = rt.prefill(&prompt).unwrap();
         for _ in 0..(rt.config.max_ctx - rt.config.prefill_t) {
@@ -100,7 +104,7 @@ fn decode_rejects_cache_overflow() {
 
 #[test]
 fn prefill_rejects_wrong_length() {
-    with_runtime(|rt| {
+    let _ = with_runtime(|rt| {
         assert!(rt.prefill(&[1, 2, 3]).is_err());
         assert!(rt.prefill_padded(&vec![1; rt.config.prefill_t + 1]).is_err());
     });
@@ -115,8 +119,8 @@ fn mixbench_inputs(g: &Json) -> (xla::Literal, xla::Literal) {
 
 #[test]
 fn mixbench_kernels_match_goldens_and_diverge_from_each_other() {
-    with_runtime(|rt| {
-        let dir = artifact_dir();
+    let _ = with_runtime(|rt| {
+        let dir = artifact_dir().expect("runtime is live, artifacts exist");
         let (x, y) = mixbench_inputs(&rt.goldens);
         let fused = rt
             .run_kernel(&dir, "mixbench_fused.hlo.txt", &[x.clone(), y.clone()])
@@ -152,8 +156,8 @@ fn mixbench_kernels_match_goldens_and_diverge_from_each_other() {
 
 #[test]
 fn qmatmul_kernel_matches_golden() {
-    with_runtime(|rt| {
-        let dir = artifact_dir();
+    let _ = with_runtime(|rt| {
+        let dir = artifact_dir().expect("runtime is live, artifacts exist");
         let qg = rt.goldens.get("qmatmul").unwrap();
         let (m, k, n) = (
             qg.get("m").unwrap().as_usize().unwrap(),

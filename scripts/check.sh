@@ -15,16 +15,17 @@ if ! command -v cargo >/dev/null 2>&1; then
     exit 1
 fi
 
-echo "==> cargo build --release"
-cargo build --release
+echo "==> cargo build --release --all-targets"
+# --all-targets so benches and examples (which cargo test skips) cannot rot
+cargo build --release --all-targets
 
 echo "==> cargo test -q"
 cargo test -q
 
 if [[ "${1:-}" != "--no-clippy" ]]; then
     if cargo clippy --version >/dev/null 2>&1; then
-        echo "==> cargo clippy -- -D warnings"
-        cargo clippy -- -D warnings
+        echo "==> cargo clippy --all-targets -- -D warnings"
+        cargo clippy --all-targets -- -D warnings
     else
         echo "warning: clippy not installed; skipping lint step" >&2
     fi
