@@ -22,6 +22,7 @@ fn main() -> anyhow::Result<()> {
         batch: BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(4),
+            ..BatchPolicy::default()
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,

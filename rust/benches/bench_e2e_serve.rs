@@ -32,6 +32,7 @@ fn config(max_batch: usize, step_policy: StepPolicy) -> ServerConfig {
         batch: BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(3),
+            ..BatchPolicy::default()
         },
         step_policy,
         fmad: FmadPolicy::Decomposed,
@@ -107,7 +108,8 @@ fn run_fleet() -> anyhow::Result<()> {
             a100.decode_tps,
             a100.decode_power_w,
         );
-        let plan = tco::fleet_for_measured_throughput(&dev, m.sim_tokens_per_sec(), a100.decode_tps);
+        let plan =
+            tco::fleet_for_measured_throughput(&dev, m.sim_tokens_per_sec(), a100.decode_tps);
         println!(
             "{name}: {} cards ≈ one A100 on decode ({:.0}% capex, {:.1}× power, {:.2}× J/token); \
              at the measured serving rate ({:.0} tok/s/card incl. prefill) {} cards",
@@ -119,6 +121,47 @@ fn run_fleet() -> anyhow::Result<()> {
             plan.cards,
         );
     }
+    Ok(())
+}
+
+/// Serve a long + shorts mix under a deliberately tight page pool, with
+/// and without preemption — the paged-KV ablation: how much recompute tax
+/// does preempt-and-requeue pay to keep short requests completing?
+fn run_pressure(preempt: bool) -> anyhow::Result<()> {
+    const LONG: usize = 24;
+    const SHORT: usize = 6;
+    let dir = artifacts()?;
+    let prefill_t = cmphx::runtime::goldens::config_usize(&dir, "prefill_t")?;
+    let mut cfg = config(2, StepPolicy::ShortestFirst);
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget =
+        Some((prefill_t + LONG - 1).max(2 * (prefill_t + SHORT)));
+    cfg.batch.preempt = preempt;
+    let server = Server::start(dir, cfg)?;
+    let t0 = Instant::now();
+    let rx_long = server.submit(vec![3, 1, 4, 1, 5, 9, 2, 6], LONG)?;
+    let rx_shorts: Vec<_> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, SHORT).unwrap()
+        })
+        .collect();
+    let mut served = 0usize;
+    for rx in rx_shorts.into_iter().chain(std::iter::once(rx_long)) {
+        if rx.recv()?.ok() {
+            served += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown();
+    println!(
+        "preempt={preempt:<5}: {served}/5 served, {} tok in {wall:.2}s | evicted={} resumed={} wasted_sim={:.1}ms | errors={}",
+        m.tokens_out,
+        m.preemptions,
+        m.resumes,
+        m.wasted_prefill_s * 1e3,
+        m.errors,
+    );
     Ok(())
 }
 
@@ -137,6 +180,9 @@ fn main() -> anyhow::Result<()> {
     }
     println!("-- scheduler ablation at batch=4 --");
     run_once(4, StepPolicy::ShortestFirst)?;
+    println!("-- paged KV under page pressure: preempt-and-requeue ablation --");
+    run_pressure(true)?;
+    run_pressure(false)?;
     println!("-- fleet: 170HX + 90HX, continuous batching, weighted routing --");
     run_fleet()?;
     Ok(())

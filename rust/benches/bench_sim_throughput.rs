@@ -15,13 +15,50 @@
 //! so the perf trajectory is recorded across PRs.
 
 use cmphx::bench_harness::time_fn;
+use cmphx::coordinator::KvPager;
 use cmphx::device::registry;
 use cmphx::isa::pass::{apply_fmad, FmadPolicy};
 use cmphx::llm::kernels::{decode_kernel, prefill_kernel};
 use cmphx::llm::llamabench::LlamaBench;
+use cmphx::llm::model::ModelDesc;
 use cmphx::llm::quant;
 use cmphx::sim::batch::{self, SweepJob};
 use cmphx::sim::simulate;
+
+/// Serving-concurrency row: how many concurrent sequences a 170HX admits
+/// under the paged allocator vs the replaced fixed-slot allocator, at a
+/// long-context operating point (context 4× the mean sequence length —
+/// the regime where worst-case reservation wastes most of the card).
+/// Deterministic arithmetic, no PJRT needed.
+struct ServeConcurrency {
+    context: usize,
+    mean_seq: usize,
+    block_positions: usize,
+    fixed_slot_seqs: usize,
+    paged_seqs: usize,
+}
+
+fn serve_concurrency() -> ServeConcurrency {
+    let model = ModelDesc::qwen25_15b();
+    let dev = registry::cmp170hx();
+    let block_positions = 16;
+    let context = 4096;
+    let mean_seq = 1024; // prompt + mean generation = context / 4
+    let pager = KvPager::new(
+        block_positions,
+        model.kv_bytes_per_pos(),
+        dev.mem.capacity_bytes,
+        model.weight_bytes(&quant::Q8_0),
+    )
+    .expect("Qwen2.5-1.5B q8_0 fits the 170HX");
+    ServeConcurrency {
+        context,
+        mean_seq,
+        block_positions,
+        fixed_slot_seqs: pager.fixed_slot_capacity(context),
+        paged_seqs: pager.admissible(mean_seq),
+    }
+}
 
 fn main() {
     let bench = LlamaBench::default();
@@ -84,14 +121,28 @@ fn main() {
     );
     println!("speedup:                {speedup:>12.2}×  ({threads} hw threads)");
 
+    let sc = serve_concurrency();
+    let concurrency_ratio = sc.paged_seqs as f64 / sc.fixed_slot_seqs.max(1) as f64;
+    println!(
+        "serve concurrency (170HX, Qwen2.5-1.5B q8_0, ctx {} / mean seq {}): \
+         fixed-slot {} seqs vs paged {} seqs ({concurrency_ratio:.2}×)",
+        sc.context, sc.mean_seq, sc.fixed_slot_seqs, sc.paged_seqs,
+    );
+
     let json = format!(
-        "{{\n  \"bench\": \"bench_sim_throughput\",\n  \"sweep\": \"llamabench 6-quant x 2-policy x prefill+decode x {} devices\",\n  \"cells_per_sweep\": {},\n  \"baseline_relower_kernels_per_sec\": {:.1},\n  \"lowered_batched_kernels_per_sec\": {:.1},\n  \"speedup\": {:.2},\n  \"hw_threads\": {}\n}}\n",
+        "{{\n  \"bench\": \"bench_sim_throughput\",\n  \"sweep\": \"llamabench 6-quant x 2-policy x prefill+decode x {} devices\",\n  \"cells_per_sweep\": {},\n  \"baseline_relower_kernels_per_sec\": {:.1},\n  \"lowered_batched_kernels_per_sec\": {:.1},\n  \"speedup\": {:.2},\n  \"hw_threads\": {},\n  \"serve_concurrency\": {{\n    \"device\": \"CMP 170HX\",\n    \"model\": \"Qwen2.5-1.5B\",\n    \"quant\": \"q8_0\",\n    \"context\": {},\n    \"mean_seq_positions\": {},\n    \"kv_block_positions\": {},\n    \"fixed_slot_seqs\": {},\n    \"paged_seqs\": {},\n    \"ratio\": {:.2}\n  }}\n}}\n",
         devices.len(),
         cells as u64,
         baseline_kps,
         lowered_kps,
         speedup,
         threads,
+        sc.context,
+        sc.mean_seq,
+        sc.block_positions,
+        sc.fixed_slot_seqs,
+        sc.paged_seqs,
+        concurrency_ratio,
     );
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
     match std::fs::write(&out, json) {

@@ -89,8 +89,13 @@ mod tests {
     fn x16_mod_quadruples() {
         let dev = registry::cmp170hx();
         let rows = graph_ex2(&dev);
-        let stock = rows.iter().find(|r| r.case.contains("stock") && r.case.contains("send")).unwrap();
-        let modded = rows.iter().find(|r| r.case.contains("x16") && r.case.contains("send")).unwrap();
+        let find = |tag: &str| {
+            rows.iter()
+                .find(|r| r.case.contains(tag) && r.case.contains("send"))
+                .unwrap()
+        };
+        let stock = find("stock");
+        let modded = find("x16");
         let ratio = modded.gbps / stock.gbps;
         assert!((ratio - 4.0).abs() < 0.1, "{ratio}");
     }

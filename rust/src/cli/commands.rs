@@ -26,10 +26,14 @@ COMMANDS:
   sweep [precision] [--device d]
                             mixbench operational-intensity sweep (roofline)
   serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
+        [--block N] [--kv-blocks N] [--no-preempt]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
                             optionally across a fleet of registry cards
                             (e.g. --fleet 170hx,90hx) with continuous
-                            batching and weighted routing
+                            batching over paged KV (--block positions per
+                            page, --kv-blocks caps the page pool to force
+                            pressure) and preempt-and-requeue under page
+                            pressure (--no-preempt stalls instead)
   help                      this text
 ";
 
@@ -273,6 +277,14 @@ fn serve(args: &Args) -> Result<i32> {
     let artifacts = ArtifactDir::discover()?;
     let mut config = ServerConfig::default();
     config.batch.max_batch = batch;
+    config.batch.kv_block_positions =
+        args.opt_usize("block", config.batch.kv_block_positions)?;
+    if let Some(cap) = args.opt("kv-blocks") {
+        config.batch.kv_block_budget = Some(cap.parse()?);
+    }
+    if args.flag("no-preempt") {
+        config.batch.preempt = false;
+    }
     if let Some(list) = args.opt("fleet") {
         let fmad = config.fmad;
         // Reject empty segments explicitly: by_name does substring
@@ -304,12 +316,18 @@ fn serve(args: &Args) -> Result<i32> {
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
+        let preempted = if resp.preemptions > 0 {
+            format!(" preempted×{}", resp.preemptions)
+        } else {
+            String::new()
+        };
         println!(
-            "req {i}: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}",
+            "req {i}: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}{}",
             resp.tokens.len(),
             resp.node,
             resp.latency_s() * 1e3,
             resp.simulated_device_s * 1e3,
+            preempted,
             resp.error.as_deref().map(|e| format!(" ERROR {e}")).unwrap_or_default(),
         );
     }

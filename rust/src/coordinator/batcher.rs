@@ -3,10 +3,12 @@
 //! This module used to own a stop-the-world window batcher (gather requests
 //! under a (size, wait) window, then serve that batch to completion). The
 //! fleet engine replaced that loop with **continuous batching** — sequences
-//! join the decode round whenever a KV slot frees — so the batcher is
+//! join the decode round whenever KV pages free — so the batcher is
 //! reduced to the admission-policy value type consumed by
-//! [`crate::coordinator::scheduler::plan_admission`] (the slot-join step)
-//! and by the engine's cold-start gather.
+//! [`crate::coordinator::scheduler::plan_admission`] (the page-join step)
+//! and by the engine's cold-start gather. The paged-KV refactor grew it
+//! the page-allocator knobs: block size, the preempt-and-requeue switch,
+//! and an optional block budget for forcing page pressure in tests.
 
 use std::time::Duration;
 
@@ -14,13 +16,28 @@ use std::time::Duration;
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
     /// Concurrency cap: the most sequences that may share one card's
-    /// decode round (bounded further by free KV slots at admission time).
+    /// decode round (bounded further by free KV pages at admission time).
     pub max_batch: usize,
     /// Cold-start gather window: how long an idle engine waits for company
     /// after the first request arrives before prefilling the round. Once
     /// the engine is busy, admission is non-blocking — arrivals join the
     /// next round immediately.
     pub max_wait: Duration,
+    /// KV page size in token positions: sequences allocate VRAM in blocks
+    /// of this many positions as they grow, instead of reserving
+    /// worst-case context up front. vLLM's default block of 16 positions
+    /// carries over well to the 8 GB cards.
+    pub kv_block_positions: usize,
+    /// Preempt-and-requeue: when a decode round cannot allocate growth
+    /// pages, evict the longest-remaining sequence back to the waiting
+    /// queue (KV dropped, prefill recomputed on resume) so short requests
+    /// keep completing. With this off, starved sequences stall until a
+    /// peer retires — and fail terminally if nothing ever will.
+    pub preempt: bool,
+    /// Optional cap on the node's KV block pool, below what its VRAM
+    /// would allow. `None` (the default) uses every free byte; tests and
+    /// capacity experiments pin this to force page pressure.
+    pub kv_block_budget: Option<usize>,
 }
 
 impl Default for BatchPolicy {
@@ -28,6 +45,9 @@ impl Default for BatchPolicy {
         BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(5),
+            kv_block_positions: 16,
+            preempt: true,
+            kv_block_budget: None,
         }
     }
 }
@@ -37,6 +57,12 @@ impl BatchPolicy {
     /// make an engine that can never admit anything.
     pub fn concurrency(&self) -> usize {
         self.max_batch.max(1)
+    }
+
+    /// The KV page size with a floor of one position — a zero block would
+    /// make a pager that can never hold anything.
+    pub fn block_positions(&self) -> usize {
+        self.kv_block_positions.max(1)
     }
 }
 
@@ -50,11 +76,26 @@ mod tests {
         assert!(p.max_batch >= 1);
         assert!(p.max_wait > Duration::ZERO);
         assert_eq!(p.concurrency(), p.max_batch);
+        assert!(p.kv_block_positions >= 1);
+        assert!(p.preempt, "preemption is the default — starvation is not");
+        assert!(p.kv_block_budget.is_none());
     }
 
     #[test]
     fn zero_cap_is_floored_to_one() {
-        let p = BatchPolicy { max_batch: 0, max_wait: Duration::ZERO };
+        let p = BatchPolicy {
+            max_batch: 0,
+            ..BatchPolicy::default()
+        };
         assert_eq!(p.concurrency(), 1);
+    }
+
+    #[test]
+    fn zero_block_is_floored_to_one_position() {
+        let p = BatchPolicy {
+            kv_block_positions: 0,
+            ..BatchPolicy::default()
+        };
+        assert_eq!(p.block_positions(), 1);
     }
 }

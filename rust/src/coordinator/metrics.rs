@@ -30,6 +30,15 @@ pub struct Metrics {
     pub batches: u64,
     /// Total sequences stepped across all rounds (drives mean batch size).
     batch_seqs: u64,
+    /// Sequences evicted back to the waiting queue under KV page pressure
+    /// (their device KV was dropped).
+    pub preemptions: u64,
+    /// Preempted sequences that re-entered decode (prefill recomputed and
+    /// generated tokens replayed).
+    pub resumes: u64,
+    /// Simulated device seconds spent recomputing work lost to preemption
+    /// — the price paid for the admission headroom eviction bought.
+    pub wasted_prefill_s: f64,
 }
 
 impl Metrics {
@@ -148,6 +157,9 @@ impl Metrics {
         self.simulated_energy_j += other.simulated_energy_j;
         self.batches += other.batches;
         self.batch_seqs += other.batch_seqs;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.wasted_prefill_s += other.wasted_prefill_s;
         self.latency_sum_s += other.latency_sum_s;
         self.latencies_s.extend_from_slice(&other.latencies_s);
     }
@@ -157,6 +169,7 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
+             preempt: evicted={} resumed={} wasted_sim={:.4}s\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
              simulated device time: {:.4}s ({}× host)  energy {:.2}J → {:.1} tok/J",
@@ -164,6 +177,9 @@ impl Metrics {
             self.errors,
             self.tokens_out,
             self.mean_batch_size(),
+            self.preemptions,
+            self.resumes,
+            self.wasted_prefill_s,
             self.mean_latency().unwrap_or(0.0) * 1e3,
             self.latency_pct(0.5).unwrap_or(0.0) * 1e3,
             self.latency_pct(0.99).unwrap_or(0.0) * 1e3,
@@ -282,10 +298,32 @@ mod tests {
         m.wall_decode_s = 1.0;
         m.simulated_device_s = 0.1;
         m.simulated_energy_j = 4.0;
+        m.preemptions = 3;
+        m.resumes = 2;
+        m.wasted_prefill_s = 0.5;
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
         assert!(s.contains("tok/J"));
+        assert!(s.contains("evicted=3"), "{s}");
+        assert!(s.contains("resumed=2"), "{s}");
+        assert!(s.contains("wasted_sim=0.5000s"), "{s}");
+    }
+
+    #[test]
+    fn merge_sums_preemption_counters() {
+        let mut a = Metrics::new();
+        a.preemptions = 2;
+        a.resumes = 1;
+        a.wasted_prefill_s = 0.25;
+        let mut b = Metrics::new();
+        b.preemptions = 3;
+        b.resumes = 3;
+        b.wasted_prefill_s = 0.5;
+        a.merge(&b);
+        assert_eq!(a.preemptions, 5);
+        assert_eq!(a.resumes, 4);
+        assert!((a.wasted_prefill_s - 0.75).abs() < 1e-12);
     }
 
     #[test]

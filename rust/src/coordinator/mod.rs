@@ -4,14 +4,20 @@
 //! A threaded (std::thread + mpsc; no async runtime in the offline crate
 //! set) inference fleet over the AOT artifacts: requests enter a bounded
 //! queue, the dispatch stage routes each one across N per-card workers via
-//! a [`router::Fleet`] policy, and every worker runs **continuous
-//! batching** — new sequences join its decode round whenever a [`kv`] slot
-//! frees ([`scheduler::plan_admission`]), with [`batcher::BatchPolicy`]
-//! reduced to the admission-policy value type. Each node owns its own
-//! runtime, KV slots sized to its card's VRAM, and a per-card simulated
-//! device-time/energy overlay, so [`metrics::FleetMetrics`] reports
-//! fleet-wide tokens/s, latency percentiles, and tokens/joule for any mix
-//! of registry cards.
+//! a [`router::Fleet`] policy (dead workers are marked unhealthy and
+//! excluded, with the in-hand request rerouted), and every worker runs
+//! **continuous batching over paged KV** — sequences join its decode
+//! round whenever the [`kv::KvPager`] can hold their prefill window
+//! ([`scheduler::plan_admission`]), grow VRAM block-by-block as they
+//! decode, and under page pressure the longest-remaining sequence is
+//! **preempted and requeued** ([`scheduler::plan_eviction`]): KV dropped,
+//! prefill recomputed on resume, vLLM-style, so long generations cannot
+//! starve short ones. [`batcher::BatchPolicy`] carries the admission and
+//! paging knobs. Each node owns its own runtime, pager sized to its
+//! card's VRAM, and a per-card simulated device-time/energy overlay, so
+//! [`metrics::FleetMetrics`] reports fleet-wide tokens/s, latency
+//! percentiles, tokens/joule, and the preemption/recompute tax for any
+//! mix of registry cards.
 //!
 //! Python never runs here: the executables carry the weights.
 
@@ -24,7 +30,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatchPolicy;
-pub use kv::KvSlots;
+pub use kv::{KvPager, SeqKv};
 pub use metrics::{FleetMetrics, Metrics};
 pub use request::{GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};

@@ -34,6 +34,10 @@ pub struct GenResponse {
     /// Simulated device time for the same work on the serving card,
     /// seconds (the timing-model overlay; see DESIGN.md §E2E).
     pub simulated_device_s: f64,
+    /// Times this request was preempted under KV page pressure and later
+    /// resumed (each resume recomputed prefill and replayed the tokens
+    /// generated so far).
+    pub preemptions: u64,
     /// Fleet node index that served (or rejected) the request.
     pub node: usize,
 }
@@ -64,6 +68,7 @@ mod tests {
             prefill_s: 0.2,
             decode_s: 0.3,
             simulated_device_s: 0.05,
+            preemptions: 0,
             node: 0,
         };
         assert!(r.ok());
@@ -89,6 +94,7 @@ mod tests {
                 prefill_s: 0.0,
                 decode_s: 0.0,
                 simulated_device_s: 0.0,
+                preemptions: 0,
                 node: 0,
             })
             .unwrap();

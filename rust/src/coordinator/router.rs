@@ -22,6 +22,11 @@ pub struct Node {
     pub outstanding: u64,
     /// Cumulative assigned requests.
     pub assigned: u64,
+    /// Routable. The dispatch stage clears this when the node's worker is
+    /// gone (its queue rejected a send), excluding it from future routing
+    /// — the old behaviour kept selecting the dead card forever while
+    /// healthy ones idled.
+    pub healthy: bool,
 }
 
 /// Routing policy.
@@ -73,6 +78,7 @@ impl Fleet {
                 weight: r.decode_tps,
                 outstanding: 0,
                 assigned: 0,
+                healthy: true,
             })
             .collect();
         Fleet {
@@ -91,6 +97,7 @@ impl Fleet {
                     weight,
                     outstanding: 0,
                     assigned: 0,
+                    healthy: true,
                 })
                 .collect(),
             policy,
@@ -98,19 +105,28 @@ impl Fleet {
         }
     }
 
-    /// Route one request; returns the node index.
+    /// Route one request; returns the node index. Unhealthy nodes are
+    /// skipped while at least one healthy node remains; a fully-unhealthy
+    /// fleet degrades to routing across all nodes (standalone callers keep
+    /// working — the dispatch stage checks [`Fleet::healthy_count`] itself
+    /// and fails requests instead of sending them to the dead).
     pub fn route(&mut self) -> usize {
         assert!(!self.nodes.is_empty(), "empty fleet");
+        let all = self.healthy_count() == 0;
+        let eligible = |n: &Node| all || n.healthy;
         let idx = match self.policy {
-            RoutePolicy::RoundRobin => {
+            RoutePolicy::RoundRobin => loop {
                 let i = self.cursor % self.nodes.len();
                 self.cursor += 1;
-                i
-            }
+                if eligible(&self.nodes[i]) {
+                    break i;
+                }
+            },
             RoutePolicy::LeastLoaded => self
                 .nodes
                 .iter()
                 .enumerate()
+                .filter(|&(_, n)| eligible(n))
                 .min_by_key(|(_, n)| n.outstanding)
                 .map(|(i, _)| i)
                 .unwrap(),
@@ -120,6 +136,7 @@ impl Fleet {
                 self.nodes
                     .iter()
                     .enumerate()
+                    .filter(|&(_, n)| eligible(n))
                     .min_by(|(_, a), (_, b)| {
                         let la = (a.outstanding as f64 + 1.0) / a.weight.max(1e-9);
                         let lb = (b.outstanding as f64 + 1.0) / b.weight.max(1e-9);
@@ -138,6 +155,18 @@ impl Fleet {
     pub fn complete(&mut self, idx: usize) {
         assert!(self.nodes[idx].outstanding > 0, "complete on idle node");
         self.nodes[idx].outstanding -= 1;
+    }
+
+    /// Exclude a node from routing — its worker is gone. There is no
+    /// un-mark: a dead worker thread never comes back within one server's
+    /// lifetime.
+    pub fn mark_unhealthy(&mut self, idx: usize) {
+        self.nodes[idx].healthy = false;
+    }
+
+    /// Nodes still eligible for routing.
+    pub fn healthy_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.healthy).count()
     }
 
     pub fn total_assigned(&self) -> u64 {
@@ -170,14 +199,10 @@ mod tests {
     #[test]
     fn weighted_routing_respects_throughput_ratios() {
         // node 0 twice as fast → gets ~2/3 of a long stream.
-        let mut f = Fleet {
-            nodes: vec![
-                Node { name: "fast", weight: 200.0, outstanding: 0, assigned: 0 },
-                Node { name: "slow", weight: 100.0, outstanding: 0, assigned: 0 },
-            ],
-            policy: RoutePolicy::WeightedThroughput,
-            cursor: 0,
-        };
+        let mut f = Fleet::new(
+            vec![node("fast", 200.0), node("slow", 100.0)],
+            RoutePolicy::WeightedThroughput,
+        );
         // steady state: each node drains work at its own speed
         let mut service = [0.0f64; 2];
         for _ in 0..3000 {
@@ -197,7 +222,13 @@ mod tests {
     }
 
     fn node(name: &'static str, weight: f64) -> Node {
-        Node { name, weight, outstanding: 0, assigned: 0 }
+        Node {
+            name,
+            weight,
+            outstanding: 0,
+            assigned: 0,
+            healthy: true,
+        }
     }
 
     #[test]
@@ -263,6 +294,44 @@ mod tests {
         assert_eq!(f.nodes.len(), 2);
         // the x16 mod lowers readback overhead → strictly faster decode
         assert!(f.nodes[1].weight > f.nodes[0].weight);
+    }
+
+    #[test]
+    fn unhealthy_nodes_are_excluded_from_every_policy() {
+        for policy in [
+            RoutePolicy::RoundRobin,
+            RoutePolicy::LeastLoaded,
+            RoutePolicy::WeightedThroughput,
+        ] {
+            let mut f = Fleet::uniform(3, 1.0, policy);
+            f.mark_unhealthy(1);
+            assert_eq!(f.healthy_count(), 2);
+            for _ in 0..12 {
+                let i = f.route();
+                assert_ne!(i, 1, "{policy:?} routed to a dead node");
+            }
+            assert_eq!(f.nodes[1].assigned, 0);
+        }
+    }
+
+    #[test]
+    fn round_robin_keeps_cycling_the_survivors() {
+        let mut f = Fleet::uniform(3, 1.0, RoutePolicy::RoundRobin);
+        f.mark_unhealthy(0);
+        let picks: Vec<usize> = (0..4).map(|_| f.route()).collect();
+        assert_eq!(picks, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn fully_unhealthy_fleet_degrades_instead_of_hanging() {
+        // route() must not spin or panic when every node is dead; the
+        // dispatch stage guards on healthy_count() before trusting it.
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.mark_unhealthy(0);
+        f.mark_unhealthy(1);
+        assert_eq!(f.healthy_count(), 0);
+        let i = f.route();
+        assert!(i < 2);
     }
 
     #[test]

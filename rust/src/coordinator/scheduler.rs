@@ -1,15 +1,20 @@
 //! Step scheduling across in-flight sequences, plus the continuous-batching
-//! admission (slot-join) step.
+//! admission (page-join) and eviction-planning steps.
 //!
 //! The decode loop must decide which active sequences advance each
 //! iteration. Two policies:
 //! - [`StepPolicy::RoundRobin`] — fair interleaving (latency-balanced);
 //! - [`StepPolicy::ShortestFirst`] — drain sequences closest to completion
-//!   first (frees KV slots sooner; throughput-biased under slot pressure).
+//!   first (frees KV pages sooner; throughput-biased under page pressure).
 //!
 //! Between rounds, [`plan_admission`] decides how many queued requests may
-//! join the in-flight set — the vLLM-style slot-join that replaced the old
-//! batch-window-then-drain loop.
+//! join the in-flight set — the vLLM-style join that replaced the old
+//! batch-window-then-drain loop, now gated on free KV **pages** rather
+//! than worst-case slots. When a round cannot allocate the growth pages
+//! its sequences need, [`plan_eviction`] picks the preemption victim: the
+//! longest-remaining sequence is dropped back to the waiting queue (KV
+//! freed, prefill recomputed on resume) so short requests keep completing
+//! instead of starving behind a long generation.
 
 use super::batcher::BatchPolicy;
 
@@ -69,12 +74,26 @@ pub fn plan_round(policy: StepPolicy, seqs: &[SeqView]) -> Vec<usize> {
     out
 }
 
-/// The admission (slot-join) step of continuous batching: how many queued
+/// The admission (page-join) step of continuous batching: how many queued
 /// requests may join the decode round right now. Bounded by the policy's
-/// concurrency cap and by the free KV slots; in-flight sequences are never
-/// preempted, so admission only ever fills headroom.
-pub fn plan_admission(policy: &BatchPolicy, live: usize, free_slots: usize) -> usize {
-    policy.concurrency().saturating_sub(live).min(free_slots)
+/// concurrency cap and by `admissible` — the number of prefill windows
+/// the KV pager's free pool could hold. Admission only fills headroom;
+/// creating headroom mid-flight is [`plan_eviction`]'s job.
+pub fn plan_admission(policy: &BatchPolicy, live: usize, admissible: usize) -> usize {
+    policy.concurrency().saturating_sub(live).min(admissible)
+}
+
+/// Pick the preemption victim under KV page pressure: the **longest-
+/// remaining** active sequence, ties broken toward the latest index (the
+/// most recently admitted) — the inverse of [`StepPolicy::ShortestFirst`]'s
+/// step order, so the work closest to completion is never thrown away.
+/// Returns an index into `seqs`, or `None` when every sequence is done.
+pub fn plan_eviction(seqs: &[SeqView]) -> Option<usize> {
+    seqs.iter()
+        .enumerate()
+        .filter(|(_, s)| !s.done())
+        .max_by_key(|&(i, s)| (s.remaining(), i))
+        .map(|(i, _)| i)
 }
 
 /// Total decode rounds a batch needs (the longest target governs — decode
@@ -121,6 +140,51 @@ mod tests {
         assert_eq!(plan_admission(&p(2), 5, 3), 0);
         // zero cap is floored to one sequence
         assert_eq!(plan_admission(&p(0), 0, 3), 1);
+    }
+
+    #[test]
+    fn eviction_picks_longest_remaining() {
+        let seqs = [seq(0, 1, 4), seq(1, 0, 9), seq(2, 2, 5)];
+        assert_eq!(plan_eviction(&seqs), Some(1));
+    }
+
+    #[test]
+    fn eviction_breaks_ties_toward_the_latest_admission() {
+        // equal remaining work → the most recently admitted goes back
+        let seqs = [seq(0, 0, 5), seq(1, 2, 7), seq(2, 1, 6)];
+        assert_eq!(plan_eviction(&seqs), Some(2));
+    }
+
+    #[test]
+    fn eviction_skips_done_sequences() {
+        let seqs = [seq(0, 9, 9), seq(1, 1, 3), seq(2, 5, 5)];
+        assert_eq!(plan_eviction(&seqs), Some(1));
+        assert_eq!(plan_eviction(&[seq(0, 4, 4)]), None);
+        assert_eq!(plan_eviction(&[]), None);
+    }
+
+    #[test]
+    fn prop_eviction_victim_is_never_shorter_than_a_survivor() {
+        forall(0xE71C7, 300, |rng: &mut Rng| {
+            let n = rng.range(0, 12) as usize;
+            let seqs: Vec<SeqView> = (0..n)
+                .map(|i| seq(i, rng.range(0, 8) as usize, rng.range(0, 8) as usize))
+                .collect();
+            match plan_eviction(&seqs) {
+                Some(v) => {
+                    assert!(!seqs[v].done(), "victim must be active");
+                    for s in seqs.iter().filter(|s| !s.done()) {
+                        assert!(
+                            seqs[v].remaining() >= s.remaining(),
+                            "victim {} outlived by seq {}",
+                            seqs[v].seq,
+                            s.seq
+                        );
+                    }
+                }
+                None => assert!(seqs.iter().all(|s| s.done())),
+            }
+        });
     }
 
     #[test]

@@ -1,21 +1,31 @@
 //! The fleet serving engine: a shared admission queue feeding N per-card
-//! continuous-batching workers.
+//! continuous-batching workers over paged KV.
 //!
 //! Life of a request: client → bounded queue → dispatch stage (the
-//! [`Fleet`] router picks a card) → that node's worker joins the request
-//! into its decode round as soon as a KV slot is free (vLLM-style
-//! continuous batching — no stop-the-world batch windows), prefills it,
-//! and interleaves decode steps per [`scheduler::plan_round_into`] until
-//! the sequence hits its target → reply on the request's channel. Failures
-//! are contained per request; a dropped reply receiver is a cancellation.
+//! [`Fleet`] router picks a card, failing over past dead workers) → that
+//! node's worker joins the request into its decode round as soon as the
+//! KV pager can hold its prefill window (vLLM-style continuous batching —
+//! no stop-the-world batch windows), prefills it, and interleaves decode
+//! steps per [`scheduler::plan_round_into`], growing the sequence's KV
+//! pages block-by-block, until the sequence hits its target → reply on
+//! the request's channel. When a round cannot allocate growth pages, the
+//! engine preempts the longest-remaining sequence
+//! ([`scheduler::plan_eviction`]): its KV is dropped and the request is
+//! parked on the waiting queue, to resume later by recomputing prefill
+//! and replaying its generated tokens (greedy decode is deterministic, so
+//! the replay reconstructs the identical state). Failures are contained
+//! per request; a dropped reply receiver is a cancellation.
 //!
-//! Every node owns its own [`ModelRuntime`], [`KvSlots`] sized to its
+//! Every node owns its own [`ModelRuntime`], [`KvPager`] sized to its
 //! card's VRAM, [`Metrics`], and a simulated device-time/energy overlay
 //! calibrated per card (any mix of registry [`DeviceSpec`]s), so a
 //! heterogeneous fleet — a 170HX next to a 90HX — reports fleet-wide
 //! tokens/s and tokens/joule.
 
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TryRecvError, TrySendError};
+use std::collections::VecDeque;
+use std::sync::mpsc::{
+    sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TryRecvError, TrySendError,
+};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -30,11 +40,11 @@ use crate::llm::quant;
 use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 
 use super::batcher::BatchPolicy;
-use super::kv::KvSlots;
+use super::kv::{KvPager, SeqKv};
 use super::metrics::{FleetMetrics, Metrics};
 use super::request::{GenRequest, GenResponse};
 use super::router::{Fleet, Node, RoutePolicy};
-use super::scheduler::{plan_admission, plan_round_into, SeqView, StepPolicy};
+use super::scheduler::{plan_admission, plan_eviction, plan_round_into, SeqView, StepPolicy};
 
 /// One card of the serving fleet: the simulated device identity and the
 /// fmad policy its deployment would run.
@@ -58,7 +68,8 @@ pub struct ServerConfig {
     /// queue_depth` requests, plus one in the dispatcher's hand, before
     /// `submit` sheds load).
     pub queue_depth: usize,
-    /// Per-node admission policy (concurrency cap + cold-start gather).
+    /// Per-node admission policy (concurrency cap, cold-start gather, KV
+    /// page size, preemption).
     pub batch: BatchPolicy,
     pub step_policy: StepPolicy,
     /// fmad policy of the default single-node deployment (and of nodes
@@ -121,6 +132,23 @@ impl Overlay {
     }
 }
 
+/// Reject artifact geometries the admission path cannot serve: a runtime
+/// with `prefill_t > max_ctx` has no decode budget at all (and the old
+/// `max_ctx - prefill_t` subtraction panicked on it at admit time).
+pub(crate) fn validate_window(max_ctx: usize, prefill_t: usize) -> Result<()> {
+    if prefill_t > max_ctx {
+        anyhow::bail!("runtime window invalid: prefill_t {prefill_t} exceeds max_ctx {max_ctx}");
+    }
+    Ok(())
+}
+
+/// Decode-token budget left after the prefill window. Saturating, so even
+/// a geometry that slipped past [`validate_window`] yields a clean
+/// zero-budget rejection at admit time instead of a usize underflow panic.
+pub(crate) fn admission_budget(max_ctx: usize, prefill_t: usize) -> usize {
+    max_ctx.saturating_sub(prefill_t)
+}
+
 /// The serving engine.
 pub struct Server;
 
@@ -153,6 +181,7 @@ impl Server {
                     weight: r.decode_tps,
                     outstanding: 0,
                     assigned: 0,
+                    healthy: true,
                 })
                 .collect(),
             config.route,
@@ -174,7 +203,6 @@ impl Server {
 
             let overlay = Overlay::from_row(row, &node.device);
             let vram_bytes = node.device.mem.capacity_bytes;
-            let slots_per_node = config.batch.concurrency();
             let artifacts = artifacts.clone();
             let ready = ready_tx.clone();
             let fleet = Arc::clone(&fleet);
@@ -191,21 +219,49 @@ impl Server {
                             return;
                         }
                     };
-                    // KV slots sized against this node's own VRAM: weights
-                    // plus per-slot KV of the serving model must fit the
-                    // card (the binding 8 GB ceiling for the 170HX).
-                    let slots = match KvSlots::new(
-                        slots_per_node,
-                        model.kv_bytes_per_pos() * runtime.config.max_ctx as u64,
+                    // The window geometry is validated at startup so admit
+                    // never sees an inverted (prefill_t > max_ctx) config.
+                    if let Err(e) =
+                        validate_window(runtime.config.max_ctx, runtime.config.prefill_t)
+                    {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                    // Paged KV sized against this node's own VRAM: weights
+                    // are pinned, everything else is carved into blocks of
+                    // `kv_block_positions` token positions of the serving
+                    // model (the binding 8 GB ceiling for the 170HX).
+                    let mut pager = match KvPager::new(
+                        policy.block_positions(),
+                        model.kv_bytes_per_pos(),
                         vram_bytes,
                         weights_bytes,
                     ) {
-                        Ok(s) => s,
+                        Ok(p) => p,
                         Err(e) => {
                             let _ = ready.send(Err(e));
                             return;
                         }
                     };
+                    if let Some(cap) = policy.kv_block_budget {
+                        if let Err(e) = pager.limit_blocks(cap) {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    }
+                    // The pool must hold at least one prefill window plus
+                    // one decode position, or admission could never make
+                    // progress and the engine would spin.
+                    if pager.max_positions() < runtime.config.prefill_t + 1 {
+                        let _ = ready.send(Err(anyhow::anyhow!(
+                            "KV budget of {} blocks × {} positions cannot hold one \
+                             prefill window ({} tokens) plus a decode step",
+                            pager.capacity_blocks(),
+                            pager.block_positions(),
+                            runtime.config.prefill_t,
+                        )));
+                        return;
+                    }
                     let _ = ready.send(Ok(()));
                     worker_loop(NodeWorker {
                         node: i,
@@ -214,7 +270,7 @@ impl Server {
                         policy,
                         step_policy,
                         overlay,
-                        slots,
+                        pager,
                         metrics,
                         fleet,
                     });
@@ -235,24 +291,7 @@ impl Server {
             .name("cmphx-dispatch".into())
             .spawn(move || {
                 while let Ok(req) = rx.recv() {
-                    let idx = fleet_d.lock().unwrap().route();
-                    if let Err(SendError(req)) = worker_txs[idx].send(req) {
-                        // Worker gone (it panicked or was torn down): fail
-                        // the request instead of wedging the queue.
-                        fleet_d.lock().unwrap().complete(idx);
-                        let queue_s = req.enqueued.elapsed().as_secs_f64();
-                        metrics_d[idx].lock().unwrap().record_response(queue_s, 0, false);
-                        let _ = req.reply.send(GenResponse {
-                            id: req.id,
-                            tokens: vec![],
-                            error: Some("node worker unavailable".into()),
-                            queue_s,
-                            prefill_s: 0.0,
-                            decode_s: 0.0,
-                            simulated_device_s: 0.0,
-                            node: idx,
-                        });
-                    }
+                    dispatch(req, &fleet_d, &worker_txs, &metrics_d);
                 }
                 // Dropping worker_txs here closes every node queue; the
                 // workers drain what was already routed, then exit.
@@ -269,14 +308,62 @@ impl Server {
     }
 }
 
+/// Route one request to a live worker, failing over past dead ones. A
+/// failed send marks the node unhealthy — it stays excluded from routing
+/// for the server's lifetime (the old behaviour left it in the fleet, so
+/// the router kept feeding a dead card while healthy ones idled) — and the
+/// request is rerouted to the next healthy node. Only when no healthy node
+/// remains is the request failed.
+fn dispatch(
+    req: GenRequest,
+    fleet: &Mutex<Fleet>,
+    worker_txs: &[SyncSender<GenRequest>],
+    metrics: &[Arc<Mutex<Metrics>>],
+) {
+    let mut req = req;
+    loop {
+        let idx = fleet.lock().unwrap().route();
+        let Err(SendError(failed)) = worker_txs[idx].send(req) else {
+            return;
+        };
+        let any_healthy = {
+            let mut f = fleet.lock().unwrap();
+            // the failed send never reached a worker: uncount it, then
+            // exclude the dead node
+            f.complete(idx);
+            f.mark_unhealthy(idx);
+            f.healthy_count() > 0
+        };
+        if any_healthy {
+            req = failed;
+            continue;
+        }
+        // Every worker is gone: fail the request instead of wedging.
+        let queue_s = failed.enqueued.elapsed().as_secs_f64();
+        metrics[idx].lock().unwrap().record_response(queue_s, 0, false);
+        let _ = failed.reply.send(empty_response(
+            failed.id,
+            idx,
+            queue_s,
+            Some("node worker unavailable".into()),
+        ));
+        return;
+    }
+}
+
 impl ServerHandle {
     /// Submit a generation request; returns the response receiver. Errors
-    /// when the queue is full (backpressure) or the server is stopped.
+    /// when `max_tokens` is zero (nothing to generate — the old path
+    /// silently produced one token and counted it in throughput), when the
+    /// queue is full (backpressure), or when the server is stopped.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_tokens: usize,
     ) -> Result<Receiver<GenResponse>> {
+        if max_tokens == 0 {
+            anyhow::bail!("max_tokens must be at least 1 (zero-token requests are rejected)");
+        }
         let (reply, rx) = std::sync::mpsc::channel();
         let id = self
             .next_id
@@ -350,7 +437,7 @@ struct NodeWorker {
     policy: BatchPolicy,
     step_policy: StepPolicy,
     overlay: Overlay,
-    slots: KvSlots,
+    pager: KvPager,
     metrics: Arc<Mutex<Metrics>>,
     fleet: Arc<Mutex<Fleet>>,
 }
@@ -359,12 +446,16 @@ struct NodeWorker {
 struct Live {
     req: GenRequest,
     state: DecodeState,
-    slot: usize,
+    kv: SeqKv,
     tokens: Vec<i32>,
     queue_s: f64,
     prefill_s: f64,
+    /// Wall decode seconds accumulated before the last (re)join — preempted
+    /// stretches are summed here, the current stretch in `decode_started`.
+    decode_s: f64,
     sim_s: f64,
     sim_j: f64,
+    preemptions: u64,
     failed: Option<String>,
     decode_started: Instant,
 }
@@ -374,7 +465,7 @@ impl Live {
         if self.failed.is_some() {
             self.tokens.len()
         } else {
-            self.req.max_tokens.max(1)
+            self.req.max_tokens
         }
     }
 
@@ -383,19 +474,86 @@ impl Live {
     }
 }
 
+/// A preempted sequence parked off-device: its KV pages are gone;
+/// everything needed to recompute the state on resume rides along.
+struct Preempted {
+    req: GenRequest,
+    tokens: Vec<i32>,
+    queue_s: f64,
+    prefill_s: f64,
+    decode_s: f64,
+    sim_s: f64,
+    sim_j: f64,
+    preemptions: u64,
+    /// When the sequence was evicted — parked time is queueing time, and
+    /// the client-observed latency must include it.
+    parked_at: Instant,
+}
+
+impl Preempted {
+    /// Accumulated queue seconds including the current parked stretch.
+    fn queue_s_now(&self) -> f64 {
+        self.queue_s + self.parked_at.elapsed().as_secs_f64()
+    }
+}
+
+/// What happened when a parked sequence tried to re-enter decode.
+enum Resumed {
+    Joined,
+    /// Not enough free pages right now — parked again, retry next round.
+    NoPages(Preempted),
+    /// Terminal failure (recompute failed, or the pool can never hold it);
+    /// the request was answered.
+    Failed,
+}
+
 fn worker_loop(mut w: NodeWorker) {
     let mut live: Vec<Live> = Vec::new();
+    let mut waiting: VecDeque<Preempted> = VecDeque::new();
     // Round-planning buffers reused across the engine's lifetime: planning
     // a round allocates nothing after the first.
     let mut views: Vec<SeqView> = Vec::new();
     let mut plan: Vec<usize> = Vec::new();
+    let mut stalled: Vec<usize> = Vec::new();
     let mut open = true;
 
-    while open || !live.is_empty() {
-        // --- admission (slot-join): fill free slots, never stall decode ---
-        let mut want = plan_admission(&w.policy, live.len(), w.slots.free_slots());
+    while open || !live.is_empty() || !waiting.is_empty() {
+        let prefill_t = w.runtime.config.prefill_t;
+        // --- admission (page-join): fill headroom, never stall decode.
+        //     Preempted sequences resume before new arrivals join. ---
+        let mut want = plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t));
+        while want > 0 {
+            let Some(parked) = waiting.pop_front() else { break };
+            match resume(&mut w, parked, &mut live) {
+                Resumed::Joined => want -= 1,
+                Resumed::NoPages(parked) => {
+                    if live.is_empty() {
+                        // Nothing holds pages yet the resume cannot fit:
+                        // the pool can never hold this sequence. Fail it
+                        // terminally rather than spinning forever.
+                        let queue_s = parked.queue_s_now();
+                        reject(
+                            &mut w,
+                            &parked.req,
+                            "KV pool cannot hold the resumed sequence".into(),
+                            queue_s,
+                        );
+                    } else {
+                        waiting.push_front(parked);
+                        break;
+                    }
+                }
+                Resumed::Failed => {}
+            }
+        }
+        // A resume re-admits its full replay length — usually more pages
+        // than the one prefill window `want` was budgeted on — so refresh
+        // the headroom before admitting new arrivals. Without this, the
+        // arrival loop pops a queued request into a terminal page-overload
+        // reject that plan_admission exists to prevent.
+        want = want.min(plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t)));
         if open && want > 0 {
-            if live.is_empty() {
+            if live.is_empty() && waiting.is_empty() {
                 // Idle engine: block for the first arrival, then gather up
                 // to `max_wait` of company for the cold-start round.
                 match w.rx.recv() {
@@ -447,14 +605,79 @@ fn worker_loop(mut w: NodeWorker) {
             continue;
         }
 
-        // --- one decode round across the in-flight set ---
-        views.clear();
-        views.extend(live.iter().enumerate().map(|(i, l)| SeqView {
-            seq: i,
-            generated: l.tokens.len(),
-            target: l.target(),
-        }));
-        plan_round_into(w.step_policy, &views, &mut plan);
+        // Sequences already done (a max_tokens == 1 request is complete
+        // straight out of prefill) retire *before* pressure resolution —
+        // their pages must not inflate the shortfall and preempt or fail
+        // a peer that would fit once they free.
+        retire_done(&mut w, &mut live);
+        if live.is_empty() {
+            continue;
+        }
+
+        // --- plan one decode round, resolving KV page pressure: every
+        //     planned sequence must own the page its next token writes
+        //     before any device work happens ---
+        loop {
+            views.clear();
+            views.extend(live.iter().enumerate().map(|(i, l)| SeqView {
+                seq: i,
+                generated: l.tokens.len(),
+                target: l.target(),
+            }));
+            plan_round_into(w.step_policy, &views, &mut plan);
+            if plan.is_empty() {
+                break;
+            }
+            stalled.clear();
+            for &idx in &plan {
+                let l = &live[idx];
+                let grown = w
+                    .pager
+                    .grow(l.kv, l.state.pos + 1)
+                    .expect("live sequences hold valid KV handles");
+                if !grown {
+                    stalled.push(idx);
+                }
+            }
+            if stalled.is_empty() {
+                break;
+            }
+            // Page pressure. The victim is the longest-remaining sequence
+            // — evicting the work furthest from completion frees the most
+            // future page demand and never throws away a nearly-done
+            // sequence.
+            let victim = plan_eviction(&views).expect("non-empty plan has an active seq");
+            if w.policy.preempt && live.len() > 1 {
+                let evicted = live.swap_remove(victim);
+                preempt(&mut w, evicted, &mut waiting);
+                continue; // replan against the freed pages
+            }
+            if stalled.len() == plan.len() {
+                // Nothing can advance and no retirement will ever free a
+                // page (preemption disabled, or this is the last
+                // sequence): fail the victim to restore liveness.
+                let mut evicted = live.swap_remove(victim);
+                evicted.failed = Some(format!(
+                    "KV pages exhausted ({} of {} blocks free) and preemption {}",
+                    w.pager.free_blocks(),
+                    w.pager.capacity_blocks(),
+                    if w.policy.preempt {
+                        "cannot help (no other sequence to evict)"
+                    } else {
+                        "is disabled"
+                    },
+                ));
+                retire(&mut w, evicted);
+                continue;
+            }
+            // Partial pressure without preemption: the stalled sequences
+            // sit this round out (they retry when a peer retires and frees
+            // pages); everyone else steps.
+            plan.retain(|idx| !stalled.contains(idx));
+            break;
+        }
+
+        // --- one decode round across the planned set ---
         if !plan.is_empty() {
             w.metrics.lock().unwrap().record_batch(plan.len());
             for &idx in &plan {
@@ -471,26 +694,42 @@ fn worker_loop(mut w: NodeWorker) {
             }
         }
 
-        // --- retire finished sequences; their slots free for the next
-        //     round's admissions ---
-        let mut i = 0;
-        while i < live.len() {
-            if !live[i].done() {
-                i += 1;
-                continue;
-            }
-            let l = live.swap_remove(i);
-            retire(&mut w, l);
-        }
+        // --- retire finished sequences; their pages free for the next
+        //     round's admissions and resumes ---
+        retire_done(&mut w, &mut live);
     }
 }
 
-/// Admit one routed request: window checks, KV slot, prefill. Returns true
-/// when the request joined the in-flight set.
+/// Retire every done sequence in the live set; their pages free
+/// immediately for admissions, resumes, and peers' growth.
+fn retire_done(w: &mut NodeWorker, live: &mut Vec<Live>) {
+    let mut i = 0;
+    while i < live.len() {
+        if !live[i].done() {
+            i += 1;
+            continue;
+        }
+        let l = live.swap_remove(i);
+        retire(w, l);
+    }
+}
+
+/// Admit one routed request: window checks, KV pages for the prefill
+/// window, prefill. Returns true when the request joined the in-flight
+/// set.
 fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
     let cfg = w.runtime.config;
     let queue_s = req.enqueued.elapsed().as_secs_f64();
-    let budget = cfg.max_ctx - cfg.prefill_t;
+    if req.max_tokens == 0 {
+        // submit() rejects these at the API; a zero-token request built by
+        // any other path is answered as an empty success without touching
+        // decode (and without polluting throughput metrics with a token).
+        w.metrics.lock().unwrap().record_response(queue_s, 0, true);
+        w.fleet.lock().unwrap().complete(w.node);
+        let _ = req.reply.send(empty_response(req.id, w.node, queue_s, None));
+        return false;
+    }
+    let budget = admission_budget(cfg.max_ctx, cfg.prefill_t);
     if req.prompt.len() > cfg.prefill_t || req.max_tokens > budget {
         let msg = format!(
             "request exceeds window (prompt {} > {} or tokens {} > {})",
@@ -502,8 +741,20 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         reject(w, &req, msg, queue_s);
         return false;
     }
-    let Some(slot) = w.slots.acquire() else {
-        reject(w, &req, "no KV slot (overload)".into(), queue_s);
+    // The sequence must fit this card's page pool even running alone, or
+    // admission would loop forever growing toward pages that don't exist.
+    let final_positions = cfg.prefill_t + req.max_tokens - 1;
+    if w.pager.blocks_for(final_positions) > w.pager.capacity_blocks() {
+        let msg = format!(
+            "request needs {} KV blocks at full length but the card has {}",
+            w.pager.blocks_for(final_positions),
+            w.pager.capacity_blocks()
+        );
+        reject(w, &req, msg, queue_s);
+        return false;
+    }
+    let Some(kv) = w.pager.admit(cfg.prefill_t) else {
+        reject(w, &req, "no KV pages (overload)".into(), queue_s);
         return false;
     };
     let t0 = Instant::now();
@@ -516,32 +767,114 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
             live.push(Live {
                 req,
                 state,
-                slot,
+                kv,
                 tokens: vec![first],
                 queue_s,
                 prefill_s,
+                decode_s: 0.0,
                 sim_s,
                 sim_j,
+                preemptions: 0,
                 failed: None,
                 decode_started: Instant::now(),
             });
             true
         }
         Err(e) => {
-            w.slots
-                .release(slot)
-                .expect("releasing the just-acquired slot");
+            w.pager.release(kv).expect("releasing the just-admitted pages");
             reject(w, &req, format!("prefill failed: {e}"), queue_s);
             false
         }
     }
 }
 
-/// Retire one finished (or failed) sequence: release its slot, account
+/// Evict one in-flight sequence under page pressure: drop its KV, park the
+/// request on the waiting queue. Resume recomputes prefill and replays the
+/// tokens generated so far — greedy decode is deterministic, so the replay
+/// reconstructs the identical state (vLLM's recompute-on-resume).
+fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
+    w.pager.release(l.kv).expect("page accounting");
+    w.metrics.lock().unwrap().preemptions += 1;
+    waiting.push_back(Preempted {
+        decode_s: l.decode_s + l.decode_started.elapsed().as_secs_f64(),
+        req: l.req,
+        tokens: l.tokens,
+        queue_s: l.queue_s,
+        prefill_s: l.prefill_s,
+        sim_s: l.sim_s,
+        sim_j: l.sim_j,
+        preemptions: l.preemptions + 1,
+        parked_at: Instant::now(),
+    });
+}
+
+/// Re-enter a preempted sequence: re-admit its pages (the full replay
+/// length up front, so the resume cannot itself be preempted mid-replay),
+/// recompute prefill, replay the generated tokens, rejoin the live set.
+fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
+    let cfg = w.runtime.config;
+    let Some(kv) = w.pager.admit(cfg.prefill_t) else {
+        return Resumed::NoPages(p);
+    };
+    let resume_positions = cfg.prefill_t + p.tokens.len().saturating_sub(1);
+    if !w.pager.grow(kv, resume_positions).expect("just-admitted KV handle") {
+        w.pager.release(kv).expect("releasing the just-admitted pages");
+        return Resumed::NoPages(p);
+    }
+    // The parked stretch ends here: from now on the request is either
+    // recomputing (prefill/decode wall time) or terminally answered.
+    let queue_s = p.queue_s_now();
+    let t0 = Instant::now();
+    let mut state = match w.runtime.prefill_padded(&p.req.prompt) {
+        Ok(s) => s,
+        Err(e) => {
+            w.pager.release(kv).expect("page accounting");
+            reject(w, &p.req, format!("resume prefill failed: {e}"), queue_s);
+            return Resumed::Failed;
+        }
+    };
+    for &tok in p.tokens.iter().take(p.tokens.len() - 1) {
+        if let Err(e) = w.runtime.decode(&mut state, tok) {
+            w.pager.release(kv).expect("page accounting");
+            reject(w, &p.req, format!("resume replay failed: {e}"), queue_s);
+            return Resumed::Failed;
+        }
+    }
+    let recompute_wall_s = t0.elapsed().as_secs_f64();
+    // Simulated cost of the recompute — all of it wasted work, bought by
+    // the headroom the earlier eviction created.
+    let replay_steps = (p.tokens.len() - 1) as f64;
+    let wasted_s = w.overlay.prefill_s_per_token * cfg.prefill_t as f64
+        + w.overlay.decode_s_per_token * replay_steps;
+    let wasted_j = w.overlay.prefill_s_per_token * cfg.prefill_t as f64 * w.overlay.prefill_w
+        + w.overlay.decode_s_per_token * replay_steps * w.overlay.decode_w;
+    {
+        let mut m = w.metrics.lock().unwrap();
+        m.resumes += 1;
+        m.wasted_prefill_s += wasted_s;
+    }
+    live.push(Live {
+        req: p.req,
+        state,
+        kv,
+        tokens: p.tokens,
+        queue_s,
+        prefill_s: p.prefill_s + recompute_wall_s,
+        decode_s: p.decode_s,
+        sim_s: p.sim_s + wasted_s,
+        sim_j: p.sim_j + wasted_j,
+        preemptions: p.preemptions,
+        failed: None,
+        decode_started: Instant::now(),
+    });
+    Resumed::Joined
+}
+
+/// Retire one finished (or failed) sequence: release its pages, account
 /// metrics, tell the router, reply.
 fn retire(w: &mut NodeWorker, l: Live) {
-    w.slots.release(l.slot).expect("slot accounting");
-    let decode_s = l.decode_started.elapsed().as_secs_f64();
+    w.pager.release(l.kv).expect("page accounting");
+    let decode_s = l.decode_s + l.decode_started.elapsed().as_secs_f64();
     let ok = l.failed.is_none();
     let resp = GenResponse {
         id: l.req.id,
@@ -551,6 +884,7 @@ fn retire(w: &mut NodeWorker, l: Live) {
         prefill_s: l.prefill_s,
         decode_s,
         simulated_device_s: l.sim_s,
+        preemptions: l.preemptions,
         node: w.node,
     };
     {
@@ -566,18 +900,141 @@ fn retire(w: &mut NodeWorker, l: Live) {
     let _ = l.req.reply.send(resp);
 }
 
-/// Reply with a terminal error before the request ever held a slot.
+/// Reply with a terminal error for a request that holds no pages.
 fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64) {
     w.metrics.lock().unwrap().record_response(queue_s, 0, false);
     w.fleet.lock().unwrap().complete(w.node);
-    let _ = req.reply.send(GenResponse {
-        id: req.id,
+    let _ = req.reply.send(empty_response(req.id, w.node, queue_s, Some(error)));
+}
+
+/// A terminal no-tokens reply (a rejection, or a zero-token empty
+/// success) — the one place the "nothing was generated" response shape
+/// lives.
+fn empty_response(id: u64, node: usize, queue_s: f64, error: Option<String>) -> GenResponse {
+    GenResponse {
+        id,
         tokens: vec![],
-        error: Some(error),
+        error,
         queue_s,
         prefill_s: 0.0,
         decode_s: 0.0,
         simulated_device_s: 0.0,
-        node: w.node,
-    });
+        preemptions: 0,
+        node,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stub_handle(tx: SyncSender<GenRequest>) -> ServerHandle {
+        ServerHandle {
+            tx: Some(tx),
+            dispatcher: None,
+            workers: Vec::new(),
+            node_names: vec!["stub"],
+            node_metrics: vec![Arc::new(Mutex::new(Metrics::new()))],
+            next_id: std::sync::atomic::AtomicU64::new(1),
+        }
+    }
+
+    fn dummy_request(id: u64) -> (GenRequest, Receiver<GenResponse>) {
+        let (reply, rx) = std::sync::mpsc::channel();
+        let req = GenRequest {
+            id,
+            prompt: vec![1, 2, 3],
+            max_tokens: 2,
+            reply,
+            enqueued: Instant::now(),
+        };
+        (req, rx)
+    }
+
+    #[test]
+    fn zero_token_requests_are_rejected_at_submit() {
+        // Regression: `max_tokens == 0` used to be floored to one token in
+        // the decode loop, silently generating output and counting it in
+        // throughput metrics.
+        let (tx, rx) = sync_channel::<GenRequest>(4);
+        let handle = stub_handle(tx);
+        let err = handle.submit(vec![1, 2], 0).unwrap_err().to_string();
+        assert!(err.contains("max_tokens"), "{err}");
+        assert!(rx.try_recv().is_err(), "nothing may reach the queue");
+        // a normal request still flows
+        let _reply = handle.submit(vec![1, 2], 3).unwrap();
+        assert_eq!(rx.try_recv().unwrap().max_tokens, 3);
+    }
+
+    #[test]
+    fn window_validation_rejects_inverted_geometry() {
+        assert!(validate_window(64, 16).is_ok());
+        assert!(validate_window(64, 64).is_ok());
+        let err = validate_window(16, 64).unwrap_err().to_string();
+        assert!(err.contains("prefill_t"), "{err}");
+    }
+
+    #[test]
+    fn admission_budget_saturates_instead_of_panicking() {
+        assert_eq!(admission_budget(64, 16), 48);
+        // Regression: the old `max_ctx - prefill_t` underflowed (panicked)
+        // on a runtime configured with prefill_t > max_ctx.
+        assert_eq!(admission_budget(16, 64), 0);
+        assert_eq!(admission_budget(64, 64), 0);
+    }
+
+    #[test]
+    fn dispatch_reroutes_off_dead_workers_and_excludes_them() {
+        // Node 0's worker is torn down (its queue receiver dropped);
+        // node 1 is alive.
+        let fleet = Mutex::new(Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin));
+        let (tx0, rx0) = sync_channel::<GenRequest>(8);
+        let (tx1, rx1) = sync_channel::<GenRequest>(8);
+        drop(rx0);
+        let txs = vec![tx0, tx1];
+        let metrics = vec![
+            Arc::new(Mutex::new(Metrics::new())),
+            Arc::new(Mutex::new(Metrics::new())),
+        ];
+        // Round-robin picks node 0 first; the failed send must mark it
+        // unhealthy and reroute the same request to node 1 (regression:
+        // the request was failed and the dead node kept taking traffic).
+        let (req, reply) = dummy_request(1);
+        dispatch(req, &fleet, &txs, &metrics);
+        assert_eq!(rx1.try_recv().unwrap().id, 1, "request must be rerouted");
+        assert!(reply.try_recv().is_err(), "request must not be failed");
+        {
+            let f = fleet.lock().unwrap();
+            assert_eq!(f.healthy_count(), 1);
+            assert_eq!(f.nodes[0].outstanding, 0, "failed send must be uncounted");
+            assert_eq!(f.nodes[1].outstanding, 1);
+        }
+        // The dead node stays excluded: every later request lands on the
+        // healthy card while it idles — no more routing to the dead one.
+        let mut replies = Vec::new();
+        for id in 2..6 {
+            let (req, reply) = dummy_request(id);
+            dispatch(req, &fleet, &txs, &metrics);
+            replies.push(reply);
+        }
+        let got: Vec<u64> = rx1.try_iter().map(|r| r.id).collect();
+        assert_eq!(got, vec![2, 3, 4, 5]);
+        assert_eq!(fleet.lock().unwrap().nodes[0].assigned, 1);
+        assert!(replies.iter().all(|r| r.try_recv().is_err()));
+    }
+
+    #[test]
+    fn dispatch_fails_the_request_only_when_no_healthy_node_remains() {
+        let fleet = Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin));
+        let (tx0, rx0) = sync_channel::<GenRequest>(1);
+        drop(rx0);
+        let metrics = vec![Arc::new(Mutex::new(Metrics::new()))];
+        let (req, reply) = dummy_request(9);
+        dispatch(req, &fleet, &[tx0], &metrics);
+        let resp = reply.try_recv().unwrap();
+        assert!(!resp.ok());
+        assert!(resp.error.as_deref().unwrap().contains("unavailable"));
+        assert_eq!(fleet.lock().unwrap().healthy_count(), 0);
+        assert_eq!(metrics[0].lock().unwrap().errors, 1);
+    }
 }

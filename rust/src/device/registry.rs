@@ -126,7 +126,8 @@ pub fn cmp50hx() -> DeviceSpec {
 /// silicon runs packed-half at the FP32 rate (not Turing's 2×), so the
 /// half2 issue rate is halved relative to the family template.
 pub fn cmp90hx() -> DeviceSpec {
-    let mut d = cmp_family("CMP 90HX", 50, 6400, 1.71, MemorySystem::gddr6(10, 760.0), 250.0, 1550.0, "2021 Q2");
+    let mem = MemorySystem::gddr6(10, 760.0);
+    let mut d = cmp_family("CMP 90HX", 50, 6400, 1.71, mem, 250.0, 1550.0, "2021 Q2");
     d.rates.half2 /= 2.0;
     d
 }

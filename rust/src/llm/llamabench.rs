@@ -195,7 +195,12 @@ impl LlamaBench {
     /// default streams never do. The result: noFMA decodes faster but
     /// *less efficiently* (the paper's §4.4 observation), while the
     /// default card never fills its envelope.
-    fn decode_from(&self, decode: &LoweredKernel, t: &KernelTiming, dev: &DeviceSpec) -> (f64, f64) {
+    fn decode_from(
+        &self,
+        decode: &LoweredKernel,
+        t: &KernelTiming,
+        dev: &DeviceSpec,
+    ) -> (f64, f64) {
         let overhead = launch_overhead(&self.model) + readback_overhead(&self.model, &dev.pcie);
         let token_time = t.time_s + overhead;
         let tps = 1.0 / token_time;

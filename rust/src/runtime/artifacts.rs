@@ -54,7 +54,11 @@ impl ArtifactDir {
     }
 
     /// Load + compile one HLO entry on a PJRT client.
-    pub fn compile(&self, client: &xla::PjRtClient, name: &str) -> Result<xla::PjRtLoadedExecutable> {
+    pub fn compile(
+        &self,
+        client: &xla::PjRtClient,
+        name: &str,
+    ) -> Result<xla::PjRtLoadedExecutable> {
         let path = self.path(name);
         let proto = xla::HloModuleProto::from_text_file(&path)
             .with_context(|| format!("parsing HLO text {}", path.display()))?;

@@ -226,6 +226,17 @@ pub fn load(path: impl AsRef<std::path::Path>) -> Result<Json> {
     parse(&text)
 }
 
+/// Read one usize field from an artifact directory's goldens `config`
+/// block (e.g. `prefill_t`) — shared by the tests and benches that size
+/// KV-page budgets to the artifact geometry.
+pub fn config_usize(dir: &super::ArtifactDir, key: &str) -> Result<usize> {
+    let goldens = load(dir.path("goldens.json"))?;
+    match goldens.get("config").and_then(|c| c.get(key)).and_then(Json::as_usize) {
+        Some(v) => Ok(v),
+        None => bail!("goldens config missing {key}"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -289,7 +289,10 @@ mod tests {
         );
         let jobs = [
             SweepJob { kernel: &lk, cfg: SimConfig::default() },
-            SweepJob { kernel: &lk, cfg: SimConfig { issue_efficiency: 0.5, ..Default::default() } },
+            SweepJob {
+                kernel: &lk,
+                cfg: SimConfig { issue_efficiency: 0.5, ..Default::default() },
+            },
         ];
         let out = run_jobs_on(&jobs, &registry::cmp170hx());
         assert_eq!(out.len(), 2);

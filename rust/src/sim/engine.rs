@@ -336,9 +336,10 @@ mod tests {
                     l2_hit_rate: rng.f64_range(0.0, 0.9),
                 });
             let lk = LoweredKernel::lower(&k);
-            let t_max = simulate_lowered(&lk, &dev, &SimConfig { overlap: 1.0, ..Default::default() });
-            let t_mid = simulate_lowered(&lk, &dev, &SimConfig { overlap: 0.5, ..Default::default() });
-            let t_sum = simulate_lowered(&lk, &dev, &SimConfig { overlap: 0.0, ..Default::default() });
+            let cfg = |overlap| SimConfig { overlap, ..Default::default() };
+            let t_max = simulate_lowered(&lk, &dev, &cfg(1.0));
+            let t_mid = simulate_lowered(&lk, &dev, &cfg(0.5));
+            let t_sum = simulate_lowered(&lk, &dev, &cfg(0.0));
             assert!(t_max.time_s <= t_mid.time_s + 1e-12);
             assert!(t_mid.time_s <= t_sum.time_s + 1e-12);
         });

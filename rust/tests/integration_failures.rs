@@ -58,6 +58,7 @@ fn concurrent_submitters_all_get_served() {
         batch: BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(5),
+            ..BatchPolicy::default()
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,
@@ -93,6 +94,7 @@ fn tiny_queue_applies_backpressure() {
             // long gather window so the engine stays occupied while we
             // flood the admission queue
             max_wait: Duration::from_millis(300),
+            ..BatchPolicy::default()
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,

@@ -22,11 +22,18 @@ fn config(max_batch: usize) -> ServerConfig {
         batch: BatchPolicy {
             max_batch,
             max_wait: Duration::from_millis(20),
+            ..BatchPolicy::default()
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,
         ..Default::default()
     }
+}
+
+/// The artifact runtime's prefill window, read from goldens.json — the
+/// page-pressure tests pin their block budgets to it exactly.
+fn artifact_prefill_t(dir: &cmphx::runtime::ArtifactDir) -> usize {
+    cmphx::runtime::goldens::config_usize(dir, "prefill_t").unwrap()
 }
 
 fn start(cfg: ServerConfig) -> Option<ServerHandle> {
@@ -156,6 +163,107 @@ fn late_arrivals_join_the_decode_round_in_flight() {
     assert_eq!(m.errors, 0);
 }
 
+#[test]
+fn preemption_prevents_starvation_under_page_pressure() {
+    // The acceptance scenario: a long generation and a stream of short
+    // requests share a page pool too small for both at the long one's
+    // peak. The engine must preempt the long sequence (KV dropped,
+    // recomputed on resume) so the shorts complete instead of starving —
+    // and the replayed long sequence must produce the identical tokens a
+    // pressure-free run produces.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    const LONG: usize = 24;
+    const SHORT: usize = 6;
+    // Enough pages for the long sequence alone at full length, and for a
+    // short to join while the long is young — but not for both at peak.
+    // (Tuned for the shipped artifacts' prefill_t = 16; the max() keeps a
+    // short admissible for other geometries.)
+    let budget = (prefill_t + LONG - 1).max(2 * prefill_t + 4);
+    let long_prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+
+    // Reference: the same long request served without page pressure.
+    let Some(reference) = start(config(2)) else { return };
+    let rx = reference.submit(long_prompt.clone(), LONG).unwrap();
+    let expected_long = rx.recv_timeout(Duration::from_secs(240)).unwrap().tokens;
+    drop(reference);
+
+    let mut cfg = config(2);
+    cfg.step_policy = StepPolicy::ShortestFirst;
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some(budget);
+    let Some(server) = start(cfg) else { return };
+    let rx_long = server.submit(long_prompt, LONG).unwrap();
+    let rx_shorts: Vec<_> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, SHORT).unwrap()
+        })
+        .collect();
+    for rx in rx_shorts {
+        let resp = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(resp.ok(), "short request starved: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), SHORT);
+    }
+    let long = rx_long.recv_timeout(Duration::from_secs(240)).unwrap();
+    assert!(long.ok(), "{:?}", long.error);
+    assert_eq!(
+        long.tokens, expected_long,
+        "resume must replay to the identical state"
+    );
+    assert!(long.preemptions >= 1, "the long sequence was never evicted");
+    let m = server.shutdown();
+    assert_eq!(m.errors, 0);
+    assert!(m.preemptions >= 1, "page pressure must have preempted");
+    assert!(m.resumes >= 1, "preempted work must have resumed");
+    assert!(m.wasted_prefill_s > 0.0, "recompute must be accounted as waste");
+}
+
+#[test]
+fn disabled_preemption_fails_overcommitted_sequences_cleanly() {
+    // The same pressure with preemption off: there is no relief valve, so
+    // once every live sequence stalls on page growth the engine keeps
+    // liveness by failing the longest-remaining sequence terminally — the
+    // shorts still complete, nothing wedges, and nothing is preempted.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    const LONG: usize = 24;
+    const SHORT: usize = 6;
+    // Big enough that two shorts coexist without pressure (so only the
+    // long can be the casualty), small enough that the long plus a short
+    // cannot both reach their peaks.
+    let budget = (prefill_t + LONG - 1).max(2 * (prefill_t + SHORT));
+    let mut cfg = config(2);
+    cfg.step_policy = StepPolicy::ShortestFirst;
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some(budget);
+    cfg.batch.preempt = false;
+    let Some(server) = start(cfg) else { return };
+    let rx_long = server.submit(vec![3, 1, 4, 1, 5, 9, 2, 6], LONG).unwrap();
+    let rx_shorts: Vec<_> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, SHORT).unwrap()
+        })
+        .collect();
+    for rx in rx_shorts {
+        let resp = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(resp.ok(), "short request starved: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), SHORT);
+    }
+    let long = rx_long.recv_timeout(Duration::from_secs(240)).unwrap();
+    assert!(!long.ok(), "the long sequence cannot fit without preemption");
+    assert!(
+        long.error.as_deref().unwrap().contains("KV pages exhausted"),
+        "{:?}",
+        long.error
+    );
+    let m = server.shutdown();
+    assert_eq!(m.preemptions, 0);
+    assert_eq!(m.resumes, 0);
+    assert_eq!(m.errors, 1);
+}
+
 /// Run one fixed workload through a configured fleet; returns the fleet
 /// metrics and every request's tokens, in submission order.
 fn run_fleet_workload(nodes: Vec<NodeConfig>) -> Option<(FleetMetrics, Vec<Vec<i32>>)> {
@@ -164,6 +272,7 @@ fn run_fleet_workload(nodes: Vec<NodeConfig>) -> Option<(FleetMetrics, Vec<Vec<i
         batch: BatchPolicy {
             max_batch: 4,
             max_wait: Duration::from_millis(20),
+            ..BatchPolicy::default()
         },
         step_policy: StepPolicy::RoundRobin,
         fmad: FmadPolicy::Decomposed,

@@ -4,8 +4,8 @@
 # Usage: scripts/check.sh [--no-clippy]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
-# -q`) and adds clippy with warnings denied. Run from anywhere; the script
-# cd's to the repo root.
+# -q`) and adds rustfmt drift detection plus clippy with warnings denied.
+# Run from anywhere; the script cd's to the repo root.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -13,6 +13,16 @@ cd "$(dirname "$0")/.."
 if ! command -v cargo >/dev/null 2>&1; then
     echo "error: cargo not found on PATH — install a Rust toolchain to run the tier-1 gate" >&2
     exit 1
+fi
+
+# Formatting first: cheapest check, and drift must fail loudly (CI installs
+# the rustfmt component, so the warning branch only fires on bare local
+# toolchains).
+if cargo fmt --version >/dev/null 2>&1; then
+    echo "==> cargo fmt --all -- --check"
+    cargo fmt --all -- --check
+else
+    echo "warning: rustfmt not installed; skipping format gate" >&2
 fi
 
 echo "==> cargo build --release --all-targets"
