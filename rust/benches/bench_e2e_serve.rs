@@ -3,20 +3,28 @@
 //! Compiles the AOT artifacts, then measures served throughput and latency
 //! percentiles at several concurrency caps — the batching-policy ablation
 //! DESIGN.md calls out — plus the simulated device time for the same token
-//! schedule. A final section runs a heterogeneous 170HX + 90HX fleet under
+//! schedule. A fleet section runs a heterogeneous 170HX + 90HX fleet under
 //! continuous batching and answers the §6.2 question: how many recycled
-//! cards replace one A100, at what energy cost. Requires `make artifacts`.
+//! cards replace one A100, at what energy cost. A final **fairness
+//! ablation** floods a 2-card fleet with one tenant at ~10× another's
+//! demand and measures the light tenant's p99 and Jain's index with the
+//! QoS layer (WFQ + work stealing) on vs off, recording the result as the
+//! `serve_fairness` row of `BENCH_sim_throughput.json`. Requires
+//! `make artifacts`.
 
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cmphx::coordinator::batcher::BatchPolicy;
 use cmphx::coordinator::scheduler::StepPolicy;
-use cmphx::coordinator::{NodeConfig, RoutePolicy, Server, ServerConfig};
+use cmphx::coordinator::{jain_index, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle};
 use cmphx::device::registry;
 use cmphx::isa::pass::FmadPolicy;
 use cmphx::llm::llamabench::LlamaBench;
 use cmphx::llm::quant;
 use cmphx::market::tco;
+use cmphx::qos::TenantSpec;
 use cmphx::runtime::ArtifactDir;
 
 const REQUESTS: usize = 12;
@@ -165,6 +173,211 @@ fn run_pressure(preempt: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The fairness flood workload: a light tenant keeping 2 long requests in
+/// flight and a heavy tenant keeping ~10× the light tenant's token demand
+/// outstanding as short requests, on a 2-card 170HX fleet with
+/// single-sequence nodes (so wall latency compares cleanly across runs).
+/// Closed-loop, so both tenants stay backlogged for the whole measured
+/// window and the per-tenant token split *is* the service split. Returns
+/// (light p99 seconds, Jain's index over per-tenant tokens served while
+/// the light tenant was active).
+fn run_fairness_once(qos: bool) -> anyhow::Result<(f64, f64)> {
+    const LIGHT_N: usize = 8;
+    const LIGHT_OUT: usize = 2;
+    const LIGHT_TOK: usize = 20;
+    // ~10× the light tenant's outstanding token demand (2×20), as shorts
+    const HEAVY_OUT: usize = 48;
+    const TOK: usize = 8; // heavy request length
+    let mut cfg = config(1, StepPolicy::RoundRobin);
+    cfg.route = RoutePolicy::WeightedThroughput;
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    cfg.qos.enabled = qos;
+    cfg.qos.steal = qos;
+    cfg.qos.node_queue_depth = 1;
+    cfg.qos.tenants =
+        vec![TenantSpec::new("light", 1.0), TenantSpec::new("heavy", 1.0)];
+    let server = Arc::new(Server::start(artifacts()?, cfg)?);
+    let light = server.tenant_id("light").unwrap();
+    let heavy = server.tenant_id("heavy").unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let heavy_tokens = Arc::new(AtomicU64::new(0));
+    let flood = {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let heavy_tokens = Arc::clone(&heavy_tokens);
+        std::thread::spawn(move || {
+            let submit = |i: usize| {
+                let prompt: Vec<i32> =
+                    (1..=8).map(|t| (t * (i as i32 + 11)) % 500 + 1).collect();
+                server.submit_as(heavy, prompt, TOK).ok()
+            };
+            let mut next = 0usize;
+            let mut pending = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                while pending.len() < HEAVY_OUT {
+                    match submit(next) {
+                        Some(rx) => pending.push(rx),
+                        None => break, // backpressure: retry after the poll
+                    }
+                    next += 1;
+                }
+                pending.retain(|rx| match rx.try_recv() {
+                    Ok(resp) => {
+                        if resp.ok() && !stop.load(Ordering::Relaxed) {
+                            heavy_tokens.fetch_add(resp.tokens.len() as u64, Ordering::Relaxed);
+                        }
+                        false
+                    }
+                    Err(_) => true,
+                });
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            drop(pending); // cancel whatever is still in flight
+        })
+    };
+
+    // Light tenant: closed loop of LIGHT_OUT outstanding, LIGHT_N total.
+    let mut latencies = Vec::with_capacity(LIGHT_N);
+    let mut light_tokens = 0u64;
+    let mut inflight = std::collections::VecDeque::new();
+    let mut submitted = 0usize;
+    while light_tokens < (LIGHT_N * LIGHT_TOK) as u64 {
+        while inflight.len() < LIGHT_OUT && submitted < LIGHT_N {
+            let prompt: Vec<i32> =
+                (1..=8).map(|t| (t * (submitted as i32 + 2)) % 500 + 1).collect();
+            match server.submit_as(light, prompt, LIGHT_TOK) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        let rx = inflight.pop_front().expect("light loop always has work");
+        let resp = rx.recv()?;
+        anyhow::ensure!(resp.ok(), "light request failed: {:?}", resp.error);
+        light_tokens += resp.tokens.len() as u64;
+        latencies.push(resp.latency_s());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let heavy_window_tokens = heavy_tokens.load(Ordering::Relaxed);
+    flood.join().unwrap();
+    drop(server);
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = latencies[((latencies.len() as f64 - 1.0) * 0.99).round() as usize];
+    let jain = jain_index(&[light_tokens as f64, heavy_window_tokens as f64]);
+    Ok((p99, jain))
+}
+
+/// Light tenant alone on the same fleet — the solo-p99 baseline the
+/// fairness acceptance bound is phrased against.
+fn run_light_solo() -> anyhow::Result<f64> {
+    let mut cfg = config(1, StepPolicy::RoundRobin);
+    cfg.route = RoutePolicy::WeightedThroughput;
+    cfg.qos.node_queue_depth = 1;
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    let server: ServerHandle = Server::start(artifacts()?, cfg)?;
+    let mut latencies = Vec::new();
+    for i in 0..8usize {
+        let prompt: Vec<i32> = (1..=8).map(|t| (t * (i as i32 + 2)) % 500 + 1).collect();
+        let rx = server.submit(prompt, 20)?;
+        let resp = rx.recv()?;
+        anyhow::ensure!(resp.ok(), "{:?}", resp.error);
+        latencies.push(resp.latency_s());
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(latencies[((latencies.len() as f64 - 1.0) * 0.99).round() as usize])
+}
+
+fn run_fairness() -> anyhow::Result<()> {
+    let solo_p99 = run_light_solo()?;
+    let (on_p99, on_jain) = run_fairness_once(true)?;
+    let (off_p99, off_jain) = run_fairness_once(false)?;
+    println!("light solo           : p99 {:>7.1}ms", solo_p99 * 1e3);
+    println!(
+        "qos on  (wfq+steal)  : light p99 {:>7.1}ms ({:>4.1}× solo)  jain {:.3}",
+        on_p99 * 1e3,
+        on_p99 / solo_p99,
+        on_jain
+    );
+    println!(
+        "qos off (fifo)       : light p99 {:>7.1}ms ({:>4.1}× solo)  jain {:.3}",
+        off_p99 * 1e3,
+        off_p99 / solo_p99,
+        off_jain
+    );
+    let row = format!(
+        "{{\n    \"workload\": \"2-card 170HX fleet, heavy tenant at ~10x the light tenant's \
+         outstanding demand, closed-loop\",\n    \
+         \"light_solo_p99_ms\": {:.3},\n    \
+         \"qos_on_light_p99_ms\": {:.3},\n    \
+         \"qos_on_jain\": {:.4},\n    \
+         \"qos_off_light_p99_ms\": {:.3},\n    \
+         \"qos_off_jain\": {:.4}\n  }}",
+        solo_p99 * 1e3,
+        on_p99 * 1e3,
+        on_jain,
+        off_p99 * 1e3,
+        off_jain,
+    );
+    upsert_bench_row("serve_fairness", &row);
+    Ok(())
+}
+
+/// Splice `"key": <block>` into BENCH_sim_throughput.json, replacing the
+/// existing object value for `key` or appending the key before the final
+/// brace. The file is shared with bench_sim_throughput, which rewrites it
+/// wholesale — run that bench first when regenerating everything.
+fn upsert_bench_row(key: &str, block: &str) {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    let text = std::fs::read_to_string(&path).unwrap_or_else(|_| "{\n}\n".to_string());
+    let updated = upsert_json_block(&text, key, block);
+    if let Err(e) = std::fs::write(&path, updated) {
+        eprintln!("warning: could not record {key} in {}: {e}", path.display());
+    } else {
+        println!("recorded {key} in {}", path.display());
+    }
+}
+
+fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
+    let needle = format!("\"{key}\":");
+    if let Some(start) = text.find(&needle) {
+        // replace the existing object value (brace-balanced span)
+        let vstart = start + needle.len();
+        let obrace = vstart + text[vstart..].find('{').expect("object value for key");
+        let mut depth = 0usize;
+        let mut end = obrace;
+        for (i, c) in text[obrace..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = obrace + i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        format!("{} {block}{}", &text[..vstart], &text[end..])
+    } else {
+        let last = text.rfind('}').expect("a json object to extend");
+        let body = text[..last].trim_end();
+        let sep = if body.ends_with('{') { "" } else { "," };
+        format!("{body}{sep}\n  \"{key}\": {block}\n}}\n")
+    }
+}
+
 fn main() -> anyhow::Result<()> {
     if !cmphx::runtime::pjrt_available() {
         println!("e2e serving bench skipped: PJRT unavailable (stub xla build)");
@@ -185,5 +398,7 @@ fn main() -> anyhow::Result<()> {
     run_pressure(false)?;
     println!("-- fleet: 170HX + 90HX, continuous batching, weighted routing --");
     run_fleet()?;
+    println!("-- fairness: flooding tenant, WFQ + work stealing on vs off --");
+    run_fairness()?;
     Ok(())
 }

@@ -9,7 +9,10 @@ use anyhow::{bail, Result};
 pub struct Args {
     pub command: String,
     pub positional: Vec<String>,
-    options: BTreeMap<String, String>,
+    /// Every occurrence of each `--key value`, in order — repeatable
+    /// options (`--tenant a:1 --tenant b:2`) keep all values; [`Args::opt`]
+    /// reads the last one.
+    options: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
 }
 
@@ -23,9 +26,9 @@ impl Args {
             if let Some(key) = a.strip_prefix("--") {
                 // --key=value | --key value | --flag
                 if let Some((k, v)) = key.split_once('=') {
-                    args.options.insert(k.to_string(), v.to_string());
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
                 } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
-                    args.options.insert(key.to_string(), it.next().unwrap());
+                    args.options.entry(key.to_string()).or_default().push(it.next().unwrap());
                 } else {
                     args.flags.push(key.to_string());
                 }
@@ -38,8 +41,15 @@ impl Args {
         Ok(args)
     }
 
+    /// The last value given for `--key` (repeats override, like most
+    /// CLIs); [`Args::opt_all`] sees every occurrence.
     pub fn opt(&self, key: &str) -> Option<&str> {
-        self.options.get(key).map(String::as_str)
+        self.options.get(key).and_then(|vs| vs.last()).map(String::as_str)
+    }
+
+    /// Every value given for a repeatable `--key`, in command-line order.
+    pub fn opt_all(&self, key: &str) -> impl Iterator<Item = &str> {
+        self.options.get(key).into_iter().flatten().map(String::as_str)
     }
 
     pub fn opt_usize(&self, key: &str, default: usize) -> Result<usize> {
@@ -93,6 +103,16 @@ mod tests {
         let a = parse("report --all");
         assert!(a.flag("all"));
         assert_eq!(a.opt("all"), None);
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_and_opt_reads_the_last() {
+        let a = parse("serve --tenant light:1 --tenant heavy:3 --batch 2 --batch 4");
+        let tenants: Vec<&str> = a.opt_all("tenant").collect();
+        assert_eq!(tenants, vec!["light:1", "heavy:3"]);
+        assert_eq!(a.opt("tenant"), Some("heavy:3"));
+        assert_eq!(a.opt_usize("batch", 1).unwrap(), 4);
+        assert_eq!(a.opt_all("missing").count(), 0);
     }
 
     #[test]

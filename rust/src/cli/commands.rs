@@ -27,13 +27,22 @@ COMMANDS:
                             mixbench operational-intensity sweep (roofline)
   serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
         [--block N] [--kv-blocks N] [--no-preempt]
+        [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
+        [--aging N] [--aging-rounds N]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
                             optionally across a fleet of registry cards
                             (e.g. --fleet 170hx,90hx) with continuous
                             batching over paged KV (--block positions per
                             page, --kv-blocks caps the page pool to force
                             pressure) and preempt-and-requeue under page
-                            pressure (--no-preempt stalls instead)
+                            pressure (--no-preempt stalls instead).
+                            --tenant (repeatable) registers QoS tenants:
+                            weighted fair queueing with optional token-rate
+                            and energy-budget caps; requests round-robin
+                            across them. --no-qos falls back to the FIFO
+                            queue, --no-steal disables cross-node work
+                            stealing, --aging sets the WFQ promoter (pops),
+                            --aging-rounds the preemption waiting-queue gate
   help                      this text
 ";
 
@@ -269,6 +278,7 @@ fn check_targets() -> usize {
 
 fn serve(args: &Args) -> Result<i32> {
     use crate::coordinator::NodeConfig;
+    use crate::qos::TenantSpec;
 
     let requests = args.opt_usize("requests", 8)?;
     let tokens = args.opt_usize("tokens", 12)?;
@@ -285,6 +295,18 @@ fn serve(args: &Args) -> Result<i32> {
     if args.flag("no-preempt") {
         config.batch.preempt = false;
     }
+    config.batch.aging_rounds =
+        args.opt_usize("aging-rounds", config.batch.aging_rounds as usize)? as u64;
+    for spec in args.opt_all("tenant") {
+        config.qos.tenants.push(TenantSpec::parse(spec)?);
+    }
+    if args.flag("no-qos") {
+        config.qos.enabled = false;
+    }
+    if args.flag("no-steal") {
+        config.qos.steal = false;
+    }
+    config.qos.aging_pops = args.opt_usize("aging", config.qos.aging_pops as usize)? as u64;
     if let Some(list) = args.opt("fleet") {
         let fmad = config.fmad;
         // Reject empty segments explicitly: by_name does substring
@@ -309,10 +331,22 @@ fn serve(args: &Args) -> Result<i32> {
     println!("compiling artifacts on the PJRT CPU client…");
     let server: ServerHandle = Server::start(artifacts, config)?;
 
+    // Registered tenants take turns submitting; without --tenant,
+    // everything bills to the implicit default tenant.
+    let lanes: Vec<_> = {
+        use crate::qos::TenantRegistry;
+        let named: Vec<_> = server
+            .registry()
+            .iter()
+            .map(|(t, _)| t)
+            .filter(|&t| t != TenantRegistry::DEFAULT)
+            .collect();
+        if named.is_empty() { vec![TenantRegistry::DEFAULT] } else { named }
+    };
     let mut rxs = Vec::new();
     for i in 0..requests {
         let prompt: Vec<i32> = (1..=8).map(|t| ((t * (i as i32 + 3)) % 500) + 1).collect();
-        rxs.push(server.submit(prompt, tokens)?);
+        rxs.push(server.submit_as(lanes[i % lanes.len()], prompt, tokens)?);
     }
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
@@ -322,7 +356,8 @@ fn serve(args: &Args) -> Result<i32> {
             String::new()
         };
         println!(
-            "req {i}: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}{}",
+            "req {i} [{}]: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}{}",
+            server.registry().spec(resp.tenant).name,
             resp.tokens.len(),
             resp.node,
             resp.latency_s() * 1e3,

@@ -38,6 +38,13 @@ pub struct BatchPolicy {
     /// would allow. `None` (the default) uses every free byte; tests and
     /// capacity experiments pin this to force page pressure.
     pub kv_block_budget: Option<usize>,
+    /// Waiting-queue aging: once a preempted sequence has sat parked for
+    /// this many engine rounds, the worker stops admitting new arrivals
+    /// until it resumes (reserving freed pages for the replay), and the
+    /// resumed sequence is shielded from re-eviction — so sustained short
+    /// traffic can no longer park a long sequence indefinitely (the PR 3
+    /// waiting-queue starvation follow-up). `0` ages immediately.
+    pub aging_rounds: u64,
 }
 
 impl Default for BatchPolicy {
@@ -48,6 +55,7 @@ impl Default for BatchPolicy {
             kv_block_positions: 16,
             preempt: true,
             kv_block_budget: None,
+            aging_rounds: 16,
         }
     }
 }
@@ -79,6 +87,7 @@ mod tests {
         assert!(p.kv_block_positions >= 1);
         assert!(p.preempt, "preemption is the default — starvation is not");
         assert!(p.kv_block_budget.is_none());
+        assert!(p.aging_rounds > 0, "parked sequences age after a bounded wait");
     }
 
     #[test]

@@ -39,6 +39,12 @@ pub struct Metrics {
     /// Simulated device seconds spent recomputing work lost to preemption
     /// — the price paid for the admission headroom eviction bought.
     pub wasted_prefill_s: f64,
+    /// Requests this node pulled off a peer's queue while idle (on a
+    /// tenant rollup: requests of this tenant that were stolen).
+    pub steals: u64,
+    /// Times the waiting-queue aging gate engaged for a parked preempted
+    /// sequence (new admissions held back until it resumed).
+    pub aged_promotions: u64,
 }
 
 impl Metrics {
@@ -160,6 +166,8 @@ impl Metrics {
         self.preemptions += other.preemptions;
         self.resumes += other.resumes;
         self.wasted_prefill_s += other.wasted_prefill_s;
+        self.steals += other.steals;
+        self.aged_promotions += other.aged_promotions;
         self.latency_sum_s += other.latency_sum_s;
         self.latencies_s.extend_from_slice(&other.latencies_s);
     }
@@ -169,7 +177,7 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
-             preempt: evicted={} resumed={} wasted_sim={:.4}s\n\
+             preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
              simulated device time: {:.4}s ({}× host)  energy {:.2}J → {:.1} tok/J",
@@ -180,6 +188,8 @@ impl Metrics {
             self.preemptions,
             self.resumes,
             self.wasted_prefill_s,
+            self.aged_promotions,
+            self.steals,
             self.mean_latency().unwrap_or(0.0) * 1e3,
             self.latency_pct(0.5).unwrap_or(0.0) * 1e3,
             self.latency_pct(0.99).unwrap_or(0.0) * 1e3,
@@ -196,6 +206,21 @@ impl Metrics {
     }
 }
 
+/// Jain's fairness index over per-tenant service shares: `(Σx)² / (n·Σx²)`,
+/// 1.0 when every share is equal, → 1/n when one tenant takes everything.
+/// Shares should be normalized by tenant weight before calling. Empty or
+/// all-zero inputs read as perfectly fair (no service was given unfairly).
+pub fn jain_index(shares: &[f64]) -> f64 {
+    let n = shares.len() as f64;
+    let sum: f64 = shares.iter().sum();
+    let sq: f64 = shares.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        1.0
+    } else {
+        (sum * sum) / (n * sq)
+    }
+}
+
 /// Per-node metric snapshots plus fleet-wide aggregation — what the fleet
 /// engine reports so "N recycled cards vs one A100" is answerable in
 /// tokens/s *and* tokens/joule.
@@ -203,6 +228,12 @@ impl Metrics {
 pub struct FleetMetrics {
     /// `(device name, node metrics)`, in node order.
     pub nodes: Vec<(&'static str, Metrics)>,
+    /// `(tenant name, tenant rollup)`, in tenant-id order. A request is
+    /// counted on the node that served it **and** the tenant it billed
+    /// to; requests shed at the QoS dispatch stage (energy budget, no
+    /// healthy node) appear only in their tenant's rollup — `total()`
+    /// stays the node-side serving aggregate.
+    pub tenants: Vec<(String, Metrics)>,
 }
 
 impl FleetMetrics {
@@ -230,7 +261,8 @@ impl FleetMetrics {
         self.total().sim_tokens_per_joule()
     }
 
-    /// Render per-node lines plus the fleet aggregate.
+    /// Render per-node lines, per-tenant lines (when more than the
+    /// default tenant exists), plus the fleet aggregate.
     pub fn render(&self) -> String {
         let mut out = String::new();
         for (name, m) in &self.nodes {
@@ -241,6 +273,20 @@ impl FleetMetrics {
                 m.sim_tokens_per_sec(),
                 m.sim_tokens_per_joule(),
             ));
+        }
+        if self.tenants.len() > 1 {
+            for (name, m) in &self.tenants {
+                out.push_str(&format!(
+                    "tenant {name:<20} req={:<4} err={:<3} tok={:<6} p99 {:>7.1}ms  \
+                     energy {:>8.2}J stolen={}\n",
+                    m.requests,
+                    m.errors,
+                    m.tokens_out,
+                    m.latency_pct(0.99).unwrap_or(0.0) * 1e3,
+                    m.simulated_energy_j,
+                    m.steals,
+                ));
+            }
         }
         let total = self.total();
         out.push_str(&format!(
@@ -301,6 +347,8 @@ mod tests {
         m.preemptions = 3;
         m.resumes = 2;
         m.wasted_prefill_s = 0.5;
+        m.steals = 4;
+        m.aged_promotions = 1;
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
@@ -308,6 +356,8 @@ mod tests {
         assert!(s.contains("evicted=3"), "{s}");
         assert!(s.contains("resumed=2"), "{s}");
         assert!(s.contains("wasted_sim=0.5000s"), "{s}");
+        assert!(s.contains("steals=4"), "{s}");
+        assert!(s.contains("aged=1"), "{s}");
     }
 
     #[test]
@@ -316,14 +366,20 @@ mod tests {
         a.preemptions = 2;
         a.resumes = 1;
         a.wasted_prefill_s = 0.25;
+        a.steals = 1;
+        a.aged_promotions = 2;
         let mut b = Metrics::new();
         b.preemptions = 3;
         b.resumes = 3;
         b.wasted_prefill_s = 0.5;
+        b.steals = 4;
+        b.aged_promotions = 1;
         a.merge(&b);
         assert_eq!(a.preemptions, 5);
         assert_eq!(a.resumes, 4);
         assert!((a.wasted_prefill_s - 0.75).abs() < 1e-12);
+        assert_eq!(a.steals, 5);
+        assert_eq!(a.aged_promotions, 3);
     }
 
     #[test]
@@ -394,12 +450,109 @@ mod tests {
         n1.simulated_device_s = 1.0; // 30 tok/s
         n1.simulated_energy_j = 30.0;
         n1.requests = 2;
-        let fm = FleetMetrics { nodes: vec![("a", n0), ("b", n1)] };
+        let fm = FleetMetrics { nodes: vec![("a", n0), ("b", n1)], tenants: Vec::new() };
         assert!((fm.sim_tokens_per_sec() - 80.0).abs() < 1e-12);
         let total = fm.total();
         assert_eq!(total.requests, 6);
         assert_eq!(total.tokens_out, 130);
         assert!((fm.sim_tokens_per_joule() - 130.0 / 80.0).abs() < 1e-12);
         assert!(fm.render().contains("fleet (2 nodes)"));
+    }
+
+    #[test]
+    fn fleet_merge_percentiles_over_skewed_node_distributions() {
+        // Node A serves a tight cluster of fast requests; node B a few
+        // slow stragglers. The fleet total's percentiles must come from
+        // the *combined* distribution, not any per-node shortcut — p50
+        // sits in A's cluster while p99 must reach into B's tail.
+        let mut a = Metrics::new();
+        for i in 0..96 {
+            a.record_response(0.010 + (i as f64) * 1e-5, 4, true);
+        }
+        let mut b = Metrics::new();
+        for i in 0..4 {
+            b.record_response(1.0 + i as f64, 4, true);
+        }
+        let fm = FleetMetrics {
+            nodes: vec![("fast", a.clone()), ("slow", b.clone())],
+            tenants: Vec::new(),
+        };
+        let total = fm.total();
+        assert_eq!(total.requests, 100);
+        // reference: one stream with the same 100 samples
+        let mut combined = Metrics::new();
+        for i in 0..96 {
+            combined.record_response(0.010 + (i as f64) * 1e-5, 4, true);
+        }
+        for i in 0..4 {
+            combined.record_response(1.0 + i as f64, 4, true);
+        }
+        for &p in &[0.0, 0.5, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                total.latency_pct(p).map(f64::to_bits),
+                combined.latency_pct(p).map(f64::to_bits),
+                "p{p}"
+            );
+        }
+        assert!(total.latency_pct(0.5).unwrap() < 0.02, "p50 lives in the fast cluster");
+        assert!(total.latency_pct(0.99).unwrap() >= 1.0, "p99 reaches the slow tail");
+        // merging in the other order gives identical percentiles
+        let swapped = FleetMetrics { nodes: vec![("slow", b), ("fast", a)], tenants: Vec::new() };
+        assert_eq!(
+            swapped.total().latency_pct(0.99).map(f64::to_bits),
+            total.latency_pct(0.99).map(f64::to_bits)
+        );
+    }
+
+    #[test]
+    fn fleet_merge_tokens_per_joule_over_skewed_nodes() {
+        // tokens/J must be ratio-of-sums, not a mean of per-node ratios:
+        // an efficient busy card and an inefficient idle one.
+        let mut eff = Metrics::new();
+        eff.tokens_out = 900;
+        eff.simulated_energy_j = 300.0; // 3.0 tok/J
+        eff.simulated_device_s = 9.0;
+        let mut waste = Metrics::new();
+        waste.tokens_out = 100;
+        waste.simulated_energy_j = 700.0; // 0.143 tok/J
+        waste.simulated_device_s = 1.0;
+        let fm = FleetMetrics { nodes: vec![("eff", eff), ("waste", waste)], tenants: Vec::new() };
+        let got = fm.sim_tokens_per_joule();
+        assert!((got - 1000.0 / 1000.0).abs() < 1e-12, "{got}");
+        let naive_mean = (3.0 + 100.0 / 700.0) / 2.0;
+        assert!((got - naive_mean).abs() > 0.5, "must not be the mean of ratios");
+        // a node that served nothing changes neither number
+        let with_idle = FleetMetrics {
+            nodes: {
+                let mut n = fm.nodes.clone();
+                n.push(("idle", Metrics::new()));
+                n
+            },
+            tenants: Vec::new(),
+        };
+        assert!((with_idle.sim_tokens_per_joule() - got).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tenant_rollups_render_and_jain_behaves() {
+        let mut light = Metrics::new();
+        light.record_response(0.1, 40, true);
+        let mut heavy = Metrics::new();
+        heavy.record_response(0.9, 400, true);
+        let fm = FleetMetrics {
+            nodes: vec![("node", Metrics::new())],
+            tenants: vec![("light".into(), light), ("heavy".into(), heavy)],
+        };
+        let s = fm.render();
+        assert!(s.contains("tenant light"), "{s}");
+        assert!(s.contains("tenant heavy"), "{s}");
+        // jain: equal shares are perfectly fair, a 10× skew is not
+        assert!((jain_index(&[1.0, 1.0]) - 1.0).abs() < 1e-12);
+        let skewed = jain_index(&[40.0, 400.0]);
+        assert!(skewed < 0.7, "{skewed}");
+        assert!(jain_index(&[0.0, 0.0]) == 1.0, "no service is not unfair");
+        assert!((jain_index(&[5.0]) - 1.0).abs() < 1e-12);
+        let n4 = jain_index(&[1.0, 0.0, 0.0, 0.0]);
+        assert!((n4 - 0.25).abs() < 1e-12, "one-of-four monopoly → 1/n");
     }
 }

@@ -1,23 +1,38 @@
 //! L3 serving coordinator — the §6.2 edge-node deployment, real, at fleet
-//! scale.
+//! scale, multi-tenant.
 //!
 //! A threaded (std::thread + mpsc; no async runtime in the offline crate
-//! set) inference fleet over the AOT artifacts: requests enter a bounded
-//! queue, the dispatch stage routes each one across N per-card workers via
-//! a [`router::Fleet`] policy (dead workers are marked unhealthy and
-//! excluded, with the in-hand request rerouted), and every worker runs
-//! **continuous batching over paged KV** — sequences join its decode
-//! round whenever the [`kv::KvPager`] can hold their prefill window
-//! ([`scheduler::plan_admission`]), grow VRAM block-by-block as they
-//! decode, and under page pressure the longest-remaining sequence is
-//! **preempted and requeued** ([`scheduler::plan_eviction`]): KV dropped,
-//! prefill recomputed on resume, vLLM-style, so long generations cannot
-//! starve short ones. [`batcher::BatchPolicy`] carries the admission and
-//! paging knobs. Each node owns its own runtime, pager sized to its
-//! card's VRAM, and a per-card simulated device-time/energy overlay, so
-//! [`metrics::FleetMetrics`] reports fleet-wide tokens/s, latency
+//! set) inference fleet over the AOT artifacts. The pipeline is
+//! **submit → QoS → dispatch → worker**: requests enter a bounded submit
+//! queue carrying a [`crate::qos::TenantId`]; the QoS dispatch stage
+//! drains them into per-tenant lanes of a deficit-round-robin weighted
+//! fair queue ([`crate::qos::wfq`]) with an aging promoter, enforces each
+//! tenant's token-rate cap (over-rate lanes defer) and lifetime energy
+//! budget (priced with the routed card's calibrated overlay, settled to
+//! actuals at retire — [`crate::qos::budget`]), and routes the popped
+//! request across N per-card workers via a [`router::Fleet`] policy onto
+//! bounded per-node work queues ([`crate::qos::NodeQueues`]). Dead
+//! workers are marked unhealthy and excluded, with the in-hand request
+//! rerouted; [`server::ServerHandle::mark_healthy`] restores a recovered
+//! node. An **idle worker steals** the newest request from the deepest
+//! peer queue, capping tail latency when routing guessed wrong.
+//!
+//! Every worker runs **continuous batching over paged KV** — sequences
+//! join its decode round whenever the [`kv::KvPager`] can hold their
+//! prefill window ([`scheduler::plan_admission`]), grow VRAM
+//! block-by-block as they decode, and under page pressure the
+//! longest-remaining sequence is **preempted and requeued**
+//! ([`scheduler::plan_eviction_shielded`]): KV dropped, prefill recomputed
+//! on resume, vLLM-style, so long generations cannot starve short ones —
+//! and a parked sequence past [`batcher::BatchPolicy::aging_rounds`]
+//! freezes new admissions until it resumes (the resumed sequence is
+//! shielded from re-eviction), so short traffic cannot starve a parked
+//! long one either. [`batcher::BatchPolicy`] carries the admission,
+//! paging, and aging knobs. Each node owns its own runtime, pager sized
+//! to its card's VRAM, and a per-card simulated device-time/energy
+//! overlay, so [`metrics::FleetMetrics`] reports tokens/s, latency
 //! percentiles, tokens/joule, and the preemption/recompute tax for any
-//! mix of registry cards.
+//! mix of registry cards — per node *and* per tenant.
 //!
 //! Python never runs here: the executables carry the weights.
 
@@ -31,7 +46,7 @@ pub mod server;
 
 pub use batcher::BatchPolicy;
 pub use kv::{KvPager, SeqKv};
-pub use metrics::{FleetMetrics, Metrics};
+pub use metrics::{jain_index, FleetMetrics, Metrics};
 pub use request::{GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};
 pub use server::{NodeConfig, Server, ServerConfig, ServerHandle};

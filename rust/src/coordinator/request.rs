@@ -3,14 +3,24 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::qos::TenantId;
+
 /// A generation request.
 #[derive(Debug)]
 pub struct GenRequest {
     pub id: u64,
+    /// The tenant this request bills to (fair-share lane, rate and energy
+    /// caps). [`crate::coordinator::ServerHandle::submit`] uses the
+    /// default tenant; `submit_as` attributes explicitly.
+    pub tenant: TenantId,
     /// Prompt token ids (≤ the model's prefill window).
     pub prompt: Vec<i32>,
     /// Tokens to generate (bounded by KV capacity at serve time).
     pub max_tokens: usize,
+    /// Estimated simulated joules charged against the tenant's energy
+    /// budget when the QoS dispatch stage routed this request (priced
+    /// with the routed node's overlay); settled to actuals at retire.
+    pub charged_j: f64,
     /// Where the response goes. Dropped receiver = cancelled request.
     pub reply: Sender<GenResponse>,
     /// Enqueue timestamp for latency accounting.
@@ -21,6 +31,8 @@ pub struct GenRequest {
 #[derive(Clone, Debug)]
 pub struct GenResponse {
     pub id: u64,
+    /// The tenant the request billed to.
+    pub tenant: TenantId,
     /// Generated token ids (empty on error).
     pub tokens: Vec<i32>,
     /// Error text if generation failed.
@@ -38,7 +50,10 @@ pub struct GenResponse {
     /// resumed (each resume recomputed prefill and replayed the tokens
     /// generated so far).
     pub preemptions: u64,
-    /// Fleet node index that served (or rejected) the request.
+    /// Fleet node index that served (or rejected) the request. Requests
+    /// shed at the QoS dispatch stage (energy budget exhausted, no
+    /// healthy node) report the node the router would have picked, or 0
+    /// when routing never happened.
     pub node: usize,
 }
 
@@ -62,6 +77,7 @@ mod tests {
     fn response_latency_sums_phases() {
         let r = GenResponse {
             id: 1,
+            tenant: TenantId(0),
             tokens: vec![1, 2],
             error: None,
             queue_s: 0.1,
@@ -76,18 +92,21 @@ mod tests {
     }
 
     #[test]
-    fn request_carries_reply_channel() {
+    fn request_carries_reply_channel_and_tenant() {
         let (tx, rx) = channel();
         let req = GenRequest {
             id: 7,
+            tenant: TenantId(2),
             prompt: vec![1, 2, 3],
             max_tokens: 4,
+            charged_j: 0.0,
             reply: tx,
             enqueued: Instant::now(),
         };
         req.reply
             .send(GenResponse {
                 id: req.id,
+                tenant: req.tenant,
                 tokens: vec![9],
                 error: None,
                 queue_s: 0.0,
@@ -98,6 +117,8 @@ mod tests {
                 node: 0,
             })
             .unwrap();
-        assert_eq!(rx.recv().unwrap().id, 7);
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 7);
+        assert_eq!(resp.tenant, TenantId(2));
     }
 }

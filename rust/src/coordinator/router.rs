@@ -157,11 +157,30 @@ impl Fleet {
         self.nodes[idx].outstanding -= 1;
     }
 
-    /// Exclude a node from routing — its worker is gone. There is no
-    /// un-mark: a dead worker thread never comes back within one server's
-    /// lifetime.
+    /// Exclude a node from routing — its worker is gone or an operator
+    /// drained it. Reversed by [`Fleet::mark_healthy`].
     pub fn mark_unhealthy(&mut self, idx: usize) {
         self.nodes[idx].healthy = false;
+    }
+
+    /// Restore a node to the routable set — the recovery hook the old
+    /// router lacked (an excluded node stayed excluded for the server's
+    /// lifetime even after its worker came back or an operator replaced
+    /// the card). The dispatch stage resumes routing to it on the next
+    /// request.
+    pub fn mark_healthy(&mut self, idx: usize) {
+        self.nodes[idx].healthy = true;
+    }
+
+    /// Move one queued unit of work from `from` to `to` — the router-side
+    /// bookkeeping of a work steal. The request was routed (and counted)
+    /// onto `from` but will be served (and completed) by `to`.
+    pub fn reassign(&mut self, from: usize, to: usize) {
+        assert!(self.nodes[from].outstanding > 0, "reassign from an idle node");
+        self.nodes[from].outstanding -= 1;
+        self.nodes[from].assigned -= 1;
+        self.nodes[to].outstanding += 1;
+        self.nodes[to].assigned += 1;
     }
 
     /// Nodes still eligible for routing.
@@ -332,6 +351,48 @@ mod tests {
         assert_eq!(f.healthy_count(), 0);
         let i = f.route();
         assert!(i < 2);
+    }
+
+    #[test]
+    fn recovered_nodes_rejoin_routing() {
+        // Regression: there was no mark_healthy — a node excluded once
+        // stayed excluded forever, so a fleet that lost and regained a
+        // card kept idling it.
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.mark_unhealthy(1);
+        for _ in 0..4 {
+            assert_eq!(f.route(), 0);
+        }
+        f.mark_healthy(1);
+        assert_eq!(f.healthy_count(), 2);
+        let picks: Vec<usize> = (0..4).map(|_| f.route()).collect();
+        assert!(picks.contains(&1), "recovered node must serve again: {picks:?}");
+    }
+
+    #[test]
+    fn reassign_moves_outstanding_and_assigned() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        assert_eq!(f.route(), 0);
+        assert_eq!(f.route(), 1);
+        assert_eq!(f.route(), 0);
+        // node 1 steals one of node 0's queued requests
+        f.reassign(0, 1);
+        assert_eq!(f.nodes[0].outstanding, 1);
+        assert_eq!(f.nodes[1].outstanding, 2);
+        assert_eq!(f.nodes[0].assigned, 1);
+        assert_eq!(f.nodes[1].assigned, 2);
+        assert_eq!(f.total_assigned(), 3, "steals conserve the request count");
+        // the thief completes the stolen work
+        f.complete(1);
+        f.complete(1);
+        assert_eq!(f.nodes[1].outstanding, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "reassign from an idle node")]
+    fn reassign_from_an_idle_node_panics() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.reassign(0, 1);
     }
 
     #[test]

@@ -89,11 +89,25 @@ pub fn plan_admission(policy: &BatchPolicy, live: usize, admissible: usize) -> u
 /// step order, so the work closest to completion is never thrown away.
 /// Returns an index into `seqs`, or `None` when every sequence is done.
 pub fn plan_eviction(seqs: &[SeqView]) -> Option<usize> {
-    seqs.iter()
-        .enumerate()
-        .filter(|(_, s)| !s.done())
-        .max_by_key(|&(i, s)| (s.remaining(), i))
-        .map(|(i, _)| i)
+    plan_eviction_shielded(seqs, &[])
+}
+
+/// [`plan_eviction`] with an eviction shield: `shielded[i]` marks
+/// sequences that resumed through the waiting queue's aging gate and must
+/// not bounce straight back to it (the park → age → resume → re-evict
+/// livelock). Shielded sequences are victims of last resort: they are
+/// picked only when no unshielded active sequence exists, so the shield
+/// bounds starvation without sacrificing engine liveness. Indices past
+/// `shielded`'s length are unshielded.
+pub fn plan_eviction_shielded(seqs: &[SeqView], shielded: &[bool]) -> Option<usize> {
+    let pick = |all: bool| {
+        seqs.iter()
+            .enumerate()
+            .filter(|&(i, s)| !s.done() && (all || !shielded.get(i).copied().unwrap_or(false)))
+            .max_by_key(|&(i, s)| (s.remaining(), i))
+            .map(|(i, _)| i)
+    };
+    pick(false).or_else(|| pick(true))
 }
 
 /// Total decode rounds a batch needs (the longest target governs — decode
@@ -161,6 +175,22 @@ mod tests {
         assert_eq!(plan_eviction(&seqs), Some(1));
         assert_eq!(plan_eviction(&[seq(0, 4, 4)]), None);
         assert_eq!(plan_eviction(&[]), None);
+    }
+
+    #[test]
+    fn shielded_sequences_are_victims_of_last_resort() {
+        let seqs = [seq(0, 0, 9), seq(1, 0, 5), seq(2, 0, 7)];
+        // unshielded: the longest-remaining (seq 0) goes
+        assert_eq!(plan_eviction_shielded(&seqs, &[false, false, false]), Some(0));
+        // shielding the longest redirects the eviction to the next-longest
+        assert_eq!(plan_eviction_shielded(&seqs, &[true, false, false]), Some(2));
+        // everything shielded: liveness wins — longest-remaining again
+        assert_eq!(plan_eviction_shielded(&seqs, &[true, true, true]), Some(0));
+        // a short shield slice leaves the tail unshielded
+        assert_eq!(plan_eviction_shielded(&seqs, &[true]), Some(2));
+        // done sequences are never victims even when all actives shielded
+        let seqs = [seq(0, 9, 9), seq(1, 0, 5)];
+        assert_eq!(plan_eviction_shielded(&seqs, &[false, true]), Some(1));
     }
 
     #[test]

@@ -1,34 +1,44 @@
-//! The fleet serving engine: a shared admission queue feeding N per-card
+//! The fleet serving engine: a QoS'd admission stage feeding N per-card
 //! continuous-batching workers over paged KV.
 //!
-//! Life of a request: client → bounded queue → dispatch stage (the
-//! [`Fleet`] router picks a card, failing over past dead workers) → that
-//! node's worker joins the request into its decode round as soon as the
-//! KV pager can hold its prefill window (vLLM-style continuous batching —
-//! no stop-the-world batch windows), prefills it, and interleaves decode
-//! steps per [`scheduler::plan_round_into`], growing the sequence's KV
-//! pages block-by-block, until the sequence hits its target → reply on
-//! the request's channel. When a round cannot allocate growth pages, the
-//! engine preempts the longest-remaining sequence
-//! ([`scheduler::plan_eviction`]): its KV is dropped and the request is
-//! parked on the waiting queue, to resume later by recomputing prefill
-//! and replaying its generated tokens (greedy decode is deterministic, so
-//! the replay reconstructs the identical state). Failures are contained
-//! per request; a dropped reply receiver is a cancellation.
+//! Life of a request: client → bounded submit queue → **QoS dispatch
+//! stage** — the tenant's lane in a deficit-round-robin weighted fair
+//! queue ([`crate::qos::wfq`]), rate/energy caps checked against its
+//! [`crate::qos::TenantAccounts`] (energy priced with the routed node's
+//! overlay), then the [`Fleet`] router picks a card and the request lands
+//! on that node's bounded work queue ([`crate::qos::NodeQueues`]) — →
+//! the node's worker joins the request into its decode round as soon as
+//! the KV pager can hold its prefill window (vLLM-style continuous
+//! batching — no stop-the-world batch windows), prefills it, and
+//! interleaves decode steps per [`scheduler::plan_round_into`], growing
+//! the sequence's KV pages block-by-block, until the sequence hits its
+//! target → reply on the request's channel. An **idle** worker whose
+//! queue runs dry steals the newest request from the deepest peer queue,
+//! capping tail latency when routing guessed wrong. When a round cannot
+//! allocate growth pages, the engine preempts the longest-remaining
+//! sequence ([`scheduler::plan_eviction_shielded`]): its KV is dropped
+//! and the request is parked on the waiting queue, to resume later by
+//! recomputing prefill and replaying its generated tokens (greedy decode
+//! is deterministic, so the replay reconstructs the identical state). A
+//! parked sequence that waits past [`BatchPolicy::aging_rounds`] engine
+//! rounds freezes new admissions until it resumes, and the resumed
+//! sequence is shielded from re-eviction — sustained short traffic can no
+//! longer park a long sequence indefinitely. Failures are contained per
+//! request; a dropped reply receiver is a cancellation.
 //!
 //! Every node owns its own [`ModelRuntime`], [`KvPager`] sized to its
 //! card's VRAM, [`Metrics`], and a simulated device-time/energy overlay
 //! calibrated per card (any mix of registry [`DeviceSpec`]s), so a
 //! heterogeneous fleet — a 170HX next to a 90HX — reports fleet-wide
-//! tokens/s and tokens/joule.
+//! tokens/s and tokens/joule, per node *and* per tenant.
 
 use std::collections::VecDeque;
 use std::sync::mpsc::{
-    sync_channel, Receiver, RecvTimeoutError, SendError, SyncSender, TryRecvError, TrySendError,
+    sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -37,6 +47,10 @@ use crate::isa::pass::FmadPolicy;
 use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
 use crate::llm::quant;
+use crate::qos::{
+    Admission, AdmissionQueue, NodeQueues, Popped, QosConfig, TenantAccounts, TenantId,
+    TenantRegistry, WaitPop,
+};
 use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 
 use super::batcher::BatchPolicy;
@@ -44,7 +58,9 @@ use super::kv::{KvPager, SeqKv};
 use super::metrics::{FleetMetrics, Metrics};
 use super::request::{GenRequest, GenResponse};
 use super::router::{Fleet, Node, RoutePolicy};
-use super::scheduler::{plan_admission, plan_eviction, plan_round_into, SeqView, StepPolicy};
+use super::scheduler::{
+    plan_admission, plan_eviction_shielded, plan_round_into, SeqView, StepPolicy,
+};
 
 /// One card of the serving fleet: the simulated device identity and the
 /// fmad policy its deployment would run.
@@ -63,13 +79,13 @@ impl NodeConfig {
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Bound of **each** engine queue: the shared dispatch queue and every
-    /// node's own queue (so a fleet buffers up to `(1 + nodes) ×
-    /// queue_depth` requests, plus one in the dispatcher's hand, before
-    /// `submit` sheds load).
+    /// Bound of the shared submit queue (`submit` sheds load past it).
+    /// The per-node work queues are bounded separately — and much more
+    /// shallowly — by [`QosConfig::node_queue_depth`], so that backlog
+    /// accumulates in the tenant-fair queue instead of per-node FIFOs.
     pub queue_depth: usize,
     /// Per-node admission policy (concurrency cap, cold-start gather, KV
-    /// page size, preemption).
+    /// page size, preemption, waiting-queue aging).
     pub batch: BatchPolicy,
     pub step_policy: StepPolicy,
     /// fmad policy of the default single-node deployment (and of nodes
@@ -80,6 +96,8 @@ pub struct ServerConfig {
     /// The fleet. Empty = one CMP 170HX (the single-card path, unchanged
     /// in behaviour and per-request results).
     pub nodes: Vec<NodeConfig>,
+    /// Multi-tenant QoS: tenants, weighted fair queueing, work stealing.
+    pub qos: QosConfig,
 }
 
 impl Default for ServerConfig {
@@ -91,17 +109,22 @@ impl Default for ServerConfig {
             fmad: FmadPolicy::Decomposed,
             route: RoutePolicy::WeightedThroughput,
             nodes: Vec::new(),
+            qos: QosConfig::default(),
         }
     }
 }
 
-/// Client handle: submit requests, read metrics, shut down.
+/// Client handle: submit requests (optionally as a named tenant), read
+/// metrics, flip node health, shut down.
 pub struct ServerHandle {
     tx: Option<SyncSender<GenRequest>>,
     dispatcher: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     node_names: Vec<&'static str>,
     node_metrics: Vec<Arc<Mutex<Metrics>>>,
+    tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
+    registry: Arc<TenantRegistry>,
+    fleet: Arc<Mutex<Fleet>>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
@@ -130,6 +153,15 @@ impl Overlay {
             decode_w: row.decode_power_w,
         }
     }
+
+    /// Estimated simulated joules for one request on this node: a full
+    /// prefill window plus `max_tokens` decode steps — what the QoS stage
+    /// charges a tenant's energy budget at dispatch (settled to actuals
+    /// at retire).
+    fn estimate_j(&self, prefill_t: usize, max_tokens: usize) -> f64 {
+        self.prefill_s_per_token * prefill_t as f64 * self.prefill_w
+            + self.decode_s_per_token * max_tokens as f64 * self.decode_w
+    }
 }
 
 /// Reject artifact geometries the admission path cannot serve: a runtime
@@ -149,16 +181,37 @@ pub(crate) fn admission_budget(max_ctx: usize, prefill_t: usize) -> usize {
     max_ctx.saturating_sub(prefill_t)
 }
 
+/// Clears a node's liveness flag when its worker thread exits for any
+/// reason — including a panic — so the dispatch stage reroutes instead of
+/// queueing onto the dead.
+struct AliveGuard {
+    queues: Arc<NodeQueues<GenRequest>>,
+    node: usize,
+}
+
+impl Drop for AliveGuard {
+    fn drop(&mut self) {
+        self.queues.mark_dead(self.node);
+        // Orphaned requests are dropped, closing their reply channels —
+        // waiting clients fail fast (the old mpsc behaviour) instead of
+        // hanging until shutdown when no stealing peer rescues the queue
+        // (single-node fleet, or stealing disabled). On a normal exit the
+        // queue is already drained and this is a no-op.
+        drop(self.queues.drain_node(self.node));
+    }
+}
+
 /// The serving engine.
 pub struct Server;
 
 impl Server {
     /// Start the fleet over an artifact directory: one runtime-owning
-    /// worker per node plus the dispatch stage. Compilation happens on the
-    /// worker threads; `start` returns once every node is live (or the
+    /// worker per node plus the QoS dispatch stage. Compilation happens on
+    /// the worker threads; `start` returns once every node is live (or the
     /// first error is known).
     pub fn start(artifacts: ArtifactDir, config: ServerConfig) -> Result<ServerHandle> {
         let model = ModelDesc::qwen25_15b();
+        let registry = Arc::new(TenantRegistry::new(config.qos.tenants.clone())?);
         let nodes: Vec<NodeConfig> = if config.nodes.is_empty() {
             vec![NodeConfig::new(registry::cmp170hx(), config.fmad)]
         } else {
@@ -166,7 +219,8 @@ impl Server {
         };
 
         // One calibrated bench row per node: overlay rates, routing weight,
-        // and decode power all come from a single batched sweep.
+        // energy pricing, and decode power all come from a single batched
+        // sweep.
         let bench = LlamaBench { model, ..Default::default() };
         let cells: Vec<(DeviceSpec, FmadPolicy)> =
             nodes.iter().map(|n| (n.device.clone(), n.fmad)).collect();
@@ -189,29 +243,40 @@ impl Server {
 
         let queue_depth = config.queue_depth.max(1);
         let weights_bytes = model.weight_bytes(&quant::Q8_0);
-        let (ready_tx, ready_rx) = sync_channel::<Result<()>>(nodes.len());
-        let mut worker_txs: Vec<SyncSender<GenRequest>> = Vec::with_capacity(nodes.len());
+        let accounts = Arc::new(Mutex::new(TenantAccounts::new(&registry, Instant::now())));
+        let tenant_metrics: Arc<Vec<Mutex<Metrics>>> =
+            Arc::new((0..registry.len()).map(|_| Mutex::new(Metrics::new())).collect());
+        let queues: Arc<NodeQueues<GenRequest>> = Arc::new(NodeQueues::new(nodes.len()));
+        // Each worker reports its runtime's prefill window once validated;
+        // the dispatch stage prices energy estimates with it (one artifact
+        // set serves every node, so any node's answer is the fleet's).
+        let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(nodes.len());
+        let mut overlays: Vec<Overlay> = Vec::with_capacity(nodes.len());
         let mut workers = Vec::with_capacity(nodes.len());
         let mut node_metrics = Vec::with_capacity(nodes.len());
         let node_names: Vec<&'static str> = nodes.iter().map(|n| n.device.name).collect();
 
         for (i, (node, row)) in nodes.iter().zip(&rows).enumerate() {
-            let (wtx, wrx) = sync_channel::<GenRequest>(queue_depth);
-            worker_txs.push(wtx);
             let metrics = Arc::new(Mutex::new(Metrics::new()));
             node_metrics.push(Arc::clone(&metrics));
 
             let overlay = Overlay::from_row(row, &node.device);
+            overlays.push(overlay);
             let vram_bytes = node.device.mem.capacity_bytes;
             let artifacts = artifacts.clone();
             let ready = ready_tx.clone();
             let fleet = Arc::clone(&fleet);
+            let queues = Arc::clone(&queues);
+            let tenant_metrics = Arc::clone(&tenant_metrics);
+            let accounts = Arc::clone(&accounts);
             let policy = config.batch;
             let step_policy = config.step_policy;
+            let steal = config.qos.steal;
 
             let worker = std::thread::Builder::new()
                 .name(format!("cmphx-node{i}"))
                 .spawn(move || {
+                    let _alive = AliveGuard { queues: Arc::clone(&queues), node: i };
                     let runtime = match ModelRuntime::load(&artifacts) {
                         Ok(rt) => rt,
                         Err(e) => {
@@ -262,40 +327,61 @@ impl Server {
                         )));
                         return;
                     }
-                    let _ = ready.send(Ok(()));
+                    let _ = ready.send(Ok(runtime.config.prefill_t));
                     worker_loop(NodeWorker {
                         node: i,
                         runtime,
-                        rx: wrx,
+                        queues,
                         policy,
                         step_policy,
                         overlay,
                         pager,
                         metrics,
+                        tenant_metrics,
+                        accounts,
                         fleet,
+                        steal,
                     });
                 })?;
             workers.push(worker);
         }
         drop(ready_tx);
+        let mut prefill_t = 0usize;
         for _ in 0..nodes.len() {
-            ready_rx.recv()??;
+            match ready_rx.recv()? {
+                Ok(p) => prefill_t = p,
+                Err(e) => {
+                    // Wake and release any node that did come up — with the
+                    // queue set never closing, surviving workers would poll
+                    // an abandoned engine forever.
+                    queues.close();
+                    return Err(e);
+                }
+            }
         }
 
-        // Dispatch stage: the Fleet's routing policy IS the fan-out.
+        // QoS dispatch stage: tenant-fair admission, budget enforcement,
+        // then the Fleet's routing policy fans out to the node queues.
         let (tx, rx) = sync_channel::<GenRequest>(queue_depth);
-        let fleet_d = Arc::clone(&fleet);
-        let metrics_d: Vec<Arc<Mutex<Metrics>>> =
-            node_metrics.iter().map(Arc::clone).collect();
+        let dispatcher = Dispatcher {
+            rx,
+            queue: AdmissionQueue::new(
+                config.qos.enabled,
+                &registry.weights(),
+                config.qos.aging_pops,
+            ),
+            fleet: Arc::clone(&fleet),
+            queues: Arc::clone(&queues),
+            accounts,
+            node_metrics: node_metrics.iter().map(Arc::clone).collect(),
+            tenant_metrics: Arc::clone(&tenant_metrics),
+            overlays,
+            prefill_t,
+            node_depth: config.qos.node_queue_depth.max(1),
+        };
         let dispatcher = std::thread::Builder::new()
             .name("cmphx-dispatch".into())
-            .spawn(move || {
-                while let Ok(req) = rx.recv() {
-                    dispatch(req, &fleet_d, &worker_txs, &metrics_d);
-                }
-                // Dropping worker_txs here closes every node queue; the
-                // workers drain what was already routed, then exit.
-            })?;
+            .spawn(move || dispatcher.run())?;
 
         Ok(ServerHandle {
             tx: Some(tx),
@@ -303,64 +389,224 @@ impl Server {
             workers,
             node_names,
             node_metrics,
+            tenant_metrics,
+            registry,
+            fleet,
             next_id: std::sync::atomic::AtomicU64::new(1),
         })
     }
 }
 
-/// Route one request to a live worker, failing over past dead ones. A
-/// failed send marks the node unhealthy — it stays excluded from routing
-/// for the server's lifetime (the old behaviour left it in the fleet, so
-/// the router kept feeding a dead card while healthy ones idled) — and the
-/// request is rerouted to the next healthy node. Only when no healthy node
-/// remains is the request failed.
-fn dispatch(
-    req: GenRequest,
-    fleet: &Mutex<Fleet>,
-    worker_txs: &[SyncSender<GenRequest>],
-    metrics: &[Arc<Mutex<Metrics>>],
-) {
-    let mut req = req;
-    loop {
-        let idx = fleet.lock().unwrap().route();
-        let Err(SendError(failed)) = worker_txs[idx].send(req) else {
-            return;
-        };
-        let any_healthy = {
-            let mut f = fleet.lock().unwrap();
-            // the failed send never reached a worker: uncount it, then
-            // exclude the dead node
-            f.complete(idx);
-            f.mark_unhealthy(idx);
-            f.healthy_count() > 0
-        };
-        if any_healthy {
-            req = failed;
-            continue;
+/// The QoS dispatch stage: drains the submit channel into the per-tenant
+/// fair queue, pops in DRR order (rate-capped lanes defer), prices and
+/// charges energy against the routed node's overlay, and pushes onto the
+/// node's bounded work queue — failing over past dead workers like the
+/// old channel-based dispatch did.
+struct Dispatcher {
+    rx: Receiver<GenRequest>,
+    queue: AdmissionQueue<GenRequest>,
+    fleet: Arc<Mutex<Fleet>>,
+    queues: Arc<NodeQueues<GenRequest>>,
+    accounts: Arc<Mutex<TenantAccounts>>,
+    node_metrics: Vec<Arc<Mutex<Metrics>>>,
+    tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
+    overlays: Vec<Overlay>,
+    prefill_t: usize,
+    /// Per-node work-queue bound ([`QosConfig::node_queue_depth`]) —
+    /// shallow, so the backlog stays in the fair queue.
+    node_depth: usize,
+}
+
+impl Dispatcher {
+    fn run(mut self) {
+        let mut open = true;
+        loop {
+            // Ingest: block only when nothing is queued for dispatch.
+            if open && self.queue.is_empty() {
+                match self.rx.recv() {
+                    Ok(r) => self.enqueue(r),
+                    Err(_) => open = false,
+                }
+            }
+            if open {
+                loop {
+                    match self.rx.try_recv() {
+                        Ok(r) => self.enqueue(r),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if self.queue.is_empty() {
+                if !open {
+                    break;
+                }
+                continue;
+            }
+            // Pop-on-demand: defer the fair-queue decision until some node
+            // can actually take a request. Popping into full node queues
+            // would freeze tenant order inside per-node FIFOs and let a
+            // flood pre-stake every slot — exactly what WFQ exists to
+            // prevent.
+            if !self.queues.any_space(self.node_depth) {
+                if open {
+                    match self.rx.recv_timeout(Duration::from_millis(1)) {
+                        Ok(r) => self.enqueue(r),
+                        Err(RecvTimeoutError::Timeout) => {}
+                        Err(RecvTimeoutError::Disconnected) => open = false,
+                    }
+                } else {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                continue;
+            }
+            let now = Instant::now();
+            let popped = {
+                let acc = self.accounts.lock().unwrap();
+                self.queue.pop_eligible(|t, cost| acc.rate_ok(t, cost, now))
+            };
+            match popped {
+                Popped::Item(t, req) => self.dispatch(t, req, now),
+                Popped::Blocked(head_cost) => {
+                    // Every queued lane is rate-deferred: sleep until the
+                    // nearest bucket could cover the cheapest refused head
+                    // (a new arrival wakes us too). Pricing the real head
+                    // cost matters — a nominal cost would report "ready"
+                    // long before the bucket can pay, degenerating into a
+                    // busy poll.
+                    let hint = self
+                        .accounts
+                        .lock()
+                        .unwrap()
+                        .min_ready_in(head_cost, now)
+                        .clamp(Duration::from_millis(1), Duration::from_millis(50));
+                    if open {
+                        match self.rx.recv_timeout(hint) {
+                            Ok(r) => self.enqueue(r),
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => open = false,
+                        }
+                    } else {
+                        std::thread::sleep(hint);
+                    }
+                }
+                Popped::Empty => {}
+            }
         }
-        // Every worker is gone: fail the request instead of wedging.
-        let queue_s = failed.enqueued.elapsed().as_secs_f64();
-        metrics[idx].lock().unwrap().record_response(queue_s, 0, false);
-        let _ = failed.reply.send(empty_response(
-            failed.id,
-            idx,
+        // Every accepted request has been routed; the workers drain their
+        // queues, then see Closed.
+        self.queues.close();
+    }
+
+    fn enqueue(&mut self, r: GenRequest) {
+        // Service is measured in generated tokens — the unit the overlay
+        // prices and the DRR deficit counts.
+        self.queue.push(r.tenant, r.max_tokens as f64, r);
+    }
+
+    /// Route one request to a live worker, failing over past dead ones. A
+    /// bounced push marks the node unhealthy — it stays excluded until
+    /// [`ServerHandle::mark_healthy`] restores it — and the request is
+    /// rerouted to the next healthy node. Only when no healthy node
+    /// remains is the request failed.
+    fn dispatch(&mut self, t: TenantId, mut req: GenRequest, now: Instant) {
+        let mut idx = {
+            let mut f = self.fleet.lock().unwrap();
+            if f.healthy_count() == 0 {
+                drop(f);
+                self.shed(req, 0, "node worker unavailable", true);
+                return;
+            }
+            f.route()
+        };
+        let est_j = self.overlays[idx].estimate_j(self.prefill_t, req.max_tokens);
+        {
+            let mut acc = self.accounts.lock().unwrap();
+            if acc.try_charge_energy(t, est_j) == Admission::EnergyExhausted {
+                drop(acc);
+                self.fleet.lock().unwrap().complete(idx);
+                self.shed(req, idx, "tenant energy budget exhausted", false);
+                return;
+            }
+            acc.charge_rate(t, req.max_tokens as f64, now);
+        }
+        req.charged_j = est_j;
+        loop {
+            match self.queues.push_bounded(idx, req, self.node_depth) {
+                Ok(()) => return,
+                Err(bounced) => {
+                    req = bounced;
+                    let any_healthy = {
+                        let mut f = self.fleet.lock().unwrap();
+                        // the bounced push never reached a worker: uncount
+                        // it, then exclude the dead node
+                        f.complete(idx);
+                        f.mark_unhealthy(idx);
+                        f.healthy_count() > 0
+                    };
+                    if !any_healthy {
+                        // Every worker is gone: fail the request (and hand
+                        // its energy charge back) instead of wedging.
+                        self.accounts.lock().unwrap().settle_energy(t, req.charged_j, 0.0);
+                        self.shed(req, idx, "node worker unavailable", true);
+                        return;
+                    }
+                    idx = self.fleet.lock().unwrap().route();
+                }
+            }
+        }
+    }
+
+    /// Answer a request the QoS stage refused. Counted on the tenant's
+    /// rollup always; on the node's metrics only when a node was actually
+    /// involved (`on_node` — the dead-fleet path the old dispatch had).
+    fn shed(&self, req: GenRequest, node: usize, why: &str, on_node: bool) {
+        let queue_s = req.enqueued.elapsed().as_secs_f64();
+        if on_node {
+            self.node_metrics[node].lock().unwrap().record_response(queue_s, 0, false);
+        }
+        self.tenant_metrics[req.tenant.0]
+            .lock()
+            .unwrap()
+            .record_response(queue_s, 0, false);
+        let _ = req.reply.send(empty_response(
+            req.id,
+            req.tenant,
+            node,
             queue_s,
-            Some("node worker unavailable".into()),
+            Some(why.into()),
         ));
-        return;
     }
 }
 
 impl ServerHandle {
-    /// Submit a generation request; returns the response receiver. Errors
-    /// when `max_tokens` is zero (nothing to generate — the old path
-    /// silently produced one token and counted it in throughput), when the
-    /// queue is full (backpressure), or when the server is stopped.
+    /// Submit a generation request as the default tenant; returns the
+    /// response receiver. Errors when `max_tokens` is zero (nothing to
+    /// generate — the old path silently produced one token and counted it
+    /// in throughput), when the queue is full (backpressure), or when the
+    /// server is stopped.
     pub fn submit(
         &self,
         prompt: Vec<i32>,
         max_tokens: usize,
     ) -> Result<Receiver<GenResponse>> {
+        self.submit_as(TenantRegistry::DEFAULT, prompt, max_tokens)
+    }
+
+    /// [`ServerHandle::submit`], billed to an explicit tenant (fair-share
+    /// lane, rate and energy caps).
+    pub fn submit_as(
+        &self,
+        tenant: TenantId,
+        prompt: Vec<i32>,
+        max_tokens: usize,
+    ) -> Result<Receiver<GenResponse>> {
+        if !self.registry.contains(tenant) {
+            anyhow::bail!("unknown tenant id {}", tenant.0);
+        }
         if max_tokens == 0 {
             anyhow::bail!("max_tokens must be at least 1 (zero-token requests are rejected)");
         }
@@ -370,8 +616,10 @@ impl ServerHandle {
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let req = GenRequest {
             id,
+            tenant,
             prompt,
             max_tokens,
+            charged_j: 0.0,
             reply,
             enqueued: Instant::now(),
         };
@@ -383,12 +631,44 @@ impl ServerHandle {
         }
     }
 
+    /// Resolve a tenant name against the server's registry.
+    pub fn tenant_id(&self, name: &str) -> Option<TenantId> {
+        self.registry.id(name)
+    }
+
+    /// The server's tenant table.
+    pub fn registry(&self) -> &TenantRegistry {
+        &self.registry
+    }
+
+    /// Operator hook: restore a node to the routable set (the worker
+    /// recovered, or the card was replaced). The dispatch stage resumes
+    /// routing to it immediately.
+    pub fn mark_healthy(&self, node: usize) -> Result<()> {
+        let mut f = self.fleet.lock().unwrap();
+        if node >= f.nodes.len() {
+            anyhow::bail!("node {node} out of range");
+        }
+        f.mark_healthy(node);
+        Ok(())
+    }
+
+    /// Operator hook: drain a node out of the routable set.
+    pub fn mark_unhealthy(&self, node: usize) -> Result<()> {
+        let mut f = self.fleet.lock().unwrap();
+        if node >= f.nodes.len() {
+            anyhow::bail!("node {node} out of range");
+        }
+        f.mark_unhealthy(node);
+        Ok(())
+    }
+
     /// Fleet-wide metrics snapshot (all nodes merged).
     pub fn metrics(&self) -> Metrics {
         self.fleet_metrics().total()
     }
 
-    /// Per-node metrics snapshot.
+    /// Per-node and per-tenant metrics snapshot.
     pub fn fleet_metrics(&self) -> FleetMetrics {
         FleetMetrics {
             nodes: self
@@ -396,6 +676,12 @@ impl ServerHandle {
                 .iter()
                 .zip(&self.node_metrics)
                 .map(|(name, m)| (*name, m.lock().unwrap().clone()))
+                .collect(),
+            tenants: self
+                .registry
+                .iter()
+                .zip(self.tenant_metrics.iter())
+                .map(|((_, spec), m)| (spec.name.clone(), m.lock().unwrap().clone()))
                 .collect(),
         }
     }
@@ -416,7 +702,8 @@ impl ServerHandle {
         self.metrics()
     }
 
-    /// Like [`ServerHandle::shutdown`], keeping per-node attribution.
+    /// Like [`ServerHandle::shutdown`], keeping per-node and per-tenant
+    /// attribution.
     pub fn shutdown_fleet(mut self) -> FleetMetrics {
         self.stop();
         self.fleet_metrics()
@@ -433,13 +720,16 @@ impl Drop for ServerHandle {
 struct NodeWorker {
     node: usize,
     runtime: ModelRuntime,
-    rx: Receiver<GenRequest>,
+    queues: Arc<NodeQueues<GenRequest>>,
     policy: BatchPolicy,
     step_policy: StepPolicy,
     overlay: Overlay,
     pager: KvPager,
     metrics: Arc<Mutex<Metrics>>,
+    tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
+    accounts: Arc<Mutex<TenantAccounts>>,
     fleet: Arc<Mutex<Fleet>>,
+    steal: bool,
 }
 
 /// One in-flight sequence.
@@ -456,6 +746,9 @@ struct Live {
     sim_s: f64,
     sim_j: f64,
     preemptions: u64,
+    /// Resumed through the aging gate: shielded from re-eviction (victim
+    /// of last resort) so the park → resume → re-evict cycle terminates.
+    shielded: bool,
     failed: Option<String>,
     decode_started: Instant,
 }
@@ -488,6 +781,13 @@ struct Preempted {
     /// When the sequence was evicted — parked time is queueing time, and
     /// the client-observed latency must include it.
     parked_at: Instant,
+    /// Engine rounds this sequence has sat parked. At
+    /// [`BatchPolicy::aging_rounds`] the worker freezes new admissions
+    /// until the resume fits.
+    parked_rounds: u64,
+    /// Whether the aging gate already engaged for this parked stretch
+    /// (counted once into [`Metrics::aged_promotions`]).
+    aged: bool,
 }
 
 impl Preempted {
@@ -513,6 +813,7 @@ fn worker_loop(mut w: NodeWorker) {
     // Round-planning buffers reused across the engine's lifetime: planning
     // a round allocates nothing after the first.
     let mut views: Vec<SeqView> = Vec::new();
+    let mut shield: Vec<bool> = Vec::new();
     let mut plan: Vec<usize> = Vec::new();
     let mut stalled: Vec<usize> = Vec::new();
     let mut open = true;
@@ -537,6 +838,7 @@ fn worker_loop(mut w: NodeWorker) {
                             &parked.req,
                             "KV pool cannot hold the resumed sequence".into(),
                             queue_s,
+                            parked.sim_j,
                         );
                     } else {
                         waiting.push_front(parked);
@@ -552,12 +854,28 @@ fn worker_loop(mut w: NodeWorker) {
         // arrival loop pops a queued request into a terminal page-overload
         // reject that plan_admission exists to prevent.
         want = want.min(plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t)));
-        if open && want > 0 {
+        // --- waiting-queue aging gate: a parked sequence past its round
+        //     budget freezes new admissions, reserving every page a
+        //     retirement frees for the resume — new shorts can no longer
+        //     slip in ahead of the replay indefinitely. ---
+        let mut aged_parked = false;
+        for p in waiting.iter_mut() {
+            if p.parked_rounds >= w.policy.aging_rounds {
+                aged_parked = true;
+                if !p.aged {
+                    p.aged = true;
+                    w.metrics.lock().unwrap().aged_promotions += 1;
+                    w.tenant_metrics[p.req.tenant.0].lock().unwrap().aged_promotions += 1;
+                }
+            }
+        }
+        if open && want > 0 && !aged_parked {
             if live.is_empty() && waiting.is_empty() {
-                // Idle engine: block for the first arrival, then gather up
-                // to `max_wait` of company for the cold-start round.
-                match w.rx.recv() {
-                    Ok(req) => {
+                // Idle engine: block for the first arrival — stealing from
+                // the deepest peer queue when ours stays dry — then gather
+                // up to `max_wait` of company for the cold-start round.
+                match idle_pop(&w) {
+                    Some(req) => {
                         if admit(&mut w, req, &mut live) {
                             want -= 1;
                         }
@@ -567,41 +885,38 @@ fn worker_loop(mut w: NodeWorker) {
                             if now >= deadline {
                                 break;
                             }
-                            match w.rx.recv_timeout(deadline - now) {
-                                Ok(req) => {
+                            match w.queues.wait_pop(w.node, deadline - now) {
+                                WaitPop::Item(req) => {
                                     if admit(&mut w, req, &mut live) {
                                         want -= 1;
                                     }
                                 }
-                                Err(RecvTimeoutError::Timeout) => break,
-                                Err(RecvTimeoutError::Disconnected) => {
+                                WaitPop::TimedOut => break,
+                                WaitPop::Closed => {
                                     open = false;
                                     break;
                                 }
                             }
                         }
                     }
-                    Err(_) => open = false,
+                    None => open = false,
                 }
             } else {
                 // Busy engine: non-blocking joins — the continuous part.
                 while want > 0 {
-                    match w.rx.try_recv() {
-                        Ok(req) => {
+                    match w.queues.try_pop(w.node) {
+                        Some(req) => {
                             if admit(&mut w, req, &mut live) {
                                 want -= 1;
                             }
                         }
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
+                        None => break,
                     }
                 }
             }
         }
         if live.is_empty() {
+            age_parked(&mut waiting);
             continue;
         }
 
@@ -611,6 +926,7 @@ fn worker_loop(mut w: NodeWorker) {
         // a peer that would fit once they free.
         retire_done(&mut w, &mut live);
         if live.is_empty() {
+            age_parked(&mut waiting);
             continue;
         }
 
@@ -624,6 +940,8 @@ fn worker_loop(mut w: NodeWorker) {
                 generated: l.tokens.len(),
                 target: l.target(),
             }));
+            shield.clear();
+            shield.extend(live.iter().map(|l| l.shielded));
             plan_round_into(w.step_policy, &views, &mut plan);
             if plan.is_empty() {
                 break;
@@ -645,8 +963,10 @@ fn worker_loop(mut w: NodeWorker) {
             // Page pressure. The victim is the longest-remaining sequence
             // — evicting the work furthest from completion frees the most
             // future page demand and never throws away a nearly-done
-            // sequence.
-            let victim = plan_eviction(&views).expect("non-empty plan has an active seq");
+            // sequence. Aged resumes are shielded (victims of last
+            // resort), so the park → resume → re-evict cycle terminates.
+            let victim =
+                plan_eviction_shielded(&views, &shield).expect("non-empty plan has an active seq");
             if w.policy.preempt && live.len() > 1 {
                 let evicted = live.swap_remove(victim);
                 preempt(&mut w, evicted, &mut waiting);
@@ -697,7 +1017,56 @@ fn worker_loop(mut w: NodeWorker) {
         // --- retire finished sequences; their pages free for the next
         //     round's admissions and resumes ---
         retire_done(&mut w, &mut live);
+        age_parked(&mut waiting);
     }
+}
+
+/// One engine round passed with these sequences still parked.
+fn age_parked(waiting: &mut VecDeque<Preempted>) {
+    for p in waiting.iter_mut() {
+        p.parked_rounds += 1;
+    }
+}
+
+/// Block until a request arrives on this node's queue. While the queue is
+/// dry, an idle worker steals the newest request off the deepest peer
+/// queue (work stealing — the router's weights are estimates, and a
+/// request parked behind a deep queue should not wait out the guess).
+/// Returns `None` when the queue set is closed and nothing remains to
+/// steal.
+fn idle_pop(w: &NodeWorker) -> Option<GenRequest> {
+    loop {
+        if let Some(req) = w.queues.try_pop(w.node) {
+            return Some(req);
+        }
+        if w.steal {
+            if let Some(req) = steal(w) {
+                return Some(req);
+            }
+        }
+        match w.queues.wait_pop(w.node, Duration::from_millis(10)) {
+            WaitPop::Item(req) => return Some(req),
+            WaitPop::TimedOut => {}
+            WaitPop::Closed => {
+                if w.steal {
+                    if let Some(req) = steal(w) {
+                        return Some(req);
+                    }
+                }
+                return None;
+            }
+        }
+    }
+}
+
+/// Pull the newest request off the deepest peer queue and re-book it onto
+/// this node in the router's ledger.
+fn steal(w: &NodeWorker) -> Option<GenRequest> {
+    let (victim, req) = w.queues.steal_from(w.node)?;
+    w.fleet.lock().unwrap().reassign(victim, w.node);
+    w.metrics.lock().unwrap().steals += 1;
+    w.tenant_metrics[req.tenant.0].lock().unwrap().steals += 1;
+    Some(req)
 }
 
 /// Retire every done sequence in the live set; their pages free
@@ -725,8 +1094,10 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         // any other path is answered as an empty success without touching
         // decode (and without polluting throughput metrics with a token).
         w.metrics.lock().unwrap().record_response(queue_s, 0, true);
+        w.tenant_metrics[req.tenant.0].lock().unwrap().record_response(queue_s, 0, true);
+        w.accounts.lock().unwrap().settle_energy(req.tenant, req.charged_j, 0.0);
         w.fleet.lock().unwrap().complete(w.node);
-        let _ = req.reply.send(empty_response(req.id, w.node, queue_s, None));
+        let _ = req.reply.send(empty_response(req.id, req.tenant, w.node, queue_s, None));
         return false;
     }
     let budget = admission_budget(cfg.max_ctx, cfg.prefill_t);
@@ -738,7 +1109,7 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
             req.max_tokens,
             budget
         );
-        reject(w, &req, msg, queue_s);
+        reject(w, &req, msg, queue_s, 0.0);
         return false;
     }
     // The sequence must fit this card's page pool even running alone, or
@@ -750,11 +1121,11 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
             w.pager.blocks_for(final_positions),
             w.pager.capacity_blocks()
         );
-        reject(w, &req, msg, queue_s);
+        reject(w, &req, msg, queue_s, 0.0);
         return false;
     }
     let Some(kv) = w.pager.admit(cfg.prefill_t) else {
-        reject(w, &req, "no KV pages (overload)".into(), queue_s);
+        reject(w, &req, "no KV pages (overload)".into(), queue_s, 0.0);
         return false;
     };
     let t0 = Instant::now();
@@ -775,6 +1146,7 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
                 sim_s,
                 sim_j,
                 preemptions: 0,
+                shielded: false,
                 failed: None,
                 decode_started: Instant::now(),
             });
@@ -782,7 +1154,7 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         }
         Err(e) => {
             w.pager.release(kv).expect("releasing the just-admitted pages");
-            reject(w, &req, format!("prefill failed: {e}"), queue_s);
+            reject(w, &req, format!("prefill failed: {e}"), queue_s, 0.0);
             false
         }
     }
@@ -805,6 +1177,8 @@ fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
         sim_j: l.sim_j,
         preemptions: l.preemptions + 1,
         parked_at: Instant::now(),
+        parked_rounds: 0,
+        aged: false,
     });
 }
 
@@ -829,14 +1203,14 @@ fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
         Ok(s) => s,
         Err(e) => {
             w.pager.release(kv).expect("page accounting");
-            reject(w, &p.req, format!("resume prefill failed: {e}"), queue_s);
+            reject(w, &p.req, format!("resume prefill failed: {e}"), queue_s, p.sim_j);
             return Resumed::Failed;
         }
     };
     for &tok in p.tokens.iter().take(p.tokens.len() - 1) {
         if let Err(e) = w.runtime.decode(&mut state, tok) {
             w.pager.release(kv).expect("page accounting");
-            reject(w, &p.req, format!("resume replay failed: {e}"), queue_s);
+            reject(w, &p.req, format!("resume replay failed: {e}"), queue_s, p.sim_j);
             return Resumed::Failed;
         }
     }
@@ -864,6 +1238,9 @@ fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
         sim_s: p.sim_s + wasted_s,
         sim_j: p.sim_j + wasted_j,
         preemptions: p.preemptions,
+        // An aged resume re-entered through the admission freeze; shield
+        // it so the next page squeeze picks a different victim.
+        shielded: p.aged,
         failed: None,
         decode_started: Instant::now(),
     });
@@ -871,13 +1248,15 @@ fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
 }
 
 /// Retire one finished (or failed) sequence: release its pages, account
-/// metrics, tell the router, reply.
+/// metrics (node and tenant), settle the tenant's energy charge to
+/// actuals, tell the router, reply.
 fn retire(w: &mut NodeWorker, l: Live) {
     w.pager.release(l.kv).expect("page accounting");
     let decode_s = l.decode_s + l.decode_started.elapsed().as_secs_f64();
     let ok = l.failed.is_none();
     let resp = GenResponse {
         id: l.req.id,
+        tenant: l.req.tenant,
         tokens: l.tokens,
         error: l.failed,
         queue_s: l.queue_s,
@@ -895,24 +1274,47 @@ fn retire(w: &mut NodeWorker, l: Live) {
         m.simulated_energy_j += l.sim_j;
         m.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
+    {
+        let mut tm = w.tenant_metrics[l.req.tenant.0].lock().unwrap();
+        tm.simulated_device_s += l.sim_s;
+        tm.simulated_energy_j += l.sim_j;
+        tm.record_response(resp.latency_s(), resp.tokens.len(), ok);
+    }
+    w.accounts.lock().unwrap().settle_energy(l.req.tenant, l.req.charged_j, l.sim_j);
     w.fleet.lock().unwrap().complete(w.node);
     // dropped receiver = cancelled; ignore send failure
     let _ = l.req.reply.send(resp);
 }
 
 /// Reply with a terminal error for a request that holds no pages.
-fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64) {
+/// `actual_j` is whatever simulated energy the request did burn before
+/// failing (zero for never-admitted requests) — the tenant's account is
+/// settled to it.
+fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64, actual_j: f64) {
     w.metrics.lock().unwrap().record_response(queue_s, 0, false);
+    {
+        let mut tm = w.tenant_metrics[req.tenant.0].lock().unwrap();
+        tm.simulated_energy_j += actual_j;
+        tm.record_response(queue_s, 0, false);
+    }
+    w.accounts.lock().unwrap().settle_energy(req.tenant, req.charged_j, actual_j);
     w.fleet.lock().unwrap().complete(w.node);
-    let _ = req.reply.send(empty_response(req.id, w.node, queue_s, Some(error)));
+    let _ = req.reply.send(empty_response(req.id, req.tenant, w.node, queue_s, Some(error)));
 }
 
 /// A terminal no-tokens reply (a rejection, or a zero-token empty
 /// success) — the one place the "nothing was generated" response shape
 /// lives.
-fn empty_response(id: u64, node: usize, queue_s: f64, error: Option<String>) -> GenResponse {
+fn empty_response(
+    id: u64,
+    tenant: TenantId,
+    node: usize,
+    queue_s: f64,
+    error: Option<String>,
+) -> GenResponse {
     GenResponse {
         id,
+        tenant,
         tokens: vec![],
         error,
         queue_s,
@@ -927,6 +1329,7 @@ fn empty_response(id: u64, node: usize, queue_s: f64, error: Option<String>) -> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::qos::TenantSpec;
 
     fn stub_handle(tx: SyncSender<GenRequest>) -> ServerHandle {
         ServerHandle {
@@ -935,6 +1338,9 @@ mod tests {
             workers: Vec::new(),
             node_names: vec!["stub"],
             node_metrics: vec![Arc::new(Mutex::new(Metrics::new()))],
+            tenant_metrics: Arc::new(vec![Mutex::new(Metrics::new())]),
+            registry: Arc::new(TenantRegistry::new(vec![]).unwrap()),
+            fleet: Arc::new(Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin))),
             next_id: std::sync::atomic::AtomicU64::new(1),
         }
     }
@@ -943,12 +1349,44 @@ mod tests {
         let (reply, rx) = std::sync::mpsc::channel();
         let req = GenRequest {
             id,
+            tenant: TenantRegistry::DEFAULT,
             prompt: vec![1, 2, 3],
             max_tokens: 2,
+            charged_j: 0.0,
             reply,
             enqueued: Instant::now(),
         };
         (req, rx)
+    }
+
+    fn test_overlay() -> Overlay {
+        Overlay {
+            prefill_s_per_token: 1e-3,
+            decode_s_per_token: 2e-3,
+            prefill_w: 100.0,
+            decode_w: 50.0,
+        }
+    }
+
+    /// A dispatcher over stub queues (no workers), for exercising the
+    /// routing/shedding logic directly.
+    fn stub_dispatcher(nodes: usize, tenants: Vec<TenantSpec>) -> Dispatcher {
+        let registry = TenantRegistry::new(tenants).unwrap();
+        let (_tx, rx) = sync_channel::<GenRequest>(4);
+        Dispatcher {
+            rx,
+            queue: AdmissionQueue::new(true, &registry.weights(), 512),
+            fleet: Arc::new(Mutex::new(Fleet::uniform(nodes, 1.0, RoutePolicy::RoundRobin))),
+            queues: Arc::new(NodeQueues::new(nodes)),
+            accounts: Arc::new(Mutex::new(TenantAccounts::new(&registry, Instant::now()))),
+            node_metrics: (0..nodes).map(|_| Arc::new(Mutex::new(Metrics::new()))).collect(),
+            tenant_metrics: Arc::new(
+                (0..registry.len()).map(|_| Mutex::new(Metrics::new())).collect(),
+            ),
+            overlays: vec![test_overlay(); nodes],
+            prefill_t: 16,
+            node_depth: 8,
+        }
     }
 
     #[test]
@@ -964,6 +1402,22 @@ mod tests {
         // a normal request still flows
         let _reply = handle.submit(vec![1, 2], 3).unwrap();
         assert_eq!(rx.try_recv().unwrap().max_tokens, 3);
+    }
+
+    #[test]
+    fn submit_as_rejects_unknown_tenants() {
+        let (tx, rx) = sync_channel::<GenRequest>(4);
+        let handle = stub_handle(tx);
+        let err = handle
+            .submit_as(TenantId(7), vec![1], 2)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown tenant"), "{err}");
+        assert!(rx.try_recv().is_err());
+        // the default tenant id always resolves
+        assert_eq!(handle.tenant_id("default"), Some(TenantRegistry::DEFAULT));
+        let _reply = handle.submit_as(TenantRegistry::DEFAULT, vec![1], 2).unwrap();
+        assert_eq!(rx.try_recv().unwrap().tenant, TenantRegistry::DEFAULT);
     }
 
     #[test]
@@ -985,28 +1439,21 @@ mod tests {
 
     #[test]
     fn dispatch_reroutes_off_dead_workers_and_excludes_them() {
-        // Node 0's worker is torn down (its queue receiver dropped);
-        // node 1 is alive.
-        let fleet = Mutex::new(Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin));
-        let (tx0, rx0) = sync_channel::<GenRequest>(8);
-        let (tx1, rx1) = sync_channel::<GenRequest>(8);
-        drop(rx0);
-        let txs = vec![tx0, tx1];
-        let metrics = vec![
-            Arc::new(Mutex::new(Metrics::new())),
-            Arc::new(Mutex::new(Metrics::new())),
-        ];
-        // Round-robin picks node 0 first; the failed send must mark it
+        // Node 0's worker is gone (liveness flag cleared by its drop
+        // guard); node 1 is alive.
+        let mut d = stub_dispatcher(2, vec![]);
+        d.queues.mark_dead(0);
+        // Round-robin picks node 0 first; the bounced push must mark it
         // unhealthy and reroute the same request to node 1 (regression:
         // the request was failed and the dead node kept taking traffic).
         let (req, reply) = dummy_request(1);
-        dispatch(req, &fleet, &txs, &metrics);
-        assert_eq!(rx1.try_recv().unwrap().id, 1, "request must be rerouted");
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.try_pop(1).unwrap().id, 1, "request must be rerouted");
         assert!(reply.try_recv().is_err(), "request must not be failed");
         {
-            let f = fleet.lock().unwrap();
+            let f = d.fleet.lock().unwrap();
             assert_eq!(f.healthy_count(), 1);
-            assert_eq!(f.nodes[0].outstanding, 0, "failed send must be uncounted");
+            assert_eq!(f.nodes[0].outstanding, 0, "bounced push must be uncounted");
             assert_eq!(f.nodes[1].outstanding, 1);
         }
         // The dead node stays excluded: every later request lands on the
@@ -1014,27 +1461,83 @@ mod tests {
         let mut replies = Vec::new();
         for id in 2..6 {
             let (req, reply) = dummy_request(id);
-            dispatch(req, &fleet, &txs, &metrics);
+            d.dispatch(req.tenant, req, Instant::now());
             replies.push(reply);
         }
-        let got: Vec<u64> = rx1.try_iter().map(|r| r.id).collect();
+        let mut got = Vec::new();
+        while let Some(r) = d.queues.try_pop(1) {
+            got.push(r.id);
+        }
         assert_eq!(got, vec![2, 3, 4, 5]);
-        assert_eq!(fleet.lock().unwrap().nodes[0].assigned, 1);
+        // the bounced first attempt stays in node 0's cumulative history
+        assert_eq!(d.fleet.lock().unwrap().nodes[0].assigned, 1);
         assert!(replies.iter().all(|r| r.try_recv().is_err()));
     }
 
     #[test]
     fn dispatch_fails_the_request_only_when_no_healthy_node_remains() {
-        let fleet = Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin));
-        let (tx0, rx0) = sync_channel::<GenRequest>(1);
-        drop(rx0);
-        let metrics = vec![Arc::new(Mutex::new(Metrics::new()))];
+        let mut d = stub_dispatcher(1, vec![]);
+        d.queues.mark_dead(0);
         let (req, reply) = dummy_request(9);
-        dispatch(req, &fleet, &[tx0], &metrics);
+        d.dispatch(req.tenant, req, Instant::now());
         let resp = reply.try_recv().unwrap();
         assert!(!resp.ok());
         assert!(resp.error.as_deref().unwrap().contains("unavailable"));
-        assert_eq!(fleet.lock().unwrap().healthy_count(), 0);
-        assert_eq!(metrics[0].lock().unwrap().errors, 1);
+        assert_eq!(d.fleet.lock().unwrap().healthy_count(), 0);
+        assert_eq!(d.node_metrics[0].lock().unwrap().errors, 1);
+        assert_eq!(d.tenant_metrics[0].lock().unwrap().errors, 1);
+        // a recovered fleet serves again once the operator flips it back
+        d.queues = Arc::new(NodeQueues::new(1));
+        d.fleet.lock().unwrap().mark_healthy(0);
+        let (req, reply) = dummy_request(10);
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.try_pop(0).unwrap().id, 10);
+        assert!(reply.try_recv().is_err(), "served, not failed");
+    }
+
+    #[test]
+    fn dispatch_sheds_requests_past_the_tenant_energy_budget() {
+        // A 1 J budget covers nothing at the stub overlay's rates: the
+        // request must be shed with a terminal error, charged nothing,
+        // counted on the tenant (not the node), and the node uncounted.
+        let mut capped = TenantSpec::new("capped", 1.0);
+        capped.energy_budget_j = Some(1.0);
+        let mut d = stub_dispatcher(1, vec![capped]);
+        let t = TenantId(1);
+        let (mut req, reply) = dummy_request(1);
+        req.tenant = t;
+        req.max_tokens = 100;
+        d.dispatch(t, req, Instant::now());
+        let resp = reply.try_recv().unwrap();
+        assert!(!resp.ok());
+        assert!(resp.error.as_deref().unwrap().contains("energy budget"), "{resp:?}");
+        assert_eq!(resp.tenant, t);
+        assert_eq!(d.queues.len(0), 0, "nothing may reach the worker");
+        assert_eq!(d.fleet.lock().unwrap().nodes[0].outstanding, 0);
+        assert_eq!(d.tenant_metrics[1].lock().unwrap().errors, 1);
+        assert_eq!(d.node_metrics[0].lock().unwrap().errors, 0);
+        assert_eq!(d.accounts.lock().unwrap().energy_spent(t), 0.0);
+        // an uncapped tenant still flows
+        let (req, reply) = dummy_request(2);
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.try_pop(0).unwrap().id, 2);
+        assert!(reply.try_recv().is_err());
+    }
+
+    #[test]
+    fn dispatch_charges_the_estimate_to_the_tenant_account() {
+        let mut capped = TenantSpec::new("capped", 1.0);
+        capped.energy_budget_j = Some(1e6);
+        let mut d = stub_dispatcher(1, vec![capped]);
+        let t = TenantId(1);
+        let (mut req, _reply) = dummy_request(1);
+        req.tenant = t;
+        req.max_tokens = 10;
+        d.dispatch(t, req, Instant::now());
+        let est = test_overlay().estimate_j(16, 10);
+        let spent = d.accounts.lock().unwrap().energy_spent(t);
+        assert!((spent - est).abs() < 1e-12, "{spent} vs {est}");
+        let queued = d.queues.try_pop(0).unwrap();
+        assert!((queued.charged_j - est).abs() < 1e-12);
     }
 }

@@ -54,6 +54,7 @@ pub mod llm;
 pub mod market;
 pub mod memhier;
 pub mod power;
+pub mod qos;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -1,0 +1,252 @@
+//! Per-tenant admission budgets: token-rate leaky buckets and lifetime
+//! energy accounts.
+//!
+//! Rates are enforced at the dispatch stage *before* a request is routed:
+//! a tenant over its sustained tokens/s cap is **deferred** (its WFQ lane
+//! waits for the bucket to refill), while a tenant past its energy budget
+//! is **shed** (the request is answered with a terminal error — energy is
+//! a lifetime contract, not a rate). Energy is priced with the routed
+//! node's calibrated time+energy overlay: a request is charged its
+//! *estimated* joules (one prefill window plus `max_tokens` decode steps
+//! at that card's rates) when dispatched, and the worker settles the
+//! account to the actually-simulated joules at retire time, so long-run
+//! spend tracks the overlay, not the estimate.
+
+use std::time::{Duration, Instant};
+
+use super::tenant::{TenantId, TenantRegistry};
+
+/// Leaky-bucket rate limiter over generated-token cost. The level may go
+/// negative (a single request larger than one second of rate is admitted
+/// when the bucket is full and paid back as debt), which enforces the
+/// sustained rate without permanently blocking big requests.
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate: f64,
+    burst: f64,
+    level: f64,
+    last: Instant,
+}
+
+impl TokenBucket {
+    /// A bucket sustaining `rate` tokens/s with one second of burst.
+    pub fn new(rate: f64, now: Instant) -> Self {
+        let burst = rate.max(1.0);
+        TokenBucket { rate, burst, level: burst, last: now }
+    }
+
+    fn level_at(&self, now: Instant) -> f64 {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        (self.level + dt * self.rate).min(self.burst)
+    }
+
+    /// Would a `cost`-token request pass right now? Does not charge.
+    pub fn check(&self, cost: f64, now: Instant) -> bool {
+        self.level_at(now) >= cost.min(self.burst)
+    }
+
+    /// Charge `cost` tokens (callers [`TokenBucket::check`] first; the
+    /// charge itself is unconditional so check-then-charge stays atomic
+    /// under the caller's lock).
+    pub fn charge(&mut self, cost: f64, now: Instant) {
+        self.level = self.level_at(now) - cost;
+        self.last = now;
+    }
+
+    /// How long until a `cost`-token request would pass.
+    pub fn ready_in(&self, cost: f64, now: Instant) -> Duration {
+        let need = cost.min(self.burst) - self.level_at(now);
+        if need <= 0.0 {
+            Duration::ZERO
+        } else {
+            Duration::from_secs_f64(need / self.rate)
+        }
+    }
+}
+
+/// Why a request may not dispatch right now.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Admission {
+    Granted,
+    /// Over the token-rate cap; retry after roughly this long.
+    RateLimited(Duration),
+    /// Lifetime energy budget exhausted — terminal.
+    EnergyExhausted,
+}
+
+#[derive(Clone, Debug)]
+struct AccountLane {
+    bucket: Option<TokenBucket>,
+    budget_j: Option<f64>,
+    spent_j: f64,
+}
+
+/// All tenants' budget state, indexed by [`TenantId`]. Shared between the
+/// dispatch stage (rate checks + estimated charges) and the node workers
+/// (actual-energy settlement) behind one mutex.
+#[derive(Clone, Debug)]
+pub struct TenantAccounts {
+    lanes: Vec<AccountLane>,
+}
+
+impl TenantAccounts {
+    pub fn new(registry: &TenantRegistry, now: Instant) -> Self {
+        TenantAccounts {
+            lanes: registry
+                .iter()
+                .map(|(_, s)| AccountLane {
+                    bucket: s.tok_s.map(|r| TokenBucket::new(r, now)),
+                    budget_j: s.energy_budget_j,
+                    spent_j: 0.0,
+                })
+                .collect(),
+        }
+    }
+
+    /// Is `t` under its token-rate cap for a `cost`-token request? Pure
+    /// check — the dispatch stage probes WFQ lane heads with this and only
+    /// [`TenantAccounts::charge_rate`]s the request it actually pops.
+    pub fn rate_ok(&self, t: TenantId, cost: f64, now: Instant) -> bool {
+        self.lanes[t.0].bucket.as_ref().map_or(true, |b| b.check(cost, now))
+    }
+
+    pub fn charge_rate(&mut self, t: TenantId, cost: f64, now: Instant) {
+        if let Some(b) = self.lanes[t.0].bucket.as_mut() {
+            b.charge(cost, now);
+        }
+    }
+
+    /// Shortest wait until any rate-limited tenant could pass a
+    /// `cost`-token request — the dispatch stage's sleep hint when every
+    /// queued lane is deferred.
+    pub fn min_ready_in(&self, cost: f64, now: Instant) -> Duration {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.bucket.as_ref().map(|b| b.ready_in(cost, now)))
+            .min()
+            .unwrap_or(Duration::ZERO)
+    }
+
+    /// Charge an estimated dispatch cost against `t`'s energy budget.
+    /// Over-budget requests are refused (nothing is charged).
+    pub fn try_charge_energy(&mut self, t: TenantId, est_j: f64) -> Admission {
+        let lane = &mut self.lanes[t.0];
+        if let Some(budget) = lane.budget_j {
+            if lane.spent_j + est_j > budget {
+                return Admission::EnergyExhausted;
+            }
+        }
+        lane.spent_j += est_j;
+        Admission::Granted
+    }
+
+    /// Replace a request's estimated charge with its actually-simulated
+    /// joules once the worker retires it.
+    pub fn settle_energy(&mut self, t: TenantId, charged_est_j: f64, actual_j: f64) {
+        let lane = &mut self.lanes[t.0];
+        lane.spent_j += actual_j - charged_est_j;
+    }
+
+    pub fn energy_spent(&self, t: TenantId) -> f64 {
+        self.lanes[t.0].spent_j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::tenant::TenantSpec;
+
+    fn registry(specs: Vec<TenantSpec>) -> TenantRegistry {
+        TenantRegistry::new(specs).unwrap()
+    }
+
+    #[test]
+    fn bucket_allows_burst_then_enforces_rate() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, t0);
+        // a full bucket passes one second of tokens immediately
+        assert!(b.check(10.0, t0));
+        b.charge(10.0, t0);
+        assert!(!b.check(1.0, t0), "drained bucket must defer");
+        // 500 ms refills 5 tokens at 10 tok/s
+        let t1 = t0 + Duration::from_millis(500);
+        assert!(b.check(5.0, t1));
+        assert!(!b.check(6.0, t1));
+        let wait = b.ready_in(6.0, t1);
+        assert!(wait > Duration::from_millis(90) && wait < Duration::from_millis(110), "{wait:?}");
+    }
+
+    #[test]
+    fn oversized_requests_pass_on_a_full_bucket_and_leave_debt() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(4.0, t0);
+        // cost 12 > burst 4: admitted when full, paid back as debt
+        assert!(b.check(12.0, t0));
+        b.charge(12.0, t0);
+        // two seconds later the debt (-8) has only refilled to 0
+        let t2 = t0 + Duration::from_secs(2);
+        assert!(!b.check(1.0, t2));
+        let t3 = t0 + Duration::from_secs(3);
+        assert!(b.check(4.0, t3));
+    }
+
+    #[test]
+    fn uncapped_tenants_always_pass_rate_checks() {
+        let now = Instant::now();
+        let acc = TenantAccounts::new(&registry(vec![]), now);
+        assert!(acc.rate_ok(TenantRegistry::DEFAULT, 1e9, now));
+        assert_eq!(acc.min_ready_in(8.0, now), Duration::ZERO);
+    }
+
+    #[test]
+    fn energy_budget_sheds_only_past_the_cap() {
+        let now = Instant::now();
+        let mut spec = TenantSpec::new("capped", 1.0);
+        spec.energy_budget_j = Some(100.0);
+        let reg = registry(vec![spec]);
+        let t = reg.id("capped").unwrap();
+        let mut acc = TenantAccounts::new(&reg, now);
+        assert_eq!(acc.try_charge_energy(t, 60.0), Admission::Granted);
+        assert_eq!(acc.try_charge_energy(t, 60.0), Admission::EnergyExhausted);
+        assert_eq!(acc.energy_spent(t), 60.0, "refused charges must not accrue");
+        assert_eq!(acc.try_charge_energy(t, 40.0), Admission::Granted);
+        // the default tenant is uncapped
+        assert_eq!(
+            acc.try_charge_energy(TenantRegistry::DEFAULT, 1e12),
+            Admission::Granted
+        );
+    }
+
+    #[test]
+    fn settlement_replaces_the_estimate_with_actuals() {
+        let now = Instant::now();
+        let mut spec = TenantSpec::new("capped", 1.0);
+        spec.energy_budget_j = Some(100.0);
+        let reg = registry(vec![spec]);
+        let t = reg.id("capped").unwrap();
+        let mut acc = TenantAccounts::new(&reg, now);
+        assert_eq!(acc.try_charge_energy(t, 90.0), Admission::Granted);
+        // the request actually cost 30 J — 60 J of headroom comes back
+        acc.settle_energy(t, 90.0, 30.0);
+        assert!((acc.energy_spent(t) - 30.0).abs() < 1e-12);
+        assert_eq!(acc.try_charge_energy(t, 60.0), Admission::Granted);
+    }
+
+    #[test]
+    fn rate_check_and_charge_are_per_tenant() {
+        let now = Instant::now();
+        let mut metered = TenantSpec::new("metered", 1.0);
+        metered.tok_s = Some(8.0);
+        let reg = registry(vec![metered, TenantSpec::new("free", 1.0)]);
+        let m = reg.id("metered").unwrap();
+        let f = reg.id("free").unwrap();
+        let mut acc = TenantAccounts::new(&reg, now);
+        assert!(acc.rate_ok(m, 8.0, now));
+        acc.charge_rate(m, 8.0, now);
+        assert!(!acc.rate_ok(m, 8.0, now), "metered lane must defer");
+        assert!(acc.rate_ok(f, 800.0, now), "uncapped lane must not");
+        let hint = acc.min_ready_in(8.0, now);
+        assert!(hint > Duration::ZERO && hint <= Duration::from_secs(1), "{hint:?}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Multi-tenant QoS for the serving fleet: weighted fair queueing, aging,
+//! per-tenant budgets, and cross-node work stealing.
+//!
+//! The paper's recycled-card pitch (§5/§6.2) is *cheap shared capacity*:
+//! many clients on a few weak boards. That setting dies by flooding — one
+//! client saturating a FIFO admission queue ruins every other client's
+//! latency — so this layer sits between [`ServerHandle::submit`] and the
+//! per-card workers and owns the sharing policy:
+//!
+//! - [`tenant`] — the tenant registry: named identities with a fair-share
+//!   weight and optional token-rate / simulated-energy caps
+//!   ([`TenantSpec`]), resolved from the [`TenantId`] every
+//!   [`crate::coordinator::GenRequest`] carries.
+//! - [`wfq`] — deficit-round-robin weighted fair queueing over per-tenant
+//!   lanes, with an aging promoter bounding worst-case wait; the plain
+//!   FIFO it replaced survives as the ablation arm of
+//!   [`wfq::AdmissionQueue`].
+//! - [`budget`] — leaky-bucket token rates (over-rate lanes defer) and
+//!   lifetime energy accounts priced via the per-card calibrated overlay
+//!   (estimated joules charged at dispatch, settled to actuals at retire).
+//! - [`queues`] — bounded per-node work queues replacing the dispatch
+//!   channels, so an idle worker can steal the newest request from the
+//!   deepest peer queue when routing guessed wrong.
+//!
+//! The worker-side half of the policy (the preemption waiting queue's
+//! aging gate and eviction shield) lives with the engine in
+//! [`crate::coordinator::server`]; the knob is
+//! [`crate::coordinator::BatchPolicy::aging_rounds`].
+//!
+//! [`ServerHandle::submit`]: crate::coordinator::ServerHandle::submit
+
+pub mod budget;
+pub mod queues;
+pub mod tenant;
+pub mod wfq;
+
+pub use budget::{Admission, TenantAccounts, TokenBucket};
+pub use queues::{NodeQueues, WaitPop};
+pub use tenant::{TenantId, TenantRegistry, TenantSpec};
+pub use wfq::{AdmissionQueue, Popped, WfqQueue};
+
+/// QoS policy for one server: which tenants exist and which mechanisms
+/// are armed. Default is QoS on with only the default tenant — a single
+/// lane, behaviourally identical to the FIFO path it replaced.
+#[derive(Clone, Debug)]
+pub struct QosConfig {
+    /// Weighted fair queueing across tenant lanes. Off = the old FIFO
+    /// admission queue (the ablation baseline).
+    pub enabled: bool,
+    /// Cross-node work stealing by idle workers.
+    pub steal: bool,
+    /// WFQ aging promoter: a queued request that has waited this many
+    /// pops is served next regardless of lane deficits. `0` degenerates
+    /// to global FIFO by arrival.
+    pub aging_pops: u64,
+    /// Bound of each node's work queue. Kept **shallow** on purpose: the
+    /// backlog must accumulate in the fair queue (where tenant order is
+    /// still fluid) rather than in per-node FIFOs (where it is frozen) —
+    /// the dispatch stage pops a request only when some node has a free
+    /// slot, so a deep flood cannot pre-stake node queues and nullify
+    /// WFQ. Floor 1.
+    pub node_queue_depth: usize,
+    /// Tenants beyond the implicit uncapped `default`.
+    pub tenants: Vec<TenantSpec>,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: true,
+            steal: true,
+            aging_pops: 512,
+            node_queue_depth: 2,
+            tenants: Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_fair_and_stealing_with_no_extra_tenants() {
+        let q = QosConfig::default();
+        assert!(q.enabled);
+        assert!(q.steal);
+        assert!(q.aging_pops > 0);
+        assert!(q.tenants.is_empty());
+    }
+}

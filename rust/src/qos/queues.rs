@@ -1,0 +1,334 @@
+//! Per-node work queues with cross-node stealing.
+//!
+//! The fleet engine's dispatch stage used to hand each worker a private
+//! mpsc channel — decide-once routing with no way to move a request once
+//! queued. These queues replace the channels with shared, bounded,
+//! lockable deques so an **idle** worker can pull the newest request off
+//! the deepest peer queue ([`NodeQueues::steal_from`]) when its own runs
+//! dry — capping tail latency when routing guessed wrong (the router's
+//! weights are calibrated estimates, not measurements). Stealing takes
+//! the *newest* entry (`pop_back`): the oldest waited longest behind its
+//! chosen node and is about to be served there; the newest gains the most
+//! from moving. A dead node's queue is still a valid steal source in the
+//! window before its owner's drop guard [`NodeQueues::drain_node`]s it —
+//! whatever is not rescued by then is dropped, so stranded clients fail
+//! fast (their reply channel closes) instead of hanging forever.
+//!
+//! Producers see the same backpressure the channels gave: a bounded push
+//! blocks while the target queue is at capacity, failing over only when
+//! the consumer is gone (its `alive` flag cleared by the worker's drop
+//! guard, the dispatch stage's dead-node signal).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Outcome of a blocking pop.
+#[derive(Debug, PartialEq)]
+pub enum WaitPop<T> {
+    Item(T),
+    TimedOut,
+    /// The queue set is closed and this node's queue is drained.
+    Closed,
+}
+
+struct Slot<T> {
+    q: Mutex<VecDeque<T>>,
+    cv: Condvar,
+    alive: AtomicBool,
+}
+
+/// One bounded queue per fleet node, plus liveness flags.
+pub struct NodeQueues<T> {
+    slots: Vec<Slot<T>>,
+    open: AtomicBool,
+}
+
+impl<T> NodeQueues<T> {
+    pub fn new(nodes: usize) -> Self {
+        assert!(nodes > 0, "a fleet has at least one node");
+        NodeQueues {
+            slots: (0..nodes)
+                .map(|_| Slot {
+                    q: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                    alive: AtomicBool::new(true),
+                })
+                .collect(),
+            open: AtomicBool::new(true),
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open.load(Ordering::Acquire)
+    }
+
+    pub fn alive(&self, node: usize) -> bool {
+        self.slots[node].alive.load(Ordering::Acquire)
+    }
+
+    /// The worker's drop guard calls this; the dispatch stage treats a
+    /// dead node like the old channels' failed send (reroute + exclude).
+    pub fn mark_dead(&self, node: usize) {
+        self.slots[node].alive.store(false, Ordering::Release);
+        self.slots[node].cv.notify_all();
+    }
+
+    pub fn len(&self, node: usize) -> usize {
+        self.slots[node].q.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.q.lock().unwrap().is_empty())
+    }
+
+    /// Stop accepting work and wake every waiter; workers drain what was
+    /// already queued, then see [`WaitPop::Closed`].
+    pub fn close(&self) {
+        self.open.store(false, Ordering::Release);
+        for s in &self.slots {
+            s.cv.notify_all();
+        }
+    }
+
+    /// Blocking bounded push — the dispatch stage's send. Waits while the
+    /// queue holds `cap` entries (backpressure propagates to the bounded
+    /// submit channel), returning the request when the node has died so
+    /// the caller can reroute it.
+    pub fn push_bounded(&self, node: usize, item: T, cap: usize) -> Result<(), T> {
+        let slot = &self.slots[node];
+        let mut q = slot.q.lock().unwrap();
+        loop {
+            if !slot.alive.load(Ordering::Acquire) {
+                return Err(item);
+            }
+            if q.len() < cap.max(1) {
+                q.push_back(item);
+                slot.cv.notify_all();
+                return Ok(());
+            }
+            // Re-check liveness periodically: a worker that dies while we
+            // wait would otherwise wedge the dispatch stage forever.
+            let (guard, _) = slot
+                .cv
+                .wait_timeout(q, Duration::from_millis(10))
+                .unwrap();
+            q = guard;
+        }
+    }
+
+    /// Non-blocking pop from the node's own queue.
+    pub fn try_pop(&self, node: usize) -> Option<T> {
+        let slot = &self.slots[node];
+        let mut q = slot.q.lock().unwrap();
+        let item = q.pop_front();
+        if item.is_some() {
+            // wake a producer blocked on the bound
+            slot.cv.notify_all();
+        }
+        item
+    }
+
+    /// Blocking pop from the node's own queue, up to `timeout`.
+    pub fn wait_pop(&self, node: usize, timeout: Duration) -> WaitPop<T> {
+        let slot = &self.slots[node];
+        let deadline = Instant::now() + timeout;
+        let mut q = slot.q.lock().unwrap();
+        loop {
+            if let Some(item) = q.pop_front() {
+                slot.cv.notify_all();
+                return WaitPop::Item(item);
+            }
+            if !self.is_open() {
+                return WaitPop::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return WaitPop::TimedOut;
+            }
+            let (guard, _) = slot.cv.wait_timeout(q, deadline - now).unwrap();
+            q = guard;
+        }
+    }
+
+    /// Remove and return everything queued on one node — the worker-death
+    /// path. The caller usually just drops the result: each orphaned
+    /// request's reply channel closes with it, so waiting clients error
+    /// out immediately (the old mpsc channels' behaviour) instead of
+    /// blocking until server shutdown.
+    pub fn drain_node(&self, node: usize) -> Vec<T> {
+        let slot = &self.slots[node];
+        let mut q = slot.q.lock().unwrap();
+        let drained: Vec<T> = q.drain(..).collect();
+        slot.cv.notify_all();
+        drained
+    }
+
+    /// Whether any live node's queue has a free slot under `cap` — the
+    /// dispatch stage's pop-on-demand gate (defer the fair-queue decision
+    /// until a node can actually take the request). A fully-dead queue
+    /// set reports space so the dispatch stage reaches its shedding path
+    /// instead of waiting forever.
+    pub fn any_space(&self, cap: usize) -> bool {
+        let mut any_alive = false;
+        for s in &self.slots {
+            if s.alive.load(Ordering::Acquire) {
+                any_alive = true;
+                if s.q.lock().unwrap().len() < cap.max(1) {
+                    return true;
+                }
+            }
+        }
+        !any_alive
+    }
+
+    /// Steal the newest entry from the deepest peer queue (ties to the
+    /// lowest index). Returns `(victim_node, item)`. Peers are scanned by
+    /// momentary depth; dead nodes' queues are eligible victims (rescue).
+    pub fn steal_from(&self, thief: usize) -> Option<(usize, T)> {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i != thief)
+            .map(|(i, s)| (s.q.lock().unwrap().len(), i))
+            .filter(|&(len, _)| len > 0)
+            .max_by_key(|&(len, i)| (len, std::cmp::Reverse(i)))?
+            .1;
+        let slot = &self.slots[victim];
+        let mut q = slot.q.lock().unwrap();
+        // the queue may have drained between the scan and this lock
+        let item = q.pop_back()?;
+        slot.cv.notify_all();
+        Some((victim, item))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn push_pop_roundtrip_per_node() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        q.push_bounded(0, 1, 8).unwrap();
+        q.push_bounded(0, 2, 8).unwrap();
+        q.push_bounded(1, 9, 8).unwrap();
+        assert_eq!(q.len(0), 2);
+        assert_eq!(q.try_pop(0), Some(1), "own queue is FIFO");
+        assert_eq!(q.try_pop(1), Some(9));
+        assert_eq!(q.try_pop(1), None);
+    }
+
+    #[test]
+    fn steal_takes_the_newest_from_the_deepest_peer() {
+        let q: NodeQueues<u32> = NodeQueues::new(3);
+        for v in [1, 2] {
+            q.push_bounded(0, v, 8).unwrap();
+        }
+        for v in [10, 11, 12] {
+            q.push_bounded(2, v, 8).unwrap();
+        }
+        // node 1 idles; node 2 is deepest; the newest entry moves
+        assert_eq!(q.steal_from(1), Some((2, 12)));
+        // depths now tie at 2 — ties break to the lowest index
+        assert_eq!(q.steal_from(1), Some((0, 2)));
+        // a thief never steals from itself
+        q.push_bounded(1, 99, 8).unwrap();
+        assert_eq!(q.steal_from(0), Some((2, 11)));
+        assert_eq!(q.len(1), 1);
+    }
+
+    #[test]
+    fn steal_returns_none_when_peers_are_empty() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        q.push_bounded(0, 7, 8).unwrap();
+        assert_eq!(q.steal_from(0), None, "own work is not steal-able");
+        assert_eq!(q.steal_from(1), Some((0, 7)));
+        assert_eq!(q.steal_from(1), None);
+    }
+
+    #[test]
+    fn dead_nodes_reject_pushes_but_still_get_drained() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        q.push_bounded(0, 5, 8).unwrap();
+        q.mark_dead(0);
+        assert!(!q.alive(0));
+        assert_eq!(q.push_bounded(0, 6, 8), Err(6), "dead node bounces the push");
+        // the stranded entry is rescued by a stealing peer
+        assert_eq!(q.steal_from(1), Some((0, 5)));
+    }
+
+    #[test]
+    fn drain_node_empties_the_queue_and_returns_the_items() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        for v in [1, 2, 3] {
+            q.push_bounded(0, v, 8).unwrap();
+        }
+        q.mark_dead(0);
+        assert_eq!(q.drain_node(0), vec![1, 2, 3]);
+        assert_eq!(q.len(0), 0);
+        assert_eq!(q.steal_from(1), None, "nothing left to rescue");
+        assert_eq!(q.drain_node(0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn any_space_gates_on_live_queues_only() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        assert!(q.any_space(1));
+        q.push_bounded(0, 1, 2).unwrap();
+        q.push_bounded(1, 2, 2).unwrap();
+        assert!(!q.any_space(1), "both queues at the bound");
+        assert!(q.any_space(2));
+        q.mark_dead(1);
+        q.push_bounded(0, 3, 2).unwrap();
+        assert!(!q.any_space(2), "a dead node's queue is not space");
+        // fully dead: report space so the dispatcher reaches shedding
+        q.mark_dead(0);
+        assert!(q.any_space(2));
+    }
+
+    #[test]
+    fn bounded_push_blocks_until_a_pop_frees_a_slot() {
+        let q: Arc<NodeQueues<u32>> = Arc::new(NodeQueues::new(1));
+        q.push_bounded(0, 1, 1).unwrap();
+        let q2 = Arc::clone(&q);
+        let producer = std::thread::spawn(move || q2.push_bounded(0, 2, 1));
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(!producer.is_finished(), "push past the bound must block");
+        assert_eq!(q.try_pop(0), Some(1));
+        producer.join().unwrap().unwrap();
+        assert_eq!(q.try_pop(0), Some(2));
+    }
+
+    #[test]
+    fn wait_pop_times_out_then_sees_items_then_closure() {
+        let q: Arc<NodeQueues<u32>> = Arc::new(NodeQueues::new(1));
+        assert_eq!(q.wait_pop(0, Duration::from_millis(10)), WaitPop::TimedOut);
+        let q2 = Arc::clone(&q);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.push_bounded(0, 42, 8).unwrap();
+            q2.close();
+        });
+        assert_eq!(q.wait_pop(0, Duration::from_secs(5)), WaitPop::Item(42));
+        t.join().unwrap();
+        // closed and drained: no more blocking
+        assert_eq!(q.wait_pop(0, Duration::from_secs(5)), WaitPop::Closed);
+    }
+
+    #[test]
+    fn close_drains_queued_work_before_reporting_closed() {
+        let q: NodeQueues<u32> = NodeQueues::new(1);
+        q.push_bounded(0, 1, 8).unwrap();
+        q.close();
+        assert_eq!(q.wait_pop(0, Duration::from_millis(5)), WaitPop::Item(1));
+        assert_eq!(q.wait_pop(0, Duration::from_millis(5)), WaitPop::Closed);
+    }
+}

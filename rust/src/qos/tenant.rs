@@ -1,0 +1,239 @@
+//! Tenant identity and registry.
+//!
+//! The fleet's clients are **tenants**: named identities with a fair-share
+//! weight and optional hard caps (a sustained token rate, a lifetime
+//! simulated-energy budget priced via the per-card overlay). Every
+//! [`crate::coordinator::GenRequest`] carries a [`TenantId`]; the QoS
+//! dispatch stage resolves it against the [`TenantRegistry`] built at
+//! server start. Tenant 0 is always the **default** tenant (weight 1, no
+//! caps) so the single-client path needs no registration at all.
+
+use anyhow::{bail, Result};
+
+/// Index into the [`TenantRegistry`]. Stable for the server's lifetime.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub usize);
+
+/// One tenant's contract with the fleet.
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    pub name: String,
+    /// Fair-share weight for deficit-round-robin queueing (relative; a
+    /// weight-2 tenant gets twice the contended service of a weight-1
+    /// tenant). Must be finite and positive.
+    pub weight: f64,
+    /// Optional sustained admission rate, generated tokens per second.
+    /// Enforced at the dispatch stage with a leaky bucket; over-rate
+    /// tenants are *deferred* (their lane waits), not errored.
+    pub tok_s: Option<f64>,
+    /// Optional lifetime simulated-energy budget, joules, priced with the
+    /// routed node's calibrated overlay. Exhausted budgets are terminal:
+    /// further requests are shed with an error.
+    pub energy_budget_j: Option<f64>,
+}
+
+impl TenantSpec {
+    /// An uncapped tenant with the given fair-share weight.
+    pub fn new(name: impl Into<String>, weight: f64) -> Self {
+        TenantSpec {
+            name: name.into(),
+            weight,
+            tok_s: None,
+            energy_budget_j: None,
+        }
+    }
+
+    /// Parse the CLI form `name:weight[:tok_s][:joules]`. Empty optional
+    /// segments skip a cap: `burst:2::500` is weight 2, no rate cap, a
+    /// 500 J energy budget.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 2 || parts.len() > 4 {
+            bail!("tenant spec {s:?} is not name:weight[:tok_s][:joules]");
+        }
+        let name = parts[0].trim();
+        if name.is_empty() {
+            bail!("tenant spec {s:?} has an empty name");
+        }
+        let weight: f64 = parts[1]
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("tenant {name}: bad weight {:?}", parts[1]))?;
+        let optional = |i: usize, what: &str| -> Result<Option<f64>> {
+            match parts.get(i).map(|p| p.trim()) {
+                None | Some("") => Ok(None),
+                Some(v) => v
+                    .parse()
+                    .map(Some)
+                    .map_err(|_| anyhow::anyhow!("tenant {name}: bad {what} {v:?}")),
+            }
+        };
+        let spec = TenantSpec {
+            name: name.to_string(),
+            weight,
+            tok_s: optional(2, "tok_s")?,
+            energy_budget_j: optional(3, "joules")?,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.weight.is_finite() && self.weight > 0.0) {
+            bail!("tenant {}: weight must be finite and positive", self.name);
+        }
+        for (cap, what) in [(self.tok_s, "tok_s"), (self.energy_budget_j, "energy budget")] {
+            if let Some(v) = cap {
+                if !(v.is_finite() && v > 0.0) {
+                    bail!("tenant {}: {what} must be finite and positive", self.name);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The server's tenant table, fixed at start. Index 0 is always the
+/// default tenant; an explicit spec named `default` replaces its weight
+/// and caps rather than adding a second identity.
+#[derive(Clone, Debug)]
+pub struct TenantRegistry {
+    specs: Vec<TenantSpec>,
+}
+
+impl TenantRegistry {
+    /// The implicit tenant every un-attributed request belongs to.
+    pub const DEFAULT: TenantId = TenantId(0);
+
+    pub fn new(extra: Vec<TenantSpec>) -> Result<Self> {
+        let mut specs = vec![TenantSpec::new("default", 1.0)];
+        for spec in extra {
+            spec.validate()?;
+            if spec.name == "default" {
+                specs[0] = spec;
+            } else if specs.iter().any(|s| s.name == spec.name) {
+                bail!("duplicate tenant {:?}", spec.name);
+            } else {
+                specs.push(spec);
+            }
+        }
+        Ok(TenantRegistry { specs })
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // the default tenant always exists
+    }
+
+    pub fn id(&self, name: &str) -> Option<TenantId> {
+        self.specs.iter().position(|s| s.name == name).map(TenantId)
+    }
+
+    /// Spec lookup; panics on a foreign id (ids only come from this
+    /// registry).
+    pub fn spec(&self, t: TenantId) -> &TenantSpec {
+        &self.specs[t.0]
+    }
+
+    pub fn contains(&self, t: TenantId) -> bool {
+        t.0 < self.specs.len()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (TenantId, &TenantSpec)> {
+        self.specs.iter().enumerate().map(|(i, s)| (TenantId(i), s))
+    }
+
+    /// Per-tenant DRR weights, in id order.
+    pub fn weights(&self) -> Vec<f64> {
+        self.specs.iter().map(|s| s.weight).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_always_has_a_default_tenant() {
+        let r = TenantRegistry::new(vec![]).unwrap();
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.id("default"), Some(TenantRegistry::DEFAULT));
+        let d = r.spec(TenantRegistry::DEFAULT);
+        assert_eq!(d.weight, 1.0);
+        assert!(d.tok_s.is_none() && d.energy_budget_j.is_none());
+    }
+
+    #[test]
+    fn extra_tenants_register_after_the_default() {
+        let r = TenantRegistry::new(vec![
+            TenantSpec::new("light", 1.0),
+            TenantSpec::new("heavy", 3.0),
+        ])
+        .unwrap();
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.id("light"), Some(TenantId(1)));
+        assert_eq!(r.id("heavy"), Some(TenantId(2)));
+        assert_eq!(r.id("nobody"), None);
+        assert_eq!(r.weights(), vec![1.0, 1.0, 3.0]);
+    }
+
+    #[test]
+    fn explicit_default_spec_replaces_tenant_zero() {
+        let mut d = TenantSpec::new("default", 2.5);
+        d.tok_s = Some(100.0);
+        let r = TenantRegistry::new(vec![d, TenantSpec::new("other", 1.0)]).unwrap();
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.spec(TenantRegistry::DEFAULT).weight, 2.5);
+        assert_eq!(r.spec(TenantRegistry::DEFAULT).tok_s, Some(100.0));
+    }
+
+    #[test]
+    fn duplicate_names_are_rejected() {
+        let err = TenantRegistry::new(vec![
+            TenantSpec::new("a", 1.0),
+            TenantSpec::new("a", 2.0),
+        ])
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("duplicate"), "{err}");
+    }
+
+    #[test]
+    fn parse_accepts_every_cap_combination() {
+        let t = TenantSpec::parse("light:2").unwrap();
+        assert_eq!((t.name.as_str(), t.weight), ("light", 2.0));
+        assert!(t.tok_s.is_none() && t.energy_budget_j.is_none());
+
+        let t = TenantSpec::parse("metered:1:50").unwrap();
+        assert_eq!(t.tok_s, Some(50.0));
+        assert!(t.energy_budget_j.is_none());
+
+        let t = TenantSpec::parse("capped:1:50:1000").unwrap();
+        assert_eq!(t.tok_s, Some(50.0));
+        assert_eq!(t.energy_budget_j, Some(1000.0));
+
+        let t = TenantSpec::parse("burst:2::500").unwrap();
+        assert!(t.tok_s.is_none());
+        assert_eq!(t.energy_budget_j, Some(500.0));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "noweight",
+            ":1",
+            "x:zero",
+            "x:1:fast",
+            "x:1:10:1:extra",
+            "x:-1",
+            "x:0",
+            "x:1:-5",
+            "x:1:10:-2",
+        ] {
+            assert!(TenantSpec::parse(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+}

@@ -6,13 +6,19 @@
 //! AOT artifacts are missing or PJRT is unavailable (the vendored stub xla
 //! crate) — environments that cannot run the runtime at all.
 
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use cmphx::coordinator::batcher::BatchPolicy;
 use cmphx::coordinator::scheduler::StepPolicy;
-use cmphx::coordinator::{FleetMetrics, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle};
+use cmphx::coordinator::{
+    jain_index, FleetMetrics, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle,
+};
 use cmphx::device::registry;
 use cmphx::isa::pass::FmadPolicy;
+use cmphx::qos::TenantSpec;
 mod common;
 use common::artifact_dir;
 
@@ -278,6 +284,7 @@ fn run_fleet_workload(nodes: Vec<NodeConfig>) -> Option<(FleetMetrics, Vec<Vec<i
         fmad: FmadPolicy::Decomposed,
         route: RoutePolicy::RoundRobin,
         nodes,
+        ..Default::default()
     };
     let server = start(cfg)?;
     let rxs: Vec<_> = (0..6)
@@ -329,6 +336,312 @@ fn heterogeneous_fleet_beats_either_card_alone() {
     // the fleet aggregate accounts every request exactly once
     assert_eq!(both.total().requests, 6);
     assert_eq!(both.total().tokens_out, 36);
+}
+
+/// Two identical 170HX nodes, round-robin routing, work stealing as given.
+fn fleet2_config(steal: bool) -> ServerConfig {
+    let mut cfg = config(4);
+    cfg.route = RoutePolicy::RoundRobin;
+    cfg.qos.steal = steal;
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    cfg
+}
+
+#[test]
+fn recovered_node_serves_again_after_mark_healthy() {
+    // Regression for the router's missing recovery hook: a node excluded
+    // from routing used to stay excluded for the server's lifetime.
+    // Stealing is off so the only way node 1 can serve is via routing.
+    let Some(server) = start(fleet2_config(false)) else { return };
+    server.mark_unhealthy(1).unwrap();
+    for i in 0..4 {
+        let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+        let resp = server
+            .submit(prompt, 4)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(240))
+            .unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        assert_eq!(resp.node, 0, "unhealthy node must not serve");
+    }
+    let before = server.fleet_metrics();
+    assert_eq!(before.nodes[1].1.requests, 0, "drained node must have idled");
+    // The operator brings the node back: the dispatch stage must resume
+    // routing to it with no restart.
+    server.mark_healthy(1).unwrap();
+    let mut nodes_seen = Vec::new();
+    for i in 0..4 {
+        let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 5)) % 500 + 1).collect();
+        let resp = server
+            .submit(prompt, 4)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(240))
+            .unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        nodes_seen.push(resp.node);
+    }
+    assert!(
+        nodes_seen.contains(&1),
+        "recovered node must serve again, got {nodes_seen:?}"
+    );
+    let fm = server.shutdown_fleet();
+    assert_eq!(fm.total().errors, 0);
+    assert!(fm.nodes[1].1.requests > 0);
+}
+
+#[test]
+fn idle_peer_steals_work_queued_behind_a_deep_node() {
+    // Routing sends everything to node 0 (node 1 is marked out), so node
+    // 0's queue runs deep while node 1 idles — the decide-once-routing
+    // pathology. With stealing on, the idle worker must pull queued
+    // requests across and serve them.
+    let Some(server) = start(fleet2_config(true)) else { return };
+    server.mark_unhealthy(1).unwrap();
+    let rxs: Vec<_> = (0..8)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, 6).unwrap()
+        })
+        .collect();
+    let mut nodes_seen = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 6);
+        nodes_seen.push(resp.node);
+    }
+    let fm = server.shutdown_fleet();
+    assert_eq!(fm.total().errors, 0);
+    assert_eq!(fm.total().requests, 8);
+    assert!(
+        nodes_seen.contains(&1),
+        "an idle peer must steal and serve queued work, got {nodes_seen:?}"
+    );
+    assert!(
+        fm.nodes[1].1.steals >= 1,
+        "node 1 served only by stealing: {}",
+        fm.nodes[1].1.steals
+    );
+    assert_eq!(
+        fm.nodes[1].1.requests as usize,
+        nodes_seen.iter().filter(|&&n| n == 1).count(),
+        "stolen requests retire (and count) on the thief"
+    );
+}
+
+#[test]
+fn aging_gate_resumes_a_parked_sequence_under_sustained_shorts() {
+    // The PR 3 waiting-queue starvation follow-up: under sustained short
+    // traffic, a preempted long sequence used to park indefinitely —
+    // every freed page went to a fresh short because resume-order alone
+    // cannot reserve pages. With aging_rounds set, the worker freezes new
+    // admissions once the parked sequence is overdue, resumes it within a
+    // bounded number of rounds, and shields it from re-eviction.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    const LONG: usize = 24;
+    const SHORT: usize = 6;
+    const SHORTS_TOTAL: usize = 10;
+    let budget = (prefill_t + LONG - 1).max(2 * (prefill_t + SHORT));
+    let long_prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+
+    // Reference: the same long request served without pressure.
+    let Some(reference) = start(config(2)) else { return };
+    let rx = reference.submit(long_prompt.clone(), LONG).unwrap();
+    let expected_long = rx.recv_timeout(Duration::from_secs(240)).unwrap().tokens;
+    drop(reference);
+
+    let mut cfg = config(2);
+    cfg.step_policy = StepPolicy::ShortestFirst;
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some(budget);
+    cfg.batch.aging_rounds = 1;
+    let Some(server) = start(cfg) else { return };
+    let rx_long = server.submit(long_prompt, LONG).unwrap();
+    // Sustained shorts: a closed loop keeps ~3 outstanding for the whole
+    // run, so there is never a natural lull for the long one to slip in.
+    let mut pending: VecDeque<_> = VecDeque::new();
+    let mut submitted = 0usize;
+    let mut served = 0usize;
+    while served < SHORTS_TOTAL {
+        while pending.len() < 3 && submitted < SHORTS_TOTAL {
+            let prompt: Vec<i32> =
+                (1..=8).map(|t| (t * (submitted as i32 + 2)) % 500 + 1).collect();
+            pending.push_back(server.submit(prompt, SHORT).unwrap());
+            submitted += 1;
+        }
+        let resp = pending
+            .pop_front()
+            .unwrap()
+            .recv_timeout(Duration::from_secs(240))
+            .unwrap();
+        assert!(resp.ok(), "short request starved: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), SHORT);
+        served += 1;
+    }
+    let long = rx_long.recv_timeout(Duration::from_secs(240)).unwrap();
+    assert!(long.ok(), "{:?}", long.error);
+    assert_eq!(
+        long.tokens, expected_long,
+        "aged resume must replay to the identical state"
+    );
+    assert!(long.preemptions >= 1, "pressure must have evicted the long one");
+    assert!(
+        long.preemptions <= 3,
+        "the eviction shield must stop park/resume thrash, saw {}",
+        long.preemptions
+    );
+    let m = server.shutdown();
+    assert_eq!(m.errors, 0);
+    assert!(
+        m.aged_promotions >= 1,
+        "the aging gate must have engaged for the parked sequence"
+    );
+}
+
+/// Closed-loop flood: the light tenant keeps 2 long requests in flight
+/// (8 total × 20 tokens); the heavy tenant keeps ~10× the light tenant's
+/// outstanding token demand queued as short requests. Returns (light p99
+/// seconds, Jain's index over per-tenant tokens served while the light
+/// tenant was active).
+fn flood_run(qos: bool) -> Option<(f64, f64)> {
+    const LIGHT_N: usize = 8;
+    const LIGHT_OUT: usize = 2;
+    const LIGHT_TOK: usize = 20;
+    const HEAVY_OUT: usize = 48;
+    const HEAVY_TOK: usize = 8;
+    let mut cfg = fleet2_config(qos);
+    cfg.batch.max_batch = 1; // single-sequence nodes: comparable wall latency
+    cfg.route = RoutePolicy::WeightedThroughput;
+    cfg.qos.enabled = qos;
+    cfg.qos.node_queue_depth = 1;
+    cfg.qos.tenants = vec![TenantSpec::new("light", 1.0), TenantSpec::new("heavy", 1.0)];
+    let server = Arc::new(Server::start(artifact_dir()?, cfg).unwrap());
+    let light = server.tenant_id("light").unwrap();
+    let heavy = server.tenant_id("heavy").unwrap();
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let heavy_tokens = Arc::new(AtomicU64::new(0));
+    let flood = {
+        let server = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let heavy_tokens = Arc::clone(&heavy_tokens);
+        std::thread::spawn(move || {
+            let mut next = 0i32;
+            let mut pending = Vec::new();
+            while !stop.load(Ordering::Relaxed) {
+                while pending.len() < HEAVY_OUT {
+                    let prompt: Vec<i32> = (1..=8).map(|t| (t * (next + 11)) % 500 + 1).collect();
+                    match server.submit_as(heavy, prompt, HEAVY_TOK) {
+                        Ok(rx) => pending.push(rx),
+                        Err(_) => break, // backpressure: retry after the poll
+                    }
+                    next += 1;
+                }
+                pending.retain(|rx| match rx.try_recv() {
+                    Ok(resp) => {
+                        if resp.ok() && !stop.load(Ordering::Relaxed) {
+                            heavy_tokens.fetch_add(resp.tokens.len() as u64, Ordering::Relaxed);
+                        }
+                        false
+                    }
+                    Err(_) => true,
+                });
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        })
+    };
+
+    let mut latencies = Vec::new();
+    let mut light_tokens = 0u64;
+    let mut inflight: VecDeque<_> = VecDeque::new();
+    let mut submitted = 0usize;
+    while latencies.len() < LIGHT_N {
+        while inflight.len() < LIGHT_OUT && submitted < LIGHT_N {
+            let prompt: Vec<i32> =
+                (1..=8).map(|t| (t * (submitted as i32 + 2)) % 500 + 1).collect();
+            match server.submit_as(light, prompt, LIGHT_TOK) {
+                Ok(rx) => {
+                    inflight.push_back(rx);
+                    submitted += 1;
+                }
+                Err(_) => std::thread::sleep(Duration::from_millis(1)),
+            }
+        }
+        let resp = inflight
+            .pop_front()
+            .unwrap()
+            .recv_timeout(Duration::from_secs(600))
+            .unwrap();
+        assert!(resp.ok(), "light request failed: {:?}", resp.error);
+        light_tokens += resp.tokens.len() as u64;
+        latencies.push(resp.latency_s());
+    }
+    stop.store(true, Ordering::Relaxed);
+    let heavy_window = heavy_tokens.load(Ordering::Relaxed);
+    flood.join().unwrap();
+    drop(server);
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p99 = latencies[((latencies.len() as f64 - 1.0) * 0.99).round() as usize];
+    Some((p99, jain_index(&[light_tokens as f64, heavy_window as f64])))
+}
+
+#[test]
+fn wfq_and_stealing_keep_a_flooded_light_tenant_within_its_sla() {
+    // The acceptance scenario: one tenant floods a 2-card fleet at ~10×
+    // another's demand. With the QoS layer on, the light tenant's p99
+    // stays within 2× its solo-run p99 and the token split stays fair
+    // (Jain ≥ 0.9); with it off (FIFO, no stealing), both are strictly
+    // worse.
+    let Some(dir) = artifact_dir() else { return };
+    // Solo baseline: the light workload alone on the same fleet.
+    let mut solo_cfg = fleet2_config(true);
+    solo_cfg.batch.max_batch = 1;
+    solo_cfg.route = RoutePolicy::WeightedThroughput;
+    solo_cfg.qos.node_queue_depth = 1;
+    let solo_server = Server::start(dir, solo_cfg).unwrap();
+    let mut solo_lat = Vec::new();
+    for i in 0..8 {
+        let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+        let resp = solo_server
+            .submit(prompt, 20)
+            .unwrap()
+            .recv_timeout(Duration::from_secs(240))
+            .unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        solo_lat.push(resp.latency_s());
+    }
+    drop(solo_server);
+    solo_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let solo_p99 = solo_lat[((solo_lat.len() as f64 - 1.0) * 0.99).round() as usize];
+
+    let (on_p99, on_jain) = flood_run(true).unwrap();
+    let (off_p99, off_jain) = flood_run(false).unwrap();
+    eprintln!(
+        "fairness: solo p99 {:.0}ms | qos on p99 {:.0}ms jain {:.3} | qos off p99 {:.0}ms jain {:.3}",
+        solo_p99 * 1e3,
+        on_p99 * 1e3,
+        on_jain,
+        off_p99 * 1e3,
+        off_jain,
+    );
+    assert!(
+        on_p99 <= 2.0 * solo_p99,
+        "QoS must hold the light tenant's p99 within 2× solo: {on_p99} vs solo {solo_p99}"
+    );
+    assert!(on_jain >= 0.9, "QoS must keep the token split fair: jain {on_jain}");
+    assert!(
+        off_p99 > on_p99,
+        "disabling QoS must strictly worsen the light tenant's p99: {off_p99} vs {on_p99}"
+    );
+    assert!(
+        off_jain < on_jain && off_jain < 0.9,
+        "disabling QoS must strictly worsen fairness: {off_jain} vs {on_jain}"
+    );
 }
 
 #[test]
