@@ -5,17 +5,22 @@
 //! DESIGN.md calls out — plus the simulated device time for the same token
 //! schedule. A fleet section runs a heterogeneous 170HX + 90HX fleet under
 //! continuous batching and answers the §6.2 question: how many recycled
-//! cards replace one A100, at what energy cost. A final **fairness
-//! ablation** floods a 2-card fleet with one tenant at ~10× another's
-//! demand and measures the light tenant's p99 and Jain's index with the
-//! QoS layer (WFQ + work stealing) on vs off, recording the result as the
-//! `serve_fairness` row of `BENCH_sim_throughput.json`. Requires
+//! cards replace one A100, at what energy cost. A **prefix ablation**
+//! serves an identical-prompt burst with block-hash prefix sharing on vs
+//! off, and the page-pressure ablation runs preempt-and-requeue with the
+//! PCIe-priced swap path off and on. A final **fairness ablation** floods
+//! a 2-card fleet with one tenant at ~10× another's demand and measures
+//! the light tenant's p99 and Jain's index with the QoS layer (WFQ + work
+//! stealing) on vs off, recording the result as the `serve_fairness` row
+//! of `BENCH_sim_throughput.json` (row-owned read-modify-write via
+//! [`cmphx::bench_harness::upsert_bench_row`]). Requires
 //! `make artifacts`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use cmphx::bench_harness::upsert_bench_row;
 use cmphx::coordinator::batcher::BatchPolicy;
 use cmphx::coordinator::scheduler::StepPolicy;
 use cmphx::coordinator::{jain_index, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle};
@@ -133,9 +138,11 @@ fn run_fleet() -> anyhow::Result<()> {
 }
 
 /// Serve a long + shorts mix under a deliberately tight page pool, with
-/// and without preemption — the paged-KV ablation: how much recompute tax
-/// does preempt-and-requeue pay to keep short requests completing?
-fn run_pressure(preempt: bool) -> anyhow::Result<()> {
+/// and without preemption, and with swap-based comebacks armed — the
+/// paged-KV ablation: how much recompute tax does preempt-and-requeue
+/// pay to keep short requests completing, and how much of it does the
+/// PCIe-priced swap path buy back?
+fn run_pressure(preempt: bool, swap: bool) -> anyhow::Result<()> {
     const LONG: usize = 24;
     const SHORT: usize = 6;
     let dir = artifacts()?;
@@ -145,6 +152,7 @@ fn run_pressure(preempt: bool) -> anyhow::Result<()> {
     cfg.batch.kv_block_budget =
         Some((prefill_t + LONG - 1).max(2 * (prefill_t + SHORT)));
     cfg.batch.preempt = preempt;
+    cfg.batch.swap = swap;
     let server = Server::start(dir, cfg)?;
     let t0 = Instant::now();
     let rx_long = server.submit(vec![3, 1, 4, 1, 5, 9, 2, 6], LONG)?;
@@ -163,12 +171,47 @@ fn run_pressure(preempt: bool) -> anyhow::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     let m = server.shutdown();
     println!(
-        "preempt={preempt:<5}: {served}/5 served, {} tok in {wall:.2}s | evicted={} resumed={} wasted_sim={:.1}ms | errors={}",
+        "preempt={preempt:<5} swap={swap:<5}: {served}/5 served, {} tok in {wall:.2}s | \
+         evicted={} resumed={} wasted_sim={:.1}ms | swapped out={} in={} link_s={:.1}ms \
+         saved_sim={:.1}ms | errors={}",
         m.tokens_out,
         m.preemptions,
         m.resumes,
         m.wasted_prefill_s * 1e3,
+        m.swap_outs,
+        m.swap_ins,
+        m.swap_transfer_s * 1e3,
+        m.saved_recompute_s * 1e3,
         m.errors,
+    );
+    Ok(())
+}
+
+/// Identical-prompt burst with the prefix cache on vs off: every request
+/// shares the whole prompt window, so the cached arm should report block
+/// hits (and saved simulated prefill) where the ablation arm allocates
+/// every block fresh.
+fn run_prefix_ablation(prefix_cache: bool) -> anyhow::Result<()> {
+    let mut cfg = config(4, StepPolicy::RoundRobin);
+    cfg.batch.prefix_cache = prefix_cache;
+    let server = Server::start(artifacts()?, cfg)?;
+    let prompt = vec![3, 1, 4, 1, 5, 9, 2, 6];
+    let rxs: Vec<_> =
+        (0..REQUESTS).map(|_| server.submit(prompt.clone(), TOKENS).unwrap()).collect();
+    for rx in rxs {
+        let resp = rx.recv()?;
+        assert!(resp.ok(), "{:?}", resp.error);
+    }
+    let m = server.shutdown();
+    println!(
+        "prefix_cache={prefix_cache:<5}: {} requests | block hits={} misses={} ({:.0}%) \
+         cow={} saved_sim={:.2}ms",
+        m.requests,
+        m.prefix_hits,
+        m.prefix_misses,
+        m.prefix_hit_rate() * 100.0,
+        m.cow_copies,
+        m.saved_prefill_s * 1e3,
     );
     Ok(())
 }
@@ -328,54 +371,12 @@ fn run_fairness() -> anyhow::Result<()> {
         off_p99 * 1e3,
         off_jain,
     );
-    upsert_bench_row("serve_fairness", &row);
-    Ok(())
-}
-
-/// Splice `"key": <block>` into BENCH_sim_throughput.json, replacing the
-/// existing object value for `key` or appending the key before the final
-/// brace. The file is shared with bench_sim_throughput, which rewrites it
-/// wholesale — run that bench first when regenerating everything.
-fn upsert_bench_row(key: &str, block: &str) {
+    // Row-owned read-modify-write: only this bench's row changes, so it
+    // never clobbers bench_sim_throughput's rows (or vice versa).
     let path =
         std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
-    let text = std::fs::read_to_string(&path).unwrap_or_else(|_| "{\n}\n".to_string());
-    let updated = upsert_json_block(&text, key, block);
-    if let Err(e) = std::fs::write(&path, updated) {
-        eprintln!("warning: could not record {key} in {}: {e}", path.display());
-    } else {
-        println!("recorded {key} in {}", path.display());
-    }
-}
-
-fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
-    let needle = format!("\"{key}\":");
-    if let Some(start) = text.find(&needle) {
-        // replace the existing object value (brace-balanced span)
-        let vstart = start + needle.len();
-        let obrace = vstart + text[vstart..].find('{').expect("object value for key");
-        let mut depth = 0usize;
-        let mut end = obrace;
-        for (i, c) in text[obrace..].char_indices() {
-            match c {
-                '{' => depth += 1,
-                '}' => {
-                    depth -= 1;
-                    if depth == 0 {
-                        end = obrace + i + 1;
-                        break;
-                    }
-                }
-                _ => {}
-            }
-        }
-        format!("{} {block}{}", &text[..vstart], &text[end..])
-    } else {
-        let last = text.rfind('}').expect("a json object to extend");
-        let body = text[..last].trim_end();
-        let sep = if body.ends_with('{') { "" } else { "," };
-        format!("{body}{sep}\n  \"{key}\": {block}\n}}\n")
-    }
+    upsert_bench_row(&path, "serve_fairness", &row);
+    Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -393,9 +394,13 @@ fn main() -> anyhow::Result<()> {
     }
     println!("-- scheduler ablation at batch=4 --");
     run_once(4, StepPolicy::ShortestFirst)?;
+    println!("-- prefix sharing: identical-prompt burst, cache on vs off --");
+    run_prefix_ablation(true)?;
+    run_prefix_ablation(false)?;
     println!("-- paged KV under page pressure: preempt-and-requeue ablation --");
-    run_pressure(true)?;
-    run_pressure(false)?;
+    run_pressure(true, false)?;
+    run_pressure(true, true)?;
+    run_pressure(false, false)?;
     println!("-- fleet: 170HX + 90HX, continuous batching, weighted routing --");
     run_fleet()?;
     println!("-- fairness: flooding tenant, WFQ + work stealing on vs off --");

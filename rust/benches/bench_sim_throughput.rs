@@ -12,9 +12,13 @@
 //!
 //! The ratio is the PR's headline number (target: ≥ 5×). Results are
 //! printed and also written to `BENCH_sim_throughput.json` at the repo root
-//! so the perf trajectory is recorded across PRs.
+//! so the perf trajectory is recorded across PRs — each bench **upserts
+//! only the rows it owns** (`sim_throughput`, `serve_concurrency`,
+//! `serve_prefix_cache` here; `serve_fairness` belongs to
+//! bench_e2e_serve), so no bench's numbers silently depend on another
+//! bench rerunning.
 
-use cmphx::bench_harness::time_fn;
+use cmphx::bench_harness::{time_fn, upsert_bench_row};
 use cmphx::coordinator::KvPager;
 use cmphx::device::registry;
 use cmphx::isa::pass::{apply_fmad, FmadPolicy};
@@ -38,19 +42,23 @@ struct ServeConcurrency {
     paged_seqs: usize,
 }
 
-fn serve_concurrency() -> ServeConcurrency {
+fn pager_170hx(block_positions: usize) -> KvPager {
     let model = ModelDesc::qwen25_15b();
     let dev = registry::cmp170hx();
-    let block_positions = 16;
-    let context = 4096;
-    let mean_seq = 1024; // prompt + mean generation = context / 4
-    let pager = KvPager::new(
+    KvPager::new(
         block_positions,
         model.kv_bytes_per_pos(),
         dev.mem.capacity_bytes,
         model.weight_bytes(&quant::Q8_0),
     )
-    .expect("Qwen2.5-1.5B q8_0 fits the 170HX");
+    .expect("Qwen2.5-1.5B q8_0 fits the 170HX")
+}
+
+fn serve_concurrency() -> ServeConcurrency {
+    let block_positions = 16;
+    let context = 4096;
+    let mean_seq = 1024; // prompt + mean generation = context / 4
+    let pager = pager_170hx(block_positions);
     ServeConcurrency {
         context,
         mean_seq,
@@ -58,6 +66,36 @@ fn serve_concurrency() -> ServeConcurrency {
         fixed_slot_seqs: pager.fixed_slot_capacity(context),
         paged_seqs: pager.admissible(mean_seq),
     }
+}
+
+/// Prefix-cache row: at the same operating point, every sequence shares a
+/// 512-position system prompt — admission through the chain-hash index
+/// pins the shared blocks once and allocates only each sequence's
+/// private tail. Deterministic allocator arithmetic, no PJRT needed.
+struct ServePrefixCache {
+    shared_positions: usize,
+    paged_seqs: usize,
+    prefix_cached_seqs: usize,
+}
+
+fn serve_prefix_cache() -> ServePrefixCache {
+    let block_positions = 16;
+    let mean_seq = 1024;
+    let shared = 512;
+    let mut pager = pager_170hx(block_positions);
+    let paged_seqs = pager.admissible(mean_seq);
+    let mut admitted = 0usize;
+    loop {
+        // mean-seq windows: `shared` common positions + a unique tail
+        let window: Vec<i32> = (0..mean_seq)
+            .map(|i| if i < shared { i as i32 + 1 } else { admitted as i32 * 10_000 + i as i32 })
+            .collect();
+        if pager.admit_prompt(&window).is_none() {
+            break;
+        }
+        admitted += 1;
+    }
+    ServePrefixCache { shared_positions: shared, paged_seqs, prefix_cached_seqs: admitted }
 }
 
 fn main() {
@@ -128,25 +166,56 @@ fn main() {
          fixed-slot {} seqs vs paged {} seqs ({concurrency_ratio:.2}×)",
         sc.context, sc.mean_seq, sc.fixed_slot_seqs, sc.paged_seqs,
     );
-
-    let json = format!(
-        "{{\n  \"bench\": \"bench_sim_throughput\",\n  \"sweep\": \"llamabench 6-quant x 2-policy x prefill+decode x {} devices\",\n  \"cells_per_sweep\": {},\n  \"baseline_relower_kernels_per_sec\": {:.1},\n  \"lowered_batched_kernels_per_sec\": {:.1},\n  \"speedup\": {:.2},\n  \"hw_threads\": {},\n  \"serve_concurrency\": {{\n    \"device\": \"CMP 170HX\",\n    \"model\": \"Qwen2.5-1.5B\",\n    \"quant\": \"q8_0\",\n    \"context\": {},\n    \"mean_seq_positions\": {},\n    \"kv_block_positions\": {},\n    \"fixed_slot_seqs\": {},\n    \"paged_seqs\": {},\n    \"ratio\": {:.2}\n  }}\n}}\n",
-        devices.len(),
-        cells as u64,
-        baseline_kps,
-        lowered_kps,
-        speedup,
-        threads,
-        sc.context,
-        sc.mean_seq,
-        sc.block_positions,
-        sc.fixed_slot_seqs,
-        sc.paged_seqs,
-        concurrency_ratio,
+    let pc = serve_prefix_cache();
+    let prefix_ratio = pc.prefix_cached_seqs as f64 / pc.paged_seqs.max(1) as f64;
+    println!(
+        "serve prefix cache (shared {}-position system prompt): paged {} seqs vs \
+         prefix-cached {} seqs ({prefix_ratio:.2}×)",
+        pc.shared_positions, pc.paged_seqs, pc.prefix_cached_seqs,
     );
+
+    // Row-owned read-modify-write: this bench updates only its rows;
+    // bench_e2e_serve's serve_fairness row (and anything else) survives.
     let out = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
-    match std::fs::write(&out, json) {
-        Ok(()) => println!("wrote {}", out.display()),
-        Err(e) => eprintln!("could not write {}: {e}", out.display()),
-    }
+    upsert_bench_row(
+        &out,
+        "sim_throughput",
+        &format!(
+            "{{\n    \"sweep\": \"llamabench 6-quant x 2-policy x prefill+decode x {} devices\",\n    \
+             \"cells_per_sweep\": {},\n    \
+             \"baseline_relower_kernels_per_sec\": {baseline_kps:.1},\n    \
+             \"lowered_batched_kernels_per_sec\": {lowered_kps:.1},\n    \
+             \"speedup\": {speedup:.2},\n    \"hw_threads\": {threads}\n  }}",
+            devices.len(),
+            cells as u64,
+        ),
+    );
+    upsert_bench_row(
+        &out,
+        "serve_concurrency",
+        &format!(
+            "{{\n    \"device\": \"CMP 170HX\",\n    \"model\": \"Qwen2.5-1.5B\",\n    \
+             \"quant\": \"q8_0\",\n    \"context\": {},\n    \"mean_seq_positions\": {},\n    \
+             \"kv_block_positions\": {},\n    \"fixed_slot_seqs\": {},\n    \
+             \"paged_seqs\": {},\n    \"ratio\": {concurrency_ratio:.2}\n  }}",
+            sc.context, sc.mean_seq, sc.block_positions, sc.fixed_slot_seqs, sc.paged_seqs,
+        ),
+    );
+    upsert_bench_row(
+        &out,
+        "serve_prefix_cache",
+        &format!(
+            "{{\n    \"device\": \"CMP 170HX\",\n    \"model\": \"Qwen2.5-1.5B\",\n    \
+             \"quant\": \"q8_0\",\n    \"context\": {},\n    \"mean_seq_positions\": {},\n    \
+             \"shared_prefix_positions\": {},\n    \"kv_block_positions\": {},\n    \
+             \"paged_seqs\": {},\n    \"prefix_cached_seqs\": {},\n    \
+             \"ratio\": {prefix_ratio:.2}\n  }}",
+            sc.context,
+            sc.mean_seq,
+            pc.shared_positions,
+            sc.block_positions,
+            pc.paged_seqs,
+            pc.prefix_cached_seqs,
+        ),
+    );
 }

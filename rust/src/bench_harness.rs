@@ -163,6 +163,55 @@ impl Table {
     }
 }
 
+/// Splice `"key": <block>` into the benchmark result file at `path`
+/// (read-modify-write), replacing the existing object value for `key` or
+/// appending the key before the final brace, and leaving every other
+/// bench's row untouched. BENCH_sim_throughput.json is shared by several
+/// bench targets; wholesale rewrites made each row silently depend on
+/// every other bench rerunning — row-owned upserts are the fix.
+pub fn upsert_bench_row(path: &std::path::Path, key: &str, block: &str) {
+    let text = std::fs::read_to_string(path).unwrap_or_else(|_| "{\n}\n".to_string());
+    let updated = upsert_json_block(&text, key, block);
+    if let Err(e) = std::fs::write(path, updated) {
+        eprintln!("warning: could not record {key} in {}: {e}", path.display());
+    } else {
+        println!("recorded {key} in {}", path.display());
+    }
+}
+
+/// Pure splice behind [`upsert_bench_row`]: replace `key`'s brace-balanced
+/// object value in `text`, or append `"key": block` before the final
+/// closing brace when the key is absent. `block` must be a JSON object.
+pub fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
+    let needle = format!("\"{key}\":");
+    if let Some(start) = text.find(&needle) {
+        // replace the existing object value (brace-balanced span)
+        let vstart = start + needle.len();
+        let obrace = vstart + text[vstart..].find('{').expect("object value for key");
+        let mut depth = 0usize;
+        let mut end = obrace;
+        for (i, c) in text[obrace..].char_indices() {
+            match c {
+                '{' => depth += 1,
+                '}' => {
+                    depth -= 1;
+                    if depth == 0 {
+                        end = obrace + i + 1;
+                        break;
+                    }
+                }
+                _ => {}
+            }
+        }
+        format!("{} {block}{}", &text[..vstart], &text[end..])
+    } else {
+        let last = text.rfind('}').expect("a json object to extend");
+        let body = text[..last].trim_end();
+        let sep = if body.ends_with('{') { "" } else { "," };
+        format!("{body}{sep}\n  \"{key}\": {block}\n}}\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -193,6 +242,36 @@ mod tests {
         let r = Row::new("x", 110.0).paper(100.0);
         assert!((r.deviation().unwrap() - 0.1).abs() < 1e-12);
         assert!(Row::new("y", 1.0).deviation().is_none());
+    }
+
+    #[test]
+    fn upsert_replaces_only_its_own_row() {
+        let text = "{\n  \"a\": { \"x\": 1 },\n  \"b\": { \"nested\": { \"y\": 2 } },\n  \
+                    \"note\": \"keep me\"\n}\n";
+        // replacing a row with nested braces leaves the others intact
+        let out = upsert_json_block(text, "b", "{ \"y\": 3 }");
+        assert!(out.contains("\"b\": { \"y\": 3 }"), "{out}");
+        assert!(out.contains("\"a\": { \"x\": 1 }"), "{out}");
+        assert!(out.contains("\"note\": \"keep me\""), "{out}");
+        assert!(!out.contains("nested"), "{out}");
+        // idempotent: upserting the same block changes nothing more
+        assert_eq!(upsert_json_block(&out, "b", "{ \"y\": 3 }"), out);
+    }
+
+    #[test]
+    fn upsert_appends_missing_rows_and_seeds_empty_files() {
+        let text = "{\n  \"a\": { \"x\": 1 }\n}\n";
+        let out = upsert_json_block(text, "c", "{ \"z\": 9 }");
+        assert!(out.contains("\"a\": { \"x\": 1 }"), "{out}");
+        assert!(out.contains("\"c\": { \"z\": 9 }"), "{out}");
+        assert!(out.trim_end().ends_with('}'), "{out}");
+        // appending twice in sequence keeps both rows
+        let out2 = upsert_json_block(&out, "d", "{ \"w\": 0 }");
+        assert!(out2.contains("\"c\": { \"z\": 9 }") && out2.contains("\"d\": { \"w\": 0 }"));
+        // a missing/empty file seeds a fresh object
+        let seeded = upsert_json_block("{\n}\n", "only", "{ \"v\": 1 }");
+        assert!(seeded.contains("\"only\": { \"v\": 1 }"), "{seeded}");
+        assert!(!seeded.contains(",\n  \"only\""), "no stray comma after {{: {seeded}");
     }
 
     #[test]

@@ -27,6 +27,7 @@ COMMANDS:
                             mixbench operational-intensity sweep (roofline)
   serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
         [--block N] [--kv-blocks N] [--no-preempt]
+        [--no-prefix-cache] [--swap] [--host-pool MiB]
         [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
         [--aging N] [--aging-rounds N]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
@@ -36,13 +37,20 @@ COMMANDS:
                             page, --kv-blocks caps the page pool to force
                             pressure) and preempt-and-requeue under page
                             pressure (--no-preempt stalls instead).
-                            --tenant (repeatable) registers QoS tenants:
-                            weighted fair queueing with optional token-rate
-                            and energy-budget caps; requests round-robin
-                            across them. --no-qos falls back to the FIFO
-                            queue, --no-steal disables cross-node work
-                            stealing, --aging sets the WFQ promoter (pops),
-                            --aging-rounds the preemption waiting-queue gate
+                            Prompt blocks are prefix-shared copy-on-write
+                            (--no-prefix-cache for the ablation); --swap
+                            arms swap-based preemption — victims whose KV
+                            round-trips the card's PCIe link cheaper than
+                            it recomputes park in a host-RAM pool of
+                            --host-pool MiB (default 1024) instead of
+                            replaying. --tenant (repeatable) registers QoS
+                            tenants: weighted fair queueing with optional
+                            token-rate and energy-budget caps; requests
+                            round-robin across them. --no-qos falls back
+                            to the FIFO queue, --no-steal disables
+                            cross-node work stealing, --aging sets the WFQ
+                            promoter (pops), --aging-rounds the preemption
+                            waiting-queue gate
   help                      this text
 ";
 
@@ -295,6 +303,14 @@ fn serve(args: &Args) -> Result<i32> {
     if args.flag("no-preempt") {
         config.batch.preempt = false;
     }
+    if args.flag("no-prefix-cache") {
+        config.batch.prefix_cache = false;
+    }
+    if args.flag("swap") {
+        config.batch.swap = true;
+    }
+    config.batch.host_pool_bytes =
+        (args.opt_usize("host-pool", (config.batch.host_pool_bytes >> 20) as usize)? as u64) << 20;
     config.batch.aging_rounds =
         args.opt_usize("aging-rounds", config.batch.aging_rounds as usize)? as u64;
     for spec in args.opt_all("tenant") {
@@ -351,7 +367,7 @@ fn serve(args: &Args) -> Result<i32> {
     for (i, rx) in rxs.into_iter().enumerate() {
         let resp = rx.recv()?;
         let preempted = if resp.preemptions > 0 {
-            format!(" preempted×{}", resp.preemptions)
+            format!(" preempted×{} (swapped×{})", resp.preemptions, resp.swaps)
         } else {
             String::new()
         };

@@ -45,6 +45,20 @@ pub struct BatchPolicy {
     /// traffic can no longer park a long sequence indefinitely (the PR 3
     /// waiting-queue starvation follow-up). `0` ages immediately.
     pub aging_rounds: u64,
+    /// Prefix sharing: admission chain-hashes the prompt window's blocks
+    /// and pins already-resident blocks (copy-on-write on first write)
+    /// instead of allocating — identical system prompts cost one physical
+    /// copy. On by default; `--no-prefix-cache` gives the ablation arm.
+    pub prefix_cache: bool,
+    /// Swap-based preemption: when evicting a victim, compare the §3 PCIe
+    /// round-trip cost of its KV pages at this card's link width against
+    /// the overlay-priced recompute and park the pages in host RAM when
+    /// the transfer is cheaper. Off by default (`--swap` enables): the
+    /// stock drop-and-replay path stays the baseline.
+    pub swap: bool,
+    /// Host-RAM budget for swapped-out KV pages, bytes. A victim whose
+    /// footprint does not fit falls back to drop-and-recompute.
+    pub host_pool_bytes: u64,
 }
 
 impl Default for BatchPolicy {
@@ -56,6 +70,9 @@ impl Default for BatchPolicy {
             preempt: true,
             kv_block_budget: None,
             aging_rounds: 16,
+            prefix_cache: true,
+            swap: false,
+            host_pool_bytes: 1 << 30,
         }
     }
 }
@@ -88,6 +105,9 @@ mod tests {
         assert!(p.preempt, "preemption is the default — starvation is not");
         assert!(p.kv_block_budget.is_none());
         assert!(p.aging_rounds > 0, "parked sequences age after a bounded wait");
+        assert!(p.prefix_cache, "prefix sharing is the default — it only saves pages");
+        assert!(!p.swap, "swap preemption is opt-in; drop-and-replay stays the baseline");
+        assert!(p.host_pool_bytes > 0, "an armed swap path needs host headroom");
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Paged KV-cache allocator with VRAM accounting.
+//! Paged KV-cache allocator with VRAM accounting, prefix sharing, and
+//! copy-on-write.
 //!
 //! The CMP 170HX's 8 GB ceiling is the binding constraint of §4.1/§6.2.
 //! The old fixed-slot manager reserved worst-case context
@@ -9,13 +10,35 @@
 //! actually grows (vLLM-style paged attention, at the accounting level the
 //! simulated deployment needs): admission pins only the prefill window,
 //! each decode round grows the sequence by at most one block, and a grow
-//! that cannot be satisfied signals the engine to preempt (drop the KV,
-//! requeue, recompute on resume) rather than silently over-committing the
-//! device.
+//! that cannot be satisfied signals the engine to preempt rather than
+//! silently over-committing the device.
+//!
+//! The pager is also **content-aware** (vLLM's block-hash reuse): every
+//! block admitted with prompt content carries a *chain hash* of all token
+//! positions up to and including the ones it covers, and a per-node
+//! prefix index maps chain hash → resident block. [`KvPager::admit_prompt`]
+//! matches a new sequence's prompt blocks against the index and **pins**
+//! (refcounts) shared blocks instead of allocating fresh ones — identical
+//! system-prompt prefixes cost one physical copy, which is another large
+//! admission multiplier on an 8 GB card. The first write into a shared
+//! block (a decode step growing into a partially-filled prompt tail)
+//! triggers **copy-on-write**: the writer gets a private replacement and
+//! the shared original stays valid for its other holders.
+//! [`KvPager::release`] decrements refcounts and frees a block only when
+//! the last holder lets go; the index entry is unregistered at the same
+//! moment, so the prefix index can never point at a freed block.
+//!
+//! [`HostPool`] accounts the host-RAM side of swap-based preemption:
+//! evicted sequences whose KV is cheaper to move over the (crippled
+//! x1/x4) PCIe link than to recompute park their pages there until
+//! resume ([`crate::coordinator::scheduler::choose_preempt`] prices the
+//! tradeoff with the §3 PCIe model).
 //!
 //! Handles are generation-stamped: a released handle — or a handle whose
 //! id was recycled by a later admission — is rejected on every operation
 //! instead of silently corrupting another sequence's pages.
+
+use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
@@ -26,13 +49,23 @@ pub struct SeqKv {
     gen: u64,
 }
 
-/// One live sequence's page-table summary.
-#[derive(Clone, Copy, Debug)]
+/// One physical KV block: how many live sequences hold it, and the chain
+/// hash it is registered under in the prefix index (`None` for private
+/// blocks — decode-written pages, CoW copies, diverged tails).
+#[derive(Clone, Copy, Debug, Default)]
+struct Block {
+    refs: u32,
+    hash: Option<u64>,
+}
+
+/// One live sequence's page table.
+#[derive(Clone, Debug)]
 struct SeqAlloc {
-    /// Token positions this sequence may write (rounded up into `blocks`).
+    /// Token positions this sequence may write (rounded up into blocks).
     positions: usize,
-    /// Blocks currently owned.
-    blocks: usize,
+    /// Physical block ids, in position order. Shared blocks appear in
+    /// several sequences' tables at once.
+    blocks: Vec<usize>,
 }
 
 #[derive(Debug)]
@@ -41,19 +74,57 @@ struct PageEntry {
     alloc: Option<SeqAlloc>,
 }
 
+/// Cumulative prefix-cache counters (monotonic over the pager's life).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// Prompt blocks served by pinning an already-resident block.
+    pub hit_blocks: u64,
+    /// Prompt blocks that had to be allocated fresh.
+    pub miss_blocks: u64,
+    /// Shared blocks privatized on first write (copy-on-write).
+    pub cow_copies: u64,
+}
+
+/// Chain hash: FNV-1a folded over the previous chunk's hash and this
+/// chunk's token ids. Matching hashes at chunk *k* imply (collisions
+/// aside) identical token content over **all** positions `0..=k·N` — the
+/// causal-attention condition under which KV pages are interchangeable.
+fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
+    const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+    const FNV_PRIME: u64 = 0x100000001b3;
+    let mut h = FNV_OFFSET;
+    for b in prev.to_le_bytes() {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    for t in tokens {
+        for b in t.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
 /// Paged KV block allocator for one card.
 #[derive(Debug)]
 pub struct KvPager {
     block_positions: usize,
     bytes_per_pos: u64,
     total_blocks: usize,
-    used_blocks: usize,
+    /// Distinct physical blocks with at least one holder.
+    allocated: usize,
     active: usize,
     /// Device memory budget and static (weights) usage, bytes.
     vram_bytes: u64,
     weights_bytes: u64,
+    /// Physical block table; slots are recycled through `free_slots`.
+    blocks: Vec<Block>,
+    free_slots: Vec<usize>,
+    /// chain hash → resident block id. Entries exist only while the block
+    /// has holders (refs ≥ 1) and its content still matches the hash.
+    prefix_index: HashMap<u64, usize>,
     entries: Vec<PageEntry>,
     free_ids: Vec<usize>,
+    stats: PrefixStats,
 }
 
 impl KvPager {
@@ -85,12 +156,16 @@ impl KvPager {
             block_positions,
             bytes_per_pos,
             total_blocks,
-            used_blocks: 0,
+            allocated: 0,
             active: 0,
             vram_bytes,
             weights_bytes,
+            blocks: Vec::new(),
+            free_slots: Vec::new(),
+            prefix_index: HashMap::new(),
             entries: Vec::new(),
             free_ids: Vec::new(),
+            stats: PrefixStats::default(),
         })
     }
 
@@ -101,7 +176,7 @@ impl KvPager {
         if cap == 0 {
             bail!("KV block budget must be at least one block");
         }
-        if self.used_blocks > 0 {
+        if self.allocated > 0 {
             bail!("cannot shrink the block pool with live sequences");
         }
         self.total_blocks = self.total_blocks.min(cap);
@@ -114,13 +189,50 @@ impl KvPager {
         positions.max(1).div_ceil(self.block_positions)
     }
 
-    /// Admit a sequence holding `positions` positions (the prefill
-    /// window), or `None` when the free pool cannot cover it.
-    pub fn admit(&mut self, positions: usize) -> Option<SeqKv> {
-        let need = self.blocks_for(positions);
-        if need > self.free_blocks() {
-            return None;
+    /// Allocate one physical block with `refs = 1`, registering `hash` in
+    /// the prefix index when given (and when the hash is not already
+    /// claimed by another resident block).
+    fn alloc_block(&mut self, hash: Option<u64>) -> usize {
+        let id = match self.free_slots.pop() {
+            Some(id) => id,
+            None => {
+                self.blocks.push(Block::default());
+                self.blocks.len() - 1
+            }
+        };
+        // Register the hash only when it is not already claimed — the
+        // index maps each chain hash to exactly one resident block.
+        let mut registered = None;
+        if let Some(h) = hash {
+            if let std::collections::hash_map::Entry::Vacant(e) = self.prefix_index.entry(h) {
+                e.insert(id);
+                registered = Some(h);
+            }
         }
+        self.blocks[id] = Block { refs: 1, hash: registered };
+        self.allocated += 1;
+        id
+    }
+
+    /// Drop one holder of a physical block; frees it (and unregisters its
+    /// hash) when the last holder lets go. Returns true when the block was
+    /// actually freed.
+    fn unref_block(&mut self, id: usize) -> bool {
+        let b = &mut self.blocks[id];
+        assert!(b.refs > 0, "refcount underflow on KV block {id}");
+        b.refs -= 1;
+        if b.refs > 0 {
+            return false;
+        }
+        if let Some(h) = b.hash.take() {
+            self.prefix_index.remove(&h);
+        }
+        self.free_slots.push(id);
+        self.allocated -= 1;
+        true
+    }
+
+    fn new_handle(&mut self, positions: usize, blocks: Vec<usize>) -> SeqKv {
         let id = match self.free_ids.pop() {
             Some(id) => id,
             None => {
@@ -130,14 +242,70 @@ impl KvPager {
         };
         let entry = &mut self.entries[id];
         entry.gen += 1;
-        entry.alloc = Some(SeqAlloc {
-            positions: positions.max(1),
-            blocks: need,
-        });
-        let gen = entry.gen;
-        self.used_blocks += need;
+        entry.alloc = Some(SeqAlloc { positions: positions.max(1), blocks });
         self.active += 1;
-        Some(SeqKv { id, gen })
+        SeqKv { id, gen: entry.gen }
+    }
+
+    /// Admit a sequence holding `positions` positions (the prefill
+    /// window) on private, content-less blocks, or `None` when the free
+    /// pool cannot cover it. The prefix-blind path — what a disabled
+    /// prefix cache uses.
+    pub fn admit(&mut self, positions: usize) -> Option<SeqKv> {
+        let need = self.blocks_for(positions);
+        if need > self.free_blocks() {
+            return None;
+        }
+        let blocks: Vec<usize> = (0..need).map(|_| self.alloc_block(None)).collect();
+        Some(self.new_handle(positions, blocks))
+    }
+
+    /// Admit a sequence whose prefill window holds exactly `window`
+    /// (prompt plus deterministic padding), matching each block-sized
+    /// chunk's chain hash against the prefix index. Matched blocks are
+    /// **pinned** (refcount bumped) instead of allocated; matching stops
+    /// at the first miss (chain hashes make any later hit imply the same
+    /// full prefix anyway) and the remaining chunks are allocated fresh
+    /// and registered for future admissions — including a trailing
+    /// partial chunk, whose content is still deterministic. Returns the
+    /// handle and the number of pinned (cache-hit) blocks, or `None` when
+    /// the free pool cannot cover the fresh blocks. On `None` nothing is
+    /// pinned or allocated.
+    pub fn admit_prompt(&mut self, window: &[i32]) -> Option<(SeqKv, usize)> {
+        if window.is_empty() {
+            return self.admit(0).map(|kv| (kv, 0));
+        }
+        // Pass 1 (read-only): walk the chain, splitting chunks into a
+        // shared prefix run and a fresh tail.
+        let mut hashes = Vec::with_capacity(window.len().div_ceil(self.block_positions));
+        let mut prev = 0u64;
+        for chunk in window.chunks(self.block_positions) {
+            prev = chain_hash(prev, chunk);
+            hashes.push(prev);
+        }
+        let mut pinned: Vec<usize> = Vec::new();
+        for h in &hashes {
+            match self.prefix_index.get(h) {
+                Some(&id) => pinned.push(id),
+                None => break,
+            }
+        }
+        let fresh = hashes.len() - pinned.len();
+        if fresh > self.free_blocks() {
+            return None;
+        }
+        // Pass 2 (commit): pin the shared run, allocate the tail.
+        for &id in &pinned {
+            self.blocks[id].refs += 1;
+        }
+        let hits = pinned.len();
+        let mut blocks = pinned;
+        for h in &hashes[hits..] {
+            blocks.push(self.alloc_block(Some(*h)));
+        }
+        self.stats.hit_blocks += hits as u64;
+        self.stats.miss_blocks += fresh as u64;
+        Some((self.new_handle(window.len(), blocks), hits))
     }
 
     /// Grow a sequence to `positions`. `Ok(true)` when the sequence now
@@ -145,46 +313,83 @@ impl KvPager {
     /// `Ok(false)` when the free pool cannot cover the growth — the
     /// caller's cue to preempt or stall. Nothing changes on `Ok(false)`.
     /// `Err` marks a coordinator logic bug (stale handle).
+    ///
+    /// Growth writes positions `cur..positions`, and sequences only ever
+    /// append — so the sole block that can be *re*-written is a
+    /// partially-filled tail. A shared tail (refs > 1) triggers
+    /// **copy-on-write**: the writer takes a private replacement block
+    /// (costing one extra page this round) and unpins the original, which
+    /// stays valid for its other holders and in the prefix index. A
+    /// privately-held hashed tail is simply unregistered, since its
+    /// content is about to diverge from the hash.
     pub fn grow(&mut self, seq: SeqKv, positions: usize) -> Result<bool> {
-        let cur = self.alloc(seq)?;
-        if positions <= cur.positions {
+        let (cur, owned) = {
+            let a = self.alloc(seq)?;
+            (a.positions, a.blocks.len())
+        };
+        if positions <= cur {
             return Ok(true);
         }
-        let need = self.blocks_for(positions) - cur.blocks;
-        if need > self.free_blocks() {
+        let tail_written = cur % self.block_positions != 0;
+        let tail_id = if tail_written {
+            Some(self.entries[seq.id].alloc.as_ref().expect("checked live").blocks[owned - 1])
+        } else {
+            None
+        };
+        let cow = tail_id.is_some_and(|id| self.blocks[id].refs > 1);
+        let fresh = self.blocks_for(positions) - owned + cow as usize;
+        if fresh > self.free_blocks() {
             return Ok(false);
         }
+        if let Some(id) = tail_id {
+            if cow {
+                let copy = self.alloc_block(None);
+                self.unref_block(id);
+                let alloc = self.entries[seq.id].alloc.as_mut().expect("checked live");
+                *alloc.blocks.last_mut().expect("tail exists") = copy;
+                self.stats.cow_copies += 1;
+            } else if let Some(h) = self.blocks[id].hash.take() {
+                self.prefix_index.remove(&h);
+            }
+        }
+        let add = self.blocks_for(positions) - owned;
+        let new_blocks: Vec<usize> = (0..add).map(|_| self.alloc_block(None)).collect();
         let alloc = self.entries[seq.id].alloc.as_mut().expect("checked live");
-        alloc.blocks += need;
+        alloc.blocks.extend(new_blocks);
         alloc.positions = positions;
-        self.used_blocks += need;
         Ok(true)
     }
 
     /// Release a sequence's pages (retirement or preemption); returns the
-    /// number of blocks freed. Stale handles — double release, or reuse
-    /// after the id was recycled — are rejected without touching the
-    /// accounting.
+    /// number of blocks actually freed — shared blocks are only unpinned,
+    /// so the count can be less than the sequence held. Stale handles —
+    /// double release, or reuse after the id was recycled — are rejected
+    /// without touching the accounting.
     pub fn release(&mut self, seq: SeqKv) -> Result<usize> {
-        let cur = self.alloc(seq)?;
+        self.alloc(seq)?;
         let entry = &mut self.entries[seq.id];
-        entry.alloc = None;
+        let alloc = entry.alloc.take().expect("checked live");
         // Invalidate every outstanding copy of this handle immediately.
         entry.gen += 1;
-        self.used_blocks -= cur.blocks;
+        let mut freed = 0;
+        for &id in &alloc.blocks {
+            if self.unref_block(id) {
+                freed += 1;
+            }
+        }
         self.active -= 1;
         self.free_ids.push(seq.id);
-        Ok(cur.blocks)
+        Ok(freed)
     }
 
-    fn alloc(&self, seq: SeqKv) -> Result<SeqAlloc> {
+    fn alloc(&self, seq: SeqKv) -> Result<&SeqAlloc> {
         let Some(entry) = self.entries.get(seq.id) else {
             bail!("KV handle {} out of range", seq.id);
         };
         if entry.gen != seq.gen || entry.alloc.is_none() {
             bail!("stale KV handle {} (released or recycled)", seq.id);
         }
-        Ok(entry.alloc.expect("checked above"))
+        Ok(entry.alloc.as_ref().expect("checked above"))
     }
 
     /// Positions a live sequence currently owns pages for.
@@ -192,18 +397,62 @@ impl KvPager {
         Ok(self.alloc(seq)?.positions)
     }
 
+    /// Blocks a live sequence holds (shared blocks counted once per
+    /// holder).
+    pub fn seq_blocks(&self, seq: SeqKv) -> Result<usize> {
+        Ok(self.alloc(seq)?.blocks.len())
+    }
+
+    /// Device bytes backing one sequence's pages, shared blocks included.
+    pub fn seq_bytes(&self, seq: SeqKv) -> Result<u64> {
+        Ok(self.seq_blocks(seq)? as u64 * self.block_bytes())
+    }
+
+    /// Device bytes a swap must actually move: blocks only this sequence
+    /// holds. Shared blocks (refs > 1) stay resident for their other
+    /// holders when this sequence releases, and a prefix-aware
+    /// re-admission pins them again on restore — they never cross the
+    /// link.
+    pub fn seq_private_bytes(&self, seq: SeqKv) -> Result<u64> {
+        let alloc = self.alloc(seq)?;
+        let private = alloc
+            .blocks
+            .iter()
+            .filter(|&&id| self.blocks[id].refs == 1)
+            .count();
+        Ok(private as u64 * self.block_bytes())
+    }
+
+    /// How many of a sequence's first `first` blocks (its prompt window)
+    /// other live sequences also hold. Those blocks survive this
+    /// sequence's release and would be prefix-cache hits on a
+    /// recompute-resume — the eviction chooser uses this to price the
+    /// recompute side with the same credit the resume path applies.
+    pub fn seq_shared_blocks(&self, seq: SeqKv, first: usize) -> Result<usize> {
+        let alloc = self.alloc(seq)?;
+        Ok(alloc
+            .blocks
+            .iter()
+            .take(first)
+            .filter(|&&id| self.blocks[id].refs > 1)
+            .count())
+    }
+
     /// How many new sequences of `positions` the free pool could admit
-    /// right now — the admission gate of continuous batching.
+    /// right now — the admission gate of continuous batching. Counts
+    /// fresh allocations only, so it is conservative for prompts whose
+    /// prefixes are resident (those pin instead of allocating).
     pub fn admissible(&self, positions: usize) -> usize {
         self.free_blocks() / self.blocks_for(positions)
     }
 
     pub fn free_blocks(&self) -> usize {
-        self.total_blocks - self.used_blocks
+        self.total_blocks - self.allocated
     }
 
+    /// Distinct physical blocks in use (shared blocks counted once).
     pub fn used_blocks(&self) -> usize {
-        self.used_blocks
+        self.allocated
     }
 
     pub fn capacity_blocks(&self) -> usize {
@@ -225,13 +474,20 @@ impl KvPager {
         self.active
     }
 
+    /// Cumulative prefix-cache counters.
+    pub fn prefix_stats(&self) -> PrefixStats {
+        self.stats
+    }
+
     fn block_bytes(&self) -> u64 {
         self.block_positions as u64 * self.bytes_per_pos
     }
 
-    /// Bytes currently resident (weights + allocated pages).
+    /// Bytes currently resident (weights + distinct allocated pages —
+    /// sharing means this can be far below the sum of per-sequence
+    /// footprints).
     pub fn resident_bytes(&self) -> u64 {
-        self.weights_bytes + self.used_blocks as u64 * self.block_bytes()
+        self.weights_bytes + self.allocated as u64 * self.block_bytes()
     }
 
     /// Headroom to the VRAM budget.
@@ -246,6 +502,61 @@ impl KvPager {
     pub fn fixed_slot_capacity(&self, max_ctx: usize) -> usize {
         let per_slot = self.bytes_per_pos * max_ctx.max(1) as u64;
         ((self.vram_bytes - self.weights_bytes) / per_slot) as usize
+    }
+
+    #[cfg(test)]
+    fn block_refs(&self, id: usize) -> u32 {
+        self.blocks[id].refs
+    }
+
+    #[cfg(test)]
+    fn seq_block_ids(&self, seq: SeqKv) -> Vec<usize> {
+        self.alloc(seq).expect("live handle").blocks.clone()
+    }
+
+    #[cfg(test)]
+    fn index_entries(&self) -> Vec<usize> {
+        self.prefix_index.values().copied().collect()
+    }
+}
+
+/// Host-RAM pool for swap-based preemption: evicted sequences whose KV is
+/// cheaper to move over PCIe than to recompute park their pages here
+/// until resume. Pure byte accounting — in the simulated deployment the
+/// "pages" are the sequence's retained [`crate::runtime::DecodeState`].
+#[derive(Clone, Copy, Debug)]
+pub struct HostPool {
+    capacity: u64,
+    used: u64,
+}
+
+impl HostPool {
+    pub fn new(capacity_bytes: u64) -> Self {
+        HostPool { capacity: capacity_bytes, used: 0 }
+    }
+
+    /// Reserve `bytes` for a swapped-out sequence; false when the pool
+    /// cannot hold it (the caller falls back to drop-and-recompute).
+    pub fn try_reserve(&mut self, bytes: u64) -> bool {
+        if self.used + bytes > self.capacity {
+            return false;
+        }
+        self.used += bytes;
+        true
+    }
+
+    /// Return a swapped sequence's bytes (resume or terminal failure).
+    pub fn release(&mut self, bytes: u64) {
+        debug_assert!(bytes <= self.used, "host pool release underflow");
+        self.used = self.used.saturating_sub(bytes);
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity_bytes(&self) -> u64 {
+        self.capacity
     }
 }
 
@@ -336,6 +647,7 @@ mod tests {
         assert_eq!(p.resident_bytes(), 1 << 20);
         let a = p.admit(5).unwrap(); // 2 blocks of 4 KiB
         assert_eq!(p.resident_bytes(), (1 << 20) + 2 * (4 << 10));
+        assert_eq!(p.seq_bytes(a).unwrap(), 2 * (4 << 10));
         p.release(a).unwrap();
         assert_eq!(p.headroom_bytes(), (8 << 20) - (1 << 20));
     }
@@ -384,6 +696,179 @@ mod tests {
         for h in held {
             p.release(h).unwrap();
         }
+    }
+
+    /// A padded prefill window: `shared` common tokens then `salt`-unique
+    /// filler up to `len` (models a shared system prompt + per-user tail).
+    fn window(shared: usize, len: usize, salt: i32) -> Vec<i32> {
+        (0..len)
+            .map(|i| if i < shared { i as i32 + 1 } else { salt * 10_000 + i as i32 })
+            .collect()
+    }
+
+    #[test]
+    fn identical_prompts_share_every_block() {
+        let mut p = pager(); // 4-position blocks
+        let w = window(8, 8, 0); // two full blocks
+        let (a, hits_a) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits_a, 0);
+        assert_eq!(p.used_blocks(), 2);
+        let (b, hits_b) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits_b, 2, "the second identical prompt pins both blocks");
+        assert_eq!(p.used_blocks(), 2, "no new physical blocks");
+        assert_eq!(p.seq_block_ids(a), p.seq_block_ids(b));
+        assert_eq!(p.prefix_stats(), PrefixStats { hit_blocks: 2, miss_blocks: 2, cow_copies: 0 });
+        // releases unpin; the last holder frees
+        assert_eq!(p.release(a).unwrap(), 0, "shared blocks survive the first release");
+        assert_eq!(p.used_blocks(), 2);
+        assert_eq!(p.release(b).unwrap(), 2);
+        assert_eq!(p.used_blocks(), 0);
+        assert!(p.index_entries().is_empty(), "freed blocks leave the index");
+    }
+
+    #[test]
+    fn shared_prefix_pins_only_the_common_run() {
+        let mut p = pager();
+        // 12-position windows sharing the first 8 positions (2 of 3 blocks)
+        let (a, _) = p.admit_prompt(&window(8, 12, 1)).unwrap();
+        let (b, hits) = p.admit_prompt(&window(8, 12, 2)).unwrap();
+        assert_eq!(hits, 2);
+        assert_eq!(p.used_blocks(), 4, "3 + 1 fresh tail, not 6");
+        let (ia, ib) = (p.seq_block_ids(a), p.seq_block_ids(b));
+        assert_eq!(&ia[..2], &ib[..2]);
+        assert_ne!(ia[2], ib[2]);
+        assert_eq!(p.block_refs(ia[0]), 2);
+        assert_eq!(p.block_refs(ia[2]), 1);
+        // the eviction chooser's survivability probe: 2 of a's 3 blocks
+        // (and both of its first 2, the "prompt window") are shared
+        assert_eq!(p.seq_shared_blocks(a, 3).unwrap(), 2);
+        assert_eq!(p.seq_shared_blocks(a, 1).unwrap(), 1);
+        // …so a swap of `a` moves only its private tail block
+        assert_eq!(p.seq_private_bytes(a).unwrap(), 4 << 10);
+        assert_eq!(p.seq_bytes(a).unwrap(), 3 * (4 << 10));
+        p.release(b).unwrap();
+        assert_eq!(p.seq_shared_blocks(a, 3).unwrap(), 0, "sole holder shares nothing");
+        assert_eq!(p.seq_private_bytes(a).unwrap(), p.seq_bytes(a).unwrap());
+        p.release(a).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn growing_into_a_shared_tail_copies_on_write() {
+        let mut p = pager();
+        // 6-position windows: one full block + a shared partial tail
+        let w = window(6, 6, 0);
+        let (a, _) = p.admit_prompt(&w).unwrap();
+        let (b, hits) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits, 2, "the deterministic partial tail is shareable too");
+        assert_eq!(p.used_blocks(), 2);
+        let tail = p.seq_block_ids(a)[1];
+        assert_eq!(p.block_refs(tail), 2);
+        // a's first decode write lands inside the shared tail → CoW
+        assert!(p.grow(a, 7).unwrap());
+        assert_eq!(p.prefix_stats().cow_copies, 1);
+        assert_eq!(p.used_blocks(), 3, "one private replacement allocated");
+        let a_tail = p.seq_block_ids(a)[1];
+        assert_ne!(a_tail, tail, "writer got a private copy");
+        assert_eq!(p.block_refs(tail), 1, "b still holds the original");
+        assert_eq!(p.seq_block_ids(b)[1], tail);
+        // the original stays registered: a third identical prompt re-pins it
+        let (c, hits_c) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits_c, 2);
+        assert_eq!(p.block_refs(tail), 2);
+        // a sole-holder hashed tail is unregistered (not copied) on write
+        p.release(c).unwrap();
+        assert!(p.grow(b, 8).unwrap());
+        assert_eq!(p.prefix_stats().cow_copies, 1, "no copy when refs == 1");
+        let (_, hits_d) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits_d, 1, "the diverged tail no longer matches");
+        p.release(a).unwrap();
+        p.release(b).unwrap();
+    }
+
+    #[test]
+    fn cow_respects_the_free_pool() {
+        let mut p = pager();
+        p.limit_blocks(3).unwrap();
+        let w = window(6, 6, 0);
+        let (a, _) = p.admit_prompt(&w).unwrap();
+        let (b, _) = p.admit_prompt(&w).unwrap(); // pins both of a's blocks
+        let hog = p.admit(1).unwrap(); // takes the last free block
+        assert_eq!(p.free_blocks(), 0);
+        // a's first write needs a CoW replacement block that does not
+        // exist: the grow must refuse and change nothing.
+        let before = p.seq_block_ids(a);
+        assert!(!p.grow(a, 7).unwrap());
+        assert_eq!(p.seq_block_ids(a), before);
+        assert_eq!(p.seq_positions(a).unwrap(), 6);
+        assert_eq!(p.prefix_stats().cow_copies, 0);
+        p.release(hog).unwrap();
+        assert!(p.grow(a, 7).unwrap(), "freed pages make the CoW succeed");
+        assert_eq!(p.prefix_stats().cow_copies, 1);
+        assert_eq!(p.seq_positions(b).unwrap(), 6, "the other holder is untouched");
+        p.release(a).unwrap();
+        p.release(b).unwrap();
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_cached_admission_hits_the_acceptance_multiplier() {
+        // The ISSUE 5 acceptance point: Qwen2.5-1.5B q8_0 on a CMP 170HX
+        // (8 GiB, 1,625,610,592 bytes of weights → 15181 16-position
+        // blocks), ctx 4096, 1024-position mean sequences, all sharing a
+        // 512-position system prompt. The paged baseline admits
+        // ⌊15181/64⌋ = 237; with prefix sharing the 32 prompt blocks are
+        // resident once and each later admission allocates only its 32
+        // private blocks: 1 + ⌊(15181 − 64)/32⌋ = 473 — ≥ 1.5× (≈2×) the
+        // PR 3 baseline. Recorded as `serve_prefix_cache` in
+        // BENCH_sim_throughput.json.
+        use crate::device::registry;
+        use crate::llm::model::ModelDesc;
+        use crate::llm::quant;
+        let model = ModelDesc::qwen25_15b();
+        let dev = registry::cmp170hx();
+        let mut p = KvPager::new(
+            16,
+            model.kv_bytes_per_pos(),
+            dev.mem.capacity_bytes,
+            model.weight_bytes(&quant::Q8_0),
+        )
+        .unwrap();
+        let (mean_seq, shared) = (1024usize, 512usize);
+        let baseline = p.admissible(mean_seq);
+        assert_eq!(baseline, 237, "the PR 3 serve_concurrency operating point");
+        let mut held = Vec::new();
+        while let Some((kv, _)) = p.admit_prompt(&window(shared, mean_seq, held.len() as i32)) {
+            held.push(kv);
+        }
+        let shared_blocks = shared / 16;
+        let per_seq = mean_seq / 16;
+        let analytic = 1 + (p.capacity_blocks() - per_seq) / (per_seq - shared_blocks);
+        assert_eq!(held.len(), analytic, "admission must match the analytic point");
+        assert_eq!(held.len(), 473);
+        assert!(
+            held.len() as f64 >= 1.5 * baseline as f64,
+            "prefix-cached {} vs paged {baseline}",
+            held.len()
+        );
+        assert!(p.resident_bytes() <= dev.mem.capacity_bytes);
+        for kv in held {
+            p.release(kv).unwrap();
+        }
+        assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn host_pool_reserves_and_releases() {
+        let mut pool = HostPool::new(100);
+        assert!(pool.try_reserve(60));
+        assert!(!pool.try_reserve(50), "over-capacity reservation refused");
+        assert!(pool.try_reserve(40));
+        assert_eq!(pool.used_bytes(), 100);
+        pool.release(60);
+        assert_eq!(pool.used_bytes(), 40);
+        assert!(pool.try_reserve(60));
+        assert_eq!(pool.capacity_bytes(), 100);
     }
 
     #[test]
@@ -469,6 +954,100 @@ mod tests {
                 p.release(h).unwrap();
             }
             assert_eq!(p.used_blocks(), 0);
+        });
+    }
+
+    #[test]
+    fn prop_shared_prefix_refcounts_and_index_never_dangle() {
+        // The ISSUE 5 release-path property: random interleavings of
+        // shared-prefix admit / CoW grow / release against a shadow model
+        // of per-sequence block tables. After every step: each block's
+        // refcount equals the number of live holders (so it can never
+        // underflow), the prefix index only points at blocks with live
+        // holders (never at a freed block), distinct-held-blocks equals
+        // the pager's used count, and used + free partitions the budget.
+        forall(0xC0FFEE, 120, |rng: &mut Rng| {
+            let bp = rng.range(1, 6) as usize;
+            let total = rng.range(4, 48) as usize;
+            let weights = 1u64 << 10;
+            let vram = weights + total as u64 * (bp as u64 * 64);
+            let mut p = KvPager::new(bp, 64, vram, weights).unwrap();
+            // a small pool of prompt families: windows share a prefix
+            // within a family, so admissions pin each other's blocks
+            let families: Vec<(usize, usize)> = (0..3)
+                .map(|_| {
+                    let len = rng.range(1, 4 * bp as u64) as usize;
+                    (rng.range(0, len as u64 + 1) as usize, len)
+                })
+                .collect();
+            let mut held: Vec<(SeqKv, Vec<usize>, usize)> = Vec::new(); // handle, shadow blocks, positions
+            for _ in 0..80 {
+                match rng.below(4) {
+                    0 | 1 => {
+                        // admit from a random family with a random salt
+                        // (small salt range → frequent identical prompts)
+                        let (shared, len) = *rng.pick(&families);
+                        let salt = rng.range(0, 3) as i32;
+                        let w = window(shared, len, salt);
+                        let free_before = p.free_blocks();
+                        if let Some((h, hits)) = p.admit_prompt(&w) {
+                            let ids = p.seq_block_ids(h);
+                            assert_eq!(ids.len(), len.max(1).div_ceil(bp));
+                            assert!(hits <= ids.len());
+                            assert_eq!(free_before - p.free_blocks(), ids.len() - hits);
+                            held.push((h, ids, len));
+                        } else {
+                            assert!(p.free_blocks() < len.max(1).div_ceil(bp));
+                        }
+                    }
+                    2 => {
+                        // grow (may CoW a shared tail)
+                        if let Some(i) =
+                            (!held.is_empty()).then(|| rng.below(held.len() as u64) as usize)
+                        {
+                            let target = held[i].2 + rng.range(0, 2 * bp as u64) as usize;
+                            if p.grow(held[i].0, target).unwrap() {
+                                held[i].2 = held[i].2.max(target);
+                                held[i].1 = p.seq_block_ids(held[i].0);
+                            }
+                        }
+                    }
+                    _ => {
+                        // release a random holder
+                        if let Some(i) =
+                            (!held.is_empty()).then(|| rng.below(held.len() as u64) as usize)
+                        {
+                            let (h, _, _) = held.swap_remove(i);
+                            p.release(h).unwrap();
+                            assert!(p.release(h).is_err(), "double release must fail");
+                        }
+                    }
+                }
+                // shadow-model invariants
+                let mut refs: std::collections::HashMap<usize, u32> =
+                    std::collections::HashMap::new();
+                for (_, ids, _) in &held {
+                    for &id in ids {
+                        *refs.entry(id).or_default() += 1;
+                    }
+                }
+                for (&id, &expect) in &refs {
+                    assert_eq!(p.block_refs(id), expect, "refcount drifted on block {id}");
+                }
+                assert_eq!(p.used_blocks(), refs.len(), "distinct held blocks == used");
+                assert_eq!(p.used_blocks() + p.free_blocks(), p.capacity_blocks());
+                for id in p.index_entries() {
+                    assert!(
+                        refs.contains_key(&id),
+                        "prefix index points at freed block {id}"
+                    );
+                }
+            }
+            for (h, _, _) in held {
+                p.release(h).unwrap();
+            }
+            assert_eq!(p.used_blocks(), 0);
+            assert!(p.index_entries().is_empty());
         });
     }
 }

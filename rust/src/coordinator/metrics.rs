@@ -45,6 +45,32 @@ pub struct Metrics {
     /// Times the waiting-queue aging gate engaged for a parked preempted
     /// sequence (new admissions held back until it resumed).
     pub aged_promotions: u64,
+    /// Prompt KV blocks served by pinning an already-resident block
+    /// (prefix-cache hits).
+    pub prefix_hits: u64,
+    /// Prompt KV blocks allocated fresh at admission (prefix-cache
+    /// misses).
+    pub prefix_misses: u64,
+    /// Shared KV blocks privatized on first write (copy-on-write).
+    pub cow_copies: u64,
+    /// Simulated prefill seconds *not* spent because the positions were
+    /// already resident in shared prefix blocks — the saved side of the
+    /// ledger `wasted_prefill_s` is the wasted side of.
+    pub saved_prefill_s: f64,
+    /// Preemption victims whose KV pages were parked in host RAM instead
+    /// of dropped (the PCIe-priced swap path).
+    pub swap_outs: u64,
+    /// Swapped-out sequences restored from host RAM (no recompute).
+    pub swap_ins: u64,
+    /// Bytes moved over the host link by swap-outs and swap-ins.
+    pub swap_bytes: u64,
+    /// Simulated PCIe seconds spent moving swapped pages (the §3 model at
+    /// the card's link width).
+    pub swap_transfer_s: f64,
+    /// Simulated device seconds of recompute avoided by swapping, net of
+    /// the transfer paid for it — what the swap-vs-recompute chooser
+    /// bought.
+    pub saved_recompute_s: f64,
 }
 
 impl Metrics {
@@ -168,8 +194,37 @@ impl Metrics {
         self.wasted_prefill_s += other.wasted_prefill_s;
         self.steals += other.steals;
         self.aged_promotions += other.aged_promotions;
+        self.prefix_hits += other.prefix_hits;
+        self.prefix_misses += other.prefix_misses;
+        self.cow_copies += other.cow_copies;
+        self.saved_prefill_s += other.saved_prefill_s;
+        self.swap_outs += other.swap_outs;
+        self.swap_ins += other.swap_ins;
+        self.swap_bytes += other.swap_bytes;
+        self.swap_transfer_s += other.swap_transfer_s;
+        self.saved_recompute_s += other.saved_recompute_s;
         self.latency_sum_s += other.latency_sum_s;
         self.latencies_s.extend_from_slice(&other.latencies_s);
+    }
+
+    /// Overwrite the prefix-cache counters from a pager's cumulative
+    /// [`crate::coordinator::kv::PrefixStats`] snapshot. Assignment, not
+    /// accumulation: each node's pager is the sole source for its node
+    /// metrics, and [`Metrics::merge`] sums across nodes as usual.
+    pub fn sync_prefix(&mut self, s: crate::coordinator::kv::PrefixStats) {
+        self.prefix_hits = s.hit_blocks;
+        self.prefix_misses = s.miss_blocks;
+        self.cow_copies = s.cow_copies;
+    }
+
+    /// Prefix-cache block hit rate over all prompt blocks admitted.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let total = self.prefix_hits + self.prefix_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.prefix_hits as f64 / total as f64
+        }
     }
 
     /// Render a summary block in one pass: at most one cache rebuild for
@@ -177,6 +232,8 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
+             prefix: hits={} misses={} ({:.0}%) cow={} saved_sim={:.4}s\n\
+             swap: out={} in={} {:.1} MiB link_s={:.4} saved_sim={:.4}s\n\
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
@@ -185,6 +242,16 @@ impl Metrics {
             self.errors,
             self.tokens_out,
             self.mean_batch_size(),
+            self.prefix_hits,
+            self.prefix_misses,
+            self.prefix_hit_rate() * 100.0,
+            self.cow_copies,
+            self.saved_prefill_s,
+            self.swap_outs,
+            self.swap_ins,
+            self.swap_bytes as f64 / (1u64 << 20) as f64,
+            self.swap_transfer_s,
+            self.saved_recompute_s,
             self.preemptions,
             self.resumes,
             self.wasted_prefill_s,
@@ -349,6 +416,15 @@ mod tests {
         m.wasted_prefill_s = 0.5;
         m.steals = 4;
         m.aged_promotions = 1;
+        m.prefix_hits = 6;
+        m.prefix_misses = 2;
+        m.cow_copies = 1;
+        m.saved_prefill_s = 0.25;
+        m.swap_outs = 2;
+        m.swap_ins = 2;
+        m.swap_bytes = 3 << 20;
+        m.swap_transfer_s = 0.125;
+        m.saved_recompute_s = 1.5;
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
@@ -358,6 +434,54 @@ mod tests {
         assert!(s.contains("wasted_sim=0.5000s"), "{s}");
         assert!(s.contains("steals=4"), "{s}");
         assert!(s.contains("aged=1"), "{s}");
+        assert!(s.contains("hits=6 misses=2 (75%)"), "{s}");
+        assert!(s.contains("cow=1"), "{s}");
+        assert!(s.contains("saved_sim=0.2500s"), "{s}");
+        assert!(s.contains("out=2 in=2 3.0 MiB"), "{s}");
+        assert!(s.contains("saved_sim=1.5000s"), "{s}");
+    }
+
+    #[test]
+    fn prefix_sync_and_hit_rate() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0, "no admissions is not a hit");
+        m.sync_prefix(crate::coordinator::kv::PrefixStats {
+            hit_blocks: 30,
+            miss_blocks: 10,
+            cow_copies: 3,
+        });
+        assert_eq!(m.prefix_hits, 30);
+        assert_eq!(m.prefix_misses, 10);
+        assert_eq!(m.cow_copies, 3);
+        assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
+        // sync overwrites (the pager snapshot is cumulative)…
+        m.sync_prefix(crate::coordinator::kv::PrefixStats {
+            hit_blocks: 40,
+            miss_blocks: 12,
+            cow_copies: 3,
+        });
+        assert_eq!(m.prefix_hits, 40);
+        // …while merge sums across nodes
+        let mut other = Metrics::new();
+        other.prefix_hits = 5;
+        other.prefix_misses = 8;
+        other.cow_copies = 1;
+        other.saved_prefill_s = 0.5;
+        other.swap_outs = 7;
+        other.swap_ins = 6;
+        other.swap_bytes = 1024;
+        other.swap_transfer_s = 0.25;
+        other.saved_recompute_s = 2.0;
+        m.merge(&other);
+        assert_eq!(m.prefix_hits, 45);
+        assert_eq!(m.prefix_misses, 20);
+        assert_eq!(m.cow_copies, 4);
+        assert!((m.saved_prefill_s - 0.5).abs() < 1e-12);
+        assert_eq!(m.swap_outs, 7);
+        assert_eq!(m.swap_ins, 6);
+        assert_eq!(m.swap_bytes, 1024);
+        assert!((m.swap_transfer_s - 0.25).abs() < 1e-12);
+        assert!((m.saved_recompute_s - 2.0).abs() < 1e-12);
     }
 
     #[test]

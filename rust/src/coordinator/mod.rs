@@ -21,18 +21,28 @@
 //! join its decode round whenever the [`kv::KvPager`] can hold their
 //! prefill window ([`scheduler::plan_admission`]), grow VRAM
 //! block-by-block as they decode, and under page pressure the
-//! longest-remaining sequence is **preempted and requeued**
-//! ([`scheduler::plan_eviction_shielded`]): KV dropped, prefill recomputed
-//! on resume, vLLM-style, so long generations cannot starve short ones —
-//! and a parked sequence past [`batcher::BatchPolicy::aging_rounds`]
-//! freezes new admissions until it resumes (the resumed sequence is
-//! shielded from re-eviction), so short traffic cannot starve a parked
-//! long one either. [`batcher::BatchPolicy`] carries the admission,
-//! paging, and aging knobs. Each node owns its own runtime, pager sized
-//! to its card's VRAM, and a per-card simulated device-time/energy
-//! overlay, so [`metrics::FleetMetrics`] reports tokens/s, latency
-//! percentiles, tokens/joule, and the preemption/recompute tax for any
-//! mix of registry cards — per node *and* per tenant.
+//! longest-remaining sequence is **preempted and requeued** (remaining-
+//! length ties broken toward the most over-served tenant,
+//! [`scheduler::plan_eviction_weighted`]), vLLM-style, so long
+//! generations cannot starve short ones — and a parked sequence past
+//! [`batcher::BatchPolicy::aging_rounds`] freezes new admissions until it
+//! resumes (the resumed sequence is shielded from re-eviction), so short
+//! traffic cannot starve a parked long one either. The pager is
+//! **content-aware**: admission chain-hashes the prompt window and pins
+//! already-resident blocks with copy-on-write on first write
+//! ([`kv::KvPager::admit_prompt`]) — identical system prompts cost one
+//! physical copy, another large admission multiplier on 8 GB cards. The
+//! preemption comeback is **cost-aware**: [`scheduler::choose_preempt`]
+//! prices the §3 PCIe round trip of the victim's pages at the card's
+//! link width against the overlay's recompute estimate, swapping to a
+//! host-RAM pool ([`kv::HostPool`]) when the link wins and recomputing
+//! when the GPU does. [`batcher::BatchPolicy`] carries the admission,
+//! paging, prefix-cache, swap, and aging knobs. Each node owns its own
+//! runtime, pager sized to its card's VRAM, and a per-card simulated
+//! device-time/energy overlay, so [`metrics::FleetMetrics`] reports
+//! tokens/s, latency percentiles, tokens/joule, the preemption/recompute
+//! tax, and the prefix-hit/CoW/swap ledgers for any mix of registry
+//! cards — per node *and* per tenant.
 //!
 //! Python never runs here: the executables carry the weights.
 
@@ -45,7 +55,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatchPolicy;
-pub use kv::{KvPager, SeqKv};
+pub use kv::{HostPool, KvPager, PrefixStats, SeqKv};
 pub use metrics::{jain_index, FleetMetrics, Metrics};
 pub use request::{GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};

@@ -13,7 +13,11 @@ pub struct GenRequest {
     /// caps). [`crate::coordinator::ServerHandle::submit`] uses the
     /// default tenant; `submit_as` attributes explicitly.
     pub tenant: TenantId,
-    /// Prompt token ids (≤ the model's prefill window).
+    /// Prompt token ids (≤ the model's prefill window). These reach the
+    /// worker's admission step intact: the prefix-sharing pager
+    /// chain-hashes the padded prompt window block-by-block and pins
+    /// already-resident blocks instead of allocating
+    /// ([`crate::coordinator::kv::KvPager::admit_prompt`]).
     pub prompt: Vec<i32>,
     /// Tokens to generate (bounded by KV capacity at serve time).
     pub max_tokens: usize,
@@ -48,8 +52,14 @@ pub struct GenResponse {
     pub simulated_device_s: f64,
     /// Times this request was preempted under KV page pressure and later
     /// resumed (each resume recomputed prefill and replayed the tokens
-    /// generated so far).
+    /// generated so far — unless the eviction swapped, see
+    /// [`GenResponse::swaps`]).
     pub preemptions: u64,
+    /// Of those preemptions, how many parked the KV pages in host RAM
+    /// over PCIe and restored them on resume instead of recomputing —
+    /// chosen per victim when the §3 transfer model prices the round trip
+    /// below the overlay's recompute estimate.
+    pub swaps: u64,
     /// Fleet node index that served (or rejected) the request. Requests
     /// shed at the QoS dispatch stage (energy budget exhausted, no
     /// healthy node) report the node the router would have picked, or 0
@@ -85,6 +95,7 @@ mod tests {
             decode_s: 0.3,
             simulated_device_s: 0.05,
             preemptions: 0,
+            swaps: 0,
             node: 0,
         };
         assert!(r.ok());
@@ -114,6 +125,7 @@ mod tests {
                 decode_s: 0.0,
                 simulated_device_s: 0.0,
                 preemptions: 0,
+                swaps: 0,
                 node: 0,
             })
             .unwrap();

@@ -15,6 +15,22 @@
 //! longest-remaining sequence is dropped back to the waiting queue (KV
 //! freed, prefill recomputed on resume) so short requests keep completing
 //! instead of starving behind a long generation.
+//! [`plan_eviction_weighted`] additionally breaks remaining-length ties
+//! by the owner tenant's service surplus, extending WFQ fairness into the
+//! KV pager.
+//!
+//! Eviction is also **cost-aware**: [`choose_preempt`] prices what a
+//! victim's comeback costs each way — replaying prefill + generated
+//! tokens at the node's calibrated overlay rates, versus round-tripping
+//! its KV pages over the card's (often x1/x4-crippled) PCIe link via the
+//! §3 model — and picks the cheaper. A 170HX on a stock link swaps long
+//! sequences (decode replay dwarfs the transfer) but recomputes short
+//! ones whose prefill replay is cheaper than the DMA; an x16-modded card
+//! swaps almost everything. Recompute burns GPU joules where a swap burns
+//! link time, so this is the scheduler-level version of the paper's
+//! power-aware evaluation stance.
+
+use crate::memhier::pcie::PcieLink;
 
 use super::batcher::BatchPolicy;
 
@@ -100,14 +116,66 @@ pub fn plan_eviction(seqs: &[SeqView]) -> Option<usize> {
 /// bounds starvation without sacrificing engine liveness. Indices past
 /// `shielded`'s length are unshielded.
 pub fn plan_eviction_shielded(seqs: &[SeqView], shielded: &[bool]) -> Option<usize> {
+    plan_eviction_weighted(seqs, shielded, &[])
+}
+
+/// [`plan_eviction_shielded`] with tenant-aware tie breaking: `overserve[i]`
+/// is the owning tenant's weight-normalized service so far (tokens served
+/// ÷ WFQ weight — the surplus the deficit-round-robin queue meters).
+/// Remaining length still governs (never throw away nearly-done work),
+/// but **at equal remaining length the most over-served tenant's sequence
+/// is evicted first**, extending admission-side fairness into the KV
+/// pager. Missing entries read as zero surplus; final ties still break
+/// toward the latest admission.
+pub fn plan_eviction_weighted(
+    seqs: &[SeqView],
+    shielded: &[bool],
+    overserve: &[f64],
+) -> Option<usize> {
+    let surplus = |i: usize| overserve.get(i).copied().unwrap_or(0.0);
     let pick = |all: bool| {
         seqs.iter()
             .enumerate()
             .filter(|&(i, s)| !s.done() && (all || !shielded.get(i).copied().unwrap_or(false)))
-            .max_by_key(|&(i, s)| (s.remaining(), i))
+            .max_by(|&(i, a), &(j, b)| {
+                a.remaining()
+                    .cmp(&b.remaining())
+                    .then(surplus(i).total_cmp(&surplus(j)))
+                    .then(i.cmp(&j))
+            })
             .map(|(i, _)| i)
     };
     pick(false).or_else(|| pick(true))
+}
+
+/// How a preemption victim should come back.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PreemptAction {
+    /// Drop the KV; recompute prefill and replay generated tokens on
+    /// resume (PR 3's only path).
+    Recompute,
+    /// Park the KV pages in host RAM over PCIe; restore them on resume.
+    Swap,
+}
+
+/// Simulated seconds to round-trip `kv_bytes` of pages over `link` — the
+/// §3 PCIe model priced at the card's actual lane width (swap-out now,
+/// swap-in at resume).
+pub fn swap_round_trip_s(kv_bytes: u64, link: &PcieLink) -> f64 {
+    2.0 * link.transfer_time(kv_bytes)
+}
+
+/// Choose the cheaper comeback for a preemption victim: round-tripping
+/// `kv_bytes` over this card's host link, or `recompute_s` of device time
+/// replaying the sequence (prefill window + generated tokens, priced by
+/// the node's calibrated overlay). Ties go to recompute — it needs no
+/// host-pool reservation.
+pub fn choose_preempt(kv_bytes: u64, link: &PcieLink, recompute_s: f64) -> PreemptAction {
+    if swap_round_trip_s(kv_bytes, link) < recompute_s {
+        PreemptAction::Swap
+    } else {
+        PreemptAction::Recompute
+    }
 }
 
 /// Total decode rounds a batch needs (the longest target governs — decode
@@ -191,6 +259,77 @@ mod tests {
         // done sequences are never victims even when all actives shielded
         let seqs = [seq(0, 9, 9), seq(1, 0, 5)];
         assert_eq!(plan_eviction_shielded(&seqs, &[false, true]), Some(1));
+    }
+
+    #[test]
+    fn weighted_eviction_prefers_the_over_served_tenant_at_equal_length() {
+        // Three sequences with equal remaining work, owned by tenants with
+        // normalized service 10, 250, and 40 tokens/weight: the most
+        // over-served tenant's sequence goes back to the queue first.
+        let seqs = [seq(0, 1, 6), seq(1, 2, 7), seq(2, 0, 5)];
+        assert_eq!(plan_eviction_weighted(&seqs, &[], &[10.0, 250.0, 40.0]), Some(1));
+        // remaining length still dominates the surplus…
+        let seqs = [seq(0, 0, 9), seq(1, 2, 7), seq(2, 0, 5)];
+        assert_eq!(plan_eviction_weighted(&seqs, &[], &[0.0, 250.0, 40.0]), Some(0));
+        // …the shield still outranks the surplus…
+        let seqs = [seq(0, 1, 6), seq(1, 2, 7), seq(2, 0, 5)];
+        assert_eq!(
+            plan_eviction_weighted(&seqs, &[false, true, false], &[10.0, 250.0, 40.0]),
+            Some(2)
+        );
+        // …and with no surplus data the old latest-admission tie-break holds
+        assert_eq!(plan_eviction_weighted(&seqs, &[], &[]), Some(2));
+    }
+
+    #[test]
+    fn swap_chooser_prices_pcie_against_recompute_at_x1_and_x16() {
+        use crate::device::registry;
+        // A 170HX's KV footprint for a ~1k-position sequence: ~29 MB.
+        let kv_bytes: u64 = 1024 * 28_672;
+        let x1 = registry::cmp170hx().pcie.with_lanes(1);
+        let x16 = registry::cmp170hx().pcie.with_lanes(16);
+        let (t1, t16) = (swap_round_trip_s(kv_bytes, &x1), swap_round_trip_s(kv_bytes, &x16));
+        assert!(t1 > t16, "narrower link, slower swap: {t1} vs {t16}");
+        // A recompute estimate between the two transfer times: the x1 card
+        // recomputes this sequence, the x16-modded card swaps it.
+        let recompute_s = (t1 + t16) / 2.0;
+        assert_eq!(choose_preempt(kv_bytes, &x1, recompute_s), PreemptAction::Recompute);
+        assert_eq!(choose_preempt(kv_bytes, &x16, recompute_s), PreemptAction::Swap);
+        // On the same x1 link, a long sequence (decode replay dominates the
+        // recompute estimate) swaps while a short one recomputes — the
+        // per-victim decision the engine makes.
+        let (prefill_s, decode_s) = (0.2e-3, 40e-3); // per token, 170HX-ish
+        let cost = |prefill_t: usize, replay: usize| {
+            prefill_s * prefill_t as f64 + decode_s * replay as f64
+        };
+        let bytes = |positions: u64| positions * 28_672;
+        assert_eq!(
+            choose_preempt(bytes(512), &x1, cost(512, 0)),
+            PreemptAction::Recompute,
+            "a fresh-out-of-prefill victim replays cheaper than the x1 DMA"
+        );
+        assert_eq!(
+            choose_preempt(bytes(1024), &x1, cost(512, 512)),
+            PreemptAction::Swap,
+            "half a second of decode replay dwarfs the x1 transfer"
+        );
+    }
+
+    #[test]
+    fn prop_swap_chooser_matches_the_cost_comparison() {
+        use crate::memhier::pcie::{PcieGen, PcieLink};
+        forall(0x5A9, 300, |rng: &mut Rng| {
+            let gen = *rng.pick(&[PcieGen::Gen1, PcieGen::Gen2, PcieGen::Gen3, PcieGen::Gen4]);
+            let link = PcieLink::new(gen, rng.range(1, 17) as u32);
+            let kv_bytes = rng.range(0, 1 << 28);
+            let recompute_s = rng.f64_range(0.0, 2.0);
+            let want = if swap_round_trip_s(kv_bytes, &link) < recompute_s {
+                PreemptAction::Swap
+            } else {
+                PreemptAction::Recompute
+            };
+            assert_eq!(choose_preempt(kv_bytes, &link, recompute_s), want);
+        });
     }
 
     #[test]

@@ -12,14 +12,22 @@
 //! batching — no stop-the-world batch windows), prefills it, and
 //! interleaves decode steps per [`scheduler::plan_round_into`], growing
 //! the sequence's KV pages block-by-block, until the sequence hits its
-//! target → reply on the request's channel. An **idle** worker whose
-//! queue runs dry steals the newest request from the deepest peer queue,
-//! capping tail latency when routing guessed wrong. When a round cannot
-//! allocate growth pages, the engine preempts the longest-remaining
-//! sequence ([`scheduler::plan_eviction_shielded`]): its KV is dropped
-//! and the request is parked on the waiting queue, to resume later by
+//! target → reply on the request's channel. Admission is **content-aware**:
+//! the pager chain-hashes the prompt window and pins already-resident
+//! blocks ([`KvPager::admit_prompt`]) — identical system prompts cost one
+//! physical copy, copy-on-write privatizes a shared tail on first decode
+//! write. An **idle** worker whose queue runs dry steals the newest
+//! request from the deepest peer queue, capping tail latency when routing
+//! guessed wrong. When a round cannot allocate growth pages, the engine
+//! preempts the longest-remaining sequence (ties broken toward the most
+//! over-served tenant, [`scheduler::plan_eviction_weighted`]) and prices
+//! its comeback per victim ([`scheduler::choose_preempt`]): either the KV
+//! is dropped and the request parks on the waiting queue to resume by
 //! recomputing prefill and replaying its generated tokens (greedy decode
-//! is deterministic, so the replay reconstructs the identical state). A
+//! is deterministic, so the replay reconstructs the identical state), or
+//! — when the §3 PCIe round trip at this card's link width is cheaper
+//! than the recompute — the pages are **swapped** to a host-RAM pool and
+//! restored on resume with no recompute at all. A
 //! parked sequence that waits past [`BatchPolicy::aging_rounds`] engine
 //! rounds freezes new admissions until it resumes, and the resumed
 //! sequence is shielded from re-eviction — sustained short traffic can no
@@ -47,6 +55,7 @@ use crate::isa::pass::FmadPolicy;
 use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
 use crate::llm::quant;
+use crate::memhier::pcie::PcieLink;
 use crate::qos::{
     Admission, AdmissionQueue, NodeQueues, Popped, QosConfig, TenantAccounts, TenantId,
     TenantRegistry, WaitPop,
@@ -54,13 +63,20 @@ use crate::qos::{
 use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 
 use super::batcher::BatchPolicy;
-use super::kv::{KvPager, SeqKv};
+use super::kv::{HostPool, KvPager, SeqKv};
 use super::metrics::{FleetMetrics, Metrics};
 use super::request::{GenRequest, GenResponse};
 use super::router::{Fleet, Node, RoutePolicy};
 use super::scheduler::{
-    plan_admission, plan_eviction_shielded, plan_round_into, SeqView, StepPolicy,
+    choose_preempt, plan_admission, plan_eviction_weighted, plan_round_into, swap_round_trip_s,
+    PreemptAction, SeqView, StepPolicy,
 };
+
+/// Power charged to a simulated second of swap transfer: the DMA engine
+/// plus the near-idle board — an order of magnitude below the TDP a
+/// recompute's prefill burns, which is exactly why swapping can win the
+/// energy ledger as well as the time one.
+const SWAP_LINK_W: f64 = 15.0;
 
 /// One card of the serving fleet: the simulated device identity and the
 /// fmad policy its deployment would run.
@@ -162,6 +178,22 @@ impl Overlay {
         self.prefill_s_per_token * prefill_t as f64 * self.prefill_w
             + self.decode_s_per_token * max_tokens as f64 * self.decode_w
     }
+
+    /// Simulated device seconds to rebuild a preempted sequence from
+    /// scratch: recompute the prefill window, then replay `replay_steps`
+    /// generated tokens. The recompute side of the swap-vs-recompute
+    /// choice ([`choose_preempt`]).
+    fn recompute_s(&self, prefill_t: usize, replay_steps: usize) -> f64 {
+        self.prefill_s_per_token * prefill_t as f64
+            + self.decode_s_per_token * replay_steps as f64
+    }
+
+    /// Simulated joules for the same rebuild (prefill at the TDP
+    /// envelope, replay at calibrated decode power) — the same formula
+    /// the dispatch stage prices energy budgets with.
+    fn recompute_j(&self, prefill_t: usize, replay_steps: usize) -> f64 {
+        self.estimate_j(prefill_t, replay_steps)
+    }
 }
 
 /// Reject artifact geometries the admission path cannot serve: a runtime
@@ -243,6 +275,9 @@ impl Server {
 
         let queue_depth = config.queue_depth.max(1);
         let weights_bytes = model.weight_bytes(&quant::Q8_0);
+        // Tenant WFQ weights, shared with the workers so eviction can
+        // normalize each tenant's service when picking a victim.
+        let tenant_weights: Arc<Vec<f64>> = Arc::new(registry.weights());
         let accounts = Arc::new(Mutex::new(TenantAccounts::new(&registry, Instant::now())));
         let tenant_metrics: Arc<Vec<Mutex<Metrics>>> =
             Arc::new((0..registry.len()).map(|_| Mutex::new(Metrics::new())).collect());
@@ -263,6 +298,10 @@ impl Server {
             let overlay = Overlay::from_row(row, &node.device);
             overlays.push(overlay);
             let vram_bytes = node.device.mem.capacity_bytes;
+            // This card's actual host link (x1/x4 stock, x16 modded) —
+            // what the swap-vs-recompute chooser prices transfers at.
+            let link = node.device.pcie;
+            let tenant_weights = Arc::clone(&tenant_weights);
             let artifacts = artifacts.clone();
             let ready = ready_tx.clone();
             let fleet = Arc::clone(&fleet);
@@ -335,9 +374,12 @@ impl Server {
                         policy,
                         step_policy,
                         overlay,
+                        link,
                         pager,
+                        host_pool: HostPool::new(policy.host_pool_bytes),
                         metrics,
                         tenant_metrics,
+                        tenant_weights,
                         accounts,
                         fleet,
                         steal,
@@ -724,9 +766,15 @@ struct NodeWorker {
     policy: BatchPolicy,
     step_policy: StepPolicy,
     overlay: Overlay,
+    /// This card's host link — prices swap transfers in the §3 model.
+    link: PcieLink,
     pager: KvPager,
+    /// Host-RAM budget for swapped-out KV pages.
+    host_pool: HostPool,
     metrics: Arc<Mutex<Metrics>>,
     tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
+    /// WFQ weights by tenant id, for service-normalized eviction.
+    tenant_weights: Arc<Vec<f64>>,
     accounts: Arc<Mutex<TenantAccounts>>,
     fleet: Arc<Mutex<Fleet>>,
     steal: bool,
@@ -746,6 +794,8 @@ struct Live {
     sim_s: f64,
     sim_j: f64,
     preemptions: u64,
+    /// Preemptions that swapped to host RAM instead of recomputing.
+    swaps: u64,
     /// Resumed through the aging gate: shielded from re-eviction (victim
     /// of last resort) so the park → resume → re-evict cycle terminates.
     shielded: bool,
@@ -778,6 +828,18 @@ struct Preempted {
     sim_s: f64,
     sim_j: f64,
     preemptions: u64,
+    /// Preemptions that swapped to host RAM instead of recomputing.
+    swaps: u64,
+    /// The decode state parked in host RAM when this eviction swapped
+    /// instead of dropping — resume restores it over PCIe and skips the
+    /// recompute entirely. `None` is the drop-and-replay path.
+    swapped: Option<DecodeState>,
+    /// Host-pool bytes reserved for the swapped pages (0 when dropped).
+    swap_bytes: u64,
+    /// The recompute estimate the eviction chooser priced the swap
+    /// against (prefix-credited). Swap-in settles `saved_recompute_s`
+    /// from the same number, so the ledger matches the decision.
+    recompute_est_s: f64,
     /// When the sequence was evicted — parked time is queueing time, and
     /// the client-observed latency must include it.
     parked_at: Instant,
@@ -814,6 +876,7 @@ fn worker_loop(mut w: NodeWorker) {
     // a round allocates nothing after the first.
     let mut views: Vec<SeqView> = Vec::new();
     let mut shield: Vec<bool> = Vec::new();
+    let mut overserve: Vec<f64> = Vec::new();
     let mut plan: Vec<usize> = Vec::new();
     let mut stalled: Vec<usize> = Vec::new();
     let mut open = true;
@@ -831,7 +894,12 @@ fn worker_loop(mut w: NodeWorker) {
                     if live.is_empty() {
                         // Nothing holds pages yet the resume cannot fit:
                         // the pool can never hold this sequence. Fail it
-                        // terminally rather than spinning forever.
+                        // terminally rather than spinning forever (and
+                        // hand back its host-pool reservation if the
+                        // eviction had swapped).
+                        if parked.swapped.is_some() {
+                            w.host_pool.release(parked.swap_bytes);
+                        }
                         let queue_s = parked.queue_s_now();
                         reject(
                             &mut w,
@@ -940,8 +1008,6 @@ fn worker_loop(mut w: NodeWorker) {
                 generated: l.tokens.len(),
                 target: l.target(),
             }));
-            shield.clear();
-            shield.extend(live.iter().map(|l| l.shielded));
             plan_round_into(w.step_policy, &views, &mut plan);
             if plan.is_empty() {
                 break;
@@ -965,8 +1031,21 @@ fn worker_loop(mut w: NodeWorker) {
             // future page demand and never throws away a nearly-done
             // sequence. Aged resumes are shielded (victims of last
             // resort), so the park → resume → re-evict cycle terminates.
-            let victim =
-                plan_eviction_shielded(&views, &shield).expect("non-empty plan has an active seq");
+            // The shield and the tenant service surplus (tokens served on
+            // the owner's rollup ÷ its WFQ weight — the tie-breaker that
+            // extends fairness into the pager) are computed only here, on
+            // the pressure path, keeping the per-sequence metric locks
+            // off pressure-free rounds entirely.
+            shield.clear();
+            shield.extend(live.iter().map(|l| l.shielded));
+            overserve.clear();
+            overserve.extend(live.iter().map(|l| {
+                let t = l.req.tenant.0;
+                let served = w.tenant_metrics[t].lock().unwrap().tokens_out as f64;
+                served / w.tenant_weights.get(t).copied().unwrap_or(1.0).max(1e-9)
+            }));
+            let victim = plan_eviction_weighted(&views, &shield, &overserve)
+                .expect("non-empty plan has an active seq");
             if w.policy.preempt && live.len() > 1 {
                 let evicted = live.swap_remove(victim);
                 preempt(&mut w, evicted, &mut waiting);
@@ -999,7 +1078,11 @@ fn worker_loop(mut w: NodeWorker) {
 
         // --- one decode round across the planned set ---
         if !plan.is_empty() {
-            w.metrics.lock().unwrap().record_batch(plan.len());
+            {
+                let mut m = w.metrics.lock().unwrap();
+                m.record_batch(plan.len());
+                m.sync_prefix(w.pager.prefix_stats());
+            }
             for &idx in &plan {
                 let l = &mut live[idx];
                 let token = *l.tokens.last().unwrap();
@@ -1019,6 +1102,9 @@ fn worker_loop(mut w: NodeWorker) {
         retire_done(&mut w, &mut live);
         age_parked(&mut waiting);
     }
+    // Final prefix-cache snapshot: admissions after the last stepped
+    // round (e.g. a drain that never decoded) still land in the metrics.
+    w.metrics.lock().unwrap().sync_prefix(w.pager.prefix_stats());
 }
 
 /// One engine round passed with these sequences still parked.
@@ -1124,15 +1210,17 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         reject(w, &req, msg, queue_s, 0.0);
         return false;
     }
-    let Some(kv) = w.pager.admit(cfg.prefill_t) else {
+    let Some((kv, hits)) = admit_pages(w, &req.prompt) else {
         reject(w, &req, "no KV pages (overload)".into(), queue_s, 0.0);
         return false;
     };
+    let cached = cached_positions(w, hits);
     let t0 = Instant::now();
     match w.runtime.prefill_padded(&req.prompt) {
         Ok(state) => {
+            credit_prefix_hits(w, cached);
             let prefill_s = t0.elapsed().as_secs_f64();
-            let sim_s = w.overlay.prefill_s_per_token * cfg.prefill_t as f64;
+            let sim_s = w.overlay.prefill_s_per_token * (cfg.prefill_t - cached) as f64;
             let sim_j = sim_s * w.overlay.prefill_w;
             let first = state.argmax();
             live.push(Live {
@@ -1146,6 +1234,7 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
                 sim_s,
                 sim_j,
                 preemptions: 0,
+                swaps: 0,
                 shielded: false,
                 failed: None,
                 decode_started: Instant::now(),
@@ -1160,22 +1249,114 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
     }
 }
 
-/// Evict one in-flight sequence under page pressure: drop its KV, park the
-/// request on the waiting queue. Resume recomputes prefill and replays the
-/// tokens generated so far — greedy decode is deterministic, so the replay
-/// reconstructs the identical state (vLLM's recompute-on-resume).
+/// Reserve prefill-window pages for one prompt. With the prefix cache on,
+/// the pager matches the runtime's own padded window
+/// ([`ModelRuntime::padded_window`] — the exact content
+/// `prefill_padded` computes KV over, one shared construction) — the
+/// chain hashes key exactly the content the blocks would hold — pinning
+/// resident blocks instead of allocating. Returns the handle and the hit
+/// count (always 0 on the prefix-blind path).
+fn admit_pages(w: &mut NodeWorker, prompt: &[i32]) -> Option<(SeqKv, usize)> {
+    if !w.policy.prefix_cache {
+        return w.pager.admit(w.runtime.config.prefill_t).map(|kv| (kv, 0));
+    }
+    // The admission window check ran before this point, so the prompt
+    // always fits; a window error therefore reads as an admission miss.
+    let window = w.runtime.padded_window(prompt).ok()?;
+    w.pager.admit_prompt(&window)
+}
+
+/// Positions of the prefill window covered by `hits` cache-hit blocks —
+/// on the simulated card their KV is already resident, so their share of
+/// the prefill never runs.
+fn cached_positions(w: &NodeWorker, hits: usize) -> usize {
+    (hits * w.pager.block_positions()).min(w.runtime.config.prefill_t)
+}
+
+/// Credit `cached` resident positions to the saved-prefill ledger. Called
+/// only after the prefill actually succeeded — crediting earlier would
+/// book savings for work that never ran at all when prefill errors out.
+fn credit_prefix_hits(w: &mut NodeWorker, cached: usize) {
+    if cached > 0 {
+        w.metrics.lock().unwrap().saved_prefill_s +=
+            w.overlay.prefill_s_per_token * cached as f64;
+    }
+}
+
+/// Evict one in-flight sequence under page pressure. The comeback is
+/// priced per victim ([`choose_preempt`]): when the §3 PCIe round trip of
+/// its pages at this card's link width is cheaper than the overlay's
+/// recompute estimate — and the host pool can hold them — the decode
+/// state is **swapped** to host RAM (transfer-out charged now,
+/// transfer-in at resume); otherwise the KV is dropped and resume
+/// recomputes prefill and replays the generated tokens (greedy decode is
+/// deterministic, so the replay reconstructs the identical state —
+/// vLLM's recompute-on-resume).
 fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
+    let prefill_t = w.runtime.config.prefill_t;
+    let replay_steps = l.tokens.len().saturating_sub(1);
+    // The whole pricing pass is gated on the swap knob: with swap off
+    // (the default) an eviction is just a release + park, no victim
+    // table walks or cost estimates on the pressure path.
+    let mut swap = false;
+    let mut kv_bytes = 0u64;
+    let mut recompute_est_s = 0.0;
+    if w.policy.swap {
+        // Price the recompute side with the same prefix credit a
+        // recompute-resume would get: prompt blocks other live sequences
+        // also hold survive this release and come back as cache hits, so
+        // their share of the prefill replay never runs.
+        let shared = if w.policy.prefix_cache {
+            let prompt_blocks = w.pager.blocks_for(prefill_t);
+            w.pager
+                .seq_shared_blocks(l.kv, prompt_blocks)
+                .expect("live sequences hold valid KV handles")
+        } else {
+            0
+        };
+        let cached = (shared * w.pager.block_positions()).min(prefill_t);
+        recompute_est_s = w.overlay.recompute_s(prefill_t - cached, replay_steps);
+        // Transfer side priced symmetrically: only this sequence's
+        // private blocks cross the link — its shared prompt blocks stay
+        // resident for their other holders and re-pin on restore, the
+        // same blocks the recompute estimate was just credited for.
+        kv_bytes =
+            w.pager.seq_private_bytes(l.kv).expect("live sequences hold valid KV handles");
+        swap = choose_preempt(kv_bytes, &w.link, recompute_est_s) == PreemptAction::Swap
+            && w.host_pool.try_reserve(kv_bytes);
+    }
     w.pager.release(l.kv).expect("page accounting");
-    w.metrics.lock().unwrap().preemptions += 1;
+    let (mut sim_s, mut sim_j) = (l.sim_s, l.sim_j);
+    let (swapped, swap_bytes) = if swap {
+        // Swap-out: the pages leave the device over the host link now.
+        let t_out = w.link.transfer_time(kv_bytes);
+        sim_s += t_out;
+        sim_j += t_out * SWAP_LINK_W;
+        {
+            let mut m = w.metrics.lock().unwrap();
+            m.preemptions += 1;
+            m.swap_outs += 1;
+            m.swap_bytes += kv_bytes;
+            m.swap_transfer_s += t_out;
+        }
+        (Some(l.state), kv_bytes)
+    } else {
+        w.metrics.lock().unwrap().preemptions += 1;
+        (None, 0)
+    };
     waiting.push_back(Preempted {
         decode_s: l.decode_s + l.decode_started.elapsed().as_secs_f64(),
         req: l.req,
         tokens: l.tokens,
         queue_s: l.queue_s,
         prefill_s: l.prefill_s,
-        sim_s: l.sim_s,
-        sim_j: l.sim_j,
+        sim_s,
+        sim_j,
         preemptions: l.preemptions + 1,
+        swaps: l.swaps + swap as u64,
+        swapped,
+        swap_bytes,
+        recompute_est_s,
         parked_at: Instant::now(),
         parked_rounds: 0,
         aged: false,
@@ -1184,20 +1365,69 @@ fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
 
 /// Re-enter a preempted sequence: re-admit its pages (the full replay
 /// length up front, so the resume cannot itself be preempted mid-replay),
-/// recompute prefill, replay the generated tokens, rejoin the live set.
-fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
+/// then either **restore the swapped state from host RAM** (transfer-in
+/// over the card's link, no recompute) or recompute prefill and replay
+/// the generated tokens, and rejoin the live set.
+fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed {
     let cfg = w.runtime.config;
-    let Some(kv) = w.pager.admit(cfg.prefill_t) else {
+    let resume_positions = cfg.prefill_t + p.tokens.len().saturating_sub(1);
+    // Both comeback paths re-admit prefix-aware: the recompute path's
+    // cache hits are prefill work that really never reruns, and a swap
+    // restore re-pins surviving shared prompt blocks instead of
+    // duplicating content that never left the card (only its private
+    // pages crossed the link).
+    let Some((kv, hits)) = admit_pages(w, &p.req.prompt) else {
         return Resumed::NoPages(p);
     };
-    let resume_positions = cfg.prefill_t + p.tokens.len().saturating_sub(1);
     if !w.pager.grow(kv, resume_positions).expect("just-admitted KV handle") {
         w.pager.release(kv).expect("releasing the just-admitted pages");
         return Resumed::NoPages(p);
     }
     // The parked stretch ends here: from now on the request is either
-    // recomputing (prefill/decode wall time) or terminally answered.
+    // restoring/recomputing or terminally answered.
     let queue_s = p.queue_s_now();
+    let replay_steps = p.tokens.len().saturating_sub(1);
+    if let Some(state) = p.swapped.take() {
+        // Swap-in: the parked private pages come back over the host
+        // link; the recompute the chooser priced against never runs.
+        // (Shared prompt blocks whose other holders released meanwhile
+        // are re-created by the prefix-aware admission above — the
+        // parked state is complete, so the restore is still exact; the
+        // transfer bill just stays at the bytes actually parked.) The
+        // margin between the chooser's own estimate and the round trip
+        // is what the swap bought — settled from the same number the
+        // decision used, so ledger and decision cannot disagree.
+        w.host_pool.release(p.swap_bytes);
+        let t_in = w.link.transfer_time(p.swap_bytes);
+        let saved =
+            (p.recompute_est_s - swap_round_trip_s(p.swap_bytes, &w.link)).max(0.0);
+        {
+            let mut m = w.metrics.lock().unwrap();
+            m.resumes += 1;
+            m.swap_ins += 1;
+            m.swap_bytes += p.swap_bytes;
+            m.swap_transfer_s += t_in;
+            m.saved_recompute_s += saved;
+        }
+        live.push(Live {
+            req: p.req,
+            state,
+            kv,
+            tokens: p.tokens,
+            queue_s,
+            prefill_s: p.prefill_s,
+            decode_s: p.decode_s,
+            sim_s: p.sim_s + t_in,
+            sim_j: p.sim_j + t_in * SWAP_LINK_W,
+            preemptions: p.preemptions,
+            swaps: p.swaps,
+            shielded: p.aged,
+            failed: None,
+            decode_started: Instant::now(),
+        });
+        return Resumed::Joined;
+    }
+    let cached = cached_positions(w, hits);
     let t0 = Instant::now();
     let mut state = match w.runtime.prefill_padded(&p.req.prompt) {
         Ok(s) => s,
@@ -1207,21 +1437,20 @@ fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
             return Resumed::Failed;
         }
     };
-    for &tok in p.tokens.iter().take(p.tokens.len() - 1) {
+    for &tok in p.tokens.iter().take(replay_steps) {
         if let Err(e) = w.runtime.decode(&mut state, tok) {
             w.pager.release(kv).expect("page accounting");
             reject(w, &p.req, format!("resume replay failed: {e}"), queue_s, p.sim_j);
             return Resumed::Failed;
         }
     }
+    credit_prefix_hits(w, cached);
     let recompute_wall_s = t0.elapsed().as_secs_f64();
     // Simulated cost of the recompute — all of it wasted work, bought by
-    // the headroom the earlier eviction created.
-    let replay_steps = (p.tokens.len() - 1) as f64;
-    let wasted_s = w.overlay.prefill_s_per_token * cfg.prefill_t as f64
-        + w.overlay.decode_s_per_token * replay_steps;
-    let wasted_j = w.overlay.prefill_s_per_token * cfg.prefill_t as f64 * w.overlay.prefill_w
-        + w.overlay.decode_s_per_token * replay_steps * w.overlay.decode_w;
+    // the headroom the earlier eviction created. Prefix-cache hits shrink
+    // the bill: resident prompt blocks skip their share of the prefill.
+    let wasted_s = w.overlay.recompute_s(cfg.prefill_t - cached, replay_steps);
+    let wasted_j = w.overlay.recompute_j(cfg.prefill_t - cached, replay_steps);
     {
         let mut m = w.metrics.lock().unwrap();
         m.resumes += 1;
@@ -1238,6 +1467,7 @@ fn resume(w: &mut NodeWorker, p: Preempted, live: &mut Vec<Live>) -> Resumed {
         sim_s: p.sim_s + wasted_s,
         sim_j: p.sim_j + wasted_j,
         preemptions: p.preemptions,
+        swaps: p.swaps,
         // An aged resume re-entered through the admission freeze; shield
         // it so the next page squeeze picks a different victim.
         shielded: p.aged,
@@ -1264,6 +1494,7 @@ fn retire(w: &mut NodeWorker, l: Live) {
         decode_s,
         simulated_device_s: l.sim_s,
         preemptions: l.preemptions,
+        swaps: l.swaps,
         node: w.node,
     };
     {
@@ -1322,6 +1553,7 @@ fn empty_response(
         decode_s: 0.0,
         simulated_device_s: 0.0,
         preemptions: 0,
+        swaps: 0,
         node,
     }
 }

@@ -115,15 +115,24 @@ impl ModelRuntime {
         })
     }
 
-    /// Prefill a prompt of length ≤ prefill_t by right-aligning it over a
-    /// zero pad. (tiny-qwen has no pad token; position-0 zeros act as a
-    /// benign BOS run — goldens are generated with full-length prompts.)
-    pub fn prefill_padded(&self, tokens: &[i32]) -> Result<DecodeState> {
+    /// The exact left-padded window [`ModelRuntime::prefill_padded`]
+    /// computes KV over: the prompt right-aligned over a zero pad.
+    /// (tiny-qwen has no pad token; position-0 zeros act as a benign BOS
+    /// run — goldens are generated with full-length prompts.) The
+    /// coordinator's prefix cache chain-hashes this same window, so KV
+    /// content and cache key can never drift apart.
+    pub fn padded_window(&self, tokens: &[i32]) -> Result<Vec<i32>> {
         let t = self.config.prefill_t;
         anyhow::ensure!(tokens.len() <= t, "prompt longer than prefill window");
         let mut padded = vec![0i32; t - tokens.len()];
         padded.extend_from_slice(tokens);
-        self.prefill(&padded)
+        Ok(padded)
+    }
+
+    /// Prefill a prompt of length ≤ prefill_t by right-aligning it over a
+    /// zero pad ([`ModelRuntime::padded_window`]).
+    pub fn prefill_padded(&self, tokens: &[i32]) -> Result<DecodeState> {
+        self.prefill(&self.padded_window(tokens)?)
     }
 
     /// One decode step: feed `token` at the state's position, update caches

@@ -226,6 +226,90 @@ fn preemption_prevents_starvation_under_page_pressure() {
 }
 
 #[test]
+fn swap_preemption_restores_state_over_pcie_without_recompute() {
+    // The same pressure scenario with `--swap` armed: by the time page
+    // pressure evicts the long sequence it has several decode rounds of
+    // replay, so its KV round trip (~1 MB over the 170HX's stock gen1 x4
+    // link, a few ms simulated) is far cheaper than the overlay's
+    // recompute estimate (decode replay at tens of ms/token) and the
+    // chooser swaps it: the decode state parks in the host pool and
+    // comes back verbatim — same tokens, swap ledger populated, every
+    // swap-out matched by a swap-in.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    const LONG: usize = 24;
+    let budget = (prefill_t + LONG - 1).max(2 * prefill_t + 4);
+    let long_prompt: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+
+    let Some(reference) = start(config(2)) else { return };
+    let rx = reference.submit(long_prompt.clone(), LONG).unwrap();
+    let expected_long = rx.recv_timeout(Duration::from_secs(240)).unwrap().tokens;
+    drop(reference);
+
+    let mut cfg = config(2);
+    cfg.step_policy = StepPolicy::ShortestFirst;
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some(budget);
+    cfg.batch.swap = true;
+    let Some(server) = start(cfg) else { return };
+    let rx_long = server.submit(long_prompt, LONG).unwrap();
+    let rx_shorts: Vec<_> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, 6).unwrap()
+        })
+        .collect();
+    for rx in rx_shorts {
+        let resp = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(resp.ok(), "short request starved: {:?}", resp.error);
+    }
+    let long = rx_long.recv_timeout(Duration::from_secs(240)).unwrap();
+    assert!(long.ok(), "{:?}", long.error);
+    assert_eq!(long.tokens, expected_long, "restored state must continue identically");
+    assert!(long.preemptions >= 1, "page pressure must have evicted the long one");
+    assert!(long.swaps >= 1, "the eviction must have taken the swap path");
+    assert!(long.swaps <= long.preemptions);
+    let m = server.shutdown();
+    assert_eq!(m.errors, 0);
+    assert!(m.swap_outs >= 1, "swap-outs must be counted");
+    assert_eq!(m.swap_ins, m.swap_outs, "everything parked must come back");
+    assert!(m.resumes >= m.swap_ins, "swap-ins are resumes too");
+    assert!(m.swap_bytes > 0 && m.swap_transfer_s > 0.0, "PCIe time must be charged");
+    assert!(m.saved_recompute_s > 0.0, "the chooser's margin must be recorded");
+}
+
+#[test]
+fn identical_prompts_share_prefix_blocks_at_admission() {
+    // Three concurrent requests with the same prompt: the first admission
+    // allocates the prefill window's blocks and registers their chain
+    // hashes; the later ones pin those blocks instead of allocating, and
+    // everyone still decodes the same tokens. (The cold-start gather
+    // window keeps the batch concurrent, so the shared blocks are live
+    // when the later admissions arrive.)
+    let mut cfg = config(4);
+    cfg.batch.max_wait = Duration::from_millis(200);
+    let Some(server) = start(cfg) else { return };
+    let prompt = vec![7, 7, 3, 2, 9, 1, 1, 5];
+    let rxs: Vec<_> = (0..3).map(|_| server.submit(prompt.clone(), 6).unwrap()).collect();
+    let mut outs = Vec::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(resp.ok(), "{:?}", resp.error);
+        outs.push(resp.tokens);
+    }
+    assert_eq!(outs[0], outs[1]);
+    assert_eq!(outs[0], outs[2]);
+    let m = server.shutdown();
+    assert!(
+        m.prefix_hits >= 1,
+        "identical concurrent prompts must hit the prefix cache (hits={} misses={})",
+        m.prefix_hits,
+        m.prefix_misses
+    );
+    assert!(m.saved_prefill_s > 0.0, "cache hits must credit saved prefill");
+}
+
+#[test]
 fn disabled_preemption_fails_overcommitted_sequences_cleanly() {
     // The same pressure with preemption off: there is no relief valve, so
     // once every live sequence stalls on page growth the engine keeps
