@@ -379,6 +379,76 @@ fn run_fairness() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One chaos arm: a scripted node-0 death at engine round 3 on a 2-card
+/// 170HX fleet, with sequence rescue on or off. Returns (ok responses,
+/// wall seconds, rescued, lost).
+fn run_chaos_once(rescue: bool) -> anyhow::Result<(usize, f64, u64, u64)> {
+    use cmphx::faults::{FaultEvent, FaultKind, FaultPlan};
+    let mut cfg = config(4, StepPolicy::RoundRobin);
+    cfg.route = RoutePolicy::RoundRobin;
+    cfg.qos.steal = false;
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    cfg.recovery.rescue = rescue;
+    cfg.faults = Some(FaultPlan::script(vec![FaultEvent {
+        node: 0,
+        round: 3,
+        kind: FaultKind::NodeDeath,
+    }]));
+    let server = Server::start(artifacts()?, cfg)?;
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..REQUESTS)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i as i32 + 2)) % 500 + 1).collect();
+            server.submit(prompt, 12).unwrap()
+        })
+        .collect();
+    let mut ok = 0usize;
+    for rx in rxs {
+        if rx.recv()?.ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let fm = server.shutdown_fleet();
+    let total = fm.total();
+    Ok((ok, wall, total.rescued_seqs, total.lost_seqs))
+}
+
+/// The robustness ablation the chaos suite asserts on, as a bench row:
+/// kill one of two cards mid-decode and compare goodput with sequence
+/// rescue on vs the no-rescue arm. Recorded as the `serve_chaos` row of
+/// `BENCH_sim_throughput.json`.
+fn run_chaos() -> anyhow::Result<()> {
+    let (ok_on, wall_on, rescued_on, lost_on) = run_chaos_once(true)?;
+    let (ok_off, wall_off, rescued_off, lost_off) = run_chaos_once(false)?;
+    println!(
+        "rescue on : {ok_on}/{REQUESTS} served in {wall_on:.2}s | rescued={rescued_on} lost={lost_on}"
+    );
+    println!(
+        "rescue off: {ok_off}/{REQUESTS} served in {wall_off:.2}s | rescued={rescued_off} lost={lost_off}"
+    );
+    let row = format!(
+        "{{\n    \"workload\": \"2-card 170HX fleet, scripted node-0 death at engine round 3, \
+         {REQUESTS} requests x 12 tokens\",\n    \
+         \"rescue_on_goodput\": {:.4},\n    \
+         \"rescue_on_rescued\": {rescued_on},\n    \
+         \"rescue_on_lost\": {lost_on},\n    \
+         \"rescue_on_wall_s\": {wall_on:.3},\n    \
+         \"rescue_off_goodput\": {:.4},\n    \
+         \"rescue_off_lost\": {lost_off},\n    \
+         \"rescue_off_wall_s\": {wall_off:.3}\n  }}",
+        ok_on as f64 / REQUESTS as f64,
+        ok_off as f64 / REQUESTS as f64,
+    );
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    upsert_bench_row(&path, "serve_chaos", &row);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     if !cmphx::runtime::pjrt_available() {
         println!("e2e serving bench skipped: PJRT unavailable (stub xla build)");
@@ -405,5 +475,7 @@ fn main() -> anyhow::Result<()> {
     run_fleet()?;
     println!("-- fairness: flooding tenant, WFQ + work stealing on vs off --");
     run_fairness()?;
+    println!("-- chaos: scripted card death mid-decode, rescue on vs off --");
+    run_chaos()?;
     Ok(())
 }

@@ -171,7 +171,29 @@ impl Table {
 /// every other bench rerunning — row-owned upserts are the fix.
 pub fn upsert_bench_row(path: &std::path::Path, key: &str, block: &str) {
     let text = std::fs::read_to_string(path).unwrap_or_else(|_| "{\n}\n".to_string());
-    let updated = upsert_json_block(&text, key, block);
+    let updated = match try_upsert_json_block(&text, key, block) {
+        Some(u) => u,
+        None => {
+            // Corrupt result file (truncated write, merge damage): park
+            // the evidence in a .bak and rewrite fresh, instead of
+            // panicking away the bench run that just finished measuring.
+            let bak = path.with_extension("json.bak");
+            match std::fs::write(&bak, &text) {
+                Ok(()) => eprintln!(
+                    "warning: {} is not a JSON object; quarantined to {} and rewriting",
+                    path.display(),
+                    bak.display()
+                ),
+                Err(e) => eprintln!(
+                    "warning: {} is not a JSON object and could not be quarantined \
+                     ({e}); rewriting",
+                    path.display()
+                ),
+            }
+            try_upsert_json_block("{\n}\n", key, block)
+                .expect("a fresh empty object always splices")
+        }
+    };
     if let Err(e) = std::fs::write(path, updated) {
         eprintln!("warning: could not record {key} in {}: {e}", path.display());
     } else {
@@ -182,14 +204,16 @@ pub fn upsert_bench_row(path: &std::path::Path, key: &str, block: &str) {
 /// Pure splice behind [`upsert_bench_row`]: replace `key`'s brace-balanced
 /// object value in `text`, or append `"key": block` before the final
 /// closing brace when the key is absent. `block` must be a JSON object.
-pub fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
+/// Returns `None` when `text` is not spliceable — the key's value is not
+/// an object, its braces never balance, or there is no object to extend.
+pub fn try_upsert_json_block(text: &str, key: &str, block: &str) -> Option<String> {
     let needle = format!("\"{key}\":");
     if let Some(start) = text.find(&needle) {
         // replace the existing object value (brace-balanced span)
         let vstart = start + needle.len();
-        let obrace = vstart + text[vstart..].find('{').expect("object value for key");
+        let obrace = vstart + text[vstart..].find('{')?;
         let mut depth = 0usize;
-        let mut end = obrace;
+        let mut end = 0usize;
         for (i, c) in text[obrace..].char_indices() {
             match c {
                 '{' => depth += 1,
@@ -203,13 +227,22 @@ pub fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
                 _ => {}
             }
         }
-        format!("{} {block}{}", &text[..vstart], &text[end..])
+        if end == 0 {
+            return None; // the value's braces never balance (truncated file)
+        }
+        Some(format!("{} {block}{}", &text[..vstart], &text[end..]))
     } else {
-        let last = text.rfind('}').expect("a json object to extend");
+        let last = text.rfind('}')?;
         let body = text[..last].trim_end();
         let sep = if body.ends_with('{') { "" } else { "," };
-        format!("{body}{sep}\n  \"{key}\": {block}\n}}\n")
+        Some(format!("{body}{sep}\n  \"{key}\": {block}\n}}\n"))
     }
+}
+
+/// Panicking wrapper over [`try_upsert_json_block`] for callers that know
+/// their input is well-formed (tests, fresh seeds).
+pub fn upsert_json_block(text: &str, key: &str, block: &str) -> String {
+    try_upsert_json_block(text, key, block).expect("well-formed bench result JSON")
 }
 
 #[cfg(test)]
@@ -272,6 +305,41 @@ mod tests {
         let seeded = upsert_json_block("{\n}\n", "only", "{ \"v\": 1 }");
         assert!(seeded.contains("\"only\": { \"v\": 1 }"), "{seeded}");
         assert!(!seeded.contains(",\n  \"only\""), "no stray comma after {{: {seeded}");
+    }
+
+    #[test]
+    fn try_upsert_refuses_unspliceable_text() {
+        // no object to extend at all
+        assert!(try_upsert_json_block("", "k", "{ \"v\": 1 }").is_none());
+        assert!(try_upsert_json_block("not json", "k", "{ \"v\": 1 }").is_none());
+        // key present but its value is not an object
+        assert!(try_upsert_json_block("{ \"k\": 12 }", "k", "{ \"v\": 1 }").is_none());
+        // key's object value never closes (truncated write)
+        assert!(try_upsert_json_block("{ \"k\": { \"x\": 1 ", "k", "{ \"v\": 1 }").is_none());
+    }
+
+    #[test]
+    fn corrupt_result_files_are_quarantined_not_fatal() {
+        let dir = std::env::temp_dir().join(format!(
+            "cmphx-bench-quarantine-{}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_corrupt.json");
+        std::fs::write(&path, "{ \"serve\": truncated-garbage").unwrap();
+        // must not panic; must rewrite the file with the fresh row
+        upsert_bench_row(&path, "serve", "{ \"tps\": 1 }");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"serve\": { \"tps\": 1 }"), "{text}");
+        // the original bytes survive in the .bak for forensics
+        let bak = std::fs::read_to_string(path.with_extension("json.bak")).unwrap();
+        assert!(bak.contains("truncated-garbage"), "{bak}");
+        // the rewritten file is spliceable again
+        upsert_bench_row(&path, "other", "{ \"x\": 2 }");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"serve\": { \"tps\": 1 }"), "{text}");
+        assert!(text.contains("\"other\": { \"x\": 2 }"), "{text}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -30,6 +30,8 @@ COMMANDS:
         [--no-prefix-cache] [--swap] [--host-pool MiB]
         [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
         [--aging N] [--aging-rounds N]
+        [--chaos-seed N] [--chaos-rate F] [--no-rescue] [--retries N]
+        [--deadline-ms N] [--probation N]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
                             optionally across a fleet of registry cards
                             (e.g. --fleet 170hx,90hx) with continuous
@@ -50,7 +52,18 @@ COMMANDS:
                             to the FIFO queue, --no-steal disables
                             cross-node work stealing, --aging sets the WFQ
                             promoter (pops), --aging-rounds the preemption
-                            waiting-queue gate
+                            waiting-queue gate. --chaos-seed arms the
+                            seeded fault injector (card death, stalls,
+                            link downgrades, VRAM page loss, swap-in
+                            failures, thermal throttles) at --chaos-rate
+                            faults/node/round (default 0.05); the engine
+                            self-heals — rescued sequences replay
+                            bit-identically on surviving cards. --retries
+                            bounds transient-failure retries,
+                            --deadline-ms stamps a wall-clock SLO on each
+                            request, --probation sets the probe serves a
+                            recovered card must pass, --no-rescue is the
+                            ablation arm that drops a dead card's work
   help                      this text
 ";
 
@@ -344,6 +357,29 @@ fn serve(args: &Args) -> Result<i32> {
             bail!("--fleet list is empty");
         }
     }
+    // Self-healing knobs and the seeded chaos injector.
+    if args.flag("no-rescue") {
+        config.recovery.rescue = false;
+    }
+    config.recovery.max_retries =
+        args.opt_usize("retries", config.recovery.max_retries as usize)? as u32;
+    config.recovery.probation_rounds =
+        args.opt_usize("probation", config.recovery.probation_rounds as usize)? as u64;
+    if let Some(ms) = args.opt("deadline-ms") {
+        config.recovery.deadline =
+            Some(std::time::Duration::from_millis(ms.parse()?));
+    }
+    if let Some(seed) = args.opt("chaos-seed") {
+        use crate::faults::FaultPlan;
+        let rate: f64 = args.opt("chaos-rate").unwrap_or("0.05").parse()?;
+        if !(0.0..=1.0).contains(&rate) {
+            bail!("--chaos-rate must be in [0, 1], got {rate}");
+        }
+        let fleet_size = config.nodes.len().max(1);
+        config.faults = Some(FaultPlan::seeded(seed.parse()?, fleet_size, 64, rate));
+    } else if args.opt("chaos-rate").is_some() {
+        bail!("--chaos-rate needs --chaos-seed (the injector is seed-driven)");
+    }
     println!("compiling artifacts on the PJRT CPU client…");
     let server: ServerHandle = Server::start(artifacts, config)?;
 
@@ -371,14 +407,20 @@ fn serve(args: &Args) -> Result<i32> {
         } else {
             String::new()
         };
+        let rescued = if resp.rescues > 0 {
+            format!(" rescued×{}", resp.rescues)
+        } else {
+            String::new()
+        };
         println!(
-            "req {i} [{}]: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}{}",
+            "req {i} [{}]: {} tokens on node {}, latency {:.1} ms (sim device {:.2} ms){}{}{}",
             server.registry().spec(resp.tenant).name,
             resp.tokens.len(),
             resp.node,
             resp.latency_s() * 1e3,
             resp.simulated_device_s * 1e3,
             preempted,
+            rescued,
             resp.error.as_deref().map(|e| format!(" ERROR {e}")).unwrap_or_default(),
         );
     }

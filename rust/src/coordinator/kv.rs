@@ -183,6 +183,24 @@ impl KvPager {
         Ok(())
     }
 
+    /// Permanently retire up to `n` blocks from the **free** pool — the
+    /// VRAM-page-loss fault model. Live sequences are never touched (their
+    /// pages are, by definition, the ones still readable); the card just
+    /// gets smaller, and the admission gate sees the shrunken capacity
+    /// immediately. Returns how many blocks were actually lost, which can
+    /// be less than `n` when the free pool is nearly empty.
+    pub fn lose_blocks(&mut self, n: usize) -> usize {
+        let lose = n.min(self.free_blocks());
+        for _ in 0..lose {
+            // Retire a concrete free slot when one exists so the id can
+            // never be recycled; blocks never materialized in `blocks`
+            // are retired by the capacity cut alone.
+            self.free_slots.pop();
+        }
+        self.total_blocks -= lose;
+        lose
+    }
+
     /// Blocks needed to hold `positions` token positions (at least one —
     /// every live sequence owns a page).
     pub fn blocks_for(&self, positions: usize) -> usize {
@@ -670,6 +688,33 @@ mod tests {
     }
 
     #[test]
+    fn lose_blocks_shrinks_only_the_free_pool() {
+        let mut p = pager();
+        p.limit_blocks(10).unwrap();
+        let a = p.admit(12).unwrap(); // 3 blocks live
+        assert_eq!(p.free_blocks(), 7);
+        // a VRAM fault burns 4 free pages: capacity shrinks, the live
+        // sequence is untouched
+        assert_eq!(p.lose_blocks(4), 4);
+        assert_eq!(p.capacity_blocks(), 6);
+        assert_eq!(p.free_blocks(), 3);
+        assert_eq!(p.seq_positions(a).unwrap(), 12);
+        assert!(p.grow(a, 16).unwrap(), "survivors can still grow");
+        // losses clamp to the free pool — live pages are never taken
+        assert_eq!(p.lose_blocks(100), 2);
+        assert_eq!(p.capacity_blocks(), 4);
+        assert_eq!(p.free_blocks(), 0);
+        assert_eq!(p.lose_blocks(1), 0, "nothing free left to lose");
+        // released pages come back into the (smaller) pool and recycle
+        assert_eq!(p.release(a).unwrap(), 4);
+        assert_eq!(p.free_blocks(), 4);
+        let b = p.admit(16).unwrap();
+        assert_eq!(p.used_blocks(), 4);
+        p.release(b).unwrap();
+        assert_eq!(p.used_blocks() + p.free_blocks(), p.capacity_blocks());
+    }
+
+    #[test]
     fn paged_admits_strictly_more_than_fixed_slots_at_long_context() {
         // The §4.1 accounting on a CMP 170HX: Qwen2.5-1.5B KV bytes/pos
         // (2 · 28 layers · 2 kv_heads · 128 head_dim · f16 = 28672 B) on
@@ -869,6 +914,65 @@ mod tests {
         assert_eq!(pool.used_bytes(), 40);
         assert!(pool.try_reserve(60));
         assert_eq!(pool.capacity_bytes(), 100);
+    }
+
+    #[test]
+    fn prop_host_pool_conserves_bytes_under_faulty_swap_interleavings() {
+        // Shadow-model property for the swap path's host-RAM accounting:
+        // random interleavings of swap-out (reserve), swap-in (release),
+        // and *failed* swap-in (the fault injector corrupts the parked
+        // pages; the worker releases the reservation exactly once and
+        // falls back to recompute). Invariants after every step: used
+        // bytes equal the sum of outstanding reservations (bytes
+        // conserved, no double-free), used never exceeds capacity, and a
+        // refused reservation changes nothing.
+        forall(0xFA117, 200, |rng: &mut Rng| {
+            let capacity = rng.range(1, 1 << 20);
+            let mut pool = HostPool::new(capacity);
+            let mut outstanding: Vec<u64> = Vec::new(); // shadow reservations
+            for _ in 0..120 {
+                match rng.below(3) {
+                    0 => {
+                        // swap-out: park a sequence's private KV bytes
+                        let bytes = rng.range(0, capacity + capacity / 4);
+                        let before = pool.used_bytes();
+                        if pool.try_reserve(bytes) {
+                            outstanding.push(bytes);
+                        } else {
+                            assert!(before + bytes > capacity, "refusal must mean overflow");
+                            assert_eq!(pool.used_bytes(), before, "refused reserve moved bytes");
+                        }
+                    }
+                    1 => {
+                        // swap-in: the resume path restores and releases
+                        if let Some(i) =
+                            (!outstanding.is_empty()).then(|| rng.below(outstanding.len() as u64))
+                        {
+                            pool.release(outstanding.swap_remove(i as usize));
+                        }
+                    }
+                    _ => {
+                        // failed swap-in: the reservation is released once
+                        // (never twice) and the sequence recomputes; from
+                        // the pool's view this is indistinguishable from a
+                        // clean swap-in, which is exactly the invariant —
+                        // the fault path must not invent or leak bytes.
+                        if let Some(i) =
+                            (!outstanding.is_empty()).then(|| rng.below(outstanding.len() as u64))
+                        {
+                            pool.release(outstanding.swap_remove(i as usize));
+                        }
+                    }
+                }
+                let expect: u64 = outstanding.iter().sum();
+                assert_eq!(pool.used_bytes(), expect, "pool drifted from shadow ledger");
+                assert!(pool.used_bytes() <= pool.capacity_bytes());
+            }
+            for bytes in outstanding.drain(..) {
+                pool.release(bytes);
+            }
+            assert_eq!(pool.used_bytes(), 0, "draining all reservations must zero the pool");
+        });
     }
 
     #[test]

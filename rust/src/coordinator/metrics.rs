@@ -71,6 +71,36 @@ pub struct Metrics {
     /// the transfer paid for it — what the swap-vs-recompute chooser
     /// bought.
     pub saved_recompute_s: f64,
+    /// In-flight sequences rescued off a dead node (re-queued and
+    /// replayed to a bit-identical state on a healthy card).
+    pub rescued_seqs: u64,
+    /// In-flight sequences a node death lost terminally (rescue disabled
+    /// or no path back to dispatch) — answered with an error, not hung.
+    pub lost_seqs: u64,
+    /// Requests bounced back to dispatch by a transient worker failure
+    /// and re-attempted under the bounded-backoff policy.
+    pub retries: u64,
+    /// Requests failed because their wall-clock deadline passed before a
+    /// card could serve them.
+    pub deadline_misses: u64,
+    /// Faults this node absorbed without dying (stalls, throttles, link
+    /// downgrades, VRAM page loss) — the degradation-ladder trigger count.
+    pub degrade_events: u64,
+    /// Swap-ins that found corrupt host pages and fell back to recompute.
+    pub swap_in_failures: u64,
+    /// Simulated seconds of prior progress preserved by rescues (work the
+    /// client did not lose when the card died) — the recovered side of
+    /// the wasted-vs-recovered ledger.
+    pub rescue_kept_s: f64,
+    /// Simulated seconds spent replaying rescued tokens on the new card —
+    /// the wasted side (the fault's price, paid to keep tokens
+    /// bit-identical).
+    pub rescue_replay_s: f64,
+    /// Downtime over closed node incidents, seconds (from the router's
+    /// MTTR ledger; snapshotted into node metrics at reporting time).
+    pub fault_downtime_s: f64,
+    /// Closed node incidents — with `fault_downtime_s`, yields MTTR.
+    pub fault_recoveries: u64,
 }
 
 impl Metrics {
@@ -203,8 +233,27 @@ impl Metrics {
         self.swap_bytes += other.swap_bytes;
         self.swap_transfer_s += other.swap_transfer_s;
         self.saved_recompute_s += other.saved_recompute_s;
+        self.rescued_seqs += other.rescued_seqs;
+        self.lost_seqs += other.lost_seqs;
+        self.retries += other.retries;
+        self.deadline_misses += other.deadline_misses;
+        self.degrade_events += other.degrade_events;
+        self.swap_in_failures += other.swap_in_failures;
+        self.rescue_kept_s += other.rescue_kept_s;
+        self.rescue_replay_s += other.rescue_replay_s;
+        self.fault_downtime_s += other.fault_downtime_s;
+        self.fault_recoveries += other.fault_recoveries;
         self.latency_sum_s += other.latency_sum_s;
         self.latencies_s.extend_from_slice(&other.latencies_s);
+    }
+
+    /// Mean time to recovery over closed node incidents, seconds.
+    pub fn mttr_s(&self) -> Option<f64> {
+        if self.fault_recoveries == 0 {
+            None
+        } else {
+            Some(self.fault_downtime_s / self.fault_recoveries as f64)
+        }
     }
 
     /// Overwrite the prefix-cache counters from a pager's cumulative
@@ -235,6 +284,8 @@ impl Metrics {
              prefix: hits={} misses={} ({:.0}%) cow={} saved_sim={:.4}s\n\
              swap: out={} in={} {:.1} MiB link_s={:.4} saved_sim={:.4}s\n\
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
+             faults: rescued={} lost={} retries={} deadline_miss={} degraded={} \
+             swapfail={} kept={:.4}s replayed={:.4}s mttr={}\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
              simulated device time: {:.4}s ({}× host)  energy {:.2}J → {:.1} tok/J",
@@ -257,6 +308,17 @@ impl Metrics {
             self.wasted_prefill_s,
             self.aged_promotions,
             self.steals,
+            self.rescued_seqs,
+            self.lost_seqs,
+            self.retries,
+            self.deadline_misses,
+            self.degrade_events,
+            self.swap_in_failures,
+            self.rescue_kept_s,
+            self.rescue_replay_s,
+            self.mttr_s()
+                .map(|s| format!("{:.1}ms", s * 1e3))
+                .unwrap_or_else(|| "-".into()),
             self.mean_latency().unwrap_or(0.0) * 1e3,
             self.latency_pct(0.5).unwrap_or(0.0) * 1e3,
             self.latency_pct(0.99).unwrap_or(0.0) * 1e3,
@@ -425,6 +487,16 @@ mod tests {
         m.swap_bytes = 3 << 20;
         m.swap_transfer_s = 0.125;
         m.saved_recompute_s = 1.5;
+        m.rescued_seqs = 2;
+        m.lost_seqs = 1;
+        m.retries = 3;
+        m.deadline_misses = 2;
+        m.degrade_events = 4;
+        m.swap_in_failures = 1;
+        m.rescue_kept_s = 0.75;
+        m.rescue_replay_s = 0.25;
+        m.fault_downtime_s = 0.5;
+        m.fault_recoveries = 2;
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
@@ -439,6 +511,50 @@ mod tests {
         assert!(s.contains("saved_sim=0.2500s"), "{s}");
         assert!(s.contains("out=2 in=2 3.0 MiB"), "{s}");
         assert!(s.contains("saved_sim=1.5000s"), "{s}");
+        assert!(s.contains("rescued=2 lost=1 retries=3 deadline_miss=2"), "{s}");
+        assert!(s.contains("degraded=4 swapfail=1"), "{s}");
+        assert!(s.contains("kept=0.7500s replayed=0.2500s"), "{s}");
+        assert!(s.contains("mttr=250.0ms"), "{s}");
+    }
+
+    #[test]
+    fn mttr_reads_none_until_a_recovery_closes() {
+        let mut m = Metrics::new();
+        assert_eq!(m.mttr_s(), None);
+        let rendered = m.render();
+        assert!(rendered.contains("mttr=-"), "{rendered}");
+        m.fault_downtime_s = 1.0;
+        m.fault_recoveries = 4;
+        assert!((m.mttr_s().unwrap() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_sums_fault_counters() {
+        let mut a = Metrics::new();
+        a.rescued_seqs = 1;
+        a.retries = 2;
+        a.rescue_kept_s = 0.5;
+        a.fault_downtime_s = 1.0;
+        a.fault_recoveries = 1;
+        let mut b = Metrics::new();
+        b.rescued_seqs = 3;
+        b.lost_seqs = 1;
+        b.deadline_misses = 2;
+        b.degrade_events = 5;
+        b.swap_in_failures = 2;
+        b.rescue_replay_s = 0.25;
+        b.fault_downtime_s = 3.0;
+        b.fault_recoveries = 1;
+        a.merge(&b);
+        assert_eq!(a.rescued_seqs, 4);
+        assert_eq!(a.lost_seqs, 1);
+        assert_eq!(a.retries, 2);
+        assert_eq!(a.deadline_misses, 2);
+        assert_eq!(a.degrade_events, 5);
+        assert_eq!(a.swap_in_failures, 2);
+        assert!((a.rescue_kept_s - 0.5).abs() < 1e-12);
+        assert!((a.rescue_replay_s - 0.25).abs() < 1e-12);
+        assert!((a.mttr_s().unwrap() - 2.0).abs() < 1e-12, "4s over 2 recoveries");
     }
 
     #[test]

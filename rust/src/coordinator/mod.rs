@@ -44,6 +44,18 @@
 //! tax, and the prefix-hit/CoW/swap ledgers for any mix of registry
 //! cards — per node *and* per tenant.
 //!
+//! The fleet is **self-healing** under the fault model salvage mining
+//! cards earn ([`crate::faults`]): a seeded [`crate::faults::FaultPlan`]
+//! can kill a card mid-decode, stall it, downgrade its PCIe link, lose
+//! VRAM pages, or corrupt a swap-in — and the engine rescues every
+//! in-flight and queued sequence off the corpse back through the QoS
+//! stage (generated tokens ride along; greedy replay on a healthy card is
+//! bit-identical), retries transient refusals with exponential backoff,
+//! enforces per-request wall-clock deadlines, quarantines recovered cards
+//! behind probation probes, and degrades non-fatal faults down a ladder
+//! (swap off on a narrow link, over-rate tenants shed, admission shrunk
+//! pro-rata with surviving VRAM) instead of failing the node outright.
+//!
 //! Python never runs here: the executables carry the weights.
 
 pub mod batcher;
@@ -57,6 +69,6 @@ pub mod server;
 pub use batcher::BatchPolicy;
 pub use kv::{HostPool, KvPager, PrefixStats, SeqKv};
 pub use metrics::{jain_index, FleetMetrics, Metrics};
-pub use request::{GenRequest, GenResponse};
+pub use request::{Carried, GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};
 pub use server::{NodeConfig, Server, ServerConfig, ServerHandle};

@@ -5,6 +5,38 @@ use std::time::Instant;
 
 use crate::qos::TenantId;
 
+/// State a request accumulates across re-entries into the admission
+/// queue — a node-death rescue or a bounded retry. Empty (the default) on
+/// first submission; the worker folds it into the live sequence at
+/// admission so a rescued request's final response reports the whole
+/// journey, not just its last node.
+#[derive(Clone, Debug, Default)]
+pub struct Carried {
+    /// Tokens already generated before the fault. Greedy decode is
+    /// deterministic, so replaying these after a fresh prefill on the new
+    /// card reconstructs a bit-identical decode state.
+    pub replay: Vec<i32>,
+    /// Phase timings and overlay charges accrued on previous nodes.
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub sim_s: f64,
+    pub sim_j: f64,
+    pub preemptions: u64,
+    pub swaps: u64,
+    /// Node deaths this request survived via rescue.
+    pub rescues: u64,
+    /// Dispatch retry attempts consumed (bounded by the recovery policy).
+    pub attempt: u32,
+}
+
+impl Carried {
+    /// Has this request been through a rescue or retry re-entry?
+    pub fn is_replay(&self) -> bool {
+        !self.replay.is_empty()
+    }
+}
+
 /// A generation request.
 #[derive(Debug)]
 pub struct GenRequest {
@@ -27,8 +59,15 @@ pub struct GenRequest {
     pub charged_j: f64,
     /// Where the response goes. Dropped receiver = cancelled request.
     pub reply: Sender<GenResponse>,
-    /// Enqueue timestamp for latency accounting.
+    /// Enqueue timestamp for latency accounting. Reset at each rescue or
+    /// retry re-entry (the prior wait is banked in [`Carried::queue_s`]).
     pub enqueued: Instant,
+    /// Wall-clock deadline stamped at submission from the recovery
+    /// policy; past it the request fails at the next dispatch or
+    /// admission checkpoint instead of occupying a card.
+    pub deadline: Option<Instant>,
+    /// Rescue/retry state carried across nodes (empty on first entry).
+    pub carry: Carried,
 }
 
 /// The served result.
@@ -60,6 +99,9 @@ pub struct GenResponse {
     /// chosen per victim when the §3 transfer model prices the round trip
     /// below the overlay's recompute estimate.
     pub swaps: u64,
+    /// Node deaths this request survived: each rescue re-queued it off
+    /// the dead card and replayed its generated tokens on a healthy one.
+    pub rescues: u64,
     /// Fleet node index that served (or rejected) the request. Requests
     /// shed at the QoS dispatch stage (energy budget exhausted, no
     /// healthy node) report the node the router would have picked, or 0
@@ -96,10 +138,21 @@ mod tests {
             simulated_device_s: 0.05,
             preemptions: 0,
             swaps: 0,
+            rescues: 0,
             node: 0,
         };
         assert!(r.ok());
         assert!((r.latency_s() - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fresh_requests_carry_no_replay_state() {
+        let c = Carried::default();
+        assert!(!c.is_replay());
+        assert_eq!(c.attempt, 0);
+        assert_eq!(c.rescues, 0);
+        let replayed = Carried { replay: vec![4, 5], rescues: 1, ..Carried::default() };
+        assert!(replayed.is_replay());
     }
 
     #[test]
@@ -113,6 +166,8 @@ mod tests {
             charged_j: 0.0,
             reply: tx,
             enqueued: Instant::now(),
+            deadline: None,
+            carry: Carried::default(),
         };
         req.reply
             .send(GenResponse {
@@ -126,6 +181,7 @@ mod tests {
                 simulated_device_s: 0.0,
                 preemptions: 0,
                 swaps: 0,
+                rescues: 0,
                 node: 0,
             })
             .unwrap();

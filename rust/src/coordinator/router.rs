@@ -6,6 +6,17 @@
 //! - [`RoutePolicy::LeastLoaded`] — by outstanding work;
 //! - [`RoutePolicy::WeightedThroughput`] — by each card's decode tokens/s
 //!   (heterogeneous fleets: a 170HX next to a 90HX).
+//!
+//! Health is more than a bool: a node readmitted by
+//! [`Fleet::mark_healthy`] can be put on **probation** (see
+//! [`Fleet::set_probation_rounds`]) — it serves probe requests one at a
+//! time until it has passed the configured number, and a failure during
+//! probation re-quarantines it. That stops a flapping salvage card from
+//! oscillating in and out of full routing. The router also keeps the
+//! MTTR ledger: per-node downtime from the moment a card left routing to
+//! the moment it was fully trusted again.
+
+use std::time::Instant;
 
 use crate::device::DeviceSpec;
 use crate::isa::pass::FmadPolicy;
@@ -27,6 +38,42 @@ pub struct Node {
     /// — the old behaviour kept selecting the dead card forever while
     /// healthy ones idled.
     pub healthy: bool,
+    /// Probe serves still owed before this node is fully trusted. While
+    /// nonzero the node is routable only when idle (one probe in flight
+    /// at a time); a failed probe re-quarantines it.
+    pub probation: u64,
+    /// When the current incident started (the node left full routing).
+    pub down_since: Option<Instant>,
+    /// Total downtime over *closed* incidents, seconds — the MTTR
+    /// numerator. An incident closes when the node is fully trusted
+    /// again (probation passed, or immediate readmission).
+    pub downtime_s: f64,
+    /// Closed incidents — the MTTR denominator.
+    pub recoveries: u64,
+    /// Times this node left routing (deaths + operator drains).
+    pub faults: u64,
+}
+
+impl Node {
+    pub fn new(name: &'static str, weight: f64) -> Self {
+        Node {
+            name,
+            weight,
+            outstanding: 0,
+            assigned: 0,
+            healthy: true,
+            probation: 0,
+            down_since: None,
+            downtime_s: 0.0,
+            recoveries: 0,
+            faults: 0,
+        }
+    }
+
+    /// Fully trusted: healthy with no probation owed.
+    pub fn trusted(&self) -> bool {
+        self.healthy && self.probation == 0
+    }
 }
 
 /// Routing policy.
@@ -43,6 +90,9 @@ pub struct Fleet {
     pub nodes: Vec<Node>,
     policy: RoutePolicy,
     cursor: usize,
+    /// Probe serves a readmitted node owes before full trust. `0` (the
+    /// default) preserves the legacy immediate readmission.
+    probation_rounds: u64,
 }
 
 impl Fleet {
@@ -55,6 +105,7 @@ impl Fleet {
             nodes,
             policy,
             cursor: 0,
+            probation_rounds: 0,
         }
     }
 
@@ -73,36 +124,21 @@ impl Fleet {
         let nodes = devices
             .iter()
             .zip(bench.run_across(devices, quant, fmad))
-            .map(|(d, r)| Node {
-                name: d.name,
-                weight: r.decode_tps,
-                outstanding: 0,
-                assigned: 0,
-                healthy: true,
-            })
+            .map(|(d, r)| Node::new(d.name, r.decode_tps))
             .collect();
-        Fleet {
-            nodes,
-            policy,
-            cursor: 0,
-        }
+        Fleet::new(nodes, policy)
     }
 
     /// Uniform fleet of `n` identical nodes (tests/benches).
     pub fn uniform(n: usize, weight: f64, policy: RoutePolicy) -> Self {
-        Fleet {
-            nodes: (0..n)
-                .map(|_| Node {
-                    name: "node",
-                    weight,
-                    outstanding: 0,
-                    assigned: 0,
-                    healthy: true,
-                })
-                .collect(),
-            policy,
-            cursor: 0,
-        }
+        Fleet::new((0..n).map(|_| Node::new("node", weight)).collect(), policy)
+    }
+
+    /// Arm quarantine/probation: a node readmitted by
+    /// [`Fleet::mark_healthy`] must pass this many probe serves (one at a
+    /// time) before it is fully trusted again.
+    pub fn set_probation_rounds(&mut self, rounds: u64) {
+        self.probation_rounds = rounds;
     }
 
     /// Route one request; returns the node index. Unhealthy nodes are
@@ -112,8 +148,23 @@ impl Fleet {
     /// and fails requests instead of sending them to the dead).
     pub fn route(&mut self) -> usize {
         assert!(!self.nodes.is_empty(), "empty fleet");
-        let all = self.healthy_count() == 0;
-        let eligible = |n: &Node| all || n.healthy;
+        // Trust ladder: prefer nodes that are trusted or idle-on-probation
+        // (a probation node takes one probe at a time); fall back to any
+        // healthy node (every survivor is a busy probationer); a fully
+        // unhealthy fleet degrades to all nodes.
+        let probing = |n: &Node| n.healthy && (n.probation == 0 || n.outstanding == 0);
+        let tier = if self.nodes.iter().any(probing) {
+            0
+        } else if self.healthy_count() > 0 {
+            1
+        } else {
+            2
+        };
+        let eligible = move |n: &Node| match tier {
+            0 => n.healthy && (n.probation == 0 || n.outstanding == 0),
+            1 => n.healthy,
+            _ => true,
+        };
         let idx = match self.policy {
             RoutePolicy::RoundRobin => loop {
                 let i = self.cursor % self.nodes.len();
@@ -158,18 +209,78 @@ impl Fleet {
     }
 
     /// Exclude a node from routing — its worker is gone or an operator
-    /// drained it. Reversed by [`Fleet::mark_healthy`].
+    /// drained it. Reversed by [`Fleet::mark_healthy`]. Opens the node's
+    /// MTTR incident clock (idempotent: re-marking a down node does not
+    /// reset it).
     pub fn mark_unhealthy(&mut self, idx: usize) {
-        self.nodes[idx].healthy = false;
+        let n = &mut self.nodes[idx];
+        if n.healthy || n.down_since.is_none() {
+            n.faults += n.healthy as u64;
+            if n.down_since.is_none() {
+                n.down_since = Some(Instant::now());
+            }
+        }
+        n.healthy = false;
+        n.probation = 0;
     }
 
     /// Restore a node to the routable set — the recovery hook the old
     /// router lacked (an excluded node stayed excluded for the server's
     /// lifetime even after its worker came back or an operator replaced
-    /// the card). The dispatch stage resumes routing to it on the next
-    /// request.
+    /// the card). With probation armed the node re-enters quarantined:
+    /// it serves probes one at a time and is fully trusted (incident
+    /// closed, MTTR recorded) only after passing them all; with the
+    /// default of zero rounds the dispatch stage resumes routing to it
+    /// immediately.
     pub fn mark_healthy(&mut self, idx: usize) {
-        self.nodes[idx].healthy = true;
+        let rounds = self.probation_rounds;
+        let n = &mut self.nodes[idx];
+        if n.healthy {
+            return;
+        }
+        n.healthy = true;
+        n.probation = rounds;
+        if rounds == 0 {
+            self.close_incident(idx);
+        }
+    }
+
+    /// Report a served request's outcome for probation tracking: a
+    /// passing probe works the node toward full trust, a failing one
+    /// re-quarantines it on the spot. No-op for trusted nodes.
+    pub fn note_result(&mut self, idx: usize, ok: bool) {
+        if self.nodes[idx].probation == 0 {
+            return;
+        }
+        if ok {
+            self.nodes[idx].probation -= 1;
+            if self.nodes[idx].probation == 0 {
+                self.close_incident(idx);
+            }
+        } else {
+            self.nodes[idx].healthy = false;
+            self.nodes[idx].probation = 0;
+            // the original incident clock keeps running
+        }
+    }
+
+    fn close_incident(&mut self, idx: usize) {
+        let n = &mut self.nodes[idx];
+        if let Some(start) = n.down_since.take() {
+            n.downtime_s += start.elapsed().as_secs_f64();
+            n.recoveries += 1;
+        }
+    }
+
+    /// Mean time to recovery across closed incidents, seconds. `None`
+    /// until at least one node has fully recovered.
+    pub fn mttr_s(&self) -> Option<f64> {
+        let recoveries: u64 = self.nodes.iter().map(|n| n.recoveries).sum();
+        if recoveries == 0 {
+            return None;
+        }
+        let downtime: f64 = self.nodes.iter().map(|n| n.downtime_s).sum();
+        Some(downtime / recoveries as f64)
     }
 
     /// Move one queued unit of work from `from` to `to` — the router-side
@@ -241,13 +352,7 @@ mod tests {
     }
 
     fn node(name: &'static str, weight: f64) -> Node {
-        Node {
-            name,
-            weight,
-            outstanding: 0,
-            assigned: 0,
-            healthy: true,
-        }
+        Node::new(name, weight)
     }
 
     #[test]
@@ -367,6 +472,102 @@ mod tests {
         assert_eq!(f.healthy_count(), 2);
         let picks: Vec<usize> = (0..4).map(|_| f.route()).collect();
         assert!(picks.contains(&1), "recovered node must serve again: {picks:?}");
+    }
+
+    #[test]
+    fn probation_serves_one_probe_at_a_time() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::LeastLoaded);
+        f.set_probation_rounds(2);
+        f.mark_unhealthy(1);
+        f.mark_healthy(1);
+        assert_eq!(f.nodes[1].probation, 2, "readmission starts quarantined");
+        // the probationer is idle, so it is eligible — but once it holds
+        // one probe, everything else goes to the trusted node.
+        let mut got_probe = false;
+        for _ in 0..6 {
+            let i = f.route();
+            if i == 1 {
+                assert!(!got_probe, "a second request reached a busy probationer");
+                got_probe = true;
+            }
+        }
+        assert!(got_probe, "an idle probationer must receive its probe");
+        assert_eq!(f.nodes[1].outstanding, 1);
+    }
+
+    #[test]
+    fn passing_probes_restore_full_trust_and_record_mttr() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.set_probation_rounds(2);
+        assert_eq!(f.mttr_s(), None, "no incidents yet");
+        f.mark_unhealthy(1);
+        assert_eq!(f.nodes[1].faults, 1);
+        f.mark_healthy(1);
+        assert_eq!(f.mttr_s(), None, "quarantine holds the incident open");
+        for _ in 0..2 {
+            let i = f.route();
+            f.complete(i);
+            f.note_result(i, true);
+        }
+        // node 1's probe may not have routed yet depending on the cursor;
+        // drive until both probes pass.
+        while f.nodes[1].probation > 0 {
+            let i = f.route();
+            f.complete(i);
+            f.note_result(i, true);
+        }
+        assert!(f.nodes[1].trusted());
+        assert_eq!(f.nodes[1].recoveries, 1);
+        let mttr = f.mttr_s().expect("closed incident must record MTTR");
+        assert!(mttr >= 0.0);
+    }
+
+    #[test]
+    fn a_failed_probe_requarantines_the_node() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::LeastLoaded);
+        f.set_probation_rounds(3);
+        f.mark_unhealthy(1);
+        f.mark_healthy(1);
+        // route until the probationer holds its probe
+        while f.nodes[1].outstanding == 0 {
+            f.route();
+        }
+        f.complete(1);
+        f.note_result(1, false);
+        assert!(!f.nodes[1].healthy, "a flapping card goes straight back out");
+        assert_eq!(f.nodes[1].recoveries, 0, "the incident never closed");
+        assert_eq!(f.mttr_s(), None);
+        // and the fleet keeps serving on the survivor
+        for _ in 0..4 {
+            assert_eq!(f.route(), 0);
+        }
+    }
+
+    #[test]
+    fn zero_probation_preserves_immediate_readmission() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.mark_unhealthy(1);
+        f.mark_healthy(1);
+        assert!(f.nodes[1].trusted(), "legacy behaviour: trusted on readmit");
+        assert_eq!(f.nodes[1].recoveries, 1, "the incident closed at readmission");
+        assert!(f.mttr_s().is_some());
+    }
+
+    #[test]
+    fn note_result_is_a_noop_for_trusted_nodes() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        f.note_result(0, false);
+        assert!(f.nodes[0].trusted(), "failures on trusted nodes are the worker's call");
+    }
+
+    #[test]
+    fn remarking_a_down_node_does_not_reset_its_incident_clock() {
+        let mut f = Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin);
+        f.mark_unhealthy(0);
+        let started = f.nodes[0].down_since.expect("incident opened");
+        f.mark_unhealthy(0);
+        assert_eq!(f.nodes[0].down_since, Some(started));
+        assert_eq!(f.nodes[0].faults, 1, "one incident, not two");
     }
 
     #[test]

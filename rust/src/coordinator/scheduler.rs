@@ -99,6 +99,18 @@ pub fn plan_admission(policy: &BatchPolicy, live: usize, admissible: usize) -> u
     policy.concurrency().saturating_sub(live).min(admissible)
 }
 
+/// The degradation ladder's admission step: scale a worker's concurrency
+/// cap to its surviving KV pool after VRAM page loss. A card that lost a
+/// quarter of its blocks admits a quarter fewer concurrent sequences
+/// (rounded down, floored at one so the node keeps serving) instead of
+/// discovering the shortfall as page-pressure thrash mid-flight.
+pub fn degraded_concurrency(base_cap: usize, capacity_blocks: usize, base_blocks: usize) -> usize {
+    if base_blocks == 0 || capacity_blocks >= base_blocks {
+        return base_cap.max(1);
+    }
+    (base_cap * capacity_blocks / base_blocks).max(1)
+}
+
 /// Pick the preemption victim under KV page pressure: the **longest-
 /// remaining** active sequence, ties broken toward the latest index (the
 /// most recently admitted) — the inverse of [`StepPolicy::ShortestFirst`]'s
@@ -222,6 +234,20 @@ mod tests {
         assert_eq!(plan_admission(&p(2), 5, 3), 0);
         // zero cap is floored to one sequence
         assert_eq!(plan_admission(&p(0), 0, 3), 1);
+    }
+
+    #[test]
+    fn degraded_concurrency_tracks_surviving_blocks() {
+        // lost a quarter of 16 blocks → cap 8 shrinks to 6
+        assert_eq!(degraded_concurrency(8, 12, 16), 6);
+        // no loss (or growth) keeps the base cap
+        assert_eq!(degraded_concurrency(8, 16, 16), 8);
+        assert_eq!(degraded_concurrency(8, 20, 16), 8);
+        // catastrophic loss floors at one so the node keeps serving
+        assert_eq!(degraded_concurrency(8, 1, 16), 1);
+        assert_eq!(degraded_concurrency(8, 0, 16), 1);
+        // degenerate base pool never divides by zero
+        assert_eq!(degraded_concurrency(4, 3, 0), 4);
     }
 
     #[test]

@@ -51,6 +51,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::device::{registry, DeviceSpec};
+use crate::faults::{backoff_delay, Degrade, FaultInjector, FaultKind, FaultPlan, RecoveryPolicy};
 use crate::isa::pass::FmadPolicy;
 use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
@@ -65,11 +66,11 @@ use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 use super::batcher::BatchPolicy;
 use super::kv::{HostPool, KvPager, SeqKv};
 use super::metrics::{FleetMetrics, Metrics};
-use super::request::{GenRequest, GenResponse};
+use super::request::{Carried, GenRequest, GenResponse};
 use super::router::{Fleet, Node, RoutePolicy};
 use super::scheduler::{
-    choose_preempt, plan_admission, plan_eviction_weighted, plan_round_into, swap_round_trip_s,
-    PreemptAction, SeqView, StepPolicy,
+    choose_preempt, degraded_concurrency, plan_admission, plan_eviction_weighted,
+    plan_round_into, swap_round_trip_s, PreemptAction, SeqView, StepPolicy,
 };
 
 /// Power charged to a simulated second of swap transfer: the DMA engine
@@ -114,6 +115,12 @@ pub struct ServerConfig {
     pub nodes: Vec<NodeConfig>,
     /// Multi-tenant QoS: tenants, weighted fair queueing, work stealing.
     pub qos: QosConfig,
+    /// Self-healing knobs: sequence rescue on node death, bounded retry
+    /// with backoff, per-request deadlines, quarantine probation.
+    pub recovery: RecoveryPolicy,
+    /// Deterministic fault-injection plan (chaos testing). `None` — the
+    /// default — runs with the injector compiled out of the hot path.
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for ServerConfig {
@@ -126,6 +133,25 @@ impl Default for ServerConfig {
             route: RoutePolicy::WeightedThroughput,
             nodes: Vec::new(),
             qos: QosConfig::default(),
+            recovery: RecoveryPolicy::default(),
+            faults: None,
+        }
+    }
+}
+
+/// A request re-entering the admission stage from a worker: a **rescue**
+/// (its node died; its generated tokens ride along for bit-identical
+/// replay) or a bounded **retry** (a transient refusal — no KV pages —
+/// worth another dispatch after backoff).
+enum Requeue {
+    Rescue(GenRequest),
+    Retry(GenRequest),
+}
+
+impl Requeue {
+    fn into_request(self) -> GenRequest {
+        match self {
+            Requeue::Rescue(r) | Requeue::Retry(r) => r,
         }
     }
 }
@@ -141,6 +167,8 @@ pub struct ServerHandle {
     tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
     registry: Arc<TenantRegistry>,
     fleet: Arc<Mutex<Fleet>>,
+    /// Wall-clock deadline stamped on every submission (None = no SLO).
+    deadline: Option<Duration>,
     next_id: std::sync::atomic::AtomicU64,
 }
 
@@ -215,21 +243,33 @@ pub(crate) fn admission_budget(max_ctx: usize, prefill_t: usize) -> usize {
 
 /// Clears a node's liveness flag when its worker thread exits for any
 /// reason — including a panic — so the dispatch stage reroutes instead of
-/// queueing onto the dead.
+/// queueing onto the dead. Requests still queued on the corpse are
+/// **rescued** back into the admission stage when the rescue channel is
+/// up; otherwise they are dropped, closing their reply channels so
+/// waiting clients fail fast instead of hanging until shutdown. On a
+/// normal exit the queue is already drained and this is a no-op.
 struct AliveGuard {
     queues: Arc<NodeQueues<GenRequest>>,
+    fleet: Arc<Mutex<Fleet>>,
+    rescue: Option<SyncSender<Requeue>>,
     node: usize,
 }
 
 impl Drop for AliveGuard {
     fn drop(&mut self) {
-        self.queues.mark_dead(self.node);
-        // Orphaned requests are dropped, closing their reply channels —
-        // waiting clients fail fast (the old mpsc behaviour) instead of
-        // hanging until shutdown when no stealing peer rescues the queue
-        // (single-node fleet, or stealing disabled). On a normal exit the
-        // queue is already drained and this is a no-op.
-        drop(self.queues.drain_node(self.node));
+        // Kill-and-drain is atomic: no request can slip into the queue
+        // between the death flag and the drain and strand forever.
+        for req in self.queues.kill_node(self.node) {
+            // The routed-but-never-started slot goes back to the router;
+            // a successful rescue re-books on dispatch.
+            self.fleet.lock().unwrap().complete(self.node);
+            if let Some(tx) = &self.rescue {
+                if tx.send(Requeue::Rescue(req)).is_ok() {
+                    continue;
+                }
+            }
+            // No rescue path: the drop closes the reply channel.
+        }
     }
 }
 
@@ -258,20 +298,18 @@ impl Server {
             nodes.iter().map(|n| (n.device.clone(), n.fmad)).collect();
         let rows = bench.run_nodes(&cells, &quant::Q8_0);
 
-        let fleet = Arc::new(Mutex::new(Fleet::new(
+        let mut fleet_inner = Fleet::new(
             nodes
                 .iter()
                 .zip(&rows)
-                .map(|(n, r)| Node {
-                    name: n.device.name,
-                    weight: r.decode_tps,
-                    outstanding: 0,
-                    assigned: 0,
-                    healthy: true,
-                })
+                .map(|(n, r)| Node::new(n.device.name, r.decode_tps))
                 .collect(),
             config.route,
-        )));
+        );
+        // Flapping cards re-enter on probation: `mark_healthy` readmits
+        // them one probe at a time until they pass this many serves.
+        fleet_inner.set_probation_rounds(config.recovery.probation_rounds);
+        let fleet = Arc::new(Mutex::new(fleet_inner));
 
         let queue_depth = config.queue_depth.max(1);
         let weights_bytes = model.weight_bytes(&quant::Q8_0);
@@ -286,6 +324,14 @@ impl Server {
         // the dispatch stage prices energy estimates with it (one artifact
         // set serves every node, so any node's answer is the fleet's).
         let (ready_tx, ready_rx) = sync_channel::<Result<usize>>(nodes.len());
+        // The rescue channel: workers send dead-node sequences and bounded
+        // retries back to the dispatch stage. The dispatcher holds the
+        // receiver; a disconnect therefore means every worker has exited.
+        let (rescue_tx, rescue_rx) = sync_channel::<Requeue>(256);
+        let injector: Option<Arc<FaultInjector>> = config
+            .faults
+            .as_ref()
+            .map(|plan| Arc::new(FaultInjector::new(plan, nodes.len())));
         let mut overlays: Vec<Overlay> = Vec::with_capacity(nodes.len());
         let mut workers = Vec::with_capacity(nodes.len());
         let mut node_metrics = Vec::with_capacity(nodes.len());
@@ -311,11 +357,19 @@ impl Server {
             let policy = config.batch;
             let step_policy = config.step_policy;
             let steal = config.qos.steal;
+            let rescue = config.recovery.rescue.then(|| rescue_tx.clone());
+            let recovery = config.recovery.clone();
+            let injector = injector.clone();
 
             let worker = std::thread::Builder::new()
                 .name(format!("cmphx-node{i}"))
                 .spawn(move || {
-                    let _alive = AliveGuard { queues: Arc::clone(&queues), node: i };
+                    let _alive = AliveGuard {
+                        queues: Arc::clone(&queues),
+                        fleet: Arc::clone(&fleet),
+                        rescue: rescue.clone(),
+                        node: i,
+                    };
                     let runtime = match ModelRuntime::load(&artifacts) {
                         Ok(rt) => rt,
                         Err(e) => {
@@ -367,6 +421,8 @@ impl Server {
                         return;
                     }
                     let _ = ready.send(Ok(runtime.config.prefill_t));
+                    let base_blocks = pager.capacity_blocks();
+                    let base_max_batch = policy.max_batch;
                     worker_loop(NodeWorker {
                         node: i,
                         runtime,
@@ -383,6 +439,12 @@ impl Server {
                         accounts,
                         fleet,
                         steal,
+                        rescue,
+                        recovery,
+                        injector,
+                        degrade: Degrade::default(),
+                        base_blocks,
+                        base_max_batch,
                     });
                 })?;
             workers.push(worker);
@@ -402,16 +464,24 @@ impl Server {
             }
         }
 
+        // The workers hold the only surviving rescue senders: when the
+        // last worker exits, the dispatcher's drain loop sees the channel
+        // disconnect and knows nothing can be rescued any more.
+        drop(rescue_tx);
+
         // QoS dispatch stage: tenant-fair admission, budget enforcement,
         // then the Fleet's routing policy fans out to the node queues.
         let (tx, rx) = sync_channel::<GenRequest>(queue_depth);
         let dispatcher = Dispatcher {
             rx,
+            rescue_rx,
             queue: AdmissionQueue::new(
                 config.qos.enabled,
                 &registry.weights(),
                 config.qos.aging_pops,
             ),
+            delayed: Vec::new(),
+            recovery: config.recovery.clone(),
             fleet: Arc::clone(&fleet),
             queues: Arc::clone(&queues),
             accounts,
@@ -434,6 +504,7 @@ impl Server {
             tenant_metrics,
             registry,
             fleet,
+            deadline: config.recovery.deadline,
             next_id: std::sync::atomic::AtomicU64::new(1),
         })
     }
@@ -446,7 +517,14 @@ impl Server {
 /// old channel-based dispatch did.
 struct Dispatcher {
     rx: Receiver<GenRequest>,
+    /// Workers hand back rescued (node death) and retryable (transient
+    /// admission failure) requests here; the channel disconnects when the
+    /// last worker exits.
+    rescue_rx: Receiver<Requeue>,
     queue: AdmissionQueue<GenRequest>,
+    /// Retries serving out their exponential backoff: (due, request).
+    delayed: Vec<(Instant, GenRequest)>,
+    recovery: RecoveryPolicy,
     fleet: Arc<Mutex<Fleet>>,
     queues: Arc<NodeQueues<GenRequest>>,
     accounts: Arc<Mutex<TenantAccounts>>,
@@ -463,11 +541,17 @@ impl Dispatcher {
     fn run(mut self) {
         let mut open = true;
         loop {
-            // Ingest: block only when nothing is queued for dispatch.
+            let now = Instant::now();
+            self.drain_rescues(now);
+            self.promote_delayed(now);
+            // Ingest: wait briefly when nothing is queued for dispatch —
+            // a bounded wait, not a blocking recv, because a worker may
+            // hand back a rescue or a retry may come due at any time.
             if open && self.queue.is_empty() {
-                match self.rx.recv() {
+                match self.rx.recv_timeout(Duration::from_millis(5)) {
                     Ok(r) => self.enqueue(r),
-                    Err(_) => open = false,
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => open = false,
                 }
             }
             if open {
@@ -484,7 +568,12 @@ impl Dispatcher {
             }
             if self.queue.is_empty() {
                 if !open {
-                    break;
+                    if self.delayed.is_empty() {
+                        break;
+                    }
+                    // drained submit channel; pace the wait for the next
+                    // retry to come due instead of spinning
+                    std::thread::sleep(Duration::from_millis(1));
                 }
                 continue;
             }
@@ -541,6 +630,26 @@ impl Dispatcher {
         // Every accepted request has been routed; the workers drain their
         // queues, then see Closed.
         self.queues.close();
+        // Workers still busy after the close can die and hand their
+        // in-flight sequences back. Keep requeueing and re-dispatching
+        // until the last worker drops its rescue sender — only then is it
+        // certain nothing can be placed, and the leftovers are failed.
+        loop {
+            match self.rescue_rx.recv_timeout(Duration::from_millis(10)) {
+                Ok(rq) => self.requeue(rq, Instant::now()),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+            let now = Instant::now();
+            self.promote_delayed(now);
+            while !self.queue.is_empty() && self.queues.any_space(self.node_depth) {
+                match self.queue.pop_eligible(|_, _| true) {
+                    Popped::Item(t, req) => self.dispatch(t, req, now),
+                    _ => break,
+                }
+            }
+        }
+        self.fail_parked("no healthy nodes (worker unavailable)");
     }
 
     fn enqueue(&mut self, r: GenRequest) {
@@ -549,33 +658,116 @@ impl Dispatcher {
         self.queue.push(r.tenant, r.max_tokens as f64, r);
     }
 
+    /// Pull everything the workers handed back since the last pass.
+    fn drain_rescues(&mut self, now: Instant) {
+        while let Ok(rq) = self.rescue_rx.try_recv() {
+            self.requeue(rq, now);
+        }
+    }
+
+    /// Remaining service for a request that may carry replayed progress —
+    /// the cost a re-entering rescue is priced at.
+    fn remaining_cost(req: &GenRequest) -> f64 {
+        req.max_tokens.saturating_sub(req.carry.replay.len()).max(1) as f64
+    }
+
+    /// Re-admit a request a worker handed back. Rescues re-enter at the
+    /// *head* of their tenant's lane — the sequence already waited its
+    /// turn and holds replayable progress that ages badly. Retries park in
+    /// `delayed` until their exponential backoff elapses.
+    fn requeue(&mut self, rq: Requeue, now: Instant) {
+        match rq {
+            Requeue::Rescue(req) => {
+                self.queue.push_front(req.tenant, Self::remaining_cost(&req), req);
+            }
+            Requeue::Retry(req) => {
+                let due = now + backoff_delay(self.recovery.backoff, req.carry.attempt);
+                self.delayed.push((due, req));
+            }
+        }
+    }
+
+    /// Move every retry whose backoff has elapsed back into the fair
+    /// queue (at the lane head — it was already admitted once).
+    fn promote_delayed(&mut self, now: Instant) {
+        let mut i = 0;
+        while i < self.delayed.len() {
+            if self.delayed[i].0 <= now {
+                let (_, req) = self.delayed.swap_remove(i);
+                self.queue.push_front(req.tenant, Self::remaining_cost(&req), req);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Fail everything still parked in the fair queue or the backoff pen —
+    /// the last healthy node is gone, so these can never be served. Parked
+    /// requests must fail *promptly* here, not linger until shutdown.
+    fn fail_parked(&mut self, why: &str) {
+        let mut orphans: Vec<GenRequest> = Vec::new();
+        while let Popped::Item(_, req) = self.queue.pop_eligible(|_, _| true) {
+            orphans.push(req);
+        }
+        orphans.extend(std::mem::take(&mut self.delayed).into_iter().map(|(_, r)| r));
+        for req in orphans {
+            self.accounts
+                .lock()
+                .unwrap()
+                .settle_energy(req.tenant, req.charged_j, req.carry.sim_j);
+            self.shed(req, 0, why, false);
+        }
+    }
+
     /// Route one request to a live worker, failing over past dead ones. A
     /// bounced push marks the node unhealthy — it stays excluded until
     /// [`ServerHandle::mark_healthy`] restores it — and the request is
     /// rerouted to the next healthy node. Only when no healthy node
     /// remains is the request failed.
     fn dispatch(&mut self, t: TenantId, mut req: GenRequest, now: Instant) {
+        // A request past its wall-clock deadline fails here, not on a
+        // card: routing it would burn node time on an answer the client
+        // has already given up on.
+        if req.deadline.is_some_and(|d| now >= d) {
+            self.tenant_metrics[t.0].lock().unwrap().deadline_misses += 1;
+            self.accounts
+                .lock()
+                .unwrap()
+                .settle_energy(t, req.charged_j, req.carry.sim_j);
+            self.shed(req, 0, "deadline exceeded before dispatch", false);
+            return;
+        }
         let mut idx = {
             let mut f = self.fleet.lock().unwrap();
             if f.healthy_count() == 0 {
                 drop(f);
-                self.shed(req, 0, "node worker unavailable", true);
+                self.accounts
+                    .lock()
+                    .unwrap()
+                    .settle_energy(t, req.charged_j, req.carry.sim_j);
+                self.shed(req, 0, "no healthy nodes (worker unavailable)", true);
+                // Nothing parked behind this request can be served either.
+                self.fail_parked("no healthy nodes (worker unavailable)");
                 return;
             }
             f.route()
         };
-        let est_j = self.overlays[idx].estimate_j(self.prefill_t, req.max_tokens);
-        {
-            let mut acc = self.accounts.lock().unwrap();
-            if acc.try_charge_energy(t, est_j) == Admission::EnergyExhausted {
-                drop(acc);
-                self.fleet.lock().unwrap().complete(idx);
-                self.shed(req, idx, "tenant energy budget exhausted", false);
-                return;
+        // Rescues and retries were already charged on first dispatch —
+        // charging again would double-bill the tenant for the fault.
+        if req.charged_j == 0.0 {
+            let est_j = self.overlays[idx].estimate_j(self.prefill_t, req.max_tokens);
+            {
+                let mut acc = self.accounts.lock().unwrap();
+                if acc.try_charge_energy(t, est_j) == Admission::EnergyExhausted {
+                    drop(acc);
+                    self.fleet.lock().unwrap().complete(idx);
+                    self.shed(req, idx, "tenant energy budget exhausted", false);
+                    return;
+                }
+                acc.charge_rate(t, req.max_tokens as f64, now);
             }
-            acc.charge_rate(t, req.max_tokens as f64, now);
+            req.charged_j = est_j;
         }
-        req.charged_j = est_j;
         loop {
             match self.queues.push_bounded(idx, req, self.node_depth) {
                 Ok(()) => return,
@@ -592,8 +784,12 @@ impl Dispatcher {
                     if !any_healthy {
                         // Every worker is gone: fail the request (and hand
                         // its energy charge back) instead of wedging.
-                        self.accounts.lock().unwrap().settle_energy(t, req.charged_j, 0.0);
-                        self.shed(req, idx, "node worker unavailable", true);
+                        self.accounts
+                            .lock()
+                            .unwrap()
+                            .settle_energy(t, req.charged_j, req.carry.sim_j);
+                        self.shed(req, idx, "no healthy nodes (worker unavailable)", true);
+                        self.fail_parked("no healthy nodes (worker unavailable)");
                         return;
                     }
                     idx = self.fleet.lock().unwrap().route();
@@ -606,7 +802,8 @@ impl Dispatcher {
     /// rollup always; on the node's metrics only when a node was actually
     /// involved (`on_node` — the dead-fleet path the old dispatch had).
     fn shed(&self, req: GenRequest, node: usize, why: &str, on_node: bool) {
-        let queue_s = req.enqueued.elapsed().as_secs_f64();
+        // fold in queue time banked across earlier dispatch attempts
+        let queue_s = req.carry.queue_s + req.enqueued.elapsed().as_secs_f64();
         if on_node {
             self.node_metrics[node].lock().unwrap().record_response(queue_s, 0, false);
         }
@@ -664,6 +861,8 @@ impl ServerHandle {
             charged_j: 0.0,
             reply,
             enqueued: Instant::now(),
+            deadline: self.deadline.map(|d| Instant::now() + d),
+            carry: Carried::default(),
         };
         let tx = self.tx.as_ref().ok_or_else(|| anyhow::anyhow!("server stopped"))?;
         match tx.try_send(req) {
@@ -712,12 +911,27 @@ impl ServerHandle {
 
     /// Per-node and per-tenant metrics snapshot.
     pub fn fleet_metrics(&self) -> FleetMetrics {
+        // Router incident data (downtime, recoveries — the MTTR inputs)
+        // is snapshotted first, then stamped into each node's metrics
+        // clone: the router and metrics locks are never held together.
+        let node_fault: Vec<(f64, u64)> = {
+            let f = self.fleet.lock().unwrap();
+            f.nodes.iter().map(|n| (n.downtime_s, n.recoveries)).collect()
+        };
         FleetMetrics {
             nodes: self
                 .node_names
                 .iter()
                 .zip(&self.node_metrics)
-                .map(|(name, m)| (*name, m.lock().unwrap().clone()))
+                .enumerate()
+                .map(|(i, (name, m))| {
+                    let mut snap = m.lock().unwrap().clone();
+                    if let Some(&(down, rec)) = node_fault.get(i) {
+                        snap.fault_downtime_s = down;
+                        snap.fault_recoveries = rec;
+                    }
+                    (*name, snap)
+                })
                 .collect(),
             tenants: self
                 .registry
@@ -778,6 +992,20 @@ struct NodeWorker {
     accounts: Arc<Mutex<TenantAccounts>>,
     fleet: Arc<Mutex<Fleet>>,
     steal: bool,
+    /// Hand-back channel to the dispatch stage for rescued (node death)
+    /// and retried (transient admission failure) requests. `None` when
+    /// [`RecoveryPolicy::rescue`] is off — then a death drops its work.
+    rescue: Option<SyncSender<Requeue>>,
+    recovery: RecoveryPolicy,
+    /// Seeded fault script for this fleet (chaos runs only).
+    injector: Option<Arc<FaultInjector>>,
+    /// Live degraded-mode state accumulated from injected faults.
+    degrade: Degrade,
+    /// KV capacity at startup — the denominator for pro-rata admission
+    /// shrink after VRAM page loss.
+    base_blocks: usize,
+    /// [`BatchPolicy::max_batch`] at startup, before degradation shrank it.
+    base_max_batch: usize,
 }
 
 /// One in-flight sequence.
@@ -882,6 +1110,21 @@ fn worker_loop(mut w: NodeWorker) {
     let mut open = true;
 
     while open || !live.is_empty() || !waiting.is_empty() {
+        // --- injected faults (chaos runs): a scripted death hands every
+        //     queued, live, and parked sequence back to the dispatch
+        //     stage for rescue; lesser faults degrade this round. ---
+        if apply_faults(&mut w) {
+            died(&mut w, std::mem::take(&mut live), std::mem::take(&mut waiting));
+            return;
+        }
+        if w.degrade.stall_rounds > 0 {
+            // Transient stall (wedged driver): no work this round, but
+            // parked sequences still age toward their admission freeze.
+            w.degrade.stall_rounds -= 1;
+            std::thread::sleep(Duration::from_millis(1));
+            age_parked(&mut waiting);
+            continue;
+        }
         let prefill_t = w.runtime.config.prefill_t;
         // --- admission (page-join): fill headroom, never stall decode.
         //     Preempted sequences resume before new arrivals join. ---
@@ -1083,18 +1326,22 @@ fn worker_loop(mut w: NodeWorker) {
                 m.record_batch(plan.len());
                 m.sync_prefix(w.pager.prefix_stats());
             }
+            // A thermal throttle stretches every simulated decode step
+            // this round; the token stream itself is unchanged.
+            let slow = w.degrade.decode_factor();
             for &idx in &plan {
                 let l = &mut live[idx];
                 let token = *l.tokens.last().unwrap();
                 match w.runtime.decode(&mut l.state, token) {
                     Ok(()) => {
                         l.tokens.push(l.state.argmax());
-                        l.sim_s += w.overlay.decode_s_per_token;
-                        l.sim_j += w.overlay.decode_s_per_token * w.overlay.decode_w;
+                        l.sim_s += w.overlay.decode_s_per_token * slow;
+                        l.sim_j += w.overlay.decode_s_per_token * slow * w.overlay.decode_w;
                     }
                     Err(e) => l.failed = Some(format!("decode failed: {e}")),
                 }
             }
+            w.degrade.tick_round();
         }
 
         // --- retire finished sequences; their pages free for the next
@@ -1112,6 +1359,162 @@ fn age_parked(waiting: &mut VecDeque<Preempted>) {
     for p in waiting.iter_mut() {
         p.parked_rounds += 1;
     }
+}
+
+/// Poll the fault script and apply this round's events to the worker.
+/// Returns true when the node dies (the caller unwinds through [`died`]).
+fn apply_faults(w: &mut NodeWorker) -> bool {
+    let Some(injector) = w.injector.clone() else { return false };
+    let mut dead = false;
+    for kind in injector.begin_round(w.node) {
+        match kind {
+            FaultKind::NodeDeath => dead = true,
+            FaultKind::TransientStall { rounds } => {
+                w.degrade.stall_rounds += rounds;
+                w.metrics.lock().unwrap().degrade_events += 1;
+            }
+            FaultKind::LinkDowngrade { lanes } => {
+                w.link = w.link.with_lanes(lanes);
+                // Ladder step 1: the narrow link no longer earns a swap's
+                // round trip; future evictions drop-and-recompute.
+                w.degrade.swap_disabled = true;
+                w.metrics.lock().unwrap().degrade_events += 1;
+            }
+            FaultKind::VramPageLoss { blocks } => {
+                let lost = w.pager.lose_blocks(blocks);
+                w.degrade.lost_blocks += lost;
+                // Ladder step 3: admission shrinks pro-rata with the
+                // surviving page pool.
+                w.policy.max_batch = degraded_concurrency(
+                    w.base_max_batch,
+                    w.pager.capacity_blocks(),
+                    w.base_blocks,
+                );
+                w.metrics.lock().unwrap().degrade_events += 1;
+            }
+            FaultKind::SwapInFailure => {
+                // armed inside the injector; consumed at the next swap-in
+            }
+            FaultKind::ThermalThrottle { factor, rounds } => {
+                w.degrade.throttle_factor = factor;
+                w.degrade.throttle_rounds += rounds;
+                w.metrics.lock().unwrap().degrade_events += 1;
+            }
+        }
+    }
+    dead
+}
+
+/// The node died mid-flight. Hand every queued, live, and parked sequence
+/// back to the dispatch stage with its replayable progress (greedy decode
+/// is deterministic, so a healthy card reconstructs the exact state);
+/// whatever cannot be handed back is answered terminally so no client
+/// ever hangs on a dead card.
+fn died(w: &mut NodeWorker, live: Vec<Live>, waiting: VecDeque<Preempted>) {
+    w.fleet.lock().unwrap().mark_unhealthy(w.node);
+    // Atomically kill + drain our queue. Queued requests never started:
+    // they re-enter with whatever they already carried (no new rescue
+    // count — no progress was at risk).
+    for req in w.queues.kill_node(w.node) {
+        w.fleet.lock().unwrap().complete(w.node);
+        requeue_or_lose(w, req);
+    }
+    let now = Instant::now();
+    for l in live {
+        w.pager.release(l.kv).expect("page accounting");
+        let decode_s = l.decode_s + l.decode_started.elapsed().as_secs_f64();
+        let mut req = l.req;
+        req.carry = Carried {
+            replay: l.tokens,
+            queue_s: l.queue_s,
+            prefill_s: l.prefill_s,
+            decode_s,
+            sim_s: l.sim_s,
+            sim_j: l.sim_j,
+            preemptions: l.preemptions,
+            swaps: l.swaps,
+            rescues: req.carry.rescues + 1,
+            attempt: req.carry.attempt,
+        };
+        req.enqueued = now;
+        let (tenant, kept_s) = (req.tenant, req.carry.sim_s);
+        w.fleet.lock().unwrap().complete(w.node);
+        if requeue_or_lose(w, req) {
+            count_rescue(w, tenant, kept_s);
+        }
+    }
+    for mut p in waiting {
+        if p.swapped.take().is_some() {
+            w.host_pool.release(p.swap_bytes);
+        }
+        let queue_s = p.queue_s_now();
+        let mut req = p.req;
+        req.carry = Carried {
+            replay: p.tokens,
+            queue_s,
+            prefill_s: p.prefill_s,
+            decode_s: p.decode_s,
+            sim_s: p.sim_s,
+            sim_j: p.sim_j,
+            preemptions: p.preemptions,
+            swaps: p.swaps,
+            rescues: req.carry.rescues + 1,
+            attempt: req.carry.attempt,
+        };
+        req.enqueued = now;
+        let (tenant, kept_s) = (req.tenant, req.carry.sim_s);
+        w.fleet.lock().unwrap().complete(w.node);
+        if requeue_or_lose(w, req) {
+            count_rescue(w, tenant, kept_s);
+        }
+    }
+}
+
+/// Book one successful rescue hand-back on the node and tenant rollups.
+/// `kept_s` is the simulated device time the rescue preserved — work a
+/// rescue-less engine would have re-burned or thrown away.
+fn count_rescue(w: &NodeWorker, tenant: TenantId, kept_s: f64) {
+    {
+        let mut m = w.metrics.lock().unwrap();
+        m.rescued_seqs += 1;
+        m.rescue_kept_s += kept_s;
+    }
+    w.tenant_metrics[tenant.0].lock().unwrap().rescued_seqs += 1;
+}
+
+/// Hand one request (with its carried progress) back to the dispatch
+/// stage for re-admission elsewhere. When rescue is off or the dispatcher
+/// is gone, the request is answered with a terminal error instead — lost,
+/// but never hung. The caller has already `complete()`d the router slot.
+fn requeue_or_lose(w: &mut NodeWorker, req: GenRequest) -> bool {
+    let req = match &w.rescue {
+        Some(tx) => match tx.send(Requeue::Rescue(req)) {
+            Ok(()) => return true,
+            Err(e) => e.0.into_request(),
+        },
+        None => req,
+    };
+    let queue_s = req.carry.queue_s;
+    {
+        let mut m = w.metrics.lock().unwrap();
+        m.lost_seqs += 1;
+        m.record_response(queue_s, 0, false);
+    }
+    {
+        let mut tm = w.tenant_metrics[req.tenant.0].lock().unwrap();
+        tm.lost_seqs += 1;
+        tm.simulated_energy_j += req.carry.sim_j;
+        tm.record_response(queue_s, 0, false);
+    }
+    w.accounts.lock().unwrap().settle_energy(req.tenant, req.charged_j, req.carry.sim_j);
+    let _ = req.reply.send(empty_response(
+        req.id,
+        req.tenant,
+        w.node,
+        queue_s,
+        Some("node died; rescue unavailable".into()),
+    ));
+    false
 }
 
 /// Block until a request arrives on this node's queue. While the queue is
@@ -1172,9 +1575,10 @@ fn retire_done(w: &mut NodeWorker, live: &mut Vec<Live>) {
 /// Admit one routed request: window checks, KV pages for the prefill
 /// window, prefill. Returns true when the request joined the in-flight
 /// set.
-fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
+fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool {
     let cfg = w.runtime.config;
-    let queue_s = req.enqueued.elapsed().as_secs_f64();
+    // queue time banked across earlier dispatch attempts plus this one
+    let queue_s = req.carry.queue_s + req.enqueued.elapsed().as_secs_f64();
     if req.max_tokens == 0 {
         // submit() rejects these at the API; a zero-token request built by
         // any other path is answered as an empty success without touching
@@ -1186,6 +1590,29 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         let _ = req.reply.send(empty_response(req.id, req.tenant, w.node, queue_s, None));
         return false;
     }
+    // Deadline checkpoint: past-due work is refused before it can take
+    // pages (the client already gave up; pages would be pure waste).
+    if req.deadline.is_some_and(|d| Instant::now() >= d) {
+        w.metrics.lock().unwrap().deadline_misses += 1;
+        w.tenant_metrics[req.tenant.0].lock().unwrap().deadline_misses += 1;
+        reject(w, &req, "deadline exceeded".into(), queue_s, req.carry.sim_j);
+        return false;
+    }
+    // Degradation ladder, step 2: a degraded card (throttled, or short of
+    // VRAM) sheds tenants that over-drew their sustained rate first — the
+    // capacity the fault removed is capacity they had already borrowed.
+    if (w.degrade.throttled() || w.degrade.lost_blocks > 0)
+        && w.accounts.lock().unwrap().rate_in_debt(req.tenant, Instant::now())
+    {
+        reject(
+            w,
+            &req,
+            "shed by degraded node (tenant over sustained rate)".into(),
+            queue_s,
+            req.carry.sim_j,
+        );
+        return false;
+    }
     let budget = admission_budget(cfg.max_ctx, cfg.prefill_t);
     if req.prompt.len() > cfg.prefill_t || req.max_tokens > budget {
         let msg = format!(
@@ -1195,7 +1622,7 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
             req.max_tokens,
             budget
         );
-        reject(w, &req, msg, queue_s, 0.0);
+        reject(w, &req, msg, queue_s, req.carry.sim_j);
         return false;
     }
     // The sequence must fit this card's page pool even running alone, or
@@ -1207,34 +1634,72 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
             w.pager.blocks_for(final_positions),
             w.pager.capacity_blocks()
         );
-        reject(w, &req, msg, queue_s, 0.0);
+        reject(w, &req, msg, queue_s, req.carry.sim_j);
         return false;
     }
     let Some((kv, hits)) = admit_pages(w, &req.prompt) else {
-        reject(w, &req, "no KV pages (overload)".into(), queue_s, 0.0);
-        return false;
+        return retry_or_reject(w, req, "no KV pages (overload)", queue_s);
     };
     let cached = cached_positions(w, hits);
+    // A rescued sequence re-admits its full replayed length up front — a
+    // mid-replay eviction would throw away exactly the progress the
+    // rescue preserved.
+    let replay = std::mem::take(&mut req.carry.replay);
+    if !replay.is_empty() {
+        let replay_positions = cfg.prefill_t + replay.len().saturating_sub(1);
+        if !w.pager.grow(kv, replay_positions).expect("just-admitted KV handle") {
+            w.pager.release(kv).expect("releasing the just-admitted pages");
+            req.carry.replay = replay;
+            return retry_or_reject(w, req, "no KV pages (overload)", queue_s);
+        }
+    }
     let t0 = Instant::now();
     match w.runtime.prefill_padded(&req.prompt) {
-        Ok(state) => {
+        Ok(mut state) => {
+            // Replay a rescue's generated tokens: greedy decode is
+            // deterministic, so this reconstructs the dead card's state —
+            // and the eventual token stream — bit for bit.
+            for &tok in replay.iter().take(replay.len().saturating_sub(1)) {
+                if let Err(e) = w.runtime.decode(&mut state, tok) {
+                    w.pager.release(kv).expect("page accounting");
+                    reject(
+                        w,
+                        &req,
+                        format!("rescue replay failed: {e}"),
+                        queue_s,
+                        req.carry.sim_j,
+                    );
+                    return false;
+                }
+            }
             credit_prefix_hits(w, cached);
             let prefill_s = t0.elapsed().as_secs_f64();
-            let sim_s = w.overlay.prefill_s_per_token * (cfg.prefill_t - cached) as f64;
-            let sim_j = sim_s * w.overlay.prefill_w;
-            let first = state.argmax();
+            let (sim_s, sim_j) = if replay.is_empty() {
+                let s = w.overlay.prefill_s_per_token * (cfg.prefill_t - cached) as f64;
+                (s, s * w.overlay.prefill_w)
+            } else {
+                // The replay is priced like a recompute-resume: prefill
+                // minus prefix credit, plus the replayed decode steps.
+                let steps = replay.len().saturating_sub(1);
+                let s = w.overlay.recompute_s(cfg.prefill_t - cached, steps);
+                let j = w.overlay.recompute_j(cfg.prefill_t - cached, steps);
+                w.metrics.lock().unwrap().rescue_replay_s += s;
+                (s, j)
+            };
+            let tokens =
+                if replay.is_empty() { vec![state.argmax()] } else { replay };
             live.push(Live {
+                queue_s,
+                prefill_s: req.carry.prefill_s + prefill_s,
+                decode_s: req.carry.decode_s,
+                sim_s: req.carry.sim_s + sim_s,
+                sim_j: req.carry.sim_j + sim_j,
+                preemptions: req.carry.preemptions,
+                swaps: req.carry.swaps,
                 req,
                 state,
                 kv,
-                tokens: vec![first],
-                queue_s,
-                prefill_s,
-                decode_s: 0.0,
-                sim_s,
-                sim_j,
-                preemptions: 0,
-                swaps: 0,
+                tokens,
                 shielded: false,
                 failed: None,
                 decode_started: Instant::now(),
@@ -1243,10 +1708,40 @@ fn admit(w: &mut NodeWorker, req: GenRequest, live: &mut Vec<Live>) -> bool {
         }
         Err(e) => {
             w.pager.release(kv).expect("releasing the just-admitted pages");
-            reject(w, &req, format!("prefill failed: {e}"), queue_s, 0.0);
+            reject(w, &req, format!("prefill failed: {e}"), queue_s, req.carry.sim_j);
             false
         }
     }
+}
+
+/// Bounded retry: while attempts remain (and the dispatch stage is still
+/// reachable) a transiently-refused request goes back for another pass
+/// after exponential backoff, instead of failing outright. Falls back to
+/// a terminal reject once retries are spent. Returns false always —
+/// nothing joined the live set either way.
+fn retry_or_reject(w: &mut NodeWorker, mut req: GenRequest, why: &str, queue_s: f64) -> bool {
+    if req.carry.attempt < w.recovery.max_retries {
+        if let Some(tx) = w.rescue.clone() {
+            req.carry.attempt += 1;
+            // bank the wait so far; the clock restarts on re-entry
+            req.carry.queue_s += req.enqueued.elapsed().as_secs_f64();
+            req.enqueued = Instant::now();
+            let tenant = req.tenant;
+            match tx.send(Requeue::Retry(req)) {
+                Ok(()) => {
+                    w.metrics.lock().unwrap().retries += 1;
+                    w.tenant_metrics[tenant.0].lock().unwrap().retries += 1;
+                    w.fleet.lock().unwrap().complete(w.node);
+                    return false;
+                }
+                Err(e) => req = e.0.into_request(),
+            }
+        }
+    }
+    let attempt = req.carry.attempt + 1;
+    let sim_j = req.carry.sim_j;
+    reject(w, &req, format!("{why} (attempt {attempt})"), queue_s, sim_j);
+    false
 }
 
 /// Reserve prefill-window pages for one prompt. With the prefix cache on,
@@ -1301,7 +1796,9 @@ fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
     let mut swap = false;
     let mut kv_bytes = 0u64;
     let mut recompute_est_s = 0.0;
-    if w.policy.swap {
+    // Degradation ladder, step 1: a downgraded link no longer earns the
+    // round trip the chooser would price at full width — swap is off.
+    if w.policy.swap && !w.degrade.swap_disabled {
         // Price the recompute side with the same prefix credit a
         // recompute-resume would get: prompt blocks other live sequences
         // also hold survive this release and come back as cache hits, so
@@ -1387,6 +1884,19 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
     // restoring/recomputing or terminally answered.
     let queue_s = p.queue_s_now();
     let replay_steps = p.tokens.len().saturating_sub(1);
+    // Injected swap-in failure: the host copy is unreadable. Release the
+    // reservation and fall through to the recompute path — greedy decode
+    // rebuilds the identical state, so the failure costs time, not
+    // correctness.
+    if p.swapped.is_some()
+        && w.injector.as_ref().is_some_and(|i| i.take_swap_in_failure(w.node))
+    {
+        p.swapped = None;
+        w.host_pool.release(p.swap_bytes);
+        p.swap_bytes = 0;
+        w.metrics.lock().unwrap().swap_in_failures += 1;
+        w.tenant_metrics[p.req.tenant.0].lock().unwrap().swap_in_failures += 1;
+    }
     if let Some(state) = p.swapped.take() {
         // Swap-in: the parked private pages come back over the host
         // link; the recompute the chooser priced against never runs.
@@ -1495,6 +2005,7 @@ fn retire(w: &mut NodeWorker, l: Live) {
         simulated_device_s: l.sim_s,
         preemptions: l.preemptions,
         swaps: l.swaps,
+        rescues: l.req.carry.rescues,
         node: w.node,
     };
     {
@@ -1512,7 +2023,13 @@ fn retire(w: &mut NodeWorker, l: Live) {
         tm.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
     w.accounts.lock().unwrap().settle_energy(l.req.tenant, l.req.charged_j, l.sim_j);
-    w.fleet.lock().unwrap().complete(w.node);
+    {
+        // A clean retirement is also a probation probe result: enough
+        // successes readmit a recovered card to full routing trust.
+        let mut f = w.fleet.lock().unwrap();
+        f.complete(w.node);
+        f.note_result(w.node, ok);
+    }
     // dropped receiver = cancelled; ignore send failure
     let _ = l.req.reply.send(resp);
 }
@@ -1554,6 +2071,7 @@ fn empty_response(
         simulated_device_s: 0.0,
         preemptions: 0,
         swaps: 0,
+        rescues: 0,
         node,
     }
 }
@@ -1573,6 +2091,7 @@ mod tests {
             tenant_metrics: Arc::new(vec![Mutex::new(Metrics::new())]),
             registry: Arc::new(TenantRegistry::new(vec![]).unwrap()),
             fleet: Arc::new(Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin))),
+            deadline: None,
             next_id: std::sync::atomic::AtomicU64::new(1),
         }
     }
@@ -1587,6 +2106,8 @@ mod tests {
             charged_j: 0.0,
             reply,
             enqueued: Instant::now(),
+            deadline: None,
+            carry: Carried::default(),
         };
         (req, rx)
     }
@@ -1605,8 +2126,15 @@ mod tests {
     fn stub_dispatcher(nodes: usize, tenants: Vec<TenantSpec>) -> Dispatcher {
         let registry = TenantRegistry::new(tenants).unwrap();
         let (_tx, rx) = sync_channel::<GenRequest>(4);
+        // leak the rescue sender so the receiver stays connected for the
+        // test's lifetime (a disconnect means "all workers gone")
+        let (rescue_tx, rescue_rx) = sync_channel::<Requeue>(64);
+        std::mem::forget(rescue_tx);
         Dispatcher {
             rx,
+            rescue_rx,
+            delayed: Vec::new(),
+            recovery: RecoveryPolicy::default(),
             queue: AdmissionQueue::new(true, &registry.weights(), 512),
             fleet: Arc::new(Mutex::new(Fleet::uniform(nodes, 1.0, RoutePolicy::RoundRobin))),
             queues: Arc::new(NodeQueues::new(nodes)),
@@ -1771,5 +2299,120 @@ mod tests {
         assert!((spent - est).abs() < 1e-12, "{spent} vs {est}");
         let queued = d.queues.try_pop(0).unwrap();
         assert!((queued.charged_j - est).abs() < 1e-12);
+    }
+
+    #[test]
+    fn no_healthy_nodes_fails_every_parked_request_promptly() {
+        // Regression: requests parked in the WFQ (or the backoff pen)
+        // when the last healthy node died used to linger until shutdown;
+        // they must all fail immediately with a distinct error.
+        let mut d = stub_dispatcher(1, vec![]);
+        let mut parked = Vec::new();
+        for id in 1..=2 {
+            let (req, reply) = dummy_request(id);
+            d.queue.push(req.tenant, req.max_tokens as f64, req);
+            parked.push(reply);
+        }
+        let (req, reply) = dummy_request(3);
+        let due = Instant::now() + Duration::from_secs(3600);
+        d.delayed.push((due, req));
+        parked.push(reply);
+        d.queues.mark_dead(0);
+        let (req, direct) = dummy_request(4);
+        d.dispatch(req.tenant, req, Instant::now());
+        let resp = direct.try_recv().unwrap();
+        assert!(resp.error.as_deref().unwrap().contains("no healthy nodes"), "{resp:?}");
+        for reply in parked {
+            let resp = reply.try_recv().expect("parked request must be answered now");
+            assert!(
+                resp.error.as_deref().unwrap().contains("no healthy nodes"),
+                "{resp:?}"
+            );
+        }
+        assert!(d.queue.is_empty());
+        assert!(d.delayed.is_empty());
+        // 4 terminal errors on the default tenant's rollup
+        assert_eq!(d.tenant_metrics[0].lock().unwrap().errors, 4);
+    }
+
+    #[test]
+    fn dispatch_fails_requests_past_their_deadline() {
+        let mut d = stub_dispatcher(1, vec![]);
+        let (mut req, reply) = dummy_request(1);
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        d.dispatch(req.tenant, req, Instant::now());
+        let resp = reply.try_recv().unwrap();
+        assert!(resp.error.as_deref().unwrap().contains("deadline"), "{resp:?}");
+        assert_eq!(d.tenant_metrics[0].lock().unwrap().deadline_misses, 1);
+        assert_eq!(d.queues.len(0), 0, "past-due work must not reach a worker");
+        assert_eq!(d.fleet.lock().unwrap().nodes[0].outstanding, 0);
+        // an undated request flows normally
+        let (req, reply) = dummy_request(2);
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.try_pop(0).unwrap().id, 2);
+        assert!(reply.try_recv().is_err());
+    }
+
+    #[test]
+    fn rescues_reenter_ahead_and_retries_wait_out_backoff() {
+        let mut d = stub_dispatcher(1, vec![]);
+        let now = Instant::now();
+        // two ordinary arrivals, then a rescue hand-back
+        for id in 1..=2 {
+            let (req, _reply) = dummy_request(id);
+            std::mem::forget(_reply);
+            d.enqueue(req);
+        }
+        let (req, _r3) = dummy_request(3);
+        std::mem::forget(_r3);
+        d.requeue(Requeue::Rescue(req), now);
+        // the rescue jumps the lane: it pops before the earlier arrivals
+        let Popped::Item(_, first) = d.queue.pop_eligible(|_, _| true) else {
+            panic!("queue must not be empty")
+        };
+        assert_eq!(first.id, 3, "a rescue re-enters at the head of its lane");
+        // a retry parks in the backoff pen, invisible until it comes due
+        let (mut req, _r4) = dummy_request(4);
+        std::mem::forget(_r4);
+        req.carry.attempt = 1;
+        d.requeue(Requeue::Retry(req), now);
+        assert_eq!(d.delayed.len(), 1);
+        d.promote_delayed(now);
+        assert_eq!(d.delayed.len(), 1, "backoff has not elapsed");
+        let backoff = backoff_delay(d.recovery.backoff, 1);
+        d.promote_delayed(now + backoff + Duration::from_millis(1));
+        assert!(d.delayed.is_empty(), "due retry must be promoted");
+        let Popped::Item(_, promoted) = d.queue.pop_eligible(|_, _| true) else {
+            panic!("promoted retry must be poppable")
+        };
+        assert_eq!(promoted.id, 4);
+    }
+
+    #[test]
+    fn a_dead_workers_guard_rescues_its_queued_requests() {
+        let queues: Arc<NodeQueues<GenRequest>> = Arc::new(NodeQueues::new(1));
+        let fleet = Arc::new(Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin)));
+        fleet.lock().unwrap().route();
+        let (rescue_tx, rescue_rx) = sync_channel::<Requeue>(8);
+        let (req, reply) = dummy_request(7);
+        queues.push_bounded(0, req, 8).unwrap();
+        drop(AliveGuard {
+            queues: Arc::clone(&queues),
+            fleet: Arc::clone(&fleet),
+            rescue: Some(rescue_tx),
+            node: 0,
+        });
+        assert!(!queues.alive(0), "guard must mark the node dead");
+        let rescued = rescue_rx.try_recv().expect("queued request must be handed back");
+        assert!(
+            reply.try_recv().is_err(),
+            "no terminal reply may be sent to a rescued request"
+        );
+        assert_eq!(rescued.into_request().id, 7);
+        assert_eq!(
+            fleet.lock().unwrap().nodes[0].outstanding,
+            0,
+            "the guard must hand the routed slot back"
+        );
     }
 }

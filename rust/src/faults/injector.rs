@@ -1,0 +1,164 @@
+//! The runtime half of fault injection: a shared clock-and-cursor over a
+//! [`FaultPlan`].
+//!
+//! Each node worker calls [`FaultInjector::begin_round`] exactly once per
+//! engine round; the injector advances that node's round clock and
+//! returns every scripted fault now due. Because the clock is the
+//! worker's own loop counter, injection is deterministic per (seed, node,
+//! round) and immune to scheduler jitter — the property the chaos smoke
+//! matrix relies on to reproduce failures by seed.
+//!
+//! [`FaultKind::SwapInFailure`] is special: it *arms* rather than fires.
+//! The armed count is consumed by the pager path at the next actual
+//! swap-in ([`FaultInjector::take_swap_in_failure`]), so the fault lands
+//! on a real host-pool restore no matter when one happens.
+
+use std::sync::Mutex;
+
+use super::plan::{FaultKind, FaultPlan};
+
+struct NodeClock {
+    /// (round, kind), sorted by round — this node's slice of the plan.
+    script: Vec<(u64, FaultKind)>,
+    cursor: usize,
+    round: u64,
+    armed_swap_failures: u32,
+}
+
+/// Shared fault scheduler, one per server run. Cheap when the plan is
+/// empty (a single short mutex hold per round).
+pub struct FaultInjector {
+    nodes: Mutex<Vec<NodeClock>>,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan, nodes: usize) -> Self {
+        FaultInjector {
+            nodes: Mutex::new(
+                (0..nodes)
+                    .map(|n| NodeClock {
+                        script: plan.for_node(n),
+                        cursor: 0,
+                        round: 0,
+                        armed_swap_failures: 0,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    /// Advance `node`'s round clock and return the faults due. Events
+    /// scheduled for rounds the node skipped (it was idle or stalled —
+    /// its clock only ticks when its loop runs) fire on the next call
+    /// rather than being lost.
+    pub fn begin_round(&self, node: usize) -> Vec<FaultKind> {
+        let mut nodes = self.nodes.lock().unwrap();
+        let clock = &mut nodes[node];
+        clock.round += 1;
+        let mut due = Vec::new();
+        while clock.cursor < clock.script.len() && clock.script[clock.cursor].0 <= clock.round {
+            let kind = clock.script[clock.cursor].1.clone();
+            clock.cursor += 1;
+            if kind == FaultKind::SwapInFailure {
+                clock.armed_swap_failures += 1;
+            }
+            due.push(kind);
+        }
+        due
+    }
+
+    /// Consume one armed swap-in failure for `node`, if any. Called by
+    /// the worker at the moment it would restore a parked sequence from
+    /// the host pool.
+    pub fn take_swap_in_failure(&self, node: usize) -> bool {
+        let mut nodes = self.nodes.lock().unwrap();
+        let clock = &mut nodes[node];
+        if clock.armed_swap_failures > 0 {
+            clock.armed_swap_failures -= 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// The node's current round clock (observability / tests).
+    pub fn round(&self, node: usize) -> u64 {
+        self.nodes.lock().unwrap()[node].round
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::plan::FaultEvent;
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan::script(vec![
+            FaultEvent { node: 0, round: 2, kind: FaultKind::TransientStall { rounds: 3 } },
+            FaultEvent { node: 0, round: 2, kind: FaultKind::SwapInFailure },
+            FaultEvent { node: 0, round: 5, kind: FaultKind::NodeDeath },
+            FaultEvent { node: 1, round: 1, kind: FaultKind::LinkDowngrade { lanes: 1 } },
+        ])
+    }
+
+    #[test]
+    fn faults_fire_on_their_scripted_round_per_node() {
+        let inj = FaultInjector::new(&plan(), 2);
+        assert_eq!(inj.begin_round(0), vec![], "round 1 is clean");
+        let due = inj.begin_round(0);
+        assert_eq!(
+            due,
+            vec![FaultKind::TransientStall { rounds: 3 }, FaultKind::SwapInFailure],
+            "both round-2 events fire together"
+        );
+        assert_eq!(inj.begin_round(0), vec![]);
+        assert_eq!(inj.begin_round(0), vec![]);
+        assert_eq!(inj.begin_round(0), vec![FaultKind::NodeDeath]);
+        // node 1's clock is independent of node 0's five rounds
+        assert_eq!(inj.begin_round(1), vec![FaultKind::LinkDowngrade { lanes: 1 }]);
+        assert_eq!(inj.round(0), 5);
+        assert_eq!(inj.round(1), 1);
+    }
+
+    #[test]
+    fn swap_in_failures_arm_until_consumed() {
+        let inj = FaultInjector::new(&plan(), 2);
+        assert!(!inj.take_swap_in_failure(0), "nothing armed before round 2");
+        inj.begin_round(0);
+        inj.begin_round(0); // arms one failure
+        assert!(!inj.take_swap_in_failure(1), "arming is per node");
+        assert!(inj.take_swap_in_failure(0));
+        assert!(!inj.take_swap_in_failure(0), "consumed exactly once");
+    }
+
+    #[test]
+    fn every_event_fires_exactly_once_in_round_order() {
+        let script = FaultPlan::script(vec![
+            FaultEvent { node: 0, round: 3, kind: FaultKind::VramPageLoss { blocks: 1 } },
+            FaultEvent { node: 0, round: 1, kind: FaultKind::VramPageLoss { blocks: 2 } },
+        ]);
+        let inj = FaultInjector::new(&script, 1);
+        let mut fired = Vec::new();
+        for _ in 0..6 {
+            fired.extend(inj.begin_round(0));
+        }
+        assert_eq!(
+            fired,
+            vec![
+                FaultKind::VramPageLoss { blocks: 2 },
+                FaultKind::VramPageLoss { blocks: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn empty_plan_is_a_no_op() {
+        let inj = FaultInjector::new(&FaultPlan::none(), 3);
+        for node in 0..3 {
+            for _ in 0..10 {
+                assert!(inj.begin_round(node).is_empty());
+            }
+            assert!(!inj.take_swap_in_failure(node));
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Deterministic fault injection and self-healing policy for the fleet.
+//!
+//! The paper's recycled-card economics (§5/§6.2) put worn mining boards —
+//! x1 risers, no ECC, tired fans — under production load, so failure is a
+//! scheduled input here, not an exception path. This module owns the three
+//! pieces the serving engine composes:
+//!
+//! - [`plan`] — a seed-driven [`FaultPlan`]: a script of [`FaultEvent`]s
+//!   (card death mid-decode, transient stall, PCIe link downgrade, VRAM
+//!   page loss, host-pool swap-in failure, thermal throttle) keyed to a
+//!   node's engine round. Same seed, same script, always — chaos runs
+//!   reproduce exactly.
+//! - [`injector`] — the shared [`FaultInjector`] workers poll once per
+//!   engine round; it advances each node's round clock and hands back the
+//!   faults due, so injection is deterministic per (seed, node, round)
+//!   and independent of wall-clock timing.
+//! - [`recovery`] — the [`RecoveryPolicy`] knobs for the self-healing
+//!   half: in-flight rescue on node death, bounded retry with exponential
+//!   backoff, per-request wall-clock deadlines, and the probation rounds
+//!   a flapping card must pass before routing trusts it again.
+//!
+//! Faults that do not kill a card feed the worker's [`Degrade`] ladder
+//! instead of a binary healthy/dead bit: a downgraded link disables swap
+//! (the PCIe price that justified it is gone), a thermal throttle sheds
+//! tenants already over their rate budget, and VRAM page loss shrinks the
+//! admission budget to match the surviving pool.
+
+pub mod injector;
+pub mod plan;
+pub mod recovery;
+
+pub use injector::FaultInjector;
+pub use plan::{FaultEvent, FaultKind, FaultPlan};
+pub use recovery::{backoff_delay, RecoveryPolicy};
+
+/// Per-worker degradation state — the ladder a faulted card descends
+/// instead of flipping straight to dead. All effects are engine-visible
+/// (admission, swap choice, overlay pricing) and none are terminal.
+#[derive(Clone, Debug, Default)]
+pub struct Degrade {
+    /// Swap preemption is off (the link no longer earns its round trip).
+    pub swap_disabled: bool,
+    /// Decode rounds left to skip entirely (a wedged driver, recovering).
+    pub stall_rounds: u64,
+    /// Simulated-decode slowdown while throttled (≥ 1.0 when active).
+    pub throttle_factor: f64,
+    /// Rounds of throttle remaining; 0 = full speed.
+    pub throttle_rounds: u64,
+    /// KV blocks permanently lost to bad VRAM pages.
+    pub lost_blocks: usize,
+}
+
+impl Degrade {
+    /// Is the thermal ladder step active this round?
+    pub fn throttled(&self) -> bool {
+        self.throttle_rounds > 0
+    }
+
+    /// Multiplier on the overlay's decode seconds-per-token this round.
+    pub fn decode_factor(&self) -> f64 {
+        if self.throttled() {
+            self.throttle_factor.max(1.0)
+        } else {
+            1.0
+        }
+    }
+
+    /// Advance one engine round: throttle windows expire on their own.
+    pub fn tick_round(&mut self) {
+        self.throttle_rounds = self.throttle_rounds.saturating_sub(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degrade_default_is_a_healthy_card() {
+        let d = Degrade::default();
+        assert!(!d.swap_disabled);
+        assert!(!d.throttled());
+        assert_eq!(d.decode_factor(), 1.0);
+        assert_eq!(d.stall_rounds, 0);
+        assert_eq!(d.lost_blocks, 0);
+    }
+
+    #[test]
+    fn throttle_expires_after_its_window() {
+        let mut d = Degrade { throttle_factor: 3.0, throttle_rounds: 2, ..Degrade::default() };
+        assert!(d.throttled());
+        assert_eq!(d.decode_factor(), 3.0);
+        d.tick_round();
+        assert_eq!(d.decode_factor(), 3.0, "round two still throttled");
+        d.tick_round();
+        assert!(!d.throttled(), "window spent");
+        assert_eq!(d.decode_factor(), 1.0);
+        d.tick_round(); // must not underflow
+    }
+
+    #[test]
+    fn decode_factor_never_speeds_the_card_up() {
+        let d = Degrade { throttle_factor: 0.25, throttle_rounds: 5, ..Degrade::default() };
+        assert_eq!(d.decode_factor(), 1.0, "a throttle below 1.0 clamps to no-op");
+    }
+}

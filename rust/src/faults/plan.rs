@@ -1,0 +1,192 @@
+//! Seed-driven fault scripts.
+//!
+//! A [`FaultPlan`] is data, not behaviour: a list of [`FaultEvent`]s, each
+//! pinning a [`FaultKind`] to a (node, engine-round) coordinate. Scripts
+//! come from two places — hand-written (the chaos suite's "kill card 1 at
+//! round 3" scenarios) or generated from a seed with [`FaultPlan::seeded`]
+//! (the CI smoke matrix). Both are pure values: replaying the same script
+//! against the same workload reproduces the same failure, which is what
+//! makes a chaos regression debuggable by seed.
+
+use crate::testutil::Rng;
+
+/// One injectable failure mode. The mix mirrors how salvage mining cards
+/// actually die in service: outright (power/riser), intermittently
+/// (driver wedge, thermal governor), or partially (lanes renegotiated
+/// down, VRAM pages gone bad, host staging corrupted).
+#[derive(Clone, Debug, PartialEq)]
+pub enum FaultKind {
+    /// The card drops off the bus mid-decode. Terminal for the node; its
+    /// in-flight sequences are rescue candidates.
+    NodeDeath,
+    /// The worker wedges for `rounds` engine rounds, then recovers.
+    TransientStall { rounds: u64 },
+    /// The riser renegotiates the link down to `lanes` (x16 → x1 style).
+    LinkDowngrade { lanes: u32 },
+    /// `blocks` KV blocks are lost to bad VRAM pages, permanently.
+    VramPageLoss { blocks: usize },
+    /// The next swap-in from the host pool finds corrupt pages and fails.
+    SwapInFailure,
+    /// The thermal governor slows decode by `factor`× for `rounds` rounds.
+    ThermalThrottle { factor: f64, rounds: u64 },
+}
+
+/// A [`FaultKind`] scheduled on a node's engine-round clock. Rounds are
+/// the worker's own loop iterations — not wall time — so a script fires
+/// at the same point in the computation regardless of host speed.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub node: usize,
+    pub round: u64,
+    pub kind: FaultKind,
+}
+
+/// An immutable fault script for one fleet run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// A hand-written script (the chaos suite's targeted scenarios).
+    pub fn script(events: Vec<FaultEvent>) -> Self {
+        FaultPlan { events }
+    }
+
+    /// An empty plan: the injector becomes a no-op.
+    pub fn none() -> Self {
+        FaultPlan::default()
+    }
+
+    /// Generate a script from a seed: each of `nodes` cards draws a fault
+    /// with probability `rate` per round over `rounds` rounds. Node
+    /// deaths are capped at `nodes - 1` so a seeded run always keeps one
+    /// survivor to rescue onto — the smoke matrix asserts zero lost
+    /// responses, which is unsatisfiable with the whole fleet gone.
+    pub fn seeded(seed: u64, nodes: usize, rounds: u64, rate: f64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::new();
+        let mut deaths_left = nodes.saturating_sub(1);
+        for node in 0..nodes {
+            let mut dead = false;
+            for round in 1..=rounds {
+                if dead || !rng.chance(rate) {
+                    continue;
+                }
+                let kind = match rng.below(10) {
+                    0..=2 => FaultKind::TransientStall { rounds: rng.range(1, 4) },
+                    3..=5 => FaultKind::ThermalThrottle {
+                        factor: rng.f64_range(1.5, 4.0),
+                        rounds: rng.range(2, 8),
+                    },
+                    6 => FaultKind::LinkDowngrade { lanes: if rng.chance(0.5) { 1 } else { 2 } },
+                    7 => FaultKind::VramPageLoss { blocks: rng.range(1, 3) as usize },
+                    8 => FaultKind::SwapInFailure,
+                    _ if deaths_left > 0 => {
+                        deaths_left -= 1;
+                        dead = true;
+                        FaultKind::NodeDeath
+                    }
+                    // death budget spent: degrade instead of killing
+                    _ => FaultKind::TransientStall { rounds: rng.range(1, 4) },
+                };
+                events.push(FaultEvent { node, round, kind });
+            }
+        }
+        FaultPlan { events }
+    }
+
+    /// The events scripted for `node`, in firing order.
+    pub fn for_node(&self, node: usize) -> Vec<(u64, FaultKind)> {
+        let mut out: Vec<(u64, FaultKind)> = self
+            .events
+            .iter()
+            .filter(|e| e.node == node)
+            .map(|e| (e.round, e.kind.clone()))
+            .collect();
+        out.sort_by_key(|&(round, _)| round);
+        out
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_reproduces_the_same_script() {
+        let a = FaultPlan::seeded(0xC0FFEE, 2, 64, 0.2);
+        let b = FaultPlan::seeded(0xC0FFEE, 2, 64, 0.2);
+        assert_eq!(a, b, "a chaos failure must be replayable by seed alone");
+        assert!(!a.is_empty(), "a 20% rate over 128 node-rounds must draw something");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FaultPlan::seeded(1, 2, 64, 0.3);
+        let b = FaultPlan::seeded(2, 2, 64, 0.3);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn seeded_plans_always_leave_a_survivor() {
+        for seed in 0..50 {
+            for nodes in 1..4usize {
+                let plan = FaultPlan::seeded(seed, nodes, 128, 0.5);
+                let deaths =
+                    plan.events.iter().filter(|e| e.kind == FaultKind::NodeDeath).count();
+                assert!(
+                    deaths < nodes.max(1),
+                    "seed {seed}: {deaths} deaths on a {nodes}-card fleet"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn a_dead_node_draws_no_further_events() {
+        for seed in 0..50 {
+            let plan = FaultPlan::seeded(seed, 3, 128, 0.5);
+            for node in 0..3 {
+                let script = plan.for_node(node);
+                if let Some(pos) =
+                    script.iter().position(|(_, k)| *k == FaultKind::NodeDeath)
+                {
+                    assert_eq!(
+                        pos,
+                        script.len() - 1,
+                        "seed {seed}: events scripted after node {node}'s death"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_is_an_empty_plan() {
+        assert!(FaultPlan::seeded(7, 2, 256, 0.0).is_empty());
+        assert!(FaultPlan::none().is_empty());
+    }
+
+    #[test]
+    fn for_node_filters_and_sorts_by_round() {
+        let plan = FaultPlan::script(vec![
+            FaultEvent { node: 1, round: 9, kind: FaultKind::NodeDeath },
+            FaultEvent { node: 0, round: 4, kind: FaultKind::SwapInFailure },
+            FaultEvent {
+                node: 1,
+                round: 2,
+                kind: FaultKind::TransientStall { rounds: 1 },
+            },
+        ]);
+        let n1 = plan.for_node(1);
+        assert_eq!(n1.len(), 2);
+        assert_eq!(n1[0], (2, FaultKind::TransientStall { rounds: 1 }));
+        assert_eq!(n1[1], (9, FaultKind::NodeDeath));
+        assert_eq!(plan.for_node(2), vec![]);
+    }
+}

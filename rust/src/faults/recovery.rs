@@ -1,0 +1,77 @@
+//! Self-healing policy knobs: rescue, retry/backoff, deadlines, probation.
+//!
+//! The mechanisms live in the coordinator (dispatch stage and node
+//! workers); this module is the policy surface they read, kept in one
+//! struct so the chaos suite and the CLI flip the same switches.
+
+use std::time::Duration;
+
+/// How the fleet heals around injected (or real) faults.
+#[derive(Clone, Debug)]
+pub struct RecoveryPolicy {
+    /// Rescue in-flight sequences off a dead node: they re-enter the QoS
+    /// queue and re-admit on a healthy card, replaying their generated
+    /// tokens to a bit-identical state. Off = the no-rescue ablation arm
+    /// (a death loses its in-flight work with a terminal error).
+    pub rescue: bool,
+    /// Transient worker-side failures (KV pool momentarily full) bounce a
+    /// request back to dispatch at most this many times before the error
+    /// becomes terminal.
+    pub max_retries: u32,
+    /// Base delay of the exponential backoff between retry attempts.
+    pub backoff: Duration,
+    /// Per-request wall-clock budget, measured from submission. A request
+    /// past its deadline is failed at the next dispatch or admission
+    /// checkpoint rather than occupying a card. `None` = no deadline.
+    pub deadline: Option<Duration>,
+    /// A node readmitted by `mark_healthy` serves this many probe
+    /// requests (one at a time) before routing trusts it with normal
+    /// load; a failure during probation re-quarantines it. `0` = the
+    /// legacy immediate readmission.
+    pub probation_rounds: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy {
+            rescue: true,
+            max_retries: 2,
+            backoff: Duration::from_millis(2),
+            deadline: None,
+            probation_rounds: 2,
+        }
+    }
+}
+
+/// Exponential backoff: attempt 1 waits `base`, attempt 2 waits 2×, then
+/// 4×, … capped at 64× so a stuck retry loop stays bounded.
+pub fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    let shift = attempt.saturating_sub(1).min(6);
+    base.saturating_mul(1u32 << shift)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_policy_rescues_and_retries() {
+        let p = RecoveryPolicy::default();
+        assert!(p.rescue);
+        assert!(p.max_retries > 0);
+        assert!(p.backoff > Duration::ZERO);
+        assert_eq!(p.deadline, None, "no deadline unless asked");
+        assert!(p.probation_rounds > 0, "flapping cards must earn readmission");
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt_and_caps() {
+        let base = Duration::from_millis(2);
+        assert_eq!(backoff_delay(base, 0), base, "attempt 0 clamps to base");
+        assert_eq!(backoff_delay(base, 1), base);
+        assert_eq!(backoff_delay(base, 2), base * 2);
+        assert_eq!(backoff_delay(base, 3), base * 4);
+        assert_eq!(backoff_delay(base, 7), base * 64);
+        assert_eq!(backoff_delay(base, 40), base * 64, "cap holds far out");
+    }
+}

@@ -49,6 +49,7 @@ pub mod calibration;
 pub mod cli;
 pub mod coordinator;
 pub mod device;
+pub mod faults;
 pub mod isa;
 pub mod llm;
 pub mod market;

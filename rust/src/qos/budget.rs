@@ -53,6 +53,13 @@ impl TokenBucket {
         self.last = now;
     }
 
+    /// Is the bucket in debt (level below zero) right now? Debt means the
+    /// tenant has consumed ahead of its sustained rate — the degradation
+    /// ladder sheds these tenants first when a fault shrinks the fleet.
+    pub fn in_debt(&self, now: Instant) -> bool {
+        self.level_at(now) < 0.0
+    }
+
     /// How long until a `cost`-token request would pass.
     pub fn ready_in(&self, cost: f64, now: Instant) -> Duration {
         let need = cost.min(self.burst) - self.level_at(now);
@@ -150,6 +157,14 @@ impl TenantAccounts {
     pub fn energy_spent(&self, t: TenantId) -> f64 {
         self.lanes[t.0].spent_j
     }
+
+    /// Has `t` consumed ahead of its sustained token rate (bucket in
+    /// debt)? Uncapped tenants are never in debt. Degraded nodes use this
+    /// to shed the tenants that over-drew capacity the fault just took
+    /// away, instead of punishing everyone equally.
+    pub fn rate_in_debt(&self, t: TenantId, now: Instant) -> bool {
+        self.lanes[t.0].bucket.as_ref().is_some_and(|b| b.in_debt(now))
+    }
 }
 
 #[cfg(test)]
@@ -231,6 +246,29 @@ mod tests {
         acc.settle_energy(t, 90.0, 30.0);
         assert!((acc.energy_spent(t) - 30.0).abs() < 1e-12);
         assert_eq!(acc.try_charge_energy(t, 60.0), Admission::Granted);
+    }
+
+    #[test]
+    fn debt_tracks_overdraw_and_clears_with_refill() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(4.0, t0);
+        assert!(!b.in_debt(t0), "a full bucket is not in debt");
+        b.charge(12.0, t0); // level −8
+        assert!(b.in_debt(t0));
+        // refilled to 0 after two seconds — drained is not in debt
+        assert!(!b.in_debt(t0 + Duration::from_secs(2)));
+        // the accounts view: metered tenants report, uncapped never do
+        let mut metered = TenantSpec::new("metered", 1.0);
+        metered.tok_s = Some(4.0);
+        let reg = registry(vec![metered, TenantSpec::new("free", 1.0)]);
+        let (m, f) = (reg.id("metered").unwrap(), reg.id("free").unwrap());
+        let mut acc = TenantAccounts::new(&reg, t0);
+        assert!(!acc.rate_in_debt(m, t0));
+        acc.charge_rate(m, 12.0, t0);
+        assert!(acc.rate_in_debt(m, t0));
+        acc.charge_rate(f, 1e9, t0);
+        assert!(!acc.rate_in_debt(f, t0), "uncapped lanes have no debt");
+        assert!(!acc.rate_in_debt(TenantRegistry::DEFAULT, t0));
     }
 
     #[test]

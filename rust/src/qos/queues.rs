@@ -169,6 +169,19 @@ impl<T> NodeQueues<T> {
         drained
     }
 
+    /// Atomically mark a node dead **and** take everything it had queued —
+    /// the rescue path on node death. Doing both under one lock closes the
+    /// race where a producer slips a request into the queue between the
+    /// death flag and the drain (that request would be stranded forever).
+    pub fn kill_node(&self, node: usize) -> Vec<T> {
+        let slot = &self.slots[node];
+        let mut q = slot.q.lock().unwrap();
+        slot.alive.store(false, Ordering::Release);
+        let drained: Vec<T> = q.drain(..).collect();
+        slot.cv.notify_all();
+        drained
+    }
+
     /// Whether any live node's queue has a free slot under `cap` — the
     /// dispatch stage's pop-on-demand gate (defer the fair-queue decision
     /// until a node can actually take the request). A fully-dead queue
@@ -276,6 +289,22 @@ mod tests {
         assert_eq!(q.len(0), 0);
         assert_eq!(q.steal_from(1), None, "nothing left to rescue");
         assert_eq!(q.drain_node(0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn kill_node_marks_dead_and_drains_in_one_step() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        for v in [1, 2, 3] {
+            q.push_bounded(0, v, 8).unwrap();
+        }
+        assert_eq!(q.kill_node(0), vec![1, 2, 3]);
+        assert!(!q.alive(0), "killed node is dead");
+        assert_eq!(q.len(0), 0);
+        assert_eq!(q.push_bounded(0, 4, 8), Err(4), "no new work lands on the corpse");
+        assert_eq!(q.kill_node(0), Vec::<u32>::new(), "second kill is a no-op");
+        // the peer is untouched
+        q.push_bounded(1, 9, 8).unwrap();
+        assert_eq!(q.try_pop(1), Some(9));
     }
 
     #[test]

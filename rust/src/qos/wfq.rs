@@ -71,6 +71,12 @@ struct Lane<T> {
     q: VecDeque<Entry<T>>,
 }
 
+/// Arrival-sequence space reserved for front-of-queue re-entries
+/// (node-death rescues): normal pushes number upward from here and front
+/// pushes number downward below it, so a rescued entry always reads as
+/// *older* than every normally-arrived one to the aging promoter.
+const FRONT_ARRIVALS: u64 = 1 << 32;
+
 /// The DRR weighted fair queue.
 #[derive(Debug)]
 pub struct WfqQueue<T> {
@@ -78,6 +84,9 @@ pub struct WfqQueue<T> {
     cursor: usize,
     pops: u64,
     arrivals: u64,
+    /// Next front-push arrival sequence (counts down from
+    /// [`FRONT_ARRIVALS`]).
+    front_arrivals: u64,
     aging_pops: u64,
     quantum: f64,
     len: usize,
@@ -111,6 +120,7 @@ impl<T> WfqQueue<T> {
             cursor: 0,
             pops: 0,
             arrivals: 0,
+            front_arrivals: FRONT_ARRIVALS,
             aging_pops,
             quantum,
             len: 0,
@@ -126,9 +136,29 @@ impl<T> WfqQueue<T> {
     }
 
     pub fn push(&mut self, t: TenantId, cost: f64, item: T) {
-        let arrival = self.arrivals;
+        let arrival = FRONT_ARRIVALS + self.arrivals;
         self.arrivals += 1;
         self.lanes[t.0].q.push_back(Entry { cost, born: self.pops, arrival, item });
+        self.len += 1;
+    }
+
+    /// Re-enter an item at the **front** of its tenant's lane — the
+    /// node-death rescue path. The entry is stamped as old as the aging
+    /// clock allows (born `aging_pops` serves in the past, arrival below
+    /// every normal push), so it is first in line within its lane
+    /// immediately and first for the aging promoter as soon as the lane
+    /// counts as starved. The request already waited once and already
+    /// burned card-seconds; making it re-queue behind the backlog would
+    /// double-charge the fault to one tenant.
+    pub fn push_front(&mut self, t: TenantId, cost: f64, item: T) {
+        self.front_arrivals = self.front_arrivals.saturating_sub(1);
+        let born = self.pops.saturating_sub(self.aging_pops);
+        self.lanes[t.0].q.push_front(Entry {
+            cost,
+            born,
+            arrival: self.front_arrivals,
+            item,
+        });
         self.len += 1;
     }
 
@@ -278,6 +308,16 @@ impl<T> AdmissionQueue<T> {
         match self {
             AdmissionQueue::Fifo(q) => q.push_back((t, cost, item)),
             AdmissionQueue::Wfq(q) => q.push(t, cost, item),
+        }
+    }
+
+    /// Re-enter a rescued request ahead of the backlog (see
+    /// [`WfqQueue::push_front`]); on the FIFO arm it simply becomes the
+    /// new global head.
+    pub fn push_front(&mut self, t: TenantId, cost: f64, item: T) {
+        match self {
+            AdmissionQueue::Fifo(q) => q.push_front((t, cost, item)),
+            AdmissionQueue::Wfq(q) => q.push_front(t, cost, item),
         }
     }
 
@@ -471,6 +511,61 @@ mod tests {
         q.push(TenantId(1), 1.0, 'b');
         match q.pop_eligible(|t, _| t.0 != 0) {
             Popped::Item(t, _) => assert_eq!(t.0, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn push_front_jumps_its_own_lane() {
+        let mut q = WfqQueue::with_quantum(&[1.0], u64::MAX, 100.0);
+        q.push(TenantId(0), 1.0, 'a');
+        q.push(TenantId(0), 1.0, 'b');
+        q.push_front(TenantId(0), 1.0, 'r'); // the rescue
+        assert_eq!(q.len(), 3);
+        let order: Vec<char> = (0..3)
+            .map(|_| match q.pop() {
+                Popped::Item(_, c) => c,
+                other => panic!("{other:?}"),
+            })
+            .collect();
+        assert_eq!(order, vec!['r', 'a', 'b'], "rescue serves before the lane backlog");
+    }
+
+    #[test]
+    fn push_front_ripens_for_the_aging_promoter_immediately() {
+        // A rescue landing in a starved light lane behind a heavy flood:
+        // its pre-aged birth stamp makes it overdue on the very next pop
+        // instead of waiting out aging_pops serves like a fresh arrival.
+        let mut q = WfqQueue::with_quantum(&[1000.0, 1.0], 4, 1.0);
+        for i in 0..50 {
+            q.push(TenantId(0), 1.0, i);
+        }
+        for _ in 0..10 {
+            match q.pop() {
+                Popped::Item(t, _) => assert_eq!(t.0, 0),
+                other => panic!("{other:?}"),
+            }
+        }
+        q.push_front(TenantId(1), 1.0, 999);
+        match q.pop() {
+            Popped::Item(t, item) => {
+                assert_eq!((t.0, item), (1, 999), "rescue is promoted past the flood");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fifo_push_front_becomes_the_global_head() {
+        let mut q: AdmissionQueue<char> = AdmissionQueue::new(false, &[1.0, 1.0], 0);
+        q.push(TenantId(0), 1.0, 'a');
+        q.push_front(TenantId(1), 1.0, 'r');
+        match q.pop_eligible(|_, _| true) {
+            Popped::Item(t, item) => assert_eq!((t.0, item), (1, 'r')),
+            other => panic!("{other:?}"),
+        }
+        match q.pop_eligible(|_, _| true) {
+            Popped::Item(t, item) => assert_eq!((t.0, item), (0, 'a')),
             other => panic!("{other:?}"),
         }
     }

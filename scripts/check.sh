@@ -1,11 +1,18 @@
 #!/usr/bin/env bash
 # Local tier-1 gate: build, test, lint.
 #
-# Usage: scripts/check.sh [--no-clippy]
+# Usage: scripts/check.sh [--no-clippy | --chaos]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
 # -q`) and adds rustfmt drift detection plus clippy with warnings denied.
 # Run from anywhere; the script cd's to the repo root.
+#
+# --chaos runs only the seeded chaos smoke: the integration_chaos suite
+# once per seed in CHAOS_SEEDS (default "1 7 42"). Each seed replays a
+# deterministic fault script against the 2-card fleet; a red seed is
+# reproducible with `CHAOS_SEED=<n> cargo test --release --test
+# integration_chaos`. (The suite self-skips without AOT artifacts, so the
+# smoke is a compile-plus-determinism gate on artifact-less runners.)
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -13,6 +20,15 @@ cd "$(dirname "$0")/.."
 if ! command -v cargo >/dev/null 2>&1; then
     echo "error: cargo not found on PATH — install a Rust toolchain to run the tier-1 gate" >&2
     exit 1
+fi
+
+if [[ "${1:-}" == "--chaos" ]]; then
+    for seed in ${CHAOS_SEEDS:-1 7 42}; do
+        echo "==> chaos smoke: CHAOS_SEED=$seed"
+        CHAOS_SEED="$seed" cargo test --release --test integration_chaos -q
+    done
+    echo "chaos smoke passed"
+    exit 0
 fi
 
 # Formatting first: cheapest check, and drift must fail loudly (CI installs
