@@ -13,8 +13,10 @@
 //! the light tenant's p99 and Jain's index with the QoS layer (WFQ + work
 //! stealing) on vs off, recording the result as the `serve_fairness` row
 //! of `BENCH_sim_throughput.json` (row-owned read-modify-write via
-//! [`cmphx::bench_harness::upsert_bench_row`]). Requires
-//! `make artifacts`.
+//! [`cmphx::bench_harness::upsert_bench_row`]). A **fabric ablation**
+//! compares prefix-affine routing and swap–decode overlap against their
+//! `--no-affinity`/`--no-overlap` baselines, owning the `serve_fabric`
+//! row. Requires `make artifacts`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -379,6 +381,117 @@ fn run_fairness() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One fabric-routing arm: three identical-prompt families served
+/// serially over a 2-card 170HX fleet with prefix-affine routing on or
+/// off. Affinity concentrates each family on the card already holding
+/// its pages (the directory publishes resident chains every round), so
+/// fleet-wide prefix block hits rise and repeated prefills vanish; the
+/// ablation spreads every family across both cards and pays the misses.
+/// Returns (prefix block hits, affine routes, wall s, served tok/s).
+fn run_fabric_once(affinity: bool) -> anyhow::Result<(u64, u64, f64, f64)> {
+    let mut cfg = config(2, StepPolicy::RoundRobin);
+    cfg.route = RoutePolicy::RoundRobin;
+    cfg.affinity = affinity;
+    cfg.qos.steal = false; // isolate routing from work movement
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    let server = Server::start(artifacts()?, cfg)?;
+    let t0 = Instant::now();
+    let mut tokens = 0u64;
+    for i in 0..REQUESTS {
+        let family = (i % 3) as i32;
+        let prompt: Vec<i32> = (1..=8).map(|t| t * 7 + family * 100).collect();
+        let resp = server.submit(prompt, TOKENS)?.recv()?;
+        anyhow::ensure!(resp.ok(), "fabric request failed: {:?}", resp.error);
+        tokens += resp.tokens.len() as u64;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown_fleet().total();
+    Ok((m.prefix_hits, m.affine_routes, wall, tokens as f64 / wall))
+}
+
+/// One swap-overlap arm: the page-pressure workload with the PCIe swap
+/// path armed and transfer/decode overlap on or off. Returns the swap
+/// ledger split: (transfer s, stalled s, overlapped s).
+fn run_fabric_overlap(overlap: bool) -> anyhow::Result<(f64, f64, f64)> {
+    const LONG: usize = 24;
+    const SHORT: usize = 6;
+    let dir = artifacts()?;
+    let prefill_t = cmphx::runtime::goldens::config_usize(&dir, "prefill_t")?;
+    let mut cfg = config(2, StepPolicy::ShortestFirst);
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some((prefill_t + LONG - 1).max(2 * prefill_t + 4));
+    cfg.batch.swap = true;
+    cfg.overlap = overlap;
+    let server = Server::start(dir, cfg)?;
+    let rx_long = server.submit(vec![3, 1, 4, 1, 5, 9, 2, 6], LONG)?;
+    let rx_shorts: Vec<_> = (0..4)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i + 2)) % 500 + 1).collect();
+            server.submit(prompt, SHORT).unwrap()
+        })
+        .collect();
+    for rx in rx_shorts.into_iter().chain(std::iter::once(rx_long)) {
+        let _ = rx.recv()?;
+    }
+    let m = server.shutdown();
+    Ok((m.swap_transfer_s, m.swap_stalled_s, m.swap_overlapped_s))
+}
+
+/// The KV-fabric ablations as a bench row: prefix-affine routing vs the
+/// plain fleet policy, and swap–decode overlap vs serial transfer
+/// charging. Recorded as the `serve_fabric` row of
+/// `BENCH_sim_throughput.json`; the ≥1.5× fleet hit ratio and the x1
+/// stalled-below-serial bound are pinned analytically by unit tests.
+fn run_fabric() -> anyhow::Result<()> {
+    let (hits_on, affine_on, wall_on, tps_on) = run_fabric_once(true)?;
+    let (hits_off, affine_off, wall_off, tps_off) = run_fabric_once(false)?;
+    println!(
+        "affinity on : {hits_on} prefix block hits, {affine_on} affine routes, \
+         {tps_on:>6.1} tok/s in {wall_on:.2}s"
+    );
+    println!(
+        "affinity off: {hits_off} prefix block hits, {affine_off} affine routes, \
+         {tps_off:>6.1} tok/s in {wall_off:.2}s"
+    );
+    let (t_on, stall_on, hidden_on) = run_fabric_overlap(true)?;
+    let (t_off, stall_off, _) = run_fabric_overlap(false)?;
+    println!(
+        "overlap on  : {:.2}ms transfer, {:.2}ms stalled ({:.2}ms hidden)",
+        t_on * 1e3,
+        stall_on * 1e3,
+        hidden_on * 1e3
+    );
+    println!(
+        "overlap off : {:.2}ms transfer, {:.2}ms stalled (serial charge)",
+        t_off * 1e3,
+        stall_off * 1e3
+    );
+    let row = format!(
+        "{{\n    \"workload\": \"2-card 170HX fleet, 3 identical-prompt families x \
+         {REQUESTS} serial requests; swap-pressure arm for overlap\",\n    \
+         \"affinity_on_prefix_hits\": {hits_on},\n    \
+         \"affinity_off_prefix_hits\": {hits_off},\n    \
+         \"fleet_hit_ratio\": {:.4},\n    \
+         \"affine_routes\": {affine_on},\n    \
+         \"affinity_on_tok_per_s\": {tps_on:.1},\n    \
+         \"affinity_off_tok_per_s\": {tps_off:.1},\n    \
+         \"overlap_on_stalled_ms\": {:.4},\n    \
+         \"overlap_off_stalled_ms\": {:.4},\n    \
+         \"swap_transfer_ms\": {:.4}\n  }}",
+        hits_on as f64 / hits_off.max(1) as f64,
+        stall_on * 1e3,
+        stall_off * 1e3,
+        t_on * 1e3,
+    );
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    upsert_bench_row(&path, "serve_fabric", &row);
+    Ok(())
+}
+
 /// One chaos arm: a scripted node-0 death at engine round 3 on a 2-card
 /// 170HX fleet, with sequence rescue on or off. Returns (ok responses,
 /// wall seconds, rescued, lost).
@@ -477,5 +590,7 @@ fn main() -> anyhow::Result<()> {
     run_fairness()?;
     println!("-- chaos: scripted card death mid-decode, rescue on vs off --");
     run_chaos()?;
+    println!("-- KV fabric: prefix-affine routing + swap-decode overlap ablations --");
+    run_fabric()?;
     Ok(())
 }

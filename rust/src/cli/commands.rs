@@ -29,7 +29,7 @@ COMMANDS:
         [--block N] [--kv-blocks N] [--no-preempt]
         [--no-prefix-cache] [--swap] [--host-pool MiB]
         [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
-        [--aging N] [--aging-rounds N]
+        [--no-affinity] [--no-overlap] [--aging N] [--aging-rounds N]
         [--chaos-seed N] [--chaos-rate F] [--no-rescue] [--retries N]
         [--deadline-ms N] [--probation N]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
@@ -50,9 +50,14 @@ COMMANDS:
                             token-rate and energy-budget caps; requests
                             round-robin across them. --no-qos falls back
                             to the FIFO queue, --no-steal disables
-                            cross-node work stealing, --aging sets the WFQ
+                            cross-node work stealing (queued requests and
+                            parked-sequence migration), --no-affinity
+                            disables prefix-affine routing (dispatch falls
+                            back to the plain fleet policy), --no-overlap
+                            charges swap DMA serially instead of hiding it
+                            under the decode round, --aging sets the WFQ
                             promoter (pops), --aging-rounds the preemption
-                            waiting-queue gate. --chaos-seed arms the
+                            park-lot gate. --chaos-seed arms the
                             seeded fault injector (card death, stalls,
                             link downgrades, VRAM page loss, swap-in
                             failures, thermal throttles) at --chaos-rate
@@ -334,6 +339,12 @@ fn serve(args: &Args) -> Result<i32> {
     }
     if args.flag("no-steal") {
         config.qos.steal = false;
+    }
+    if args.flag("no-affinity") {
+        config.affinity = false;
+    }
+    if args.flag("no-overlap") {
+        config.overlap = false;
     }
     config.qos.aging_pops = args.opt_usize("aging", config.qos.aging_pops as usize)? as u64;
     if let Some(list) = args.opt("fleet") {

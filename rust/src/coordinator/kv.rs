@@ -104,6 +104,22 @@ fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
     h
 }
 
+/// Chain hashes for every block-sized chunk of a prefill window — the
+/// exact keys [`KvPager::admit_prompt`] would probe. Public so the
+/// dispatcher can score nodes against the fleet [`PrefixDirectory`]
+/// without touching any pager: the window construction is deterministic
+/// ([`crate::runtime::ModelRuntime::padded_window`]), so dispatcher and
+/// worker compute identical keys from the same prompt.
+pub fn window_chain_hashes(window: &[i32], block_positions: usize) -> Vec<u64> {
+    let mut hashes = Vec::with_capacity(window.len().div_ceil(block_positions.max(1)));
+    let mut prev = 0u64;
+    for chunk in window.chunks(block_positions.max(1)) {
+        prev = chain_hash(prev, chunk);
+        hashes.push(prev);
+    }
+    hashes
+}
+
 /// Paged KV block allocator for one card.
 #[derive(Debug)]
 pub struct KvPager {
@@ -295,12 +311,7 @@ impl KvPager {
         }
         // Pass 1 (read-only): walk the chain, splitting chunks into a
         // shared prefix run and a fresh tail.
-        let mut hashes = Vec::with_capacity(window.len().div_ceil(self.block_positions));
-        let mut prev = 0u64;
-        for chunk in window.chunks(self.block_positions) {
-            prev = chain_hash(prev, chunk);
-            hashes.push(prev);
-        }
+        let hashes = window_chain_hashes(window, self.block_positions);
         let mut pinned: Vec<usize> = Vec::new();
         for h in &hashes {
             match self.prefix_index.get(h) {
@@ -464,6 +475,27 @@ impl KvPager {
         self.free_blocks() / self.blocks_for(positions)
     }
 
+    /// Read-only probe: how many leading blocks of `window` are resident
+    /// right now (the hit count [`KvPager::admit_prompt`] would report).
+    /// Nothing is pinned — the prefix-aware admission gate uses this to
+    /// discount a queued prompt's page bill before deciding to pop it,
+    /// and a stale answer only costs a conservative decision, never
+    /// correctness (admission re-walks the index under the same lock).
+    pub fn resident_prefix_blocks(&self, window: &[i32]) -> usize {
+        window_chain_hashes(window, self.block_positions)
+            .iter()
+            .take_while(|h| self.prefix_index.contains_key(h))
+            .count()
+    }
+
+    /// Every chain hash currently registered in the prefix index — the
+    /// node's published view in the fleet [`PrefixDirectory`]. A snapshot:
+    /// by the time a route lands the set may have shrunk (eviction), which
+    /// is why admission re-checks and a stale hit degrades to a miss.
+    pub fn index_hashes(&self) -> Vec<u64> {
+        self.prefix_index.keys().copied().collect()
+    }
+
     pub fn free_blocks(&self) -> usize {
         self.total_blocks - self.allocated
     }
@@ -575,6 +607,69 @@ impl HostPool {
 
     pub fn capacity_bytes(&self) -> u64 {
         self.capacity
+    }
+}
+
+/// Fleet-level chain-hash prefix directory: each node periodically
+/// publishes the chain hashes its [`KvPager`] holds resident, and the
+/// dispatcher scores candidate nodes by how deep a new prompt's hash
+/// chain matches — prefix-affine routing sends a request to the card
+/// already holding its prefix instead of re-prefilling it elsewhere.
+///
+/// The directory is deliberately a *hint*, not a lease: entries can
+/// outlive eviction between a publish and the route that read it. That
+/// is safe by construction — the worker's [`KvPager::admit_prompt`]
+/// re-walks its own live index under its own lock, so a stale hit simply
+/// admits with fewer (or zero) pinned blocks: a plain miss and a full
+/// prefill, never an error. Nothing in the data plane trusts the
+/// directory.
+#[derive(Debug)]
+pub struct PrefixDirectory {
+    published: std::sync::Mutex<Vec<std::collections::HashSet<u64>>>,
+}
+
+impl PrefixDirectory {
+    pub fn new(nodes: usize) -> Self {
+        PrefixDirectory {
+            published: std::sync::Mutex::new(vec![std::collections::HashSet::new(); nodes]),
+        }
+    }
+
+    /// Replace `node`'s published set with a fresh snapshot
+    /// ([`KvPager::index_hashes`]). Full replacement, not a merge —
+    /// evicted chains must disappear, or the directory would only ever
+    /// grow staler.
+    pub fn publish(&self, node: usize, hashes: Vec<u64>) {
+        let mut p = self.published.lock().unwrap();
+        if let Some(set) = p.get_mut(node) {
+            set.clear();
+            set.extend(hashes);
+        }
+    }
+
+    /// Drop a dead node's entries immediately — its VRAM is gone, so
+    /// routing toward its published chains would be pure loss.
+    pub fn clear(&self, node: usize) {
+        let mut p = self.published.lock().unwrap();
+        if let Some(set) = p.get_mut(node) {
+            set.clear();
+        }
+    }
+
+    /// Per-node matched-prefix depth for one prompt's hash chain: how
+    /// many *leading* hashes each node has published. Matching stops at
+    /// the first gap, mirroring [`KvPager::admit_prompt`] — a resident
+    /// block behind a missing one is unreachable prefix-wise.
+    pub fn match_depths(&self, hashes: &[u64]) -> Vec<usize> {
+        let p = self.published.lock().unwrap();
+        p.iter()
+            .map(|set| hashes.iter().take_while(|h| set.contains(h)).count())
+            .collect()
+    }
+
+    /// Nodes the directory tracks.
+    pub fn nodes(&self) -> usize {
+        self.published.lock().unwrap().len()
     }
 }
 
@@ -1152,6 +1247,223 @@ mod tests {
             }
             assert_eq!(p.used_blocks(), 0);
             assert!(p.index_entries().is_empty());
+        });
+    }
+
+    #[test]
+    fn directory_scores_matched_prefix_depth_per_node() {
+        let mut p0 = pager();
+        let mut p1 = pager();
+        // node 0 holds the 8-shared family; node 1 holds a disjoint one
+        let (a, _) = p0.admit_prompt(&window(8, 12, 1)).unwrap();
+        let (b, _) = p1.admit_prompt(&window(0, 12, 9)).unwrap();
+        let dir = PrefixDirectory::new(2);
+        assert_eq!(dir.nodes(), 2);
+        dir.publish(0, p0.index_hashes());
+        dir.publish(1, p1.index_hashes());
+        // a sibling of node 0's family matches its 2 shared blocks there
+        // and nothing on node 1
+        let w = window(8, 12, 2);
+        let hashes = window_chain_hashes(&w, p0.block_positions());
+        assert_eq!(dir.match_depths(&hashes), vec![2, 0]);
+        // the exact resident prompt matches all 3 of its blocks
+        let exact = window_chain_hashes(&window(8, 12, 1), p0.block_positions());
+        assert_eq!(dir.match_depths(&exact), vec![3, 0]);
+        // and the probe agrees with what admission would report
+        assert_eq!(p0.resident_prefix_blocks(&w), 2);
+        assert_eq!(p1.resident_prefix_blocks(&w), 0);
+        // clearing a dead node zeroes its depths without touching others
+        dir.clear(0);
+        assert_eq!(dir.match_depths(&exact), vec![0, 0]);
+        p0.release(a).unwrap();
+        p1.release(b).unwrap();
+    }
+
+    #[test]
+    fn stale_directory_entry_degrades_to_a_plain_miss() {
+        // The dispatcher/directory race: node 0 publishes its resident
+        // chains, then evicts them (release drops the last refs) before
+        // the affinity-routed request lands. The route was taken on a
+        // stale entry — admission must degrade to a plain miss
+        // (re-prefill), never error, and the directory heals on the next
+        // publish.
+        let mut p = pager();
+        let w = window(8, 8, 0);
+        let (a, _) = p.admit_prompt(&w).unwrap();
+        let dir = PrefixDirectory::new(1);
+        dir.publish(0, p.index_hashes());
+        let hashes = window_chain_hashes(&w, p.block_positions());
+        assert_eq!(dir.match_depths(&hashes), vec![2], "published while resident");
+        // evict between publish and dispatch
+        p.release(a).unwrap();
+        assert_eq!(
+            dir.match_depths(&hashes),
+            vec![2],
+            "directory is a stale hint by design"
+        );
+        assert_eq!(p.resident_prefix_blocks(&w), 0, "the pager knows better");
+        // the routed request admits anyway: zero hits, fresh pages, no error
+        let (b, hits) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits, 0, "stale hit must become a plain miss");
+        assert_eq!(p.used_blocks(), 2);
+        // republish reflects reality again
+        dir.publish(0, p.index_hashes());
+        assert_eq!(dir.match_depths(&hashes), vec![2]);
+        p.release(b).unwrap();
+        dir.publish(0, p.index_hashes());
+        assert_eq!(dir.match_depths(&hashes), vec![0]);
+    }
+
+    #[test]
+    fn prop_two_node_fabric_directory_and_pools_never_dangle() {
+        // The fabric-wide extension of the shared-prefix property: two
+        // pagers (cards), one fleet PrefixDirectory, one shared HostPool.
+        // Random interleavings of affinity-routed admit / CoW grow /
+        // swap-out / cross-node migration (swap-in on the *other* card) /
+        // release, with publishes interleaved at random (so the directory
+        // is routinely stale). Invariants after every step: each pager's
+        // index never points at a freed block, directory depths never
+        // exceed the published snapshot's truth at publish time (checked
+        // by re-publishing and comparing), the shared host pool's bytes
+        // equal the outstanding parked reservations, and admitting via a
+        // stale directory route never errors.
+        forall(0xFAB51C, 100, |rng: &mut Rng| {
+            let bp = rng.range(1, 6) as usize;
+            let total = rng.range(6, 40) as usize;
+            let weights = 1u64 << 10;
+            let vram = weights + total as u64 * (bp as u64 * 64);
+            let mut pagers = [
+                KvPager::new(bp, 64, vram, weights).unwrap(),
+                KvPager::new(bp, 64, vram, weights).unwrap(),
+            ];
+            let dir = PrefixDirectory::new(2);
+            let mut host = HostPool::new(rng.range(1, 1 << 16));
+            // live: (node, handle, shadow ids, positions); parked: (home
+            // node at swap time, reserved bytes, family, len, salt)
+            let mut live: Vec<(usize, SeqKv, Vec<usize>, usize)> = Vec::new();
+            let mut parked: Vec<(usize, u64, usize, usize, i32)> = Vec::new();
+            let families: Vec<(usize, usize)> = (0..3)
+                .map(|_| {
+                    let len = rng.range(1, 4 * bp as u64) as usize;
+                    (rng.range(0, len as u64 + 1) as usize, len)
+                })
+                .collect();
+            for _ in 0..80 {
+                match rng.below(6) {
+                    0 | 1 => {
+                        // affinity-routed admit: pick the node with the
+                        // deeper published match (possibly stale)
+                        let fi = rng.below(families.len() as u64) as usize;
+                        let (shared, len) = families[fi];
+                        let salt = rng.range(0, 3) as i32;
+                        let w = window(shared, len, salt);
+                        let depths = dir.match_depths(&window_chain_hashes(&w, bp));
+                        let node = if depths[1] > depths[0] { 1 } else { 0 };
+                        if let Some((h, hits)) = pagers[node].admit_prompt(&w) {
+                            // stale routes degrade: hits bounded by what
+                            // is actually resident, never an error
+                            assert!(hits <= len.max(1).div_ceil(bp));
+                            let ids = pagers[node].seq_block_ids(h);
+                            live.push((node, h, ids, len));
+                        }
+                    }
+                    2 => {
+                        // grow (may CoW)
+                        if let Some(i) =
+                            (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
+                        {
+                            let target = live[i].3 + rng.range(0, 2 * bp as u64) as usize;
+                            let node = live[i].0;
+                            if pagers[node].grow(live[i].1, target).unwrap() {
+                                live[i].3 = live[i].3.max(target);
+                                live[i].2 = pagers[node].seq_block_ids(live[i].1);
+                            }
+                        }
+                    }
+                    3 => {
+                        // swap-out: park a live sequence's private bytes
+                        // in the shared host pool
+                        if let Some(i) =
+                            (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
+                        {
+                            let (node, h, len) = (live[i].0, live[i].1, live[i].3);
+                            let bytes = pagers[node].seq_private_bytes(h).unwrap();
+                            if host.try_reserve(bytes) {
+                                live.swap_remove(i);
+                                pagers[node].release(h).unwrap();
+                                let fi = rng.below(families.len() as u64) as usize;
+                                let (shared, _) = families[fi];
+                                parked.push((node, bytes, shared.min(len), len, 0));
+                            }
+                        }
+                    }
+                    4 => {
+                        // migrate/resume: restore a parked sequence onto a
+                        // random card — possibly NOT its home (the
+                        // cross-node path); the host reservation is
+                        // released exactly once either way
+                        if let Some(i) =
+                            (!parked.is_empty()).then(|| rng.below(parked.len() as u64) as usize)
+                        {
+                            let (_, bytes, shared, len, salt) = parked[i];
+                            let dst = rng.below(2) as usize;
+                            let w = window(shared, len, salt);
+                            if let Some((h, _)) = pagers[dst].admit_prompt(&w) {
+                                parked.swap_remove(i);
+                                host.release(bytes);
+                                let ids = pagers[dst].seq_block_ids(h);
+                                live.push((dst, h, ids, len));
+                            }
+                        }
+                    }
+                    _ => {
+                        // release, or republish a random node's snapshot
+                        if rng.below(2) == 0 {
+                            let node = rng.below(2) as usize;
+                            dir.publish(node, pagers[node].index_hashes());
+                        } else if let Some(i) =
+                            (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
+                        {
+                            let (node, h, _, _) = live.swap_remove(i);
+                            pagers[node].release(h).unwrap();
+                        }
+                    }
+                }
+                // invariants: per-node index integrity + shared-pool
+                // byte conservation
+                for (node, pager) in pagers.iter().enumerate() {
+                    let mut refs: std::collections::HashMap<usize, u32> =
+                        std::collections::HashMap::new();
+                    for (n, _, ids, _) in &live {
+                        if *n == node {
+                            for &id in ids {
+                                *refs.entry(id).or_default() += 1;
+                            }
+                        }
+                    }
+                    for (&id, &expect) in &refs {
+                        assert_eq!(pager.block_refs(id), expect, "node {node} refcount drift");
+                    }
+                    assert_eq!(pager.used_blocks(), refs.len());
+                    for id in pager.index_entries() {
+                        assert!(
+                            refs.contains_key(&id),
+                            "node {node} index points at freed block {id}"
+                        );
+                    }
+                }
+                let expect: u64 = parked.iter().map(|&(_, b, _, _, _)| b).sum();
+                assert_eq!(host.used_bytes(), expect, "host pool drifted from parked ledger");
+                assert!(host.used_bytes() <= host.capacity_bytes());
+            }
+            for (node, h, _, _) in live {
+                pagers[node].release(h).unwrap();
+            }
+            for (_, bytes, _, _, _) in parked {
+                host.release(bytes);
+            }
+            assert_eq!(host.used_bytes(), 0);
+            assert_eq!(pagers[0].used_blocks() + pagers[1].used_blocks(), 0);
         });
     }
 }

@@ -71,6 +71,20 @@ pub struct Metrics {
     /// the transfer paid for it — what the swap-vs-recompute chooser
     /// bought.
     pub saved_recompute_s: f64,
+    /// Share of `swap_transfer_s` hidden under concurrent decode rounds
+    /// (swap–decode overlap: DMA and SM compute proceed in parallel).
+    pub swap_overlapped_s: f64,
+    /// Share of `swap_transfer_s` the engine actually stalled for — the
+    /// overhang past the concurrent round. With overlap modeling off the
+    /// whole transfer lands here (the serial-charge baseline).
+    pub swap_stalled_s: f64,
+    /// Parked sequences restored onto a *different* card than the one
+    /// that swapped them out (live migration over the fleet KV fabric) —
+    /// includes in-flight steals of parked work.
+    pub migrations: u64,
+    /// Requests routed to a node because it held part of their prompt's
+    /// prefix chain (the fleet directory reported nonzero matched depth).
+    pub affine_routes: u64,
     /// In-flight sequences rescued off a dead node (re-queued and
     /// replayed to a bit-identical state on a healthy card).
     pub rescued_seqs: u64,
@@ -233,6 +247,10 @@ impl Metrics {
         self.swap_bytes += other.swap_bytes;
         self.swap_transfer_s += other.swap_transfer_s;
         self.saved_recompute_s += other.saved_recompute_s;
+        self.swap_overlapped_s += other.swap_overlapped_s;
+        self.swap_stalled_s += other.swap_stalled_s;
+        self.migrations += other.migrations;
+        self.affine_routes += other.affine_routes;
         self.rescued_seqs += other.rescued_seqs;
         self.lost_seqs += other.lost_seqs;
         self.retries += other.retries;
@@ -281,8 +299,9 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
-             prefix: hits={} misses={} ({:.0}%) cow={} saved_sim={:.4}s\n\
+             prefix: hits={} misses={} ({:.0}%) cow={} saved_sim={:.4}s affine_routes={}\n\
              swap: out={} in={} {:.1} MiB link_s={:.4} saved_sim={:.4}s\n\
+             fabric: migrations={} overlap hidden={:.4}s stalled={:.4}s\n\
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              faults: rescued={} lost={} retries={} deadline_miss={} degraded={} \
              swapfail={} kept={:.4}s replayed={:.4}s mttr={}\n\
@@ -298,11 +317,15 @@ impl Metrics {
             self.prefix_hit_rate() * 100.0,
             self.cow_copies,
             self.saved_prefill_s,
+            self.affine_routes,
             self.swap_outs,
             self.swap_ins,
             self.swap_bytes as f64 / (1u64 << 20) as f64,
             self.swap_transfer_s,
             self.saved_recompute_s,
+            self.migrations,
+            self.swap_overlapped_s,
+            self.swap_stalled_s,
             self.preemptions,
             self.resumes,
             self.wasted_prefill_s,
@@ -497,6 +520,10 @@ mod tests {
         m.rescue_replay_s = 0.25;
         m.fault_downtime_s = 0.5;
         m.fault_recoveries = 2;
+        m.migrations = 2;
+        m.affine_routes = 5;
+        m.swap_overlapped_s = 0.075;
+        m.swap_stalled_s = 0.05;
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
@@ -515,6 +542,9 @@ mod tests {
         assert!(s.contains("degraded=4 swapfail=1"), "{s}");
         assert!(s.contains("kept=0.7500s replayed=0.2500s"), "{s}");
         assert!(s.contains("mttr=250.0ms"), "{s}");
+        assert!(s.contains("affine_routes=5"), "{s}");
+        assert!(s.contains("migrations=2"), "{s}");
+        assert!(s.contains("hidden=0.0750s stalled=0.0500s"), "{s}");
     }
 
     #[test]
@@ -545,7 +575,15 @@ mod tests {
         b.rescue_replay_s = 0.25;
         b.fault_downtime_s = 3.0;
         b.fault_recoveries = 1;
+        b.migrations = 3;
+        b.affine_routes = 7;
+        b.swap_overlapped_s = 0.5;
+        b.swap_stalled_s = 0.25;
         a.merge(&b);
+        assert_eq!(a.migrations, 3);
+        assert_eq!(a.affine_routes, 7);
+        assert!((a.swap_overlapped_s - 0.5).abs() < 1e-12);
+        assert!((a.swap_stalled_s - 0.25).abs() < 1e-12);
         assert_eq!(a.rescued_seqs, 4);
         assert_eq!(a.lost_seqs, 1);
         assert_eq!(a.retries, 2);

@@ -11,11 +11,24 @@
 //! budget (priced with the routed card's calibrated overlay, settled to
 //! actuals at retire — [`crate::qos::budget`]), and routes the popped
 //! request across N per-card workers via a [`router::Fleet`] policy onto
-//! bounded per-node work queues ([`crate::qos::NodeQueues`]). Dead
-//! workers are marked unhealthy and excluded, with the in-hand request
-//! rerouted; [`server::ServerHandle::mark_healthy`] restores a recovered
-//! node. An **idle worker steals** the newest request from the deepest
-//! peer queue, capping tail latency when routing guessed wrong.
+//! bounded per-node work queues ([`crate::qos::NodeQueues`]) — the full
+//! pipeline is **submit → QoS → affinity-routed dispatch → worker/fabric
+//! data plane**. Routing is **prefix-affine** by default: each worker
+//! publishes its pager's resident chain hashes into a fleet
+//! [`kv::PrefixDirectory`] every round, and dispatch hashes the incoming
+//! prompt's padded window the same way ([`kv::window_chain_hashes`]) and
+//! biases [`router::Fleet::route_affine`] toward the card holding the
+//! longest matching chain (bounded, so warm cards cannot monopolize; a
+//! directory entry is a hint, not a lease — stale hits degrade to plain
+//! re-prefill misses at admission). Dead workers are marked unhealthy and
+//! excluded, with the in-hand request rerouted;
+//! [`server::ServerHandle::mark_healthy`] restores a recovered node. An
+//! **idle worker steals** work at two levels: the newest queued request
+//! off the deepest peer queue, or — when every queue is dry — a foreign
+//! parked sequence from the shared lot (**live migration**: host-resident
+//! swapped pages restore over the thief's own PCIe link, both ends priced
+//! by the §3 model; dropped victims replay prefix-aware), capping tail
+//! latency when routing guessed wrong.
 //!
 //! Every worker runs **continuous batching over paged KV** — sequences
 //! join its decode round whenever the [`kv::KvPager`] can hold their
@@ -35,8 +48,12 @@
 //! preemption comeback is **cost-aware**: [`scheduler::choose_preempt`]
 //! prices the §3 PCIe round trip of the victim's pages at the card's
 //! link width against the overlay's recompute estimate, swapping to a
-//! host-RAM pool ([`kv::HostPool`]) when the link wins and recomputing
-//! when the GPU does. [`batcher::BatchPolicy`] carries the admission,
+//! fleet-shared host-RAM pool ([`kv::HostPool`]) when the link wins and
+//! recomputing when the GPU does — and the swap DMA **overlaps** the
+//! concurrent decode round ([`scheduler::overlap_transfer`]), charging
+//! only the tail that outlasts it (metrics split the transfer into
+//! overlapped vs stalled seconds). [`batcher::BatchPolicy`] carries the
+//! admission,
 //! paging, prefix-cache, swap, and aging knobs. Each node owns its own
 //! runtime, pager sized to its card's VRAM, and a per-card simulated
 //! device-time/energy overlay, so [`metrics::FleetMetrics`] reports
@@ -67,7 +84,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatchPolicy;
-pub use kv::{HostPool, KvPager, PrefixStats, SeqKv};
+pub use kv::{window_chain_hashes, HostPool, KvPager, PrefixDirectory, PrefixStats, SeqKv};
 pub use metrics::{jain_index, FleetMetrics, Metrics};
 pub use request::{Carried, GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};

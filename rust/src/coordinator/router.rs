@@ -202,6 +202,63 @@ impl Fleet {
         idx
     }
 
+    /// Route one request with **prefix affinity**: `depths[i]` is node
+    /// i's matched-prefix depth for this prompt (blocks of the prompt's
+    /// chain already resident there, per the fleet
+    /// [`crate::coordinator::kv::PrefixDirectory`]). Eligibility walks
+    /// the same trust ladder as [`Fleet::route`]; among eligible nodes
+    /// the pick maximizes `(1 + depth/best_depth) · weight /
+    /// (outstanding + 1)` — the depth term is normalized against the
+    /// best match in the fleet, so a full prefix hit at most *doubles* a
+    /// node's effective throughput. Bounding the bonus is what keeps the
+    /// fleet balanced: with raw depths a warm node's score dwarfs the
+    /// load term and every shared-prefix arrival piles onto the first
+    /// card that served one, while the bounded form lets distinct prompt
+    /// families spread out and then stick to their holders. With no
+    /// depth anywhere `route()` is called instead, preserving non-affine
+    /// policies verbatim (the `--no-affinity` ablation and prefix-less
+    /// traffic take the identical path).
+    pub fn route_affine(&mut self, depths: &[usize]) -> usize {
+        assert!(!self.nodes.is_empty(), "empty fleet");
+        assert_eq!(depths.len(), self.nodes.len(), "one depth per node");
+        if depths.iter().all(|&d| d == 0) {
+            return self.route();
+        }
+        let best_depth = depths.iter().copied().max().unwrap().max(1) as f64;
+        let probing = |n: &Node| n.healthy && (n.probation == 0 || n.outstanding == 0);
+        let tier = if self.nodes.iter().any(probing) {
+            0
+        } else if self.healthy_count() > 0 {
+            1
+        } else {
+            2
+        };
+        let eligible = move |n: &Node| match tier {
+            0 => n.healthy && (n.probation == 0 || n.outstanding == 0),
+            1 => n.healthy,
+            _ => true,
+        };
+        let idx = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter(|&(_, n)| eligible(n))
+            .max_by(|(ia, a), (ib, b)| {
+                let sa = (1.0 + depths[*ia] as f64 / best_depth) * a.weight.max(1e-9)
+                    / (a.outstanding as f64 + 1.0);
+                let sb = (1.0 + depths[*ib] as f64 / best_depth) * b.weight.max(1e-9)
+                    / (b.outstanding as f64 + 1.0);
+                // ties go to the lower index: max_by keeps the *last*
+                // max, so order Greater only on a strict win
+                sa.partial_cmp(&sb).unwrap().then(std::cmp::Ordering::Greater)
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        self.nodes[idx].outstanding += 1;
+        self.nodes[idx].assigned += 1;
+        idx
+    }
+
     /// Mark one unit of work complete on a node.
     pub fn complete(&mut self, idx: usize) {
         assert!(self.nodes[idx].outstanding > 0, "complete on idle node");
@@ -594,6 +651,55 @@ mod tests {
     fn reassign_from_an_idle_node_panics() {
         let mut f = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
         f.reassign(0, 1);
+    }
+
+    #[test]
+    fn affine_routing_prefers_the_prefix_holder() {
+        let mut f = Fleet::uniform(2, 100.0, RoutePolicy::WeightedThroughput);
+        // Node 1 holds the full prefix (normalized bonus 2×); node 0 holds
+        // none. The holder wins while 2/(o1+1) beats 1/(o0+1), ties shed
+        // to the lower index: 1 (200 vs 100), 0 (100 vs 100 tie), 1 (100
+        // vs 50), 1 (66.7 vs 50), 0 (50 vs 50 tie) — a bounded 2:1 tilt
+        // toward the holder, never a pile-on.
+        let picks: Vec<usize> = (0..5).map(|_| f.route_affine(&[0, 4])).collect();
+        assert_eq!(picks, vec![1, 0, 1, 1, 0]);
+        assert_eq!(f.nodes[1].outstanding, 3);
+        assert_eq!(f.nodes[0].outstanding, 2);
+    }
+
+    #[test]
+    fn affine_routing_with_no_depth_reduces_to_the_plain_policy() {
+        // All-zero depths must preserve the configured policy exactly —
+        // the --no-affinity ablation and prefix-less traffic take the
+        // identical path.
+        let mut f = Fleet::uniform(3, 1.0, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| f.route_affine(&[0, 0, 0])).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        let mut w = Fleet::new(
+            vec![node("fast", 200.0), node("slow", 100.0)],
+            RoutePolicy::WeightedThroughput,
+        );
+        let a = w.route_affine(&[0, 0]);
+        assert_eq!(a, 0, "zero depths fall back to weighted throughput");
+    }
+
+    #[test]
+    fn affine_routing_skips_unhealthy_prefix_holders() {
+        let mut f = Fleet::uniform(2, 1.0, RoutePolicy::WeightedThroughput);
+        f.mark_unhealthy(1);
+        // the prefix lives on the dead card; affinity must not resurrect it
+        for _ in 0..4 {
+            assert_eq!(f.route_affine(&[0, 8]), 0);
+        }
+        assert_eq!(f.nodes[1].assigned, 0);
+    }
+
+    #[test]
+    fn affine_routing_breaks_ties_to_the_lowest_index() {
+        let mut f = Fleet::uniform(3, 1.0, RoutePolicy::WeightedThroughput);
+        assert_eq!(f.route_affine(&[2, 2, 2]), 0);
+        // node 0 now carries one unit; equal depths send the next to 1
+        assert_eq!(f.route_affine(&[2, 2, 2]), 1);
     }
 
     #[test]

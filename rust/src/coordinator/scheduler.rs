@@ -196,6 +196,47 @@ pub fn rounds_needed(seqs: &[SeqView]) -> usize {
     seqs.iter().map(|s| s.remaining()).max().unwrap_or(0)
 }
 
+/// Split a swap/migration DMA into the part hidden under the ongoing
+/// decode round and the part the engine actually stalls for. PCIe DMA
+/// and SM compute proceed concurrently, so while other sequences keep
+/// decoding (`round_s` of device time), the transfer costs the engine
+/// nothing; only the overhang past the round stalls it. On an x1 card
+/// the transfer dwarfs the round and almost everything stalls anyway —
+/// the per-card overlap factor *is* the link-width story of §3. Returns
+/// `(overlapped_s, stalled_s)`, summing to `transfer_s`; energy is the
+/// caller's problem (the link burns joules for the full transfer either
+/// way).
+pub fn overlap_transfer(transfer_s: f64, round_s: f64) -> (f64, f64) {
+    let overlapped = transfer_s.min(round_s.max(0.0));
+    (overlapped, transfer_s - overlapped)
+}
+
+/// Prefix-aware admission: [`plan_admission`] prices every queued prompt
+/// as `window_blocks` fresh pages, so at the capacity edge (`admissible
+/// == 0`) it never pops a request whose prompt is mostly resident. When
+/// plain admission stalls but the queue head's window has
+/// `resident_blocks` already in the prefix index (the pager's read-only
+/// [`crate::coordinator::kv::KvPager::resident_prefix_blocks`] probe),
+/// admit that head iff the free pool covers just the *fresh* remainder —
+/// the same arithmetic `admit_prompt` will re-check authoritatively
+/// under its own lock (a stale probe costs one bounced admission, never
+/// an over-commit).
+pub fn plan_admission_prefix_aware(
+    policy: &BatchPolicy,
+    live: usize,
+    admissible: usize,
+    free_blocks: usize,
+    window_blocks: usize,
+    resident_blocks: usize,
+) -> usize {
+    let plain = plan_admission(policy, live, admissible);
+    if plain > 0 || policy.concurrency() <= live {
+        return plain;
+    }
+    let fresh = window_blocks.saturating_sub(resident_blocks);
+    (resident_blocks > 0 && fresh <= free_blocks) as usize
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -380,6 +421,67 @@ mod tests {
                 None => assert!(seqs.iter().all(|s| s.done())),
             }
         });
+    }
+
+    #[test]
+    fn overlap_splits_transfer_against_the_decode_round() {
+        // transfer shorter than the round: fully hidden, zero stall
+        let (o, s) = overlap_transfer(0.2, 1.0);
+        assert_eq!((o, s), (0.2, 0.0));
+        // transfer longer than the round: the overhang stalls
+        let (o, s) = overlap_transfer(1.0, 0.3);
+        assert!((o - 0.3).abs() < 1e-12 && (s - 0.7).abs() < 1e-12);
+        // no concurrent decode (idle card, or overlap disabled upstream):
+        // everything stalls — the serial-charge baseline
+        assert_eq!(overlap_transfer(0.5, 0.0), (0.0, 0.5));
+        assert_eq!(overlap_transfer(0.5, -1.0), (0.0, 0.5));
+        // the split always conserves the transfer
+        assert_eq!(overlap_transfer(0.0, 1.0), (0.0, 0.0));
+    }
+
+    #[test]
+    fn x1_overlap_stall_is_strictly_below_the_serial_charge() {
+        // The ISSUE 7 overlap acceptance point, pinned analytically: a
+        // 170HX on its crippled x1 link swaps a ~1k-position sequence's
+        // private KV while three other sequences run a 170HX-priced
+        // decode round. The stalled seconds the engine charges must be
+        // strictly below the serial-charge baseline (the full transfer,
+        // what PR 5 booked), and on x1 the overlap factor is small — the
+        // transfer dwarfs the round, which is exactly the §3 story.
+        use crate::device::registry;
+        let x1 = registry::cmp170hx().pcie.with_lanes(1);
+        let transfer_s = x1.transfer_time(1024 * 28_672);
+        let round_s = 40e-3 * 3.0; // ~40 ms/token decode, 3 concurrent seqs
+        let (overlapped, stalled) = overlap_transfer(transfer_s, round_s);
+        assert!(stalled < transfer_s, "overlap must beat the serial charge");
+        assert!(stalled > 0.0, "an x1 transfer cannot hide entirely");
+        assert!((overlapped + stalled - transfer_s).abs() < 1e-12);
+        assert_eq!(overlapped, round_s, "the whole round hides transfer on x1");
+        // an x16-modded card flips the regime: the same bytes hide
+        // completely under the same round
+        let x16 = registry::cmp170hx().pcie.with_lanes(16);
+        let t16 = x16.transfer_time(1024 * 28_672);
+        if t16 <= round_s {
+            assert_eq!(overlap_transfer(t16, round_s), (t16, 0.0));
+        }
+    }
+
+    #[test]
+    fn prefix_aware_admission_opens_the_capacity_edge() {
+        let p = |max_batch| BatchPolicy { max_batch, ..Default::default() };
+        // plain admission already flows → unchanged, probe ignored
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 2, 64, 64, 64), 2);
+        // capacity edge (no full window fits) but the head's prompt is
+        // mostly resident: its fresh remainder fits → admit exactly one
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 64, 32), 1);
+        // fully-resident head needs zero fresh blocks
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 0, 64, 64), 1);
+        // no resident prefix → the gate stays closed (prefix-blind path)
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 64, 0), 0);
+        // resident but the fresh tail still overflows the pool → closed
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 16, 64, 32), 0);
+        // concurrency cap still binds even with a resident prompt
+        assert_eq!(plan_admission_prefix_aware(&p(2), 2, 0, 64, 64, 64), 0);
     }
 
     #[test]

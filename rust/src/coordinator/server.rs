@@ -16,13 +16,30 @@
 //! the pager chain-hashes the prompt window and pins already-resident
 //! blocks ([`KvPager::admit_prompt`]) — identical system prompts cost one
 //! physical copy, copy-on-write privatizes a shared tail on first decode
-//! write. An **idle** worker whose queue runs dry steals the newest
-//! request from the deepest peer queue, capping tail latency when routing
-//! guessed wrong. When a round cannot allocate growth pages, the engine
+//! write.
+//!
+//! The cards are tied together by the **fleet KV fabric**: every worker
+//! publishes its resident prefix chains to a [`PrefixDirectory`] each
+//! round, and the dispatch stage routes new arrivals toward their
+//! deepest resident prefix ([`Fleet::route_affine`]) — a hint, not a
+//! lease, since admission re-probes residency and a stale hit degrades
+//! to a plain miss. Swapped-out pages live in one *fleet-shared*
+//! [`HostPool`], and preempted sequences park in a fleet-shared
+//! [`ParkLot`]: an **idle** worker whose queue runs dry steals the
+//! newest queued request from the deepest peer queue, or **claims a
+//! foreign parked sequence and resumes it on its own card** — a live
+//! migration, priced at both ends' PCIe widths (swap-out at the
+//! victim's link, restore at the thief's) or replayed prefix-aware when
+//! the victim's KV was dropped. Swap DMA is modeled as **overlapped**
+//! with the decode round the survivors run while it streams: only the
+//! tail of the transfer that outlives the round stalls the simulated
+//! clock ([`scheduler::overlap_transfer`]).
+//!
+//! When a round cannot allocate growth pages, the engine
 //! preempts the longest-remaining sequence (ties broken toward the most
 //! over-served tenant, [`scheduler::plan_eviction_weighted`]) and prices
 //! its comeback per victim ([`scheduler::choose_preempt`]): either the KV
-//! is dropped and the request parks on the waiting queue to resume by
+//! is dropped and the request parks in the shared lot to resume by
 //! recomputing prefill and replaying its generated tokens (greedy decode
 //! is deterministic, so the replay reconstructs the identical state), or
 //! — when the §3 PCIe round trip at this card's link width is cheaper
@@ -40,7 +57,6 @@
 //! heterogeneous fleet — a 170HX next to a 90HX — reports fleet-wide
 //! tokens/s and tokens/joule, per node *and* per tenant.
 
-use std::collections::VecDeque;
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError,
 };
@@ -64,13 +80,14 @@ use crate::qos::{
 use crate::runtime::{ArtifactDir, DecodeState, ModelRuntime};
 
 use super::batcher::BatchPolicy;
-use super::kv::{HostPool, KvPager, SeqKv};
+use super::kv::{window_chain_hashes, HostPool, KvPager, PrefixDirectory, SeqKv};
 use super::metrics::{FleetMetrics, Metrics};
 use super::request::{Carried, GenRequest, GenResponse};
 use super::router::{Fleet, Node, RoutePolicy};
 use super::scheduler::{
-    choose_preempt, degraded_concurrency, plan_admission, plan_eviction_weighted,
-    plan_round_into, swap_round_trip_s, PreemptAction, SeqView, StepPolicy,
+    choose_preempt, degraded_concurrency, overlap_transfer, plan_admission,
+    plan_admission_prefix_aware, plan_eviction_weighted, plan_round_into, swap_round_trip_s,
+    PreemptAction, SeqView, StepPolicy,
 };
 
 /// Power charged to a simulated second of swap transfer: the DMA engine
@@ -121,6 +138,16 @@ pub struct ServerConfig {
     /// Deterministic fault-injection plan (chaos testing). `None` — the
     /// default — runs with the injector compiled out of the hot path.
     pub faults: Option<FaultPlan>,
+    /// Prefix-affine dispatch: route new arrivals toward the card whose
+    /// published prefix chains cover the prompt deepest
+    /// ([`Fleet::route_affine`]). Off (`--no-affinity`) is the ablation
+    /// baseline — every dispatch takes the plain routing policy.
+    pub affinity: bool,
+    /// Model swap/migration DMA as overlapped with the concurrent decode
+    /// round: only the transfer tail past the round's length stalls the
+    /// simulated clock. Off (`--no-overlap`) charges transfers serially,
+    /// the pre-fabric baseline.
+    pub overlap: bool,
 }
 
 impl Default for ServerConfig {
@@ -135,6 +162,8 @@ impl Default for ServerConfig {
             qos: QosConfig::default(),
             recovery: RecoveryPolicy::default(),
             faults: None,
+            affinity: true,
+            overlap: true,
         }
     }
 }
@@ -320,6 +349,15 @@ impl Server {
         let tenant_metrics: Arc<Vec<Mutex<Metrics>>> =
             Arc::new((0..registry.len()).map(|_| Mutex::new(Metrics::new())).collect());
         let queues: Arc<NodeQueues<GenRequest>> = Arc::new(NodeQueues::new(nodes.len()));
+        // The fleet KV fabric's shared pieces: one prefix directory (every
+        // worker publishes its resident chains; dispatch routes toward
+        // them), one host-RAM pool (host memory is a single physical
+        // resource, and a page swapped out by one card can be restored by
+        // another), and one park lot (preempted sequences are claimable
+        // by idle peers — live migration).
+        let directory = Arc::new(PrefixDirectory::new(nodes.len()));
+        let host_pool = Arc::new(Mutex::new(HostPool::new(config.batch.host_pool_bytes)));
+        let park = Arc::new(ParkLot::new());
         // Each worker reports its runtime's prefill window once validated;
         // the dispatch stage prices energy estimates with it (one artifact
         // set serves every node, so any node's answer is the fleet's).
@@ -360,6 +398,10 @@ impl Server {
             let rescue = config.recovery.rescue.then(|| rescue_tx.clone());
             let recovery = config.recovery.clone();
             let injector = injector.clone();
+            let directory = Arc::clone(&directory);
+            let host_pool = Arc::clone(&host_pool);
+            let park = Arc::clone(&park);
+            let overlap = config.overlap;
 
             let worker = std::thread::Builder::new()
                 .name(format!("cmphx-node{i}"))
@@ -432,7 +474,10 @@ impl Server {
                         overlay,
                         link,
                         pager,
-                        host_pool: HostPool::new(policy.host_pool_bytes),
+                        host_pool,
+                        directory,
+                        park,
+                        overlap,
                         metrics,
                         tenant_metrics,
                         tenant_weights,
@@ -490,6 +535,8 @@ impl Server {
             overlays,
             prefill_t,
             node_depth: config.qos.node_queue_depth.max(1),
+            directory: config.affinity.then(|| Arc::clone(&directory)),
+            block_positions: config.batch.block_positions(),
         };
         let dispatcher = std::thread::Builder::new()
             .name("cmphx-dispatch".into())
@@ -535,6 +582,12 @@ struct Dispatcher {
     /// Per-node work-queue bound ([`QosConfig::node_queue_depth`]) —
     /// shallow, so the backlog stays in the fair queue.
     node_depth: usize,
+    /// Fleet prefix directory for affine routing. `None` is the
+    /// `--no-affinity` ablation: every dispatch uses the plain policy.
+    directory: Option<Arc<PrefixDirectory>>,
+    /// KV block granularity — the chain-hash chunk size must match the
+    /// pagers' so directory lookups compare like with like.
+    block_positions: usize,
 }
 
 impl Dispatcher {
@@ -737,7 +790,7 @@ impl Dispatcher {
             self.shed(req, 0, "deadline exceeded before dispatch", false);
             return;
         }
-        let mut idx = {
+        let (mut idx, affine) = {
             let mut f = self.fleet.lock().unwrap();
             if f.healthy_count() == 0 {
                 drop(f);
@@ -750,8 +803,25 @@ impl Dispatcher {
                 self.fail_parked("no healthy nodes (worker unavailable)");
                 return;
             }
-            f.route()
+            // Prefix-affine routing: hash the prompt's padded window the
+            // way the pagers chunk it and prefer the card already holding
+            // the longest matching chain. The directory is a hint — a
+            // stale entry just routes to a card that re-prefills.
+            let depths = self.directory.as_ref().and_then(|d| {
+                let window = padded_window(&req.prompt, self.prefill_t)?;
+                Some(d.match_depths(&window_chain_hashes(&window, self.block_positions)))
+            });
+            match depths {
+                Some(depths) => {
+                    let idx = f.route_affine(&depths);
+                    (idx, depths[idx] > 0)
+                }
+                None => (f.route(), false),
+            }
         };
+        if affine {
+            self.node_metrics[idx].lock().unwrap().affine_routes += 1;
+        }
         // Rescues and retries were already charged on first dispatch —
         // charging again would double-bill the tenant for the fault.
         if req.charged_j == 0.0 {
@@ -819,6 +889,19 @@ impl Dispatcher {
             Some(why.into()),
         ));
     }
+}
+
+/// The dispatcher's replica of [`ModelRuntime::padded_window`]: the same
+/// leading-zero pad the engine prefills with, so directory lookups hash
+/// exactly the chains a pager would build for this prompt. `None` when the
+/// prompt overflows the window (admission will reject it anyway).
+fn padded_window(prompt: &[i32], prefill_t: usize) -> Option<Vec<i32>> {
+    if prompt.len() > prefill_t {
+        return None;
+    }
+    let mut w = vec![0i32; prefill_t - prompt.len()];
+    w.extend_from_slice(prompt);
+    Some(w)
 }
 
 impl ServerHandle {
@@ -983,8 +1066,21 @@ struct NodeWorker {
     /// This card's host link — prices swap transfers in the §3 model.
     link: PcieLink,
     pager: KvPager,
-    /// Host-RAM budget for swapped-out KV pages.
-    host_pool: HostPool,
+    /// Fleet-shared host-RAM budget for swapped-out KV pages. Host RAM is
+    /// one physical resource behind every card's PCIe link, so pages one
+    /// card swapped out can be restored by any other — the substrate for
+    /// live migration.
+    host_pool: Arc<Mutex<HostPool>>,
+    /// Fleet prefix directory this worker publishes its resident chains
+    /// into each round. Hints, not leases: the dispatcher routes on them,
+    /// admission re-probes the pager.
+    directory: Arc<PrefixDirectory>,
+    /// Fleet-shared park lot of preempted sequences. Owners resume their
+    /// own FIFO; an idle peer may claim a foreign entry — live migration.
+    park: Arc<ParkLot>,
+    /// Overlap swap DMA with the concurrent decode round (off = serial
+    /// charge baseline for the `--no-overlap` ablation).
+    overlap: bool,
     metrics: Arc<Mutex<Metrics>>,
     tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
     /// WFQ weights by tenant id, for service-normalized eviction.
@@ -1097,9 +1193,102 @@ enum Resumed {
     Failed,
 }
 
+/// Fleet-shared lot of parked (preempted) sequences, tagged by the node
+/// that owns them. Owners resume their own entries in FIFO order; an idle
+/// peer may `claim_foreign` an entry instead — that is live migration: the
+/// victim's pages already sit in the shared host pool (or replay from
+/// tokens), so the thief restores them over its *own* PCIe link. A single
+/// mutex over the whole lot guarantees each sequence is resumed exactly
+/// once even when several workers race for it.
+struct ParkLot {
+    parked: Mutex<Vec<(usize, Preempted)>>,
+}
+
+impl ParkLot {
+    fn new() -> Self {
+        ParkLot { parked: Mutex::new(Vec::new()) }
+    }
+
+    /// Pop the oldest entry owned by `node`.
+    fn pop_owned(&self, node: usize) -> Option<Preempted> {
+        let mut lot = self.parked.lock().unwrap();
+        let i = lot.iter().position(|(owner, _)| *owner == node)?;
+        Some(lot.remove(i).1)
+    }
+
+    /// Re-park at the front: a failed resume retries before newer entries.
+    fn push_front(&self, node: usize, p: Preempted) {
+        self.parked.lock().unwrap().insert(0, (node, p));
+    }
+
+    fn push_back(&self, node: usize, p: Preempted) {
+        self.parked.lock().unwrap().push((node, p));
+    }
+
+    /// Claim the oldest entry owned by someone else — the migration grab.
+    /// Returns the original owner so the router slot can be re-booked.
+    fn claim_foreign(&self, thief: usize) -> Option<(usize, Preempted)> {
+        let mut lot = self.parked.lock().unwrap();
+        let i = lot.iter().position(|(owner, _)| *owner != thief)?;
+        Some(lot.remove(i))
+    }
+
+    /// One engine round passed on `node`: age its parked entries.
+    fn age_owned(&self, node: usize) {
+        let mut lot = self.parked.lock().unwrap();
+        for (owner, p) in lot.iter_mut() {
+            if *owner == node {
+                p.parked_rounds += 1;
+            }
+        }
+    }
+
+    /// Whether the aging gate is engaged for `node` (any owned entry past
+    /// `aging_rounds`), plus the tenants of entries that *newly* crossed
+    /// the threshold this round (each counted once).
+    fn aging_gate(&self, node: usize, aging_rounds: u64) -> (bool, Vec<TenantId>) {
+        let mut lot = self.parked.lock().unwrap();
+        let mut engaged = false;
+        let mut newly = Vec::new();
+        for (owner, p) in lot.iter_mut() {
+            if *owner == node && p.parked_rounds >= aging_rounds {
+                engaged = true;
+                if !p.aged {
+                    p.aged = true;
+                    newly.push(p.req.tenant);
+                }
+            }
+        }
+        (engaged, newly)
+    }
+
+    /// Remove and return every entry owned by `node` (node-death path).
+    fn drain_owned(&self, node: usize) -> Vec<Preempted> {
+        let mut lot = self.parked.lock().unwrap();
+        let mut out = Vec::new();
+        let mut i = 0;
+        while i < lot.len() {
+            if lot[i].0 == node {
+                out.push(lot.remove(i).1);
+            } else {
+                i += 1;
+            }
+        }
+        out
+    }
+
+    fn has_owned(&self, node: usize) -> bool {
+        self.parked
+            .lock()
+            .unwrap()
+            .iter()
+            .any(|(owner, _)| *owner == node)
+    }
+}
+
 fn worker_loop(mut w: NodeWorker) {
     let mut live: Vec<Live> = Vec::new();
-    let mut waiting: VecDeque<Preempted> = VecDeque::new();
+    let park = Arc::clone(&w.park);
     // Round-planning buffers reused across the engine's lifetime: planning
     // a round allocates nothing after the first.
     let mut views: Vec<SeqView> = Vec::new();
@@ -1109,12 +1298,12 @@ fn worker_loop(mut w: NodeWorker) {
     let mut stalled: Vec<usize> = Vec::new();
     let mut open = true;
 
-    while open || !live.is_empty() || !waiting.is_empty() {
+    while open || !live.is_empty() || park.has_owned(w.node) {
         // --- injected faults (chaos runs): a scripted death hands every
         //     queued, live, and parked sequence back to the dispatch
         //     stage for rescue; lesser faults degrade this round. ---
         if apply_faults(&mut w) {
-            died(&mut w, std::mem::take(&mut live), std::mem::take(&mut waiting));
+            died(&mut w, std::mem::take(&mut live));
             return;
         }
         if w.degrade.stall_rounds > 0 {
@@ -1122,15 +1311,20 @@ fn worker_loop(mut w: NodeWorker) {
             // parked sequences still age toward their admission freeze.
             w.degrade.stall_rounds -= 1;
             std::thread::sleep(Duration::from_millis(1));
-            age_parked(&mut waiting);
+            park.age_owned(w.node);
             continue;
         }
+        // Publish this card's resident prefix chains for affine routing.
+        // A hint, not a lease: pages may be evicted before a routed
+        // request arrives, and admission's two-pass probe degrades any
+        // stale hit to a plain miss.
+        w.directory.publish(w.node, w.pager.index_hashes());
         let prefill_t = w.runtime.config.prefill_t;
         // --- admission (page-join): fill headroom, never stall decode.
         //     Preempted sequences resume before new arrivals join. ---
         let mut want = plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t));
         while want > 0 {
-            let Some(parked) = waiting.pop_front() else { break };
+            let Some(parked) = park.pop_owned(w.node) else { break };
             match resume(&mut w, parked, &mut live) {
                 Resumed::Joined => want -= 1,
                 Resumed::NoPages(parked) => {
@@ -1141,7 +1335,7 @@ fn worker_loop(mut w: NodeWorker) {
                         // hand back its host-pool reservation if the
                         // eviction had swapped).
                         if parked.swapped.is_some() {
-                            w.host_pool.release(parked.swap_bytes);
+                            w.host_pool.lock().unwrap().release(parked.swap_bytes);
                         }
                         let queue_s = parked.queue_s_now();
                         reject(
@@ -1152,7 +1346,7 @@ fn worker_loop(mut w: NodeWorker) {
                             parked.sim_j,
                         );
                     } else {
-                        waiting.push_front(parked);
+                        park.push_front(w.node, parked);
                         break;
                     }
                 }
@@ -1165,27 +1359,75 @@ fn worker_loop(mut w: NodeWorker) {
         // arrival loop pops a queued request into a terminal page-overload
         // reject that plan_admission exists to prevent.
         want = want.min(plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t)));
-        // --- waiting-queue aging gate: a parked sequence past its round
-        //     budget freezes new admissions, reserving every page a
-        //     retirement frees for the resume — new shorts can no longer
-        //     slip in ahead of the replay indefinitely. ---
-        let mut aged_parked = false;
-        for p in waiting.iter_mut() {
-            if p.parked_rounds >= w.policy.aging_rounds {
-                aged_parked = true;
-                if !p.aged {
-                    p.aged = true;
-                    w.metrics.lock().unwrap().aged_promotions += 1;
-                    w.tenant_metrics[p.req.tenant.0].lock().unwrap().aged_promotions += 1;
+        // --- prefix-aware admission gate: plan_admission budgets a full
+        //     fresh prefill window, but an affinity-routed arrival whose
+        //     prefix is already resident only needs the tail. Peek the
+        //     queue head and re-plan counting its resident blocks toward
+        //     the budget. The pop-and-admit below re-probes under the
+        //     pager's two-pass check, so an eviction between peek and
+        //     admit degrades to a retry, never an error. ---
+        if want == 0 && w.policy.prefix_cache {
+            if let Some(prompt) = w.queues.peek_with(w.node, |r| r.prompt.clone()) {
+                if let Ok(window) = w.runtime.padded_window(&prompt) {
+                    want = plan_admission_prefix_aware(
+                        &w.policy,
+                        live.len(),
+                        w.pager.admissible(prefill_t),
+                        w.pager.free_blocks(),
+                        w.pager.blocks_for(prefill_t),
+                        w.pager.resident_prefix_blocks(&window),
+                    );
                 }
             }
         }
+        // --- park-lot aging gate: a parked sequence past its round
+        //     budget freezes new admissions, reserving every page a
+        //     retirement frees for the resume — new shorts can no longer
+        //     slip in ahead of the replay indefinitely. ---
+        let (aged_parked, newly_aged) = park.aging_gate(w.node, w.policy.aging_rounds);
+        if !newly_aged.is_empty() {
+            w.metrics.lock().unwrap().aged_promotions += newly_aged.len() as u64;
+            for t in &newly_aged {
+                w.tenant_metrics[t.0].lock().unwrap().aged_promotions += 1;
+            }
+        }
         if open && want > 0 && !aged_parked {
-            if live.is_empty() && waiting.is_empty() {
-                // Idle engine: block for the first arrival — stealing from
-                // the deepest peer queue when ours stays dry — then gather
-                // up to `max_wait` of company for the cold-start round.
-                match idle_pop(&w) {
+            if live.is_empty() && !park.has_owned(w.node) {
+                // Idle engine: block for the first arrival — stealing a
+                // queued request from the deepest peer queue, or claiming
+                // a foreign parked sequence (live migration) when every
+                // queue stays dry — then gather up to `max_wait` of
+                // company for the cold-start round.
+                let first = loop {
+                    if let Some(req) = w.queues.try_pop(w.node) {
+                        break Some(req);
+                    }
+                    if w.steal {
+                        if let Some(req) = steal(&w) {
+                            break Some(req);
+                        }
+                        if migrate_parked(&mut w, &park, &mut live) {
+                            break None;
+                        }
+                    }
+                    match w.queues.wait_pop(w.node, Duration::from_millis(10)) {
+                        WaitPop::Item(req) => break Some(req),
+                        WaitPop::TimedOut => {}
+                        WaitPop::Closed => {
+                            if w.steal {
+                                if let Some(req) = steal(&w) {
+                                    break Some(req);
+                                }
+                                if migrate_parked(&mut w, &park, &mut live) {
+                                    break None;
+                                }
+                            }
+                            open = false;
+                            break None;
+                        }
+                    }
+                };
+                match first {
                     Some(req) => {
                         if admit(&mut w, req, &mut live) {
                             want -= 1;
@@ -1210,7 +1452,14 @@ fn worker_loop(mut w: NodeWorker) {
                             }
                         }
                     }
-                    None => open = false,
+                    None => {
+                        // A migrated sequence joined `live` (or the fleet
+                        // is closed and empty). The joined sequence used
+                        // one admission slot.
+                        if !live.is_empty() {
+                            want = want.saturating_sub(1);
+                        }
+                    }
                 }
             } else {
                 // Busy engine: non-blocking joins — the continuous part.
@@ -1227,7 +1476,7 @@ fn worker_loop(mut w: NodeWorker) {
             }
         }
         if live.is_empty() {
-            age_parked(&mut waiting);
+            park.age_owned(w.node);
             continue;
         }
 
@@ -1237,7 +1486,7 @@ fn worker_loop(mut w: NodeWorker) {
         // a peer that would fit once they free.
         retire_done(&mut w, &mut live);
         if live.is_empty() {
-            age_parked(&mut waiting);
+            park.age_owned(w.node);
             continue;
         }
 
@@ -1291,7 +1540,8 @@ fn worker_loop(mut w: NodeWorker) {
                 .expect("non-empty plan has an active seq");
             if w.policy.preempt && live.len() > 1 {
                 let evicted = live.swap_remove(victim);
-                preempt(&mut w, evicted, &mut waiting);
+                let survivors = live.len();
+                preempt(&mut w, evicted, survivors);
                 continue; // replan against the freed pages
             }
             if stalled.len() == plan.len() {
@@ -1347,18 +1597,14 @@ fn worker_loop(mut w: NodeWorker) {
         // --- retire finished sequences; their pages free for the next
         //     round's admissions and resumes ---
         retire_done(&mut w, &mut live);
-        age_parked(&mut waiting);
+        park.age_owned(w.node);
     }
     // Final prefix-cache snapshot: admissions after the last stepped
     // round (e.g. a drain that never decoded) still land in the metrics.
     w.metrics.lock().unwrap().sync_prefix(w.pager.prefix_stats());
-}
-
-/// One engine round passed with these sequences still parked.
-fn age_parked(waiting: &mut VecDeque<Preempted>) {
-    for p in waiting.iter_mut() {
-        p.parked_rounds += 1;
-    }
+    // Retract this card's published chains: a drained worker must not
+    // attract affine routes.
+    w.directory.clear(w.node);
 }
 
 /// Poll the fault script and apply this round's events to the worker.
@@ -1410,8 +1656,11 @@ fn apply_faults(w: &mut NodeWorker) -> bool {
 /// is deterministic, so a healthy card reconstructs the exact state);
 /// whatever cannot be handed back is answered terminally so no client
 /// ever hangs on a dead card.
-fn died(w: &mut NodeWorker, live: Vec<Live>, waiting: VecDeque<Preempted>) {
+fn died(w: &mut NodeWorker, live: Vec<Live>) {
     w.fleet.lock().unwrap().mark_unhealthy(w.node);
+    // Retract published prefix chains immediately: a dead card must stop
+    // attracting affine routes before the dispatcher's next decision.
+    w.directory.clear(w.node);
     // Atomically kill + drain our queue. Queued requests never started:
     // they re-enter with whatever they already carried (no new rescue
     // count — no progress was at risk).
@@ -1443,9 +1692,12 @@ fn died(w: &mut NodeWorker, live: Vec<Live>, waiting: VecDeque<Preempted>) {
             count_rescue(w, tenant, kept_s);
         }
     }
-    for mut p in waiting {
+    // Parked sequences still owned by this node are rescued the same way.
+    // A sequence a peer already claimed (mid-migration) is not in the lot
+    // anymore — it lives in the thief's set and survives untouched.
+    for mut p in w.park.drain_owned(w.node) {
         if p.swapped.take().is_some() {
-            w.host_pool.release(p.swap_bytes);
+            w.host_pool.lock().unwrap().release(p.swap_bytes);
         }
         let queue_s = p.queue_s_now();
         let mut req = p.req;
@@ -1517,34 +1769,36 @@ fn requeue_or_lose(w: &mut NodeWorker, req: GenRequest) -> bool {
     false
 }
 
-/// Block until a request arrives on this node's queue. While the queue is
-/// dry, an idle worker steals the newest request off the deepest peer
-/// queue (work stealing — the router's weights are estimates, and a
-/// request parked behind a deep queue should not wait out the guess).
-/// Returns `None` when the queue set is closed and nothing remains to
-/// steal.
-fn idle_pop(w: &NodeWorker) -> Option<GenRequest> {
-    loop {
-        if let Some(req) = w.queues.try_pop(w.node) {
-            return Some(req);
+/// Claim a foreign parked sequence and resume it here — live migration.
+/// The victim's swap-out was already priced at *its* card's PCIe link;
+/// the restore below goes over *this* card's link (`w.link`), so both
+/// ends of the move carry their own §3 transfer cost. A dropped (swapless)
+/// victim replays from tokens instead — prefix-aware, so a warm prefix on
+/// this card shortens the recompute. Returns true when a sequence joined
+/// this worker's live set.
+fn migrate_parked(w: &mut NodeWorker, park: &ParkLot, live: &mut Vec<Live>) -> bool {
+    let Some((victim, p)) = park.claim_foreign(w.node) else {
+        return false;
+    };
+    let tenant = p.req.tenant;
+    // Re-book the router slot onto this card up front: resume's terminal
+    // failure path completes the slot on `w.node`, and retire later
+    // completes it there too.
+    w.fleet.lock().unwrap().reassign(victim, w.node);
+    match resume(w, p, live) {
+        Resumed::Joined => {
+            w.metrics.lock().unwrap().migrations += 1;
+            w.tenant_metrics[tenant.0].lock().unwrap().migrations += 1;
+            true
         }
-        if w.steal {
-            if let Some(req) = steal(w) {
-                return Some(req);
-            }
+        Resumed::NoPages(p) => {
+            // Could not fit here after all: undo the booking and hand the
+            // sequence back to its owner's FIFO head.
+            w.fleet.lock().unwrap().reassign(w.node, victim);
+            park.push_front(victim, p);
+            false
         }
-        match w.queues.wait_pop(w.node, Duration::from_millis(10)) {
-            WaitPop::Item(req) => return Some(req),
-            WaitPop::TimedOut => {}
-            WaitPop::Closed => {
-                if w.steal {
-                    if let Some(req) = steal(w) {
-                        return Some(req);
-                    }
-                }
-                return None;
-            }
-        }
+        Resumed::Failed => false,
     }
 }
 
@@ -1787,7 +2041,7 @@ fn credit_prefix_hits(w: &mut NodeWorker, cached: usize) {
 /// recomputes prefill and replays the generated tokens (greedy decode is
 /// deterministic, so the replay reconstructs the identical state —
 /// vLLM's recompute-on-resume).
-fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
+fn preempt(w: &mut NodeWorker, l: Live, concurrent: usize) {
     let prefill_t = w.runtime.config.prefill_t;
     let replay_steps = l.tokens.len().saturating_sub(1);
     // The whole pricing pass is gated on the swap knob: with swap off
@@ -1820,14 +2074,24 @@ fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
         kv_bytes =
             w.pager.seq_private_bytes(l.kv).expect("live sequences hold valid KV handles");
         swap = choose_preempt(kv_bytes, &w.link, recompute_est_s) == PreemptAction::Swap
-            && w.host_pool.try_reserve(kv_bytes);
+            && w.host_pool.lock().unwrap().try_reserve(kv_bytes);
     }
     w.pager.release(l.kv).expect("page accounting");
     let (mut sim_s, mut sim_j) = (l.sim_s, l.sim_j);
     let (swapped, swap_bytes) = if swap {
         // Swap-out: the pages leave the device over the host link now.
+        // With overlap on, the DMA rides under the survivors' decode
+        // round — only the tail that outlasts the round stalls the
+        // victim's clock. Energy is unaffected: the link moves the same
+        // bytes either way.
         let t_out = w.link.transfer_time(kv_bytes);
-        sim_s += t_out;
+        let round_s = if w.overlap {
+            w.overlay.decode_s_per_token * w.degrade.decode_factor() * concurrent as f64
+        } else {
+            0.0
+        };
+        let (hidden, stall) = overlap_transfer(t_out, round_s);
+        sim_s += stall;
         sim_j += t_out * SWAP_LINK_W;
         {
             let mut m = w.metrics.lock().unwrap();
@@ -1835,13 +2099,15 @@ fn preempt(w: &mut NodeWorker, l: Live, waiting: &mut VecDeque<Preempted>) {
             m.swap_outs += 1;
             m.swap_bytes += kv_bytes;
             m.swap_transfer_s += t_out;
+            m.swap_overlapped_s += hidden;
+            m.swap_stalled_s += stall;
         }
         (Some(l.state), kv_bytes)
     } else {
         w.metrics.lock().unwrap().preemptions += 1;
         (None, 0)
     };
-    waiting.push_back(Preempted {
+    w.park.push_back(w.node, Preempted {
         decode_s: l.decode_s + l.decode_started.elapsed().as_secs_f64(),
         req: l.req,
         tokens: l.tokens,
@@ -1892,7 +2158,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
         && w.injector.as_ref().is_some_and(|i| i.take_swap_in_failure(w.node))
     {
         p.swapped = None;
-        w.host_pool.release(p.swap_bytes);
+        w.host_pool.lock().unwrap().release(p.swap_bytes);
         p.swap_bytes = 0;
         w.metrics.lock().unwrap().swap_in_failures += 1;
         w.tenant_metrics[p.req.tenant.0].lock().unwrap().swap_in_failures += 1;
@@ -1907,16 +2173,27 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
         // margin between the chooser's own estimate and the round trip
         // is what the swap bought — settled from the same number the
         // decision used, so ledger and decision cannot disagree.
-        w.host_pool.release(p.swap_bytes);
+        w.host_pool.lock().unwrap().release(p.swap_bytes);
         let t_in = w.link.transfer_time(p.swap_bytes);
         let saved =
             (p.recompute_est_s - swap_round_trip_s(p.swap_bytes, &w.link)).max(0.0);
+        // With overlap on, the restore DMA rides under the current live
+        // set's decode round; only the tail past the round stalls this
+        // sequence's rejoin.
+        let round_s = if w.overlap {
+            w.overlay.decode_s_per_token * w.degrade.decode_factor() * live.len() as f64
+        } else {
+            0.0
+        };
+        let (hidden, stall) = overlap_transfer(t_in, round_s);
         {
             let mut m = w.metrics.lock().unwrap();
             m.resumes += 1;
             m.swap_ins += 1;
             m.swap_bytes += p.swap_bytes;
             m.swap_transfer_s += t_in;
+            m.swap_overlapped_s += hidden;
+            m.swap_stalled_s += stall;
             m.saved_recompute_s += saved;
         }
         live.push(Live {
@@ -1927,7 +2204,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
             queue_s,
             prefill_s: p.prefill_s,
             decode_s: p.decode_s,
-            sim_s: p.sim_s + t_in,
+            sim_s: p.sim_s + stall,
             sim_j: p.sim_j + t_in * SWAP_LINK_W,
             preemptions: p.preemptions,
             swaps: p.swaps,
@@ -2146,6 +2423,8 @@ mod tests {
             overlays: vec![test_overlay(); nodes],
             prefill_t: 16,
             node_depth: 8,
+            directory: None,
+            block_positions: 16,
         }
     }
 
@@ -2413,6 +2692,161 @@ mod tests {
             fleet.lock().unwrap().nodes[0].outstanding,
             0,
             "the guard must hand the routed slot back"
+        );
+    }
+
+    /// A parked stub with no progress — enough to exercise ParkLot's
+    /// ownership and ordering rules.
+    fn parked_stub(id: u64) -> Preempted {
+        let (req, reply) = dummy_request(id);
+        std::mem::forget(reply);
+        Preempted {
+            req,
+            tokens: vec![1],
+            queue_s: 0.0,
+            prefill_s: 0.0,
+            decode_s: 0.0,
+            sim_s: 0.0,
+            sim_j: 0.0,
+            preemptions: 1,
+            swaps: 0,
+            swapped: None,
+            swap_bytes: 0,
+            recompute_est_s: 0.0,
+            parked_at: Instant::now(),
+            parked_rounds: 0,
+            aged: false,
+        }
+    }
+
+    #[test]
+    fn park_lot_orders_owners_fifo_and_migrates_the_oldest_foreign_entry() {
+        let lot = ParkLot::new();
+        lot.push_back(0, parked_stub(1));
+        lot.push_back(1, parked_stub(2));
+        lot.push_back(0, parked_stub(3));
+        assert!(lot.has_owned(0) && lot.has_owned(1));
+        // Owners resume in FIFO order.
+        assert_eq!(lot.pop_owned(0).unwrap().req.id, 1);
+        // A thief claims the oldest entry it does not own — with its
+        // original owner tag, so the router slot can be re-booked.
+        let (owner, p) = lot.claim_foreign(1).unwrap();
+        assert_eq!((owner, p.req.id), (0, 3));
+        // Only node 1's own entry remains: nothing foreign to node 1.
+        assert!(lot.claim_foreign(1).is_none());
+        assert!(!lot.has_owned(0));
+        // A failed resume re-parks at the head of the owner's FIFO.
+        lot.push_front(1, parked_stub(4));
+        assert_eq!(lot.pop_owned(1).unwrap().req.id, 4);
+        // Aging: entries cross the threshold once, engaging the gate and
+        // reporting each newly aged tenant exactly once.
+        lot.age_owned(1);
+        let (engaged, newly) = lot.aging_gate(1, 1);
+        assert!(engaged);
+        assert_eq!(newly.len(), 1);
+        let (engaged, newly) = lot.aging_gate(1, 1);
+        assert!(engaged, "the gate stays engaged while the entry waits");
+        assert!(newly.is_empty(), "an entry ages only once");
+        // Node death drains exactly the dead node's entries.
+        assert_eq!(lot.drain_owned(1).len(), 1);
+        assert!(!lot.has_owned(1));
+    }
+
+    #[test]
+    fn dispatch_routes_affine_toward_the_published_prefix_holder() {
+        let mut d = stub_dispatcher(2, vec![]);
+        let directory = Arc::new(PrefixDirectory::new(2));
+        d.directory = Some(Arc::clone(&directory));
+        // Node 1 publishes the chains of the padded [1, 2, 3] window —
+        // exactly what dummy_request submits.
+        let window = padded_window(&[1, 2, 3], d.prefill_t).unwrap();
+        directory.publish(1, window_chain_hashes(&window, d.block_positions));
+        let now = Instant::now();
+        let (req, _reply) = dummy_request(1);
+        std::mem::forget(_reply);
+        d.dispatch(TenantRegistry::DEFAULT, req, now);
+        assert!(d.queues.try_pop(1).is_some(), "the warm card must win the route");
+        assert_eq!(d.node_metrics[1].lock().unwrap().affine_routes, 1);
+        assert_eq!(d.node_metrics[0].lock().unwrap().affine_routes, 0);
+        // A prompt matching nothing published falls back to the plain
+        // policy (round-robin from node 0) and books no affine route.
+        let (mut req, _r2) = dummy_request(2);
+        std::mem::forget(_r2);
+        req.prompt = vec![9, 9, 9];
+        d.dispatch(TenantRegistry::DEFAULT, req, now);
+        assert!(d.queues.try_pop(0).is_some());
+        assert_eq!(d.node_metrics[0].lock().unwrap().affine_routes, 0);
+    }
+
+    /// Drive the fleet KV fabric analytically: two cards, a cyclic
+    /// three-family workload sharing a 512-token prefix, residency capped
+    /// at two sequences per card (releasing the oldest, as retirement
+    /// would). Returns (fleet prefix hits, goodput in tokens per
+    /// simulated second).
+    fn run_fabric_fleet(affinity: bool) -> (usize, f64) {
+        const BLOCK: usize = 16;
+        const PREFILL_T: usize = 1024;
+        const SHARED: usize = 512;
+        const DECODE: usize = 64;
+        let overlay = test_overlay();
+        let mut fleet = Fleet::uniform(2, 1.0, RoutePolicy::RoundRobin);
+        let directory = PrefixDirectory::new(2);
+        let mut pagers = [
+            KvPager::new(BLOCK, 1024, 160 * BLOCK as u64 * 1024, 0).unwrap(),
+            KvPager::new(BLOCK, 1024, 160 * BLOCK as u64 * 1024, 0).unwrap(),
+        ];
+        let mut resident: [Vec<SeqKv>; 2] = [Vec::new(), Vec::new()];
+        let mut hits_total = 0usize;
+        let mut sim_s = 0.0f64;
+        for i in 0..12usize {
+            let family = i % 3;
+            let mut window: Vec<i32> = (1..=SHARED as i32).collect();
+            window.extend(
+                (0..(PREFILL_T - SHARED)).map(|p| (1000 * (family + 1) + p) as i32),
+            );
+            let node = if affinity {
+                fleet.route_affine(&directory.match_depths(&window_chain_hashes(
+                    &window,
+                    BLOCK,
+                )))
+            } else {
+                fleet.route()
+            };
+            let (kv, hits) =
+                pagers[node].admit_prompt(&window).expect("card has page headroom");
+            hits_total += hits;
+            let cached = (hits * BLOCK).min(PREFILL_T);
+            sim_s += overlay.prefill_s_per_token * (PREFILL_T - cached) as f64
+                + overlay.decode_s_per_token * DECODE as f64;
+            resident[node].push(kv);
+            if resident[node].len() > 2 {
+                let oldest = resident[node].remove(0);
+                pagers[node].release(oldest).unwrap();
+                fleet.complete(node);
+            }
+            directory.publish(node, pagers[node].index_hashes());
+        }
+        (hits_total, 12.0 * DECODE as f64 / sim_s)
+    }
+
+    #[test]
+    fn fabric_affinity_beats_plain_routing_on_a_shared_prefix_fleet() {
+        // The headline acceptance pin: on a two-card fleet serving three
+        // request families behind a shared 512-token prefix, affine
+        // routing converges each family onto one card (full 64-block hits
+        // from the third arrival on), while round-robin keeps splitting
+        // families across cards and only ever reuses the shared half.
+        let (hits_on, goodput_on) = run_fabric_fleet(true);
+        let (hits_off, goodput_off) = run_fabric_fleet(false);
+        assert_eq!(hits_on, 576);
+        assert_eq!(hits_off, 320);
+        assert!(
+            hits_on as f64 >= 1.5 * hits_off as f64,
+            "affinity must win fleet prefix hits by >= 1.5x: {hits_on} vs {hits_off}"
+        );
+        assert!(
+            goodput_on > goodput_off,
+            "affinity must strictly win goodput: {goodput_on} vs {goodput_off}"
         );
     }
 }

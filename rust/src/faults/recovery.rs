@@ -11,7 +11,12 @@ use std::time::Duration;
 pub struct RecoveryPolicy {
     /// Rescue in-flight sequences off a dead node: they re-enter the QoS
     /// queue and re-admit on a healthy card, replaying their generated
-    /// tokens to a bit-identical state. Off = the no-rescue ablation arm
+    /// tokens to a bit-identical state. This covers migration too: a
+    /// sequence claimed from the shared park lot lives in the thief's
+    /// in-flight set from the moment of the claim, so a dying migration
+    /// target rescues it like any other live sequence, while entries
+    /// still parked under a dead owner drain back through dispatch with
+    /// their host-pool pages released. Off = the no-rescue ablation arm
     /// (a death loses its in-flight work with a terminal error).
     pub rescue: bool,
     /// Transient worker-side failures (KV pool momentarily full) bounce a

@@ -200,6 +200,17 @@ impl<T> NodeQueues<T> {
         !any_alive
     }
 
+    /// Inspect the head of one node's queue without popping it — the
+    /// prefix-aware admission gate peeks the next request's prompt
+    /// against the pager's resident prefix before deciding whether the
+    /// capacity edge can actually hold it. The closure runs under the
+    /// queue lock, so keep it cheap (hashing a window, not serving it).
+    /// `None` when the queue is empty.
+    pub fn peek_with<R>(&self, node: usize, f: impl FnOnce(&T) -> R) -> Option<R> {
+        let q = self.slots[node].q.lock().unwrap();
+        q.front().map(f)
+    }
+
     /// Steal the newest entry from the deepest peer queue (ties to the
     /// lowest index). Returns `(victim_node, item)`. Peers are scanned by
     /// momentary depth; dead nodes' queues are eligible victims (rescue).
@@ -321,6 +332,20 @@ mod tests {
         // fully dead: report space so the dispatcher reaches shedding
         q.mark_dead(0);
         assert!(q.any_space(2));
+    }
+
+    #[test]
+    fn peek_with_reads_the_head_without_popping() {
+        let q: NodeQueues<u32> = NodeQueues::new(2);
+        assert_eq!(q.peek_with(0, |v| *v), None, "empty queue has no head");
+        for v in [7, 8] {
+            q.push_bounded(0, v, 8).unwrap();
+        }
+        assert_eq!(q.peek_with(0, |v| *v), Some(7), "peek sees the FIFO head");
+        assert_eq!(q.len(0), 2, "peeking must not consume");
+        assert_eq!(q.try_pop(0), Some(7), "the peeked head is what pops next");
+        assert_eq!(q.peek_with(0, |v| v * 10), Some(80), "closure maps the head");
+        assert_eq!(q.peek_with(1, |v| *v), None, "peers' queues are separate");
     }
 
     #[test]

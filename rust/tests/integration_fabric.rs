@@ -1,0 +1,235 @@
+//! Fleet KV-fabric integration: prefix-affine routing against its
+//! ablation, live migration of a parked sequence onto an idle peer card
+//! (bit-identical tokens), swap–decode overlap accounting, and the chaos
+//! case where the migration *target* dies after claiming foreign work.
+//!
+//! Every test skips (passes vacuously, with a note on stderr) when the
+//! AOT artifacts are missing or PJRT is unavailable (the vendored stub xla
+//! crate) — environments that cannot run the runtime at all.
+
+use std::time::Duration;
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{GenResponse, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle};
+use cmphx::device::registry;
+use cmphx::faults::{FaultEvent, FaultKind, FaultPlan};
+use cmphx::isa::pass::FmadPolicy;
+mod common;
+use common::artifact_dir;
+
+fn artifact_prefill_t(dir: &cmphx::runtime::ArtifactDir) -> usize {
+    cmphx::runtime::goldens::config_usize(dir, "prefill_t").unwrap()
+}
+
+/// Two identical 170HX nodes, round-robin fleet policy.
+fn fleet2(max_batch: usize) -> ServerConfig {
+    ServerConfig {
+        queue_depth: 32,
+        batch: BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(200),
+            ..BatchPolicy::default()
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+        route: RoutePolicy::RoundRobin,
+        nodes: vec![
+            NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+            NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        ],
+        ..Default::default()
+    }
+}
+
+fn start(cfg: ServerConfig) -> Option<ServerHandle> {
+    Some(Server::start(artifact_dir()?, cfg).unwrap())
+}
+
+/// Submit one prompt and wait for its response.
+fn serve_one(server: &ServerHandle, prompt: Vec<i32>, tokens: usize) -> GenResponse {
+    server
+        .submit(prompt, tokens)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(240))
+        .unwrap()
+}
+
+#[test]
+fn affine_routing_reuses_the_warm_card_and_the_ablation_spreads() {
+    // Serially repeated identical prompts: the first lands by round-robin
+    // on node 0, which publishes the prompt's chain hashes while decoding
+    // it; every later dispatch sees the directory entry and routes back to
+    // the warm card. The --no-affinity arm keeps alternating. Stealing is
+    // off so routing alone decides placement.
+    let prompt = vec![5, 9, 13, 2, 8, 1, 30, 44];
+    let mut cfg = fleet2(2);
+    cfg.qos.steal = false;
+    let Some(server) = start(cfg) else { return };
+    for i in 0..3 {
+        let r = serve_one(&server, prompt.clone(), 6);
+        assert!(r.ok(), "{:?}", r.error);
+        assert_eq!(r.node, 0, "request {i} must stay on the warm card");
+    }
+    let fm = server.shutdown_fleet();
+    assert!(
+        fm.total().affine_routes >= 2,
+        "repeat prompts must route affine (got {})",
+        fm.total().affine_routes
+    );
+    assert_eq!(fm.nodes[1].1.requests, 0, "the cold card must stay idle");
+    assert!(fm.total().prefix_hits >= 1, "the warm card must reuse its pages");
+
+    let mut cfg = fleet2(2);
+    cfg.qos.steal = false;
+    cfg.affinity = false;
+    let Some(server) = start(cfg) else { return };
+    for _ in 0..3 {
+        let r = serve_one(&server, prompt.clone(), 6);
+        assert!(r.ok(), "{:?}", r.error);
+    }
+    let fm = server.shutdown_fleet();
+    assert_eq!(fm.total().affine_routes, 0, "the ablation must never route affine");
+    assert!(
+        fm.nodes[1].1.requests >= 1,
+        "plain round-robin must spread identical prompts"
+    );
+}
+
+/// The migration workload: three distinct prompts, 24 tokens each,
+/// round-robin → node 0 serves two concurrently under a page budget that
+/// cannot hold both at peak, node 1 serves one. Node 0 parks one of its
+/// pair under pressure (swapping its pages to the shared host pool);
+/// node 1 finishes first, goes idle, finds nothing to steal, and claims
+/// the parked sequence — restoring the host-resident pages over its own
+/// link and decoding to completion.
+fn migration_config(prefill_t: usize) -> ServerConfig {
+    const LONG: usize = 24;
+    let mut cfg = fleet2(2);
+    // Routing must stay plain round-robin so the 2-vs-1 split is fixed.
+    cfg.affinity = false;
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some((2 * prefill_t + 12).max(prefill_t + LONG));
+    cfg.batch.swap = true;
+    cfg
+}
+
+fn migration_prompts() -> [Vec<i32>; 3] {
+    [
+        vec![3, 1, 4, 1, 5, 9, 2, 6],
+        vec![2, 7, 1, 8, 2, 8, 1, 8],
+        vec![1, 6, 1, 8, 0, 3, 3, 9],
+    ]
+}
+
+#[test]
+fn a_migrated_sequence_completes_bit_identically_on_the_thief_card() {
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    let prompts = migration_prompts();
+
+    // Reference: the same prompts served without page pressure.
+    let Some(reference) = start(fleet2(4)) else { return };
+    let expected: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let r = serve_one(&reference, p.clone(), 24);
+            assert!(r.ok(), "{:?}", r.error);
+            r.tokens
+        })
+        .collect();
+    drop(reference);
+
+    let Some(server) = start(migration_config(prefill_t)) else { return };
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(p.clone(), 24).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(r.ok(), "request {i}: {:?}", r.error);
+        assert_eq!(
+            r.tokens, expected[i],
+            "request {i}: a migrated/parked sequence must replay bit-identically"
+        );
+    }
+    let fm = server.shutdown_fleet();
+    let m = fm.total();
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.lost_seqs, 0);
+    assert!(m.preemptions >= 1, "the page budget must have evicted someone");
+    assert!(
+        m.migrations >= 1,
+        "the idle card must have claimed the parked sequence (migrations={})",
+        m.migrations
+    );
+    assert!(m.swap_outs >= 1, "the eviction must have swapped to the host pool");
+    assert_eq!(m.swap_ins, m.swap_outs, "every parked page set must come back");
+    // Swap–decode overlap: the ledger splits every transfer into the part
+    // hidden under a decode round and the stalled tail — conserving the
+    // total — and a swap-out next to surviving decodes always hides some.
+    assert!(
+        (m.swap_overlapped_s + m.swap_stalled_s - m.swap_transfer_s).abs() < 1e-9,
+        "overlap split must conserve transfer time"
+    );
+    assert!(m.swap_overlapped_s > 0.0, "swap DMA must overlap the decode round");
+    assert!(
+        m.swap_stalled_s < m.swap_transfer_s,
+        "with overlap on, the stalled tail must be strictly below the serial charge"
+    );
+}
+
+#[test]
+fn a_dying_migration_target_loses_no_sequences() {
+    // Chaos arm: the card that claims the parked sequence dies while
+    // serving it. The death path rescues its live set (the migrated
+    // sequence included) back through the dispatch stage onto the
+    // survivor, which replays it bit-identically — zero lost sequences,
+    // every response delivered.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = artifact_prefill_t(&dir);
+    let prompts = migration_prompts();
+
+    let Some(reference) = start(fleet2(4)) else { return };
+    let expected: Vec<Vec<i32>> = prompts
+        .iter()
+        .map(|p| {
+            let r = serve_one(&reference, p.clone(), 24);
+            assert!(r.ok(), "{:?}", r.error);
+            r.tokens
+        })
+        .collect();
+    drop(reference);
+
+    // Node 1 serves its single routed request (~24 rounds), claims the
+    // parked sequence from node 0's pair, and the script kills it a few
+    // rounds into serving the claim — while node 0 is still busy.
+    let mut cfg = migration_config(prefill_t);
+    cfg.faults = Some(FaultPlan::script(vec![FaultEvent {
+        node: 1,
+        round: 28,
+        kind: FaultKind::NodeDeath,
+    }]));
+    let Some(server) = start(cfg) else { return };
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| server.submit(p.clone(), 24).unwrap())
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv_timeout(Duration::from_secs(240)).unwrap();
+        assert!(r.ok(), "request {i} lost to the target's death: {:?}", r.error);
+        assert_eq!(
+            r.tokens, expected[i],
+            "request {i}: rescue after a failed migration must stay bit-identical"
+        );
+    }
+    let fm = server.shutdown_fleet();
+    let m = fm.total();
+    assert_eq!(m.errors, 0, "zero dropped responses");
+    assert_eq!(m.lost_seqs, 0, "the dead target may lose nothing");
+    assert_eq!(m.requests, 3, "every request retires exactly once");
+    assert!(
+        m.rescued_seqs >= 1,
+        "the dead card's in-hand work must ride the rescue path"
+    );
+}

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Local tier-1 gate: build, test, lint.
 #
-# Usage: scripts/check.sh [--no-clippy | --chaos]
+# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
 # -q`) and adds rustfmt drift detection plus clippy with warnings denied.
@@ -13,6 +13,10 @@
 # reproducible with `CHAOS_SEED=<n> cargo test --release --test
 # integration_chaos`. (The suite self-skips without AOT artifacts, so the
 # smoke is a compile-plus-determinism gate on artifact-less runners.)
+#
+# --fabric runs only the KV-fabric smoke: the integration_fabric suite
+# (prefix-affine routing vs its ablation, live migration bit-identity,
+# the dying-migration-target chaos case). Same self-skip rule.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -28,6 +32,13 @@ if [[ "${1:-}" == "--chaos" ]]; then
         CHAOS_SEED="$seed" cargo test --release --test integration_chaos -q
     done
     echo "chaos smoke passed"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--fabric" ]]; then
+    echo "==> fabric smoke: cargo test --release --test integration_fabric"
+    cargo test --release --test integration_fabric -q
+    echo "fabric smoke passed"
     exit 0
 fi
 
