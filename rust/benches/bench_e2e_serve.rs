@@ -16,7 +16,10 @@
 //! [`cmphx::bench_harness::upsert_bench_row`]). A **fabric ablation**
 //! compares prefix-affine routing and swap–decode overlap against their
 //! `--no-affinity`/`--no-overlap` baselines, owning the `serve_fabric`
-//! row. Requires `make artifacts`.
+//! row, and a **radix-cache ablation** serves a returning-user workload
+//! with KV retention on vs the `--no-kv-cache` frees-at-refcount-zero
+//! baseline, owning the `serve_radix_cache` row. Requires `make
+//! artifacts`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -492,6 +495,90 @@ fn run_fabric() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One radix-cache arm: six returning users on a 2-card 170HX fleet, each
+/// submitting the same personal prompt (shared system prefix + private
+/// tail) for a second turn after their first retired. With retention on,
+/// the released first-turn pages sit in the radix tree as reclaimable
+/// cache and the second turn resurrects them; the `--no-kv-cache`
+/// ablation freed them at refcount zero and re-prefills. Returns (fleet
+/// prefix block hits, resurrected blocks, saved prefill s, resurrected
+/// share of it, served tok/s).
+fn run_radix_once(retention: bool) -> anyhow::Result<(u64, u64, f64, f64, f64)> {
+    const USERS: usize = 6;
+    let mut cfg = config(2, StepPolicy::RoundRobin);
+    cfg.route = RoutePolicy::RoundRobin;
+    cfg.qos.steal = false; // isolate caching from work movement
+    cfg.batch.kv_retention = retention;
+    cfg.nodes = vec![
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+    ];
+    let server = Server::start(artifacts()?, cfg)?;
+    let t0 = Instant::now();
+    let mut tokens = 0u64;
+    for _turn in 0..2 {
+        for user in 0..USERS {
+            let mut prompt: Vec<i32> = (1..=6).map(|t| t * 7).collect();
+            prompt.push(900 + user as i32);
+            prompt.push(950 + user as i32);
+            let resp = server.submit(prompt, TOKENS)?.recv()?;
+            anyhow::ensure!(resp.ok(), "radix request failed: {:?}", resp.error);
+            tokens += resp.tokens.len() as u64;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let m = server.shutdown_fleet().total();
+    Ok((
+        m.prefix_hits,
+        m.resurrected_blocks,
+        m.saved_prefill_s,
+        m.saved_prefill_resurrected_s,
+        tokens as f64 / wall,
+    ))
+}
+
+/// The radix-cache ablation as a bench row: KV retention beyond refcount
+/// zero vs the `--no-kv-cache` frees-at-zero baseline, on a returning-user
+/// fleet workload. Recorded as the `serve_radix_cache` row of
+/// `BENCH_sim_throughput.json`; the ≥1.5× fleet hit ratio is pinned
+/// analytically by the returning-user acceptance unit test.
+fn run_radix_cache() -> anyhow::Result<()> {
+    let (hits_on, res_on, saved_on, saved_res_on, tps_on) = run_radix_once(true)?;
+    let (hits_off, res_off, saved_off, _, tps_off) = run_radix_once(false)?;
+    println!(
+        "retention on : {hits_on} prefix block hits ({res_on} resurrected), \
+         {:.2}ms prefill saved ({:.2}ms from cache), {tps_on:>6.1} tok/s",
+        saved_on * 1e3,
+        saved_res_on * 1e3,
+    );
+    println!(
+        "retention off: {hits_off} prefix block hits ({res_off} resurrected), \
+         {:.2}ms prefill saved, {tps_off:>6.1} tok/s",
+        saved_off * 1e3,
+    );
+    let row = format!(
+        "{{\n    \"workload\": \"2-card 170HX fleet, 6 returning users x 2 turns, \
+         retention vs --no-kv-cache\",\n    \
+         \"retention_on_prefix_hits\": {hits_on},\n    \
+         \"retention_off_prefix_hits\": {hits_off},\n    \
+         \"fleet_hit_ratio\": {:.4},\n    \
+         \"resurrected_blocks\": {res_on},\n    \
+         \"saved_prefill_on_ms\": {:.4},\n    \
+         \"saved_prefill_resurrected_ms\": {:.4},\n    \
+         \"saved_prefill_off_ms\": {:.4},\n    \
+         \"retention_on_tok_per_s\": {tps_on:.1},\n    \
+         \"retention_off_tok_per_s\": {tps_off:.1}\n  }}",
+        hits_on as f64 / hits_off.max(1) as f64,
+        saved_on * 1e3,
+        saved_res_on * 1e3,
+        saved_off * 1e3,
+    );
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    upsert_bench_row(&path, "serve_radix_cache", &row);
+    Ok(())
+}
+
 /// One chaos arm: a scripted node-0 death at engine round 3 on a 2-card
 /// 170HX fleet, with sequence rescue on or off. Returns (ok responses,
 /// wall seconds, rescued, lost).
@@ -592,5 +679,7 @@ fn main() -> anyhow::Result<()> {
     run_chaos()?;
     println!("-- KV fabric: prefix-affine routing + swap-decode overlap ablations --");
     run_fabric()?;
+    println!("-- radix cache: returning users, KV retention vs --no-kv-cache --");
+    run_radix_cache()?;
     Ok(())
 }

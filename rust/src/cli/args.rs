@@ -59,6 +59,13 @@ impl Args {
         }
     }
 
+    pub fn opt_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -124,5 +131,13 @@ mod tests {
     fn defaults_apply_when_missing() {
         let a = parse("serve");
         assert_eq!(a.opt_usize("requests", 8).unwrap(), 8);
+    }
+
+    #[test]
+    fn float_options_parse_and_default() {
+        let a = parse("serve --affinity-bonus 3.5");
+        assert_eq!(a.opt_f64("affinity-bonus", 2.0).unwrap(), 3.5);
+        assert_eq!(a.opt_f64("missing", 2.0).unwrap(), 2.0);
+        assert!(parse("serve --affinity-bonus=much").opt_f64("affinity-bonus", 2.0).is_err());
     }
 }

@@ -27,9 +27,10 @@ COMMANDS:
                             mixbench operational-intensity sweep (roofline)
   serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
         [--block N] [--kv-blocks N] [--no-preempt]
-        [--no-prefix-cache] [--swap] [--host-pool MiB]
+        [--no-prefix-cache] [--no-kv-cache] [--swap] [--host-pool MiB]
         [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
-        [--no-affinity] [--no-overlap] [--aging N] [--aging-rounds N]
+        [--no-affinity] [--affinity-bonus F] [--admit-scan K]
+        [--no-overlap] [--aging N] [--aging-rounds N]
         [--chaos-seed N] [--chaos-rate F] [--no-rescue] [--retries N]
         [--deadline-ms N] [--probation N]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
@@ -40,7 +41,11 @@ COMMANDS:
                             pressure) and preempt-and-requeue under page
                             pressure (--no-preempt stalls instead).
                             Prompt blocks are prefix-shared copy-on-write
-                            (--no-prefix-cache for the ablation); --swap
+                            (--no-prefix-cache for the ablation), and
+                            released blocks stay cached in each card's
+                            radix tree for returning users until page
+                            pressure reclaims them (--no-kv-cache frees at
+                            refcount zero instead); --swap
                             arms swap-based preemption — victims whose KV
                             round-trips the card's PCIe link cheaper than
                             it recomputes park in a host-RAM pool of
@@ -53,7 +58,12 @@ COMMANDS:
                             cross-node work stealing (queued requests and
                             parked-sequence migration), --no-affinity
                             disables prefix-affine routing (dispatch falls
-                            back to the plain fleet policy), --no-overlap
+                            back to the plain fleet policy),
+                            --affinity-bonus sets its peak multiplier
+                            (must be > 1.0; default 2.0), --admit-scan
+                            bounds the capacity-edge queue scan that
+                            prefers radix-resident prompts (default 4,
+                            1 = head-only), --no-overlap
                             charges swap DMA serially instead of hiding it
                             under the decode round, --aging sets the WFQ
                             promoter (pops), --aging-rounds the preemption
@@ -324,6 +334,9 @@ fn serve(args: &Args) -> Result<i32> {
     if args.flag("no-prefix-cache") {
         config.batch.prefix_cache = false;
     }
+    if args.flag("no-kv-cache") {
+        config.batch.kv_retention = false;
+    }
     if args.flag("swap") {
         config.batch.swap = true;
     }
@@ -347,6 +360,17 @@ fn serve(args: &Args) -> Result<i32> {
         config.overlap = false;
     }
     config.qos.aging_pops = args.opt_usize("aging", config.qos.aging_pops as usize)? as u64;
+    config.qos.admit_scan = args.opt_usize("admit-scan", config.qos.admit_scan)?;
+    config.qos.affinity_bonus =
+        args.opt_f64("affinity-bonus", config.qos.affinity_bonus)?;
+    // NaN fails this too; values <= 1.0 would silently degrade affine
+    // routing to the plain policy — that ablation is spelled --no-affinity.
+    if !(config.qos.affinity_bonus > 1.0) {
+        bail!(
+            "--affinity-bonus must be > 1.0 (got {}); use --no-affinity for the ablation",
+            config.qos.affinity_bonus
+        );
+    }
     if let Some(list) = args.opt("fleet") {
         let fmad = config.fmad;
         // Reject empty segments explicitly: by_name does substring

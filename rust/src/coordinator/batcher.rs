@@ -50,6 +50,19 @@ pub struct BatchPolicy {
     /// instead of allocating — identical system prompts cost one physical
     /// copy. On by default; `--no-prefix-cache` gives the ablation arm.
     pub prefix_cache: bool,
+    /// Reclaimable KV retention: blocks reaching refcount zero stay in the
+    /// radix tree as cache (reclaimed lazily under allocation pressure)
+    /// so a returning user re-pins their history instead of re-prefilling
+    /// it. On by default; `--no-kv-cache` gives the refcount-zero-frees
+    /// ablation arm (the PR 5/7 behaviour). Only meaningful with
+    /// `prefix_cache` on.
+    pub kv_retention: bool,
+    /// Migration hysteresis, age half: a foreign parked sequence is
+    /// claimable only after it has sat parked this many engine rounds —
+    /// younger entries are ones their owner is likely to resume next
+    /// round, and grabbing them pays two PCIe transfers for nothing.
+    /// (The other half of the gate is owner queue depth, checked live.)
+    pub migrate_min_age: u64,
     /// Swap-based preemption: when evicting a victim, compare the §3 PCIe
     /// round-trip cost of its KV pages at this card's link width against
     /// the overlay-priced recompute and park the pages in host RAM when
@@ -71,6 +84,8 @@ impl Default for BatchPolicy {
             kv_block_budget: None,
             aging_rounds: 16,
             prefix_cache: true,
+            kv_retention: true,
+            migrate_min_age: 2,
             swap: false,
             host_pool_bytes: 1 << 30,
         }
@@ -106,6 +121,8 @@ mod tests {
         assert!(p.kv_block_budget.is_none());
         assert!(p.aging_rounds > 0, "parked sequences age after a bounded wait");
         assert!(p.prefix_cache, "prefix sharing is the default — it only saves pages");
+        assert!(p.kv_retention, "radix-tree retention is the default serving mode");
+        assert!(p.migrate_min_age > 0, "claims defer at least one round");
         assert!(!p.swap, "swap preemption is opt-in; drop-and-replay stays the baseline");
         assert!(p.host_pool_bytes > 0, "an armed swap path needs host headroom");
     }

@@ -1,5 +1,6 @@
-//! Paged KV-cache allocator with VRAM accounting, prefix sharing, and
-//! copy-on-write.
+//! Paged KV-cache allocator with a radix-tree prefix index, a
+//! three-tier (pinned / cached / free) page lifecycle, VRAM accounting,
+//! prefix sharing, and copy-on-write.
 //!
 //! The CMP 170HX's 8 GB ceiling is the binding constraint of §4.1/§6.2.
 //! The old fixed-slot manager reserved worst-case context
@@ -13,32 +14,74 @@
 //! that cannot be satisfied signals the engine to preempt rather than
 //! silently over-committing the device.
 //!
-//! The pager is also **content-aware** (vLLM's block-hash reuse): every
-//! block admitted with prompt content carries a *chain hash* of all token
-//! positions up to and including the ones it covers, and a per-node
-//! prefix index maps chain hash → resident block. [`KvPager::admit_prompt`]
-//! matches a new sequence's prompt blocks against the index and **pins**
-//! (refcounts) shared blocks instead of allocating fresh ones — identical
-//! system-prompt prefixes cost one physical copy, which is another large
-//! admission multiplier on an 8 GB card. The first write into a shared
+//! # The three-tier page lifecycle
+//!
+//! Every physical block is in exactly one of three tiers, and the tiers
+//! partition the budget (`pinned + cached + free == capacity`):
+//!
+//! - **Pinned** (`refs ≥ 1`): held by at least one live sequence. Never
+//!   reclaimed — eviction works at sequence granularity through
+//!   [`KvPager::release`], not by stealing pages out from under a holder.
+//! - **Cached** (`refs == 0`, still linked in the prefix tree): the
+//!   *reclaimable cache*. When the last holder of a content-addressed
+//!   block lets go, the block is **not** freed — it is demoted to this
+//!   tier, stamped by an LRU clock, and counted against the cached-bytes
+//!   ledger. A returning user's next turn re-pins its entire conversation
+//!   history from here (*resurrection*) instead of re-prefilling it —
+//!   the difference between a cache that only exists while a sharer is
+//!   live and one that makes millions of *distinct* conversations
+//!   cache-effective on an 8 GB card.
+//! - **Free**: in the allocator's pool. Cached blocks are *admissible*
+//!   (the admission gate counts `free + cached`), but consuming one costs
+//!   a **reclaim**: the LRU-oldest cached block is tree-unlinked and only
+//!   then freed, strictly under allocation pressure. Reclaim never
+//!   touches a pinned block.
+//!
+//! Private blocks (decode-written pages, CoW copies, diverged tails)
+//! carry no tree link and free directly at refcount zero — only
+//! content-addressed prompt blocks are worth retaining. The
+//! [`KvPager::set_retention`] knob (`--no-kv-cache`) restores the old
+//! free-at-refcount-zero behaviour as the ablation baseline.
+//!
+//! # The radix tree
+//!
+//! The pager is **content-aware** (vLLM's block-hash reuse): every block
+//! admitted with prompt content carries a *chain hash* of all token
+//! positions up to and including the ones it covers. Those hashes index a
+//! [`RadixIndex`] — a radix tree over token chains where each node covers
+//! one block-sized chunk, a parent→child edge extends the chain by one
+//! chunk, and **one descent from the root yields the longest matching
+//! prefix** (the old flat map probed chunk-by-chunk). Interior nodes
+//! adapt their child layout by fanout, ART-style: a small sorted inline
+//! array at low fanout spills to a hash table once a node's children
+//! outgrow it (and shrinks back when they don't). Leaves — and every
+//! interior node — hold the physical block reference for their chunk.
+//!
+//! [`KvPager::admit_prompt`] descends once, **pins** the matched run
+//! (bumping refcounts, resurrecting any cached blocks in it) and
+//! allocates + links only the fresh tail. The first write into a shared
 //! block (a decode step growing into a partially-filled prompt tail)
 //! triggers **copy-on-write**: the writer gets a private replacement and
-//! the shared original stays valid for its other holders.
-//! [`KvPager::release`] decrements refcounts and frees a block only when
-//! the last holder lets go; the index entry is unregistered at the same
-//! moment, so the prefix index can never point at a freed block.
+//! the shared original stays valid for its other holders and in the
+//! tree. [`KvPager::release`] demotes content-addressed blocks to the
+//! cached tier at refcount zero; the tree is unlinked only by reclaim
+//! (or divergence), so no tree path ever points at a freed block.
 //!
 //! [`HostPool`] accounts the host-RAM side of swap-based preemption:
 //! evicted sequences whose KV is cheaper to move over the (crippled
 //! x1/x4) PCIe link than to recompute park their pages there until
 //! resume ([`crate::coordinator::scheduler::choose_preempt`] prices the
-//! tradeoff with the §3 PCIe model).
+//! tradeoff with the §3 PCIe model). The cached tier credits that
+//! pricing twice over: a victim's content-addressed pages survive its
+//! release as cache, so they neither cross the link on swap-out
+//! ([`KvPager::seq_swap_bytes`]) nor cost prefill on a recompute-resume
+//! ([`KvPager::seq_survivor_blocks`]).
 //!
 //! Handles are generation-stamped: a released handle — or a handle whose
 //! id was recycled by a later admission — is rejected on every operation
 //! instead of silently corrupting another sequence's pages.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use anyhow::{bail, Result};
 
@@ -49,13 +92,15 @@ pub struct SeqKv {
     gen: u64,
 }
 
-/// One physical KV block: how many live sequences hold it, and the chain
-/// hash it is registered under in the prefix index (`None` for private
-/// blocks — decode-written pages, CoW copies, diverged tails).
+/// One physical KV block: how many live sequences hold it, its node in
+/// the prefix tree (`None` for private blocks — decode-written pages,
+/// CoW copies, diverged tails), and — when `refs == 0` but the block is
+/// retained — its LRU stamp in the cached tier.
 #[derive(Clone, Copy, Debug, Default)]
 struct Block {
     refs: u32,
-    hash: Option<u64>,
+    node: Option<usize>,
+    cached_at: Option<u64>,
 }
 
 /// One live sequence's page table.
@@ -83,6 +128,13 @@ pub struct PrefixStats {
     pub miss_blocks: u64,
     /// Shared blocks privatized on first write (copy-on-write).
     pub cow_copies: u64,
+    /// The subset of `hit_blocks` that were idle in the cached tier at
+    /// pin time (resurrected by a returning conversation) rather than
+    /// live-shared with another sequence.
+    pub resurrected_blocks: u64,
+    /// Cached blocks reclaimed (tree-unlinked, then freed) under
+    /// allocation pressure.
+    pub reclaimed_blocks: u64,
 }
 
 /// Chain hash: FNV-1a folded over the previous chunk's hash and this
@@ -105,7 +157,7 @@ fn chain_hash(prev: u64, tokens: &[i32]) -> u64 {
 }
 
 /// Chain hashes for every block-sized chunk of a prefill window — the
-/// exact keys [`KvPager::admit_prompt`] would probe. Public so the
+/// exact keys [`KvPager::admit_prompt`] would descend on. Public so the
 /// dispatcher can score nodes against the fleet [`PrefixDirectory`]
 /// without touching any pager: the window construction is deterministic
 /// ([`crate::runtime::ModelRuntime::padded_window`]), so dispatcher and
@@ -120,14 +172,187 @@ pub fn window_chain_hashes(window: &[i32], block_positions: usize) -> Vec<u64> {
     hashes
 }
 
+/// Fanout threshold at which a node's child table spills from the inline
+/// sorted array to a hash map — the ART NODE4/NODE16 → NODE256 adaptation
+/// at the two extremes this workload actually has (deep chains of fanout
+/// ~1, plus a bushy first level where every distinct conversation forks).
+const RADIX_INLINE_MAX: usize = 8;
+
+/// Child table of one radix node, adaptive by fanout: linear scan over a
+/// sorted-insertion-order inline array while small (cache-friendly, no
+/// hashing), a hash map once fanout outgrows it. Shrinks back to inline
+/// when removals drop it to half the threshold, so a node that briefly
+/// fanned out does not stay heavyweight forever.
+#[derive(Debug, Default)]
+enum ChildTable {
+    #[default]
+    Empty,
+    Inline(Vec<(u64, usize)>),
+    Hashed(HashMap<u64, usize>),
+}
+
+impl ChildTable {
+    fn get(&self, hash: u64) -> Option<usize> {
+        match self {
+            ChildTable::Empty => None,
+            ChildTable::Inline(v) => v.iter().find(|&&(h, _)| h == hash).map(|&(_, n)| n),
+            ChildTable::Hashed(m) => m.get(&hash).copied(),
+        }
+    }
+
+    fn insert(&mut self, hash: u64, node: usize) {
+        match self {
+            ChildTable::Empty => *self = ChildTable::Inline(vec![(hash, node)]),
+            ChildTable::Inline(v) => {
+                debug_assert!(v.iter().all(|&(h, _)| h != hash), "duplicate child hash");
+                v.push((hash, node));
+                if v.len() > RADIX_INLINE_MAX {
+                    let spilled: HashMap<u64, usize> = v.drain(..).collect();
+                    *self = ChildTable::Hashed(spilled);
+                }
+            }
+            ChildTable::Hashed(m) => {
+                m.insert(hash, node);
+            }
+        }
+    }
+
+    fn remove(&mut self, hash: u64) {
+        match self {
+            ChildTable::Empty => {}
+            ChildTable::Inline(v) => {
+                v.retain(|&(h, _)| h != hash);
+                if v.is_empty() {
+                    *self = ChildTable::Empty;
+                }
+            }
+            ChildTable::Hashed(m) => {
+                m.remove(&hash);
+                if m.len() <= RADIX_INLINE_MAX / 2 {
+                    let kept: Vec<(u64, usize)> = m.drain().collect();
+                    *self = ChildTable::Inline(kept);
+                }
+            }
+        }
+    }
+
+    fn child_nodes(&self) -> Vec<usize> {
+        match self {
+            ChildTable::Empty => Vec::new(),
+            ChildTable::Inline(v) => v.iter().map(|&(_, n)| n).collect(),
+            ChildTable::Hashed(m) => m.values().copied().collect(),
+        }
+    }
+}
+
+/// One radix node: the chunk it covers (by chain hash — which already
+/// encodes the full prefix, so the path to a node and its hash agree),
+/// the physical block backing that chunk, and its adaptive child table.
+#[derive(Debug)]
+struct RadixNode {
+    hash: u64,
+    block: usize,
+    /// `None` = depth-1 node (child of the root).
+    parent: Option<usize>,
+    children: ChildTable,
+}
+
+/// Radix tree over token chains: one node per resident content-addressed
+/// block, edges extend the chain by one chunk, one descent = the longest
+/// matching prefix. Arena-allocated; slots recycle through `free`.
+#[derive(Debug, Default)]
+struct RadixIndex {
+    nodes: Vec<Option<RadixNode>>,
+    free: Vec<usize>,
+    root: ChildTable,
+}
+
+impl RadixIndex {
+    /// Longest-prefix match in one descent: follow `hashes` from the root
+    /// until the first missing edge, returning `(node, block)` per
+    /// matched chunk in chain order.
+    fn descend(&self, hashes: &[u64]) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        let mut table = &self.root;
+        for &h in hashes {
+            match table.get(h) {
+                Some(ni) => {
+                    let node = self.nodes[ni].as_ref().expect("linked child is live");
+                    out.push((ni, node.block));
+                    table = &node.children;
+                }
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Link a fresh chunk under `parent` (`None` = root). The caller
+    /// guarantees the edge is absent — descent stopped there.
+    fn insert(&mut self, parent: Option<usize>, hash: u64, block: usize) -> usize {
+        let node = RadixNode { hash, block, parent, children: ChildTable::default() };
+        let ni = match self.free.pop() {
+            Some(ni) => {
+                self.nodes[ni] = Some(node);
+                ni
+            }
+            None => {
+                self.nodes.push(Some(node));
+                self.nodes.len() - 1
+            }
+        };
+        match parent {
+            Some(p) => self.nodes[p].as_mut().expect("parent is live").children.insert(hash, ni),
+            None => self.root.insert(hash, ni),
+        }
+        ni
+    }
+
+    /// Detach the whole subtree rooted at `ni`, returning the block ids
+    /// whose nodes were removed (the root of the cut first). The caller
+    /// owns the per-block consequences — a chain below a removed chunk
+    /// can never be prefix-matched again, so the subtree goes with it.
+    fn unlink(&mut self, ni: usize) -> Vec<usize> {
+        let (parent, hash) = {
+            let n = self.nodes[ni].as_ref().expect("unlink target is live");
+            (n.parent, n.hash)
+        };
+        match parent {
+            Some(p) => {
+                if let Some(pn) = self.nodes[p].as_mut() {
+                    pn.children.remove(hash);
+                }
+            }
+            None => self.root.remove(hash),
+        }
+        let mut blocks = Vec::new();
+        let mut stack = vec![ni];
+        while let Some(i) = stack.pop() {
+            let node = self.nodes[i].take().expect("subtree node is live");
+            stack.extend(node.children.child_nodes());
+            blocks.push(node.block);
+            self.free.push(i);
+        }
+        blocks
+    }
+
+    /// Every registered chain hash (pinned and cached tiers alike) — the
+    /// node's published view in the fleet [`PrefixDirectory`].
+    fn hashes(&self) -> Vec<u64> {
+        self.nodes.iter().flatten().map(|n| n.hash).collect()
+    }
+}
+
 /// Paged KV block allocator for one card.
 #[derive(Debug)]
 pub struct KvPager {
     block_positions: usize,
     bytes_per_pos: u64,
     total_blocks: usize,
-    /// Distinct physical blocks with at least one holder.
+    /// Distinct physical blocks with at least one holder (the pinned tier).
     allocated: usize,
+    /// Blocks in the reclaimable-cache tier (refs == 0, tree-linked).
+    cached: usize,
     active: usize,
     /// Device memory budget and static (weights) usage, bytes.
     vram_bytes: u64,
@@ -135,9 +360,17 @@ pub struct KvPager {
     /// Physical block table; slots are recycled through `free_slots`.
     blocks: Vec<Block>,
     free_slots: Vec<usize>,
-    /// chain hash → resident block id. Entries exist only while the block
-    /// has holders (refs ≥ 1) and its content still matches the hash.
-    prefix_index: HashMap<u64, usize>,
+    /// Radix tree over token chains; nodes reference resident blocks in
+    /// the pinned or cached tier — never a freed one.
+    index: RadixIndex,
+    /// LRU clock over the cached tier: (stamp, block) in demotion order,
+    /// with lazy invalidation (an entry is live iff the block's
+    /// `cached_at` still equals the stamp).
+    lru: VecDeque<(u64, usize)>,
+    lru_tick: u64,
+    /// Retain content-addressed blocks at refcount zero (the cached
+    /// tier). Off = the refcount-zero-frees ablation (`--no-kv-cache`).
+    retain: bool,
     entries: Vec<PageEntry>,
     free_ids: Vec<usize>,
     stats: PrefixStats,
@@ -173,21 +406,39 @@ impl KvPager {
             bytes_per_pos,
             total_blocks,
             allocated: 0,
+            cached: 0,
             active: 0,
             vram_bytes,
             weights_bytes,
             blocks: Vec::new(),
             free_slots: Vec::new(),
-            prefix_index: HashMap::new(),
+            index: RadixIndex::default(),
+            lru: VecDeque::new(),
+            lru_tick: 0,
+            retain: true,
             entries: Vec::new(),
             free_ids: Vec::new(),
             stats: PrefixStats::default(),
         })
     }
 
+    /// Toggle cache-beyond-refcount retention. Off restores the old
+    /// free-at-refcount-zero behaviour — the `--no-kv-cache` ablation
+    /// baseline. Turning retention off on a warm pager reclaims the
+    /// whole cached tier immediately.
+    pub fn set_retention(&mut self, retain: bool) {
+        self.retain = retain;
+        if !retain {
+            while self.cached > 0 {
+                self.reclaim_lru();
+            }
+        }
+    }
+
     /// Cap the block pool below the VRAM-derived total (a test/ops knob:
-    /// force page pressure without faking device specs). Only valid on an
-    /// idle pager.
+    /// force page pressure without faking device specs). Only valid with
+    /// no live sequences; the cached tier is reclaimed to make the cap
+    /// meaningful.
     pub fn limit_blocks(&mut self, cap: usize) -> Result<()> {
         if cap == 0 {
             bail!("KV block budget must be at least one block");
@@ -195,18 +446,24 @@ impl KvPager {
         if self.allocated > 0 {
             bail!("cannot shrink the block pool with live sequences");
         }
+        while self.cached > 0 {
+            self.reclaim_lru();
+        }
         self.total_blocks = self.total_blocks.min(cap);
         Ok(())
     }
 
     /// Permanently retire up to `n` blocks from the **free** pool — the
-    /// VRAM-page-loss fault model. Live sequences are never touched (their
-    /// pages are, by definition, the ones still readable); the card just
-    /// gets smaller, and the admission gate sees the shrunken capacity
-    /// immediately. Returns how many blocks were actually lost, which can
-    /// be less than `n` when the free pool is nearly empty.
+    /// VRAM-page-loss fault model. Cached blocks are reclaimed to cover
+    /// the loss when the free pool alone cannot; live sequences are never
+    /// touched (their pages are, by definition, the ones still readable).
+    /// The card just gets smaller, and the admission gate sees the
+    /// shrunken capacity immediately. Returns how many blocks were
+    /// actually lost, which can be less than `n` when free + cached is
+    /// nearly empty.
     pub fn lose_blocks(&mut self, n: usize) -> usize {
-        let lose = n.min(self.free_blocks());
+        let lose = n.min(self.free_blocks() + self.cached);
+        self.ensure_free(lose);
         for _ in 0..lose {
             // Retire a concrete free slot when one exists so the id can
             // never be recycled; blocks never materialized in `blocks`
@@ -223,10 +480,10 @@ impl KvPager {
         positions.max(1).div_ceil(self.block_positions)
     }
 
-    /// Allocate one physical block with `refs = 1`, registering `hash` in
-    /// the prefix index when given (and when the hash is not already
-    /// claimed by another resident block).
-    fn alloc_block(&mut self, hash: Option<u64>) -> usize {
+    /// Allocate one private physical block with `refs = 1`. The caller
+    /// must have ensured a free slot exists ([`KvPager::ensure_free`]).
+    fn alloc_block(&mut self) -> usize {
+        debug_assert!(self.free_blocks() > 0, "alloc without ensure_free");
         let id = match self.free_slots.pop() {
             Some(id) => id,
             None => {
@@ -234,22 +491,40 @@ impl KvPager {
                 self.blocks.len() - 1
             }
         };
-        // Register the hash only when it is not already claimed — the
-        // index maps each chain hash to exactly one resident block.
-        let mut registered = None;
-        if let Some(h) = hash {
-            if let std::collections::hash_map::Entry::Vacant(e) = self.prefix_index.entry(h) {
-                e.insert(id);
-                registered = Some(h);
-            }
-        }
-        self.blocks[id] = Block { refs: 1, hash: registered };
+        self.blocks[id] = Block { refs: 1, node: None, cached_at: None };
         self.allocated += 1;
         id
     }
 
-    /// Drop one holder of a physical block; frees it (and unregisters its
-    /// hash) when the last holder lets go. Returns true when the block was
+    /// Allocate one block and link it into the prefix tree as `hash`
+    /// under `parent` (`None` = a depth-1 chunk). Returns the block and
+    /// its tree node.
+    fn alloc_chain_block(&mut self, parent: Option<usize>, hash: u64) -> (usize, usize) {
+        let id = self.alloc_block();
+        let ni = self.index.insert(parent, hash, id);
+        self.blocks[id].node = Some(ni);
+        (id, ni)
+    }
+
+    /// Pin one resident block: bump its refcount, resurrecting it out of
+    /// the cached tier when idle. Returns true when the pin was a
+    /// resurrection (the block had no live holder).
+    fn pin_block(&mut self, id: usize) -> bool {
+        let b = &mut self.blocks[id];
+        b.refs += 1;
+        if b.cached_at.take().is_some() {
+            self.cached -= 1;
+            self.allocated += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Drop one holder of a physical block. At refcount zero a
+    /// tree-linked block **demotes to the cached tier** (LRU-stamped,
+    /// still matchable) when retention is on; otherwise — private blocks
+    /// always, every block under `--no-kv-cache` — it is freed, taking
+    /// its tree subtree with it. Returns true when the block was
     /// actually freed.
     fn unref_block(&mut self, id: usize) -> bool {
         let b = &mut self.blocks[id];
@@ -258,12 +533,65 @@ impl KvPager {
         if b.refs > 0 {
             return false;
         }
-        if let Some(h) = b.hash.take() {
-            self.prefix_index.remove(&h);
+        if self.retain && b.node.is_some() {
+            let stamp = self.lru_tick;
+            self.lru_tick += 1;
+            self.blocks[id].cached_at = Some(stamp);
+            self.lru.push_back((stamp, id));
+            self.cached += 1;
+            self.allocated -= 1;
+            return false;
+        }
+        if let Some(ni) = self.blocks[id].node {
+            self.unlink_tree(ni);
         }
         self.free_slots.push(id);
         self.allocated -= 1;
         true
+    }
+
+    /// Detach the subtree rooted at tree node `ni`. Pinned blocks in the
+    /// subtree lose only their registration (their pages are untouched
+    /// and their holders unaffected); cached blocks are freed on the
+    /// spot — a cached block's sole purpose is future matching, and an
+    /// unreachable one can never match again. Returns blocks freed.
+    fn unlink_tree(&mut self, ni: usize) -> usize {
+        let mut freed = 0;
+        for id in self.index.unlink(ni) {
+            let b = &mut self.blocks[id];
+            b.node = None;
+            if b.refs == 0 && b.cached_at.take().is_some() {
+                self.cached -= 1;
+                self.free_slots.push(id);
+                self.stats.reclaimed_blocks += 1;
+                freed += 1;
+            }
+        }
+        freed
+    }
+
+    /// Reclaim the LRU-oldest cached block (tree-unlink, then free),
+    /// along with any cached blocks stranded in its subtree. Returns
+    /// blocks freed — zero when the cached tier is empty.
+    fn reclaim_lru(&mut self) -> usize {
+        while let Some((stamp, id)) = self.lru.pop_front() {
+            if self.blocks[id].cached_at != Some(stamp) {
+                continue; // stale entry: resurrected or already reclaimed
+            }
+            let ni = self.blocks[id].node.expect("cached blocks are tree-linked");
+            return self.unlink_tree(ni);
+        }
+        0
+    }
+
+    /// Reclaim cached blocks until the free pool holds `need` — the only
+    /// place cache is given back, and strictly under allocation
+    /// pressure. Callers gate on [`KvPager::available_blocks`] first, so
+    /// this cannot fall short.
+    fn ensure_free(&mut self, need: usize) {
+        while self.free_blocks() < need && self.cached > 0 {
+            self.reclaim_lru();
+        }
     }
 
     fn new_handle(&mut self, positions: usize, blocks: Vec<usize>) -> SeqKv {
@@ -282,64 +610,68 @@ impl KvPager {
     }
 
     /// Admit a sequence holding `positions` positions (the prefill
-    /// window) on private, content-less blocks, or `None` when the free
-    /// pool cannot cover it. The prefix-blind path — what a disabled
+    /// window) on private, content-less blocks, or `None` when free +
+    /// cached cannot cover it. The prefix-blind path — what a disabled
     /// prefix cache uses.
     pub fn admit(&mut self, positions: usize) -> Option<SeqKv> {
         let need = self.blocks_for(positions);
-        if need > self.free_blocks() {
+        if need > self.available_blocks() {
             return None;
         }
-        let blocks: Vec<usize> = (0..need).map(|_| self.alloc_block(None)).collect();
+        self.ensure_free(need);
+        let blocks: Vec<usize> = (0..need).map(|_| self.alloc_block()).collect();
         Some(self.new_handle(positions, blocks))
     }
 
     /// Admit a sequence whose prefill window holds exactly `window`
-    /// (prompt plus deterministic padding), matching each block-sized
-    /// chunk's chain hash against the prefix index. Matched blocks are
-    /// **pinned** (refcount bumped) instead of allocated; matching stops
-    /// at the first miss (chain hashes make any later hit imply the same
-    /// full prefix anyway) and the remaining chunks are allocated fresh
-    /// and registered for future admissions — including a trailing
-    /// partial chunk, whose content is still deterministic. Returns the
-    /// handle and the number of pinned (cache-hit) blocks, or `None` when
-    /// the free pool cannot cover the fresh blocks. On `None` nothing is
-    /// pinned or allocated.
+    /// (prompt plus deterministic padding): one radix-tree descent yields
+    /// the longest resident prefix — live-shared *or* idle in the cached
+    /// tier — and the matched run is **pinned** (refcount bumped, cached
+    /// blocks resurrected) instead of allocated. The remaining chunks are
+    /// allocated fresh and linked into the tree for future admissions —
+    /// including a trailing partial chunk, whose content is still
+    /// deterministic. Returns the handle and the number of pinned
+    /// (cache-hit) blocks, or `None` when free + reclaimable cannot cover
+    /// the fresh tail. On `None` nothing is pinned, allocated, or
+    /// reclaimed.
     pub fn admit_prompt(&mut self, window: &[i32]) -> Option<(SeqKv, usize)> {
         if window.is_empty() {
             return self.admit(0).map(|kv| (kv, 0));
         }
-        // Pass 1 (read-only): walk the chain, splitting chunks into a
-        // shared prefix run and a fresh tail.
         let hashes = window_chain_hashes(window, self.block_positions);
-        let mut pinned: Vec<usize> = Vec::new();
-        for h in &hashes {
-            match self.prefix_index.get(h) {
-                Some(&id) => pinned.push(id),
-                None => break,
-            }
-        }
-        let fresh = hashes.len() - pinned.len();
-        if fresh > self.free_blocks() {
+        // One descent: the longest matching prefix, all tiers.
+        let matched = self.index.descend(&hashes);
+        let resurrect =
+            matched.iter().filter(|&&(_, b)| self.blocks[b].cached_at.is_some()).count();
+        let fresh = hashes.len() - matched.len();
+        // Cached blocks we are about to resurrect are not reclaimable
+        // for this admission's own tail — exclude them from the budget.
+        if fresh > self.free_blocks() + (self.cached - resurrect) {
             return None;
         }
-        // Pass 2 (commit): pin the shared run, allocate the tail.
-        for &id in &pinned {
-            self.blocks[id].refs += 1;
+        // Commit: pin the run first (so reclaim for the tail can never
+        // take a block the run needs), then allocate + link the tail.
+        for &(_, b) in &matched {
+            self.pin_block(b);
         }
-        let hits = pinned.len();
-        let mut blocks = pinned;
-        for h in &hashes[hits..] {
-            blocks.push(self.alloc_block(Some(*h)));
+        let hits = matched.len();
+        let mut parent = matched.last().map(|&(ni, _)| ni);
+        let mut blocks: Vec<usize> = matched.iter().map(|&(_, b)| b).collect();
+        for &h in &hashes[hits..] {
+            self.ensure_free(1);
+            let (id, ni) = self.alloc_chain_block(parent, h);
+            blocks.push(id);
+            parent = Some(ni);
         }
         self.stats.hit_blocks += hits as u64;
+        self.stats.resurrected_blocks += resurrect as u64;
         self.stats.miss_blocks += fresh as u64;
         Some((self.new_handle(window.len(), blocks), hits))
     }
 
     /// Grow a sequence to `positions`. `Ok(true)` when the sequence now
     /// owns every page up to `positions` (including the no-op case);
-    /// `Ok(false)` when the free pool cannot cover the growth — the
+    /// `Ok(false)` when free + reclaimable cannot cover the growth — the
     /// caller's cue to preempt or stall. Nothing changes on `Ok(false)`.
     /// `Err` marks a coordinator logic bug (stale handle).
     ///
@@ -348,9 +680,9 @@ impl KvPager {
     /// partially-filled tail. A shared tail (refs > 1) triggers
     /// **copy-on-write**: the writer takes a private replacement block
     /// (costing one extra page this round) and unpins the original, which
-    /// stays valid for its other holders and in the prefix index. A
-    /// privately-held hashed tail is simply unregistered, since its
-    /// content is about to diverge from the hash.
+    /// stays valid for its other holders and in the tree. A
+    /// privately-held tail is simply unlinked (a partial chunk is always
+    /// a tree leaf), since its content is about to diverge from its hash.
     pub fn grow(&mut self, seq: SeqKv, positions: usize) -> Result<bool> {
         let (cur, owned) = {
             let a = self.alloc(seq)?;
@@ -367,22 +699,23 @@ impl KvPager {
         };
         let cow = tail_id.is_some_and(|id| self.blocks[id].refs > 1);
         let fresh = self.blocks_for(positions) - owned + cow as usize;
-        if fresh > self.free_blocks() {
+        if fresh > self.available_blocks() {
             return Ok(false);
         }
+        self.ensure_free(fresh);
         if let Some(id) = tail_id {
             if cow {
-                let copy = self.alloc_block(None);
+                let copy = self.alloc_block();
                 self.unref_block(id);
                 let alloc = self.entries[seq.id].alloc.as_mut().expect("checked live");
                 *alloc.blocks.last_mut().expect("tail exists") = copy;
                 self.stats.cow_copies += 1;
-            } else if let Some(h) = self.blocks[id].hash.take() {
-                self.prefix_index.remove(&h);
+            } else if let Some(ni) = self.blocks[id].node {
+                self.unlink_tree(ni);
             }
         }
         let add = self.blocks_for(positions) - owned;
-        let new_blocks: Vec<usize> = (0..add).map(|_| self.alloc_block(None)).collect();
+        let new_blocks: Vec<usize> = (0..add).map(|_| self.alloc_block()).collect();
         let alloc = self.entries[seq.id].alloc.as_mut().expect("checked live");
         alloc.blocks.extend(new_blocks);
         alloc.positions = positions;
@@ -390,8 +723,10 @@ impl KvPager {
     }
 
     /// Release a sequence's pages (retirement or preemption); returns the
-    /// number of blocks actually freed — shared blocks are only unpinned,
-    /// so the count can be less than the sequence held. Stale handles —
+    /// number of blocks actually freed. With retention on this is the
+    /// eviction-demotes-to-cache path: content-addressed blocks whose
+    /// last holder lets go move to the cached tier (freed count excludes
+    /// them) and only private pages free immediately. Stale handles —
     /// double release, or reuse after the id was recycled — are rejected
     /// without touching the accounting.
     pub fn release(&mut self, seq: SeqKv) -> Result<usize> {
@@ -437,11 +772,8 @@ impl KvPager {
         Ok(self.seq_blocks(seq)? as u64 * self.block_bytes())
     }
 
-    /// Device bytes a swap must actually move: blocks only this sequence
-    /// holds. Shared blocks (refs > 1) stay resident for their other
-    /// holders when this sequence releases, and a prefix-aware
-    /// re-admission pins them again on restore — they never cross the
-    /// link.
+    /// Device bytes only this sequence holds (refs == 1) — the
+    /// tier-blind footprint probe.
     pub fn seq_private_bytes(&self, seq: SeqKv) -> Result<u64> {
         let alloc = self.alloc(seq)?;
         let private = alloc
@@ -452,11 +784,31 @@ impl KvPager {
         Ok(private as u64 * self.block_bytes())
     }
 
+    /// Device bytes a swap must actually move: blocks that would vanish
+    /// from the card when this sequence releases. Shared blocks (refs >
+    /// 1) stay resident for their other holders, and — with retention on
+    /// — sole-held *content-addressed* blocks stay too, demoted to the
+    /// cached tier, where a prefix-aware re-admission pins them again on
+    /// restore. Neither crosses the link; only private pages (decode
+    /// tails, CoW copies) do. The swap-vs-recompute pricer's
+    /// cached-survivor credit lives here.
+    pub fn seq_swap_bytes(&self, seq: SeqKv) -> Result<u64> {
+        let alloc = self.alloc(seq)?;
+        let moved = alloc
+            .blocks
+            .iter()
+            .filter(|&&id| {
+                let b = &self.blocks[id];
+                b.refs == 1 && !(self.retain && b.node.is_some())
+            })
+            .count();
+        Ok(moved as u64 * self.block_bytes())
+    }
+
     /// How many of a sequence's first `first` blocks (its prompt window)
-    /// other live sequences also hold. Those blocks survive this
-    /// sequence's release and would be prefix-cache hits on a
-    /// recompute-resume — the eviction chooser uses this to price the
-    /// recompute side with the same credit the resume path applies.
+    /// other live sequences also hold (refs > 1). Kept tier-blind; the
+    /// eviction pricer uses [`KvPager::seq_survivor_blocks`], which also
+    /// credits the cached tier.
     pub fn seq_shared_blocks(&self, seq: SeqKv, first: usize) -> Result<usize> {
         let alloc = self.alloc(seq)?;
         Ok(alloc
@@ -467,40 +819,79 @@ impl KvPager {
             .count())
     }
 
-    /// How many new sequences of `positions` the free pool could admit
-    /// right now — the admission gate of continuous batching. Counts
-    /// fresh allocations only, so it is conservative for prompts whose
-    /// prefixes are resident (those pin instead of allocating).
+    /// How many of a sequence's first `first` blocks (its prompt window)
+    /// survive this sequence's release: live-shared with another holder,
+    /// or — with retention on — content-addressed and therefore demoted
+    /// to the cached tier instead of freed. Those blocks would be
+    /// prefix-cache hits on a recompute-resume, so the eviction chooser
+    /// prices the recompute side with the same credit the resume path
+    /// applies.
+    pub fn seq_survivor_blocks(&self, seq: SeqKv, first: usize) -> Result<usize> {
+        let alloc = self.alloc(seq)?;
+        Ok(alloc
+            .blocks
+            .iter()
+            .take(first)
+            .filter(|&&id| {
+                let b = &self.blocks[id];
+                b.refs > 1 || (self.retain && b.node.is_some())
+            })
+            .count())
+    }
+
+    /// How many new sequences of `positions` the pager could admit right
+    /// now — the admission gate of continuous batching. Counts free and
+    /// reclaimable-cached pages (cached pages are admissible at the
+    /// price of a reclaim); conservative for prompts whose prefixes are
+    /// resident (those pin instead of allocating).
     pub fn admissible(&self, positions: usize) -> usize {
-        self.free_blocks() / self.blocks_for(positions)
+        self.available_blocks() / self.blocks_for(positions)
     }
 
     /// Read-only probe: how many leading blocks of `window` are resident
-    /// right now (the hit count [`KvPager::admit_prompt`] would report).
+    /// right now — one radix descent, counting the cached tier (a
+    /// warm-but-idle conversation is exactly what resurrection serves).
     /// Nothing is pinned — the prefix-aware admission gate uses this to
     /// discount a queued prompt's page bill before deciding to pop it,
     /// and a stale answer only costs a conservative decision, never
-    /// correctness (admission re-walks the index under the same lock).
+    /// correctness (admission re-descends under the same lock).
     pub fn resident_prefix_blocks(&self, window: &[i32]) -> usize {
-        window_chain_hashes(window, self.block_positions)
-            .iter()
-            .take_while(|h| self.prefix_index.contains_key(h))
-            .count()
+        self.index.descend(&window_chain_hashes(window, self.block_positions)).len()
     }
 
-    /// Every chain hash currently registered in the prefix index — the
-    /// node's published view in the fleet [`PrefixDirectory`]. A snapshot:
-    /// by the time a route lands the set may have shrunk (eviction), which
-    /// is why admission re-checks and a stale hit degrades to a miss.
+    /// Every chain hash currently linked in the prefix tree — pinned
+    /// *and* cached tiers, so affinity routing sees warm-but-idle cards —
+    /// the node's published view in the fleet [`PrefixDirectory`]. A
+    /// snapshot: by the time a route lands the set may have shrunk
+    /// (reclaim), which is why admission re-checks and a stale hit
+    /// degrades to a miss.
     pub fn index_hashes(&self) -> Vec<u64> {
-        self.prefix_index.keys().copied().collect()
+        self.index.hashes()
     }
 
+    /// Truly-free blocks — allocatable without reclaiming cache.
     pub fn free_blocks(&self) -> usize {
+        self.total_blocks - self.allocated - self.cached
+    }
+
+    /// Blocks an admission could consume: free plus reclaimable-cached.
+    pub fn available_blocks(&self) -> usize {
         self.total_blocks - self.allocated
     }
 
-    /// Distinct physical blocks in use (shared blocks counted once).
+    /// Blocks idle in the reclaimable-cache tier.
+    pub fn cached_blocks(&self) -> usize {
+        self.cached
+    }
+
+    /// The cached-bytes ledger: device bytes held by the reclaimable
+    /// tier (counted inside [`KvPager::resident_bytes`] — cache occupies
+    /// real VRAM until reclaimed).
+    pub fn cached_bytes(&self) -> u64 {
+        self.cached as u64 * self.block_bytes()
+    }
+
+    /// Distinct physical blocks with live holders (the pinned tier).
     pub fn used_blocks(&self) -> usize {
         self.allocated
     }
@@ -533,11 +924,12 @@ impl KvPager {
         self.block_positions as u64 * self.bytes_per_pos
     }
 
-    /// Bytes currently resident (weights + distinct allocated pages —
+    /// Bytes currently resident (weights + pinned pages + cached pages —
     /// sharing means this can be far below the sum of per-sequence
-    /// footprints).
+    /// footprints, while the cached tier keeps VRAM occupied until
+    /// reclaimed).
     pub fn resident_bytes(&self) -> u64 {
-        self.weights_bytes + self.allocated as u64 * self.block_bytes()
+        self.weights_bytes + (self.allocated + self.cached) as u64 * self.block_bytes()
     }
 
     /// Headroom to the VRAM budget.
@@ -560,13 +952,23 @@ impl KvPager {
     }
 
     #[cfg(test)]
+    fn block_cached(&self, id: usize) -> bool {
+        self.blocks[id].cached_at.is_some()
+    }
+
+    #[cfg(test)]
     fn seq_block_ids(&self, seq: SeqKv) -> Vec<usize> {
         self.alloc(seq).expect("live handle").blocks.clone()
     }
 
     #[cfg(test)]
     fn index_entries(&self) -> Vec<usize> {
-        self.prefix_index.values().copied().collect()
+        self.index.nodes.iter().flatten().map(|n| n.block).collect()
+    }
+
+    #[cfg(test)]
+    fn root_children_hashed(&self) -> bool {
+        matches!(self.index.root, ChildTable::Hashed(_))
     }
 }
 
@@ -610,49 +1012,96 @@ impl HostPool {
     }
 }
 
-/// Fleet-level chain-hash prefix directory: each node periodically
-/// publishes the chain hashes its [`KvPager`] holds resident, and the
-/// dispatcher scores candidate nodes by how deep a new prompt's hash
-/// chain matches — prefix-affine routing sends a request to the card
-/// already holding its prefix instead of re-prefilling it elsewhere.
+/// Fleet-level chain-hash prefix directory: each node publishes the chain
+/// hashes its [`KvPager`]'s radix tree holds resident — pinned *and*
+/// cached tiers, so a warm-but-idle card still attracts its returning
+/// users — and the dispatcher scores candidate nodes by how deep a new
+/// prompt's hash chain matches ([`crate::coordinator::router::Fleet::route_affine`]).
+///
+/// Publishing is **delta-based**: a worker sends only the chains added
+/// and retracted since its last round ([`PrefixDirectory::publish_delta`]),
+/// against an epoch stamp. The epoch bumps whenever the directory-side
+/// set is invalidated wholesale ([`PrefixDirectory::clear`] on node
+/// death); a delta against a stale epoch is refused and the worker full-
+/// publishes once ([`PrefixDirectory::publish`]) to resynchronize. This
+/// keeps the per-round cost O(churn), not O(resident blocks).
 ///
 /// The directory is deliberately a *hint*, not a lease: entries can
-/// outlive eviction between a publish and the route that read it. That
+/// outlive a reclaim between a publish and the route that read it. That
 /// is safe by construction — the worker's [`KvPager::admit_prompt`]
-/// re-walks its own live index under its own lock, so a stale hit simply
-/// admits with fewer (or zero) pinned blocks: a plain miss and a full
-/// prefill, never an error. Nothing in the data plane trusts the
+/// re-descends its own live tree under its own lock, so a stale hit
+/// simply admits with fewer (or zero) pinned blocks: a plain miss and a
+/// full prefill, never an error. Nothing in the data plane trusts the
 /// directory.
 #[derive(Debug)]
 pub struct PrefixDirectory {
-    published: std::sync::Mutex<Vec<std::collections::HashSet<u64>>>,
+    published: std::sync::Mutex<Vec<NodeSet>>,
+}
+
+#[derive(Debug, Default)]
+struct NodeSet {
+    epoch: u64,
+    set: std::collections::HashSet<u64>,
 }
 
 impl PrefixDirectory {
     pub fn new(nodes: usize) -> Self {
         PrefixDirectory {
-            published: std::sync::Mutex::new(vec![std::collections::HashSet::new(); nodes]),
+            published: std::sync::Mutex::new((0..nodes).map(|_| NodeSet::default()).collect()),
         }
     }
 
-    /// Replace `node`'s published set with a fresh snapshot
-    /// ([`KvPager::index_hashes`]). Full replacement, not a merge —
-    /// evicted chains must disappear, or the directory would only ever
-    /// grow staler.
-    pub fn publish(&self, node: usize, hashes: Vec<u64>) {
+    /// Replace `node`'s published set with a fresh full snapshot
+    /// ([`KvPager::index_hashes`]) — the resynchronization path after an
+    /// epoch mismatch, and the first publish. Returns the epoch the
+    /// snapshot was installed under, which subsequent deltas must carry.
+    pub fn publish(&self, node: usize, hashes: Vec<u64>) -> u64 {
         let mut p = self.published.lock().unwrap();
-        if let Some(set) = p.get_mut(node) {
-            set.clear();
-            set.extend(hashes);
+        match p.get_mut(node) {
+            Some(ns) => {
+                ns.set.clear();
+                ns.set.extend(hashes);
+                ns.epoch
+            }
+            None => 0,
         }
+    }
+
+    /// Apply a chain-set delta for `node`: `added` since the last round,
+    /// `retracted` since the last round. Returns false — applying
+    /// nothing — when `epoch` does not match the directory's (the set
+    /// was cleared by a death/recovery since the worker last synced);
+    /// the caller must full-publish to resynchronize.
+    pub fn publish_delta(&self, node: usize, epoch: u64, added: &[u64], retracted: &[u64]) -> bool {
+        let mut p = self.published.lock().unwrap();
+        let Some(ns) = p.get_mut(node) else {
+            return false;
+        };
+        if ns.epoch != epoch {
+            return false;
+        }
+        for h in retracted {
+            ns.set.remove(h);
+        }
+        ns.set.extend(added.iter().copied());
+        true
+    }
+
+    /// The epoch `node`'s published set currently lives under.
+    pub fn epoch(&self, node: usize) -> u64 {
+        let p = self.published.lock().unwrap();
+        p.get(node).map(|ns| ns.epoch).unwrap_or(0)
     }
 
     /// Drop a dead node's entries immediately — its VRAM is gone, so
-    /// routing toward its published chains would be pure loss.
+    /// routing toward its published chains would be pure loss. Bumps the
+    /// epoch, so any in-flight delta stream from the (possibly revived)
+    /// worker is refused until it full-publishes.
     pub fn clear(&self, node: usize) {
         let mut p = self.published.lock().unwrap();
-        if let Some(set) = p.get_mut(node) {
-            set.clear();
+        if let Some(ns) = p.get_mut(node) {
+            ns.set.clear();
+            ns.epoch += 1;
         }
     }
 
@@ -663,13 +1112,18 @@ impl PrefixDirectory {
     pub fn match_depths(&self, hashes: &[u64]) -> Vec<usize> {
         let p = self.published.lock().unwrap();
         p.iter()
-            .map(|set| hashes.iter().take_while(|h| set.contains(h)).count())
+            .map(|ns| hashes.iter().take_while(|h| ns.set.contains(h)).count())
             .collect()
     }
 
     /// Nodes the directory tracks.
     pub fn nodes(&self) -> usize {
         self.published.lock().unwrap().len()
+    }
+
+    #[cfg(test)]
+    fn snapshot(&self, node: usize) -> std::collections::HashSet<u64> {
+        self.published.lock().unwrap()[node].set.clone()
     }
 }
 
@@ -701,8 +1155,11 @@ mod tests {
         // shrinking requests are no-ops
         assert!(p.grow(a, 2).unwrap());
         assert_eq!(p.seq_positions(a).unwrap(), 9);
+        // private (content-less) blocks free for real — there is nothing
+        // to cache
         assert_eq!(p.release(a).unwrap(), 3);
         assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.cached_blocks(), 0);
         assert_eq!(p.active_seqs(), 0);
     }
 
@@ -810,6 +1267,25 @@ mod tests {
     }
 
     #[test]
+    fn lose_blocks_reclaims_cache_to_cover_the_loss() {
+        let mut p = pager();
+        p.limit_blocks(4).unwrap();
+        let (a, _) = p.admit_prompt(&window(0, 8, 1)).unwrap(); // 2 blocks
+        p.release(a).unwrap();
+        assert_eq!(p.cached_blocks(), 2);
+        assert_eq!(p.free_blocks(), 2);
+        // losing 3 pages must dip into the cached tier: the chain is
+        // reclaimed (tree-unlinked) to cover the loss
+        assert_eq!(p.lose_blocks(3), 3);
+        assert_eq!(p.capacity_blocks(), 1);
+        assert_eq!(p.cached_blocks(), 0, "cache reclaimed to cover the loss");
+        assert_eq!(p.free_blocks(), 1);
+        assert!(p.index_entries().is_empty());
+        let b = p.admit(4).unwrap();
+        p.release(b).unwrap();
+    }
+
+    #[test]
     fn paged_admits_strictly_more_than_fixed_slots_at_long_context() {
         // The §4.1 accounting on a CMP 170HX: Qwen2.5-1.5B KV bytes/pos
         // (2 · 28 layers · 2 kv_heads · 128 head_dim · f16 = 28672 B) on
@@ -857,13 +1333,23 @@ mod tests {
         assert_eq!(hits_b, 2, "the second identical prompt pins both blocks");
         assert_eq!(p.used_blocks(), 2, "no new physical blocks");
         assert_eq!(p.seq_block_ids(a), p.seq_block_ids(b));
-        assert_eq!(p.prefix_stats(), PrefixStats { hit_blocks: 2, miss_blocks: 2, cow_copies: 0 });
-        // releases unpin; the last holder frees
+        assert_eq!(
+            p.prefix_stats(),
+            PrefixStats { hit_blocks: 2, miss_blocks: 2, ..Default::default() }
+        );
+        // releases unpin; the last holder demotes to the cached tier
+        // instead of freeing — the conversation may come back
         assert_eq!(p.release(a).unwrap(), 0, "shared blocks survive the first release");
         assert_eq!(p.used_blocks(), 2);
-        assert_eq!(p.release(b).unwrap(), 2);
+        assert_eq!(p.release(b).unwrap(), 0, "content blocks demote, not free");
         assert_eq!(p.used_blocks(), 0);
-        assert!(p.index_entries().is_empty(), "freed blocks leave the index");
+        assert_eq!(p.cached_blocks(), 2);
+        assert_eq!(p.index_entries().len(), 2, "cached blocks stay matchable");
+        // the ablation arm frees for real
+        p.set_retention(false);
+        assert_eq!(p.cached_blocks(), 0);
+        assert_eq!(p.free_blocks(), p.capacity_blocks());
+        assert!(p.index_entries().is_empty(), "reclaimed blocks leave the tree");
     }
 
     #[test]
@@ -883,14 +1369,26 @@ mod tests {
         // (and both of its first 2, the "prompt window") are shared
         assert_eq!(p.seq_shared_blocks(a, 3).unwrap(), 2);
         assert_eq!(p.seq_shared_blocks(a, 1).unwrap(), 1);
-        // …so a swap of `a` moves only its private tail block
+        // …and with retention on, even a's private tail is a survivor
+        // (it demotes to cache on release), so a swap moves nothing
+        assert_eq!(p.seq_survivor_blocks(a, 3).unwrap(), 3);
+        assert_eq!(p.seq_swap_bytes(a).unwrap(), 0);
         assert_eq!(p.seq_private_bytes(a).unwrap(), 4 << 10);
         assert_eq!(p.seq_bytes(a).unwrap(), 3 * (4 << 10));
         p.release(b).unwrap();
+        assert_eq!(p.cached_blocks(), 1, "b's private tail went to cache");
         assert_eq!(p.seq_shared_blocks(a, 3).unwrap(), 0, "sole holder shares nothing");
         assert_eq!(p.seq_private_bytes(a).unwrap(), p.seq_bytes(a).unwrap());
         p.release(a).unwrap();
         assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.cached_blocks(), 4);
+        // the ablation arm: nothing survives a release, swaps move
+        // every sole-held page
+        p.set_retention(false);
+        let (c, _) = p.admit_prompt(&window(8, 12, 3)).unwrap();
+        assert_eq!(p.seq_survivor_blocks(c, 3).unwrap(), 0);
+        assert_eq!(p.seq_swap_bytes(c).unwrap(), 3 * (4 << 10));
+        p.release(c).unwrap();
     }
 
     #[test]
@@ -949,6 +1447,184 @@ mod tests {
         p.release(a).unwrap();
         p.release(b).unwrap();
         assert_eq!(p.used_blocks(), 0);
+    }
+
+    #[test]
+    fn cow_can_reclaim_cache_for_its_replacement_block() {
+        // Same shape as above, but the last free page is held by the
+        // cached tier instead of a hog: the CoW must reclaim it rather
+        // than refuse.
+        let mut p = pager();
+        p.limit_blocks(3).unwrap();
+        let w = window(6, 6, 0);
+        let (a, _) = p.admit_prompt(&w).unwrap();
+        let (b, _) = p.admit_prompt(&w).unwrap();
+        let (idle, _) = p.admit_prompt(&window(0, 4, 9)).unwrap();
+        p.release(idle).unwrap(); // demotes: 1 cached, 0 free
+        assert_eq!(p.free_blocks(), 0);
+        assert_eq!(p.cached_blocks(), 1);
+        assert!(p.grow(a, 7).unwrap(), "cached pages are reclaimable for CoW");
+        assert_eq!(p.prefix_stats().cow_copies, 1);
+        assert_eq!(p.prefix_stats().reclaimed_blocks, 1);
+        assert_eq!(p.cached_blocks(), 0);
+        p.release(a).unwrap();
+        p.release(b).unwrap();
+    }
+
+    #[test]
+    fn demoted_blocks_resurrect_for_returning_users() {
+        let mut p = pager();
+        let w = window(0, 8, 7); // one user's distinct 2-block history
+        let (a, h0) = p.admit_prompt(&w).unwrap();
+        assert_eq!(h0, 0);
+        let ids = p.seq_block_ids(a);
+        assert_eq!(p.release(a).unwrap(), 0, "content blocks demote instead of freeing");
+        assert_eq!(p.used_blocks(), 0);
+        assert_eq!(p.cached_blocks(), 2);
+        assert_eq!(p.cached_bytes(), 2 * (4 << 10));
+        assert_eq!(p.free_blocks(), 1792 - 2);
+        assert_eq!(p.available_blocks(), 1792, "cached pages stay admissible");
+        assert_eq!(p.resident_prefix_blocks(&w), 2, "warm but idle");
+        // the returning user re-pins its entire history
+        let (b, hits) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits, 2);
+        assert_eq!(p.seq_block_ids(b), ids, "the same physical pages come back");
+        assert_eq!(p.cached_blocks(), 0);
+        assert_eq!(p.used_blocks(), 2);
+        let s = p.prefix_stats();
+        assert_eq!(s.resurrected_blocks, 2, "hits came from the cached tier");
+        assert_eq!(s.hit_blocks, 2);
+        assert_eq!(s.miss_blocks, 2);
+        // the --no-kv-cache ablation frees at refcount zero: no comeback
+        p.set_retention(false);
+        assert_eq!(p.release(b).unwrap(), 2);
+        assert_eq!(p.resident_prefix_blocks(&w), 0);
+        let (c, hits_c) = p.admit_prompt(&w).unwrap();
+        assert_eq!(hits_c, 0, "the baseline re-prefills everything");
+        p.release(c).unwrap();
+    }
+
+    #[test]
+    fn reclaim_is_lru_and_never_touches_pinned() {
+        let mut p = pager();
+        p.limit_blocks(6).unwrap();
+        // two idle conversations demoted in age order: wa older than wb
+        let wa = window(0, 8, 1);
+        let wb = window(0, 8, 2);
+        let (a, _) = p.admit_prompt(&wa).unwrap();
+        let (b, _) = p.admit_prompt(&wb).unwrap();
+        p.release(a).unwrap();
+        p.release(b).unwrap();
+        assert_eq!(p.cached_blocks(), 4);
+        // a live sequence pins the remaining free pages
+        let live = p.admit(8).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        // pressure for 2 more pages reclaims the LRU-oldest chain only
+        let hog = p.admit(8).unwrap();
+        assert_eq!(p.prefix_stats().reclaimed_blocks, 2);
+        assert_eq!(p.resident_prefix_blocks(&wa), 0, "oldest chain reclaimed");
+        assert_eq!(p.resident_prefix_blocks(&wb), 2, "newer chain survives");
+        assert_eq!(p.seq_positions(live).unwrap(), 8, "pinned pages untouched");
+        assert_eq!(p.used_blocks(), 4);
+        assert_eq!(p.cached_blocks(), 2);
+        // more pressure takes the rest of the cache — never a pinned page
+        let hog2 = p.admit(8).unwrap();
+        assert_eq!(p.cached_blocks(), 0);
+        assert_eq!(p.resident_prefix_blocks(&wb), 0);
+        assert_eq!(p.used_blocks(), 6);
+        assert!(p.admit(1).is_none(), "only pinned pages remain");
+        p.release(live).unwrap();
+        p.release(hog).unwrap();
+        p.release(hog2).unwrap();
+    }
+
+    #[test]
+    fn lru_entries_go_stale_on_resurrection() {
+        let mut p = pager();
+        p.limit_blocks(4).unwrap();
+        let w1 = window(0, 4, 1); // one block each
+        let w2 = window(0, 4, 2);
+        let (a, _) = p.admit_prompt(&w1).unwrap();
+        p.release(a).unwrap(); // w1 demoted first…
+        let (b, _) = p.admit_prompt(&w2).unwrap();
+        p.release(b).unwrap(); // …then w2
+        let (a2, hits) = p.admit_prompt(&w1).unwrap();
+        assert_eq!(hits, 1);
+        p.release(a2).unwrap(); // w1 re-demoted: now *newer* than w2
+        // pressure for 3 pages: the stale head entry for w1 must be
+        // skipped and w2 — the true LRU — reclaimed instead
+        let hog = p.admit(12).unwrap();
+        assert_eq!(p.resident_prefix_blocks(&w2), 0, "w2 was truly oldest");
+        assert_eq!(p.resident_prefix_blocks(&w1), 1, "the resurrected chain is recent");
+        p.release(hog).unwrap();
+    }
+
+    #[test]
+    fn adaptive_root_fanout_spills_to_hash_and_shrinks_back() {
+        let mut p = pager();
+        // 9 distinct one-block conversations: the root's child table
+        // must spill past the inline node
+        for salt in 0..9 {
+            let (h, _) = p.admit_prompt(&window(0, 4, 100 + salt)).unwrap();
+            p.release(h).unwrap();
+        }
+        assert!(p.root_children_hashed(), "fanout 9 spills the inline table");
+        assert_eq!(p.cached_blocks(), 9);
+        // draining the cache shrinks the table back below the spill point
+        p.set_retention(false);
+        assert_eq!(p.cached_blocks(), 0);
+        assert!(!p.root_children_hashed(), "low fanout shrinks back to inline");
+        assert!(p.index_entries().is_empty());
+    }
+
+    #[test]
+    fn returning_user_workload_hits_radix_cache_acceptance() {
+        // The serve_radix_cache acceptance point, pinned analytically
+        // like PR 5's: 8 distinct users share a 2-block system prompt,
+        // chat once, go idle, and return for a second turn. With
+        // retention on, every returning turn re-pins its entire turn-1
+        // history from the cached tier; the --no-kv-cache ablation
+        // (refcount-zero-frees) re-prefills everything but the
+        // still-live-shared system prompt. ≥1.5× fleet prefix hits and
+        // strictly less prefill work (the goodput proxy at fixed
+        // demand) are the acceptance bars.
+        let users = 8;
+        let (shared, len) = (8usize, 32usize); // 2 system + 6 private blocks
+        let run = |retain: bool| -> PrefixStats {
+            let mut p = pager();
+            p.set_retention(retain);
+            for _turn in 0..2 {
+                let held: Vec<SeqKv> = (0..users)
+                    .map(|u| p.admit_prompt(&window(shared, len, u as i32)).unwrap().0)
+                    .collect();
+                for h in held {
+                    p.release(h).unwrap();
+                }
+            }
+            p.prefix_stats()
+        };
+        let cached = run(true);
+        let baseline = run(false);
+        // baseline: each turn hits only the live-shared system prompt
+        // (7 followers × 2 blocks); the cached arm's second turn hits
+        // all 8 blocks for all 8 users, 50 of them resurrections (the
+        // first returner resurrects the system prompt too).
+        assert_eq!(baseline.hit_blocks, 28);
+        assert_eq!(baseline.resurrected_blocks, 0);
+        assert_eq!(baseline.miss_blocks, 100);
+        assert_eq!(cached.hit_blocks, 78);
+        assert_eq!(cached.resurrected_blocks, 50);
+        assert_eq!(cached.miss_blocks, 50);
+        assert!(
+            cached.hit_blocks as f64 >= 1.5 * baseline.hit_blocks as f64,
+            "radix cache {} vs baseline {} prefix hits",
+            cached.hit_blocks,
+            baseline.hit_blocks
+        );
+        assert!(
+            cached.miss_blocks < baseline.miss_blocks,
+            "strictly less prefill work = strictly better goodput at fixed demand"
+        );
     }
 
     #[test]
@@ -1075,7 +1751,8 @@ mod tests {
         // Port of the fixed-slot allocator's never-leaks property to
         // random admit/grow/preempt/resume interleavings: live
         // allocations plus the free pool always partition the block
-        // budget, and resident bytes never exceed VRAM.
+        // budget, and resident bytes never exceed VRAM. (Private blocks
+        // only — the cached tier stays empty on this path.)
         forall(0x9A6ED, 150, |rng: &mut Rng| {
             let bp = rng.range(1, 8) as usize;
             let total = rng.range(2, 40) as usize;
@@ -1144,6 +1821,7 @@ mod tests {
                 // invariants after every step
                 let expect: usize = held.iter().map(|&(_, pos)| pos.max(1).div_ceil(bp)).sum();
                 assert_eq!(p.used_blocks(), expect);
+                assert_eq!(p.cached_blocks(), 0, "private pages never enter the cache");
                 assert_eq!(p.used_blocks() + p.free_blocks(), p.capacity_blocks());
                 assert!(p.resident_bytes() <= vram);
                 assert_eq!(p.active_seqs(), held.len());
@@ -1157,14 +1835,15 @@ mod tests {
     }
 
     #[test]
-    fn prop_shared_prefix_refcounts_and_index_never_dangle() {
-        // The ISSUE 5 release-path property: random interleavings of
-        // shared-prefix admit / CoW grow / release against a shadow model
-        // of per-sequence block tables. After every step: each block's
-        // refcount equals the number of live holders (so it can never
-        // underflow), the prefix index only points at blocks with live
-        // holders (never at a freed block), distinct-held-blocks equals
-        // the pager's used count, and used + free partitions the budget.
+    fn prop_shared_prefix_refcounts_and_tree_never_dangle() {
+        // The release-path property, extended to three tiers: random
+        // interleavings of shared-prefix admit / CoW grow / release
+        // against a shadow model of per-sequence block tables. After
+        // every step: each block's refcount equals the number of live
+        // holders (so it can never underflow), every block the tree
+        // points at is pinned or cached (never freed), pinned + cached +
+        // free partitions the budget, and admission bills exactly its
+        // fresh pages plus resurrections.
         forall(0xC0FFEE, 120, |rng: &mut Rng| {
             let bp = rng.range(1, 6) as usize;
             let total = rng.range(4, 48) as usize;
@@ -1188,15 +1867,23 @@ mod tests {
                         let (shared, len) = *rng.pick(&families);
                         let salt = rng.range(0, 3) as i32;
                         let w = window(shared, len, salt);
-                        let free_before = p.free_blocks();
+                        let avail_before = p.available_blocks();
+                        let stats_before = p.prefix_stats();
                         if let Some((h, hits)) = p.admit_prompt(&w) {
                             let ids = p.seq_block_ids(h);
                             assert_eq!(ids.len(), len.max(1).div_ceil(bp));
                             assert!(hits <= ids.len());
-                            assert_eq!(free_before - p.free_blocks(), ids.len() - hits);
+                            let resurrected = (p.prefix_stats().resurrected_blocks
+                                - stats_before.resurrected_blocks)
+                                as usize;
+                            assert_eq!(
+                                avail_before - p.available_blocks(),
+                                ids.len() - hits + resurrected,
+                                "admission must bill fresh pages plus resurrections"
+                            );
                             held.push((h, ids, len));
                         } else {
-                            assert!(p.free_blocks() < len.max(1).div_ceil(bp));
+                            assert!(p.available_blocks() < len.max(1).div_ceil(bp));
                         }
                     }
                     2 => {
@@ -1212,7 +1899,7 @@ mod tests {
                         }
                     }
                     _ => {
-                        // release a random holder
+                        // release a random holder (demotes content blocks)
                         if let Some(i) =
                             (!held.is_empty()).then(|| rng.below(held.len() as u64) as usize)
                         {
@@ -1233,12 +1920,17 @@ mod tests {
                 for (&id, &expect) in &refs {
                     assert_eq!(p.block_refs(id), expect, "refcount drifted on block {id}");
                 }
-                assert_eq!(p.used_blocks(), refs.len(), "distinct held blocks == used");
-                assert_eq!(p.used_blocks() + p.free_blocks(), p.capacity_blocks());
+                assert_eq!(p.used_blocks(), refs.len(), "distinct held blocks == pinned");
+                assert_eq!(
+                    p.used_blocks() + p.cached_blocks() + p.free_blocks(),
+                    p.capacity_blocks(),
+                    "pinned + cached + free must partition the budget"
+                );
+                assert_eq!(p.cached_bytes(), p.cached_blocks() as u64 * (bp as u64 * 64));
                 for id in p.index_entries() {
                     assert!(
-                        refs.contains_key(&id),
-                        "prefix index points at freed block {id}"
+                        refs.contains_key(&id) || p.block_cached(id),
+                        "tree points at freed block {id}"
                     );
                 }
             }
@@ -1246,7 +1938,89 @@ mod tests {
                 p.release(h).unwrap();
             }
             assert_eq!(p.used_blocks(), 0);
+            // every surviving tree entry is cached; dropping retention
+            // reclaims them all and returns the full budget
+            p.set_retention(false);
+            assert_eq!(p.cached_blocks(), 0);
             assert!(p.index_entries().is_empty());
+            assert_eq!(p.free_blocks(), p.capacity_blocks());
+        });
+    }
+
+    #[test]
+    fn prop_radix_descend_matches_flat_map_for_live_blocks() {
+        // The tentpole shadow model: for live blocks the tree must be
+        // exactly the old flat chain-hash map. With retention off the
+        // new pager IS the old one — one descent must equal
+        // chunk-by-chunk probing of a shadow HashMap, and the registered
+        // hash set must match it key-for-key. With retention on the
+        // tree may only know *more* (the cached tier); it must still
+        // contain every live chain.
+        forall(0x12AD1C, 150, |rng: &mut Rng| {
+            let bp = rng.range(1, 6) as usize;
+            let total = rng.range(8, 48) as usize;
+            let weights = 1u64 << 10;
+            let vram = weights + total as u64 * (bp as u64 * 64);
+            let mut p = KvPager::new(bp, 64, vram, weights).unwrap();
+            let retain = rng.below(2) == 0;
+            p.set_retention(retain);
+            let families: Vec<(usize, usize)> = (0..3)
+                .map(|_| {
+                    let len = rng.range(1, 4 * bp as u64) as usize;
+                    (rng.range(0, len as u64 + 1) as usize, len)
+                })
+                .collect();
+            // the shadow: chain hash → live holders, exactly the old index
+            let mut flat: std::collections::HashMap<u64, u32> = std::collections::HashMap::new();
+            let mut held: Vec<(SeqKv, Vec<u64>)> = Vec::new();
+            for _ in 0..80 {
+                if rng.below(3) < 2 {
+                    let (shared, len) = *rng.pick(&families);
+                    let w = window(shared, len, rng.range(0, 3) as i32);
+                    let hashes = window_chain_hashes(&w, bp);
+                    let flat_depth = hashes.iter().take_while(|h| flat.contains_key(h)).count();
+                    let tree_depth = p.resident_prefix_blocks(&w);
+                    if retain {
+                        assert!(tree_depth >= flat_depth, "tree lost a live chain");
+                    } else {
+                        assert_eq!(tree_depth, flat_depth, "descent != flat-map probing");
+                    }
+                    if let Some((h, hits)) = p.admit_prompt(&w) {
+                        assert_eq!(hits, tree_depth, "admission must pin the probed depth");
+                        for hash in &hashes {
+                            *flat.entry(*hash).or_default() += 1;
+                        }
+                        held.push((h, hashes));
+                    }
+                } else if let Some(i) =
+                    (!held.is_empty()).then(|| rng.below(held.len() as u64) as usize)
+                {
+                    let (h, hashes) = held.swap_remove(i);
+                    p.release(h).unwrap();
+                    for hash in hashes {
+                        let holders = flat.get_mut(&hash).expect("released chain was live");
+                        *holders -= 1;
+                        if *holders == 0 {
+                            flat.remove(&hash);
+                        }
+                    }
+                }
+                let tree: std::collections::HashSet<u64> = p.index_hashes().into_iter().collect();
+                for hash in flat.keys() {
+                    assert!(tree.contains(hash), "live chain hash missing from the tree");
+                }
+                if !retain {
+                    assert_eq!(tree.len(), flat.len(), "retention off must free at refs zero");
+                }
+                assert_eq!(
+                    p.used_blocks() + p.cached_blocks() + p.free_blocks(),
+                    p.capacity_blocks()
+                );
+            }
+            for (h, _) in held {
+                p.release(h).unwrap();
+            }
+            assert_eq!(p.used_blocks(), 0);
         });
     }
 
@@ -1272,22 +2046,62 @@ mod tests {
         // and the probe agrees with what admission would report
         assert_eq!(p0.resident_prefix_blocks(&w), 2);
         assert_eq!(p1.resident_prefix_blocks(&w), 0);
+        // a released conversation still attracts its returning user:
+        // the cached tier stays published (warm-but-idle cards win)
+        p0.release(a).unwrap();
+        dir.publish(0, p0.index_hashes());
+        assert_eq!(dir.match_depths(&exact), vec![3, 0], "cached chains stay routable");
         // clearing a dead node zeroes its depths without touching others
         dir.clear(0);
         assert_eq!(dir.match_depths(&exact), vec![0, 0]);
-        p0.release(a).unwrap();
         p1.release(b).unwrap();
+    }
+
+    #[test]
+    fn delta_publishes_reconstruct_the_full_directory_exactly() {
+        // 8b: a worker publishing only per-round adds/retracts must land
+        // the directory exactly where full snapshots would.
+        let full = PrefixDirectory::new(1);
+        let delta = PrefixDirectory::new(1);
+        let epoch = delta.publish(0, vec![]);
+        let mut resident: Vec<u64> = Vec::new();
+        for round in 0u64..50 {
+            // deterministic churn: two chains admitted per round, the
+            // oldest reclaimed from round 5 on
+            let added = vec![round * 2, round * 2 + 1];
+            let retracted: Vec<u64> =
+                if round >= 5 { vec![resident.remove(0), resident.remove(0)] } else { vec![] };
+            resident.extend(&added);
+            full.publish(0, resident.clone());
+            assert!(delta.publish_delta(0, epoch, &added, &retracted));
+            assert_eq!(delta.snapshot(0), full.snapshot(0), "delta stream drifted");
+        }
+        // a node death bumps the epoch: in-flight deltas are refused and
+        // apply nothing until the worker resynchronizes with one full
+        // publish
+        delta.clear(0);
+        assert!(!delta.publish_delta(0, epoch, &[1], &[]), "stale epoch refused");
+        assert!(delta.snapshot(0).is_empty(), "refused delta applied nothing");
+        let epoch2 = delta.publish(0, resident.clone());
+        assert_ne!(epoch, epoch2, "clear must bump the epoch");
+        assert_eq!(delta.epoch(0), epoch2);
+        assert!(delta.publish_delta(0, epoch2, &[999], &[]));
+        assert!(delta.snapshot(0).contains(&999));
+        // out-of-range nodes refuse deltas instead of panicking
+        assert!(!delta.publish_delta(9, epoch2, &[], &[]));
     }
 
     #[test]
     fn stale_directory_entry_degrades_to_a_plain_miss() {
         // The dispatcher/directory race: node 0 publishes its resident
-        // chains, then evicts them (release drops the last refs) before
-        // the affinity-routed request lands. The route was taken on a
-        // stale entry — admission must degrade to a plain miss
-        // (re-prefill), never error, and the directory heals on the next
-        // publish.
+        // chains, then loses them (here: the --no-kv-cache ablation
+        // frees at refcount zero; with retention on the same race needs
+        // a reclaim) before the affinity-routed request lands. The route
+        // was taken on a stale entry — admission must degrade to a plain
+        // miss (re-prefill), never error, and the directory heals on the
+        // next publish.
         let mut p = pager();
+        p.set_retention(false);
         let w = window(8, 8, 0);
         let (a, _) = p.admit_prompt(&w).unwrap();
         let dir = PrefixDirectory::new(1);
@@ -1316,17 +2130,19 @@ mod tests {
 
     #[test]
     fn prop_two_node_fabric_directory_and_pools_never_dangle() {
-        // The fabric-wide extension of the shared-prefix property: two
-        // pagers (cards), one fleet PrefixDirectory, one shared HostPool.
-        // Random interleavings of affinity-routed admit / CoW grow /
-        // swap-out / cross-node migration (swap-in on the *other* card) /
-        // release, with publishes interleaved at random (so the directory
+        // The fabric-wide extension of the shared-prefix property, now
+        // with the cached tier in play: two pagers (cards), one fleet
+        // PrefixDirectory, one shared HostPool. Random interleavings of
+        // affinity-routed admit / CoW grow / swap-out / cross-node
+        // migration (swap-in on the *other* card) / release / cache
+        // flush, with publishes interleaved at random (so the directory
         // is routinely stale). Invariants after every step: each pager's
-        // index never points at a freed block, directory depths never
-        // exceed the published snapshot's truth at publish time (checked
-        // by re-publishing and comparing), the shared host pool's bytes
-        // equal the outstanding parked reservations, and admitting via a
-        // stale directory route never errors.
+        // tree never points at a freed block, admission pins exactly the
+        // probed depth (a reclaimed chain never resurrects), the
+        // cached-bytes ledger never double-counts, the three tiers
+        // partition each budget, the shared host pool's bytes equal the
+        // outstanding parked reservations, and admitting via a stale
+        // directory route never errors.
         forall(0xFAB51C, 100, |rng: &mut Rng| {
             let bp = rng.range(1, 6) as usize;
             let total = rng.range(6, 40) as usize;
@@ -1349,7 +2165,7 @@ mod tests {
                 })
                 .collect();
             for _ in 0..80 {
-                match rng.below(6) {
+                match rng.below(7) {
                     0 | 1 => {
                         // affinity-routed admit: pick the node with the
                         // deeper published match (possibly stale)
@@ -1359,9 +2175,12 @@ mod tests {
                         let w = window(shared, len, salt);
                         let depths = dir.match_depths(&window_chain_hashes(&w, bp));
                         let node = if depths[1] > depths[0] { 1 } else { 0 };
+                        let probed = pagers[node].resident_prefix_blocks(&w);
                         if let Some((h, hits)) = pagers[node].admit_prompt(&w) {
-                            // stale routes degrade: hits bounded by what
-                            // is actually resident, never an error
+                            // stale routes degrade: hits are exactly what
+                            // the live tree held — a reclaimed chain can
+                            // never resurrect, and it is never an error
+                            assert_eq!(hits, probed, "node {node} resurrected a reclaimed chain");
                             assert!(hits <= len.max(1).div_ceil(bp));
                             let ids = pagers[node].seq_block_ids(h);
                             live.push((node, h, ids, len));
@@ -1381,13 +2200,14 @@ mod tests {
                         }
                     }
                     3 => {
-                        // swap-out: park a live sequence's private bytes
-                        // in the shared host pool
+                        // swap-out: park a live sequence in the shared
+                        // host pool, moving only the bytes the cached
+                        // tier and live sharers cannot keep resident
                         if let Some(i) =
                             (!live.is_empty()).then(|| rng.below(live.len() as u64) as usize)
                         {
                             let (node, h, len) = (live[i].0, live[i].1, live[i].3);
-                            let bytes = pagers[node].seq_private_bytes(h).unwrap();
+                            let bytes = pagers[node].seq_swap_bytes(h).unwrap();
                             if host.try_reserve(bytes) {
                                 live.swap_remove(i);
                                 pagers[node].release(h).unwrap();
@@ -1416,7 +2236,7 @@ mod tests {
                             }
                         }
                     }
-                    _ => {
+                    5 => {
                         // release, or republish a random node's snapshot
                         if rng.below(2) == 0 {
                             let node = rng.below(2) as usize;
@@ -1428,9 +2248,19 @@ mod tests {
                             pagers[node].release(h).unwrap();
                         }
                     }
+                    _ => {
+                        // reclaim-pressure flush: retention off drains the
+                        // whole cached tier (every reclaim path at once),
+                        // then back on — reclaimed chains must be gone
+                        // from descent and never come back
+                        let node = rng.below(2) as usize;
+                        pagers[node].set_retention(false);
+                        assert_eq!(pagers[node].cached_blocks(), 0);
+                        pagers[node].set_retention(true);
+                    }
                 }
-                // invariants: per-node index integrity + shared-pool
-                // byte conservation
+                // invariants: per-node tier partition + tree integrity +
+                // shared-pool byte conservation
                 for (node, pager) in pagers.iter().enumerate() {
                     let mut refs: std::collections::HashMap<usize, u32> =
                         std::collections::HashMap::new();
@@ -1445,10 +2275,20 @@ mod tests {
                         assert_eq!(pager.block_refs(id), expect, "node {node} refcount drift");
                     }
                     assert_eq!(pager.used_blocks(), refs.len());
+                    assert_eq!(
+                        pager.used_blocks() + pager.cached_blocks() + pager.free_blocks(),
+                        pager.capacity_blocks(),
+                        "node {node} tiers must partition the budget"
+                    );
+                    assert_eq!(
+                        pager.cached_bytes(),
+                        pager.cached_blocks() as u64 * (bp as u64 * 64),
+                        "node {node} cached-bytes ledger double-counted"
+                    );
                     for id in pager.index_entries() {
                         assert!(
-                            refs.contains_key(&id),
-                            "node {node} index points at freed block {id}"
+                            refs.contains_key(&id) || pager.block_cached(id),
+                            "node {node} tree points at freed block {id}"
                         );
                     }
                 }
@@ -1463,7 +2303,12 @@ mod tests {
                 host.release(bytes);
             }
             assert_eq!(host.used_bytes(), 0);
-            assert_eq!(pagers[0].used_blocks() + pagers[1].used_blocks(), 0);
+            for pager in pagers.iter_mut() {
+                assert_eq!(pager.used_blocks(), 0);
+                pager.set_retention(false);
+                assert_eq!(pager.cached_blocks(), 0);
+                assert_eq!(pager.free_blocks(), pager.capacity_blocks());
+            }
         });
     }
 }

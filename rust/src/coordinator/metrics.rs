@@ -53,10 +53,25 @@ pub struct Metrics {
     pub prefix_misses: u64,
     /// Shared KV blocks privatized on first write (copy-on-write).
     pub cow_copies: u64,
+    /// Prefix hits served from the **reclaimable cache** — refcount-zero
+    /// blocks the radix tree retained past their last holder and a
+    /// returning prompt re-pinned (a subset of `prefix_hits`; the rest
+    /// were live-shared with a concurrent holder).
+    pub resurrected_blocks: u64,
+    /// Cached (refcount-zero) blocks reclaimed under allocation pressure
+    /// — tree-unlinked and freed, their history gone.
+    pub reclaimed_blocks: u64,
+    /// Bytes currently held by the reclaimable cache tier — a gauge per
+    /// node (latest pager snapshot), a fleet sum under [`Metrics::merge`].
+    pub cached_bytes: u64,
     /// Simulated prefill seconds *not* spent because the positions were
     /// already resident in shared prefix blocks — the saved side of the
     /// ledger `wasted_prefill_s` is the wasted side of.
     pub saved_prefill_s: f64,
+    /// Share of `saved_prefill_s` earned by **resurrected** cached blocks
+    /// (no live sharer existed; the tree alone kept the KV). The
+    /// remainder was saved by live sharing, the PR 5 mechanism.
+    pub saved_prefill_resurrected_s: f64,
     /// Preemption victims whose KV pages were parked in host RAM instead
     /// of dropped (the PCIe-priced swap path).
     pub swap_outs: u64,
@@ -82,6 +97,10 @@ pub struct Metrics {
     /// that swapped them out (live migration over the fleet KV fabric) —
     /// includes in-flight steals of parked work.
     pub migrations: u64,
+    /// Foreign-claim attempts the migration hysteresis gate deferred: a
+    /// parked sequence existed but was too young or its owner idle
+    /// enough to resume it next round — the thrash a grab would cause.
+    pub migration_deferrals: u64,
     /// Requests routed to a node because it held part of their prompt's
     /// prefix chain (the fleet directory reported nonzero matched depth).
     pub affine_routes: u64,
@@ -241,7 +260,11 @@ impl Metrics {
         self.prefix_hits += other.prefix_hits;
         self.prefix_misses += other.prefix_misses;
         self.cow_copies += other.cow_copies;
+        self.resurrected_blocks += other.resurrected_blocks;
+        self.reclaimed_blocks += other.reclaimed_blocks;
+        self.cached_bytes += other.cached_bytes;
         self.saved_prefill_s += other.saved_prefill_s;
+        self.saved_prefill_resurrected_s += other.saved_prefill_resurrected_s;
         self.swap_outs += other.swap_outs;
         self.swap_ins += other.swap_ins;
         self.swap_bytes += other.swap_bytes;
@@ -250,6 +273,7 @@ impl Metrics {
         self.swap_overlapped_s += other.swap_overlapped_s;
         self.swap_stalled_s += other.swap_stalled_s;
         self.migrations += other.migrations;
+        self.migration_deferrals += other.migration_deferrals;
         self.affine_routes += other.affine_routes;
         self.rescued_seqs += other.rescued_seqs;
         self.lost_seqs += other.lost_seqs;
@@ -282,6 +306,15 @@ impl Metrics {
         self.prefix_hits = s.hit_blocks;
         self.prefix_misses = s.miss_blocks;
         self.cow_copies = s.cow_copies;
+        self.resurrected_blocks = s.resurrected_blocks;
+        self.reclaimed_blocks = s.reclaimed_blocks;
+    }
+
+    /// Overwrite the cached-tier byte gauge from the pager's current
+    /// ledger (same assign-not-accumulate convention as
+    /// [`Metrics::sync_prefix`]; `merge` sums gauges into a fleet total).
+    pub fn sync_cache(&mut self, cached_bytes: u64) {
+        self.cached_bytes = cached_bytes;
     }
 
     /// Prefix-cache block hit rate over all prompt blocks admitted.
@@ -300,8 +333,10 @@ impl Metrics {
         format!(
             "requests={} errors={} tokens={} mean_batch={:.2}\n\
              prefix: hits={} misses={} ({:.0}%) cow={} saved_sim={:.4}s affine_routes={}\n\
+             cache: resurrected={} reclaimed={} cached={:.1} MiB \
+             saved_resurrected_sim={:.4}s\n\
              swap: out={} in={} {:.1} MiB link_s={:.4} saved_sim={:.4}s\n\
-             fabric: migrations={} overlap hidden={:.4}s stalled={:.4}s\n\
+             fabric: migrations={} deferred={} overlap hidden={:.4}s stalled={:.4}s\n\
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              faults: rescued={} lost={} retries={} deadline_miss={} degraded={} \
              swapfail={} kept={:.4}s replayed={:.4}s mttr={}\n\
@@ -318,12 +353,17 @@ impl Metrics {
             self.cow_copies,
             self.saved_prefill_s,
             self.affine_routes,
+            self.resurrected_blocks,
+            self.reclaimed_blocks,
+            self.cached_bytes as f64 / (1u64 << 20) as f64,
+            self.saved_prefill_resurrected_s,
             self.swap_outs,
             self.swap_ins,
             self.swap_bytes as f64 / (1u64 << 20) as f64,
             self.swap_transfer_s,
             self.saved_recompute_s,
             self.migrations,
+            self.migration_deferrals,
             self.swap_overlapped_s,
             self.swap_stalled_s,
             self.preemptions,
@@ -504,7 +544,12 @@ mod tests {
         m.prefix_hits = 6;
         m.prefix_misses = 2;
         m.cow_copies = 1;
+        m.resurrected_blocks = 4;
+        m.reclaimed_blocks = 2;
+        m.cached_bytes = 2 << 20;
         m.saved_prefill_s = 0.25;
+        m.saved_prefill_resurrected_s = 0.125;
+        m.migration_deferrals = 3;
         m.swap_outs = 2;
         m.swap_ins = 2;
         m.swap_bytes = 3 << 20;
@@ -543,7 +588,9 @@ mod tests {
         assert!(s.contains("kept=0.7500s replayed=0.2500s"), "{s}");
         assert!(s.contains("mttr=250.0ms"), "{s}");
         assert!(s.contains("affine_routes=5"), "{s}");
-        assert!(s.contains("migrations=2"), "{s}");
+        assert!(s.contains("resurrected=4 reclaimed=2 cached=2.0 MiB"), "{s}");
+        assert!(s.contains("saved_resurrected_sim=0.1250s"), "{s}");
+        assert!(s.contains("migrations=2 deferred=3"), "{s}");
         assert!(s.contains("hidden=0.0750s stalled=0.0500s"), "{s}");
     }
 
@@ -603,24 +650,39 @@ mod tests {
             hit_blocks: 30,
             miss_blocks: 10,
             cow_copies: 3,
+            resurrected_blocks: 12,
+            reclaimed_blocks: 4,
         });
+        m.sync_cache(2048);
         assert_eq!(m.prefix_hits, 30);
         assert_eq!(m.prefix_misses, 10);
         assert_eq!(m.cow_copies, 3);
+        assert_eq!(m.resurrected_blocks, 12);
+        assert_eq!(m.reclaimed_blocks, 4);
+        assert_eq!(m.cached_bytes, 2048);
         assert!((m.prefix_hit_rate() - 0.75).abs() < 1e-12);
         // sync overwrites (the pager snapshot is cumulative)…
         m.sync_prefix(crate::coordinator::kv::PrefixStats {
             hit_blocks: 40,
             miss_blocks: 12,
             cow_copies: 3,
+            resurrected_blocks: 15,
+            reclaimed_blocks: 4,
         });
+        m.sync_cache(1024);
         assert_eq!(m.prefix_hits, 40);
+        assert_eq!(m.resurrected_blocks, 15);
+        assert_eq!(m.cached_bytes, 1024, "gauge overwrites, never accumulates");
         // …while merge sums across nodes
         let mut other = Metrics::new();
         other.prefix_hits = 5;
         other.prefix_misses = 8;
         other.cow_copies = 1;
+        other.resurrected_blocks = 2;
+        other.reclaimed_blocks = 1;
+        other.cached_bytes = 512;
         other.saved_prefill_s = 0.5;
+        other.saved_prefill_resurrected_s = 0.125;
         other.swap_outs = 7;
         other.swap_ins = 6;
         other.swap_bytes = 1024;
@@ -630,7 +692,11 @@ mod tests {
         assert_eq!(m.prefix_hits, 45);
         assert_eq!(m.prefix_misses, 20);
         assert_eq!(m.cow_copies, 4);
+        assert_eq!(m.resurrected_blocks, 17);
+        assert_eq!(m.reclaimed_blocks, 5);
+        assert_eq!(m.cached_bytes, 1536, "fleet cached bytes sum across nodes");
         assert!((m.saved_prefill_s - 0.5).abs() < 1e-12);
+        assert!((m.saved_prefill_resurrected_s - 0.125).abs() < 1e-12);
         assert_eq!(m.swap_outs, 7);
         assert_eq!(m.swap_ins, 6);
         assert_eq!(m.swap_bytes, 1024);

@@ -93,6 +93,11 @@ pub struct Fleet {
     /// Probe serves a readmitted node owes before full trust. `0` (the
     /// default) preserves the legacy immediate readmission.
     probation_rounds: u64,
+    /// Peak multiplier a full prefix match applies to a node's
+    /// effective throughput in [`Fleet::route_affine`]. The default 2.0
+    /// reproduces the PR 7 fixed bonus; values ≤ 1.0 disable the depth
+    /// term entirely (plain policy).
+    affinity_bonus: f64,
 }
 
 impl Fleet {
@@ -106,6 +111,7 @@ impl Fleet {
             policy,
             cursor: 0,
             probation_rounds: 0,
+            affinity_bonus: 2.0,
         }
     }
 
@@ -202,28 +208,41 @@ impl Fleet {
         idx
     }
 
+    /// Set the peak affinity multiplier ([`Fleet::route_affine`]'s
+    /// `--affinity-bonus`). A full prefix match scales a node's
+    /// effective throughput by this factor; partial matches interpolate
+    /// linearly. Values ≤ 1.0 degrade `route_affine` to the plain
+    /// policy (the bonus term becomes constant, so the depth signal
+    /// carries zero weight — the knob's own ablation arm).
+    pub fn set_affinity_bonus(&mut self, bonus: f64) {
+        self.affinity_bonus = bonus;
+    }
+
     /// Route one request with **prefix affinity**: `depths[i]` is node
     /// i's matched-prefix depth for this prompt (blocks of the prompt's
-    /// chain already resident there, per the fleet
-    /// [`crate::coordinator::kv::PrefixDirectory`]). Eligibility walks
-    /// the same trust ladder as [`Fleet::route`]; among eligible nodes
-    /// the pick maximizes `(1 + depth/best_depth) · weight /
-    /// (outstanding + 1)` — the depth term is normalized against the
-    /// best match in the fleet, so a full prefix hit at most *doubles* a
-    /// node's effective throughput. Bounding the bonus is what keeps the
-    /// fleet balanced: with raw depths a warm node's score dwarfs the
-    /// load term and every shared-prefix arrival piles onto the first
-    /// card that served one, while the bounded form lets distinct prompt
-    /// families spread out and then stick to their holders. With no
-    /// depth anywhere `route()` is called instead, preserving non-affine
+    /// chain already resident there — pinned or warm-but-idle cached,
+    /// per the fleet [`crate::coordinator::kv::PrefixDirectory`]).
+    /// Eligibility walks the same trust ladder as [`Fleet::route`];
+    /// among eligible nodes the pick maximizes `(1 + (bonus − 1) ·
+    /// depth/best_depth) · weight / (outstanding + 1)` — the depth term
+    /// is normalized against the best match in the fleet, so a full
+    /// prefix hit scales a node's effective throughput by at most the
+    /// configured [`Fleet::set_affinity_bonus`] (default 2×). Bounding
+    /// the bonus is what keeps the fleet balanced: with raw depths a
+    /// warm node's score dwarfs the load term and every shared-prefix
+    /// arrival piles onto the first card that served one, while the
+    /// bounded form lets distinct prompt families spread out and then
+    /// stick to their holders. With no depth anywhere — or a bonus ≤
+    /// 1.0 — `route()` is called instead, preserving non-affine
     /// policies verbatim (the `--no-affinity` ablation and prefix-less
     /// traffic take the identical path).
     pub fn route_affine(&mut self, depths: &[usize]) -> usize {
         assert!(!self.nodes.is_empty(), "empty fleet");
         assert_eq!(depths.len(), self.nodes.len(), "one depth per node");
-        if depths.iter().all(|&d| d == 0) {
+        if self.affinity_bonus <= 1.0 || depths.iter().all(|&d| d == 0) {
             return self.route();
         }
+        let gain = self.affinity_bonus - 1.0;
         let best_depth = depths.iter().copied().max().unwrap().max(1) as f64;
         let probing = |n: &Node| n.healthy && (n.probation == 0 || n.outstanding == 0);
         let tier = if self.nodes.iter().any(probing) {
@@ -244,9 +263,9 @@ impl Fleet {
             .enumerate()
             .filter(|&(_, n)| eligible(n))
             .max_by(|(ia, a), (ib, b)| {
-                let sa = (1.0 + depths[*ia] as f64 / best_depth) * a.weight.max(1e-9)
+                let sa = (1.0 + gain * depths[*ia] as f64 / best_depth) * a.weight.max(1e-9)
                     / (a.outstanding as f64 + 1.0);
-                let sb = (1.0 + depths[*ib] as f64 / best_depth) * b.weight.max(1e-9)
+                let sb = (1.0 + gain * depths[*ib] as f64 / best_depth) * b.weight.max(1e-9)
                     / (b.outstanding as f64 + 1.0);
                 // ties go to the lower index: max_by keeps the *last*
                 // max, so order Greater only on a strict win
@@ -665,6 +684,37 @@ mod tests {
         assert_eq!(picks, vec![1, 0, 1, 1, 0]);
         assert_eq!(f.nodes[1].outstanding, 3);
         assert_eq!(f.nodes[0].outstanding, 2);
+    }
+
+    #[test]
+    fn affinity_bonus_one_degrades_to_the_plain_policy() {
+        // 8d regression: with the bonus at 1.0 the depth term is
+        // constant, so even a full prefix match must not perturb the
+        // configured policy — identical picks to depth-blind routing.
+        let mut affine = Fleet::uniform(3, 1.0, RoutePolicy::RoundRobin);
+        affine.set_affinity_bonus(1.0);
+        let mut plain = Fleet::uniform(3, 1.0, RoutePolicy::RoundRobin);
+        for _ in 0..6 {
+            assert_eq!(affine.route_affine(&[0, 7, 2]), plain.route());
+        }
+        // the same degradation holds for the weighted policy
+        let mut w = Fleet::new(
+            vec![node("fast", 200.0), node("slow", 100.0)],
+            RoutePolicy::WeightedThroughput,
+        );
+        w.set_affinity_bonus(1.0);
+        assert_eq!(w.route_affine(&[0, 9]), 0, "full match on slow cannot win at 1.0");
+    }
+
+    #[test]
+    fn affinity_bonus_scales_the_tilt_toward_the_holder() {
+        // A 3× bonus keeps the holder ahead one pick longer than the
+        // default 2×: scores 3/(o+1) vs 1/(o+1) give 1 1 0 1 … instead
+        // of 1 0 1 1 0 — still bounded, never a pile-on.
+        let mut f = Fleet::uniform(2, 100.0, RoutePolicy::WeightedThroughput);
+        f.set_affinity_bonus(3.0);
+        let picks: Vec<usize> = (0..4).map(|_| f.route_affine(&[0, 4])).collect();
+        assert_eq!(picks, vec![1, 1, 0, 1]);
     }
 
     #[test]

@@ -214,18 +214,22 @@ pub fn overlap_transfer(transfer_s: f64, round_s: f64) -> (f64, f64) {
 /// Prefix-aware admission: [`plan_admission`] prices every queued prompt
 /// as `window_blocks` fresh pages, so at the capacity edge (`admissible
 /// == 0`) it never pops a request whose prompt is mostly resident. When
-/// plain admission stalls but the queue head's window has
-/// `resident_blocks` already in the prefix index (the pager's read-only
-/// [`crate::coordinator::kv::KvPager::resident_prefix_blocks`] probe),
-/// admit that head iff the free pool covers just the *fresh* remainder —
-/// the same arithmetic `admit_prompt` will re-check authoritatively
-/// under its own lock (a stale probe costs one bounced admission, never
-/// an over-commit).
+/// plain admission stalls but a scanned request's window has
+/// `resident_blocks` already in the radix tree (the pager's read-only
+/// [`crate::coordinator::kv::KvPager::resident_prefix_blocks`] probe —
+/// which counts warm-but-idle cached blocks too), admit it iff the
+/// *fresh* remainder fits in free plus reclaimable pages: the admission
+/// math distinguishes the three tiers — pinned pages are untouchable,
+/// `free_blocks` are free, and `cached_blocks` are admissible at the
+/// price of an LRU reclaim. `admit_prompt` re-checks the same
+/// arithmetic authoritatively under its own lock (a stale probe costs
+/// one bounced admission, never an over-commit).
 pub fn plan_admission_prefix_aware(
     policy: &BatchPolicy,
     live: usize,
     admissible: usize,
     free_blocks: usize,
+    cached_blocks: usize,
     window_blocks: usize,
     resident_blocks: usize,
 ) -> usize {
@@ -234,7 +238,7 @@ pub fn plan_admission_prefix_aware(
         return plain;
     }
     let fresh = window_blocks.saturating_sub(resident_blocks);
-    (resident_blocks > 0 && fresh <= free_blocks) as usize
+    (resident_blocks > 0 && fresh <= free_blocks + cached_blocks) as usize
 }
 
 #[cfg(test)]
@@ -470,18 +474,24 @@ mod tests {
     fn prefix_aware_admission_opens_the_capacity_edge() {
         let p = |max_batch| BatchPolicy { max_batch, ..Default::default() };
         // plain admission already flows → unchanged, probe ignored
-        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 2, 64, 64, 64), 2);
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 2, 64, 0, 64, 64), 2);
         // capacity edge (no full window fits) but the head's prompt is
         // mostly resident: its fresh remainder fits → admit exactly one
-        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 64, 32), 1);
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 0, 64, 32), 1);
         // fully-resident head needs zero fresh blocks
-        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 0, 64, 64), 1);
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 0, 0, 64, 64), 1);
         // no resident prefix → the gate stays closed (prefix-blind path)
-        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 64, 0), 0);
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 0, 64, 0), 0);
         // resident but the fresh tail still overflows the pool → closed
-        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 16, 64, 32), 0);
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 16, 0, 64, 32), 0);
+        // …unless the cached tier covers the shortfall: idle cached
+        // pages are admissible at the price of a reclaim
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 16, 16, 64, 32), 1);
+        // cached pages alone never open the gate for a prefix-less
+        // prompt — the prefix-blind path stays plain
+        assert_eq!(plan_admission_prefix_aware(&p(4), 1, 0, 32, 64, 64, 0), 0);
         // concurrency cap still binds even with a resident prompt
-        assert_eq!(plan_admission_prefix_aware(&p(2), 2, 0, 64, 64, 64), 0);
+        assert_eq!(plan_admission_prefix_aware(&p(2), 2, 0, 64, 0, 64, 64), 0);
     }
 
     #[test]

@@ -338,6 +338,7 @@ impl Server {
         // Flapping cards re-enter on probation: `mark_healthy` readmits
         // them one probe at a time until they pass this many serves.
         fleet_inner.set_probation_rounds(config.recovery.probation_rounds);
+        fleet_inner.set_affinity_bonus(config.qos.affinity_bonus);
         let fleet = Arc::new(Mutex::new(fleet_inner));
 
         let queue_depth = config.queue_depth.max(1);
@@ -395,6 +396,7 @@ impl Server {
             let policy = config.batch;
             let step_policy = config.step_policy;
             let steal = config.qos.steal;
+            let admit_scan = config.qos.admit_scan;
             let rescue = config.recovery.rescue.then(|| rescue_tx.clone());
             let recovery = config.recovery.clone();
             let injector = injector.clone();
@@ -449,6 +451,11 @@ impl Server {
                             return;
                         }
                     }
+                    // The reclaimable-cache tier only exists when prefix
+                    // sharing can find its blocks again; `--no-kv-cache`
+                    // (or a prefix-blind run) reverts to refcount-zero
+                    // frees — the ablation baseline.
+                    pager.set_retention(policy.kv_retention && policy.prefix_cache);
                     // The pool must hold at least one prefill window plus
                     // one decode position, or admission could never make
                     // progress and the engine would spin.
@@ -484,6 +491,7 @@ impl Server {
                         accounts,
                         fleet,
                         steal,
+                        admit_scan,
                         rescue,
                         recovery,
                         injector,
@@ -1088,6 +1096,10 @@ struct NodeWorker {
     accounts: Arc<Mutex<TenantAccounts>>,
     fleet: Arc<Mutex<Fleet>>,
     steal: bool,
+    /// Bounded admission scan depth ([`QosConfig::admit_scan`]): how many
+    /// queued requests the capacity-edge gate inspects for a radix-tree
+    /// match before popping. Floor 1 = head-only (the PR 7 peek).
+    admit_scan: usize,
     /// Hand-back channel to the dispatch stage for rescued (node death)
     /// and retried (transient admission failure) requests. `None` when
     /// [`RecoveryPolicy::rescue`] is off — then a death drops its work.
@@ -1204,6 +1216,17 @@ struct ParkLot {
     parked: Mutex<Vec<(usize, Preempted)>>,
 }
 
+/// Outcome of a foreign-claim attempt ([`ParkLot::claim_foreign`]).
+enum Claim {
+    /// `(original owner, entry)` — the router slot re-books to the thief.
+    Taken(usize, Preempted),
+    /// Foreign entries exist but the hysteresis gate held every one back
+    /// (too young, or its owner would resume it next round).
+    Deferred,
+    /// Nothing foreign is parked.
+    Empty,
+}
+
 impl ParkLot {
     fn new() -> Self {
         ParkLot { parked: Mutex::new(Vec::new()) }
@@ -1225,12 +1248,42 @@ impl ParkLot {
         self.parked.lock().unwrap().push((node, p));
     }
 
-    /// Claim the oldest entry owned by someone else — the migration grab.
-    /// Returns the original owner so the router slot can be re-booked.
-    fn claim_foreign(&self, thief: usize) -> Option<(usize, Preempted)> {
+    /// Claim the oldest *claimable* entry owned by someone else — the
+    /// migration grab, behind a hysteresis gate. A young foreign entry
+    /// (under `min_age` parked rounds) is one its owner — who resumes its
+    /// own lot ahead of new arrivals every round — would likely take back
+    /// next round; grabbing it pays two PCIe transfers to move work that
+    /// was about to run anyway. So a claim needs the entry aged past
+    /// `min_age`, **or** its owner visibly backlogged (`owner_busy`:
+    /// queued arrivals will out-compete the resume, or the owner is
+    /// dead). Age alone eventually qualifies every entry, so a parked
+    /// sequence on a page-starved idle owner is still rescued. Returns
+    /// [`Claim::Deferred`] when foreign entries exist but the gate held
+    /// them all back, so the caller can count the thrash avoided.
+    fn claim_foreign(
+        &self,
+        thief: usize,
+        min_age: u64,
+        owner_busy: impl Fn(usize) -> bool,
+    ) -> Claim {
         let mut lot = self.parked.lock().unwrap();
-        let i = lot.iter().position(|(owner, _)| *owner != thief)?;
-        Some(lot.remove(i))
+        let mut deferred = false;
+        for i in 0..lot.len() {
+            let (owner, p) = &lot[i];
+            if *owner == thief {
+                continue;
+            }
+            if p.parked_rounds >= min_age || owner_busy(*owner) {
+                let (owner, p) = lot.remove(i);
+                return Claim::Taken(owner, p);
+            }
+            deferred = true;
+        }
+        if deferred {
+            Claim::Deferred
+        } else {
+            Claim::Empty
+        }
     }
 
     /// One engine round passed on `node`: age its parked entries.
@@ -1297,6 +1350,13 @@ fn worker_loop(mut w: NodeWorker) {
     let mut plan: Vec<usize> = Vec::new();
     let mut stalled: Vec<usize> = Vec::new();
     let mut open = true;
+    // Directory sync state: the chain set this worker last published and
+    // the epoch it was installed under. Rounds send deltas against it; the
+    // first round — or a delta the directory refuses because its epoch
+    // moved (a death/recovery clear) — falls back to a full publish.
+    let mut published: std::collections::HashSet<u64> = std::collections::HashSet::new();
+    let mut published_epoch: u64 = 0;
+    let mut synced = false;
 
     while open || !live.is_empty() || park.has_owned(w.node) {
         // --- injected faults (chaos runs): a scripted death hands every
@@ -1314,11 +1374,28 @@ fn worker_loop(mut w: NodeWorker) {
             park.age_owned(w.node);
             continue;
         }
-        // Publish this card's resident prefix chains for affine routing.
-        // A hint, not a lease: pages may be evicted before a routed
-        // request arrives, and admission's two-pass probe degrades any
-        // stale hit to a plain miss.
-        w.directory.publish(w.node, w.pager.index_hashes());
+        // Publish this card's resident prefix chains for affine routing —
+        // all tree tiers, cached included: warm-but-idle KV attracting a
+        // returning user's route is the radix cache's whole payoff. Sent
+        // as a delta against last round's set; an unchanged set costs one
+        // epoch check. A hint, not a lease: pages may be evicted before a
+        // routed request arrives, and admission's two-pass probe degrades
+        // any stale hit to a plain miss.
+        let resident: std::collections::HashSet<u64> =
+            w.pager.index_hashes().into_iter().collect();
+        let added: Vec<u64> = resident.difference(&published).copied().collect();
+        let retracted: Vec<u64> = published.difference(&resident).copied().collect();
+        let delta_ok = synced
+            && if added.is_empty() && retracted.is_empty() {
+                w.directory.epoch(w.node) == published_epoch
+            } else {
+                w.directory.publish_delta(w.node, published_epoch, &added, &retracted)
+            };
+        if !delta_ok {
+            published_epoch = w.directory.publish(w.node, resident.iter().copied().collect());
+            synced = true;
+        }
+        published = resident;
         let prefill_t = w.runtime.config.prefill_t;
         // --- admission (page-join): fill headroom, never stall decode.
         //     Preempted sequences resume before new arrivals join. ---
@@ -1359,27 +1436,6 @@ fn worker_loop(mut w: NodeWorker) {
         // arrival loop pops a queued request into a terminal page-overload
         // reject that plan_admission exists to prevent.
         want = want.min(plan_admission(&w.policy, live.len(), w.pager.admissible(prefill_t)));
-        // --- prefix-aware admission gate: plan_admission budgets a full
-        //     fresh prefill window, but an affinity-routed arrival whose
-        //     prefix is already resident only needs the tail. Peek the
-        //     queue head and re-plan counting its resident blocks toward
-        //     the budget. The pop-and-admit below re-probes under the
-        //     pager's two-pass check, so an eviction between peek and
-        //     admit degrades to a retry, never an error. ---
-        if want == 0 && w.policy.prefix_cache {
-            if let Some(prompt) = w.queues.peek_with(w.node, |r| r.prompt.clone()) {
-                if let Ok(window) = w.runtime.padded_window(&prompt) {
-                    want = plan_admission_prefix_aware(
-                        &w.policy,
-                        live.len(),
-                        w.pager.admissible(prefill_t),
-                        w.pager.free_blocks(),
-                        w.pager.blocks_for(prefill_t),
-                        w.pager.resident_prefix_blocks(&window),
-                    );
-                }
-            }
-        }
         // --- park-lot aging gate: a parked sequence past its round
         //     budget freezes new admissions, reserving every page a
         //     retirement frees for the resume — new shorts can no longer
@@ -1389,6 +1445,40 @@ fn worker_loop(mut w: NodeWorker) {
             w.metrics.lock().unwrap().aged_promotions += newly_aged.len() as u64;
             for t in &newly_aged {
                 w.tenant_metrics[t.0].lock().unwrap().aged_promotions += 1;
+            }
+        }
+        // --- prefix-aware admission at the capacity edge: plan_admission
+        //     budgets a full fresh prefill window, but a request whose
+        //     prefix already lives in this card's radix tree (live-shared
+        //     or cached) only needs the tail — and cached blocks count
+        //     toward the budget, since reclaiming one costs a tree unlink,
+        //     not a prefill. Scan the first `admit_scan` queued requests
+        //     (bounded, so fair-queue order bends at most K−1 positions),
+        //     pop the deepest eligible tree match, and admit it directly.
+        //     The admit re-probes under the pager's two-pass check, so an
+        //     eviction between scan and admit degrades to a retry, never
+        //     an error. ---
+        if open && want == 0 && !aged_parked && w.policy.prefix_cache {
+            let admissible = w.pager.admissible(prefill_t);
+            let free = w.pager.free_blocks();
+            let cached = w.pager.cached_blocks();
+            let window_blocks = w.pager.blocks_for(prefill_t);
+            let popped = w.queues.pop_best_within(w.node, w.admit_scan, |r| {
+                let window = w.runtime.padded_window(&r.prompt).ok()?;
+                let resident = w.pager.resident_prefix_blocks(&window);
+                let opens = plan_admission_prefix_aware(
+                    &w.policy,
+                    live.len(),
+                    admissible,
+                    free,
+                    cached,
+                    window_blocks,
+                    resident,
+                ) > 0;
+                opens.then_some(resident)
+            });
+            if let Some(req) = popped {
+                admit(&mut w, req, &mut live);
             }
         }
         if open && want > 0 && !aged_parked {
@@ -1575,6 +1665,7 @@ fn worker_loop(mut w: NodeWorker) {
                 let mut m = w.metrics.lock().unwrap();
                 m.record_batch(plan.len());
                 m.sync_prefix(w.pager.prefix_stats());
+                m.sync_cache(w.pager.cached_bytes());
             }
             // A thermal throttle stretches every simulated decode step
             // this round; the token stream itself is unchanged.
@@ -1601,7 +1692,11 @@ fn worker_loop(mut w: NodeWorker) {
     }
     // Final prefix-cache snapshot: admissions after the last stepped
     // round (e.g. a drain that never decoded) still land in the metrics.
-    w.metrics.lock().unwrap().sync_prefix(w.pager.prefix_stats());
+    {
+        let mut m = w.metrics.lock().unwrap();
+        m.sync_prefix(w.pager.prefix_stats());
+        m.sync_cache(w.pager.cached_bytes());
+    }
     // Retract this card's published chains: a drained worker must not
     // attract affine routes.
     w.directory.clear(w.node);
@@ -1777,8 +1872,20 @@ fn requeue_or_lose(w: &mut NodeWorker, req: GenRequest) -> bool {
 /// this card shortens the recompute. Returns true when a sequence joined
 /// this worker's live set.
 fn migrate_parked(w: &mut NodeWorker, park: &ParkLot, live: &mut Vec<Live>) -> bool {
-    let Some((victim, p)) = park.claim_foreign(w.node) else {
-        return false;
+    // Hysteresis: only grab entries old enough that their owner clearly
+    // isn't coming back for them, unless the owner is visibly backlogged
+    // (or dead) — an idle owner resumes its own lot next round for free.
+    let queues = Arc::clone(&w.queues);
+    let claim = park.claim_foreign(w.node, w.policy.migrate_min_age, |owner| {
+        !queues.alive(owner) || queues.len(owner) > 0
+    });
+    let (victim, p) = match claim {
+        Claim::Taken(victim, p) => (victim, p),
+        Claim::Deferred => {
+            w.metrics.lock().unwrap().migration_deferrals += 1;
+            return false;
+        }
+        Claim::Empty => return false,
     };
     let tenant = p.req.tenant;
     // Re-book the router slot onto this card up front: resume's terminal
@@ -1891,7 +1998,7 @@ fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool 
         reject(w, &req, msg, queue_s, req.carry.sim_j);
         return false;
     }
-    let Some((kv, hits)) = admit_pages(w, &req.prompt) else {
+    let Some((kv, hits, resurrected)) = admit_pages(w, &req.prompt) else {
         return retry_or_reject(w, req, "no KV pages (overload)", queue_s);
     };
     let cached = cached_positions(w, hits);
@@ -1926,7 +2033,7 @@ fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool 
                     return false;
                 }
             }
-            credit_prefix_hits(w, cached);
+            credit_prefix_hits(w, cached, resurrected);
             let prefill_s = t0.elapsed().as_secs_f64();
             let (sim_s, sim_j) = if replay.is_empty() {
                 let s = w.overlay.prefill_s_per_token * (cfg.prefill_t - cached) as f64;
@@ -2003,16 +2110,21 @@ fn retry_or_reject(w: &mut NodeWorker, mut req: GenRequest, why: &str, queue_s: 
 /// ([`ModelRuntime::padded_window`] — the exact content
 /// `prefill_padded` computes KV over, one shared construction) — the
 /// chain hashes key exactly the content the blocks would hold — pinning
-/// resident blocks instead of allocating. Returns the handle and the hit
-/// count (always 0 on the prefix-blind path).
-fn admit_pages(w: &mut NodeWorker, prompt: &[i32]) -> Option<(SeqKv, usize)> {
+/// resident blocks instead of allocating. Returns the handle, the hit
+/// count, and how many of those hits were **resurrected** from the
+/// reclaimable cache rather than live-shared (both always 0 on the
+/// prefix-blind path).
+fn admit_pages(w: &mut NodeWorker, prompt: &[i32]) -> Option<(SeqKv, usize, usize)> {
     if !w.policy.prefix_cache {
-        return w.pager.admit(w.runtime.config.prefill_t).map(|kv| (kv, 0));
+        return w.pager.admit(w.runtime.config.prefill_t).map(|kv| (kv, 0, 0));
     }
     // The admission window check ran before this point, so the prompt
     // always fits; a window error therefore reads as an admission miss.
     let window = w.runtime.padded_window(prompt).ok()?;
-    w.pager.admit_prompt(&window)
+    let before = w.pager.prefix_stats().resurrected_blocks;
+    let (kv, hits) = w.pager.admit_prompt(&window)?;
+    let resurrected = (w.pager.prefix_stats().resurrected_blocks - before) as usize;
+    Some((kv, hits, resurrected))
 }
 
 /// Positions of the prefill window covered by `hits` cache-hit blocks —
@@ -2022,13 +2134,18 @@ fn cached_positions(w: &NodeWorker, hits: usize) -> usize {
     (hits * w.pager.block_positions()).min(w.runtime.config.prefill_t)
 }
 
-/// Credit `cached` resident positions to the saved-prefill ledger. Called
-/// only after the prefill actually succeeded — crediting earlier would
-/// book savings for work that never ran at all when prefill errors out.
-fn credit_prefix_hits(w: &mut NodeWorker, cached: usize) {
+/// Credit `cached` resident positions to the saved-prefill ledger, split
+/// by tier: positions covered by `resurrected` cached-tier blocks are
+/// savings only the radix tree's retention earned (no live sharer held
+/// them), the rest were live-shared. Called only after the prefill
+/// actually succeeded — crediting earlier would book savings for work
+/// that never ran at all when prefill errors out.
+fn credit_prefix_hits(w: &mut NodeWorker, cached: usize, resurrected: usize) {
     if cached > 0 {
-        w.metrics.lock().unwrap().saved_prefill_s +=
-            w.overlay.prefill_s_per_token * cached as f64;
+        let res_pos = (resurrected * w.pager.block_positions()).min(cached);
+        let mut m = w.metrics.lock().unwrap();
+        m.saved_prefill_s += w.overlay.prefill_s_per_token * cached as f64;
+        m.saved_prefill_resurrected_s += w.overlay.prefill_s_per_token * res_pos as f64;
     }
 }
 
@@ -2054,25 +2171,28 @@ fn preempt(w: &mut NodeWorker, l: Live, concurrent: usize) {
     // round trip the chooser would price at full width — swap is off.
     if w.policy.swap && !w.degrade.swap_disabled {
         // Price the recompute side with the same prefix credit a
-        // recompute-resume would get: prompt blocks other live sequences
-        // also hold survive this release and come back as cache hits, so
-        // their share of the prefill replay never runs.
-        let shared = if w.policy.prefix_cache {
+        // recompute-resume would get: prompt blocks that survive this
+        // release — live-shared with another holder, or demoted to the
+        // reclaimable cache instead of freed — come back as cache hits,
+        // so their share of the prefill replay never runs.
+        let survivors = if w.policy.prefix_cache {
             let prompt_blocks = w.pager.blocks_for(prefill_t);
             w.pager
-                .seq_shared_blocks(l.kv, prompt_blocks)
+                .seq_survivor_blocks(l.kv, prompt_blocks)
                 .expect("live sequences hold valid KV handles")
         } else {
             0
         };
-        let cached = (shared * w.pager.block_positions()).min(prefill_t);
+        let cached = (survivors * w.pager.block_positions()).min(prefill_t);
         recompute_est_s = w.overlay.recompute_s(prefill_t - cached, replay_steps);
-        // Transfer side priced symmetrically: only this sequence's
-        // private blocks cross the link — its shared prompt blocks stay
-        // resident for their other holders and re-pin on restore, the
-        // same blocks the recompute estimate was just credited for.
+        // Transfer side priced symmetrically: only blocks that would
+        // actually vanish from the card cross the link — shared prompt
+        // blocks stay resident for their other holders, and retained
+        // content-addressed blocks stay as cache; both re-pin on
+        // restore, the same blocks the recompute estimate was just
+        // credited for.
         kv_bytes =
-            w.pager.seq_private_bytes(l.kv).expect("live sequences hold valid KV handles");
+            w.pager.seq_swap_bytes(l.kv).expect("live sequences hold valid KV handles");
         swap = choose_preempt(kv_bytes, &w.link, recompute_est_s) == PreemptAction::Swap
             && w.host_pool.lock().unwrap().try_reserve(kv_bytes);
     }
@@ -2139,7 +2259,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
     // restore re-pins surviving shared prompt blocks instead of
     // duplicating content that never left the card (only its private
     // pages crossed the link).
-    let Some((kv, hits)) = admit_pages(w, &p.req.prompt) else {
+    let Some((kv, hits, resurrected)) = admit_pages(w, &p.req.prompt) else {
         return Resumed::NoPages(p);
     };
     if !w.pager.grow(kv, resume_positions).expect("just-admitted KV handle") {
@@ -2231,7 +2351,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
             return Resumed::Failed;
         }
     }
-    credit_prefix_hits(w, cached);
+    credit_prefix_hits(w, cached, resurrected);
     let recompute_wall_s = t0.elapsed().as_secs_f64();
     // Simulated cost of the recompute — all of it wasted work, bought by
     // the headroom the earlier eviction created. Prefix-cache hits shrink
@@ -2730,10 +2850,13 @@ mod tests {
         assert_eq!(lot.pop_owned(0).unwrap().req.id, 1);
         // A thief claims the oldest entry it does not own — with its
         // original owner tag, so the router slot can be re-booked.
-        let (owner, p) = lot.claim_foreign(1).unwrap();
+        // (min_age 0 disarms the hysteresis gate: the PR 7 behaviour.)
+        let Claim::Taken(owner, p) = lot.claim_foreign(1, 0, |_| true) else {
+            panic!("an aged foreign entry must be claimable");
+        };
         assert_eq!((owner, p.req.id), (0, 3));
         // Only node 1's own entry remains: nothing foreign to node 1.
-        assert!(lot.claim_foreign(1).is_none());
+        assert!(matches!(lot.claim_foreign(1, 0, |_| true), Claim::Empty));
         assert!(!lot.has_owned(0));
         // A failed resume re-parks at the head of the owner's FIFO.
         lot.push_front(1, parked_stub(4));
@@ -2750,6 +2873,34 @@ mod tests {
         // Node death drains exactly the dead node's entries.
         assert_eq!(lot.drain_owned(1).len(), 1);
         assert!(!lot.has_owned(1));
+    }
+
+    #[test]
+    fn migration_hysteresis_defers_young_claims_then_takes_them() {
+        let lot = ParkLot::new();
+        lot.push_back(0, parked_stub(1));
+        // Too young, and its idle owner will likely resume it next round:
+        // the grab is deferred (the thrash the PR 7 fabric paid for).
+        assert!(matches!(lot.claim_foreign(1, 2, |_| false), Claim::Deferred));
+        lot.age_owned(0);
+        assert!(matches!(lot.claim_foreign(1, 2, |_| false), Claim::Deferred));
+        // Age alone eventually qualifies the entry, so a page-starved but
+        // idle owner can still be relieved (no livelock).
+        lot.age_owned(0);
+        let Claim::Taken(owner, p) = lot.claim_foreign(1, 2, |_| false) else {
+            panic!("an entry parked past min_age must be claimable");
+        };
+        assert_eq!((owner, p.req.id), (0, 1));
+        // A backlogged owner is not coming back for its entry: the other
+        // half of the gate takes even a brand-new park immediately.
+        lot.push_back(0, parked_stub(2));
+        let Claim::Taken(owner, p) = lot.claim_foreign(1, 2, |_| true) else {
+            panic!("a busy owner's entry must be claimable regardless of age");
+        };
+        assert_eq!((owner, p.req.id), (0, 2));
+        // Own entries are never foreign, whatever the gate says.
+        lot.push_back(1, parked_stub(3));
+        assert!(matches!(lot.claim_foreign(1, 0, |_| true), Claim::Empty));
     }
 
     #[test]
@@ -2795,6 +2946,12 @@ mod tests {
             KvPager::new(BLOCK, 1024, 160 * BLOCK as u64 * 1024, 0).unwrap(),
             KvPager::new(BLOCK, 1024, 160 * BLOCK as u64 * 1024, 0).unwrap(),
         ];
+        // This harness pins the PR 7 live-shared baseline: refcount zero
+        // frees, so only concurrently resident sequences share. The cached
+        // tier's fleet lift is pinned separately by the returning-user
+        // acceptance test below.
+        pagers[0].set_retention(false);
+        pagers[1].set_retention(false);
         let mut resident: [Vec<SeqKv>; 2] = [Vec::new(), Vec::new()];
         let mut hits_total = 0usize;
         let mut sim_s = 0.0f64;
@@ -2847,6 +3004,88 @@ mod tests {
         assert!(
             goodput_on > goodput_off,
             "affinity must strictly win goodput: {goodput_on} vs {goodput_off}"
+        );
+    }
+
+    /// Drive the returning-user workload analytically: two cards, eight
+    /// users behind a shared 256-token system prompt, each coming back
+    /// for a second turn after their first has retired (residency capped
+    /// at two sequences per card, releasing the oldest as retirement
+    /// would). With retention on, a returning user's released private
+    /// history is resurrected from the radix cache; under the
+    /// `--no-kv-cache` ablation refcount zero freed it, so only the
+    /// live-shared system prompt hits. Returns (fleet prefix hits,
+    /// resurrected blocks, goodput in tokens per simulated second).
+    fn run_returning_users(retention: bool) -> (usize, usize, f64) {
+        const BLOCK: usize = 16;
+        const PREFILL_T: usize = 1024;
+        const SHARED: usize = 256;
+        const DECODE: usize = 64;
+        const USERS: usize = 8;
+        let overlay = test_overlay();
+        let directory = PrefixDirectory::new(2);
+        let mut pagers = [
+            KvPager::new(BLOCK, 1024, 600 * BLOCK as u64 * 1024, 0).unwrap(),
+            KvPager::new(BLOCK, 1024, 600 * BLOCK as u64 * 1024, 0).unwrap(),
+        ];
+        pagers[0].set_retention(retention);
+        pagers[1].set_retention(retention);
+        let mut resident: [Vec<SeqKv>; 2] = [Vec::new(), Vec::new()];
+        let mut hits_total = 0usize;
+        let mut sim_s = 0.0f64;
+        for _turn in 0..2 {
+            for user in 0..USERS {
+                let mut window: Vec<i32> = (1..=SHARED as i32).collect();
+                window.extend(
+                    (0..(PREFILL_T - SHARED)).map(|p| (1000 * (user + 1) + p) as i32),
+                );
+                let depths =
+                    directory.match_depths(&window_chain_hashes(&window, BLOCK));
+                let node = if depths[0] >= depths[1] { 0 } else { 1 };
+                let (kv, hits) =
+                    pagers[node].admit_prompt(&window).expect("card has page headroom");
+                hits_total += hits;
+                let cached = (hits * BLOCK).min(PREFILL_T);
+                sim_s += overlay.prefill_s_per_token * (PREFILL_T - cached) as f64
+                    + overlay.decode_s_per_token * DECODE as f64;
+                resident[node].push(kv);
+                if resident[node].len() > 2 {
+                    let oldest = resident[node].remove(0);
+                    pagers[node].release(oldest).unwrap();
+                }
+                directory.publish(node, pagers[node].index_hashes());
+            }
+        }
+        let resurrected = pagers
+            .iter()
+            .map(|p| p.prefix_stats().resurrected_blocks as usize)
+            .sum();
+        (hits_total, resurrected, (2 * USERS * DECODE) as f64 / sim_s)
+    }
+
+    #[test]
+    fn returning_users_resurrect_their_kv_across_the_fleet_acceptance() {
+        // The radix-cache acceptance pin (the `serve_radix_cache` bench
+        // row's analytical twin). Turn one is identical in both arms: the
+        // first user misses cold (0 hits) and the next seven each share
+        // the 16-block system prompt (7 x 16 = 112). On the second turn
+        // every user's full 64-block window is resident with retention on
+        // (8 x 64 = 512, of which 8 x 48 private blocks are resurrected
+        // from the cached tier), while the ablation re-prefills everything
+        // but the live-shared prompt (8 x 16 = 128).
+        let (hits_on, resurrected_on, goodput_on) = run_returning_users(true);
+        let (hits_off, resurrected_off, goodput_off) = run_returning_users(false);
+        assert_eq!(hits_on, 112 + 512);
+        assert_eq!(resurrected_on, 8 * 48);
+        assert_eq!(hits_off, 112 + 128);
+        assert_eq!(resurrected_off, 0);
+        assert!(
+            hits_on as f64 >= 1.5 * hits_off as f64,
+            "retention must win fleet prefix hits by >= 1.5x: {hits_on} vs {hits_off}"
+        );
+        assert!(
+            goodput_on > goodput_off,
+            "resurrected prefill must show up as goodput: {goodput_on} vs {goodput_off}"
         );
     }
 }

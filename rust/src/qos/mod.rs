@@ -60,6 +60,18 @@ pub struct QosConfig {
     /// slot, so a deep flood cannot pre-stake node queues and nullify
     /// WFQ. Floor 1.
     pub node_queue_depth: usize,
+    /// Bounded admission scan depth (`--admit-scan`): at the capacity
+    /// edge the worker inspects up to this many queued requests and
+    /// pops the one whose prompt matches deepest in its radix tree,
+    /// instead of only peeking the head. Floor 1 (head-only, the PR 7
+    /// behaviour); the scan stays bounded so WFQ/aging order is
+    /// perturbed at most K−1 positions.
+    pub admit_scan: usize,
+    /// Peak prefix-affinity routing multiplier (`--affinity-bonus`),
+    /// threaded to [`crate::coordinator::router::Fleet::set_affinity_bonus`].
+    /// 2.0 is the PR 7 fixed bonus; values ≤ 1.0 degrade affine routing
+    /// to the plain policy.
+    pub affinity_bonus: f64,
     /// Tenants beyond the implicit uncapped `default`.
     pub tenants: Vec<TenantSpec>,
 }
@@ -71,6 +83,8 @@ impl Default for QosConfig {
             steal: true,
             aging_pops: 512,
             node_queue_depth: 2,
+            admit_scan: 4,
+            affinity_bonus: 2.0,
             tenants: Vec::new(),
         }
     }
@@ -86,6 +100,8 @@ mod tests {
         assert!(q.enabled);
         assert!(q.steal);
         assert!(q.aging_pops > 0);
+        assert_eq!(q.admit_scan, 4);
+        assert_eq!(q.affinity_bonus, 2.0);
         assert!(q.tenants.is_empty());
     }
 }

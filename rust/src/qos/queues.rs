@@ -211,6 +211,39 @@ impl<T> NodeQueues<T> {
         q.front().map(f)
     }
 
+    /// Pop the best-scoring *eligible* entry among the first `k` queued on
+    /// one node — the bounded admission scan (`--admit-scan`). The scorer
+    /// runs under the queue lock for each inspected entry, so keep it
+    /// cheap (a radix descent, not a serve); `None` marks an entry
+    /// ineligible (it stays queued in place). Ties break to the earliest
+    /// position and `k` floors at 1, so a uniform scorer degrades to
+    /// [`try_pop`]'s strict FIFO: fair-queue order is perturbed by at
+    /// most `k - 1` positions, and only when a deeper entry genuinely
+    /// scores higher. Returns `None` when no inspected entry is eligible.
+    ///
+    /// [`try_pop`]: NodeQueues::try_pop
+    pub fn pop_best_within(
+        &self,
+        node: usize,
+        k: usize,
+        score: impl Fn(&T) -> Option<usize>,
+    ) -> Option<T> {
+        let slot = &self.slots[node];
+        let mut q = slot.q.lock().unwrap();
+        let depth = k.max(1).min(q.len());
+        let (_, std::cmp::Reverse(best)) = q
+            .iter()
+            .take(depth)
+            .enumerate()
+            .filter_map(|(i, item)| score(item).map(|s| (s, std::cmp::Reverse(i))))
+            .max()?;
+        let item = q.remove(best);
+        if item.is_some() {
+            slot.cv.notify_all();
+        }
+        item
+    }
+
     /// Steal the newest entry from the deepest peer queue (ties to the
     /// lowest index). Returns `(victim_node, item)`. Peers are scanned by
     /// momentary depth; dead nodes' queues are eligible victims (rescue).
@@ -346,6 +379,33 @@ mod tests {
         assert_eq!(q.try_pop(0), Some(7), "the peeked head is what pops next");
         assert_eq!(q.peek_with(0, |v| v * 10), Some(80), "closure maps the head");
         assert_eq!(q.peek_with(1, |v| *v), None, "peers' queues are separate");
+    }
+
+    #[test]
+    fn pop_best_within_scans_a_bounded_window_and_keeps_fifo_on_ties() {
+        let q: NodeQueues<u32> = NodeQueues::new(1);
+        assert_eq!(q.pop_best_within(0, 4, |v| Some(*v as usize)), None);
+        // queue: [3, 1, 9, 2, 50] — 50 sits beyond a K=4 window
+        for v in [3, 1, 9, 2, 50] {
+            q.push_bounded(0, v, 8).unwrap();
+        }
+        // the best match inside the window pops, not the head and not the
+        // out-of-window 50
+        assert_eq!(q.pop_best_within(0, 4, |v| Some(*v as usize)), Some(9));
+        // a uniform scorer is strict FIFO: the fair-queue (WFQ lane /
+        // aging) order the dispatcher enqueued is respected when no entry
+        // genuinely matches deeper than another
+        assert_eq!(q.pop_best_within(0, 4, |_| Some(0)), Some(3));
+        // ineligible entries (scorer None) are skipped but never popped,
+        // and never lose their position
+        assert_eq!(q.pop_best_within(0, 4, |v| (*v > 10).then_some(0)), Some(50));
+        assert_eq!(q.pop_best_within(0, 4, |v| (*v > 10).then_some(0)), None);
+        assert_eq!(q.len(0), 2, "ineligible entries stay queued");
+        // K floors at 1 — head-only, the PR 7 peek behaviour
+        assert_eq!(q.pop_best_within(0, 0, |v| Some(*v as usize)), Some(1));
+        // the window clamps to the queue depth
+        assert_eq!(q.pop_best_within(0, 16, |v| Some(*v as usize)), Some(2));
+        assert_eq!(q.pop_best_within(0, 4, |v| Some(*v as usize)), None);
     }
 
     #[test]

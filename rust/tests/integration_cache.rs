@@ -1,0 +1,126 @@
+//! Radix-cache integration: KV retention beyond refcount zero, end to
+//! end. A returning user's second turn resurrects the released
+//! first-turn pages from the radix tree (bit-identical tokens, zero
+//! re-prefill for the resident window); the `--no-kv-cache` ablation
+//! re-prefills. Under a tight page budget the cached tier is reclaimed
+//! for fresh admissions instead of refusing them.
+//!
+//! Every test skips (passes vacuously) when the AOT artifacts are
+//! missing or PJRT is unavailable (the vendored stub xla crate) —
+//! environments that cannot run the runtime at all.
+
+use std::time::Duration;
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{GenResponse, NodeConfig, Server, ServerConfig, ServerHandle};
+use cmphx::device::registry;
+use cmphx::isa::pass::FmadPolicy;
+mod common;
+use common::artifact_dir;
+
+/// One 170HX node; retention on or off (the `--no-kv-cache` ablation).
+fn node1(retention: bool) -> ServerConfig {
+    ServerConfig {
+        queue_depth: 32,
+        batch: BatchPolicy {
+            max_batch: 2,
+            max_wait: Duration::from_millis(200),
+            kv_retention: retention,
+            ..BatchPolicy::default()
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+        nodes: vec![NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed)],
+        ..Default::default()
+    }
+}
+
+fn start(cfg: ServerConfig) -> Option<ServerHandle> {
+    Some(Server::start(artifact_dir()?, cfg).unwrap())
+}
+
+/// Submit one prompt and wait for its response.
+fn serve_one(server: &ServerHandle, prompt: Vec<i32>, tokens: usize) -> GenResponse {
+    server
+        .submit(prompt, tokens)
+        .unwrap()
+        .recv_timeout(Duration::from_secs(240))
+        .unwrap()
+}
+
+#[test]
+fn a_returning_user_resurrects_their_released_kv() {
+    // Two serial turns of the same prompt. The first retires — releasing
+    // its pages — before the second is admitted (retire releases before
+    // it replies), so any prefix hit on turn two comes from the cached
+    // tier, not live sharing. Retention on must resurrect the whole
+    // prompt window; the ablation freed it and hits nothing.
+    let prompt = vec![7, 3, 19, 4, 28, 11, 5, 61];
+
+    let Some(server) = start(node1(true)) else { return };
+    let first = serve_one(&server, prompt.clone(), 6);
+    assert!(first.ok(), "{:?}", first.error);
+    let second = serve_one(&server, prompt.clone(), 6);
+    assert!(second.ok(), "{:?}", second.error);
+    assert_eq!(
+        first.tokens, second.tokens,
+        "a resurrected prefix must decode bit-identically"
+    );
+    let m = server.shutdown();
+    assert!(
+        m.resurrected_blocks >= 1,
+        "turn two must re-pin released blocks (resurrected={})",
+        m.resurrected_blocks
+    );
+    assert!(m.prefix_hits >= 1, "resurrection counts as prefix hits");
+    assert!(
+        m.saved_prefill_resurrected_s > 0.0,
+        "resurrected hits must credit the cache's share of saved prefill"
+    );
+    let hits_on = m.prefix_hits;
+
+    let Some(server) = start(node1(false)) else { return };
+    let r1 = serve_one(&server, prompt.clone(), 6);
+    let r2 = serve_one(&server, prompt.clone(), 6);
+    assert!(r1.ok() && r2.ok());
+    assert_eq!(r1.tokens, first.tokens, "the ablation changes cost, not output");
+    assert_eq!(r2.tokens, second.tokens);
+    let m = server.shutdown();
+    assert_eq!(
+        m.resurrected_blocks, 0,
+        "--no-kv-cache frees at refcount zero; nothing can resurrect"
+    );
+    assert!(
+        hits_on > m.prefix_hits,
+        "retention must win prefix hits serially: {hits_on} vs {}",
+        m.prefix_hits
+    );
+}
+
+#[test]
+fn cache_pressure_reclaims_cached_blocks_instead_of_refusing_admission() {
+    // A page budget that holds roughly one resident window: with
+    // retention on, every retired prompt lingers as cache, so each new
+    // distinct prompt can only be admitted by reclaiming the cached
+    // tier. All requests must succeed, and the pager must report actual
+    // reclaims — the cache yields under pressure rather than occupying.
+    let Some(dir) = artifact_dir() else { return };
+    let prefill_t = cmphx::runtime::goldens::config_usize(&dir, "prefill_t").unwrap();
+    let mut cfg = node1(true);
+    cfg.batch.kv_block_positions = 1;
+    cfg.batch.kv_block_budget = Some(prefill_t + 16);
+    let server = Server::start(dir, cfg).unwrap();
+    for i in 0..3i32 {
+        let prompt: Vec<i32> = (1..=8).map(|t| t * 7 + i * 100).collect();
+        let r = serve_one(&server, prompt, 6);
+        assert!(r.ok(), "request {i} must admit by reclaiming cache: {:?}", r.error);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.errors, 0);
+    assert!(
+        m.reclaimed_blocks >= 1,
+        "distinct prompts under a tight budget must reclaim the cached tier"
+    );
+    assert!(m.cached_bytes > 0, "the last retiree's pages stay cached at shutdown");
+}

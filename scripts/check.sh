@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Local tier-1 gate: build, test, lint.
 #
-# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric]
+# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric | --cache]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
 # -q`) and adds rustfmt drift detection plus clippy with warnings denied.
@@ -17,6 +17,10 @@
 # --fabric runs only the KV-fabric smoke: the integration_fabric suite
 # (prefix-affine routing vs its ablation, live migration bit-identity,
 # the dying-migration-target chaos case). Same self-skip rule.
+#
+# --cache runs only the radix-cache smoke: the integration_cache suite
+# (returning-user KV resurrection vs the --no-kv-cache ablation, and
+# cache reclaim under a tight page budget). Same self-skip rule.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -39,6 +43,13 @@ if [[ "${1:-}" == "--fabric" ]]; then
     echo "==> fabric smoke: cargo test --release --test integration_fabric"
     cargo test --release --test integration_fabric -q
     echo "fabric smoke passed"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--cache" ]]; then
+    echo "==> cache smoke: cargo test --release --test integration_cache"
+    cargo test --release --test integration_cache -q
+    echo "cache smoke passed"
     exit 0
 fi
 
