@@ -18,8 +18,11 @@
 //! `--no-affinity`/`--no-overlap` baselines, owning the `serve_fabric`
 //! row, and a **radix-cache ablation** serves a returning-user workload
 //! with KV retention on vs the `--no-kv-cache` frees-at-refcount-zero
-//! baseline, owning the `serve_radix_cache` row. Requires `make
-//! artifacts`.
+//! baseline, owning the `serve_radix_cache` row. A **trace ablation**
+//! reruns the base workload with the span tracer on vs off and asserts the
+//! analytic overhead bound — simulated goodput bit-identical, because every
+//! trace stamp reads the simulated clock — owning the
+//! `serve_trace_overhead` row. Requires `make artifacts`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -649,6 +652,69 @@ fn run_chaos() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// One trace-overhead arm: the standard workload with the span tracer on
+/// or off. Returns (tokens, simulated device s, wall s, journal bytes,
+/// retained spans).
+fn run_trace_once(trace: bool) -> anyhow::Result<(u64, f64, f64, usize, usize)> {
+    let mut cfg = config(4, StepPolicy::RoundRobin);
+    cfg.trace = trace;
+    let server = Server::start(artifacts()?, cfg)?;
+    let t0 = Instant::now();
+    submit_workload(&server, REQUESTS)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let tracer = server.tracer();
+    let m = server.shutdown();
+    let snap = tracer.snapshot();
+    let journal = cmphx::obsv::journal_jsonl(&snap);
+    Ok((m.tokens_out, m.simulated_device_s, wall, journal.len(), snap.events.len()))
+}
+
+/// The tracing ablation: the same workload with the span tracer on vs
+/// off. The overhead bound is analytic, not statistical: every trace
+/// stamp reads the *simulated* clock, so the simulated goodput of the
+/// tracing-on arm must equal the tracing-off arm exactly — asserted here
+/// bit-for-bit — and only wall time may move. Recorded as the
+/// `serve_trace_overhead` row of `BENCH_sim_throughput.json`.
+fn run_trace_overhead() -> anyhow::Result<()> {
+    let (tok_on, sim_on, wall_on, journal_bytes, spans) = run_trace_once(true)?;
+    let (tok_off, sim_off, wall_off, off_bytes, off_spans) = run_trace_once(false)?;
+    anyhow::ensure!(
+        tok_on == tok_off && sim_on == sim_off,
+        "tracing moved the simulated numbers: {tok_on}/{sim_on} vs {tok_off}/{sim_off}"
+    );
+    anyhow::ensure!(spans > 0 && journal_bytes > 0, "tracing-on arm produced no journal");
+    anyhow::ensure!(off_spans == 0, "disabled tracer retained {off_spans} spans");
+    let _ = off_bytes; // header-only journal on the off arm
+    println!(
+        "trace on : {tok_on} tok, sim {:.2}ms, wall {wall_on:.2}s | {spans} spans, \
+         {journal_bytes} journal bytes",
+        sim_on * 1e3
+    );
+    println!(
+        "trace off: {tok_off} tok, sim {:.2}ms, wall {wall_off:.2}s | sim goodput identical \
+         (analytic bound)",
+        sim_off * 1e3
+    );
+    let row = format!(
+        "{{\n    \"workload\": \"single 170HX, {REQUESTS} requests x {TOKENS} tokens, span \
+         tracer on vs off\",\n    \
+         \"trace_on_tokens\": {tok_on},\n    \
+         \"trace_on_sim_ms\": {:.4},\n    \
+         \"trace_off_sim_ms\": {:.4},\n    \
+         \"sim_goodput_identical\": true,\n    \
+         \"trace_on_wall_s\": {wall_on:.3},\n    \
+         \"trace_off_wall_s\": {wall_off:.3},\n    \
+         \"spans\": {spans},\n    \
+         \"journal_bytes\": {journal_bytes}\n  }}",
+        sim_on * 1e3,
+        sim_off * 1e3,
+    );
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    upsert_bench_row(&path, "serve_trace_overhead", &row);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     if !cmphx::runtime::pjrt_available() {
         println!("e2e serving bench skipped: PJRT unavailable (stub xla build)");
@@ -681,5 +747,7 @@ fn main() -> anyhow::Result<()> {
     run_fabric()?;
     println!("-- radix cache: returning users, KV retention vs --no-kv-cache --");
     run_radix_cache()?;
+    println!("-- observability: span tracer on vs off (simulated goodput must not move) --");
+    run_trace_overhead()?;
     Ok(())
 }

@@ -32,7 +32,7 @@ COMMANDS:
         [--no-affinity] [--affinity-bonus F] [--admit-scan K]
         [--no-overlap] [--aging N] [--aging-rounds N]
         [--chaos-seed N] [--chaos-rate F] [--no-rescue] [--retries N]
-        [--deadline-ms N] [--probation N]
+        [--deadline-ms N] [--probation N] [--trace FILE]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
                             optionally across a fleet of registry cards
                             (e.g. --fleet 170hx,90hx) with continuous
@@ -78,7 +78,19 @@ COMMANDS:
                             --deadline-ms stamps a wall-clock SLO on each
                             request, --probation sets the probe serves a
                             recovered card must pass, --no-rescue is the
-                            ablation arm that drops a dead card's work
+                            ablation arm that drops a dead card's work.
+                            --trace FILE arms per-request span tracing
+                            (simulated-clock stamps, bounded flight
+                            recorders, per-round fleet time-series) and
+                            writes the JSONL journal to FILE plus a
+                            Perfetto-loadable Chrome trace to
+                            FILE.chrome.json, with a latency-attribution
+                            rollup printed after the fleet report
+  trace <journal> [--chrome FILE]
+                            re-render a --trace journal: parse + validate
+                            every line, list flight dumps, print the
+                            latency-attribution rollup; --chrome re-emits
+                            the Chrome trace view
   help                      this text
 ";
 
@@ -183,6 +195,7 @@ pub fn run(args: &Args) -> Result<i32> {
             Ok(0)
         }
         "serve" => serve(args),
+        "trace" => trace_cmd(args),
         other => bail!("unknown command {other:?}; try `cmphx help`"),
     }
 }
@@ -415,6 +428,10 @@ fn serve(args: &Args) -> Result<i32> {
     } else if args.opt("chaos-rate").is_some() {
         bail!("--chaos-rate needs --chaos-seed (the injector is seed-driven)");
     }
+    // --trace FILE arms the span tracer; the journal + Chrome view are
+    // written after the fleet report, from the tracer's final snapshot.
+    let trace_path = args.opt("trace").map(str::to_string);
+    config.trace = trace_path.is_some();
     println!("compiling artifacts on the PJRT CPU client…");
     let server: ServerHandle = Server::start(artifacts, config)?;
 
@@ -459,7 +476,60 @@ fn serve(args: &Args) -> Result<i32> {
             resp.error.as_deref().map(|e| format!(" ERROR {e}")).unwrap_or_default(),
         );
     }
+    let tracer = server.tracer();
     let fleet = server.shutdown_fleet();
     println!("\n{}", fleet.render());
+    if let Some(path) = trace_path {
+        use crate::obsv::{attribution_rollup, chrome_trace, journal_jsonl};
+        let snap = tracer.snapshot();
+        std::fs::write(&path, journal_jsonl(&snap))?;
+        let chrome = format!("{path}.chrome.json");
+        std::fs::write(&chrome, chrome_trace(&snap))?;
+        println!(
+            "trace: {} span(s), {} flight dump(s), {} series point(s) → {path} \
+             (chrome: {chrome})",
+            snap.events.len(),
+            snap.dumps.len(),
+            snap.series.len()
+        );
+        print!("{}", attribution_rollup(&snap));
+    }
+    Ok(0)
+}
+
+/// `cmphx trace <journal>`: parse a `--trace` journal back, list its
+/// flight dumps, and print the latency-attribution rollup — the offline
+/// reader for journals produced by `serve --trace`.
+fn trace_cmd(args: &Args) -> Result<i32> {
+    use crate::obsv::{attribution_rollup, chrome_trace, parse_journal};
+    let Some(path) = args.pos(0) else {
+        bail!("usage: cmphx trace <journal.jsonl> [--chrome FILE]");
+    };
+    let text = std::fs::read_to_string(path)?;
+    let snap = parse_journal(&text)?;
+    println!(
+        "{}: {} span(s), {} flight dump(s), {} series point(s), {} dispatch tick(s)",
+        path,
+        snap.events.len(),
+        snap.dumps.len(),
+        snap.series.len(),
+        snap.dispatch.len()
+    );
+    for d in &snap.dumps {
+        println!(
+            "flight dump: node {} round {} sim {:.4}s — {} ({} event(s), {} dropped)",
+            d.node,
+            d.round,
+            d.sim_s,
+            d.reason,
+            d.events.len(),
+            d.dropped
+        );
+    }
+    print!("{}", attribution_rollup(&snap));
+    if let Some(out) = args.opt("chrome") {
+        std::fs::write(out, chrome_trace(&snap))?;
+        println!("chrome trace → {out}");
+    }
     Ok(0)
 }

@@ -1,6 +1,8 @@
 //! Serving metrics: counters, latency distribution, and the simulated
 //! device-time/energy overlay — per node, plus fleet-wide aggregation.
 
+use crate::obsv::Attribution;
+
 /// Online latency/throughput accumulator with fixed percentile tracking.
 ///
 /// Recording stays O(1) (append + running sum); percentile reads go
@@ -134,6 +136,12 @@ pub struct Metrics {
     pub fault_downtime_s: f64,
     /// Closed node incidents — with `fault_downtime_s`, yields MTTR.
     pub fault_recoveries: u64,
+    /// Latency-attribution rollup over retired requests: wall queueing
+    /// delay plus the simulated per-phase ledger (prefill / decode /
+    /// stall / replay seconds). Recorded at retire on both the serving
+    /// node's metrics and the billing tenant's rollup; summed fleet-wide
+    /// by [`Metrics::merge`].
+    pub attrib: Attribution,
 }
 
 impl Metrics {
@@ -285,6 +293,7 @@ impl Metrics {
         self.rescue_replay_s += other.rescue_replay_s;
         self.fault_downtime_s += other.fault_downtime_s;
         self.fault_recoveries += other.fault_recoveries;
+        self.attrib.merge(&other.attrib);
         self.latency_sum_s += other.latency_sum_s;
         self.latencies_s.extend_from_slice(&other.latencies_s);
     }
@@ -340,7 +349,8 @@ impl Metrics {
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              faults: rescued={} lost={} retries={} deadline_miss={} degraded={} \
              swapfail={} kept={:.4}s replayed={:.4}s mttr={}\n\
-             latency mean={:.1}ms p50={:.1}ms p99={:.1}ms\n\
+             attrib: queue={:.4}s prefill={:.4}s decode={:.4}s stall={:.4}s replay={:.4}s\n\
+             latency mean={:.1}ms p50={:.1}ms p99={:.1}ms p99.9={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
              simulated device time: {:.4}s ({}× host)  energy {:.2}J → {:.1} tok/J",
             self.requests,
@@ -382,9 +392,15 @@ impl Metrics {
             self.mttr_s()
                 .map(|s| format!("{:.1}ms", s * 1e3))
                 .unwrap_or_else(|| "-".into()),
+            self.attrib.queue_s,
+            self.attrib.prefill_s,
+            self.attrib.decode_s,
+            self.attrib.stall_s,
+            self.attrib.replay_s,
             self.mean_latency().unwrap_or(0.0) * 1e3,
             self.latency_pct(0.5).unwrap_or(0.0) * 1e3,
             self.latency_pct(0.99).unwrap_or(0.0) * 1e3,
+            self.latency_pct(0.999).unwrap_or(0.0) * 1e3,
             self.wall_prefill_s,
             self.wall_decode_s,
             self.tokens_per_sec(),
@@ -459,24 +475,36 @@ impl FleetMetrics {
         let mut out = String::new();
         for (name, m) in &self.nodes {
             out.push_str(&format!(
-                "node {name:<22} req={:<4} tok={:<6} sim {:>8.1} tok/s  {:>6.1} tok/J\n",
+                "node {name:<22} req={:<4} tok={:<6} sim {:>8.1} tok/s  {:>6.1} tok/J  \
+                 attrib q={:.3} pf={:.3} de={:.3} st={:.3} rp={:.3}\n",
                 m.requests,
                 m.tokens_out,
                 m.sim_tokens_per_sec(),
                 m.sim_tokens_per_joule(),
+                m.attrib.queue_s,
+                m.attrib.prefill_s,
+                m.attrib.decode_s,
+                m.attrib.stall_s,
+                m.attrib.replay_s,
             ));
         }
         if self.tenants.len() > 1 {
             for (name, m) in &self.tenants {
                 out.push_str(&format!(
                     "tenant {name:<20} req={:<4} err={:<3} tok={:<6} p99 {:>7.1}ms  \
-                     energy {:>8.2}J stolen={}\n",
+                     energy {:>8.2}J stolen={}  attrib q={:.3} pf={:.3} de={:.3} \
+                     st={:.3} rp={:.3}\n",
                     m.requests,
                     m.errors,
                     m.tokens_out,
                     m.latency_pct(0.99).unwrap_or(0.0) * 1e3,
                     m.simulated_energy_j,
                     m.steals,
+                    m.attrib.queue_s,
+                    m.attrib.prefill_s,
+                    m.attrib.decode_s,
+                    m.attrib.stall_s,
+                    m.attrib.replay_s,
                 ));
             }
         }
@@ -569,6 +597,15 @@ mod tests {
         m.affine_routes = 5;
         m.swap_overlapped_s = 0.075;
         m.swap_stalled_s = 0.05;
+        m.attrib.record(
+            0.125,
+            &crate::obsv::PhaseLedger {
+                prefill_s: 0.25,
+                decode_s: 0.5,
+                stall_s: 0.0625,
+                replay_s: 0.03125,
+            },
+        );
         let s = m.render();
         assert!(s.contains("requests=1"));
         assert!(s.contains("simulated device time"));
@@ -592,6 +629,30 @@ mod tests {
         assert!(s.contains("saved_resurrected_sim=0.1250s"), "{s}");
         assert!(s.contains("migrations=2 deferred=3"), "{s}");
         assert!(s.contains("hidden=0.0750s stalled=0.0500s"), "{s}");
+        assert!(
+            s.contains(
+                "attrib: queue=0.1250s prefill=0.2500s decode=0.5000s \
+                 stall=0.0625s replay=0.0312s"
+            ),
+            "{s}"
+        );
+        assert!(s.contains("p99.9="), "{s}");
+    }
+
+    #[test]
+    fn p999_renders_and_reaches_the_extreme_tail() {
+        // 499 fast samples and one 10 s straggler: the nearest-rank p99
+        // stays fast while p99.9 must surface the straggler
+        // (round(499·0.999) = 499, the last sorted index).
+        let mut m = Metrics::new();
+        for _ in 0..499 {
+            m.record_response(0.010, 1, true);
+        }
+        m.record_response(10.0, 1, true);
+        assert!(m.latency_pct(0.99).unwrap() < 0.02);
+        assert!(m.latency_pct(0.999).unwrap() >= 9.0, "p99.9 sees the straggler");
+        let s = m.render();
+        assert!(s.contains("p99.9=10000.0ms"), "{s}");
     }
 
     #[test]
@@ -846,6 +907,54 @@ mod tests {
             swapped.total().latency_pct(0.99).map(f64::to_bits),
             total.latency_pct(0.99).map(f64::to_bits)
         );
+    }
+
+    #[test]
+    fn fleet_merge_attribution_over_skewed_node_distributions() {
+        // Node A retires many queue-bound requests, node B a few
+        // replay-heavy rescues. The fleet rollup must be the exact sum of
+        // both nodes' phase seconds — order-independent, no averaging —
+        // and show up in the rendered node and fleet lines.
+        use crate::obsv::PhaseLedger;
+        let mut a = Metrics::new();
+        for _ in 0..10 {
+            a.attrib.record(
+                0.4,
+                &PhaseLedger { prefill_s: 0.01, decode_s: 0.05, ..PhaseLedger::default() },
+            );
+        }
+        let mut b = Metrics::new();
+        for _ in 0..2 {
+            b.attrib.record(
+                0.01,
+                &PhaseLedger {
+                    prefill_s: 0.02,
+                    decode_s: 0.1,
+                    stall_s: 0.3,
+                    replay_s: 1.5,
+                },
+            );
+        }
+        let fm = FleetMetrics {
+            nodes: vec![("queuey", a.clone()), ("replayy", b.clone())],
+            tenants: Vec::new(),
+        };
+        let total = fm.total();
+        assert!((total.attrib.queue_s - (10.0 * 0.4 + 2.0 * 0.01)).abs() < 1e-9);
+        assert!((total.attrib.prefill_s - (10.0 * 0.01 + 2.0 * 0.02)).abs() < 1e-9);
+        assert!((total.attrib.decode_s - (10.0 * 0.05 + 2.0 * 0.1)).abs() < 1e-9);
+        assert!((total.attrib.stall_s - 0.6).abs() < 1e-9);
+        assert!((total.attrib.replay_s - 3.0).abs() < 1e-9);
+        assert!(
+            (total.attrib.total_s() - (a.attrib.total_s() + b.attrib.total_s())).abs() < 1e-9
+        );
+        // order-independent
+        let swapped = FleetMetrics { nodes: vec![("replayy", b), ("fast", a)], tenants: vec![] };
+        assert!((swapped.total().attrib.total_s() - total.attrib.total_s()).abs() < 1e-12);
+        let s = fm.render();
+        assert!(s.contains("attrib q=4.000"), "queuey's node line: {s}");
+        assert!(s.contains("rp=3.000"), "replayy's node line shows the replay skew: {s}");
+        assert!(s.contains("attrib: queue=4.0200s"), "fleet aggregate sums both: {s}");
     }
 
     #[test]

@@ -61,6 +61,31 @@
 //! tax, and the prefix-hit/CoW/swap ledgers for any mix of registry
 //! cards — per node *and* per tenant.
 //!
+//! The whole pipeline is **observable** through [`crate::obsv`]: every
+//! request carries a [`crate::obsv::TraceId`] (its request id) and each
+//! stage taps typed span events into per-node bounded flight-recorder
+//! rings ([`crate::obsv::Tracer`]), stamped with the node's *simulated*
+//! clock so traces replay bit-identically across runs. The tap points,
+//! in pipeline order: the dispatch stage journals `queued` / `requeued` /
+//! `aged` / `dispatched` / `shed` / `deadline_miss` on its pseudo-node
+//! ring and samples admission-queue depth, per-lane WFQ deficits, and
+//! per-node outstanding counts each dispatch tick; each worker journals
+//! `admitted` (with prefix-cache hits), `prefill`, per-round
+//! `decode_round`, `preempted`/`swap_out`/`parked`, `swap_in`/`replayed`
+//! on comeback, `migrated`, chaos `fault`s, `rescued` off a corpse, and
+//! terminal `retired` (carrying the request's
+//! [`crate::obsv::PhaseLedger`] — prefill/decode/stall/replay seconds) or
+//! `failed`, plus a per-round [`crate::obsv::SeriesPoint`] (queue depth,
+//! live/parked sequences, pinned/cached/free pages, host-pool bytes,
+//! simulated watts). The dispatcher drains every ring into the retained
+//! log each loop; a chaos death, deadline miss, or terminal error snapshots
+//! the victim's ring into a flight dump first, so the moments before a
+//! crash always survive. `serve --trace FILE` exports the JSONL journal +
+//! a Perfetto-loadable Chrome trace (see `docs/perfetto.md`), and the
+//! latency-attribution rollup (queue vs prefill vs decode vs stall vs
+//! replay, per node and per tenant) folds into
+//! [`metrics::FleetMetrics::render`].
+//!
 //! The fleet is **self-healing** under the fault model salvage mining
 //! cards earn ([`crate::faults`]): a seeded [`crate::faults::FaultPlan`]
 //! can kill a card mid-decode, stall it, downgrade its PCIe link, lose

@@ -3,6 +3,7 @@
 use std::sync::mpsc::Sender;
 use std::time::Instant;
 
+use crate::obsv::{PhaseLedger, TraceId};
 use crate::qos::TenantId;
 
 /// State a request accumulates across re-entries into the admission
@@ -20,7 +21,9 @@ pub struct Carried {
     pub queue_s: f64,
     pub prefill_s: f64,
     pub decode_s: f64,
-    pub sim_s: f64,
+    /// Simulated device seconds split by phase (prefill / decode / stall
+    /// / replay) — the latency-attribution ledger.
+    pub ledger: PhaseLedger,
     pub sim_j: f64,
     pub preemptions: u64,
     pub swaps: u64,
@@ -87,8 +90,12 @@ pub struct GenResponse {
     /// Wall-clock decode time, seconds.
     pub decode_s: f64,
     /// Simulated device time for the same work on the serving card,
-    /// seconds (the timing-model overlay; see DESIGN.md §E2E).
+    /// seconds (the timing-model overlay; see DESIGN.md §E2E). The sum
+    /// of [`GenResponse::ledger`]'s phases.
     pub simulated_device_s: f64,
+    /// Per-phase split of the simulated device time: prefill vs decode
+    /// vs swap-stall vs replay-recompute seconds.
+    pub ledger: PhaseLedger,
     /// Times this request was preempted under KV page pressure and later
     /// resumed (each resume recomputed prefill and replayed the tokens
     /// generated so far — unless the eviction swapped, see
@@ -107,6 +114,10 @@ pub struct GenResponse {
     /// healthy node) report the node the router would have picked, or 0
     /// when routing never happened.
     pub node: usize,
+    /// The request's trace id in the flight-recorder journal
+    /// ([`crate::obsv`]): look up `"trace":N` lines (and the `[trace N]`
+    /// suffix on error strings) to reconstruct this request's lifecycle.
+    pub trace: TraceId,
 }
 
 impl GenResponse {
@@ -136,13 +147,16 @@ mod tests {
             prefill_s: 0.2,
             decode_s: 0.3,
             simulated_device_s: 0.05,
+            ledger: PhaseLedger { prefill_s: 0.02, decode_s: 0.03, ..PhaseLedger::default() },
             preemptions: 0,
             swaps: 0,
             rescues: 0,
             node: 0,
+            trace: TraceId(1),
         };
         assert!(r.ok());
         assert!((r.latency_s() - 0.6).abs() < 1e-12);
+        assert!((r.ledger.device_s() - r.simulated_device_s).abs() < 1e-12);
     }
 
     #[test]
@@ -179,14 +193,17 @@ mod tests {
                 prefill_s: 0.0,
                 decode_s: 0.0,
                 simulated_device_s: 0.0,
+                ledger: PhaseLedger::default(),
                 preemptions: 0,
                 swaps: 0,
                 rescues: 0,
                 node: 0,
+                trace: TraceId(7),
             })
             .unwrap();
         let resp = rx.recv().unwrap();
         assert_eq!(resp.id, 7);
         assert_eq!(resp.tenant, TenantId(2));
+        assert_eq!(resp.trace, TraceId(7));
     }
 }

@@ -378,6 +378,13 @@ impl Fleet {
     pub fn total_assigned(&self) -> u64 {
         self.nodes.iter().map(|n| n.assigned).sum()
     }
+
+    /// Per-node outstanding work units — the routing state the trace
+    /// journal's dispatch samples carry
+    /// ([`crate::obsv::DispatchPoint::outstanding`]).
+    pub fn outstanding_snapshot(&self) -> Vec<u64> {
+        self.nodes.iter().map(|n| n.outstanding).collect()
+    }
 }
 
 #[cfg(test)]

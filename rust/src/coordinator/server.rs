@@ -73,6 +73,9 @@ use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
 use crate::llm::quant;
 use crate::memhier::pcie::PcieLink;
+use crate::obsv::{
+    DispatchPoint, PhaseLedger, SeriesPoint, SpanKind, TraceId, Tracer, NODE_SCOPE, RING_CAP,
+};
 use crate::qos::{
     Admission, AdmissionQueue, NodeQueues, Popped, QosConfig, TenantAccounts, TenantId,
     TenantRegistry, WaitPop,
@@ -148,6 +151,13 @@ pub struct ServerConfig {
     /// simulated clock. Off (`--no-overlap`) charges transfers serially,
     /// the pre-fabric baseline.
     pub overlap: bool,
+    /// Flight-recorder tracing ([`crate::obsv`]): per-request span
+    /// journals on every node's simulated clock, per-round fleet
+    /// time-series, and automatic ring dumps on chaos deaths and terminal
+    /// errors. Off (the default) compiles the tracer down to early
+    /// returns — every stamp is simulated-clock, so tracing can never
+    /// move the simulated numbers either way.
+    pub trace: bool,
 }
 
 impl Default for ServerConfig {
@@ -164,6 +174,7 @@ impl Default for ServerConfig {
             faults: None,
             affinity: true,
             overlap: true,
+            trace: false,
         }
     }
 }
@@ -196,6 +207,8 @@ pub struct ServerHandle {
     tenant_metrics: Arc<Vec<Mutex<Metrics>>>,
     registry: Arc<TenantRegistry>,
     fleet: Arc<Mutex<Fleet>>,
+    /// The fleet's flight recorder (disabled unless [`ServerConfig::trace`]).
+    tracer: Arc<Tracer>,
     /// Wall-clock deadline stamped on every submission (None = no SLO).
     deadline: Option<Duration>,
     next_id: std::sync::atomic::AtomicU64,
@@ -371,6 +384,9 @@ impl Server {
             .faults
             .as_ref()
             .map(|plan| Arc::new(FaultInjector::new(plan, nodes.len())));
+        // The flight recorder: one ring per worker plus the dispatch
+        // stage's pseudo-node, shared by every layer that emits spans.
+        let tracer = Arc::new(Tracer::new(nodes.len(), RING_CAP, config.trace));
         let mut overlays: Vec<Overlay> = Vec::with_capacity(nodes.len());
         let mut workers = Vec::with_capacity(nodes.len());
         let mut node_metrics = Vec::with_capacity(nodes.len());
@@ -404,6 +420,7 @@ impl Server {
             let host_pool = Arc::clone(&host_pool);
             let park = Arc::clone(&park);
             let overlap = config.overlap;
+            let tracer = Arc::clone(&tracer);
 
             let worker = std::thread::Builder::new()
                 .name(format!("cmphx-node{i}"))
@@ -495,6 +512,7 @@ impl Server {
                         rescue,
                         recovery,
                         injector,
+                        tracer,
                         degrade: Degrade::default(),
                         base_blocks,
                         base_max_batch,
@@ -545,6 +563,7 @@ impl Server {
             node_depth: config.qos.node_queue_depth.max(1),
             directory: config.affinity.then(|| Arc::clone(&directory)),
             block_positions: config.batch.block_positions(),
+            tracer: Arc::clone(&tracer),
         };
         let dispatcher = std::thread::Builder::new()
             .name("cmphx-dispatch".into())
@@ -559,6 +578,7 @@ impl Server {
             tenant_metrics,
             registry,
             fleet,
+            tracer,
             deadline: config.recovery.deadline,
             next_id: std::sync::atomic::AtomicU64::new(1),
         })
@@ -596,13 +616,21 @@ struct Dispatcher {
     /// KV block granularity — the chain-hash chunk size must match the
     /// pagers' so directory lookups compare like with like.
     block_positions: usize,
+    /// Flight recorder: queue-side spans journal on the dispatch
+    /// pseudo-node's ring, and the dispatcher drains every ring per loop.
+    tracer: Arc<Tracer>,
 }
 
 impl Dispatcher {
     fn run(mut self) {
         let mut open = true;
+        let mut tick: u64 = 0;
         loop {
             let now = Instant::now();
+            // Flight-recorder drain: move every node's buffered spans
+            // into the retained log so the rings stay near-empty (the
+            // rings still dump on their own if a node dies mid-round).
+            self.tracer.drain();
             self.drain_rescues(now);
             self.promote_delayed(now);
             // Ingest: wait briefly when nothing is queued for dispatch —
@@ -661,7 +689,10 @@ impl Dispatcher {
                 self.queue.pop_eligible(|t, cost| acc.rate_ok(t, cost, now))
             };
             match popped {
-                Popped::Item(t, req) => self.dispatch(t, req, now),
+                Popped::Item(t, req) => {
+                    self.dispatch(t, req, now);
+                    self.sample_tick(&mut tick);
+                }
                 Popped::Blocked(head_cost) => {
                     // Every queued lane is rate-deferred: sleep until the
                     // nearest bucket could cover the cheapest refused head
@@ -705,15 +736,37 @@ impl Dispatcher {
             self.promote_delayed(now);
             while !self.queue.is_empty() && self.queues.any_space(self.node_depth) {
                 match self.queue.pop_eligible(|_, _| true) {
-                    Popped::Item(t, req) => self.dispatch(t, req, now),
+                    Popped::Item(t, req) => {
+                        self.dispatch(t, req, now);
+                        self.sample_tick(&mut tick);
+                    }
                     _ => break,
                 }
             }
+            self.tracer.drain();
         }
         self.fail_parked("no healthy nodes (worker unavailable)");
+        self.tracer.drain();
+    }
+
+    /// Record one dispatch-stage trace sample: admission-queue depth, the
+    /// WFQ lanes' deficit counters, and the router's outstanding work.
+    fn sample_tick(&self, tick: &mut u64) {
+        if !self.tracer.enabled() {
+            return;
+        }
+        self.tracer.set_round(self.tracer.dispatch_node(), *tick);
+        self.tracer.sample_dispatch(DispatchPoint {
+            tick: *tick,
+            queued: self.queue.len(),
+            lane_deficits: self.queue.lane_deficits(),
+            outstanding: self.fleet.lock().unwrap().outstanding_snapshot(),
+        });
+        *tick += 1;
     }
 
     fn enqueue(&mut self, r: GenRequest) {
+        self.tracer.emit(self.tracer.dispatch_node(), TraceId(r.id), SpanKind::Queued);
         // Service is measured in generated tokens — the unit the overlay
         // prices and the DRR deficit counts.
         self.queue.push(r.tenant, r.max_tokens as f64, r);
@@ -737,11 +790,14 @@ impl Dispatcher {
     /// turn and holds replayable progress that ages badly. Retries park in
     /// `delayed` until their exponential backoff elapses.
     fn requeue(&mut self, rq: Requeue, now: Instant) {
+        let dn = self.tracer.dispatch_node();
         match rq {
             Requeue::Rescue(req) => {
+                self.tracer.emit(dn, TraceId(req.id), SpanKind::Requeued);
                 self.queue.push_front(req.tenant, Self::remaining_cost(&req), req);
             }
             Requeue::Retry(req) => {
+                self.tracer.emit(dn, TraceId(req.id), SpanKind::Requeued);
                 let due = now + backoff_delay(self.recovery.backoff, req.carry.attempt);
                 self.delayed.push((due, req));
             }
@@ -790,6 +846,9 @@ impl Dispatcher {
         // card: routing it would burn node time on an answer the client
         // has already given up on.
         if req.deadline.is_some_and(|d| now >= d) {
+            let dn = self.tracer.dispatch_node();
+            self.tracer.emit(dn, TraceId(req.id), SpanKind::DeadlineMiss);
+            self.tracer.flight_dump(dn, "deadline miss at dispatch");
             self.tenant_metrics[t.0].lock().unwrap().deadline_misses += 1;
             self.accounts
                 .lock()
@@ -847,8 +906,16 @@ impl Dispatcher {
             req.charged_j = est_j;
         }
         loop {
+            let trace = TraceId(req.id);
             match self.queues.push_bounded(idx, req, self.node_depth) {
-                Ok(()) => return,
+                Ok(()) => {
+                    self.tracer.emit(
+                        self.tracer.dispatch_node(),
+                        trace,
+                        SpanKind::Dispatched { node: idx },
+                    );
+                    return;
+                }
                 Err(bounced) => {
                     req = bounced;
                     let any_healthy = {
@@ -880,6 +947,13 @@ impl Dispatcher {
     /// rollup always; on the node's metrics only when a node was actually
     /// involved (`on_node` — the dead-fleet path the old dispatch had).
     fn shed(&self, req: GenRequest, node: usize, why: &str, on_node: bool) {
+        if self.tracer.enabled() {
+            self.tracer.emit(
+                self.tracer.dispatch_node(),
+                TraceId(req.id),
+                SpanKind::Shed { error: why.to_string() },
+            );
+        }
         // fold in queue time banked across earlier dispatch attempts
         let queue_s = req.carry.queue_s + req.enqueued.elapsed().as_secs_f64();
         if on_node {
@@ -971,6 +1045,13 @@ impl ServerHandle {
     /// The server's tenant table.
     pub fn registry(&self) -> &TenantRegistry {
         &self.registry
+    }
+
+    /// The fleet's flight recorder — clone the `Arc` before shutdown to
+    /// snapshot/export the journal after the fleet has drained. Disabled
+    /// (every call an early return) unless [`ServerConfig::trace`].
+    pub fn tracer(&self) -> Arc<Tracer> {
+        Arc::clone(&self.tracer)
     }
 
     /// Operator hook: restore a node to the routable set (the worker
@@ -1107,6 +1188,9 @@ struct NodeWorker {
     recovery: RecoveryPolicy,
     /// Seeded fault script for this fleet (chaos runs only).
     injector: Option<Arc<FaultInjector>>,
+    /// Flight recorder: this worker journals engine spans on its own ring,
+    /// stamped with its simulated clock.
+    tracer: Arc<Tracer>,
     /// Live degraded-mode state accumulated from injected faults.
     degrade: Degrade,
     /// KV capacity at startup — the denominator for pro-rata admission
@@ -1127,7 +1211,9 @@ struct Live {
     /// Wall decode seconds accumulated before the last (re)join — preempted
     /// stretches are summed here, the current stretch in `decode_started`.
     decode_s: f64,
-    sim_s: f64,
+    /// Simulated device seconds split by phase (prefill / decode / stall /
+    /// replay) — summed, the request's simulated latency.
+    ledger: PhaseLedger,
     sim_j: f64,
     preemptions: u64,
     /// Preemptions that swapped to host RAM instead of recomputing.
@@ -1161,7 +1247,8 @@ struct Preempted {
     queue_s: f64,
     prefill_s: f64,
     decode_s: f64,
-    sim_s: f64,
+    /// Simulated per-phase device seconds accrued before the park.
+    ledger: PhaseLedger,
     sim_j: f64,
     preemptions: u64,
     /// Preemptions that swapped to host RAM instead of recomputing.
@@ -1297,9 +1384,9 @@ impl ParkLot {
     }
 
     /// Whether the aging gate is engaged for `node` (any owned entry past
-    /// `aging_rounds`), plus the tenants of entries that *newly* crossed
-    /// the threshold this round (each counted once).
-    fn aging_gate(&self, node: usize, aging_rounds: u64) -> (bool, Vec<TenantId>) {
+    /// `aging_rounds`), plus the `(tenant, request id)` of entries that
+    /// *newly* crossed the threshold this round (each counted once).
+    fn aging_gate(&self, node: usize, aging_rounds: u64) -> (bool, Vec<(TenantId, u64)>) {
         let mut lot = self.parked.lock().unwrap();
         let mut engaged = false;
         let mut newly = Vec::new();
@@ -1308,7 +1395,7 @@ impl ParkLot {
                 engaged = true;
                 if !p.aged {
                     p.aged = true;
-                    newly.push(p.req.tenant);
+                    newly.push((p.req.tenant, p.req.id));
                 }
             }
         }
@@ -1337,6 +1424,11 @@ impl ParkLot {
             .iter()
             .any(|(owner, _)| *owner == node)
     }
+
+    /// Entries owned by `node` — the trace series' park-lot gauge.
+    fn owned_count(&self, node: usize) -> usize {
+        self.parked.lock().unwrap().iter().filter(|(owner, _)| *owner == node).count()
+    }
 }
 
 fn worker_loop(mut w: NodeWorker) {
@@ -1357,8 +1449,13 @@ fn worker_loop(mut w: NodeWorker) {
     let mut published: std::collections::HashSet<u64> = std::collections::HashSet::new();
     let mut published_epoch: u64 = 0;
     let mut synced = false;
+    // Engine-round counter — the coordinate every span this worker emits
+    // is stamped with (alongside its simulated clock).
+    let mut round: u64 = 0;
 
     while open || !live.is_empty() || park.has_owned(w.node) {
+        round += 1;
+        w.tracer.set_round(w.node, round);
         // --- injected faults (chaos runs): a scripted death hands every
         //     queued, live, and parked sequence back to the dispatch
         //     stage for rescue; lesser faults degrade this round. ---
@@ -1443,8 +1540,9 @@ fn worker_loop(mut w: NodeWorker) {
         let (aged_parked, newly_aged) = park.aging_gate(w.node, w.policy.aging_rounds);
         if !newly_aged.is_empty() {
             w.metrics.lock().unwrap().aged_promotions += newly_aged.len() as u64;
-            for t in &newly_aged {
+            for &(t, id) in &newly_aged {
                 w.tenant_metrics[t.0].lock().unwrap().aged_promotions += 1;
+                w.tracer.emit(w.node, TraceId(id), SpanKind::Aged);
             }
         }
         // --- prefix-aware admission at the capacity edge: plan_admission
@@ -1670,19 +1768,32 @@ fn worker_loop(mut w: NodeWorker) {
             // A thermal throttle stretches every simulated decode step
             // this round; the token stream itself is unchanged.
             let slow = w.degrade.decode_factor();
+            let mut round_s = 0.0;
             for &idx in &plan {
                 let l = &mut live[idx];
                 let token = *l.tokens.last().unwrap();
                 match w.runtime.decode(&mut l.state, token) {
                     Ok(()) => {
                         l.tokens.push(l.state.argmax());
-                        l.sim_s += w.overlay.decode_s_per_token * slow;
+                        l.ledger.decode_s += w.overlay.decode_s_per_token * slow;
                         l.sim_j += w.overlay.decode_s_per_token * slow * w.overlay.decode_w;
+                        round_s += w.overlay.decode_s_per_token * slow;
                     }
                     Err(e) => l.failed = Some(format!("decode failed: {e}")),
                 }
             }
             w.degrade.tick_round();
+            // The round advances this node's simulated clock by the device
+            // seconds it charged; the span is stamped at the round's end.
+            if w.tracer.enabled() {
+                w.tracer.advance(w.node, round_s);
+                w.tracer.emit(
+                    w.node,
+                    NODE_SCOPE,
+                    SpanKind::DecodeRound { seqs: plan.len(), sim_s: round_s },
+                );
+                sample_series(&w, &live, round, round_s);
+            }
         }
 
         // --- retire finished sequences; their pages free for the next
@@ -1702,12 +1813,34 @@ fn worker_loop(mut w: NodeWorker) {
     w.directory.clear(w.node);
 }
 
+/// Snapshot one node's gauges into the trace time-series after a decode
+/// round: queue depth, decode-set size, park-lot occupancy, KV page
+/// tiers, fleet host-pool bytes, and the simulated draw of the round just
+/// charged. Stamped with the node's simulated clock, never wall time.
+fn sample_series(w: &NodeWorker, live: &[Live], round: u64, round_s: f64) {
+    let (_, sim_s) = w.tracer.now(w.node);
+    w.tracer.sample(SeriesPoint {
+        node: w.node,
+        round,
+        sim_s,
+        queue_depth: w.queues.len(w.node),
+        live_seqs: live.len(),
+        parked_seqs: w.park.owned_count(w.node),
+        pinned_blocks: w.pager.used_blocks(),
+        cached_blocks: w.pager.cached_blocks(),
+        free_blocks: w.pager.free_blocks(),
+        host_pool_bytes: w.host_pool.lock().unwrap().used_bytes(),
+        watts: if round_s > 0.0 { w.overlay.decode_w } else { 0.0 },
+    });
+}
+
 /// Poll the fault script and apply this round's events to the worker.
 /// Returns true when the node dies (the caller unwinds through [`died`]).
 fn apply_faults(w: &mut NodeWorker) -> bool {
     let Some(injector) = w.injector.clone() else { return false };
     let mut dead = false;
     for kind in injector.begin_round(w.node) {
+        w.tracer.emit(w.node, NODE_SCOPE, SpanKind::Fault { kind: kind.name() });
         match kind {
             FaultKind::NodeDeath => dead = true,
             FaultKind::TransientStall { rounds } => {
@@ -1761,7 +1894,10 @@ fn died(w: &mut NodeWorker, live: Vec<Live>) {
     // count — no progress was at risk).
     for req in w.queues.kill_node(w.node) {
         w.fleet.lock().unwrap().complete(w.node);
-        requeue_or_lose(w, req);
+        let trace = TraceId(req.id);
+        if requeue_or_lose(w, req) {
+            w.tracer.emit(w.node, trace, SpanKind::Rescued { from: w.node });
+        }
     }
     let now = Instant::now();
     for l in live {
@@ -1773,7 +1909,7 @@ fn died(w: &mut NodeWorker, live: Vec<Live>) {
             queue_s: l.queue_s,
             prefill_s: l.prefill_s,
             decode_s,
-            sim_s: l.sim_s,
+            ledger: l.ledger,
             sim_j: l.sim_j,
             preemptions: l.preemptions,
             swaps: l.swaps,
@@ -1781,9 +1917,11 @@ fn died(w: &mut NodeWorker, live: Vec<Live>) {
             attempt: req.carry.attempt,
         };
         req.enqueued = now;
-        let (tenant, kept_s) = (req.tenant, req.carry.sim_s);
+        let (tenant, kept_s) = (req.tenant, req.carry.ledger.device_s());
+        let trace = TraceId(req.id);
         w.fleet.lock().unwrap().complete(w.node);
         if requeue_or_lose(w, req) {
+            w.tracer.emit(w.node, trace, SpanKind::Rescued { from: w.node });
             count_rescue(w, tenant, kept_s);
         }
     }
@@ -1801,7 +1939,7 @@ fn died(w: &mut NodeWorker, live: Vec<Live>) {
             queue_s,
             prefill_s: p.prefill_s,
             decode_s: p.decode_s,
-            sim_s: p.sim_s,
+            ledger: p.ledger,
             sim_j: p.sim_j,
             preemptions: p.preemptions,
             swaps: p.swaps,
@@ -1809,12 +1947,18 @@ fn died(w: &mut NodeWorker, live: Vec<Live>) {
             attempt: req.carry.attempt,
         };
         req.enqueued = now;
-        let (tenant, kept_s) = (req.tenant, req.carry.sim_s);
+        let (tenant, kept_s) = (req.tenant, req.carry.ledger.device_s());
+        let trace = TraceId(req.id);
         w.fleet.lock().unwrap().complete(w.node);
         if requeue_or_lose(w, req) {
+            w.tracer.emit(w.node, trace, SpanKind::Rescued { from: w.node });
             count_rescue(w, tenant, kept_s);
         }
     }
+    // The dead node's last moments, preserved verbatim: the ring's
+    // undrained tail (faults, rescues, the rounds before the death) moves
+    // into a flight dump the exporter writes as one `flight_dump` line.
+    w.tracer.flight_dump(w.node, "node death");
 }
 
 /// Book one successful rescue hand-back on the node and tenant rollups.
@@ -1888,12 +2032,14 @@ fn migrate_parked(w: &mut NodeWorker, park: &ParkLot, live: &mut Vec<Live>) -> b
         Claim::Empty => return false,
     };
     let tenant = p.req.tenant;
+    let trace = TraceId(p.req.id);
     // Re-book the router slot onto this card up front: resume's terminal
     // failure path completes the slot on `w.node`, and retire later
     // completes it there too.
     w.fleet.lock().unwrap().reassign(victim, w.node);
     match resume(w, p, live) {
         Resumed::Joined => {
+            w.tracer.emit(w.node, trace, SpanKind::Migrated { from: victim });
             w.metrics.lock().unwrap().migrations += 1;
             w.tenant_metrics[tenant.0].lock().unwrap().migrations += 1;
             true
@@ -2035,9 +2181,19 @@ fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool 
             }
             credit_prefix_hits(w, cached, resurrected);
             let prefill_s = t0.elapsed().as_secs_f64();
-            let (sim_s, sim_j) = if replay.is_empty() {
+            let trace = TraceId(req.id);
+            w.tracer.emit(w.node, trace, SpanKind::Admitted { cached_tokens: cached });
+            // A rescue re-enters with the dead node's ledger; fresh
+            // requests start from zero. Either way the admission charge
+            // advances this node's simulated clock, and the span is
+            // stamped at the phase's end.
+            let mut ledger = req.carry.ledger;
+            let sim_j = if replay.is_empty() {
                 let s = w.overlay.prefill_s_per_token * (cfg.prefill_t - cached) as f64;
-                (s, s * w.overlay.prefill_w)
+                ledger.prefill_s += s;
+                w.tracer.advance(w.node, s);
+                w.tracer.emit(w.node, trace, SpanKind::Prefill { sim_s: s });
+                s * w.overlay.prefill_w
             } else {
                 // The replay is priced like a recompute-resume: prefill
                 // minus prefix credit, plus the replayed decode steps.
@@ -2045,7 +2201,10 @@ fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool 
                 let s = w.overlay.recompute_s(cfg.prefill_t - cached, steps);
                 let j = w.overlay.recompute_j(cfg.prefill_t - cached, steps);
                 w.metrics.lock().unwrap().rescue_replay_s += s;
-                (s, j)
+                ledger.replay_s += s;
+                w.tracer.advance(w.node, s);
+                w.tracer.emit(w.node, trace, SpanKind::Replayed { tokens: steps, sim_s: s });
+                j
             };
             let tokens =
                 if replay.is_empty() { vec![state.argmax()] } else { replay };
@@ -2053,7 +2212,7 @@ fn admit(w: &mut NodeWorker, mut req: GenRequest, live: &mut Vec<Live>) -> bool 
                 queue_s,
                 prefill_s: req.carry.prefill_s + prefill_s,
                 decode_s: req.carry.decode_s,
-                sim_s: req.carry.sim_s + sim_s,
+                ledger,
                 sim_j: req.carry.sim_j + sim_j,
                 preemptions: req.carry.preemptions,
                 swaps: req.carry.swaps,
@@ -2197,7 +2356,9 @@ fn preempt(w: &mut NodeWorker, l: Live, concurrent: usize) {
             && w.host_pool.lock().unwrap().try_reserve(kv_bytes);
     }
     w.pager.release(l.kv).expect("page accounting");
-    let (mut sim_s, mut sim_j) = (l.sim_s, l.sim_j);
+    let trace = TraceId(l.req.id);
+    w.tracer.emit(w.node, trace, SpanKind::Preempted { swapped: swap });
+    let (mut ledger, mut sim_j) = (l.ledger, l.sim_j);
     let (swapped, swap_bytes) = if swap {
         // Swap-out: the pages leave the device over the host link now.
         // With overlap on, the DMA rides under the survivors' decode
@@ -2211,8 +2372,14 @@ fn preempt(w: &mut NodeWorker, l: Live, concurrent: usize) {
             0.0
         };
         let (hidden, stall) = overlap_transfer(t_out, round_s);
-        sim_s += stall;
+        ledger.stall_s += stall;
         sim_j += t_out * SWAP_LINK_W;
+        w.tracer.advance(w.node, stall);
+        w.tracer.emit(
+            w.node,
+            trace,
+            SpanKind::SwapOut { bytes: kv_bytes, stall_s: stall },
+        );
         {
             let mut m = w.metrics.lock().unwrap();
             m.preemptions += 1;
@@ -2227,13 +2394,14 @@ fn preempt(w: &mut NodeWorker, l: Live, concurrent: usize) {
         w.metrics.lock().unwrap().preemptions += 1;
         (None, 0)
     };
+    w.tracer.emit(w.node, trace, SpanKind::Parked);
     w.park.push_back(w.node, Preempted {
         decode_s: l.decode_s + l.decode_started.elapsed().as_secs_f64(),
         req: l.req,
         tokens: l.tokens,
         queue_s: l.queue_s,
         prefill_s: l.prefill_s,
-        sim_s,
+        ledger,
         sim_j,
         preemptions: l.preemptions + 1,
         swaps: l.swaps + swap as u64,
@@ -2270,6 +2438,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
     // restoring/recomputing or terminally answered.
     let queue_s = p.queue_s_now();
     let replay_steps = p.tokens.len().saturating_sub(1);
+    let trace = TraceId(p.req.id);
     // Injected swap-in failure: the host copy is unreadable. Release the
     // reservation and fall through to the recompute path — greedy decode
     // rebuilds the identical state, so the failure costs time, not
@@ -2306,6 +2475,12 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
             0.0
         };
         let (hidden, stall) = overlap_transfer(t_in, round_s);
+        w.tracer.advance(w.node, stall);
+        w.tracer.emit(
+            w.node,
+            trace,
+            SpanKind::SwapIn { bytes: p.swap_bytes, stall_s: stall },
+        );
         {
             let mut m = w.metrics.lock().unwrap();
             m.resumes += 1;
@@ -2316,6 +2491,8 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
             m.swap_stalled_s += stall;
             m.saved_recompute_s += saved;
         }
+        let mut ledger = p.ledger;
+        ledger.stall_s += stall;
         live.push(Live {
             req: p.req,
             state,
@@ -2324,7 +2501,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
             queue_s,
             prefill_s: p.prefill_s,
             decode_s: p.decode_s,
-            sim_s: p.sim_s + stall,
+            ledger,
             sim_j: p.sim_j + t_in * SWAP_LINK_W,
             preemptions: p.preemptions,
             swaps: p.swaps,
@@ -2358,11 +2535,19 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
     // the bill: resident prompt blocks skip their share of the prefill.
     let wasted_s = w.overlay.recompute_s(cfg.prefill_t - cached, replay_steps);
     let wasted_j = w.overlay.recompute_j(cfg.prefill_t - cached, replay_steps);
+    w.tracer.advance(w.node, wasted_s);
+    w.tracer.emit(
+        w.node,
+        trace,
+        SpanKind::Replayed { tokens: replay_steps, sim_s: wasted_s },
+    );
     {
         let mut m = w.metrics.lock().unwrap();
         m.resumes += 1;
         m.wasted_prefill_s += wasted_s;
     }
+    let mut ledger = p.ledger;
+    ledger.replay_s += wasted_s;
     live.push(Live {
         req: p.req,
         state,
@@ -2371,7 +2556,7 @@ fn resume(w: &mut NodeWorker, mut p: Preempted, live: &mut Vec<Live>) -> Resumed
         queue_s,
         prefill_s: p.prefill_s + recompute_wall_s,
         decode_s: p.decode_s,
-        sim_s: p.sim_s + wasted_s,
+        ledger,
         sim_j: p.sim_j + wasted_j,
         preemptions: p.preemptions,
         swaps: p.swaps,
@@ -2391,32 +2576,54 @@ fn retire(w: &mut NodeWorker, l: Live) {
     w.pager.release(l.kv).expect("page accounting");
     let decode_s = l.decode_s + l.decode_started.elapsed().as_secs_f64();
     let ok = l.failed.is_none();
+    let trace = TraceId(l.req.id);
+    if w.tracer.enabled() {
+        match &l.failed {
+            None => w.tracer.emit(
+                w.node,
+                trace,
+                SpanKind::Retired {
+                    tokens: l.tokens.len(),
+                    queue_s: l.queue_s,
+                    ledger: l.ledger,
+                },
+            ),
+            Some(e) => {
+                w.tracer.emit(w.node, trace, SpanKind::Failed { error: e.clone() });
+                w.tracer.flight_dump(w.node, "terminal error");
+            }
+        }
+    }
     let resp = GenResponse {
         id: l.req.id,
         tenant: l.req.tenant,
         tokens: l.tokens,
-        error: l.failed,
+        error: l.failed.map(|e| format!("{e} [trace {}]", l.req.id)),
         queue_s: l.queue_s,
         prefill_s: l.prefill_s,
         decode_s,
-        simulated_device_s: l.sim_s,
+        simulated_device_s: l.ledger.device_s(),
         preemptions: l.preemptions,
         swaps: l.swaps,
         rescues: l.req.carry.rescues,
         node: w.node,
+        ledger: l.ledger,
+        trace,
     };
     {
         let mut m = w.metrics.lock().unwrap();
         m.wall_prefill_s += l.prefill_s;
         m.wall_decode_s += decode_s;
-        m.simulated_device_s += l.sim_s;
+        m.simulated_device_s += l.ledger.device_s();
         m.simulated_energy_j += l.sim_j;
+        m.attrib.record(l.queue_s, &l.ledger);
         m.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
     {
         let mut tm = w.tenant_metrics[l.req.tenant.0].lock().unwrap();
-        tm.simulated_device_s += l.sim_s;
+        tm.simulated_device_s += l.ledger.device_s();
         tm.simulated_energy_j += l.sim_j;
+        tm.attrib.record(l.queue_s, &l.ledger);
         tm.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
     w.accounts.lock().unwrap().settle_energy(l.req.tenant, l.req.charged_j, l.sim_j);
@@ -2436,6 +2643,10 @@ fn retire(w: &mut NodeWorker, l: Live) {
 /// failing (zero for never-admitted requests) — the tenant's account is
 /// settled to it.
 fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64, actual_j: f64) {
+    if w.tracer.enabled() {
+        w.tracer.emit(w.node, TraceId(req.id), SpanKind::Failed { error: error.clone() });
+        w.tracer.flight_dump(w.node, "terminal error");
+    }
     w.metrics.lock().unwrap().record_response(queue_s, 0, false);
     {
         let mut tm = w.tenant_metrics[req.tenant.0].lock().unwrap();
@@ -2461,7 +2672,7 @@ fn empty_response(
         id,
         tenant,
         tokens: vec![],
-        error,
+        error: error.map(|e| format!("{e} [trace {id}]")),
         queue_s,
         prefill_s: 0.0,
         decode_s: 0.0,
@@ -2470,6 +2681,8 @@ fn empty_response(
         swaps: 0,
         rescues: 0,
         node,
+        ledger: PhaseLedger::default(),
+        trace: TraceId(id),
     }
 }
 
@@ -2490,6 +2703,7 @@ mod tests {
             fleet: Arc::new(Mutex::new(Fleet::uniform(1, 1.0, RoutePolicy::RoundRobin))),
             deadline: None,
             next_id: std::sync::atomic::AtomicU64::new(1),
+            tracer: Arc::new(Tracer::off(1)),
         }
     }
 
@@ -2545,6 +2759,7 @@ mod tests {
             node_depth: 8,
             directory: None,
             block_positions: 16,
+            tracer: Arc::new(Tracer::off(nodes)),
         }
     }
 
@@ -2826,7 +3041,7 @@ mod tests {
             queue_s: 0.0,
             prefill_s: 0.0,
             decode_s: 0.0,
-            sim_s: 0.0,
+            ledger: PhaseLedger::default(),
             sim_j: 0.0,
             preemptions: 1,
             swaps: 0,

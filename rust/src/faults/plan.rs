@@ -31,6 +31,21 @@ pub enum FaultKind {
     ThermalThrottle { factor: f64, rounds: u64 },
 }
 
+impl FaultKind {
+    /// Stable lowercase name — what the trace journal's `fault` spans
+    /// carry ([`crate::obsv::SpanKind::Fault`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::NodeDeath => "node_death",
+            FaultKind::TransientStall { .. } => "transient_stall",
+            FaultKind::LinkDowngrade { .. } => "link_downgrade",
+            FaultKind::VramPageLoss { .. } => "vram_page_loss",
+            FaultKind::SwapInFailure => "swap_in_failure",
+            FaultKind::ThermalThrottle { .. } => "thermal_throttle",
+        }
+    }
+}
+
 /// A [`FaultKind`] scheduled on a node's engine-round clock. Rounds are
 /// the worker's own loop iterations — not wall time — so a script fires
 /// at the same point in the computation regardless of host speed.
@@ -164,6 +179,19 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn fault_kind_names_are_stable() {
+        assert_eq!(FaultKind::NodeDeath.name(), "node_death");
+        assert_eq!(FaultKind::TransientStall { rounds: 2 }.name(), "transient_stall");
+        assert_eq!(FaultKind::LinkDowngrade { lanes: 1 }.name(), "link_downgrade");
+        assert_eq!(FaultKind::VramPageLoss { blocks: 3 }.name(), "vram_page_loss");
+        assert_eq!(FaultKind::SwapInFailure.name(), "swap_in_failure");
+        assert_eq!(
+            FaultKind::ThermalThrottle { factor: 2.0, rounds: 4 }.name(),
+            "thermal_throttle"
+        );
     }
 
     #[test]

@@ -54,6 +54,7 @@ pub mod isa;
 pub mod llm;
 pub mod market;
 pub mod memhier;
+pub mod obsv;
 pub mod power;
 pub mod qos;
 pub mod report;

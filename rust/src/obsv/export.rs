@@ -1,0 +1,984 @@
+//! Journal exporters: JSON-lines, Chrome trace-event (Perfetto-loadable),
+//! and the latency-attribution rollup.
+//!
+//! No serde in the offline crate set, so both writers emit JSON by hand
+//! with canonical formatting (`{:.9}` for seconds, fields in fixed order)
+//! and [`parse_journal`] reads it back with a small depth/string-aware
+//! scanner. Canonical formatting is what makes the determinism acceptance
+//! checkable as *byte equality*: export → parse → export is the identity
+//! on the text, and two runs of the same seeded schedule produce the same
+//! bytes (`same_seed_exports_are_byte_identical` below drives a seeded
+//! [`crate::faults::FaultPlan`] through a scripted tracer twice).
+//!
+//! The Chrome writer maps the journal onto the trace-event format
+//! `chrome://tracing` / [Perfetto](https://ui.perfetto.dev) load
+//! natively: each retired request becomes a row of complete (`ph:"X"`)
+//! per-phase slices reconstructed from its [`PhaseLedger`]
+//! ([`lifecycle_slices`]), node-scoped work (decode rounds, prefills)
+//! becomes slices on thread 0 of the node's process, everything else
+//! becomes instants (`ph:"i"`), and the time-series becomes counter
+//! tracks (`ph:"C"`). Timestamps are simulated microseconds.
+
+use anyhow::{bail, Context};
+
+use super::journal::{FlightDump, TraceSnapshot};
+use super::series::{DispatchPoint, SeriesPoint};
+use super::span::{PhaseLedger, SpanEvent, SpanKind, TraceId, NODE_SCOPE};
+
+// ---------------------------------------------------------------- writing
+
+/// Escape a string for a JSON literal.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn trace_json(t: TraceId) -> String {
+    if t.is_node_scope() {
+        "null".into()
+    } else {
+        t.0.to_string()
+    }
+}
+
+/// The kind-specific fields of one span, as `,"k":v` fragments.
+fn kind_args(kind: &SpanKind) -> String {
+    match kind {
+        SpanKind::Queued
+        | SpanKind::Requeued
+        | SpanKind::Aged
+        | SpanKind::Parked
+        | SpanKind::DeadlineMiss => String::new(),
+        SpanKind::Dispatched { node } => format!(",\"to\":{node}"),
+        SpanKind::Admitted { cached_tokens } => format!(",\"cached_tokens\":{cached_tokens}"),
+        SpanKind::Prefill { sim_s } => format!(",\"phase_s\":{sim_s:.9}"),
+        SpanKind::DecodeRound { seqs, sim_s } => {
+            format!(",\"seqs\":{seqs},\"phase_s\":{sim_s:.9}")
+        }
+        SpanKind::Preempted { swapped } => format!(",\"swapped\":{swapped}"),
+        SpanKind::Migrated { from } | SpanKind::Rescued { from } => format!(",\"from\":{from}"),
+        SpanKind::SwapOut { bytes, stall_s } | SpanKind::SwapIn { bytes, stall_s } => {
+            format!(",\"bytes\":{bytes},\"stall_s\":{stall_s:.9}")
+        }
+        SpanKind::Replayed { tokens, sim_s } => {
+            format!(",\"tokens\":{tokens},\"phase_s\":{sim_s:.9}")
+        }
+        SpanKind::Retired { tokens, queue_s, ledger } => format!(
+            ",\"tokens\":{tokens},\"queue_s\":{queue_s:.9},\"prefill_s\":{:.9},\
+             \"decode_s\":{:.9},\"stall_s\":{:.9},\"replay_s\":{:.9}",
+            ledger.prefill_s, ledger.decode_s, ledger.stall_s, ledger.replay_s
+        ),
+        SpanKind::Failed { error } | SpanKind::Shed { error } => {
+            format!(",\"error\":\"{}\"", esc(error))
+        }
+        SpanKind::Fault { kind } => format!(",\"fault\":\"{kind}\""),
+    }
+}
+
+fn span_obj(e: &SpanEvent) -> String {
+    format!(
+        "{{\"type\":\"span\",\"node\":{},\"seq\":{},\"round\":{},\"sim_s\":{:.9},\
+         \"trace\":{},\"kind\":\"{}\"{}}}",
+        e.node,
+        e.seq,
+        e.round,
+        e.sim_s,
+        trace_json(e.trace),
+        e.kind.name(),
+        kind_args(&e.kind)
+    )
+}
+
+fn dump_line(d: &FlightDump) -> String {
+    let events: Vec<String> = d.events.iter().map(span_obj).collect();
+    format!(
+        "{{\"type\":\"flight_dump\",\"node\":{},\"reason\":\"{}\",\"round\":{},\
+         \"sim_s\":{:.9},\"dropped\":{},\"events\":[{}]}}",
+        d.node,
+        esc(&d.reason),
+        d.round,
+        d.sim_s,
+        d.dropped,
+        events.join(",")
+    )
+}
+
+fn series_line(p: &SeriesPoint) -> String {
+    format!(
+        "{{\"type\":\"series\",\"node\":{},\"round\":{},\"sim_s\":{:.9},\
+         \"queue_depth\":{},\"live_seqs\":{},\"parked_seqs\":{},\"pinned_blocks\":{},\
+         \"cached_blocks\":{},\"free_blocks\":{},\"host_pool_bytes\":{},\"watts\":{:.9}}}",
+        p.node,
+        p.round,
+        p.sim_s,
+        p.queue_depth,
+        p.live_seqs,
+        p.parked_seqs,
+        p.pinned_blocks,
+        p.cached_blocks,
+        p.free_blocks,
+        p.host_pool_bytes,
+        p.watts
+    )
+}
+
+fn dispatch_line(p: &DispatchPoint) -> String {
+    let lanes: Vec<String> = p.lane_deficits.iter().map(|d| format!("{d:.9}")).collect();
+    let outstanding: Vec<String> = p.outstanding.iter().map(|o| o.to_string()).collect();
+    format!(
+        "{{\"type\":\"dispatch\",\"tick\":{},\"queued\":{},\"lane_deficits\":[{}],\
+         \"outstanding\":[{}]}}",
+        p.tick,
+        p.queued,
+        lanes.join(","),
+        outstanding.join(",")
+    )
+}
+
+/// Serialize a snapshot as the JSONL journal: one header line, then every
+/// retained span, flight dump, series point, and dispatch sample — in
+/// canonical order, so identical snapshots are identical bytes.
+pub fn journal_jsonl(snap: &TraceSnapshot) -> String {
+    let dropped: Vec<String> = snap.dropped.iter().map(|d| d.to_string()).collect();
+    let mut out = format!(
+        "{{\"type\":\"trace_header\",\"version\":1,\"nodes\":{},\"dropped\":[{}]}}\n",
+        snap.dropped.len().saturating_sub(1),
+        dropped.join(",")
+    );
+    for e in &snap.events {
+        out.push_str(&span_obj(e));
+        out.push('\n');
+    }
+    for d in &snap.dumps {
+        out.push_str(&dump_line(d));
+        out.push('\n');
+    }
+    for p in &snap.series {
+        out.push_str(&series_line(p));
+        out.push('\n');
+    }
+    for p in &snap.dispatch {
+        out.push_str(&dispatch_line(p));
+        out.push('\n');
+    }
+    out
+}
+
+// ------------------------------------------------------------- lifecycle
+
+/// One reconstructed per-phase slice of a retired request's lifecycle.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Slice {
+    pub name: &'static str,
+    pub start_s: f64,
+    pub dur_s: f64,
+}
+
+/// Reconstruct a retired request's lifecycle slices from its retire
+/// event's ledger: contiguous `queued → prefill → replay → decode →
+/// stall` spans ending at the retire stamp `end_sim_s`, zero-duration
+/// phases omitted. The durations sum to `queue_s + ledger.device_s()` —
+/// the request's end-to-end simulated latency — which the acceptance
+/// test pins.
+pub fn lifecycle_slices(queue_s: f64, ledger: &PhaseLedger, end_sim_s: f64) -> Vec<Slice> {
+    let mut t = end_sim_s - queue_s - ledger.device_s();
+    let mut out = Vec::new();
+    for (name, dur) in [
+        ("queued", queue_s),
+        ("prefill", ledger.prefill_s),
+        ("replay", ledger.replay_s),
+        ("decode", ledger.decode_s),
+        ("stall", ledger.stall_s),
+    ] {
+        if dur > 0.0 {
+            out.push(Slice { name, start_s: t, dur_s: dur });
+        }
+        t += dur;
+    }
+    out
+}
+
+// ---------------------------------------------------------- chrome trace
+
+fn us(s: f64) -> String {
+    format!("{:.3}", s * 1e6)
+}
+
+/// A request's Chrome thread id: trace + 1 so requests never collide with
+/// the node-scope thread 0.
+fn tid(t: TraceId) -> u64 {
+    if t.is_node_scope() {
+        0
+    } else {
+        t.0 + 1
+    }
+}
+
+/// Serialize a snapshot in Chrome trace-event format. `pid` is the node
+/// (the dispatch stage is one past the last worker), `tid` is the request
+/// trace (0 = node-scoped), timestamps are simulated microseconds.
+pub fn chrome_trace(snap: &TraceSnapshot) -> String {
+    let mut evs: Vec<String> = Vec::new();
+    let all: Vec<&SpanEvent> =
+        snap.events.iter().chain(snap.dumps.iter().flat_map(|d| d.events.iter())).collect();
+    for e in all {
+        let (pid, tid) = (e.node, tid(e.trace));
+        match &e.kind {
+            SpanKind::Retired { tokens, queue_s, ledger } => {
+                for s in lifecycle_slices(*queue_s, ledger, e.sim_s) {
+                    evs.push(format!(
+                        "{{\"name\":\"{}\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                         \"pid\":{pid},\"tid\":{tid},\"args\":{{\"trace\":{}}}}}",
+                        s.name,
+                        us(s.start_s),
+                        us(s.dur_s),
+                        trace_json(e.trace)
+                    ));
+                }
+                evs.push(format!(
+                    "{{\"name\":\"retired\",\"ph\":\"i\",\"ts\":{},\"s\":\"t\",\
+                     \"pid\":{pid},\"tid\":{tid},\"args\":{{\"tokens\":{tokens}}}}}",
+                    us(e.sim_s)
+                ));
+            }
+            SpanKind::DecodeRound { seqs, sim_s } => evs.push(format!(
+                "{{\"name\":\"decode_round\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{pid},\"tid\":0,\"args\":{{\"seqs\":{seqs}}}}}",
+                us(e.sim_s - sim_s),
+                us(*sim_s)
+            )),
+            SpanKind::Prefill { sim_s } => evs.push(format!(
+                "{{\"name\":\"prefill\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{pid},\"tid\":{tid},\"args\":{{\"trace\":{}}}}}",
+                us(e.sim_s - sim_s),
+                us(*sim_s),
+                trace_json(e.trace)
+            )),
+            SpanKind::Replayed { tokens, sim_s } => evs.push(format!(
+                "{{\"name\":\"replay\",\"ph\":\"X\",\"ts\":{},\"dur\":{},\
+                 \"pid\":{pid},\"tid\":{tid},\"args\":{{\"tokens\":{tokens}}}}}",
+                us(e.sim_s - sim_s),
+                us(*sim_s)
+            )),
+            kind => {
+                let args = kind_args(kind);
+                // reuse the JSONL arg fragments as instant args
+                let args = if args.is_empty() {
+                    String::new()
+                } else {
+                    args[1..].to_string()
+                };
+                evs.push(format!(
+                    "{{\"name\":\"{}\",\"ph\":\"i\",\"ts\":{},\"s\":\"t\",\
+                     \"pid\":{pid},\"tid\":{tid},\"args\":{{{args}}}}}",
+                    kind.name(),
+                    us(e.sim_s)
+                ));
+            }
+        }
+    }
+    for p in &snap.series {
+        let ts = us(p.sim_s);
+        let pid = p.node;
+        evs.push(format!(
+            "{{\"name\":\"kv_pages\",\"ph\":\"C\",\"ts\":{ts},\"pid\":{pid},\
+             \"args\":{{\"pinned\":{},\"cached\":{},\"free\":{}}}}}",
+            p.pinned_blocks, p.cached_blocks, p.free_blocks
+        ));
+        evs.push(format!(
+            "{{\"name\":\"power_w\",\"ph\":\"C\",\"ts\":{ts},\"pid\":{pid},\
+             \"args\":{{\"w\":{:.3}}}}}",
+            p.watts
+        ));
+        evs.push(format!(
+            "{{\"name\":\"load\",\"ph\":\"C\",\"ts\":{ts},\"pid\":{pid},\
+             \"args\":{{\"queue\":{},\"live\":{},\"parked\":{}}}}}",
+            p.queue_depth, p.live_seqs, p.parked_seqs
+        ));
+        evs.push(format!(
+            "{{\"name\":\"host_pool_bytes\",\"ph\":\"C\",\"ts\":{ts},\"pid\":{pid},\
+             \"args\":{{\"bytes\":{}}}}}",
+            p.host_pool_bytes
+        ));
+    }
+    let dispatch_pid = snap.dropped.len().saturating_sub(1);
+    for p in &snap.dispatch {
+        let ts = format!("{}.000", p.tick);
+        evs.push(format!(
+            "{{\"name\":\"admission_queue\",\"ph\":\"C\",\"ts\":{ts},\"pid\":{dispatch_pid},\
+             \"args\":{{\"queued\":{}}}}}",
+            p.queued
+        ));
+        if !p.lane_deficits.is_empty() {
+            let lanes: Vec<String> = p
+                .lane_deficits
+                .iter()
+                .enumerate()
+                .map(|(i, d)| format!("\"lane{i}\":{d:.3}"))
+                .collect();
+            evs.push(format!(
+                "{{\"name\":\"lane_deficit\",\"ph\":\"C\",\"ts\":{ts},\
+                 \"pid\":{dispatch_pid},\"args\":{{{}}}}}",
+                lanes.join(",")
+            ));
+        }
+        if !p.outstanding.is_empty() {
+            let nodes: Vec<String> = p
+                .outstanding
+                .iter()
+                .enumerate()
+                .map(|(i, o)| format!("\"node{i}\":{o}"))
+                .collect();
+            evs.push(format!(
+                "{{\"name\":\"outstanding\",\"ph\":\"C\",\"ts\":{ts},\
+                 \"pid\":{dispatch_pid},\"args\":{{{}}}}}",
+                nodes.join(",")
+            ));
+        }
+    }
+    format!("{{\"traceEvents\":[\n{}\n]}}\n", evs.join(",\n"))
+}
+
+// ---------------------------------------------------------------- rollup
+
+/// Human-readable latency-attribution rollup over a snapshot's retired
+/// spans, per node plus a total — what `cmphx trace` prints.
+pub fn attribution_rollup(snap: &TraceSnapshot) -> String {
+    use super::span::Attribution;
+    let nodes = snap.dropped.len().saturating_sub(1).max(1);
+    let mut per: Vec<(Attribution, u64)> = vec![(Attribution::default(), 0); nodes];
+    let all = snap.events.iter().chain(snap.dumps.iter().flat_map(|d| d.events.iter()));
+    for e in all {
+        if let SpanKind::Retired { queue_s, ledger, .. } = &e.kind {
+            if let Some((a, n)) = per.get_mut(e.node) {
+                a.record(*queue_s, ledger);
+                *n += 1;
+            }
+        }
+    }
+    let mut total = (Attribution::default(), 0u64);
+    let mut out = String::new();
+    for (i, (a, n)) in per.iter().enumerate() {
+        total.0.merge(a);
+        total.1 += n;
+        out.push_str(&format!(
+            "node {i}: {n} retired | queue={:.4}s prefill={:.4}s decode={:.4}s \
+             stall={:.4}s replay={:.4}s\n",
+            a.queue_s, a.prefill_s, a.decode_s, a.stall_s, a.replay_s
+        ));
+    }
+    let (a, n) = total;
+    out.push_str(&format!(
+        "total : {n} retired | queue={:.4}s prefill={:.4}s decode={:.4}s \
+         stall={:.4}s replay={:.4}s\n",
+        a.queue_s, a.prefill_s, a.decode_s, a.stall_s, a.replay_s
+    ));
+    out
+}
+
+// ---------------------------------------------------------------- parsing
+
+/// Find the raw value of `"key":` at depth 1 of one JSON object,
+/// string- and nesting-aware (keys inside nested values or string
+/// literals are never matched).
+fn raw_field<'a>(obj: &'a str, key: &str) -> Option<&'a str> {
+    let pat = format!("\"{key}\":");
+    let b = obj.as_bytes();
+    let (mut i, mut depth) = (0usize, 0i32);
+    let (mut in_str, mut escaped) = (false, false);
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == b'\\' {
+                escaped = true;
+            } else if c == b'"' {
+                in_str = false;
+            }
+            i += 1;
+            continue;
+        }
+        match c {
+            b'"' => {
+                if depth == 1 && obj[i..].starts_with(&pat) {
+                    let start = i + pat.len();
+                    return Some(&obj[start..value_end(obj, start)]);
+                }
+                in_str = true;
+            }
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' => depth -= 1,
+            _ => {}
+        }
+        i += 1;
+    }
+    None
+}
+
+/// End of the JSON value starting at `start`: the next `,`/`}`/`]` at the
+/// value's own depth.
+fn value_end(obj: &str, start: usize) -> usize {
+    let b = obj.as_bytes();
+    let (mut i, mut depth) = (start, 0i32);
+    let (mut in_str, mut escaped) = (false, false);
+    while i < b.len() {
+        let c = b[i];
+        if in_str {
+            if escaped {
+                escaped = false;
+            } else if c == b'\\' {
+                escaped = true;
+            } else if c == b'"' {
+                in_str = false;
+            }
+            i += 1;
+            continue;
+        }
+        match c {
+            b'"' => in_str = true,
+            b'{' | b'[' => depth += 1,
+            b'}' | b']' if depth > 0 => depth -= 1,
+            b'}' | b']' => return i,
+            b',' if depth == 0 => return i,
+            _ => {}
+        }
+        i += 1;
+    }
+    i
+}
+
+/// Split a JSON array body (no outer brackets) into its top-level
+/// element slices.
+fn split_elems(body: &str) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut start = 0usize;
+    while start < body.len() {
+        let end = value_end(body, start);
+        let piece = body[start..end].trim();
+        if !piece.is_empty() {
+            out.push(piece);
+        }
+        start = end + 1;
+    }
+    out
+}
+
+fn unesc(s: &str) -> anyhow::Result<String> {
+    let mut out = String::with_capacity(s.len());
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            Some('n') => out.push('\n'),
+            Some('r') => out.push('\r'),
+            Some('t') => out.push('\t'),
+            Some('u') => {
+                let hex: String = (&mut chars).take(4).collect();
+                let code = u32::from_str_radix(&hex, 16).context("bad \\u escape")?;
+                out.push(char::from_u32(code).context("bad \\u codepoint")?);
+            }
+            other => bail!("unknown escape \\{other:?}"),
+        }
+    }
+    Ok(out)
+}
+
+fn u64_field(obj: &str, key: &str) -> anyhow::Result<u64> {
+    raw_field(obj, key)
+        .with_context(|| format!("missing field {key}"))?
+        .trim()
+        .parse()
+        .with_context(|| format!("bad u64 field {key}"))
+}
+
+fn usize_field(obj: &str, key: &str) -> anyhow::Result<usize> {
+    Ok(u64_field(obj, key)? as usize)
+}
+
+fn f64_field(obj: &str, key: &str) -> anyhow::Result<f64> {
+    raw_field(obj, key)
+        .with_context(|| format!("missing field {key}"))?
+        .trim()
+        .parse()
+        .with_context(|| format!("bad f64 field {key}"))
+}
+
+fn bool_field(obj: &str, key: &str) -> anyhow::Result<bool> {
+    match raw_field(obj, key).with_context(|| format!("missing field {key}"))?.trim() {
+        "true" => Ok(true),
+        "false" => Ok(false),
+        other => bail!("bad bool field {key}: {other}"),
+    }
+}
+
+fn str_field(obj: &str, key: &str) -> anyhow::Result<String> {
+    let raw = raw_field(obj, key).with_context(|| format!("missing field {key}"))?.trim();
+    let inner = raw
+        .strip_prefix('"')
+        .and_then(|r| r.strip_suffix('"'))
+        .with_context(|| format!("field {key} is not a string: {raw}"))?;
+    unesc(inner)
+}
+
+fn trace_field(obj: &str) -> anyhow::Result<TraceId> {
+    match raw_field(obj, "trace").context("missing field trace")?.trim() {
+        "null" => Ok(NODE_SCOPE),
+        n => Ok(TraceId(n.parse().context("bad trace id")?)),
+    }
+}
+
+fn parse_span(obj: &str) -> anyhow::Result<SpanEvent> {
+    let kind_name = str_field(obj, "kind")?;
+    let kind = match kind_name.as_str() {
+        "queued" => SpanKind::Queued,
+        "requeued" => SpanKind::Requeued,
+        "aged" => SpanKind::Aged,
+        "parked" => SpanKind::Parked,
+        "deadline_miss" => SpanKind::DeadlineMiss,
+        "dispatched" => SpanKind::Dispatched { node: usize_field(obj, "to")? },
+        "admitted" => SpanKind::Admitted { cached_tokens: usize_field(obj, "cached_tokens")? },
+        "prefill" => SpanKind::Prefill { sim_s: f64_field(obj, "phase_s")? },
+        "decode_round" => SpanKind::DecodeRound {
+            seqs: usize_field(obj, "seqs")?,
+            sim_s: f64_field(obj, "phase_s")?,
+        },
+        "preempted" => SpanKind::Preempted { swapped: bool_field(obj, "swapped")? },
+        "migrated" => SpanKind::Migrated { from: usize_field(obj, "from")? },
+        "rescued" => SpanKind::Rescued { from: usize_field(obj, "from")? },
+        "swap_out" => SpanKind::SwapOut {
+            bytes: u64_field(obj, "bytes")?,
+            stall_s: f64_field(obj, "stall_s")?,
+        },
+        "swap_in" => SpanKind::SwapIn {
+            bytes: u64_field(obj, "bytes")?,
+            stall_s: f64_field(obj, "stall_s")?,
+        },
+        "replayed" => SpanKind::Replayed {
+            tokens: usize_field(obj, "tokens")?,
+            sim_s: f64_field(obj, "phase_s")?,
+        },
+        "retired" => SpanKind::Retired {
+            tokens: usize_field(obj, "tokens")?,
+            queue_s: f64_field(obj, "queue_s")?,
+            ledger: PhaseLedger {
+                prefill_s: f64_field(obj, "prefill_s")?,
+                decode_s: f64_field(obj, "decode_s")?,
+                stall_s: f64_field(obj, "stall_s")?,
+                replay_s: f64_field(obj, "replay_s")?,
+            },
+        },
+        "failed" => SpanKind::Failed { error: str_field(obj, "error")? },
+        "shed" => SpanKind::Shed { error: str_field(obj, "error")? },
+        "fault" => {
+            // fault names come from FaultKind::name(); map back to the
+            // static str so the roundtrip stays byte-identical
+            let name = str_field(obj, "fault")?;
+            let known = [
+                "node_death",
+                "transient_stall",
+                "link_downgrade",
+                "vram_page_loss",
+                "swap_in_failure",
+                "thermal_throttle",
+            ];
+            let kind = known
+                .iter()
+                .find(|k| **k == name)
+                .with_context(|| format!("unknown fault kind {name}"))?;
+            SpanKind::Fault { kind }
+        }
+        other => bail!("unknown span kind {other}"),
+    };
+    Ok(SpanEvent {
+        seq: u64_field(obj, "seq")?,
+        node: usize_field(obj, "node")?,
+        round: u64_field(obj, "round")?,
+        sim_s: f64_field(obj, "sim_s")?,
+        trace: trace_field(obj)?,
+        kind,
+    })
+}
+
+fn parse_array_u64(obj: &str, key: &str) -> anyhow::Result<Vec<u64>> {
+    let raw = raw_field(obj, key).with_context(|| format!("missing field {key}"))?.trim();
+    let body = raw
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .with_context(|| format!("field {key} is not an array"))?;
+    split_elems(body)
+        .into_iter()
+        .map(|e| e.parse().with_context(|| format!("bad u64 in {key}")))
+        .collect()
+}
+
+fn parse_array_f64(obj: &str, key: &str) -> anyhow::Result<Vec<f64>> {
+    let raw = raw_field(obj, key).with_context(|| format!("missing field {key}"))?.trim();
+    let body = raw
+        .strip_prefix('[')
+        .and_then(|r| r.strip_suffix(']'))
+        .with_context(|| format!("field {key} is not an array"))?;
+    split_elems(body)
+        .into_iter()
+        .map(|e| e.parse().with_context(|| format!("bad f64 in {key}")))
+        .collect()
+}
+
+/// Parse a JSONL journal back into a [`TraceSnapshot`] — the `trace` CLI
+/// command's reader, and the well-formedness gate the trace smoke
+/// asserts (every line must parse, every span kind must be known).
+pub fn parse_journal(text: &str) -> anyhow::Result<TraceSnapshot> {
+    let mut snap = TraceSnapshot::default();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("journal line {}", lineno + 1);
+        let ty = str_field(line, "type").with_context(ctx)?;
+        match ty.as_str() {
+            "trace_header" => {
+                snap.dropped = parse_array_u64(line, "dropped").with_context(ctx)?;
+            }
+            "span" => snap.events.push(parse_span(line).with_context(ctx)?),
+            "flight_dump" => {
+                let body = raw_field(line, "events").context("missing dump events")?;
+                let body = body
+                    .trim()
+                    .strip_prefix('[')
+                    .and_then(|r| r.strip_suffix(']'))
+                    .context("dump events is not an array")?;
+                let events = split_elems(body)
+                    .into_iter()
+                    .map(parse_span)
+                    .collect::<anyhow::Result<Vec<_>>>()
+                    .with_context(ctx)?;
+                snap.dumps.push(FlightDump {
+                    node: usize_field(line, "node").with_context(ctx)?,
+                    reason: str_field(line, "reason").with_context(ctx)?,
+                    round: u64_field(line, "round").with_context(ctx)?,
+                    sim_s: f64_field(line, "sim_s").with_context(ctx)?,
+                    dropped: u64_field(line, "dropped").with_context(ctx)?,
+                    events,
+                });
+            }
+            "series" => snap.series.push(SeriesPoint {
+                node: usize_field(line, "node").with_context(ctx)?,
+                round: u64_field(line, "round").with_context(ctx)?,
+                sim_s: f64_field(line, "sim_s").with_context(ctx)?,
+                queue_depth: usize_field(line, "queue_depth").with_context(ctx)?,
+                live_seqs: usize_field(line, "live_seqs").with_context(ctx)?,
+                parked_seqs: usize_field(line, "parked_seqs").with_context(ctx)?,
+                pinned_blocks: usize_field(line, "pinned_blocks").with_context(ctx)?,
+                cached_blocks: usize_field(line, "cached_blocks").with_context(ctx)?,
+                free_blocks: usize_field(line, "free_blocks").with_context(ctx)?,
+                host_pool_bytes: u64_field(line, "host_pool_bytes").with_context(ctx)?,
+                watts: f64_field(line, "watts").with_context(ctx)?,
+            }),
+            "dispatch" => snap.dispatch.push(DispatchPoint {
+                tick: u64_field(line, "tick").with_context(ctx)?,
+                queued: usize_field(line, "queued").with_context(ctx)?,
+                lane_deficits: parse_array_f64(line, "lane_deficits").with_context(ctx)?,
+                outstanding: parse_array_u64(line, "outstanding").with_context(ctx)?,
+            }),
+            other => bail!("{}: unknown line type {other}", ctx()),
+        }
+    }
+    Ok(snap)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultInjector, FaultKind, FaultPlan};
+    use crate::obsv::journal::Tracer;
+
+    /// A deterministic single-threaded fleet story driven by a seeded
+    /// fault script: 2 nodes, 16 rounds, six requests queued and one full
+    /// rescued lifecycle — the shape the live engine emits, with every
+    /// stamp on the simulated clock.
+    fn scripted_tracer(seed: u64) -> Tracer {
+        let plan = FaultPlan::seeded(seed, 2, 16, 0.3);
+        let inj = FaultInjector::new(&plan, 2);
+        let t = Tracer::new(2, 64, true);
+        let dj = t.dispatch_node();
+        for i in 0..6u64 {
+            t.emit(dj, TraceId(i), SpanKind::Queued);
+            t.emit(dj, TraceId(i), SpanKind::Dispatched { node: (i % 2) as usize });
+        }
+        let mut sim = [0.0f64; 2];
+        for round in 1..=16u64 {
+            for node in 0..2usize {
+                t.set_round(node, round);
+                for f in inj.begin_round(node) {
+                    t.emit(node, NODE_SCOPE, SpanKind::Fault { kind: f.name() });
+                    if f == FaultKind::NodeDeath {
+                        t.emit(node, TraceId(node as u64), SpanKind::Rescued { from: node });
+                        t.flight_dump(node, "node death");
+                    }
+                }
+                t.advance(node, 0.002);
+                sim[node] += 0.002;
+                t.emit(node, NODE_SCOPE, SpanKind::DecodeRound { seqs: 3, sim_s: 0.002 });
+                t.sample(SeriesPoint {
+                    node,
+                    round,
+                    sim_s: sim[node],
+                    queue_depth: (round % 3) as usize,
+                    live_seqs: 3,
+                    pinned_blocks: 10 + round as usize,
+                    cached_blocks: 2,
+                    free_blocks: 20 - round as usize,
+                    watts: 221.5,
+                    ..SeriesPoint::default()
+                });
+            }
+            if round % 4 == 0 {
+                t.drain();
+            }
+            t.sample_dispatch(DispatchPoint {
+                tick: round,
+                queued: (round % 2) as usize,
+                lane_deficits: vec![0.5, -0.25],
+                outstanding: vec![2, 1],
+            });
+        }
+        t.emit(
+            0,
+            TraceId(0),
+            SpanKind::Retired {
+                tokens: 8,
+                queue_s: 0.001,
+                ledger: PhaseLedger {
+                    prefill_s: 0.004,
+                    decode_s: 0.016,
+                    stall_s: 0.0005,
+                    replay_s: 0.002,
+                },
+            },
+        );
+        t
+    }
+
+    #[test]
+    fn same_seed_exports_are_byte_identical() {
+        // The determinism acceptance: the same seeded fault script drives
+        // two independent tracers through the same schedule → the JSONL
+        // journal and the Chrome trace are byte-identical. A different
+        // seed perturbs the fault events and must show in the bytes.
+        let a = scripted_tracer(7).snapshot();
+        let b = scripted_tracer(7).snapshot();
+        assert_eq!(journal_jsonl(&a), journal_jsonl(&b));
+        assert_eq!(chrome_trace(&a), chrome_trace(&b));
+        let c = scripted_tracer(8).snapshot();
+        assert_ne!(journal_jsonl(&a), journal_jsonl(&c));
+    }
+
+    #[test]
+    fn jsonl_roundtrips_byte_identically() {
+        // export → parse → export is the identity on the text: the parser
+        // reconstructs every line type and the writer's formatting is
+        // canonical.
+        let snap = scripted_tracer(42).snapshot();
+        let text = journal_jsonl(&snap);
+        let parsed = parse_journal(&text).unwrap();
+        assert_eq!(journal_jsonl(&parsed), text);
+        // and the chrome view regenerated from the parsed journal matches
+        assert_eq!(chrome_trace(&parsed), chrome_trace(&snap));
+    }
+
+    #[test]
+    fn lifecycle_slices_sum_to_end_to_end_sim_latency() {
+        // The acceptance invariant: a rescued request's reconstructed
+        // per-phase slices are contiguous, end at the retire stamp, and
+        // their durations sum to queue + device seconds — its end-to-end
+        // simulated latency.
+        let ledger = PhaseLedger {
+            prefill_s: 0.004,
+            decode_s: 0.016,
+            stall_s: 0.0005,
+            replay_s: 0.002,
+        };
+        let queue_s = 0.001;
+        let end = 0.125;
+        let slices = lifecycle_slices(queue_s, &ledger, end);
+        assert_eq!(slices.len(), 5, "every nonzero phase appears");
+        let total: f64 = slices.iter().map(|s| s.dur_s).sum();
+        assert!((total - (queue_s + ledger.device_s())).abs() < 1e-12);
+        for w in slices.windows(2) {
+            assert!(
+                (w[0].start_s + w[0].dur_s - w[1].start_s).abs() < 1e-12,
+                "slices are contiguous"
+            );
+        }
+        let last = slices.last().unwrap();
+        assert!((last.start_s + last.dur_s - end).abs() < 1e-12, "lifecycle ends at retire");
+        assert_eq!(
+            slices.iter().map(|s| s.name).collect::<Vec<_>>(),
+            vec!["queued", "prefill", "replay", "decode", "stall"]
+        );
+        // zero-duration phases vanish
+        let fresh = lifecycle_slices(0.0, &PhaseLedger::default(), 1.0);
+        assert!(fresh.is_empty());
+    }
+
+    #[test]
+    fn a_rescued_lifecycle_reconstructs_from_the_journal() {
+        // queued → dispatched → admitted → preempted → rescued → replayed
+        // → retired, as the engine emits it; the chrome export must carry
+        // a slice row whose spans cover the whole simulated latency.
+        let t = Tracer::new(2, 64, true);
+        let dj = t.dispatch_node();
+        let id = TraceId(3);
+        t.emit(dj, id, SpanKind::Queued);
+        t.emit(dj, id, SpanKind::Dispatched { node: 0 });
+        t.emit(0, id, SpanKind::Admitted { cached_tokens: 2 });
+        t.advance(0, 0.004);
+        t.emit(0, id, SpanKind::Prefill { sim_s: 0.004 });
+        t.emit(0, id, SpanKind::Preempted { swapped: false });
+        t.emit(0, id, SpanKind::Rescued { from: 0 });
+        t.emit(dj, id, SpanKind::Requeued);
+        t.emit(dj, id, SpanKind::Dispatched { node: 1 });
+        t.emit(1, id, SpanKind::Admitted { cached_tokens: 0 });
+        t.advance(1, 0.006);
+        t.emit(1, id, SpanKind::Replayed { tokens: 4, sim_s: 0.002 });
+        t.advance(1, 0.016);
+        let ledger =
+            PhaseLedger { prefill_s: 0.008, decode_s: 0.012, stall_s: 0.0, replay_s: 0.002 };
+        t.emit(1, id, SpanKind::Retired { tokens: 8, queue_s: 0.003, ledger });
+        let snap = t.snapshot();
+        let text = journal_jsonl(&snap);
+        assert!(text.contains("\"kind\":\"rescued\""), "{text}");
+        let chrome = chrome_trace(&snap);
+        // the retired row's X slices sum to the end-to-end latency
+        let retired = snap
+            .events
+            .iter()
+            .find_map(|e| match &e.kind {
+                SpanKind::Retired { queue_s, ledger, .. } => {
+                    Some(lifecycle_slices(*queue_s, ledger, e.sim_s))
+                }
+                _ => None,
+            })
+            .unwrap();
+        let total: f64 = retired.iter().map(|s| s.dur_s).sum();
+        assert!((total - (0.003 + ledger.device_s())).abs() < 1e-12);
+        assert!(chrome.contains("\"name\":\"replay\""), "{chrome}");
+        assert!(chrome.contains("\"ph\":\"X\""), "{chrome}");
+    }
+
+    #[test]
+    fn chrome_trace_has_the_loadable_shape() {
+        let snap = scripted_tracer(1).snapshot();
+        let c = chrome_trace(&snap);
+        assert!(c.starts_with("{\"traceEvents\":[\n"));
+        assert!(c.ends_with("\n]}\n"));
+        assert!(c.contains("\"ph\":\"X\""), "slices present");
+        assert!(c.contains("\"ph\":\"C\""), "counter tracks present");
+        assert!(c.contains("\"ph\":\"i\""), "instants present");
+        assert!(c.contains("\"name\":\"kv_pages\""));
+        assert!(c.contains("\"name\":\"power_w\""));
+        assert!(c.contains("\"name\":\"lane_deficit\""));
+        // braces balance outside string literals — the loadability smoke
+        let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+        for ch in c.chars() {
+            if in_str {
+                if esc {
+                    esc = false;
+                } else if ch == '\\' {
+                    esc = true;
+                } else if ch == '"' {
+                    in_str = false;
+                }
+                continue;
+            }
+            match ch {
+                '"' => in_str = true,
+                '{' | '[' => depth += 1,
+                '}' | ']' => depth -= 1,
+                _ => {}
+            }
+            assert!(depth >= 0);
+        }
+        assert_eq!(depth, 0, "balanced JSON");
+    }
+
+    #[test]
+    fn error_strings_escape_and_roundtrip() {
+        let t = Tracer::new(1, 8, true);
+        t.emit(
+            0,
+            TraceId(5),
+            SpanKind::Failed { error: "bad \"quote\"\nand \\ backslash [trace 5]".into() },
+        );
+        let snap = t.snapshot();
+        let text = journal_jsonl(&snap);
+        let parsed = parse_journal(&text).unwrap();
+        match &parsed.events[0].kind {
+            SpanKind::Failed { error } => {
+                assert_eq!(error, "bad \"quote\"\nand \\ backslash [trace 5]")
+            }
+            other => panic!("expected failed, got {other:?}"),
+        }
+        assert_eq!(journal_jsonl(&parsed), text);
+    }
+
+    #[test]
+    fn flight_dumps_serialize_with_their_events_inline() {
+        let t = Tracer::new(1, 8, true);
+        t.emit(0, TraceId(1), SpanKind::Admitted { cached_tokens: 0 });
+        t.flight_dump(0, "terminal error: KV pages exhausted [trace 1]");
+        let snap = t.snapshot();
+        let text = journal_jsonl(&snap);
+        assert!(text.contains("\"type\":\"flight_dump\""));
+        let parsed = parse_journal(&text).unwrap();
+        assert_eq!(parsed.dumps.len(), 1);
+        assert_eq!(parsed.dumps[0].events.len(), 1);
+        assert_eq!(parsed.dumps[0].reason, "terminal error: KV pages exhausted [trace 1]");
+        assert_eq!(journal_jsonl(&parsed), text);
+    }
+
+    #[test]
+    fn attribution_rollup_sums_retired_spans_per_node() {
+        let t = Tracer::new(2, 64, true);
+        let l0 = PhaseLedger { prefill_s: 0.1, decode_s: 0.4, ..PhaseLedger::default() };
+        let l1 = PhaseLedger { replay_s: 0.25, stall_s: 0.05, ..PhaseLedger::default() };
+        t.emit(0, TraceId(1), SpanKind::Retired { tokens: 4, queue_s: 0.5, ledger: l0 });
+        t.emit(1, TraceId(2), SpanKind::Retired { tokens: 4, queue_s: 0.25, ledger: l1 });
+        let s = attribution_rollup(&t.snapshot());
+        assert!(s.contains("node 0: 1 retired | queue=0.5000s prefill=0.1000s"), "{s}");
+        assert!(s.contains("node 1: 1 retired"), "{s}");
+        assert!(s.contains("total : 2 retired | queue=0.7500s"), "{s}");
+        assert!(s.contains("replay=0.2500s"), "{s}");
+    }
+
+    #[test]
+    fn malformed_lines_are_rejected_loudly() {
+        assert!(parse_journal("{\"type\":\"span\",\"node\":0}").is_err());
+        assert!(parse_journal("{\"type\":\"mystery\"}").is_err());
+        assert!(
+            parse_journal(
+                "{\"type\":\"span\",\"node\":0,\"seq\":0,\"round\":0,\"sim_s\":0.0,\
+                 \"trace\":null,\"kind\":\"nonsense\"}"
+            )
+            .is_err()
+        );
+        assert!(parse_journal("").unwrap().events.is_empty());
+    }
+}

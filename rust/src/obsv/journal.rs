@@ -1,0 +1,384 @@
+//! Bounded flight-recorder ring journals and the fleet [`Tracer`].
+//!
+//! Each node owns a [`Journal`]: a mutex-guarded ring of the last
+//! [`RING_CAP`] span events plus the node's simulated clock and round
+//! counter. Emission is one short uncontended lock (push + stamp); the
+//! dispatch stage drains every ring into the tracer's retained log on its
+//! loop, so under normal operation the rings stay near-empty and nothing
+//! is lost. When a ring does wrap between drains, the *oldest* entries
+//! drop and a per-ring `dropped` counter records the gap — flight-recorder
+//! semantics: the moments just before a crash are always present.
+//!
+//! [`Tracer::flight_dump`] snapshots a node's ring at the moment of a
+//! chaos death, deadline miss, or terminal error: the ring's current
+//! contents move into a [`FlightDump`] (reason + clock coordinates
+//! attached) that the JSONL exporter writes as a single `flight_dump`
+//! line. The tracer is cheap to disable: `enabled == false` makes every
+//! emit/advance/sample an early return, which is the tracing-off arm of
+//! the `serve_trace_overhead` bench ablation — and because every stamp is
+//! simulated-clock, tracing on can never move the simulated numbers at
+//! all (the analytic overhead bound).
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use super::series::{DispatchPoint, SeriesPoint};
+use super::span::{SpanEvent, SpanKind, TraceId};
+
+/// Ring capacity per node: deep enough to hold several busy rounds of a
+/// full batch, small enough that a forgotten drain cannot grow unbounded.
+pub const RING_CAP: usize = 4096;
+
+struct Ring {
+    events: VecDeque<SpanEvent>,
+    /// Next sequence number — strictly increasing per node, never reused,
+    /// so `(node, seq)` totally orders a node's history across wraps.
+    seq: u64,
+    /// Entries lost to ring wraps since the last drain.
+    dropped: u64,
+    /// The node's simulated clock, seconds.
+    sim_now: f64,
+    /// The node's engine round.
+    round: u64,
+}
+
+/// One node's bounded span ring plus its simulated clock.
+pub struct Journal {
+    node: usize,
+    cap: usize,
+    inner: Mutex<Ring>,
+}
+
+impl Journal {
+    fn new(node: usize, cap: usize) -> Self {
+        assert!(cap > 0, "a flight recorder needs at least one slot");
+        Journal {
+            node,
+            cap,
+            inner: Mutex::new(Ring {
+                events: VecDeque::new(),
+                seq: 0,
+                dropped: 0,
+                sim_now: 0.0,
+                round: 0,
+            }),
+        }
+    }
+
+    pub fn node(&self) -> usize {
+        self.node
+    }
+
+    /// Append one event, stamped with the ring's next seq and the node's
+    /// current (round, simulated-clock) coordinates.
+    pub fn emit(&self, trace: TraceId, kind: SpanKind) {
+        let mut r = self.inner.lock().unwrap();
+        if r.events.len() == self.cap {
+            r.events.pop_front();
+            r.dropped += 1;
+        }
+        let ev = SpanEvent {
+            seq: r.seq,
+            node: self.node,
+            round: r.round,
+            sim_s: r.sim_now,
+            trace,
+            kind,
+        };
+        r.seq += 1;
+        r.events.push_back(ev);
+    }
+
+    /// Advance the node's simulated clock by `d` seconds.
+    pub fn advance(&self, d: f64) {
+        debug_assert!(d >= 0.0, "the simulated clock is monotone");
+        self.inner.lock().unwrap().sim_now += d;
+    }
+
+    /// Set the node's engine round (the worker's loop counter).
+    pub fn set_round(&self, round: u64) {
+        self.inner.lock().unwrap().round = round;
+    }
+
+    /// Current (round, simulated seconds).
+    pub fn now(&self) -> (u64, f64) {
+        let r = self.inner.lock().unwrap();
+        (r.round, r.sim_now)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Take everything buffered, plus the drop count accrued since the
+    /// previous drain.
+    fn drain(&self) -> (Vec<SpanEvent>, u64) {
+        let mut r = self.inner.lock().unwrap();
+        let dropped = std::mem::take(&mut r.dropped);
+        (r.events.drain(..).collect(), dropped)
+    }
+}
+
+/// A ring snapshot taken at a failure: what the node was doing in the
+/// moments before it died / missed a deadline / failed a request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FlightDump {
+    pub node: usize,
+    pub reason: String,
+    /// Node clock coordinates at the dump.
+    pub round: u64,
+    pub sim_s: f64,
+    /// Ring-wrap losses since the last drain (a nonzero value means the
+    /// dump's window is truncated at the old end).
+    pub dropped: u64,
+    pub events: Vec<SpanEvent>,
+}
+
+/// Everything the exporters consume, in canonical order: events sorted by
+/// `(node, seq)` (drain interleaving cannot perturb the output), dumps and
+/// samples in capture order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceSnapshot {
+    pub events: Vec<SpanEvent>,
+    pub dumps: Vec<FlightDump>,
+    pub series: Vec<SeriesPoint>,
+    pub dispatch: Vec<DispatchPoint>,
+    /// Ring-wrap losses over the whole run, per node.
+    pub dropped: Vec<u64>,
+}
+
+/// The fleet-wide trace collector: one [`Journal`] per node plus one for
+/// the dispatch stage, the drained retained log, flight dumps, and the
+/// per-round time-series. Shared as an `Arc` by the dispatcher, every
+/// worker, and the server handle.
+pub struct Tracer {
+    enabled: bool,
+    /// `journals[0..nodes]` are the workers'; the last entry is the
+    /// dispatch stage's (no simulated clock of its own — queue-side
+    /// events are stamped at sim 0 on its ring).
+    journals: Vec<Journal>,
+    drained: Mutex<Vec<SpanEvent>>,
+    dumps: Mutex<Vec<FlightDump>>,
+    series: Mutex<Vec<SeriesPoint>>,
+    dispatch: Mutex<Vec<DispatchPoint>>,
+    dropped: Mutex<Vec<u64>>,
+}
+
+impl Tracer {
+    pub fn new(nodes: usize, cap: usize, enabled: bool) -> Self {
+        Tracer {
+            enabled,
+            journals: (0..=nodes).map(|n| Journal::new(n, cap)).collect(),
+            drained: Mutex::new(Vec::new()),
+            dumps: Mutex::new(Vec::new()),
+            series: Mutex::new(Vec::new()),
+            dispatch: Mutex::new(Vec::new()),
+            dropped: Mutex::new(vec![0; nodes + 1]),
+        }
+    }
+
+    /// A disabled tracer for `nodes` cards: every call is an early return.
+    pub fn off(nodes: usize) -> Self {
+        Tracer::new(nodes, 1, false)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The pseudo-node index the dispatch stage journals under (one past
+    /// the last worker).
+    pub fn dispatch_node(&self) -> usize {
+        self.journals.len() - 1
+    }
+
+    pub fn emit(&self, node: usize, trace: TraceId, kind: SpanKind) {
+        if self.enabled {
+            self.journals[node].emit(trace, kind);
+        }
+    }
+
+    /// Advance `node`'s simulated clock by `d` seconds.
+    pub fn advance(&self, node: usize, d: f64) {
+        if self.enabled {
+            self.journals[node].advance(d);
+        }
+    }
+
+    /// Stamp `node`'s engine round.
+    pub fn set_round(&self, node: usize, round: u64) {
+        if self.enabled {
+            self.journals[node].set_round(round);
+        }
+    }
+
+    /// `node`'s current (round, simulated-seconds) clock coordinates.
+    pub fn now(&self, node: usize) -> (u64, f64) {
+        self.journals[node].now()
+    }
+
+    /// Move every ring's buffered events into the retained log — the
+    /// dispatch stage calls this once per loop.
+    pub fn drain(&self) {
+        if !self.enabled {
+            return;
+        }
+        let mut log = self.drained.lock().unwrap();
+        let mut dropped = self.dropped.lock().unwrap();
+        for (i, j) in self.journals.iter().enumerate() {
+            let (evs, d) = j.drain();
+            log.extend(evs);
+            dropped[i] += d;
+        }
+    }
+
+    /// Snapshot `node`'s ring into a [`FlightDump`] — called on chaos
+    /// death, deadline miss, or terminal error. The dumped events leave
+    /// the ring (they live in the dump from now on).
+    pub fn flight_dump(&self, node: usize, reason: &str) {
+        if !self.enabled {
+            return;
+        }
+        let (round, sim_s) = self.journals[node].now();
+        let (events, dropped) = self.journals[node].drain();
+        self.dumps.lock().unwrap().push(FlightDump {
+            node,
+            reason: reason.to_string(),
+            round,
+            sim_s,
+            dropped,
+            events,
+        });
+    }
+
+    /// Record one per-round fleet sample.
+    pub fn sample(&self, p: SeriesPoint) {
+        if self.enabled {
+            self.series.lock().unwrap().push(p);
+        }
+    }
+
+    /// Record one dispatch-stage sample (tenant deficits, outstanding).
+    pub fn sample_dispatch(&self, p: DispatchPoint) {
+        if self.enabled {
+            self.dispatch.lock().unwrap().push(p);
+        }
+    }
+
+    pub fn dump_count(&self) -> usize {
+        self.dumps.lock().unwrap().len()
+    }
+
+    /// Drain everything and return the canonical snapshot the exporters
+    /// consume. Events are sorted by `(node, seq)` so the output is
+    /// independent of how drains interleaved across the run.
+    pub fn snapshot(&self) -> TraceSnapshot {
+        if !self.enabled {
+            return TraceSnapshot::default();
+        }
+        self.drain();
+        let mut events = self.drained.lock().unwrap().clone();
+        events.sort_by_key(|e| (e.node, e.seq));
+        TraceSnapshot {
+            events,
+            dumps: self.dumps.lock().unwrap().clone(),
+            series: self.series.lock().unwrap().clone(),
+            dispatch: self.dispatch.lock().unwrap().clone(),
+            dropped: self.dropped.lock().unwrap().clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obsv::span::NODE_SCOPE;
+
+    #[test]
+    fn the_ring_is_bounded_and_counts_drops() {
+        let j = Journal::new(0, 3);
+        for i in 0..5u64 {
+            j.emit(TraceId(i), SpanKind::Queued);
+        }
+        assert_eq!(j.len(), 3, "ring holds only the newest cap entries");
+        let (evs, dropped) = j.drain();
+        assert_eq!(dropped, 2, "two oldest entries wrapped out");
+        // the survivors are the newest, with their original seqs intact
+        assert_eq!(evs.iter().map(|e| e.seq).collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(evs[0].trace, TraceId(2));
+        let (evs2, dropped2) = j.drain();
+        assert!(evs2.is_empty());
+        assert_eq!(dropped2, 0, "drain resets the drop counter");
+    }
+
+    #[test]
+    fn events_stamp_the_simulated_clock_not_wall_time() {
+        let j = Journal::new(1, 16);
+        j.set_round(3);
+        j.advance(0.25);
+        j.emit(TraceId(9), SpanKind::Admitted { cached_tokens: 4 });
+        j.advance(0.5);
+        j.emit(NODE_SCOPE, SpanKind::DecodeRound { seqs: 2, sim_s: 0.5 });
+        let (evs, _) = j.drain();
+        assert_eq!(evs[0].round, 3);
+        assert!((evs[0].sim_s - 0.25).abs() < 1e-12);
+        assert!((evs[1].sim_s - 0.75).abs() < 1e-12);
+        assert_eq!(evs[0].node, 1);
+        assert_eq!(j.now(), (3, 0.75));
+    }
+
+    #[test]
+    fn tracer_drains_rings_into_the_retained_log_in_canonical_order() {
+        let t = Tracer::new(2, 8, true);
+        t.emit(1, TraceId(5), SpanKind::Queued);
+        t.emit(0, TraceId(4), SpanKind::Queued);
+        t.drain();
+        t.emit(0, TraceId(4), SpanKind::Admitted { cached_tokens: 0 });
+        let snap = t.snapshot();
+        // sorted by (node, seq): node 0's two events, then node 1's one
+        assert_eq!(snap.events.len(), 3);
+        assert_eq!(snap.events[0].node, 0);
+        assert_eq!(snap.events[1].kind.name(), "admitted");
+        assert_eq!(snap.events[2].node, 1);
+        assert_eq!(t.dispatch_node(), 2, "one pseudo-node past the workers");
+    }
+
+    #[test]
+    fn flight_dump_snapshots_the_ring_at_the_failure() {
+        let t = Tracer::new(1, 8, true);
+        t.set_round(0, 2);
+        t.emit(0, TraceId(1), SpanKind::Admitted { cached_tokens: 0 });
+        t.drain(); // earlier history already retained
+        t.emit(0, TraceId(1), SpanKind::Preempted { swapped: false });
+        t.flight_dump(0, "node death");
+        let snap = t.snapshot();
+        assert_eq!(snap.dumps.len(), 1);
+        let d = &snap.dumps[0];
+        assert_eq!(d.reason, "node death");
+        assert_eq!(d.round, 2);
+        assert_eq!(d.events.len(), 1, "the dump holds the undrained tail");
+        assert_eq!(d.events[0].kind.name(), "preempted");
+        // dumped events left the ring: the retained log has only the
+        // earlier drained event
+        assert_eq!(snap.events.len(), 1);
+        assert_eq!(snap.events[0].kind.name(), "admitted");
+    }
+
+    #[test]
+    fn a_disabled_tracer_records_nothing() {
+        let t = Tracer::off(2);
+        t.emit(0, TraceId(1), SpanKind::Queued);
+        t.advance(0, 1.0);
+        t.sample(SeriesPoint { node: 0, ..SeriesPoint::default() });
+        t.flight_dump(0, "ignored");
+        let snap = t.snapshot();
+        assert!(snap.events.is_empty());
+        assert!(snap.dumps.is_empty());
+        assert!(snap.series.is_empty());
+        assert!(!t.enabled());
+    }
+}

@@ -1,0 +1,42 @@
+//! Flight-recorder observability: per-request span tracing, bounded ring
+//! journals, per-round fleet time-series, and exporters.
+//!
+//! The serving pipeline's visibility layer. Every request carries a
+//! [`TraceId`] (its server-assigned id) and every stage taps into a
+//! shared [`Tracer`]:
+//!
+//! - the **dispatch stage** journals queue-side events (queued, aged,
+//!   requeued, dispatched, shed, deadline-miss) on a pseudo-node ring and
+//!   drains every ring once per loop;
+//! - each **worker** journals engine events (admitted, prefill, decode
+//!   rounds, preempt/park/swap/migrate, rescue/replay, retire/fail) on
+//!   its own ring, stamped with its **simulated** clock — never wall
+//!   time — so the journal is byte-identical across runs of the same
+//!   seeded schedule;
+//! - failures ([`crate::faults`] chaos deaths, deadline misses, terminal
+//!   errors) trigger a [`FlightDump`]: the ring's last moments, preserved
+//!   verbatim;
+//! - once per round each worker records a [`SeriesPoint`] (queue depth,
+//!   KV page tiers, host-pool bytes, simulated watts) and the dispatcher
+//!   a [`DispatchPoint`] (tenant deficits, per-node outstanding).
+//!
+//! Exporters ([`journal_jsonl`], [`chrome_trace`]) write the snapshot as
+//! a JSON-lines journal and a Chrome trace-event file Perfetto loads
+//! directly; [`parse_journal`] reads the JSONL back (the `trace` CLI
+//! command re-renders from it) and [`attribution_rollup`] answers "where
+//! did the latency go" — queue vs prefill vs decode vs stall vs replay —
+//! from the retired spans alone. Per-request phase seconds live in a
+//! [`PhaseLedger`]; the per-node/per-tenant aggregate is an
+//! [`Attribution`] carried by [`crate::coordinator::Metrics`].
+
+mod export;
+mod journal;
+mod series;
+mod span;
+
+pub use export::{
+    attribution_rollup, chrome_trace, journal_jsonl, lifecycle_slices, parse_journal, Slice,
+};
+pub use journal::{FlightDump, Journal, TraceSnapshot, Tracer, RING_CAP};
+pub use series::{DispatchPoint, SeriesPoint};
+pub use span::{Attribution, PhaseLedger, SpanEvent, SpanKind, TraceId, NODE_SCOPE};

@@ -1,0 +1,65 @@
+//! Per-round fleet time-series samples.
+//!
+//! Two shapes: a [`SeriesPoint`] per (node, round) — the worker snapshots
+//! its queue depth, pager page tiers, host-pool occupancy, and simulated
+//! power draw once per engine round — and a [`DispatchPoint`] per
+//! dispatch-stage drain tick, carrying the WFQ tenant-deficit counters
+//! and the router's outstanding-work snapshot. Both are stamped on
+//! simulated/logical clocks only, exported as `series`/`dispatch` JSONL
+//! lines and as Chrome counter tracks (`ph:"C"`), so "what was the fleet
+//! doing at round R when the card died" has a recorded answer.
+
+/// One node's gauges at one engine round.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SeriesPoint {
+    pub node: usize,
+    pub round: u64,
+    /// The node's simulated clock at the sample, seconds.
+    pub sim_s: f64,
+    /// Requests waiting on the node's bounded work queue.
+    pub queue_depth: usize,
+    /// Sequences in the decode set.
+    pub live_seqs: usize,
+    /// This node's sequences in the shared park lot.
+    pub parked_seqs: usize,
+    /// KV blocks with live holders (the pinned tier).
+    pub pinned_blocks: usize,
+    /// Refcount-zero blocks retained by the radix tree.
+    pub cached_blocks: usize,
+    /// Truly-free blocks (allocatable without reclaim).
+    pub free_blocks: usize,
+    /// Fleet host-pool bytes in use (swap-parked sequences).
+    pub host_pool_bytes: u64,
+    /// Simulated draw this round, watts (0 when the card idled).
+    pub watts: f64,
+}
+
+/// The dispatch stage's sample at one drain tick: fairness and routing
+/// state that lives queue-side, not on any node.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct DispatchPoint {
+    /// The dispatch loop's drain counter (its logical clock).
+    pub tick: u64,
+    /// Requests waiting in the admission queue.
+    pub queued: usize,
+    /// Per-tenant DRR deficit counters, lane order (empty on the FIFO
+    /// ablation arm).
+    pub lane_deficits: Vec<f64>,
+    /// Per-node outstanding work units from the router.
+    pub outstanding: Vec<u64>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_zeroed() {
+        let p = SeriesPoint::default();
+        assert_eq!(p.queue_depth, 0);
+        assert_eq!(p.watts, 0.0);
+        let d = DispatchPoint::default();
+        assert!(d.lane_deficits.is_empty());
+        assert!(d.outstanding.is_empty());
+    }
+}

@@ -1,0 +1,270 @@
+//! Typed span events on the simulated clock.
+//!
+//! Every event the serving pipeline emits is a [`SpanEvent`]: a
+//! [`SpanKind`] stamped with the emitting node, the node's engine round,
+//! and the node's **simulated** clock ([`crate::obsv::Journal`] assigns
+//! the per-ring sequence number). Wall time never appears in a span —
+//! the simulated clock is derived purely from the calibrated overlay
+//! charges, so a single-threaded replay of the same schedule produces a
+//! byte-identical journal regardless of host speed (the determinism the
+//! chaos smoke asserts). Requests are identified by [`TraceId`], the
+//! server-assigned request id, which is also threaded into
+//! [`crate::coordinator::GenResponse`] and error strings (`[trace N]`) so
+//! a client can locate its journal lines from the failure it received.
+
+use std::fmt;
+
+/// One request's identity across every node it touches: the id the
+/// server assigned at submission. Carried in
+/// [`crate::coordinator::GenResponse::trace`] and appended to error
+/// strings as `[trace N]`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TraceId(pub u64);
+
+/// The reserved id for node-scoped events — decode rounds, faults,
+/// series samples — that belong to no single request.
+pub const NODE_SCOPE: TraceId = TraceId(u64::MAX);
+
+impl TraceId {
+    /// Is this the node-scoped pseudo-trace?
+    pub fn is_node_scope(&self) -> bool {
+        *self == NODE_SCOPE
+    }
+}
+
+impl fmt::Display for TraceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.is_node_scope() {
+            write!(f, "node")
+        } else {
+            write!(f, "{}", self.0)
+        }
+    }
+}
+
+/// Simulated device seconds a request accumulates, split by phase — the
+/// latency-attribution ledger. Replaces the old scalar `sim_s` on the
+/// live/parked/carried sequence state, so "where did this request's
+/// simulated latency go" is answerable per request, not just per node:
+///
+/// - `prefill_s` — fresh prefill of uncached prompt positions;
+/// - `decode_s` — productive decode rounds;
+/// - `stall_s` — swap transfer tails the engine actually waited for
+///   (the overhang past the concurrent round, plus swap-in restores);
+/// - `replay_s` — recompute paid to faults and drop-preemptions: rescue
+///   replay on a survivor, resume-recompute after an eviction.
+///
+/// The sum is the request's end-to-end simulated device latency
+/// ([`PhaseLedger::device_s`] — what `GenResponse::simulated_device_s`
+/// reports), and the per-phase split is what the Chrome-trace exporter
+/// renders as the request's lifecycle slices.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseLedger {
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub stall_s: f64,
+    pub replay_s: f64,
+}
+
+impl PhaseLedger {
+    /// End-to-end simulated device latency: the phase sum.
+    pub fn device_s(&self) -> f64 {
+        self.prefill_s + self.decode_s + self.stall_s + self.replay_s
+    }
+
+    /// Fold another ledger in (a rescue carries the dead node's phases).
+    pub fn add(&mut self, other: &PhaseLedger) {
+        self.prefill_s += other.prefill_s;
+        self.decode_s += other.decode_s;
+        self.stall_s += other.stall_s;
+        self.replay_s += other.replay_s;
+    }
+}
+
+/// Per-node / per-tenant latency-attribution rollup: wall queueing delay
+/// plus the simulated phase ledger, summed over retired requests.
+/// [`crate::coordinator::Metrics`] carries one and merges it fleet-wide.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Attribution {
+    /// Wall-clock queueing delay, seconds (submit → admission).
+    pub queue_s: f64,
+    pub prefill_s: f64,
+    pub decode_s: f64,
+    pub stall_s: f64,
+    pub replay_s: f64,
+}
+
+impl Attribution {
+    /// Fold one retired request in.
+    pub fn record(&mut self, queue_s: f64, ledger: &PhaseLedger) {
+        self.queue_s += queue_s;
+        self.prefill_s += ledger.prefill_s;
+        self.decode_s += ledger.decode_s;
+        self.stall_s += ledger.stall_s;
+        self.replay_s += ledger.replay_s;
+    }
+
+    /// Fold another rollup in (fleet/tenant aggregation).
+    pub fn merge(&mut self, other: &Attribution) {
+        self.queue_s += other.queue_s;
+        self.prefill_s += other.prefill_s;
+        self.decode_s += other.decode_s;
+        self.stall_s += other.stall_s;
+        self.replay_s += other.replay_s;
+    }
+
+    pub fn total_s(&self) -> f64 {
+        self.queue_s + self.prefill_s + self.decode_s + self.stall_s + self.replay_s
+    }
+}
+
+/// What happened. Request-scoped kinds carry the request's [`TraceId`]
+/// on their [`SpanEvent`]; node-scoped kinds (decode rounds, faults) use
+/// [`NODE_SCOPE`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpanKind {
+    /// Entered the QoS admission queue (dispatch-stage journal).
+    Queued,
+    /// A rescue/retry re-entered the queue ahead of the backlog.
+    Requeued,
+    /// The aging promoter held new admissions for a parked sequence.
+    Aged,
+    /// Routed onto `node`'s bounded work queue.
+    Dispatched { node: usize },
+    /// The worker admitted it into its decode set; `cached_tokens`
+    /// prompt positions were already resident (prefix hits).
+    Admitted { cached_tokens: usize },
+    /// Fresh prefill charged `sim_s` to the simulated clock.
+    Prefill { sim_s: f64 },
+    /// One continuous-batching decode round of `seqs` sequences
+    /// (node-scoped; `sim_s` is the round's simulated duration).
+    DecodeRound { seqs: usize, sim_s: f64 },
+    /// Evicted under KV page pressure; `swapped` = pages parked in host
+    /// RAM instead of dropped.
+    Preempted { swapped: bool },
+    /// Entered the fleet-shared park lot.
+    Parked,
+    /// A foreign idle card claimed this parked sequence off node `from`
+    /// (live migration).
+    Migrated { from: usize },
+    /// KV pages moved device → host; `stall_s` is the transfer tail the
+    /// round could not hide.
+    SwapOut { bytes: u64, stall_s: f64 },
+    /// KV pages restored host → device.
+    SwapIn { bytes: u64, stall_s: f64 },
+    /// Re-queued off dead node `from` with generated tokens carried.
+    Rescued { from: usize },
+    /// Carried tokens replayed / evicted prefill recomputed, `sim_s`
+    /// charged as replay.
+    Replayed { tokens: usize, sim_s: f64 },
+    /// Served. `queue_s` (wall) + `ledger` (simulated phases) is the
+    /// request's full latency story; the Chrome exporter reconstructs
+    /// its lifecycle slices from this one event.
+    Retired { tokens: usize, queue_s: f64, ledger: PhaseLedger },
+    /// Terminal failure, with the error the client saw.
+    Failed { error: String },
+    /// Shed at the dispatch stage (energy budget, no healthy node, …).
+    Shed { error: String },
+    /// Wall-clock deadline passed before a card could serve it.
+    DeadlineMiss,
+    /// A fault fired on this node's round clock (node-scoped; `kind` is
+    /// [`crate::faults::FaultKind::name`]).
+    Fault { kind: &'static str },
+}
+
+impl SpanKind {
+    /// Stable lowercase name — the `kind` field of every exported line.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpanKind::Queued => "queued",
+            SpanKind::Requeued => "requeued",
+            SpanKind::Aged => "aged",
+            SpanKind::Dispatched { .. } => "dispatched",
+            SpanKind::Admitted { .. } => "admitted",
+            SpanKind::Prefill { .. } => "prefill",
+            SpanKind::DecodeRound { .. } => "decode_round",
+            SpanKind::Preempted { .. } => "preempted",
+            SpanKind::Parked => "parked",
+            SpanKind::Migrated { .. } => "migrated",
+            SpanKind::SwapOut { .. } => "swap_out",
+            SpanKind::SwapIn { .. } => "swap_in",
+            SpanKind::Rescued { .. } => "rescued",
+            SpanKind::Replayed { .. } => "replayed",
+            SpanKind::Retired { .. } => "retired",
+            SpanKind::Failed { .. } => "failed",
+            SpanKind::Shed { .. } => "shed",
+            SpanKind::DeadlineMiss => "deadline_miss",
+            SpanKind::Fault { .. } => "fault",
+        }
+    }
+}
+
+/// One journal entry: a [`SpanKind`] at a (node, round, simulated-clock)
+/// coordinate. `seq` is the per-ring sequence the journal assigned —
+/// strictly increasing per node, so `(node, seq)` is a total order over
+/// a node's history even after ring wraps drop old entries.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub seq: u64,
+    pub node: usize,
+    pub round: u64,
+    /// The node's simulated clock at emission, seconds.
+    pub sim_s: f64,
+    pub trace: TraceId,
+    pub kind: SpanKind,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ledger_device_seconds_is_the_phase_sum() {
+        let mut l = PhaseLedger {
+            prefill_s: 0.1,
+            decode_s: 0.2,
+            stall_s: 0.025,
+            replay_s: 0.075,
+        };
+        assert!((l.device_s() - 0.4).abs() < 1e-12);
+        l.add(&PhaseLedger { decode_s: 0.6, ..PhaseLedger::default() });
+        assert!((l.device_s() - 1.0).abs() < 1e-12);
+        assert!((l.decode_s - 0.8).abs() < 1e-12);
+        assert_eq!(PhaseLedger::default().device_s(), 0.0);
+    }
+
+    #[test]
+    fn attribution_records_and_merges() {
+        let mut a = Attribution::default();
+        a.record(0.5, &PhaseLedger { prefill_s: 0.1, decode_s: 0.3, ..Default::default() });
+        a.record(0.25, &PhaseLedger { replay_s: 0.05, stall_s: 0.1, ..Default::default() });
+        assert!((a.queue_s - 0.75).abs() < 1e-12);
+        assert!((a.prefill_s - 0.1).abs() < 1e-12);
+        assert!((a.total_s() - 1.3).abs() < 1e-12);
+        let mut b = Attribution::default();
+        b.merge(&a);
+        b.merge(&a);
+        assert!((b.total_s() - 2.6).abs() < 1e-12);
+        assert!((b.decode_s - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_ids_format_and_node_scope_is_reserved() {
+        assert_eq!(TraceId(7).to_string(), "7");
+        assert_eq!(NODE_SCOPE.to_string(), "node");
+        assert!(NODE_SCOPE.is_node_scope());
+        assert!(!TraceId(0).is_node_scope());
+    }
+
+    #[test]
+    fn span_kind_names_are_stable() {
+        assert_eq!(SpanKind::Queued.name(), "queued");
+        assert_eq!(SpanKind::Dispatched { node: 1 }.name(), "dispatched");
+        assert_eq!(
+            SpanKind::Retired { tokens: 4, queue_s: 0.0, ledger: PhaseLedger::default() }.name(),
+            "retired"
+        );
+        assert_eq!(SpanKind::Fault { kind: "node_death" }.name(), "fault");
+        assert_eq!(SpanKind::DeadlineMiss.name(), "deadline_miss");
+    }
+}

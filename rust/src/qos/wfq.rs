@@ -258,6 +258,13 @@ impl<T> WfqQueue<T> {
         self.lanes[i].deficit
     }
 
+    /// Per-lane DRR deficit counters, lane order — the fairness state the
+    /// trace journal's dispatch samples carry
+    /// ([`crate::obsv::DispatchPoint::lane_deficits`]).
+    pub fn lane_deficits(&self) -> Vec<f64> {
+        self.lanes.iter().map(|l| l.deficit).collect()
+    }
+
     fn take(&mut self, i: usize) -> Popped<T> {
         let e = self.lanes[i].q.pop_front().expect("take on an empty lane");
         self.lanes[i].deficit -= e.cost;
@@ -318,6 +325,15 @@ impl<T> AdmissionQueue<T> {
         match self {
             AdmissionQueue::Fifo(q) => q.push_front((t, cost, item)),
             AdmissionQueue::Wfq(q) => q.push_front(t, cost, item),
+        }
+    }
+
+    /// Per-lane DRR deficits for trace sampling (empty on the FIFO arm,
+    /// which keeps no fairness state).
+    pub fn lane_deficits(&self) -> Vec<f64> {
+        match self {
+            AdmissionQueue::Fifo(_) => Vec::new(),
+            AdmissionQueue::Wfq(q) => q.lane_deficits(),
         }
     }
 

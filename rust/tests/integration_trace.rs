@@ -1,0 +1,163 @@
+//! Observability integration: per-request span tracing over the live
+//! engine. A scripted node death mid-decode must leave a flight-recorder
+//! dump for the killed card, and the exported journal must reconstruct a
+//! rescued request's full lifecycle — queued → dispatched → admitted →
+//! rescued → requeued → replayed/retired — with the per-phase seconds of
+//! every retired span summing to its end-to-end simulated latency.
+//!
+//! Every test skips (passes vacuously, with a note on stderr) when the
+//! AOT artifacts are missing or PJRT is unavailable (the vendored stub xla
+//! crate). Byte-identical determinism of the exporters is pinned by the
+//! seeded scripted-tracer tests in `cmphx::obsv::export` — the live
+//! engine's wall-clock interleaving reorders drains, which the canonical
+//! `(node, seq)` sort absorbs per node but not across submission races.
+
+use std::collections::HashSet;
+use std::time::Duration;
+
+use cmphx::coordinator::batcher::BatchPolicy;
+use cmphx::coordinator::scheduler::StepPolicy;
+use cmphx::coordinator::{
+    GenResponse, NodeConfig, RoutePolicy, Server, ServerConfig, ServerHandle,
+};
+use cmphx::device::registry;
+use cmphx::faults::{FaultEvent, FaultKind, FaultPlan};
+use cmphx::isa::pass::FmadPolicy;
+use cmphx::obsv::{chrome_trace, journal_jsonl, lifecycle_slices, parse_journal, SpanKind};
+mod common;
+use common::artifact_dir;
+
+/// Two identical 170HX nodes, round-robin routing, stealing off, span
+/// tracing armed.
+fn traced_config(faults: Option<FaultPlan>) -> ServerConfig {
+    let mut cfg = ServerConfig {
+        queue_depth: 32,
+        batch: BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+            ..BatchPolicy::default()
+        },
+        step_policy: StepPolicy::RoundRobin,
+        fmad: FmadPolicy::Decomposed,
+        route: RoutePolicy::RoundRobin,
+        nodes: vec![
+            NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+            NodeConfig::new(registry::cmp170hx(), FmadPolicy::Decomposed),
+        ],
+        trace: true,
+        ..Default::default()
+    };
+    cfg.qos.steal = false;
+    cfg.faults = faults;
+    cfg
+}
+
+fn start(cfg: ServerConfig) -> Option<ServerHandle> {
+    Some(Server::start(artifact_dir()?, cfg).unwrap())
+}
+
+fn kill_node0() -> FaultPlan {
+    FaultPlan::script(vec![FaultEvent { node: 0, round: 3, kind: FaultKind::NodeDeath }])
+}
+
+fn run_workload(server: &ServerHandle, n: usize, tokens: usize) -> Vec<GenResponse> {
+    let rxs: Vec<_> = (0..n)
+        .map(|i| {
+            let prompt: Vec<i32> = (1..=8).map(|t| (t * (i as i32 + 2)) % 500 + 1).collect();
+            server.submit(prompt, tokens).unwrap()
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(240)).unwrap())
+        .collect()
+}
+
+#[test]
+fn a_chaos_death_dumps_the_flight_recorder_and_journals_the_rescue() {
+    let Some(server) = start(traced_config(Some(kill_node0()))) else { return };
+    let responses = run_workload(&server, 6, 12);
+    for (i, r) in responses.iter().enumerate() {
+        assert!(r.ok(), "request {i} lost to the death: {:?}", r.error);
+        // the response carries its trace id and the phase ledger the
+        // journal's retired span was built from
+        assert_eq!(r.trace.0, r.id, "trace ids are request ids");
+        assert_eq!(
+            r.ledger.device_s(),
+            r.simulated_device_s,
+            "the ledger is the simulated device time, phase-split"
+        );
+    }
+    let tracer = server.tracer();
+    let fm = server.shutdown_fleet();
+    assert!(fm.total().rescued_seqs >= 1, "the death must have rescued work");
+
+    let snap = tracer.snapshot();
+    assert!(
+        snap.dumps.iter().any(|d| d.node == 0 && d.reason == "node death"),
+        "the killed card must leave a flight-recorder dump: {:?}",
+        snap.dumps.iter().map(|d| (d.node, d.reason.clone())).collect::<Vec<_>>()
+    );
+
+    // the JSONL journal parses back and re-exports byte-identically
+    let text = journal_jsonl(&snap);
+    let parsed = parse_journal(&text).expect("every journal line is well-formed");
+    assert_eq!(journal_jsonl(&parsed), text, "export → parse → export is the identity");
+
+    // the Chrome view is loadable-shaped and carries lifecycle slices
+    let chrome = chrome_trace(&snap);
+    assert!(chrome.starts_with("{\"traceEvents\":["));
+    assert!(chrome.contains("\"ph\":\"X\""), "per-phase slices present");
+    assert!(chrome.contains("\"name\":\"rescued\""), "the rescue shows as an instant");
+
+    // reconstruct a rescued request's lifecycle from the journal alone
+    let all_events: Vec<_> =
+        snap.events.iter().chain(snap.dumps.iter().flat_map(|d| d.events.iter())).collect();
+    let rescued_id = all_events
+        .iter()
+        .find(|e| matches!(e.kind, SpanKind::Rescued { .. }))
+        .expect("a rescued span exists")
+        .trace;
+    let kinds: HashSet<&str> =
+        all_events.iter().filter(|e| e.trace == rescued_id).map(|e| e.kind.name()).collect();
+    for need in ["queued", "dispatched", "rescued", "requeued", "admitted", "retired"] {
+        assert!(kinds.contains(need), "rescued lifecycle is missing {need:?}: {kinds:?}");
+    }
+
+    // every retired span's per-phase slices sum to its end-to-end
+    // simulated latency (queue + device seconds), ending at the stamp
+    let mut retired = 0;
+    for e in &all_events {
+        if let SpanKind::Retired { queue_s, ledger, .. } = &e.kind {
+            retired += 1;
+            let slices = lifecycle_slices(*queue_s, ledger, e.sim_s);
+            let total: f64 = slices.iter().map(|s| s.dur_s).sum();
+            assert!(
+                (total - (queue_s + ledger.device_s())).abs() < 1e-9,
+                "phase seconds must sum to end-to-end sim latency"
+            );
+            let last = slices.last().expect("a served request has nonzero phases");
+            assert!((last.start_s + last.dur_s - e.sim_s).abs() < 1e-9);
+        }
+    }
+    assert_eq!(retired, 6, "every request retires exactly once in the journal");
+
+    // the per-round fleet time-series covered both cards
+    assert!(snap.series.iter().any(|p| p.node == 0));
+    assert!(snap.series.iter().any(|p| p.node == 1));
+    assert!(!snap.dispatch.is_empty(), "dispatch-stage samples present");
+}
+
+#[test]
+fn the_disabled_tracer_retains_nothing_on_the_same_workload() {
+    // The tracing-off arm of the overhead ablation: same fleet, same
+    // chaos, trace off — the snapshot must be empty and goodput whole.
+    let mut cfg = traced_config(Some(kill_node0()));
+    cfg.trace = false;
+    let Some(server) = start(cfg) else { return };
+    let responses = run_workload(&server, 6, 12);
+    assert!(responses.iter().all(|r| r.ok()));
+    let tracer = server.tracer();
+    server.shutdown_fleet();
+    let snap = tracer.snapshot();
+    assert!(snap.events.is_empty() && snap.dumps.is_empty() && snap.series.is_empty());
+}

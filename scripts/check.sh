@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Local tier-1 gate: build, test, lint.
 #
-# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric | --cache]
+# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric | --cache | --trace]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
 # -q`) and adds rustfmt drift detection plus clippy with warnings denied.
@@ -21,6 +21,11 @@
 # --cache runs only the radix-cache smoke: the integration_cache suite
 # (returning-user KV resurrection vs the --no-kv-cache ablation, and
 # cache reclaim under a tight page budget). Same self-skip rule.
+#
+# --trace runs only the observability smoke: the obsv unit suites (journal,
+# exporters, byte-identical determinism) plus the integration_trace suite
+# (chaos death → flight dump, journal roundtrip, rescued-lifecycle spans).
+# Same self-skip rule for the integration half.
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -50,6 +55,15 @@ if [[ "${1:-}" == "--cache" ]]; then
     echo "==> cache smoke: cargo test --release --test integration_cache"
     cargo test --release --test integration_cache -q
     echo "cache smoke passed"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--trace" ]]; then
+    echo "==> trace smoke: cargo test --release obsv::"
+    cargo test --release -q obsv::
+    echo "==> trace smoke: cargo test --release --test integration_trace"
+    cargo test --release --test integration_trace -q
+    echo "trace smoke passed"
     exit 0
 fi
 
