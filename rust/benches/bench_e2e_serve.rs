@@ -22,7 +22,12 @@
 //! reruns the base workload with the span tracer on vs off and asserts the
 //! analytic overhead bound — simulated goodput bit-identical, because every
 //! trace stamp reads the simulated clock — owning the
-//! `serve_trace_overhead` row. Requires `make artifacts`.
+//! `serve_trace_overhead` row. An **open-loop overload sweep** runs first
+//! on the pure discrete-event fleet model — admission control vs the
+//! `--no-admission-control` ablation, calm and under seeded chaos, at six
+//! offered-load points through the latency knee — owning the
+//! `serve_openloop` row; it needs no artifacts, so it records real numbers
+//! everywhere. Everything else requires `make artifacts`.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -715,7 +720,129 @@ fn run_trace_overhead() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Format one knee curve as a JSON array of
+/// `[rho, goodput_tok_s, p99_ms, p999_ms, attainment, tok_per_joule]`
+/// points, where rho is offered load over fleet capacity.
+fn fmt_curve(points: &[cmphx::load::CurvePoint], cap_rps: f64) -> String {
+    let cells: Vec<String> = points
+        .iter()
+        .map(|p| {
+            let r = &p.report;
+            format!(
+                "[{:.3}, {:.1}, {:.1}, {:.1}, {:.4}, {:.3}]",
+                p.offered_rps / cap_rps,
+                r.goodput_tps,
+                r.p99_s * 1e3,
+                r.p999_s * 1e3,
+                r.slo_attainment().unwrap_or(1.0),
+                r.goodput_tokens_per_joule,
+            )
+        })
+        .collect();
+    format!("[{}]", cells.join(", "))
+}
+
+/// The open-loop overload harness: sweep offered load through the latency
+/// knee on the pure discrete-event fleet model ([`cmphx::load::sim`]) —
+/// no artifacts or PJRT involved, so this arm runs everywhere. Four arms
+/// per load point: admission control on vs the `--no-admission-control`
+/// ablation, each calm and under seeded chaos. Records offered load vs
+/// goodput / p99 / p99.9 / SLO attainment / tokens-per-joule as the
+/// `serve_openloop` row of `BENCH_sim_throughput.json`; the past-the-knee
+/// AC win and the below-knee bit-identity are pinned by
+/// `tests/integration_load.rs`.
+fn run_openloop() -> anyhow::Result<()> {
+    use cmphx::faults::FaultPlan;
+    use cmphx::load::{
+        capacity_rps, sweep, ArrivalPlan, ArrivalProcess, NodeModel, SimConfig, WorkloadShape,
+    };
+
+    const SEED: u64 = 0x0417_C0DE;
+    let shape = WorkloadShape {
+        tenants: 3,
+        prompt_len: 32,
+        shared_prefix_len: 16,
+        families: 4,
+        max_tokens: 8,
+    };
+    let plan =
+        ArrivalPlan::seeded(ArrivalProcess::Poisson { rps: 40.0 }, SEED, 30.0, &shape);
+    let cfg = SimConfig::uniform(2, NodeModel::cmp170hx_like(), shape.tenants, Some(0.5));
+    let cap = capacity_rps(&plan, &cfg);
+    anyhow::ensure!(cap > 0.0, "degenerate plan: zero fleet capacity");
+    // Normalize the ladder to capacity so the x axis is rho (offered /
+    // capacity) regardless of the base plan's rate.
+    let base = cap / plan.offered_rps();
+    let rho = [0.5, 0.8, 1.0, 1.2, 1.5, 2.0];
+    let mults: Vec<f64> = rho.iter().map(|m| m * base).collect();
+    let chaos = SimConfig {
+        chaos: Some(FaultPlan::seeded(SEED ^ 0xFA17, cfg.nodes.len(), 64, 0.05)),
+        ..cfg.clone()
+    };
+
+    let arms = [
+        ("ac", cfg.clone()),
+        ("no_ac", cfg.without_admission()),
+        ("ac_chaos", chaos.clone()),
+        ("no_ac_chaos", chaos.without_admission()),
+    ];
+    let mut curves = Vec::new();
+    for (name, arm) in &arms {
+        let points = sweep(&plan, &mults, arm);
+        for p in &points {
+            let r = &p.report;
+            println!(
+                "{name:<11} rho={:>4.2} offered={:>6.1}rps | goodput {:>7.1} tok/s \
+                 p99 {:>7.1}ms p99.9 {:>7.1}ms | attain {:>5.1}% {:>6.3} tok/J | \
+                 shed={} miss={} late={}",
+                p.offered_rps / cap,
+                p.offered_rps,
+                r.goodput_tps,
+                r.p99_s * 1e3,
+                r.p999_s * 1e3,
+                r.slo_attainment().unwrap_or(1.0) * 100.0,
+                r.goodput_tokens_per_joule,
+                r.shed_admission,
+                r.deadline_misses,
+                r.served_late,
+            );
+        }
+        curves.push((*name, points));
+    }
+    // Same seed, same curves — the reproducibility contract, including
+    // under chaos (both the arrival plan and the fault plan are seeded).
+    let replay = sweep(&plan, &mults, &arms[2].1);
+    anyhow::ensure!(replay == curves[2].1, "chaos sweep must replay bit-identically");
+    // Past the knee the AC arm must beat the ablation on both goodput and
+    // attainment — the congestion-collapse headline this row exists for.
+    let (ac_top, bare_top) =
+        (&curves[0].1.last().unwrap().report, &curves[1].1.last().unwrap().report);
+    anyhow::ensure!(
+        ac_top.goodput_tokens > bare_top.goodput_tokens
+            && ac_top.slo_attainment() > bare_top.slo_attainment(),
+        "admission control must win past the knee: {ac_top:?} vs {bare_top:?}"
+    );
+
+    let arm_rows: Vec<String> = curves
+        .iter()
+        .map(|(name, points)| format!("\"{name}\": {}", fmt_curve(points, cap)))
+        .collect();
+    let row = format!(
+        "{{\n    \"workload\": \"2-model-card open-loop Poisson sweep, 3 tenants with a \
+         500 ms SLO, seed {SEED:#x}, rho 0.5..2.0; point = [rho, goodput_tok_s, p99_ms, \
+         p999_ms, attainment, tok_per_joule]\",\n    \
+         \"capacity_rps\": {cap:.2},\n    {}\n  }}",
+        arm_rows.join(",\n    "),
+    );
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_sim_throughput.json");
+    upsert_bench_row(&path, "serve_openloop", &row);
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    println!("== open-loop overload: offered load through the knee (pure fleet model) ==");
+    run_openloop()?;
     if !cmphx::runtime::pjrt_available() {
         println!("e2e serving bench skipped: PJRT unavailable (stub xla build)");
         return Ok(());

@@ -28,9 +28,10 @@ COMMANDS:
   serve [--requests N] [--tokens N] [--batch N] [--fleet a,b,…]
         [--block N] [--kv-blocks N] [--no-preempt]
         [--no-prefix-cache] [--no-kv-cache] [--swap] [--host-pool MiB]
-        [--tenant name:weight[:tok_s][:joules]]… [--no-qos] [--no-steal]
-        [--no-affinity] [--affinity-bonus F] [--admit-scan K]
+        [--tenant name:weight[:tok_s][:joules][:slo_ms]]… [--no-qos]
+        [--no-steal] [--no-affinity] [--affinity-bonus F] [--admit-scan K]
         [--no-overlap] [--aging N] [--aging-rounds N]
+        [--reclaim-policy lru|depth] [--no-admission-control]
         [--chaos-seed N] [--chaos-rate F] [--no-rescue] [--retries N]
         [--deadline-ms N] [--probation N] [--trace FILE]
                             end-to-end: serve the AOT tiny-qwen via PJRT,
@@ -45,15 +46,25 @@ COMMANDS:
                             released blocks stay cached in each card's
                             radix tree for returning users until page
                             pressure reclaims them (--no-kv-cache frees at
-                            refcount zero instead); --swap
+                            refcount zero instead; --reclaim-policy picks
+                            the cached-tier victim — lru, or depth to
+                            spend deep private tails before shallow
+                            shared system prefixes); --swap
                             arms swap-based preemption — victims whose KV
                             round-trips the card's PCIe link cheaper than
                             it recomputes park in a host-RAM pool of
                             --host-pool MiB (default 1024) instead of
                             replaying. --tenant (repeatable) registers QoS
                             tenants: weighted fair queueing with optional
-                            token-rate and energy-budget caps; requests
-                            round-robin across them. --no-qos falls back
+                            token-rate and energy-budget caps plus an
+                            slo_ms latency contract (stamped as each
+                            request's deadline, scored in the per-tenant
+                            attainment rollup, and enforced at submit by
+                            adaptive admission control — doomed requests
+                            shed before any prefill, escalating down a
+                            brownout ladder under sustained overload;
+                            --no-admission-control is the reactive-only
+                            ablation); requests round-robin across them. --no-qos falls back
                             to the FIFO queue, --no-steal disables
                             cross-node work stealing (queued requests and
                             parked-sequence migration), --no-affinity
@@ -350,6 +361,11 @@ fn serve(args: &Args) -> Result<i32> {
     if args.flag("no-kv-cache") {
         config.batch.kv_retention = false;
     }
+    config.batch.reclaim = match args.opt("reclaim-policy") {
+        None | Some("lru") => crate::coordinator::ReclaimPolicy::Lru,
+        Some("depth") => crate::coordinator::ReclaimPolicy::Depth,
+        Some(other) => bail!("--reclaim-policy must be lru or depth, got {other:?}"),
+    };
     if args.flag("swap") {
         config.batch.swap = true;
     }
@@ -371,6 +387,9 @@ fn serve(args: &Args) -> Result<i32> {
     }
     if args.flag("no-overlap") {
         config.overlap = false;
+    }
+    if args.flag("no-admission-control") {
+        config.admission = false;
     }
     config.qos.aging_pops = args.opt_usize("aging", config.qos.aging_pops as usize)? as u64;
     config.qos.admit_scan = args.opt_usize("admit-scan", config.qos.admit_scan)?;

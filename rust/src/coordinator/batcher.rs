@@ -12,6 +12,8 @@
 
 use std::time::Duration;
 
+use super::kv::ReclaimPolicy;
+
 /// Admission policy for a node's continuous-batching engine.
 #[derive(Clone, Copy, Debug)]
 pub struct BatchPolicy {
@@ -57,6 +59,11 @@ pub struct BatchPolicy {
     /// ablation arm (the PR 5/7 behaviour). Only meaningful with
     /// `prefix_cache` on.
     pub kv_retention: bool,
+    /// Cached-tier reclaim victim selection (`--reclaim-policy`):
+    /// strict LRU, or depth-aware — break toward deep private tail
+    /// chunks so shallow shared system-prefix blocks survive pressure
+    /// longest. LRU stays the default baseline.
+    pub reclaim: ReclaimPolicy,
     /// Migration hysteresis, age half: a foreign parked sequence is
     /// claimable only after it has sat parked this many engine rounds —
     /// younger entries are ones their owner is likely to resume next
@@ -85,6 +92,7 @@ impl Default for BatchPolicy {
             aging_rounds: 16,
             prefix_cache: true,
             kv_retention: true,
+            reclaim: ReclaimPolicy::Lru,
             migrate_min_age: 2,
             swap: false,
             host_pool_bytes: 1 << 30,
@@ -122,6 +130,7 @@ mod tests {
         assert!(p.aging_rounds > 0, "parked sequences age after a bounded wait");
         assert!(p.prefix_cache, "prefix sharing is the default — it only saves pages");
         assert!(p.kv_retention, "radix-tree retention is the default serving mode");
+        assert_eq!(p.reclaim, ReclaimPolicy::Lru, "LRU reclaim stays the baseline");
         assert!(p.migrate_min_age > 0, "claims defer at least one round");
         assert!(!p.swap, "swap preemption is opt-in; drop-and-replay stays the baseline");
         assert!(p.host_pool_bytes > 0, "an armed swap path needs host headroom");

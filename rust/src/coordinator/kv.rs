@@ -308,11 +308,12 @@ impl RadixIndex {
         ni
     }
 
-    /// Detach the whole subtree rooted at `ni`, returning the block ids
-    /// whose nodes were removed (the root of the cut first). The caller
-    /// owns the per-block consequences — a chain below a removed chunk
-    /// can never be prefix-matched again, so the subtree goes with it.
-    fn unlink(&mut self, ni: usize) -> Vec<usize> {
+    /// Detach the whole subtree rooted at `ni`, returning `(block id,
+    /// chain hash)` per removed node (the root of the cut first). The
+    /// caller owns the per-block consequences — a chain below a removed
+    /// chunk can never be prefix-matched again, so the subtree goes with
+    /// it — and the hashes feed the fleet-directory retraction delta.
+    fn unlink(&mut self, ni: usize) -> Vec<(usize, u64)> {
         let (parent, hash) = {
             let n = self.nodes[ni].as_ref().expect("unlink target is live");
             (n.parent, n.hash)
@@ -325,15 +326,29 @@ impl RadixIndex {
             }
             None => self.root.remove(hash),
         }
-        let mut blocks = Vec::new();
+        let mut removed = Vec::new();
         let mut stack = vec![ni];
         while let Some(i) = stack.pop() {
             let node = self.nodes[i].take().expect("subtree node is live");
             stack.extend(node.children.child_nodes());
-            blocks.push(node.block);
+            removed.push((node.block, node.hash));
             self.free.push(i);
         }
-        blocks
+        removed
+    }
+
+    /// Chain depth of a live node: 1 for a depth-1 chunk (child of the
+    /// root), growing along the parent chain. Shallow nodes are the
+    /// shared system-prefix chunks every conversation descends through;
+    /// deep nodes are one conversation's private tail.
+    fn depth(&self, ni: usize) -> usize {
+        let mut d = 1;
+        let mut cur = self.nodes[ni].as_ref().expect("depth of a live node").parent;
+        while let Some(p) = cur {
+            d += 1;
+            cur = self.nodes[p].as_ref().expect("live parent").parent;
+        }
+        d
     }
 
     /// Every registered chain hash (pinned and cached tiers alike) — the
@@ -341,6 +356,23 @@ impl RadixIndex {
     fn hashes(&self) -> Vec<u64> {
         self.nodes.iter().flatten().map(|n| n.hash).collect()
     }
+}
+
+/// Victim selection for cached-tier reclaim under allocation pressure.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ReclaimPolicy {
+    /// Strict LRU over demotion order. Blind to tree shape: a released
+    /// sequence demotes its blocks shallow-first, so the LRU-oldest
+    /// cached block is often a *shared system-prefix chunk* — and
+    /// reclaiming it strands (and frees) every deeper chain behind it.
+    #[default]
+    Lru,
+    /// Depth-first: reclaim the deepest cached chain block (ties broken
+    /// toward the LRU-older stamp). Deep blocks are one conversation's
+    /// private tail — losing one costs that conversation's last chunk —
+    /// while shallow system-prefix blocks, which every tenant's next
+    /// request would hit, survive pressure longest.
+    Depth,
 }
 
 /// Paged KV block allocator for one card.
@@ -371,6 +403,13 @@ pub struct KvPager {
     /// Retain content-addressed blocks at refcount zero (the cached
     /// tier). Off = the refcount-zero-frees ablation (`--no-kv-cache`).
     retain: bool,
+    /// Victim selection under reclaim pressure (`--reclaim-policy`).
+    reclaim: ReclaimPolicy,
+    /// Chain hashes unlinked from the prefix tree since the last
+    /// [`KvPager::take_retracted`] — the worker's retraction delta for
+    /// the fleet [`PrefixDirectory`], so affine routing stops chasing
+    /// reclaimed history before the next full republish.
+    retracted_chains: Vec<u64>,
     entries: Vec<PageEntry>,
     free_ids: Vec<usize>,
     stats: PrefixStats,
@@ -416,6 +455,8 @@ impl KvPager {
             lru: VecDeque::new(),
             lru_tick: 0,
             retain: true,
+            reclaim: ReclaimPolicy::default(),
+            retracted_chains: Vec::new(),
             entries: Vec::new(),
             free_ids: Vec::new(),
             stats: PrefixStats::default(),
@@ -433,6 +474,20 @@ impl KvPager {
                 self.reclaim_lru();
             }
         }
+    }
+
+    /// Select the reclaim victim policy (`--reclaim-policy lru|depth`).
+    pub fn set_reclaim_policy(&mut self, policy: ReclaimPolicy) {
+        self.reclaim = policy;
+    }
+
+    /// Drain the chain hashes unlinked from the prefix tree since the
+    /// last call — reclaims, divergence, retention flips. The worker
+    /// folds these into its per-round (and mid-stall) directory delta as
+    /// retractions; chains re-admitted since unlinking are re-added by
+    /// the same delta's resident diff, so over-retraction is safe.
+    pub fn take_retracted(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.retracted_chains)
     }
 
     /// Cap the block pool below the VRAM-derived total (a test/ops knob:
@@ -557,7 +612,11 @@ impl KvPager {
     /// unreachable one can never match again. Returns blocks freed.
     fn unlink_tree(&mut self, ni: usize) -> usize {
         let mut freed = 0;
-        for id in self.index.unlink(ni) {
+        for (id, hash) in self.index.unlink(ni) {
+            // Every unlinked chain vanishes from `index_hashes`, so it
+            // must vanish from the fleet directory too — buffered here
+            // for the worker's next retraction delta.
+            self.retracted_chains.push(hash);
             let b = &mut self.blocks[id];
             b.node = None;
             if b.refs == 0 && b.cached_at.take().is_some() {
@@ -584,13 +643,49 @@ impl KvPager {
         0
     }
 
+    /// Reclaim the deepest cached chain block (LRU-older stamp breaks
+    /// depth ties), then its stranded subtree. A deep block is a leaf or
+    /// near-leaf — one conversation's private tail — so the cut is
+    /// surgical where LRU's shallow cut takes the whole chain behind a
+    /// shared prefix chunk. Returns blocks freed.
+    fn reclaim_deep(&mut self) -> usize {
+        let mut victim: Option<(usize, u64, usize)> = None; // (depth, stamp, id)
+        for &(stamp, id) in &self.lru {
+            if self.blocks[id].cached_at != Some(stamp) {
+                continue; // stale entry: resurrected or already reclaimed
+            }
+            let ni = self.blocks[id].node.expect("cached blocks are tree-linked");
+            let depth = self.index.depth(ni);
+            let deeper = match victim {
+                None => true,
+                Some((d, s, _)) => depth > d || (depth == d && stamp < s),
+            };
+            if deeper {
+                victim = Some((depth, stamp, id));
+            }
+        }
+        let Some((_, _, id)) = victim else {
+            return 0;
+        };
+        let ni = self.blocks[id].node.expect("victim is tree-linked");
+        self.unlink_tree(ni)
+    }
+
+    /// Reclaim one victim under the configured policy.
+    fn reclaim_one(&mut self) -> usize {
+        match self.reclaim {
+            ReclaimPolicy::Lru => self.reclaim_lru(),
+            ReclaimPolicy::Depth => self.reclaim_deep(),
+        }
+    }
+
     /// Reclaim cached blocks until the free pool holds `need` — the only
     /// place cache is given back, and strictly under allocation
     /// pressure. Callers gate on [`KvPager::available_blocks`] first, so
     /// this cannot fall short.
     fn ensure_free(&mut self, need: usize) {
         while self.free_blocks() < need && self.cached > 0 {
-            self.reclaim_lru();
+            self.reclaim_one();
         }
     }
 
@@ -2310,5 +2405,112 @@ mod tests {
                 assert_eq!(pager.free_blocks(), pager.capacity_blocks());
             }
         });
+    }
+
+    #[test]
+    fn reclaim_retracts_dropped_chains_for_the_directory() {
+        // Regression: a cache-tier reclaim unlinks chains from the radix
+        // tree, but nothing carried the retraction to the fleet
+        // PrefixDirectory — affine routing kept chasing history that was
+        // gone until the next full republish. The pager now buffers every
+        // unlinked hash for the worker's retraction delta.
+        let mut p = pager();
+        p.limit_blocks(2).unwrap();
+        let w = window(0, 8, 1); // 2 blocks
+        let hashes = window_chain_hashes(&w, 4);
+        let (a, _) = p.admit_prompt(&w).unwrap();
+        p.release(a).unwrap();
+        assert_eq!(p.cached_blocks(), 2);
+        // The worker's round-top publish: full snapshot, drain the buffer.
+        let dir = PrefixDirectory::new(1);
+        let epoch = dir.publish(0, p.index_hashes());
+        p.take_retracted();
+        assert_eq!(dir.match_depths(&hashes), vec![2]);
+        // Pressure from an unrelated admission reclaims the cached chain.
+        let (b, _) = p.admit_prompt(&window(0, 8, 2)).unwrap();
+        let retracted = p.take_retracted();
+        assert_eq!(retracted.len(), 2, "both dropped chunks must be retracted");
+        assert!(hashes.iter().all(|h| retracted.contains(h)));
+        assert!(dir.publish_delta(0, epoch, &[], &retracted));
+        assert_eq!(
+            dir.match_depths(&hashes),
+            vec![0],
+            "the directory must stop advertising the reclaimed chain"
+        );
+        assert!(p.take_retracted().is_empty(), "drain is one-shot");
+        p.release(b).unwrap();
+    }
+
+    #[test]
+    fn divergence_and_retention_flips_buffer_retractions_too() {
+        let mut p = pager();
+        let (a, _) = p.admit_prompt(&window(0, 6, 1)).unwrap(); // 2 blocks, partial tail
+        p.take_retracted();
+        // growing into the privately-held partial tail diverges it from
+        // its hash: the tail chunk unlinks and must be retracted
+        assert!(p.grow(a, 7).unwrap());
+        assert_eq!(p.take_retracted().len(), 1);
+        p.release(a).unwrap();
+        // flipping retention off reclaims the whole cached tier at once
+        let before = p.cached_blocks();
+        assert!(before > 0);
+        p.set_retention(false);
+        assert_eq!(p.take_retracted().len(), before);
+    }
+
+    #[test]
+    fn depth_policy_reclaims_the_tail_and_keeps_the_prefix() {
+        // One idle 3-chunk conversation fills the (capped) card. Release
+        // demotes its blocks shallow-first, so under LRU the *prefix*
+        // chunk is the oldest entry — and reclaiming it strands the whole
+        // chain: three blocks die to find one page. Depth picks the tail
+        // chunk instead: one surgical block, the reusable prefix survives.
+        let run = |policy: ReclaimPolicy| {
+            let mut p = pager();
+            p.limit_blocks(3).unwrap();
+            p.set_reclaim_policy(policy);
+            let (a, _) = p.admit_prompt(&window(0, 12, 1)).unwrap(); // 3-chunk chain
+            p.release(a).unwrap();
+            assert_eq!((p.cached_blocks(), p.free_blocks()), (3, 0));
+            // one unrelated block's worth of pressure
+            let c = p.admit(4).unwrap();
+            let survivors = p.resident_prefix_blocks(&window(0, 12, 1));
+            let freed = p.prefix_stats().reclaimed_blocks;
+            p.release(c).unwrap();
+            (survivors, freed)
+        };
+        assert_eq!(run(ReclaimPolicy::Lru), (0, 3), "LRU cuts shallow: whole chain dies");
+        assert_eq!(run(ReclaimPolicy::Depth), (2, 1), "depth cuts the tail: prefix survives");
+    }
+
+    #[test]
+    fn depth_keeps_the_shared_system_prefix_warm_across_tenants() {
+        // Two conversations behind one shared 4-token system prefix, all
+        // idle in the cached tier. Depth pressure eats private tails
+        // (deepest, then LRU-older on ties) before ever touching the
+        // chunk both tenants' next requests would hit.
+        let mut p = pager();
+        p.limit_blocks(4).unwrap();
+        p.set_reclaim_policy(ReclaimPolicy::Depth);
+        let (a, _) = p.admit_prompt(&window(4, 12, 1)).unwrap(); // shared + 2 private
+        let (b, _) = p.admit_prompt(&window(4, 8, 2)).unwrap(); // shared + 1 private
+        p.release(a).unwrap();
+        p.release(b).unwrap();
+        assert_eq!((p.cached_blocks(), p.free_blocks()), (4, 0));
+        // first pressure block: a's depth-3 tail is the unique deepest
+        let c = p.admit(4).unwrap();
+        assert_eq!(p.resident_prefix_blocks(&window(4, 12, 1)), 2);
+        assert_eq!(p.resident_prefix_blocks(&window(4, 8, 2)), 2);
+        // second: both depth-2 tails tie; a's was demoted first, so it goes
+        let d = p.admit(4).unwrap();
+        assert_eq!(p.resident_prefix_blocks(&window(4, 12, 1)), 1);
+        assert_eq!(p.resident_prefix_blocks(&window(4, 8, 2)), 2);
+        // third: b's tail goes — the shared prefix is the last survivor
+        let e = p.admit(4).unwrap();
+        assert_eq!(p.resident_prefix_blocks(&window(4, 8, 2)), 1);
+        assert_eq!(p.cached_blocks(), 1, "the system prefix outlives all its tails");
+        p.release(c).unwrap();
+        p.release(d).unwrap();
+        p.release(e).unwrap();
     }
 }

@@ -118,6 +118,16 @@ pub struct Metrics {
     /// Requests failed because their wall-clock deadline passed before a
     /// card could serve them.
     pub deadline_misses: u64,
+    /// Requests carrying a tenant SLO contract that reached a terminal
+    /// response (served or failed) — the attainment denominator.
+    pub slo_eligible: u64,
+    /// Of those, requests whose end-to-end latency met the contract —
+    /// the attainment numerator.
+    pub slo_met: u64,
+    /// Requests shed at submit by adaptive admission control: their
+    /// predicted completion already violated the tenant's SLO, so no
+    /// prefill was wasted on them.
+    pub admission_sheds: u64,
     /// Faults this node absorbed without dying (stalls, throttles, link
     /// downgrades, VRAM page loss) — the degradation-ladder trigger count.
     pub degrade_events: u64,
@@ -171,6 +181,26 @@ impl Metrics {
             cache.sort_by(|a, b| a.partial_cmp(b).unwrap());
         }
         f(&cache)
+    }
+
+    /// Score one terminal response against its tenant's SLO contract —
+    /// a no-op for contract-less traffic. Failed requests score as
+    /// misses through `met = false`.
+    pub fn record_slo(&mut self, met: bool) {
+        self.slo_eligible += 1;
+        if met {
+            self.slo_met += 1;
+        }
+    }
+
+    /// SLO attainment over contracted traffic; `None` when no contracted
+    /// request has terminated (attainment is then undefined, not 100%).
+    pub fn slo_attainment(&self) -> Option<f64> {
+        if self.slo_eligible == 0 {
+            None
+        } else {
+            Some(self.slo_met as f64 / self.slo_eligible as f64)
+        }
     }
 
     /// Record one decode round of `size` concurrent sequences.
@@ -287,6 +317,9 @@ impl Metrics {
         self.lost_seqs += other.lost_seqs;
         self.retries += other.retries;
         self.deadline_misses += other.deadline_misses;
+        self.slo_eligible += other.slo_eligible;
+        self.slo_met += other.slo_met;
+        self.admission_sheds += other.admission_sheds;
         self.degrade_events += other.degrade_events;
         self.swap_in_failures += other.swap_in_failures;
         self.rescue_kept_s += other.rescue_kept_s;
@@ -349,6 +382,7 @@ impl Metrics {
              preempt: evicted={} resumed={} wasted_sim={:.4}s aged={} | steals={}\n\
              faults: rescued={} lost={} retries={} deadline_miss={} degraded={} \
              swapfail={} kept={:.4}s replayed={:.4}s mttr={}\n\
+             slo: eligible={} met={} attainment={} admission_sheds={}\n\
              attrib: queue={:.4}s prefill={:.4}s decode={:.4}s stall={:.4}s replay={:.4}s\n\
              latency mean={:.1}ms p50={:.1}ms p99={:.1}ms p99.9={:.1}ms\n\
              host: prefill {:.3}s decode {:.3}s → {:.1} tok/s\n\
@@ -392,6 +426,12 @@ impl Metrics {
             self.mttr_s()
                 .map(|s| format!("{:.1}ms", s * 1e3))
                 .unwrap_or_else(|| "-".into()),
+            self.slo_eligible,
+            self.slo_met,
+            self.slo_attainment()
+                .map(|a| format!("{:.1}%", a * 100.0))
+                .unwrap_or_else(|| "-".into()),
+            self.admission_sheds,
             self.attrib.queue_s,
             self.attrib.prefill_s,
             self.attrib.decode_s,
@@ -653,6 +693,27 @@ mod tests {
         assert!(m.latency_pct(0.999).unwrap() >= 9.0, "p99.9 sees the straggler");
         let s = m.render();
         assert!(s.contains("p99.9=10000.0ms"), "{s}");
+    }
+
+    #[test]
+    fn slo_attainment_rolls_up_and_renders() {
+        let mut m = Metrics::new();
+        assert_eq!(m.slo_attainment(), None, "no contracted traffic: undefined, not 100%");
+        assert!(m.render().contains("slo: eligible=0 met=0 attainment=- admission_sheds=0"));
+        m.record_slo(true);
+        m.record_slo(true);
+        m.record_slo(false);
+        m.admission_sheds = 2;
+        assert!((m.slo_attainment().unwrap() - 2.0 / 3.0).abs() < 1e-12);
+        let s = m.render();
+        assert!(s.contains("slo: eligible=3 met=2 attainment=66.7% admission_sheds=2"), "{s}");
+        // merge sums numerator, denominator, and sheds across nodes
+        let mut other = Metrics::new();
+        other.record_slo(true);
+        other.admission_sheds = 3;
+        m.merge(&other);
+        assert_eq!((m.slo_eligible, m.slo_met, m.admission_sheds), (4, 3, 5));
+        assert!((m.slo_attainment().unwrap() - 0.75).abs() < 1e-12);
     }
 
     #[test]

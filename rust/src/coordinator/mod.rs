@@ -109,7 +109,9 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::BatchPolicy;
-pub use kv::{window_chain_hashes, HostPool, KvPager, PrefixDirectory, PrefixStats, SeqKv};
+pub use kv::{
+    window_chain_hashes, HostPool, KvPager, PrefixDirectory, PrefixStats, ReclaimPolicy, SeqKv,
+};
 pub use metrics::{jain_index, FleetMetrics, Metrics};
 pub use request::{Carried, GenRequest, GenResponse};
 pub use router::{Fleet, RoutePolicy};

@@ -65,10 +65,15 @@ pub struct GenRequest {
     /// Enqueue timestamp for latency accounting. Reset at each rescue or
     /// retry re-entry (the prior wait is banked in [`Carried::queue_s`]).
     pub enqueued: Instant,
-    /// Wall-clock deadline stamped at submission from the recovery
-    /// policy; past it the request fails at the next dispatch or
-    /// admission checkpoint instead of occupying a card.
+    /// Wall-clock deadline stamped at submission — the tenant's SLO
+    /// contract when one is declared (`name:weight:…:slo_ms`), else the
+    /// server-wide recovery deadline; past it the request fails at the
+    /// next dispatch or admission checkpoint instead of occupying a card.
     pub deadline: Option<Instant>,
+    /// The tenant's SLO latency target in seconds, when contracted —
+    /// what admission control predicts against at submit, and what the
+    /// per-tenant attainment rollup scores at retire.
+    pub slo_s: Option<f64>,
     /// Rescue/retry state carried across nodes (empty on first entry).
     pub carry: Carried,
 }
@@ -181,6 +186,7 @@ mod tests {
             reply: tx,
             enqueued: Instant::now(),
             deadline: None,
+            slo_s: None,
             carry: Carried::default(),
         };
         req.reply

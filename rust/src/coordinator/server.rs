@@ -72,6 +72,7 @@ use crate::isa::pass::FmadPolicy;
 use crate::llm::llamabench::{BenchResult, LlamaBench};
 use crate::llm::model::ModelDesc;
 use crate::llm::quant;
+use crate::load::{weight_ranks, AdmissionConfig, AdmissionCtl, Verdict};
 use crate::memhier::pcie::PcieLink;
 use crate::obsv::{
     DispatchPoint, PhaseLedger, SeriesPoint, SpanKind, TraceId, Tracer, NODE_SCOPE, RING_CAP,
@@ -158,6 +159,17 @@ pub struct ServerConfig {
     /// returns — every stamp is simulated-clock, so tracing can never
     /// move the simulated numbers either way.
     pub trace: bool,
+    /// Adaptive admission control ([`crate::load::AdmissionCtl`]):
+    /// predict each SLO-contracted request's completion at dispatch from
+    /// the fleet's backlog priced with the calibrated overlays, and shed
+    /// it *before* any prefill is wasted when the prediction violates the
+    /// tenant's contract, escalating down a hysteretic brownout ladder
+    /// under sustained overload. On by default — it only ever acts on
+    /// tenants that declare an SLO (`name:weight:…:slo_ms`), so
+    /// uncontracted traffic is untouched. Off (`--no-admission-control`)
+    /// is the reactive-only ablation arm: stale requests fail at the
+    /// deadline gate after they already queued.
+    pub admission: bool,
 }
 
 impl Default for ServerConfig {
@@ -175,6 +187,7 @@ impl Default for ServerConfig {
             affinity: true,
             overlap: true,
             trace: false,
+            admission: true,
         }
     }
 }
@@ -473,6 +486,10 @@ impl Server {
                     // (or a prefix-blind run) reverts to refcount-zero
                     // frees — the ablation baseline.
                     pager.set_retention(policy.kv_retention && policy.prefix_cache);
+                    // Cached-tier victim selection (`--reclaim-policy`):
+                    // strict LRU, or depth-aware — spend deep private
+                    // tail chunks before shallow shared prefixes.
+                    pager.set_reclaim_policy(policy.reclaim);
                     // The pool must hold at least one prefill window plus
                     // one decode position, or admission could never make
                     // progress and the engine would spin.
@@ -564,6 +581,10 @@ impl Server {
             directory: config.affinity.then(|| Arc::clone(&directory)),
             block_positions: config.batch.block_positions(),
             tracer: Arc::clone(&tracer),
+            admission: config
+                .admission
+                .then(|| AdmissionCtl::new(AdmissionConfig::default())),
+            weight_rank: weight_ranks(&registry.weights()),
         };
         let dispatcher = std::thread::Builder::new()
             .name("cmphx-dispatch".into())
@@ -619,6 +640,12 @@ struct Dispatcher {
     /// Flight recorder: queue-side spans journal on the dispatch
     /// pseudo-node's ring, and the dispatcher drains every ring per loop.
     tracer: Arc<Tracer>,
+    /// Adaptive admission control ([`crate::load::AdmissionCtl`]):
+    /// `None` is the `--no-admission-control` reactive-only ablation.
+    admission: Option<AdmissionCtl>,
+    /// Per-tenant fair-share weight rank in `[0, 1]` — the brownout
+    /// ladder's shed order (lightest tenants shed first).
+    weight_rank: Vec<f64>,
 }
 
 impl Dispatcher {
@@ -857,6 +884,43 @@ impl Dispatcher {
             self.shed(req, 0, "deadline exceeded before dispatch", false);
             return;
         }
+        // Adaptive admission: predict this request's completion — the
+        // least-loaded healthy card's backlog plus the request's own
+        // service demand, both priced with the calibrated overlays — and
+        // shed *now*, before any prefill is wasted, when the prediction
+        // violates the tenant's SLO contract. Contract-less tenants
+        // always pass; an empty healthy set falls through to the
+        // no-healthy-node path below.
+        if let Some(ctl) = self.admission.as_mut() {
+            let predicted = predicted_completion_s(
+                &self.fleet,
+                &self.queues,
+                &self.overlays,
+                self.queue.len(),
+                self.prefill_t,
+                req.max_tokens,
+            );
+            if predicted.is_finite() {
+                let rank = self.weight_rank.get(t.0).copied().unwrap_or(1.0);
+                if let Verdict::Shed { level } = ctl.decide(predicted, req.slo_s, rank) {
+                    self.tenant_metrics[t.0].lock().unwrap().admission_sheds += 1;
+                    self.accounts
+                        .lock()
+                        .unwrap()
+                        .settle_energy(t, req.charged_j, req.carry.sim_j);
+                    self.shed(
+                        req,
+                        0,
+                        &format!(
+                            "admission control: predicted SLO violation \
+                             (brownout level {level})"
+                        ),
+                        false,
+                    );
+                    return;
+                }
+            }
+        }
         let (mut idx, affine) = {
             let mut f = self.fleet.lock().unwrap();
             if f.healthy_count() == 0 {
@@ -957,12 +1021,21 @@ impl Dispatcher {
         // fold in queue time banked across earlier dispatch attempts
         let queue_s = req.carry.queue_s + req.enqueued.elapsed().as_secs_f64();
         if on_node {
-            self.node_metrics[node].lock().unwrap().record_response(queue_s, 0, false);
+            let mut m = self.node_metrics[node].lock().unwrap();
+            if req.slo_s.is_some() {
+                m.record_slo(false);
+            }
+            m.record_response(queue_s, 0, false);
         }
-        self.tenant_metrics[req.tenant.0]
-            .lock()
-            .unwrap()
-            .record_response(queue_s, 0, false);
+        {
+            // A shed contracted request can never meet its SLO — it
+            // counts against the tenant's attainment like a late serve.
+            let mut tm = self.tenant_metrics[req.tenant.0].lock().unwrap();
+            if req.slo_s.is_some() {
+                tm.record_slo(false);
+            }
+            tm.record_response(queue_s, 0, false);
+        }
         let _ = req.reply.send(empty_response(
             req.id,
             req.tenant,
@@ -984,6 +1057,35 @@ fn padded_window(prompt: &[i32], prefill_t: usize) -> Option<Vec<i32>> {
     let mut w = vec![0i32; prefill_t - prompt.len()];
     w.extend_from_slice(prompt);
     Some(w)
+}
+
+/// The admission controller's completion prediction for one request: the
+/// least-loaded healthy card's backlog (outstanding work, its bounded
+/// queue, and this request's share of the admission queue) priced at that
+/// card's calibrated overlay, plus the request's own full-window service
+/// demand. Infinite when no healthy card remains — the caller's
+/// no-healthy-node path owns that outcome.
+fn predicted_completion_s(
+    fleet: &Mutex<Fleet>,
+    queues: &NodeQueues<GenRequest>,
+    overlays: &[Overlay],
+    admission_backlog: usize,
+    prefill_t: usize,
+    max_tokens: usize,
+) -> f64 {
+    let f = fleet.lock().unwrap();
+    let share = admission_backlog as f64 / f.healthy_count().max(1) as f64;
+    f.nodes
+        .iter()
+        .enumerate()
+        .filter(|(_, n)| n.healthy)
+        .map(|(i, n)| {
+            let o = &overlays[i];
+            let service = o.prefill_s_per_token * prefill_t as f64
+                + o.decode_s_per_token * max_tokens as f64;
+            (n.outstanding as f64 + queues.len(i) as f64 + share + 1.0) * service
+        })
+        .fold(f64::INFINITY, f64::min)
 }
 
 impl ServerHandle {
@@ -1018,6 +1120,10 @@ impl ServerHandle {
         let id = self
             .next_id
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        // The tenant's SLO contract (when declared) overrides the
+        // server-wide recovery deadline and rides along for the admission
+        // controller's prediction and the attainment rollup.
+        let spec = self.registry.spec(tenant);
         let req = GenRequest {
             id,
             tenant,
@@ -1026,7 +1132,8 @@ impl ServerHandle {
             charged_j: 0.0,
             reply,
             enqueued: Instant::now(),
-            deadline: self.deadline.map(|d| Instant::now() + d),
+            deadline: spec.slo().or(self.deadline).map(|d| Instant::now() + d),
+            slo_s: spec.slo_s(),
             carry: Carried::default(),
         };
         let tx = self.tx.as_ref().ok_or_else(|| anyhow::anyhow!("server stopped"))?;
@@ -1467,6 +1574,24 @@ fn worker_loop(mut w: NodeWorker) {
             // Transient stall (wedged driver): no work this round, but
             // parked sequences still age toward their admission freeze.
             w.degrade.stall_rounds -= 1;
+            // Cache-reclaim retractions still flush: a stalled card must
+            // not keep advertising chains its page pressure already
+            // dropped, or affine routing keeps piling work onto the
+            // wedged node for prefixes it no longer holds.
+            let dropped: Vec<u64> = w
+                .pager
+                .take_retracted()
+                .into_iter()
+                .filter(|h| published.remove(h))
+                .collect();
+            if synced
+                && !dropped.is_empty()
+                && !w.directory.publish_delta(w.node, published_epoch, &[], &dropped)
+            {
+                // epoch moved under us (death/recovery clear): resync
+                // with a full publish on the next working round
+                synced = false;
+            }
             std::thread::sleep(Duration::from_millis(1));
             park.age_owned(w.node);
             continue;
@@ -1478,6 +1603,13 @@ fn worker_loop(mut w: NodeWorker) {
         // epoch check. A hint, not a lease: pages may be evicted before a
         // routed request arrives, and admission's two-pass probe degrades
         // any stale hit to a plain miss.
+        // Drain the pager's reclaim-retraction buffer: every chain the
+        // cache tier dropped since last round is absent from
+        // `index_hashes()` now, so the diff against `published` below
+        // retracts it in this round's delta — the buffer's dedicated
+        // flush path is the stalled-round branch above (where no diff
+        // runs), and draining here keeps it bounded.
+        w.pager.take_retracted();
         let resident: std::collections::HashSet<u64> =
             w.pager.index_hashes().into_iter().collect();
         let added: Vec<u64> = resident.difference(&published).copied().collect();
@@ -2610,6 +2742,10 @@ fn retire(w: &mut NodeWorker, l: Live) {
         ledger: l.ledger,
         trace,
     };
+    // SLO attainment: a contracted request scores met only when it
+    // succeeded within its latency target — a late success is served
+    // waste, exactly what the admission controller exists to avoid.
+    let slo_met = l.req.slo_s.map(|s| ok && resp.latency_s() <= s);
     {
         let mut m = w.metrics.lock().unwrap();
         m.wall_prefill_s += l.prefill_s;
@@ -2617,6 +2753,9 @@ fn retire(w: &mut NodeWorker, l: Live) {
         m.simulated_device_s += l.ledger.device_s();
         m.simulated_energy_j += l.sim_j;
         m.attrib.record(l.queue_s, &l.ledger);
+        if let Some(met) = slo_met {
+            m.record_slo(met);
+        }
         m.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
     {
@@ -2624,6 +2763,9 @@ fn retire(w: &mut NodeWorker, l: Live) {
         tm.simulated_device_s += l.ledger.device_s();
         tm.simulated_energy_j += l.sim_j;
         tm.attrib.record(l.queue_s, &l.ledger);
+        if let Some(met) = slo_met {
+            tm.record_slo(met);
+        }
         tm.record_response(resp.latency_s(), resp.tokens.len(), ok);
     }
     w.accounts.lock().unwrap().settle_energy(l.req.tenant, l.req.charged_j, l.sim_j);
@@ -2647,10 +2789,19 @@ fn reject(w: &mut NodeWorker, req: &GenRequest, error: String, queue_s: f64, act
         w.tracer.emit(w.node, TraceId(req.id), SpanKind::Failed { error: error.clone() });
         w.tracer.flight_dump(w.node, "terminal error");
     }
-    w.metrics.lock().unwrap().record_response(queue_s, 0, false);
+    {
+        let mut m = w.metrics.lock().unwrap();
+        if req.slo_s.is_some() {
+            m.record_slo(false);
+        }
+        m.record_response(queue_s, 0, false);
+    }
     {
         let mut tm = w.tenant_metrics[req.tenant.0].lock().unwrap();
         tm.simulated_energy_j += actual_j;
+        if req.slo_s.is_some() {
+            tm.record_slo(false);
+        }
         tm.record_response(queue_s, 0, false);
     }
     w.accounts.lock().unwrap().settle_energy(req.tenant, req.charged_j, actual_j);
@@ -2718,6 +2869,7 @@ mod tests {
             reply,
             enqueued: Instant::now(),
             deadline: None,
+            slo_s: None,
             carry: Carried::default(),
         };
         (req, rx)
@@ -2760,6 +2912,8 @@ mod tests {
             directory: None,
             block_positions: 16,
             tracer: Arc::new(Tracer::off(nodes)),
+            admission: Some(AdmissionCtl::new(AdmissionConfig::default())),
+            weight_rank: weight_ranks(&registry.weights()),
         }
     }
 
@@ -2965,6 +3119,58 @@ mod tests {
         d.dispatch(req.tenant, req, Instant::now());
         assert_eq!(d.queues.try_pop(0).unwrap().id, 2);
         assert!(reply.try_recv().is_err());
+    }
+
+    #[test]
+    fn admission_control_sheds_doomed_contracted_requests_at_submit() {
+        let mut d = stub_dispatcher(1, vec![]);
+        // own service alone (16 prefill + 1000 decode tokens on the test
+        // overlay ≈ 2 s) dooms a 100 ms contract before any queueing
+        let (mut req, reply) = dummy_request(1);
+        req.max_tokens = 1000;
+        req.slo_s = Some(0.1);
+        d.dispatch(req.tenant, req, Instant::now());
+        let resp = reply.try_recv().unwrap();
+        let err = resp.error.as_deref().unwrap();
+        assert!(err.contains("admission control"), "{err}");
+        {
+            let tm = d.tenant_metrics[0].lock().unwrap();
+            assert_eq!(tm.admission_sheds, 1);
+            assert_eq!((tm.slo_eligible, tm.slo_met), (1, 0), "a shed counts as a miss");
+        }
+        assert_eq!(d.queues.len(0), 0, "doomed work must never reach a worker");
+        assert_eq!(d.fleet.lock().unwrap().nodes[0].outstanding, 0);
+
+        // the same contract with a feasible prediction flows normally
+        let (mut req, reply) = dummy_request(2);
+        req.slo_s = Some(0.5);
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.try_pop(0).unwrap().id, 2);
+        assert!(reply.try_recv().is_err());
+    }
+
+    #[test]
+    fn contract_less_requests_always_pass_admission_control() {
+        let mut d = stub_dispatcher(1, vec![]);
+        let (mut req, _reply) = dummy_request(1);
+        req.max_tokens = 1000; // hopeless against any contract — but there is none
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.len(0), 1);
+        let tm = d.tenant_metrics[0].lock().unwrap();
+        assert_eq!((tm.admission_sheds, tm.slo_eligible), (0, 0));
+    }
+
+    #[test]
+    fn the_no_admission_control_ablation_admits_doomed_requests() {
+        let mut d = stub_dispatcher(1, vec![]);
+        d.admission = None;
+        let (mut req, reply) = dummy_request(1);
+        req.max_tokens = 1000;
+        req.slo_s = Some(0.1);
+        d.dispatch(req.tenant, req, Instant::now());
+        assert_eq!(d.queues.len(0), 1, "the reactive arm queues work it cannot save");
+        assert!(reply.try_recv().is_err(), "no early shed without the controller");
+        assert_eq!(d.tenant_metrics[0].lock().unwrap().admission_sheds, 0);
     }
 
     #[test]

@@ -52,6 +52,7 @@ pub mod device;
 pub mod faults;
 pub mod isa;
 pub mod llm;
+pub mod load;
 pub mod market;
 pub mod memhier;
 pub mod obsv;

@@ -1,0 +1,269 @@
+//! Adaptive admission control: fail fast *before* prefill is wasted.
+//!
+//! The fleet's pre-existing overload defense is reactive — a request that
+//! outlives its wall-clock deadline is failed at dispatch, after it
+//! queued and after earlier doomed requests burned card time. Past the
+//! latency knee that policy collapses: every admitted request pushes the
+//! backlog further over everyone's SLO, the cards stay saturated serving
+//! answers nobody can use in time, and goodput falls while energy burn
+//! holds at full draw (congestion collapse).
+//!
+//! [`AdmissionCtl`] makes the decision at **submit** instead, from a
+//! prediction the dispatcher can already compute: backlog ahead of the
+//! request (queue depth × calibrated per-request service estimate from
+//! the node overlays — the same signals `obsv::series` samples) plus the
+//! request's own service demand. If the predicted completion violates the
+//! tenant's SLO contract, the request is shed immediately with an error —
+//! the client can retry elsewhere, and the card's next seconds go to a
+//! request that can still win.
+//!
+//! Shedding escalates down a **brownout ladder** with hysteresis rather
+//! than flapping on a point estimate: consecutive doomed predictions trip
+//! the level up (shedding spreads from certainly-doomed requests to
+//! near-SLO requests of the lightest-weight tenants first, mirroring how
+//! the PR 6 degradation ladder sheds over-rate tenants), and a calm
+//! streak cools it back down. The controller is pure state — no clocks,
+//! no randomness — so the same decision sequence replays bit-identically,
+//! which is what lets open-loop overload curves be seed-reproducible.
+
+/// Tuning for [`AdmissionCtl`]. Defaults are deliberately gentle: no
+/// headroom inflation and a ladder that needs a sustained doomed streak
+/// to escalate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionConfig {
+    /// Multiplier on the predicted completion before comparing against
+    /// the SLO (`> 1.0` sheds earlier, buying safety margin for
+    /// estimation error).
+    pub headroom: f64,
+    /// Consecutive doomed verdicts before the brownout level steps up.
+    pub trip_decisions: u32,
+    /// Consecutive clean verdicts before it steps back down.
+    pub cool_decisions: u32,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            headroom: 1.0,
+            trip_decisions: 4,
+            cool_decisions: 16,
+        }
+    }
+}
+
+/// One admission decision.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    Admit,
+    /// Shed now, before any prefill; carries the brownout level that made
+    /// the call (0 = only certainly-doomed requests are shed).
+    Shed { level: u8 },
+}
+
+/// Deterministic admission controller with a hysteretic brownout ladder.
+///
+/// Level 0 sheds only requests whose *own* predicted completion already
+/// violates their SLO. Each level `L ≥ 1` additionally sheds requests
+/// from the lightest `25·L` % of tenants (by fair-share weight rank) once
+/// their prediction crosses `(1 − 0.2·L)` of the SLO — shedding the
+/// cheapest traffic early to pull the backlog back under the knee before
+/// heavier tenants start missing.
+#[derive(Clone, Debug)]
+pub struct AdmissionCtl {
+    cfg: AdmissionConfig,
+    level: u8,
+    hot_streak: u32,
+    calm_streak: u32,
+    /// Requests shed across the controller's lifetime.
+    pub sheds: u64,
+    /// Requests admitted across the controller's lifetime.
+    pub admits: u64,
+}
+
+impl AdmissionCtl {
+    /// Top of the brownout ladder.
+    pub const MAX_LEVEL: u8 = 3;
+
+    pub fn new(cfg: AdmissionConfig) -> Self {
+        assert!(cfg.headroom > 0.0 && cfg.headroom.is_finite(), "bad headroom");
+        assert!(cfg.trip_decisions > 0 && cfg.cool_decisions > 0, "zero streaks flap");
+        AdmissionCtl {
+            cfg,
+            level: 0,
+            hot_streak: 0,
+            calm_streak: 0,
+            sheds: 0,
+            admits: 0,
+        }
+    }
+
+    /// Current brownout level (0 = normal operation).
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Decide one request. `predicted_s` is backlog-ahead plus own
+    /// service; `slo_s` the tenant's contract (None = no contract, always
+    /// admitted — there is nothing to protect); `weight_rank` the
+    /// tenant's fair-share weight rank in `[0, 1]` (0 = lightest tenant,
+    /// 1 = heaviest).
+    pub fn decide(&mut self, predicted_s: f64, slo_s: Option<f64>, weight_rank: f64) -> Verdict {
+        let slo = match slo_s {
+            Some(s) => s,
+            None => {
+                self.admits += 1;
+                return Verdict::Admit;
+            }
+        };
+        let inflated = predicted_s * self.cfg.headroom;
+        let doomed = inflated > slo;
+        if doomed {
+            self.hot_streak += 1;
+            self.calm_streak = 0;
+            if self.hot_streak >= self.cfg.trip_decisions {
+                self.hot_streak = 0;
+                if self.level < Self::MAX_LEVEL {
+                    self.level += 1;
+                }
+            }
+        } else {
+            self.calm_streak += 1;
+            self.hot_streak = 0;
+            if self.calm_streak >= self.cfg.cool_decisions {
+                self.calm_streak = 0;
+                if self.level > 0 {
+                    self.level -= 1;
+                }
+            }
+        }
+        let l = f64::from(self.level);
+        let brownout = self.level > 0 && weight_rank < 0.25 * l && inflated > slo * (1.0 - 0.2 * l);
+        if doomed || brownout {
+            self.sheds += 1;
+            Verdict::Shed { level: self.level }
+        } else {
+            self.admits += 1;
+            Verdict::Admit
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl() -> AdmissionCtl {
+        AdmissionCtl::new(AdmissionConfig::default())
+    }
+
+    #[test]
+    fn healthy_predictions_admit_and_doomed_shed_at_level_zero() {
+        let mut c = ctl();
+        assert_eq!(c.decide(0.5, Some(1.0), 0.0), Verdict::Admit);
+        assert_eq!(c.decide(1.5, Some(1.0), 1.0), Verdict::Shed { level: 0 });
+        assert_eq!(c.level(), 0, "one doomed request does not trip the ladder");
+        assert_eq!((c.admits, c.sheds), (1, 1));
+    }
+
+    #[test]
+    fn requests_without_a_contract_are_never_shed() {
+        let mut c = ctl();
+        for _ in 0..100 {
+            assert_eq!(c.decide(1e9, None, 0.0), Verdict::Admit);
+        }
+        assert_eq!(c.level(), 0, "contract-less traffic cannot escalate the ladder");
+    }
+
+    #[test]
+    fn sustained_doom_trips_the_ladder_and_calm_cools_it() {
+        let cfg = AdmissionConfig {
+            headroom: 1.0,
+            trip_decisions: 3,
+            cool_decisions: 4,
+        };
+        let mut c = AdmissionCtl::new(cfg);
+        for _ in 0..3 {
+            c.decide(2.0, Some(1.0), 1.0);
+        }
+        assert_eq!(c.level(), 1, "three consecutive doomed verdicts trip level 1");
+        for _ in 0..6 {
+            c.decide(2.0, Some(1.0), 1.0);
+        }
+        assert_eq!(c.level(), 3, "and the ladder saturates at MAX_LEVEL");
+        for _ in 0..30 {
+            c.decide(2.0, Some(1.0), 1.0);
+        }
+        assert_eq!(c.level(), AdmissionCtl::MAX_LEVEL);
+        for _ in 0..12 {
+            c.decide(0.1, Some(1.0), 1.0);
+        }
+        assert_eq!(c.level(), 0, "twelve calm verdicts walk all three levels back down");
+    }
+
+    #[test]
+    fn brownout_sheds_light_tenants_near_the_slo_but_not_heavy_ones() {
+        let cfg = AdmissionConfig {
+            headroom: 1.0,
+            trip_decisions: 2,
+            cool_decisions: 100,
+        };
+        let mut c = AdmissionCtl::new(cfg);
+        c.decide(2.0, Some(1.0), 1.0);
+        c.decide(2.0, Some(1.0), 1.0);
+        assert_eq!(c.level(), 1);
+        // 0.9 of SLO: above the level-1 brownout threshold (0.8·SLO)
+        assert_eq!(
+            c.decide(0.9, Some(1.0), 0.0),
+            Verdict::Shed { level: 1 },
+            "lightest tenant sheds near the SLO under brownout"
+        );
+        assert_eq!(
+            c.decide(0.9, Some(1.0), 0.9),
+            Verdict::Admit,
+            "a heavy tenant with the same prediction stays admitted"
+        );
+        assert_eq!(
+            c.decide(0.5, Some(1.0), 0.0),
+            Verdict::Admit,
+            "even the lightest tenant keeps comfortably-in-SLO traffic"
+        );
+    }
+
+    #[test]
+    fn mixed_traffic_does_not_flap_the_ladder() {
+        // alternating doomed/clean never builds a streak, so the level
+        // stays put — the hysteresis working as intended
+        let mut c = ctl();
+        for _ in 0..50 {
+            c.decide(2.0, Some(1.0), 1.0);
+            c.decide(0.2, Some(1.0), 1.0);
+        }
+        assert_eq!(c.level(), 0);
+    }
+
+    #[test]
+    fn identical_decision_sequences_replay_identically() {
+        let run = || {
+            let mut c = ctl();
+            (0..200)
+                .map(|i| {
+                    let p = (i % 7) as f64 * 0.3;
+                    c.decide(p, Some(1.0), (i % 5) as f64 / 4.0)
+                })
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "pure state machine: no clocks, no randomness");
+    }
+
+    #[test]
+    fn headroom_sheds_earlier() {
+        let mut tight = AdmissionCtl::new(AdmissionConfig {
+            headroom: 1.25,
+            ..AdmissionConfig::default()
+        });
+        let mut loose = ctl();
+        // 0.9 of SLO: fine without headroom, doomed with 1.25×
+        assert_eq!(loose.decide(0.9, Some(1.0), 1.0), Verdict::Admit);
+        assert_eq!(tight.decide(0.9, Some(1.0), 1.0), Verdict::Shed { level: 0 });
+    }
+}

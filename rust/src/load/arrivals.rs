@@ -1,0 +1,556 @@
+//! Seeded open-loop arrival generators.
+//!
+//! Closed-loop benches (a fixed client pool that waits for each response)
+//! hide the latency knee: offered load can never exceed service capacity,
+//! so the queue never grows and the measured "peak" is the closed loop's
+//! self-throttling. Production serving is **open-loop** — clients arrive
+//! on their own clock, indifferent to how far behind the fleet is — and
+//! the interesting region is exactly the one a closed loop cannot reach:
+//! offered load at and past capacity, where goodput, tail latency, and
+//! energy-per-useful-token are decided by the overload policy.
+//!
+//! An [`ArrivalPlan`] is a pure data script on the **simulated clock**,
+//! built once from a seed exactly like [`crate::faults::FaultPlan`]: the
+//! same `(process, seed, duration, shape)` reproduces the same stream
+//! bit-identically on any host, so overload curves are replayable and
+//! diffable. Three generators cover the catalog ([`ArrivalProcess`]):
+//! memoryless [`ArrivalProcess::Poisson`], bursty two-state
+//! [`ArrivalProcess::Mmpp`] (Markov-modulated Poisson), and a slow
+//! sinusoidal [`ArrivalProcess::Diurnal`] sampled by thinning. Captured
+//! traces replay through [`ArrivalPlan::replay`]. Offered-load sweeps
+//! come from [`ArrivalPlan::scaled`], which compresses the stream's time
+//! axis without redrawing it — every point on a knee curve serves the
+//! *same requests*, only packed tighter.
+//!
+//! Prompts carry **shared-prefix structure**: each arrival draws one of
+//! [`WorkloadShape::families`] prompt families and opens with that
+//! family's common prefix before a unique tail, so prefix-cache and
+//! affinity-routing behavior under load is part of the workload, not an
+//! accident of the bench.
+
+use crate::qos::TenantId;
+use crate::testutil::Rng;
+
+/// Token-id space the synthetic prompts draw from.
+const VOCAB: u64 = 32_000;
+
+/// 64-bit mix fold (splitmix64 finalizer) used for stream and token
+/// fingerprints. Stable across platforms so fingerprints are comparable
+/// in CI and across hosts.
+pub fn mix64(h: u64, v: u64) -> u64 {
+    let mut z = h ^ v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Fingerprint of the tokens a greedy decode would serve for a prompt:
+/// greedy decoding of a fixed model is a pure function of the prompt, so
+/// a prompt hash is a faithful stand-in for served-token identity in the
+/// pure simulator (the real engine's replay tests pin the actual ids).
+pub fn token_fingerprint(prompt: &[i32], max_tokens: usize) -> u64 {
+    let mut h = 0xA11C_0DE5_0F7C_0DE5;
+    for &tok in prompt {
+        h = mix64(h, tok as u64);
+    }
+    mix64(h, max_tokens as u64)
+}
+
+/// One open-loop request: who arrives, when, carrying what work.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Arrival {
+    /// Arrival instant on the simulated clock, seconds from stream start.
+    pub at_s: f64,
+    /// Billing tenant (index into the serving registry / SLO table).
+    pub tenant: TenantId,
+    pub prompt: Vec<i32>,
+    pub max_tokens: usize,
+}
+
+/// The arrival-process catalog. Rates are requests per second on the
+/// simulated clock.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals at a constant rate — the M/G/1 baseline.
+    Poisson { rps: f64 },
+    /// Markov-modulated Poisson: alternate between a base and a burst
+    /// rate, dwelling an exponential time (mean `mean_dwell_s`) in each
+    /// state. The long-run mean rate is the average of the two.
+    Mmpp {
+        base_rps: f64,
+        burst_rps: f64,
+        mean_dwell_s: f64,
+    },
+    /// Sinusoidal daily cycle sampled by thinning: instantaneous rate
+    /// `mean_rps · (1 + swing·sin(2πt/period_s))` with `0 ≤ swing < 1`.
+    Diurnal {
+        mean_rps: f64,
+        swing: f64,
+        period_s: f64,
+    },
+}
+
+impl ArrivalProcess {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson { .. } => "poisson",
+            ArrivalProcess::Mmpp { .. } => "mmpp",
+            ArrivalProcess::Diurnal { .. } => "diurnal",
+        }
+    }
+
+    /// Long-run mean arrival rate the process targets.
+    pub fn nominal_rps(&self) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson { rps } => rps,
+            ArrivalProcess::Mmpp {
+                base_rps, burst_rps, ..
+            } => 0.5 * (base_rps + burst_rps),
+            ArrivalProcess::Diurnal { mean_rps, .. } => mean_rps,
+        }
+    }
+}
+
+/// What each arrival carries: tenant fan-out, prompt geometry, and the
+/// shared-prefix family structure.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadShape {
+    /// Tenants to spread arrivals over, uniformly (ids `0..tenants`).
+    pub tenants: usize,
+    /// Total prompt length, tokens.
+    pub prompt_len: usize,
+    /// Leading tokens shared within a prompt family (system prompt).
+    pub shared_prefix_len: usize,
+    /// Distinct prompt families (each with its own shared prefix).
+    pub families: usize,
+    /// Decode budget per request.
+    pub max_tokens: usize,
+}
+
+impl Default for WorkloadShape {
+    fn default() -> Self {
+        WorkloadShape {
+            tenants: 1,
+            prompt_len: 32,
+            shared_prefix_len: 16,
+            families: 4,
+            max_tokens: 8,
+        }
+    }
+}
+
+/// A fully materialized open-loop schedule: pure data, sorted by arrival
+/// time, replayable bit-identically from its seed.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ArrivalPlan {
+    pub arrivals: Vec<Arrival>,
+}
+
+impl ArrivalPlan {
+    /// Draw a complete arrival stream from a seed. Same
+    /// `(process, seed, duration, shape)` → byte-identical plan.
+    pub fn seeded(process: ArrivalProcess, seed: u64, duration_s: f64, shape: &WorkloadShape) -> Self {
+        assert!(duration_s > 0.0, "empty observation window");
+        assert!(shape.tenants > 0 && shape.families > 0, "degenerate workload shape");
+        assert!(
+            shape.shared_prefix_len <= shape.prompt_len,
+            "shared prefix longer than the prompt"
+        );
+        match process {
+            ArrivalProcess::Poisson { rps } => assert!(rps > 0.0, "poisson rate must be positive"),
+            ArrivalProcess::Mmpp {
+                base_rps,
+                burst_rps,
+                mean_dwell_s,
+            } => assert!(
+                base_rps > 0.0 && burst_rps > 0.0 && mean_dwell_s > 0.0,
+                "mmpp parameters must be positive"
+            ),
+            ArrivalProcess::Diurnal {
+                mean_rps,
+                swing,
+                period_s,
+            } => assert!(
+                mean_rps > 0.0 && period_s > 0.0 && (0.0..1.0).contains(&swing),
+                "diurnal parameters out of range"
+            ),
+        }
+        let mut rng = Rng::new(seed);
+        let times = match process {
+            ArrivalProcess::Poisson { rps } => poisson_times(&mut rng, rps, duration_s),
+            ArrivalProcess::Mmpp {
+                base_rps,
+                burst_rps,
+                mean_dwell_s,
+            } => mmpp_times(&mut rng, base_rps, burst_rps, mean_dwell_s, duration_s),
+            ArrivalProcess::Diurnal {
+                mean_rps,
+                swing,
+                period_s,
+            } => diurnal_times(&mut rng, mean_rps, swing, period_s, duration_s),
+        };
+        let mut arrivals = Vec::with_capacity(times.len());
+        for at_s in times {
+            let tenant = TenantId(rng.below(shape.tenants as u64) as usize);
+            let family = rng.below(shape.families as u64);
+            // the family prefix is its own deterministic stream so every
+            // member of a family opens with the same tokens
+            let mut fam = Rng::new(seed ^ mix64(0xFA_111_1E5, family));
+            let mut prompt = Vec::with_capacity(shape.prompt_len);
+            for _ in 0..shape.shared_prefix_len {
+                prompt.push(fam.below(VOCAB) as i32);
+            }
+            while prompt.len() < shape.prompt_len {
+                prompt.push(rng.below(VOCAB) as i32);
+            }
+            arrivals.push(Arrival {
+                at_s,
+                tenant,
+                prompt,
+                max_tokens: shape.max_tokens,
+            });
+        }
+        ArrivalPlan { arrivals }
+    }
+
+    /// Build a plan from externally captured events (a trace). Events are
+    /// **stably** sorted by arrival time, so same-instant ties keep the
+    /// trace's submission order and each tenant's relative order is
+    /// preserved exactly.
+    pub fn replay(mut events: Vec<Arrival>) -> Self {
+        events.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).expect("non-finite arrival time"));
+        ArrivalPlan { arrivals: events }
+    }
+
+    /// The same stream with its time axis compressed (`factor > 1`, more
+    /// offered load) or stretched (`factor < 1`). Requests, tenants, and
+    /// prompts are untouched — every point of a knee sweep serves
+    /// identical work.
+    pub fn scaled(&self, factor: f64) -> Self {
+        assert!(factor > 0.0 && factor.is_finite(), "bad load factor");
+        ArrivalPlan {
+            arrivals: self
+                .arrivals
+                .iter()
+                .map(|a| Arrival {
+                    at_s: a.at_s / factor,
+                    ..a.clone()
+                })
+                .collect(),
+        }
+    }
+
+    /// Empirical offered rate: arrivals over the stream's span.
+    pub fn offered_rps(&self) -> f64 {
+        match self.arrivals.last() {
+            Some(last) if last.at_s > 0.0 => self.arrivals.len() as f64 / last.at_s,
+            _ => 0.0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Tenants the plan actually references (`1 + max id`), for sizing
+    /// SLO and weight tables.
+    pub fn tenant_span(&self) -> usize {
+        self.arrivals.iter().map(|a| a.tenant.0 + 1).max().unwrap_or(0)
+    }
+
+    /// Order-sensitive fingerprint over every field of every arrival —
+    /// the byte-identity witness for same-seed reproducibility tests.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0x0511_0A4B_17A1_C0DE;
+        for a in &self.arrivals {
+            h = mix64(h, a.at_s.to_bits());
+            h = mix64(h, a.tenant.0 as u64);
+            h = mix64(h, a.max_tokens as u64);
+            for &tok in &a.prompt {
+                h = mix64(h, tok as u64);
+            }
+        }
+        h
+    }
+}
+
+/// Exponential inter-arrival draw; `rng.f64()` is in `[0, 1)` so the
+/// logarithm's argument stays in `(0, 1]`.
+fn exp_draw(rng: &mut Rng, rate: f64) -> f64 {
+    -(1.0 - rng.f64()).ln() / rate
+}
+
+fn poisson_times(rng: &mut Rng, rps: f64, duration_s: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += exp_draw(rng, rps);
+        if t >= duration_s {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+fn mmpp_times(rng: &mut Rng, base_rps: f64, burst_rps: f64, mean_dwell_s: f64, duration_s: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    let mut bursting = false;
+    let mut state_end = exp_draw(rng, 1.0 / mean_dwell_s);
+    loop {
+        let rate = if bursting { burst_rps } else { base_rps };
+        let dt = exp_draw(rng, rate);
+        if t + dt >= state_end {
+            // jump to the boundary and toggle; memorylessness makes
+            // discarding the in-flight gap exact, not an approximation
+            t = state_end;
+            bursting = !bursting;
+            state_end = t + exp_draw(rng, 1.0 / mean_dwell_s);
+            if t >= duration_s {
+                return out;
+            }
+            continue;
+        }
+        t += dt;
+        if t >= duration_s {
+            return out;
+        }
+        out.push(t);
+    }
+}
+
+fn diurnal_times(rng: &mut Rng, mean_rps: f64, swing: f64, period_s: f64, duration_s: f64) -> Vec<f64> {
+    let peak = mean_rps * (1.0 + swing);
+    let mut out = Vec::new();
+    let mut t = 0.0;
+    loop {
+        t += exp_draw(rng, peak);
+        if t >= duration_s {
+            return out;
+        }
+        let rate = mean_rps * (1.0 + swing * (std::f64::consts::TAU * t / period_s).sin());
+        if rng.chance(rate / peak) {
+            out.push(t);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{assert_close, forall};
+
+    fn shape() -> WorkloadShape {
+        WorkloadShape {
+            tenants: 3,
+            prompt_len: 24,
+            shared_prefix_len: 12,
+            families: 2,
+            max_tokens: 6,
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_stream_bit_identically() {
+        for process in [
+            ArrivalProcess::Poisson { rps: 40.0 },
+            ArrivalProcess::Mmpp {
+                base_rps: 20.0,
+                burst_rps: 120.0,
+                mean_dwell_s: 0.5,
+            },
+            ArrivalProcess::Diurnal {
+                mean_rps: 40.0,
+                swing: 0.6,
+                period_s: 10.0,
+            },
+        ] {
+            let a = ArrivalPlan::seeded(process, 0xC417, 20.0, &shape());
+            let b = ArrivalPlan::seeded(process, 0xC417, 20.0, &shape());
+            assert_eq!(a, b, "{} must replay from its seed", process.name());
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            let c = ArrivalPlan::seeded(process, 0xC418, 20.0, &shape());
+            assert_ne!(a.fingerprint(), c.fingerprint(), "different seed, different stream");
+            for w in a.arrivals.windows(2) {
+                assert!(w[0].at_s <= w[1].at_s, "arrivals sorted by time");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_seed_determinism_across_random_shapes() {
+        forall(0x0be4_100b, 40, |rng| {
+            let seed = rng.next_u64();
+            let shape = WorkloadShape {
+                tenants: rng.range(1, 4) as usize,
+                prompt_len: rng.range(4, 40) as usize,
+                shared_prefix_len: 0,
+                families: rng.range(1, 3) as usize,
+                max_tokens: rng.range(1, 16) as usize,
+            };
+            let shape = WorkloadShape {
+                shared_prefix_len: rng.range(0, shape.prompt_len as u64) as usize,
+                ..shape
+            };
+            let rps = rng.f64_range(5.0, 80.0);
+            let a = ArrivalPlan::seeded(ArrivalProcess::Poisson { rps }, seed, 5.0, &shape);
+            let b = ArrivalPlan::seeded(ArrivalProcess::Poisson { rps }, seed, 5.0, &shape);
+            assert_eq!(a.fingerprint(), b.fingerprint());
+            assert_eq!(a, b);
+        });
+    }
+
+    #[test]
+    fn empirical_rates_converge_to_nominal() {
+        // long windows so the law of large numbers has room: 10%
+        // tolerance on the realized mean rate
+        let dur = 400.0;
+        for process in [
+            ArrivalProcess::Poisson { rps: 25.0 },
+            ArrivalProcess::Mmpp {
+                base_rps: 10.0,
+                burst_rps: 40.0,
+                mean_dwell_s: 1.0,
+            },
+            ArrivalProcess::Diurnal {
+                mean_rps: 25.0,
+                swing: 0.5,
+                period_s: 20.0,
+            },
+        ] {
+            let plan = ArrivalPlan::seeded(process, 7, dur, &WorkloadShape::default());
+            let rate = plan.len() as f64 / dur;
+            assert_close(rate, process.nominal_rps(), 0.10);
+        }
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson_at_equal_mean() {
+        // squared coefficient of variation of inter-arrival gaps: ≈1 for
+        // Poisson, strictly larger for the modulated process
+        let cv2 = |plan: &ArrivalPlan| {
+            let gaps: Vec<f64> = plan.arrivals.windows(2).map(|w| w[1].at_s - w[0].at_s).collect();
+            let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+            let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+            var / (mean * mean)
+        };
+        let poisson = ArrivalPlan::seeded(
+            ArrivalProcess::Poisson { rps: 30.0 },
+            11,
+            200.0,
+            &WorkloadShape::default(),
+        );
+        let mmpp = ArrivalPlan::seeded(
+            ArrivalProcess::Mmpp {
+                base_rps: 5.0,
+                burst_rps: 55.0,
+                mean_dwell_s: 2.0,
+            },
+            11,
+            200.0,
+            &WorkloadShape::default(),
+        );
+        let (p, m) = (cv2(&poisson), cv2(&mmpp));
+        assert!((0.7..1.4).contains(&p), "poisson CV² ≈ 1, got {p}");
+        assert!(m > 1.8 * p, "mmpp must be visibly burstier: {m} vs {p}");
+    }
+
+    #[test]
+    fn scaling_compresses_time_without_redrawing_work() {
+        let plan = ArrivalPlan::seeded(ArrivalProcess::Poisson { rps: 20.0 }, 3, 30.0, &shape());
+        let double = plan.scaled(2.0);
+        assert_eq!(double.len(), plan.len());
+        assert_close(double.offered_rps(), plan.offered_rps() * 2.0, 1e-12);
+        for (a, b) in plan.arrivals.iter().zip(&double.arrivals) {
+            assert_eq!(a.prompt, b.prompt, "same request, new clock");
+            assert_eq!(a.tenant, b.tenant);
+            assert_eq!(b.at_s.to_bits(), (a.at_s / 2.0).to_bits());
+        }
+    }
+
+    #[test]
+    fn prompts_carry_family_shared_prefixes() {
+        let s = shape();
+        let plan = ArrivalPlan::seeded(ArrivalProcess::Poisson { rps: 50.0 }, 5, 10.0, &s);
+        assert!(plan.len() > 50, "enough arrivals to see both families");
+        let mut prefixes: Vec<Vec<i32>> =
+            plan.arrivals.iter().map(|a| a.prompt[..s.shared_prefix_len].to_vec()).collect();
+        prefixes.sort();
+        prefixes.dedup();
+        assert!(
+            prefixes.len() <= s.families && prefixes.len() >= 2,
+            "{} distinct prefixes for {} families",
+            prefixes.len(),
+            s.families
+        );
+        let mut tails: Vec<Vec<i32>> =
+            plan.arrivals.iter().map(|a| a.prompt[s.shared_prefix_len..].to_vec()).collect();
+        tails.sort();
+        tails.dedup();
+        assert!(tails.len() > s.families, "tails are per-request, not shared");
+    }
+
+    #[test]
+    fn prop_replay_preserves_per_tenant_ordering() {
+        forall(0x7E4A4, 60, |rng| {
+            // a shuffled multi-tenant trace: replay must order globally by
+            // time while each tenant's own sequence stays in its original
+            // relative order (payloads tag the original index)
+            let tenants = rng.range(1, 4) as usize;
+            let mut events = Vec::new();
+            for i in 0..rng.range(2, 40) {
+                events.push(Arrival {
+                    at_s: rng.f64_range(0.0, 10.0),
+                    tenant: TenantId(rng.below(tenants as u64) as usize),
+                    prompt: vec![i as i32],
+                    max_tokens: 1,
+                });
+            }
+            // per-tenant expected order = ascending at_s, ties by index
+            let mut expect: Vec<Vec<i32>> = vec![Vec::new(); tenants];
+            let mut sorted = events.clone();
+            sorted.sort_by(|a, b| a.at_s.partial_cmp(&b.at_s).unwrap());
+            for e in &sorted {
+                expect[e.tenant.0].push(e.prompt[0]);
+            }
+            let plan = ArrivalPlan::replay(events);
+            for w in plan.arrivals.windows(2) {
+                assert!(w[0].at_s <= w[1].at_s);
+            }
+            let mut got: Vec<Vec<i32>> = vec![Vec::new(); tenants];
+            for e in &plan.arrivals {
+                got[e.tenant.0].push(e.prompt[0]);
+            }
+            assert_eq!(got, expect, "stable sort keeps per-tenant order");
+        });
+    }
+
+    #[test]
+    fn tenant_span_and_offered_rps_edge_cases() {
+        let empty = ArrivalPlan::default();
+        assert_eq!(empty.tenant_span(), 0);
+        assert_eq!(empty.offered_rps(), 0.0);
+        assert!(empty.is_empty());
+        let plan = ArrivalPlan::seeded(
+            ArrivalProcess::Poisson { rps: 30.0 },
+            9,
+            10.0,
+            &WorkloadShape {
+                tenants: 3,
+                ..WorkloadShape::default()
+            },
+        );
+        assert!(plan.tenant_span() <= 3 && plan.tenant_span() >= 1);
+        assert!(plan.offered_rps() > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "poisson rate")]
+    fn zero_rate_is_rejected() {
+        ArrivalPlan::seeded(ArrivalProcess::Poisson { rps: 0.0 }, 1, 1.0, &WorkloadShape::default());
+    }
+}

@@ -1,0 +1,86 @@
+//! Open-loop pacing against the *real* coordinator.
+//!
+//! [`super::sim`] answers the acceptance questions analytically; this
+//! driver replays the same [`ArrivalPlan`] against a live
+//! [`ServerHandle`] so the knee curves can also be measured end-to-end
+//! when the PJRT artifacts are present. The defining property of an
+//! open-loop harness is preserved: arrival times come from the plan, not
+//! from completions — a slow server does **not** slow the offered load,
+//! which is exactly how production traffic finds the latency knee.
+//!
+//! Plan times are in simulated seconds; `time_scale` maps them onto the
+//! wall clock (e.g. `0.01` replays a 60 s plan in 600 ms) so smoke tests
+//! stay fast while preserving the arrival *order* and relative spacing.
+
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+use super::arrivals::ArrivalPlan;
+use crate::coordinator::{GenResponse, ServerHandle};
+
+/// Everything a paced run produces, indexed like the plan's arrivals.
+#[derive(Debug, Default)]
+pub struct DriveOutcome {
+    /// One slot per arrival: `None` when submit itself was refused
+    /// (bounded submit queue full — back-pressure at the front door).
+    pub responses: Vec<Option<GenResponse>>,
+    /// Arrivals refused at submit.
+    pub submit_rejected: u64,
+}
+
+impl DriveOutcome {
+    /// Responses that completed with tokens and no error.
+    pub fn completed(&self) -> usize {
+        self.responses.iter().flatten().filter(|r| r.ok()).count()
+    }
+
+    /// Responses terminated with an error (shed, deadline, fleet death).
+    pub fn failed(&self) -> usize {
+        self.responses.iter().flatten().filter(|r| !r.ok()).count()
+    }
+}
+
+/// Wall-clock offset of a plan arrival under `time_scale`.
+pub(crate) fn wall_offset(at_s: f64, time_scale: f64) -> Duration {
+    Duration::from_secs_f64((at_s * time_scale).max(0.0))
+}
+
+/// Replay `plan` against a running server, open-loop. Blocks until every
+/// submitted request has a terminal response (completed or shed).
+pub fn drive(handle: &ServerHandle, plan: &ArrivalPlan, time_scale: f64) -> DriveOutcome {
+    assert!(time_scale > 0.0 && time_scale.is_finite(), "bad time_scale");
+    let start = Instant::now();
+    let mut pending: Vec<Option<Receiver<GenResponse>>> = Vec::with_capacity(plan.len());
+    let mut out = DriveOutcome::default();
+    for a in &plan.arrivals {
+        let due = wall_offset(a.at_s, time_scale);
+        let elapsed = start.elapsed();
+        if due > elapsed {
+            // Open loop: wait out the schedule even if the server idles.
+            std::thread::sleep(due - elapsed);
+        }
+        match handle.submit_as(a.tenant, a.prompt.clone(), a.max_tokens) {
+            Ok(rx) => pending.push(Some(rx)),
+            Err(_) => {
+                out.submit_rejected += 1;
+                pending.push(None);
+            }
+        }
+    }
+    for rx in pending {
+        out.responses.push(rx.and_then(|rx| rx.recv().ok()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wall_offsets_scale_and_never_go_negative() {
+        assert_eq!(wall_offset(2.0, 0.5), Duration::from_secs(1));
+        assert_eq!(wall_offset(0.25, 0.01), Duration::from_micros(2500));
+        assert_eq!(wall_offset(-1.0, 1.0), Duration::ZERO);
+    }
+}

@@ -1,0 +1,38 @@
+//! Open-loop load harness: seeded arrival generation, per-tenant SLO
+//! admission control, and offered-load sweeps through the latency knee.
+//!
+//! Every bench the repo had before this module was *closed-loop* — the
+//! next request waited for the previous answer, so the harness itself
+//! throttled to whatever the fleet could serve and the latency knee was
+//! invisible. Production traffic is **open-loop**: arrivals come on
+//! their own clock whether or not the fleet keeps up, and the paper's
+//! viability claim for salvage mining cards lives exactly on that curve —
+//! offered load vs goodput, tail latency, SLO attainment, and
+//! tokens-per-joule, through and past saturation.
+//!
+//! The module mirrors the [`crate::faults`] design: everything is a pure
+//! seeded data structure on the simulated clock, so the same seed yields
+//! a bit-identical arrival stream and bit-identical curves.
+//!
+//! - [`arrivals`] — seeded arrival processes (Poisson, MMPP bursts,
+//!   diurnal) and trace replay, with multi-tenant shared-prefix prompt
+//!   structure; an [`ArrivalPlan`] is data, like a `FaultPlan`.
+//! - [`admission`] — [`AdmissionCtl`], the deterministic submit-time
+//!   admission controller with a hysteretic brownout ladder; threaded
+//!   into the live dispatcher (`serve --no-admission-control` ablates).
+//! - [`sim`] — a discrete-event fleet model over the calibrated overlay
+//!   constants; [`sweep`] produces the offered-load knee curves that the
+//!   `serve_openloop` bench row and the acceptance tests pin.
+//! - [`harness`] — replays a plan against a *real* [`crate::coordinator`]
+//!   server, open-loop, for artifact-gated end-to-end runs.
+
+pub mod admission;
+pub mod arrivals;
+pub mod harness;
+pub mod sim;
+
+pub use admission::{AdmissionConfig, AdmissionCtl, Verdict};
+pub use arrivals::{Arrival, ArrivalPlan, ArrivalProcess, WorkloadShape};
+pub use harness::{drive, DriveOutcome};
+pub use sim::{capacity_rps, simulate, sweep, CurvePoint, NodeModel, SimConfig, SimReport};
+pub(crate) use sim::weight_ranks;

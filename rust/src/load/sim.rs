@@ -1,0 +1,553 @@
+//! Pure discrete-event open-loop fleet simulator.
+//!
+//! The overload acceptance tests need to push a fleet 1.5× past its
+//! capacity and compare admission-control policies on *bit-identical*
+//! arrival streams — thousands of requests, in CI, with or without the
+//! AOT artifacts present. This module runs that experiment on a pure
+//! M/G/k-style model of the fleet instead of the threaded engine: each
+//! node is its calibrated service rate (seconds per prefill/decode token,
+//! watts per phase — the same quantities the per-card overlays carry),
+//! requests route to the least-backlogged live card, and the only clock
+//! is the arrival stream's simulated clock. No threads, no wall time, no
+//! randomness outside the seeded [`ArrivalPlan`] and
+//! [`crate::faults::FaultPlan`] — so [`simulate`] is a *function*:
+//! same inputs, same [`SimReport`], byte for byte, which is what lets a
+//! knee curve be asserted equal across runs and across chaos replays.
+//!
+//! The control plane mirrors the real dispatcher's overload behavior:
+//! - **Deadline gate** (always on, like `--deadline-ms` / per-tenant
+//!   SLOs): a request whose backlog already exceeds its SLO when its turn
+//!   comes is failed at dispatch without service — the reactive defense.
+//! - **Admission control** (the [`super::AdmissionCtl`] arm): the same
+//!   prediction is made at *submit* from backlog + own service demand,
+//!   and doomed requests are shed before any card time is spent. Served-
+//!   but-late requests are the waste the reactive arm cannot avoid: they
+//!   burn full service and energy for tokens that miss their contract.
+//! - **Chaos**: a seeded fault plan fires on each node's service-round
+//!   clock — deaths remove the card, stalls freeze its backlog forward,
+//!   throttles stretch its service times, page losses and swap failures
+//!   charge re-prefill penalties — composing overload with the PR 6
+//!   fault model deterministically.
+//!
+//! [`sweep`] runs one plan across a ladder of load multipliers
+//! ([`ArrivalPlan::scaled`]) and returns the offered-load vs
+//! goodput/latency/attainment/energy curve the `serve_openloop` bench row
+//! records.
+
+use std::collections::VecDeque;
+
+use super::admission::{AdmissionConfig, AdmissionCtl, Verdict};
+use super::arrivals::{token_fingerprint, ArrivalPlan};
+use crate::faults::{FaultKind, FaultPlan};
+
+/// One card's calibrated service model — the overlay quantities the real
+/// dispatcher estimates from (§4 device model).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NodeModel {
+    pub prefill_s_per_token: f64,
+    pub decode_s_per_token: f64,
+    pub prefill_w: f64,
+    pub decode_w: f64,
+}
+
+impl NodeModel {
+    /// A CMP 170HX-like serving profile: compute-starved prefill at the
+    /// TDP envelope, HBM2e-fed decode at the §4.4 measured draw.
+    pub fn cmp170hx_like() -> Self {
+        NodeModel {
+            prefill_s_per_token: 2.0e-4,
+            decode_s_per_token: 2.0e-3,
+            prefill_w: 250.0,
+            decode_w: 75.0,
+        }
+    }
+
+    /// Base service seconds for one request on this card, unthrottled.
+    pub fn service_s(&self, prompt_len: usize, max_tokens: usize) -> f64 {
+        prompt_len as f64 * self.prefill_s_per_token + max_tokens as f64 * self.decode_s_per_token
+    }
+}
+
+/// The simulated fleet and its overload policy.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub nodes: Vec<NodeModel>,
+    /// Per-tenant SLO contract, seconds (index = tenant id; `None` = no
+    /// contract, never shed, never counted for attainment).
+    pub slo_s: Vec<Option<f64>>,
+    /// Per-tenant fair-share weights (brownout shed order).
+    pub weights: Vec<f64>,
+    /// `Some` = the admission-control arm; `None` = the reactive-only
+    /// `--no-admission-control` ablation.
+    pub admission: Option<AdmissionConfig>,
+    /// Optional seeded chaos script, fired on service-round clocks.
+    pub chaos: Option<FaultPlan>,
+    /// Simulated seconds one `TransientStall` round freezes a card for
+    /// (also scales the link/swap fault penalties).
+    pub stall_unit_s: f64,
+}
+
+impl SimConfig {
+    /// A homogeneous fleet with one shared SLO across equal-weight
+    /// tenants and admission control at defaults.
+    pub fn uniform(nodes: usize, model: NodeModel, tenants: usize, slo_s: Option<f64>) -> Self {
+        assert!(nodes > 0 && tenants > 0);
+        SimConfig {
+            nodes: vec![model; nodes],
+            slo_s: vec![slo_s; tenants],
+            weights: vec![1.0; tenants],
+            admission: Some(AdmissionConfig::default()),
+            chaos: None,
+            stall_unit_s: 0.05,
+        }
+    }
+
+    /// The same config with the admission controller removed (ablation).
+    pub fn without_admission(&self) -> Self {
+        SimConfig {
+            admission: None,
+            ..self.clone()
+        }
+    }
+}
+
+/// Outcome of one open-loop run. Derives `PartialEq` so same-seed
+/// reproducibility is a single assert over the whole report, fingerprints
+/// included.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SimReport {
+    /// Requests offered by the arrival stream.
+    pub offered: usize,
+    /// Requests served to completion (tokens delivered, timely or not).
+    pub completed: usize,
+    /// Completed requests that finished past their tenant's SLO — served
+    /// waste: full service and energy for unusable answers.
+    pub served_late: usize,
+    /// Requests shed at submit by the admission controller.
+    pub shed_admission: usize,
+    /// Requests failed at dispatch because their backlog already exceeded
+    /// their SLO (the reactive deadline gate).
+    pub deadline_misses: usize,
+    /// Requests lost because no live node remained.
+    pub lost_no_node: usize,
+    /// Requests whose tenant carries an SLO contract.
+    pub slo_eligible: usize,
+    /// SLO-eligible requests that completed within their contract.
+    pub slo_met: usize,
+    /// Tokens that count: SLO-met requests plus contract-less completions.
+    pub goodput_tokens: u64,
+    /// `goodput_tokens` over the stream's horizon (last completion).
+    pub goodput_tps: f64,
+    /// Simulated energy spent, joules — including the waste on late
+    /// completions.
+    pub energy_j: f64,
+    /// Useful tokens per joule: `goodput_tokens / energy_j`.
+    pub goodput_tokens_per_joule: f64,
+    /// Completion-latency percentiles over completed requests, seconds.
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub p999_s: f64,
+    /// Most requests simultaneously accepted-but-unfinished.
+    pub peak_queue: usize,
+    /// In-flight requests at the last arrival instant.
+    pub final_queue: usize,
+    /// Largest backlog any routed request saw ahead of it, seconds.
+    pub peak_backlog_s: f64,
+    /// `(arrival index, served-token fingerprint)` for every completed
+    /// request, in service order — the bit-identity witness for the
+    /// below-knee equivalence of policy arms.
+    pub served: Vec<(u64, u64)>,
+}
+
+impl SimReport {
+    /// Fraction of SLO-eligible requests that met their contract.
+    pub fn slo_attainment(&self) -> Option<f64> {
+        if self.slo_eligible == 0 {
+            None
+        } else {
+            Some(self.slo_met as f64 / self.slo_eligible as f64)
+        }
+    }
+}
+
+/// One point of an offered-load sweep.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CurvePoint {
+    /// Load multiplier applied to the base plan.
+    pub multiplier: f64,
+    /// Realized offered rate at this multiplier, requests/s.
+    pub offered_rps: f64,
+    pub report: SimReport,
+}
+
+/// Aggregate service capacity for the plan's mean request shape,
+/// requests/second — the knee's natural x-axis unit.
+pub fn capacity_rps(plan: &ArrivalPlan, cfg: &SimConfig) -> f64 {
+    if plan.is_empty() {
+        return 0.0;
+    }
+    let n = plan.len() as f64;
+    let mean_prompt = plan.arrivals.iter().map(|a| a.prompt.len()).sum::<usize>() as f64 / n;
+    let mean_tokens = plan.arrivals.iter().map(|a| a.max_tokens).sum::<usize>() as f64 / n;
+    cfg.nodes
+        .iter()
+        .map(|m| {
+            let svc = mean_prompt * m.prefill_s_per_token + mean_tokens * m.decode_s_per_token;
+            if svc > 0.0 {
+                1.0 / svc
+            } else {
+                0.0
+            }
+        })
+        .sum()
+}
+
+/// Tenant weight ranks in `[0, 1]`: 0 = strictly lightest, 1 = heaviest.
+/// A lone tenant ranks 1.0 so brownout levels never shed the only
+/// customer's near-SLO traffic.
+pub(crate) fn weight_ranks(weights: &[f64]) -> Vec<f64> {
+    if weights.len() <= 1 {
+        return vec![1.0; weights.len()];
+    }
+    let denom = (weights.len() - 1) as f64;
+    weights
+        .iter()
+        .map(|&w| weights.iter().filter(|&&o| o < w).count() as f64 / denom)
+        .collect()
+}
+
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run one open-loop stream against the fleet model. Pure: same
+/// `(plan, cfg)` → same report, bit for bit.
+pub fn simulate(plan: &ArrivalPlan, cfg: &SimConfig) -> SimReport {
+    assert!(!cfg.nodes.is_empty(), "simulating an empty fleet");
+    let n = cfg.nodes.len();
+    let mut free_at = vec![0.0_f64; n];
+    let mut served_rounds = vec![0_u64; n];
+    let mut alive = vec![true; n];
+    // (slowdown factor, service rounds it still applies to)
+    let mut throttle = vec![(1.0_f64, 0_u64); n];
+    // one-shot re-work (page loss, swap corruption) charged to the
+    // node's next served request
+    let mut penalty_s = vec![0.0_f64; n];
+    let mut faults: Vec<VecDeque<(u64, FaultKind)>> = (0..n)
+        .map(|node| match &cfg.chaos {
+            Some(plan) => plan.for_node(node).into(),
+            None => VecDeque::new(),
+        })
+        .collect();
+    let ranks = weight_ranks(&cfg.weights);
+    let mut ctl = cfg.admission.map(AdmissionCtl::new);
+
+    let mut report = SimReport {
+        offered: plan.len(),
+        ..SimReport::default()
+    };
+    let mut inflight: Vec<f64> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    let mut horizon = 0.0_f64;
+
+    for (idx, a) in plan.arrivals.iter().enumerate() {
+        let t = a.at_s;
+        horizon = horizon.max(t);
+        inflight.retain(|&done| done > t);
+        // chaos due on each node's service-round clock fires before
+        // routing sees the fleet
+        for node in 0..n {
+            loop {
+                match faults[node].front() {
+                    Some(&(round, _)) if round <= served_rounds[node] => {}
+                    _ => break,
+                }
+                let (_, kind) = faults[node].pop_front().expect("front checked");
+                match kind {
+                    FaultKind::NodeDeath => alive[node] = false,
+                    FaultKind::TransientStall { rounds } => {
+                        free_at[node] = free_at[node].max(t) + rounds as f64 * cfg.stall_unit_s;
+                    }
+                    FaultKind::ThermalThrottle { factor, rounds } if rounds > 0 => {
+                        throttle[node] = (factor.max(1.0), rounds);
+                    }
+                    FaultKind::ThermalThrottle { .. } => {}
+                    FaultKind::LinkDowngrade { .. } | FaultKind::SwapInFailure => {
+                        penalty_s[node] += 0.5 * cfg.stall_unit_s;
+                    }
+                    FaultKind::VramPageLoss { blocks } => {
+                        penalty_s[node] += blocks as f64 * 8.0 * cfg.nodes[node].prefill_s_per_token;
+                    }
+                }
+            }
+        }
+
+        let slo = cfg.slo_s.get(a.tenant.0).copied().flatten();
+        if slo.is_some() {
+            report.slo_eligible += 1;
+        }
+
+        // least-backlog routing over live cards (ties → lowest index)
+        let mut best: Option<(usize, f64)> = None;
+        for node in 0..n {
+            if !alive[node] {
+                continue;
+            }
+            let backlog = (free_at[node] - t).max(0.0);
+            let better = match best {
+                None => true,
+                Some((_, b)) => backlog < b,
+            };
+            if better {
+                best = Some((node, backlog));
+            }
+        }
+        let Some((node, backlog)) = best else {
+            report.lost_no_node += 1;
+            continue;
+        };
+        report.peak_backlog_s = report.peak_backlog_s.max(backlog);
+
+        let (tf, throttle_left) = throttle[node];
+        let model = cfg.nodes[node];
+        let penalty = penalty_s[node];
+        let svc = model.service_s(a.prompt.len(), a.max_tokens) * tf + penalty;
+
+        // submit-time admission: shed before any service is spent
+        if let Some(ctl) = ctl.as_mut() {
+            if let Verdict::Shed { .. } =
+                ctl.decide(backlog + svc, slo, ranks.get(a.tenant.0).copied().unwrap_or(1.0))
+            {
+                report.shed_admission += 1;
+                continue;
+            }
+        }
+        // the dispatcher's reactive deadline gate: stale work fails
+        // before prefill, but only after it already queued
+        if let Some(s) = slo {
+            if backlog >= s {
+                report.deadline_misses += 1;
+                continue;
+            }
+        }
+
+        // serve
+        penalty_s[node] = 0.0;
+        let done = t + backlog + svc;
+        free_at[node] = done;
+        served_rounds[node] += 1;
+        if throttle_left > 0 {
+            throttle[node] = if throttle_left == 1 { (1.0, 0) } else { (tf, throttle_left - 1) };
+        }
+        horizon = horizon.max(done);
+        inflight.push(done);
+        report.peak_queue = report.peak_queue.max(inflight.len());
+
+        let latency = done - t;
+        latencies.push(latency);
+        report.completed += 1;
+        report.served.push((idx as u64, token_fingerprint(&a.prompt, a.max_tokens)));
+        report.energy_j += (a.prompt.len() as f64 * model.prefill_s_per_token * tf + penalty)
+            * model.prefill_w
+            + a.max_tokens as f64 * model.decode_s_per_token * tf * model.decode_w;
+        match slo {
+            Some(s) if latency <= s => {
+                report.slo_met += 1;
+                report.goodput_tokens += a.max_tokens as u64;
+            }
+            Some(_) => report.served_late += 1,
+            None => report.goodput_tokens += a.max_tokens as u64,
+        }
+    }
+
+    report.final_queue = inflight.len();
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+    report.p50_s = pct(&latencies, 0.5);
+    report.p99_s = pct(&latencies, 0.99);
+    report.p999_s = pct(&latencies, 0.999);
+    if horizon > 0.0 {
+        report.goodput_tps = report.goodput_tokens as f64 / horizon;
+    }
+    if report.energy_j > 0.0 {
+        report.goodput_tokens_per_joule = report.goodput_tokens as f64 / report.energy_j;
+    }
+    report
+}
+
+/// Sweep one plan across load multipliers: the knee curve. Every point
+/// serves the same requests on a compressed clock, each with a fresh
+/// admission controller.
+pub fn sweep(plan: &ArrivalPlan, multipliers: &[f64], cfg: &SimConfig) -> Vec<CurvePoint> {
+    multipliers
+        .iter()
+        .map(|&m| {
+            let scaled = plan.scaled(m);
+            let offered_rps = scaled.offered_rps();
+            CurvePoint {
+                multiplier: m,
+                offered_rps,
+                report: simulate(&scaled, cfg),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::faults::{FaultEvent, FaultPlan};
+    use crate::load::arrivals::{ArrivalProcess, WorkloadShape};
+
+    fn base_plan(seed: u64) -> ArrivalPlan {
+        // ~0.8 s of service demand per second offered against a 2-card
+        // fleet: comfortably below the knee
+        ArrivalPlan::seeded(
+            ArrivalProcess::Poisson { rps: 30.0 },
+            seed,
+            30.0,
+            &WorkloadShape {
+                tenants: 2,
+                prompt_len: 32,
+                shared_prefix_len: 16,
+                families: 2,
+                max_tokens: 8,
+            },
+        )
+    }
+
+    fn fleet(slo_s: Option<f64>) -> SimConfig {
+        SimConfig::uniform(2, NodeModel::cmp170hx_like(), 2, slo_s)
+    }
+
+    #[test]
+    fn below_the_knee_everything_meets_its_contract() {
+        let plan = base_plan(0xFEED);
+        let cfg = fleet(Some(2.0));
+        assert!(plan.offered_rps() < 0.7 * capacity_rps(&plan, &cfg), "stays under the knee");
+        let r = simulate(&plan, &cfg);
+        assert_eq!(r.shed_admission, 0, "no shedding below the knee");
+        assert_eq!(r.deadline_misses, 0);
+        assert_eq!(r.lost_no_node, 0);
+        assert_eq!(r.completed, r.offered);
+        assert_eq!(r.slo_attainment(), Some(1.0));
+        assert_eq!(r.served.len(), r.offered);
+        assert!(r.goodput_tokens > 0 && r.energy_j > 0.0);
+        assert!(r.p50_s <= r.p99_s && r.p99_s <= r.p999_s);
+    }
+
+    #[test]
+    fn same_seed_reproduces_the_whole_report_bit_identically() {
+        let cfg = fleet(Some(1.0));
+        let chaos = SimConfig {
+            chaos: Some(FaultPlan::seeded(0xBAD, 2, 40, 0.1)),
+            ..cfg.clone()
+        };
+        for c in [&cfg, &chaos] {
+            let a = simulate(&base_plan(0x5EED), c);
+            let b = simulate(&base_plan(0x5EED), c);
+            assert_eq!(a, b, "simulate is a pure function of (plan, cfg)");
+        }
+        let s1 = sweep(&base_plan(0x5EED), &[0.5, 1.0, 1.8], &chaos);
+        let s2 = sweep(&base_plan(0x5EED), &[0.5, 1.0, 1.8], &chaos);
+        assert_eq!(s1, s2, "curves replay bit-identically under chaos");
+        let other = simulate(&base_plan(0x5EEE), &cfg);
+        assert_ne!(simulate(&base_plan(0x5EED), &cfg).served, other.served);
+    }
+
+    #[test]
+    fn admission_control_wins_past_the_knee() {
+        let plan = base_plan(0xA3);
+        let cfg = fleet(Some(0.5));
+        let hot = plan.scaled(2.0 * capacity_rps(&plan, &cfg) / plan.offered_rps());
+        let ac = simulate(&hot, &cfg);
+        let bare = simulate(&hot, &cfg.without_admission());
+        assert!(ac.shed_admission > 0, "overload must engage the controller");
+        assert!(
+            bare.deadline_misses + bare.served_late > bare.offered / 4,
+            "the reactive arm collapses into a miss storm: {bare:?}"
+        );
+        assert!(ac.goodput_tokens > bare.goodput_tokens, "{ac:?} vs {bare:?}");
+        assert!(ac.slo_attainment() > bare.slo_attainment());
+    }
+
+    #[test]
+    fn node_death_falls_back_and_total_death_loses() {
+        let plan = base_plan(7);
+        let cfg = fleet(Some(5.0));
+        let one_dead = SimConfig {
+            chaos: Some(FaultPlan::script(vec![FaultEvent {
+                node: 0,
+                round: 0,
+                kind: FaultKind::NodeDeath,
+            }])),
+            ..cfg.clone()
+        };
+        let r = simulate(&plan, &one_dead);
+        assert_eq!(r.lost_no_node, 0, "the survivor absorbs everything");
+        assert!(r.completed + r.deadline_misses + r.shed_admission == r.offered);
+        let all_dead = SimConfig {
+            chaos: Some(FaultPlan::script(
+                (0..2)
+                    .map(|node| FaultEvent { node, round: 0, kind: FaultKind::NodeDeath })
+                    .collect(),
+            )),
+            ..cfg
+        };
+        let r = simulate(&plan, &all_dead);
+        assert_eq!(r.lost_no_node, r.offered, "a dead fleet serves nothing");
+        assert_eq!(r.completed, 0);
+    }
+
+    #[test]
+    fn chaos_stretches_the_tail_but_stays_deterministic() {
+        let plan = base_plan(0xC0);
+        let calm = fleet(Some(4.0));
+        let stormy = SimConfig {
+            chaos: Some(FaultPlan::script(vec![
+                FaultEvent {
+                    node: 0,
+                    round: 5,
+                    kind: FaultKind::TransientStall { rounds: 4 },
+                },
+                FaultEvent {
+                    node: 1,
+                    round: 5,
+                    kind: FaultKind::ThermalThrottle { factor: 3.0, rounds: 20 },
+                },
+                FaultEvent {
+                    node: 0,
+                    round: 10,
+                    kind: FaultKind::VramPageLoss { blocks: 2 },
+                },
+            ])),
+            ..calm.clone()
+        };
+        let base = simulate(&plan, &calm);
+        let hit = simulate(&plan, &stormy);
+        assert!(hit.p999_s > base.p999_s, "faults must cost tail latency");
+        assert_eq!(simulate(&plan, &stormy), hit);
+    }
+
+    #[test]
+    fn weight_ranks_order_lightest_to_heaviest() {
+        assert_eq!(weight_ranks(&[1.0]), vec![1.0], "a lone tenant is never brownout bait");
+        let r = weight_ranks(&[1.0, 3.0, 2.0]);
+        assert_eq!(r, vec![0.0, 1.0, 0.5]);
+        let equal = weight_ranks(&[2.0, 2.0]);
+        assert_eq!(equal, vec![0.0, 0.0], "equal weights tie at the bottom");
+    }
+
+    #[test]
+    fn capacity_scales_with_fleet_size() {
+        let plan = base_plan(1);
+        let one = SimConfig::uniform(1, NodeModel::cmp170hx_like(), 1, None);
+        let four = SimConfig::uniform(4, NodeModel::cmp170hx_like(), 1, None);
+        let c1 = capacity_rps(&plan, &one);
+        crate::testutil::assert_close(capacity_rps(&plan, &four), 4.0 * c1, 1e-12);
+        assert!(c1 > 0.0);
+    }
+}

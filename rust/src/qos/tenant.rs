@@ -30,6 +30,13 @@ pub struct TenantSpec {
     /// routed node's calibrated overlay. Exhausted budgets are terminal:
     /// further requests are shed with an error.
     pub energy_budget_j: Option<f64>,
+    /// Optional per-tenant SLO: end-to-end latency target, milliseconds.
+    /// Stamped onto every one of the tenant's requests as its deadline
+    /// (overriding the server-wide `--deadline-ms`), scored in the
+    /// per-tenant attainment rollup, and — when admission control is on —
+    /// enforced *at submit*: a request whose predicted completion
+    /// violates it is shed before any prefill is wasted.
+    pub slo_ms: Option<f64>,
 }
 
 impl TenantSpec {
@@ -40,16 +47,28 @@ impl TenantSpec {
             weight,
             tok_s: None,
             energy_budget_j: None,
+            slo_ms: None,
         }
     }
 
-    /// Parse the CLI form `name:weight[:tok_s][:joules]`. Empty optional
-    /// segments skip a cap: `burst:2::500` is weight 2, no rate cap, a
-    /// 500 J energy budget.
+    /// The SLO contract as a wall-clock duration, when declared.
+    pub fn slo(&self) -> Option<std::time::Duration> {
+        self.slo_ms.map(|ms| std::time::Duration::from_secs_f64(ms / 1000.0))
+    }
+
+    /// The SLO contract in seconds, when declared.
+    pub fn slo_s(&self) -> Option<f64> {
+        self.slo_ms.map(|ms| ms / 1000.0)
+    }
+
+    /// Parse the CLI form `name:weight[:tok_s][:joules][:slo_ms]`. Empty
+    /// optional segments skip a cap: `burst:2::500` is weight 2, no rate
+    /// cap, a 500 J energy budget; `edge:1:::250` contracts only a
+    /// 250 ms SLO.
     pub fn parse(s: &str) -> Result<Self> {
         let parts: Vec<&str> = s.split(':').collect();
-        if parts.len() < 2 || parts.len() > 4 {
-            bail!("tenant spec {s:?} is not name:weight[:tok_s][:joules]");
+        if parts.len() < 2 || parts.len() > 5 {
+            bail!("tenant spec {s:?} is not name:weight[:tok_s][:joules][:slo_ms]");
         }
         let name = parts[0].trim();
         if name.is_empty() {
@@ -73,6 +92,7 @@ impl TenantSpec {
             weight,
             tok_s: optional(2, "tok_s")?,
             energy_budget_j: optional(3, "joules")?,
+            slo_ms: optional(4, "slo_ms")?,
         };
         spec.validate()?;
         Ok(spec)
@@ -82,7 +102,11 @@ impl TenantSpec {
         if !(self.weight.is_finite() && self.weight > 0.0) {
             bail!("tenant {}: weight must be finite and positive", self.name);
         }
-        for (cap, what) in [(self.tok_s, "tok_s"), (self.energy_budget_j, "energy budget")] {
+        for (cap, what) in [
+            (self.tok_s, "tok_s"),
+            (self.energy_budget_j, "energy budget"),
+            (self.slo_ms, "slo_ms"),
+        ] {
             if let Some(v) = cap {
                 if !(v.is_finite() && v > 0.0) {
                     bail!("tenant {}: {what} must be finite and positive", self.name);
@@ -218,6 +242,19 @@ mod tests {
         let t = TenantSpec::parse("burst:2::500").unwrap();
         assert!(t.tok_s.is_none());
         assert_eq!(t.energy_budget_j, Some(500.0));
+        assert!(t.slo_ms.is_none() && t.slo().is_none());
+
+        let t = TenantSpec::parse("edge:1:::250").unwrap();
+        assert!(t.tok_s.is_none() && t.energy_budget_j.is_none());
+        assert_eq!(t.slo_ms, Some(250.0));
+        assert_eq!(t.slo(), Some(std::time::Duration::from_millis(250)));
+        assert_eq!(t.slo_s(), Some(0.25));
+
+        let t = TenantSpec::parse("full:2:50:1000:500").unwrap();
+        assert_eq!(
+            (t.tok_s, t.energy_budget_j, t.slo_ms),
+            (Some(50.0), Some(1000.0), Some(500.0))
+        );
     }
 
     #[test]
@@ -228,10 +265,13 @@ mod tests {
             "x:zero",
             "x:1:fast",
             "x:1:10:1:extra",
+            "x:1:10:1:5:more",
             "x:-1",
             "x:0",
             "x:1:-5",
             "x:1:10:-2",
+            "x:1:::-250",
+            "x:1:::0",
         ] {
             assert!(TenantSpec::parse(bad).is_err(), "{bad:?} must be rejected");
         }

@@ -1,7 +1,7 @@
 #!/usr/bin/env bash
 # Local tier-1 gate: build, test, lint.
 #
-# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric | --cache | --trace]
+# Usage: scripts/check.sh [--no-clippy | --chaos | --fabric | --cache | --trace | --load]
 #
 # Mirrors the ROADMAP tier-1 verify (`cargo build --release && cargo test
 # -q`) and adds rustfmt drift detection plus clippy with warnings denied.
@@ -26,6 +26,13 @@
 # exporters, byte-identical determinism) plus the integration_trace suite
 # (chaos death → flight dump, journal roundtrip, rescued-lifecycle spans).
 # Same self-skip rule for the integration half.
+#
+# --load runs only the overload smoke: the load unit suites (seeded
+# arrival generators, the admission controller's brownout ladder, the
+# discrete-event fleet model) plus the integration_load suite — the
+# AC-vs-reactive knee comparison, below-knee bit-identity, and same-seed
+# curve replay, all on the pure simulator so it is *fully* asserted even
+# without AOT artifacts (only the one live-server test self-skips).
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -55,6 +62,15 @@ if [[ "${1:-}" == "--cache" ]]; then
     echo "==> cache smoke: cargo test --release --test integration_cache"
     cargo test --release --test integration_cache -q
     echo "cache smoke passed"
+    exit 0
+fi
+
+if [[ "${1:-}" == "--load" ]]; then
+    echo "==> load smoke: cargo test --release load::"
+    cargo test --release -q load::
+    echo "==> load smoke: cargo test --release --test integration_load"
+    cargo test --release --test integration_load -q
+    echo "load smoke passed"
     exit 0
 fi
 
